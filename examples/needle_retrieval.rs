@@ -1,0 +1,39 @@
+//! RULER-analog needle retrieval: every method, every task, one table —
+//! the qualitative content of the paper's Table 1 at interactive scale.
+//!
+//! Run: `cargo run --release --example needle_retrieval [-- --n 8192]`
+
+use socket_attn::attention::SelectionPolicy;
+use socket_attn::experiments::Method;
+use socket_attn::util::{fnum, Args, Table};
+use socket_attn::workload::ruler::{evaluate_selector, RULER_TASKS};
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize_or("n", 4096);
+    let dim = args.usize_or("dim", 64);
+    let sparsity = args.f64_or("sparsity", 50.0);
+    let instances = args.usize_or("instances", 3);
+    let policy = SelectionPolicy::from_sparsity(n, sparsity, 0, 0);
+    println!("needle retrieval: n={n} dim={dim} sparsity={sparsity}x k={}\n", policy.k);
+
+    let mut header = vec!["Method", "Mem(b/tok)"];
+    header.extend(RULER_TASKS.iter().map(|t| t.name));
+    header.push("AVG");
+    let mut table = Table::new("RULER-analog needle retrieval", &header);
+    let methods = [Method::Oracle, Method::Socket, Method::Quest, Method::PqCache,
+                   Method::DoubleSparsity, Method::HashAttention, Method::MagicPig, Method::HardLsh];
+    for method in methods {
+        let mut selector = method.build(dim, 11);
+        let mut scores = Vec::new();
+        for task in RULER_TASKS.iter() {
+            scores.push(evaluate_selector(task, selector.as_mut(), n, dim, policy.k, instances, 99));
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        let mut row = vec![method.name().to_string(), selector.bits_per_token().to_string()];
+        row.extend(scores.iter().map(|s| fnum(*s, 1)));
+        row.push(fnum(avg, 1));
+        table.row(row);
+    }
+    table.print();
+}

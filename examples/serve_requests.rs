@@ -1,0 +1,52 @@
+//! Serve a Poisson request trace through the coordinator (router ->
+//! batcher -> prefill/decode scheduler -> SOCKET sparse decode) and
+//! report latency/throughput, the serving-paper deliverable.
+//!
+//! Run: `cargo run --release --example serve_requests [-- --requests 64]`
+
+use socket_attn::coordinator::{AttentionMode, BatchPolicy, Coordinator, EngineConfig};
+use socket_attn::lsh::LshParams;
+use socket_attn::model::ModelConfig;
+use socket_attn::util::{Args, LatencySummary};
+use socket_attn::workload::trace::{TraceConfig, TraceGenerator};
+use std::time::Instant;
+
+fn main() {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 48);
+    let sparsity = args.f64_or("sparsity", 16.0);
+    let config = EngineConfig {
+        model: ModelConfig::tiny(),
+        lsh: LshParams { p: 8, l: 24, tau: 0.5 },
+        mode: if args.flag("dense") { AttentionMode::Dense } else { AttentionMode::Socket { sparsity } },
+        capacity_pages: 64 * 1024,
+        sink: 16,
+        local: 16,
+    };
+    let mode = if args.flag("dense") { "dense".to_string() } else { format!("SOCKET {sparsity}x") };
+    println!("serving {n_requests} requests ({mode} decode)...");
+    let coord = Coordinator::spawn(config, BatchPolicy::default());
+    let mut gen = TraceGenerator::new(
+        TraceConfig { rate_rps: 50.0, context_min: 256, context_max: 2048, decode_min: 8, decode_max: 32 },
+        5,
+    );
+    let t0 = Instant::now();
+    let reqs = gen.take(n_requests);
+    let handles: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone())).collect();
+    let mut ttft = LatencySummary::new();
+    let mut total = LatencySummary::new();
+    let mut tokens = 0usize;
+    for h in handles {
+        let c = h.wait();
+        ttft.record_ms(c.ttft_ms);
+        total.record_ms(c.total_ms);
+        tokens += c.decode_len;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = coord.shutdown();
+    println!("completed  : {} requests, {} decode tokens in {wall:.2}s", stats.completed, tokens);
+    println!("throughput : {:.1} tok/s decode, {:.1} req/s", tokens as f64 / wall, stats.completed as f64 / wall);
+    println!("TTFT  p50/p95/p99 : {:.1} / {:.1} / {:.1} ms", ttft.p50_ms(), ttft.p95_ms(), ttft.p99_ms());
+    println!("total p50/p95/p99 : {:.1} / {:.1} / {:.1} ms", total.p50_ms(), total.p95_ms(), total.p99_ms());
+    println!("prefill tokens: {}, KV admission rejections: {}", stats.prefill_tokens, stats.rejected_admissions);
+}

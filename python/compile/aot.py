@@ -1,0 +1,202 @@
+"""AOT lowering: JAX -> HLO text artifacts for the Rust PJRT runtime.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+All entry points are lowered with ``return_tuple=True`` — the Rust side
+unwraps with ``to_tuple``.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.hash_keys import hash_keys
+from .kernels.socket_score import socket_score
+from .kernels.soft_probs import soft_probs
+from .kernels.sparse_decode import sparse_decode
+from .kernels import ref
+
+# Paper-scale head shapes for the standalone kernel artifacts.
+KN = 2048  # context tokens
+KD = 128  # head dim
+KL = 60  # hash tables
+KP = 10  # hyperplanes/table
+KR = 2**KP
+KSEL = 512  # retrieved tokens
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, *example_args):
+    # keep_unused=True: the Rust runtime passes the full canonical
+    # parameter tuple to every entry point; jit must not prune the
+    # arguments an entry point happens not to read (e.g. ln_f in
+    # prefill), or the call ABIs would diverge per artifact.
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---- standalone kernel entry points (always return tuples) ----
+
+
+def hash_keys_entry(keys, planes):
+    return (hash_keys(keys, planes), ref.value_norms_ref(keys))
+
+
+def soft_probs_entry(q, planes):
+    return (soft_probs(q, planes, 0.5),)
+
+
+def socket_score_entry(probs, ids, vnorms, mask):
+    return (socket_score(probs, ids, vnorms, mask),)
+
+
+def sparse_decode_entry(q, keys, values, mask):
+    return (sparse_decode(q, keys, values, mask, KD**-0.5),)
+
+
+def dense_decode_entry(q, keys, values, mask):
+    return (ref.masked_attention_ref(q, keys, values, KD**-0.5, mask),)
+
+
+def socket_select_decode_entry(q, planes, ids, vnorms, mask, keys, values):
+    """The fused decode hot path: Alg. 2 -> Alg. 4 -> top-k -> flash
+    decode over the gathered subset. One HLO module, zero host round
+    trips between stages."""
+    probs = soft_probs(q, planes, 0.5)
+    scores = socket_score(probs, ids, vnorms, mask)
+    top_idx = model.top_k_indices(scores, KSEL)
+    sel_mask = jnp.take(scores, top_idx) > -jnp.inf
+    out = sparse_decode(q, keys[top_idx], values[top_idx], sel_mask, KD**-0.5)
+    return (out, top_idx)
+
+
+# ---- model entry points ----
+
+
+def model_init_entry(seed):
+    return model.init_params(seed)
+
+
+def model_prefill_entry(*args):
+    params = args[:-1]
+    tokens = args[-1]
+    return model.prefill(params, tokens)
+
+
+def model_decode_socket_entry(*args):
+    params = args[: len(model.PARAM_NAMES)]
+    k_cache, v_cache, ids_cache, vn_cache, length, token = args[len(model.PARAM_NAMES) :]
+    return model.decode_step_socket(params, k_cache, v_cache, ids_cache, vn_cache, length, token)
+
+
+def model_decode_dense_entry(*args):
+    params = args[: len(model.PARAM_NAMES)]
+    k_cache, v_cache, ids_cache, vn_cache, length, token = args[len(model.PARAM_NAMES) :]
+    return model.decode_step_dense(params, k_cache, v_cache, ids_cache, vn_cache, length, token)
+
+
+def param_specs():
+    params = jax.eval_shape(model.init_params, jnp.int32(0))
+    return [spec(p.shape, p.dtype) for p in params]
+
+
+def cache_specs():
+    c = model.CFG
+    return [
+        spec((c.n_layers, c.n_kv_heads, c.cap, c.head_dim)),  # k
+        spec((c.n_layers, c.n_kv_heads, c.cap, c.head_dim)),  # v
+        spec((c.n_layers, c.n_kv_heads, c.cap, c.lsh_l), I32),  # ids
+        spec((c.n_layers, c.n_kv_heads, c.cap)),  # vnorms
+        spec((), I32),  # length
+    ]
+
+
+PREFILL_N = 1024
+
+ARTIFACTS = {
+    "hash_keys.hlo.txt": lambda: to_hlo_text(
+        hash_keys_entry, spec((KN, KD)), spec((KL, KP, KD))
+    ),
+    "soft_probs.hlo.txt": lambda: to_hlo_text(
+        soft_probs_entry, spec((KD,)), spec((KL, KP, KD))
+    ),
+    "socket_score.hlo.txt": lambda: to_hlo_text(
+        socket_score_entry,
+        spec((KL, KR)),
+        spec((KN, KL), I32),
+        spec((KN,)),
+        spec((KN,), jnp.bool_),
+    ),
+    "sparse_decode.hlo.txt": lambda: to_hlo_text(
+        sparse_decode_entry,
+        spec((KD,)),
+        spec((KSEL, KD)),
+        spec((KSEL, KD)),
+        spec((KSEL,), jnp.bool_),
+    ),
+    "dense_decode.hlo.txt": lambda: to_hlo_text(
+        dense_decode_entry,
+        spec((KD,)),
+        spec((KN, KD)),
+        spec((KN, KD)),
+        spec((KN,), jnp.bool_),
+    ),
+    "socket_decode.hlo.txt": lambda: to_hlo_text(
+        socket_select_decode_entry,
+        spec((KD,)),
+        spec((KL, KP, KD)),
+        spec((KN, KL), I32),
+        spec((KN,)),
+        spec((KN,), jnp.bool_),
+        spec((KN, KD)),
+        spec((KN, KD)),
+    ),
+    "model_init.hlo.txt": lambda: to_hlo_text(model_init_entry, spec((), I32)),
+    "model_prefill.hlo.txt": lambda: to_hlo_text(
+        model_prefill_entry, *param_specs(), spec((PREFILL_N,), I32)
+    ),
+    "model_decode_socket.hlo.txt": lambda: to_hlo_text(
+        model_decode_socket_entry, *param_specs(), *cache_specs(), spec((), I32)
+    ),
+    "model_decode_dense.hlo.txt": lambda: to_hlo_text(
+        model_decode_dense_entry, *param_specs(), *cache_specs(), spec((), I32)
+    ),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    for name, build in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        path = os.path.join(args.out, name)
+        text = build()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+if __name__ == "__main__":
+    main()

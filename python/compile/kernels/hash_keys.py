@@ -1,0 +1,67 @@
+"""Layer-1 Pallas kernel: Algorithm 1 (prefill key hashing).
+
+Grid: one program per block of ``BLOCK_N`` tokens. Per program:
+
+* the key block ``(BLOCK_N, d)`` is staged HBM -> VMEM by BlockSpec;
+* ALL hyperplanes ``(L*P, d)`` stay VMEM-resident across programs (for
+  the paper's setting L=60, P=10, d=128 that is 300 KB — far below the
+  ~16 MB VMEM budget), so the projection is one ``(BLOCK_N, d) x
+  (d, L*P)`` MXU matmul per block;
+* sign bits are packed into int32 bucket ids with a ``(L*P -> L)``
+  weighted reduction on the VPU (no scatter/gather).
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the CUDA version
+launches one thread per token; here the token axis is tiled into MXU-
+sized blocks and the "per-thread" bit-packing becomes a vectorized
+reduction over the P axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+
+
+def _hash_kernel(keys_ref, planes_ref, ids_ref, *, l_tables, p_planes):
+    keys = keys_ref[...]  # (BLOCK_N, d)
+    planes = planes_ref[...]  # (L*P, d)
+    proj = jax.lax.dot_general(
+        keys,
+        planes,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BLOCK_N, L*P)
+    bits = (proj >= 0.0).astype(jnp.int32)
+    bits = bits.reshape(keys.shape[0], l_tables, p_planes)
+    weights = (2 ** jnp.arange(p_planes, dtype=jnp.int32))[None, None, :]
+    ids_ref[...] = jnp.sum(bits * weights, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hash_keys(keys, planes, interpret=True):
+    """Bucket ids (N, L) int32 of ``keys`` (N, d) under ``planes``
+    (L, P, d). N must be a multiple of BLOCK_N (pad upstream)."""
+    n, d = keys.shape
+    l_tables, p_planes, _ = planes.shape
+    assert n % BLOCK_N == 0, f"N={n} must be a multiple of {BLOCK_N}"
+    flat_planes = planes.reshape(l_tables * p_planes, d)
+    kernel = functools.partial(_hash_kernel, l_tables=l_tables, p_planes=p_planes)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, d), lambda i: (i, 0)),
+            pl.BlockSpec((l_tables * p_planes, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, l_tables), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, l_tables), jnp.int32),
+        interpret=interpret,
+    )(keys, flat_planes)
+
+
+def value_norms(values):
+    """||v_j||_2 — fused into the surrounding jit; no kernel needed."""
+    return jnp.sqrt(jnp.sum(values * values, axis=-1))

@@ -1,0 +1,94 @@
+"""Pure-jnp reference implementations (the correctness oracles).
+
+Every Pallas kernel in this package is checked against these functions by
+``python/tests/test_kernels.py`` (exact algorithms of the paper's
+Alg. 1, 2 and 4, plus the flash-decode attention used for the retrieved
+subset). Shapes and conventions:
+
+* keys/values: ``(N, d)`` f32          * planes: ``(L, P, d)`` f32
+* bucket ids:  ``(N, L)`` int32        * probs:  ``(L, R)`` f32, R = 2**P
+* value norms: ``(N,)`` f32            * scores: ``(N,)`` f32
+"""
+
+import jax.numpy as jnp
+
+
+def hash_keys_ref(keys, planes):
+    """Algorithm 1: hard SRP bucket ids of every key in every table.
+
+    Bit i of the id is set iff ``planes[l, i] . key >= 0`` (matching the
+    Rust ``pack_signs``).
+    """
+    # proj: (L, P, N)
+    proj = jnp.einsum("lpd,nd->lpn", planes, keys)
+    bits = (proj >= 0).astype(jnp.int32)
+    p = planes.shape[1]
+    weights = (2 ** jnp.arange(p, dtype=jnp.int32))[None, :, None]
+    ids = jnp.sum(bits * weights, axis=1)  # (L, N)
+    return ids.T.astype(jnp.int32)  # (N, L)
+
+
+def value_norms_ref(values):
+    """Algorithm 1: cached ||v_j||_2."""
+    return jnp.sqrt(jnp.sum(values * values, axis=-1))
+
+
+def corners(p):
+    """The R = 2**P hypercube corners c_r in {-1, +1}^P (bit i of r ->
+    coordinate i), matching the Rust ``corner``."""
+    r = 2**p
+    idx = jnp.arange(r)[:, None]
+    bits = (idx >> jnp.arange(p)[None, :]) & 1
+    return (2.0 * bits - 1.0).astype(jnp.float32)  # (R, P)
+
+
+def soft_probs_ref(q, planes, tau):
+    """Algorithm 2: per-table soft bucket distributions of the query.
+
+    u = tanh(W^(l) q) / sqrt(d); logits_r = u . c_r / tau; softmax.
+    Returns (L, R).
+    """
+    d = q.shape[-1]
+    u = jnp.tanh(planes @ q) / jnp.sqrt(jnp.float32(d))  # (L, P)
+    c = corners(planes.shape[1])  # (R, P)
+    logits = (u @ c.T) / tau  # (L, R)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def socket_score_ref(probs, bucket_ids, vnorms, mask=None):
+    """Algorithm 4: value-aware soft collision scores.
+
+    w_hat[j] = ||v_j|| * sum_l probs[l, bucket_ids[j, l]]; masked-out
+    keys score -inf.
+    """
+    ll = probs.shape[0]
+    gathered = probs[jnp.arange(ll)[None, :], bucket_ids]  # (N, L)
+    w = vnorms * jnp.sum(gathered, axis=-1)
+    if mask is not None:
+        w = jnp.where(mask, w, -jnp.inf)
+    return w
+
+
+def hard_score_ref(q_ids, bucket_ids, vnorms):
+    """Traditional LSH collision counting (the ablation baseline)."""
+    coll = (bucket_ids == q_ids[None, :]).astype(jnp.float32)
+    return vnorms * jnp.sum(coll, axis=-1)
+
+
+def attention_ref(q, keys, values, scale):
+    """Exact SDPA for one query (the flash-decode oracle)."""
+    logits = keys @ q * scale
+    a = jnp.exp(logits - jnp.max(logits))
+    a = a / jnp.sum(a)
+    return a @ values
+
+
+def masked_attention_ref(q, keys, values, scale, mask):
+    """SDPA restricted to ``mask`` (selected tokens)."""
+    logits = jnp.where(mask, keys @ q * scale, -jnp.inf)
+    m = jnp.max(logits)
+    a = jnp.exp(logits - m)
+    a = a / jnp.sum(a)
+    return a @ values

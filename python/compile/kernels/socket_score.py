@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: Algorithm 4 (the custom scoring kernel).
+
+This is the paper's CUDA hot-spot, rethought for TPU
+(DESIGN.md §Hardware-Adaptation):
+
+* the bucket-probability table ``(L, R)`` is flattened to ``(L*R,)``
+  and kept VMEM-resident for the whole sweep (240 KB at L=60, R=1024 —
+  the CUDA kernel streams it through L2 instead);
+* the token axis is tiled: each program stages a ``(BLOCK_N, L)``
+  bucket-id block and the matching value-norm block into VMEM;
+* per block, scores are a take + row-reduction:
+  ``score[j] = ||v_j|| * sum_l probs_flat[l*R + b[j,l]]`` — the gather
+  is over a VMEM-resident table (fast), the reduction is a VPU sum.
+  Masked (invalid) tokens score -inf so top-k never selects them.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _score_kernel(ids_ref, vnorm_ref, mask_ref, probs_ref, out_ref, *, r_buckets):
+    ids = ids_ref[...]  # (BLOCK_N, L) int32
+    l_tables = ids.shape[1]
+    table_base = (jnp.arange(l_tables, dtype=jnp.int32) * r_buckets)[None, :]
+    flat_idx = ids + table_base  # (BLOCK_N, L)
+    probs = probs_ref[...]  # (L*R,)
+    gathered = jnp.take(probs, flat_idx, axis=0)  # (BLOCK_N, L)
+    score = vnorm_ref[...] * jnp.sum(gathered, axis=-1)
+    out_ref[...] = jnp.where(mask_ref[...], score, -jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def socket_score(probs, bucket_ids, vnorms, mask, interpret=True):
+    """Value-aware soft collision scores (N,) — Algorithm 4.
+
+    probs: (L, R) f32; bucket_ids: (N, L) int32; vnorms/mask: (N,).
+    N must be a multiple of BLOCK_N (pad with mask=False upstream).
+    """
+    n, l_tables = bucket_ids.shape
+    l2, r = probs.shape
+    assert l2 == l_tables
+    assert n % BLOCK_N == 0, f"N={n} must be a multiple of {BLOCK_N}"
+    kernel = functools.partial(_score_kernel, r_buckets=r)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, l_tables), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+            pl.BlockSpec((l_tables * r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(bucket_ids, vnorms, mask, probs.reshape(-1))

@@ -1,0 +1,48 @@
+"""Layer-1 Pallas kernel: Algorithm 2 (query-side soft bucket probs).
+
+Single program (the whole computation is tiny and latency-bound at
+decode time): ``u = tanh(W q)/sqrt(d)`` is an ``(L*P, d) x (d,)``
+matvec on the MXU, the corner logits are one ``(L, P) x (P, R)`` matmul
+against the +-1 corner matrix (VMEM-resident, R = 2**P <= 1024), and
+the per-table softmax is a VPU row reduction. Everything fits VMEM:
+planes 300 KB + corners 40 KB + probs 240 KB for the paper setting.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _soft_probs_kernel(q_ref, planes_ref, corners_ref, probs_ref, *, l_tables, p_planes, tau, dim):
+    q = q_ref[...]  # (d,)
+    planes = planes_ref[...]  # (L*P, d)
+    proj = jnp.dot(planes, q, preferred_element_type=jnp.float32)  # (L*P,)
+    u = jnp.tanh(proj) * (1.0 / jnp.sqrt(jnp.float32(dim)))
+    u = u.reshape(l_tables, p_planes)
+    corners = corners_ref[...]  # (R, P)
+    logits = jax.lax.dot_general(
+        u, corners, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (1.0 / tau)  # (L, R)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    probs_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+def soft_probs(q, planes, tau, interpret=True):
+    """Soft bucket distributions (L, R) for query ``q`` (d,)."""
+    l_tables, p_planes, d = planes.shape
+    r = 2**p_planes
+    corners = ref.corners(p_planes)  # (R, P)
+    kernel = functools.partial(
+        _soft_probs_kernel, l_tables=l_tables, p_planes=p_planes, tau=float(tau), dim=d
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((l_tables, r), jnp.float32),
+        interpret=interpret,
+    )(q, planes.reshape(l_tables * p_planes, d), corners)

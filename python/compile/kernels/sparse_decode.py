@@ -1,0 +1,61 @@
+"""Layer-1 Pallas kernel: flash-decode over the retrieved top-k keys.
+
+The TPU analog of the paper's Flash Decode Triton backend: one query
+attends over the gathered K/V ``(k_sel, d)`` with a single pass of
+online softmax. The K/V tiles stream HBM -> VMEM in ``BLOCK_K``-token
+chunks via a ``fori_loop`` over VMEM slices while the running
+``(max, sum, acc)`` state lives in registers/VMEM — the same schedule
+``attention::flash`` implements on the Rust side.
+
+Invalid rows (gather padding) are masked to -inf before the softmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_K = 128
+
+
+def _decode_kernel(q_ref, keys_ref, values_ref, mask_ref, out_ref, *, scale, n_keys):
+    q = q_ref[...]  # (d,)
+    n_blocks = n_keys // BLOCK_K
+
+    def body(i, carry):
+        m, s, acc = carry
+        ks = keys_ref[pl.dslice(i * BLOCK_K, BLOCK_K), :]  # (BLOCK_K, d)
+        vs = values_ref[pl.dslice(i * BLOCK_K, BLOCK_K), :]
+        valid = mask_ref[pl.dslice(i * BLOCK_K, BLOCK_K)]
+        logits = jnp.dot(ks, q, preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(valid, logits, -jnp.inf)
+        tile_max = jnp.max(logits)
+        new_m = jnp.maximum(m, tile_max)
+        # Guard the all-masked case: keep the old running state.
+        corr = jnp.where(jnp.isfinite(new_m), jnp.exp(m - new_m), 1.0)
+        w = jnp.where(valid, jnp.exp(logits - new_m), 0.0)
+        s_new = s * corr + jnp.sum(w)
+        acc_new = acc * corr + jnp.dot(w, vs, preferred_element_type=jnp.float32)
+        return new_m, s_new, acc_new
+
+    d = q.shape[0]
+    init = (-jnp.inf, jnp.float32(0.0), jnp.zeros((d,), jnp.float32))
+    _, s, acc = jax.lax.fori_loop(0, n_blocks, body, init)
+    out_ref[...] = acc / jnp.maximum(s, 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def sparse_decode(q, keys, values, mask, scale, interpret=True):
+    """Attention output (d,) of ``q`` over masked rows of keys/values.
+
+    keys/values: (k_sel, d) with k_sel a multiple of BLOCK_K.
+    """
+    k_sel, d = keys.shape
+    assert k_sel % BLOCK_K == 0, f"k_sel={k_sel} must be a multiple of {BLOCK_K}"
+    kernel = functools.partial(_decode_kernel, scale=float(scale), n_keys=k_sel)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=interpret,
+    )(q, keys, values, mask)

@@ -1,0 +1,234 @@
+"""Layer-2: the tiny transformer decode graph with SOCKET attention.
+
+A ~4M-parameter GQA transformer (RMSNorm, RoPE, SwiGLU) mirroring
+``rust/src/model/mod.rs::ModelConfig::tiny``. Three jit-able entry
+points are lowered by ``aot.py``:
+
+* ``init_params(seed)``        -> flat tuple of parameter arrays
+* ``prefill(params, tokens)``  -> KV caches + SOCKET hash caches
+* ``decode_step(params, caches, token, length)``
+                               -> logits + updated caches
+
+``decode_step`` calls the Pallas kernels (Algorithms 2 and 4 + flash
+decode) so they lower into the same HLO the Rust runtime executes —
+Python never runs at serving time.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.socket_score import socket_score
+from .kernels.soft_probs import soft_probs
+from .kernels.sparse_decode import sparse_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    vocab: int = 512
+    # KV-cache capacity (context + decode headroom).
+    cap: int = 1152
+    # SOCKET hash parameters (small L for the tiny model; the paper's
+    # (10, 60) applies at d=128).
+    lsh_l: int = 16
+    lsh_p: int = 8
+    tau: float = 0.5
+    # Retrieved tokens per decode step (multiple of BLOCK_K=128).
+    k_sel: int = 128
+
+    @property
+    def group(self):
+        return self.n_heads // self.n_kv_heads
+
+
+CFG = Config()
+
+# Canonical parameter order (flat tuple) — the Rust runtime relies on it.
+PARAM_NAMES = (
+    ["embed"]
+    + [
+        f"l{i}.{name}"
+        for i in range(CFG.n_layers)
+        for name in ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"]
+    ]
+    + ["ln_f", "out"]
+    + ["planes"]  # (n_layers, n_kv_heads, L, P, head_dim) hash planes
+)
+
+
+def init_params(seed):
+    """Deterministic parameter tuple from a scalar int32 seed."""
+    c = CFG
+    key = jax.random.PRNGKey(seed)
+
+    def normal(key, shape, scale):
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    params = []
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    ki = iter(range(len(PARAM_NAMES)))
+    params.append(normal(keys[next(ki)], (c.vocab, c.d_model), 0.02))  # embed
+    for _ in range(c.n_layers):
+        params.append(jnp.ones((c.d_model,), jnp.float32))  # ln1
+        next(ki)
+        params.append(normal(keys[next(ki)], (c.d_model, c.n_heads * c.head_dim), c.d_model**-0.5))
+        params.append(normal(keys[next(ki)], (c.d_model, c.n_kv_heads * c.head_dim), c.d_model**-0.5))
+        params.append(normal(keys[next(ki)], (c.d_model, c.n_kv_heads * c.head_dim), c.d_model**-0.5))
+        params.append(normal(keys[next(ki)], (c.n_heads * c.head_dim, c.d_model), c.d_model**-0.5))
+        params.append(jnp.ones((c.d_model,), jnp.float32))  # ln2
+        next(ki)
+        params.append(normal(keys[next(ki)], (c.d_model, 4 * c.d_model), c.d_model**-0.5))
+        params.append(normal(keys[next(ki)], (c.d_model, 4 * c.d_model), c.d_model**-0.5))
+        params.append(normal(keys[next(ki)], (4 * c.d_model, c.d_model), (4 * c.d_model) ** -0.5))
+    params.append(jnp.ones((c.d_model,), jnp.float32))  # ln_f
+    next(ki)
+    params.append(normal(keys[next(ki)], (c.d_model, c.vocab), c.d_model**-0.5))  # out
+    params.append(
+        normal(keys[next(ki)], (c.n_layers, c.n_kv_heads, c.lsh_l, c.lsh_p, c.head_dim), 1.0)
+    )
+    return tuple(params)
+
+
+def top_k_indices(scores, k):
+    """Top-k indices via a full descending sort.
+
+    ``jax.lax.top_k`` lowers to the new `topk` HLO instruction whose
+    text form (`largest=true`) the xla_extension 0.5.1 parser rejects;
+    `argsort` lowers to the classic `sort` op, which round-trips.
+    """
+    return jnp.argsort(-scores)[:k]
+
+
+def _layer_params(params, i):
+    base = 1 + i * 9
+    return params[base : base + 9]
+
+
+def _rms_norm(x, g):
+    return x * g * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _rope(x, pos):
+    """Rotary embedding for (..., head_dim) at position(s) ``pos``."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    angle = pos[..., None] * freqs  # (..., half)
+    cos, sin = jnp.cos(angle), jnp.sin(angle)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def prefill(params, tokens):
+    """Process a full context (N tokens) with dense causal attention.
+
+    Returns (k_cache, v_cache, ids_cache, vnorm_cache, length) with the
+    caches zero-padded to CFG.cap — ready for ``decode_step``.
+
+    Shapes: k/v (layers, kv, cap, hd); ids (layers, kv, cap, L) int32;
+    vnorms (layers, kv, cap).
+    """
+    c = CFG
+    n = tokens.shape[0]
+    embed = params[0]
+    planes = params[-1]
+    x = embed[tokens]  # (N, d_model)
+    pos = jnp.arange(n, dtype=jnp.float32)
+    causal = jnp.tril(jnp.ones((n, n), bool))
+    k_cache = jnp.zeros((c.n_layers, c.n_kv_heads, c.cap, c.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    ids_cache = jnp.zeros((c.n_layers, c.n_kv_heads, c.cap, c.lsh_l), jnp.int32)
+    vn_cache = jnp.zeros((c.n_layers, c.n_kv_heads, c.cap), jnp.float32)
+    for i in range(c.n_layers):
+        ln1, wq, wk, wv, wo, ln2, wg, wu, wd = _layer_params(params, i)
+        h = _rms_norm(x, ln1)
+        q = (h @ wq).reshape(n, c.n_heads, c.head_dim)
+        k = (h @ wk).reshape(n, c.n_kv_heads, c.head_dim)
+        v = (h @ wv).reshape(n, c.n_kv_heads, c.head_dim)
+        q = _rope(q.transpose(1, 0, 2), pos).transpose(1, 0, 2)
+        k = _rope(k.transpose(1, 0, 2), pos).transpose(1, 0, 2)
+        # Dense causal attention (following the paper's protocol the
+        # context is processed densely; sparsity applies at decode).
+        scale = c.head_dim**-0.5
+        kk = jnp.repeat(k, c.group, axis=1)  # (N, n_heads, hd)
+        vv = jnp.repeat(v, c.group, axis=1)
+        logits = jnp.einsum("qhd,khd->hqk", q, kk) * scale
+        logits = jnp.where(causal[None, :, :], logits, -jnp.inf)
+        a = jax.nn.softmax(logits, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", a, vv).reshape(n, -1)
+        x = x + attn @ wo
+        h2 = _rms_norm(x, ln2)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        # SOCKET Algorithm 1: hash this layer's keys, cache norms.
+        for kv in range(c.n_kv_heads):
+            ids = ref.hash_keys_ref(k[:, kv, :], planes[i, kv])  # (N, L)
+            vn = ref.value_norms_ref(v[:, kv, :])
+            k_cache = k_cache.at[i, kv, :n].set(k[:, kv, :])
+            v_cache = v_cache.at[i, kv, :n].set(v[:, kv, :])
+            ids_cache = ids_cache.at[i, kv, :n].set(ids)
+            vn_cache = vn_cache.at[i, kv, :n].set(vn)
+    return k_cache, v_cache, ids_cache, vn_cache, jnp.int32(n)
+
+
+def decode_step(params, k_cache, v_cache, ids_cache, vn_cache, length, token, sparse):
+    """One decode step. ``sparse`` statically selects SOCKET vs dense.
+
+    Returns (logits, k_cache, v_cache, ids_cache, vn_cache, length+1).
+    """
+    c = CFG
+    embed = params[0]
+    planes = params[-1]
+    x = embed[token]  # (d_model,)
+    pos = length.astype(jnp.float32)
+    scale = c.head_dim**-0.5
+    positions = jnp.arange(c.cap)
+    valid = positions < length
+    for i in range(c.n_layers):
+        ln1, wq, wk, wv, wo, ln2, wg, wu, wd = _layer_params(params, i)
+        h = _rms_norm(x, ln1)
+        q = (h @ wq).reshape(c.n_heads, c.head_dim)
+        k_new = (h @ wk).reshape(c.n_kv_heads, c.head_dim)
+        v_new = (h @ wv).reshape(c.n_kv_heads, c.head_dim)
+        q = _rope(q, jnp.full((c.n_heads,), pos))
+        k_new = _rope(k_new, jnp.full((c.n_kv_heads,), pos))
+        heads_out = []
+        for kv in range(c.n_kv_heads):
+            keys = k_cache[i, kv]  # (cap, hd)
+            vals = v_cache[i, kv]
+            for g in range(c.group):
+                hq = q[kv * c.group + g]
+                if sparse:
+                    # Algorithms 2 + 4 + 3 via the Pallas kernels.
+                    probs = soft_probs(hq, planes[i, kv], c.tau)
+                    scores = socket_score(probs, ids_cache[i, kv], vn_cache[i, kv], valid)
+                    top_idx = top_k_indices(scores, c.k_sel)
+                    sel_mask = jnp.take(scores, top_idx) > -jnp.inf
+                    out = sparse_decode(hq, keys[top_idx], vals[top_idx], sel_mask, scale)
+                else:
+                    out = ref.masked_attention_ref(hq, keys, vals, scale, valid)
+                heads_out.append(out)
+        attn = jnp.concatenate(heads_out, axis=-1)  # (n_heads*hd,)
+        x = x + attn @ wo
+        h2 = _rms_norm(x, ln2)
+        x = x + (jax.nn.silu(h2 @ wg) * (h2 @ wu)) @ wd
+        # Append the new token's K/V + hash signature (Alg. 1 online).
+        for kv in range(c.n_kv_heads):
+            k_cache = k_cache.at[i, kv, length].set(k_new[kv])
+            v_cache = v_cache.at[i, kv, length].set(v_new[kv])
+            ids = ref.hash_keys_ref(k_new[kv][None, :], planes[i, kv])[0]
+            ids_cache = ids_cache.at[i, kv, length].set(ids)
+            vn_cache = vn_cache.at[i, kv, length].set(jnp.sqrt(jnp.sum(v_new[kv] * v_new[kv])))
+    logits = _rms_norm(x, params[-3]) @ params[-2]
+    return logits, k_cache, v_cache, ids_cache, vn_cache, length + 1
+
+
+decode_step_socket = functools.partial(decode_step, sparse=True)
+decode_step_dense = functools.partial(decode_step, sparse=False)

@@ -1,0 +1,50 @@
+"""AOT lowering sanity: every artifact lowers to parseable HLO text with
+the expected parameter counts, and the HLO-text path round-trips through
+XlaComputation (the exact interchange the Rust runtime consumes)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import pytest
+
+from compile import aot, model
+
+
+def test_param_specs_match_init():
+    specs = aot.param_specs()
+    assert len(specs) == len(model.PARAM_NAMES)
+
+
+@pytest.mark.parametrize("name", ["soft_probs.hlo.txt", "socket_score.hlo.txt"])
+def test_kernel_artifacts_lower(name):
+    text = aot.ARTIFACTS[name]()
+    assert text.startswith("HloModule"), text[:60]
+    assert "ENTRY" in text
+
+
+def test_fused_decode_artifact_contains_topk_and_scoring():
+    text = aot.ARTIFACTS["socket_decode.hlo.txt"]()
+    assert text.startswith("HloModule")
+    # The fused module returns (attention out f32[128], top-k ids s32[512]).
+    assert "s32[512]" in text, "top-k index output missing"
+    assert "f32[128]" in text
+    assert "gather" in text or "dynamic-slice" in text
+
+
+def test_artifact_registry_is_complete():
+    names = set(aot.ARTIFACTS)
+    for required in [
+        "hash_keys.hlo.txt",
+        "soft_probs.hlo.txt",
+        "socket_score.hlo.txt",
+        "sparse_decode.hlo.txt",
+        "dense_decode.hlo.txt",
+        "socket_decode.hlo.txt",
+        "model_init.hlo.txt",
+        "model_prefill.hlo.txt",
+        "model_decode_socket.hlo.txt",
+        "model_decode_dense.hlo.txt",
+    ]:
+        assert required in names

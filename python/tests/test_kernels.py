@@ -1,0 +1,218 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes per the repo convention; fixed-seed
+numpy generates the data (deterministic, no flaky tolerances).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hash_keys import BLOCK_N as HASH_BLOCK, hash_keys
+from compile.kernels.socket_score import BLOCK_N as SCORE_BLOCK, socket_score
+from compile.kernels.soft_probs import soft_probs
+from compile.kernels.sparse_decode import BLOCK_K, sparse_decode
+
+
+def rand(rs, *shape):
+    return jnp.asarray(rs.randn(*shape), jnp.float32)
+
+
+# ---------- hash_keys (Algorithm 1) ----------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_blocks=st.integers(1, 3),
+    d=st.sampled_from([8, 32, 128]),
+    l=st.integers(1, 8),
+    p=st.integers(1, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_hash_keys_matches_ref(n_blocks, d, l, p, seed):
+    rs = np.random.RandomState(seed)
+    keys = rand(rs, n_blocks * HASH_BLOCK, d)
+    planes = rand(rs, l, p, d)
+    got = hash_keys(keys, planes)
+    want = ref.hash_keys_ref(keys, planes)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_hash_keys_bucket_range():
+    rs = np.random.RandomState(0)
+    keys = rand(rs, HASH_BLOCK, 16)
+    planes = rand(rs, 4, 6, 16)
+    ids = np.asarray(hash_keys(keys, planes))
+    assert ids.min() >= 0 and ids.max() < 2**6
+
+
+def test_hash_keys_rejects_ragged_n():
+    rs = np.random.RandomState(0)
+    with pytest.raises(AssertionError):
+        hash_keys(rand(rs, HASH_BLOCK + 1, 8), rand(rs, 2, 4, 8))
+
+
+# ---------- soft_probs (Algorithm 2) ----------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    d=st.sampled_from([8, 64, 128]),
+    l=st.integers(1, 8),
+    p=st.integers(1, 10),
+    tau=st.sampled_from([0.1, 0.5, 2.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_soft_probs_matches_ref(d, l, p, tau, seed):
+    rs = np.random.RandomState(seed)
+    q = rand(rs, d)
+    planes = rand(rs, l, p, d)
+    got = soft_probs(q, planes, tau)
+    want = ref.soft_probs_ref(q, planes, tau)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_soft_probs_rows_are_distributions():
+    rs = np.random.RandomState(3)
+    probs = np.asarray(soft_probs(rand(rs, 32), rand(rs, 6, 8, 32), 0.5))
+    assert (probs >= 0).all()
+    np.testing.assert_allclose(probs.sum(axis=-1), 1.0, atol=1e-5)
+
+
+def test_soft_probs_argmax_is_hard_bucket():
+    # Section B.1: the dominant soft bucket equals the hard SRP bucket.
+    rs = np.random.RandomState(4)
+    q = rand(rs, 48)
+    planes = rand(rs, 10, 7, 48)
+    probs = np.asarray(soft_probs(q, planes, 0.3))
+    hard = np.asarray(ref.hash_keys_ref(q[None, :], planes))[0]
+    np.testing.assert_array_equal(probs.argmax(axis=-1), hard)
+
+
+# ---------- socket_score (Algorithm 4) ----------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_blocks=st.integers(1, 4),
+    l=st.integers(1, 12),
+    p=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_socket_score_matches_ref(n_blocks, l, p, seed):
+    rs = np.random.RandomState(seed)
+    n = n_blocks * SCORE_BLOCK
+    r = 2**p
+    probs = jnp.asarray(rs.dirichlet(np.ones(r), size=l), jnp.float32)
+    ids = jnp.asarray(rs.randint(0, r, (n, l)), jnp.int32)
+    vnorms = jnp.asarray(np.abs(rs.randn(n)), jnp.float32)
+    mask = jnp.asarray(rs.rand(n) > 0.2)
+    got = socket_score(probs, ids, vnorms, mask)
+    want = ref.socket_score_ref(probs, ids, vnorms, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_socket_score_mask_is_neg_inf():
+    rs = np.random.RandomState(1)
+    n, l, p = SCORE_BLOCK, 4, 4
+    probs = jnp.asarray(rs.dirichlet(np.ones(2**p), size=l), jnp.float32)
+    ids = jnp.asarray(rs.randint(0, 2**p, (n, l)), jnp.int32)
+    vnorms = jnp.ones((n,), jnp.float32)
+    mask = jnp.zeros((n,), bool).at[0].set(True)
+    s = np.asarray(socket_score(probs, ids, vnorms, mask))
+    assert np.isfinite(s[0])
+    assert np.isneginf(s[1:]).all()
+
+
+def test_socket_score_bounded_by_l():
+    rs = np.random.RandomState(2)
+    n, l, p = SCORE_BLOCK, 8, 6
+    probs = jnp.asarray(rs.dirichlet(np.ones(2**p), size=l), jnp.float32)
+    ids = jnp.asarray(rs.randint(0, 2**p, (n, l)), jnp.int32)
+    vnorms = jnp.ones((n,), jnp.float32)
+    s = np.asarray(socket_score(probs, ids, vnorms, jnp.ones((n,), bool)))
+    assert (s >= 0).all() and (s <= l).all()
+
+
+# ---------- sparse_decode (flash decode) ----------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    k_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_decode_matches_ref(k_blocks, d, seed):
+    rs = np.random.RandomState(seed)
+    k = k_blocks * BLOCK_K
+    q = rand(rs, d)
+    keys = rand(rs, k, d)
+    values = rand(rs, k, d)
+    mask = jnp.asarray(rs.rand(k) > 0.3)
+    if not bool(mask.any()):
+        mask = mask.at[0].set(True)
+    scale = 1.0 / np.sqrt(d)
+    got = sparse_decode(q, keys, values, mask, scale)
+    want = ref.masked_attention_ref(q, keys, values, scale, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_sparse_decode_extreme_logits_stable():
+    d = 16
+    q = jnp.zeros((d,)).at[0].set(1.0)
+    keys = jnp.zeros((2 * BLOCK_K, d)).at[0, 0].set(90.0).at[BLOCK_K + 5, 0].set(90.0)
+    values = jnp.zeros((2 * BLOCK_K, d)).at[0, 0].set(7.0).at[BLOCK_K + 5, 0].set(9.0)
+    out = np.asarray(sparse_decode(q, keys, values, jnp.ones((2 * BLOCK_K,), bool), 1.0))
+    assert abs(out[0] - 8.0) < 1e-3  # mean of the two spikes
+    assert np.isfinite(out).all()
+
+
+def test_sparse_decode_single_valid_token():
+    d = 8
+    rs = np.random.RandomState(5)
+    keys = rand(rs, BLOCK_K, d)
+    values = rand(rs, BLOCK_K, d)
+    mask = jnp.zeros((BLOCK_K,), bool).at[17].set(True)
+    out = np.asarray(sparse_decode(rand(rs, d), keys, values, mask, 0.5))
+    np.testing.assert_allclose(out, np.asarray(values[17]), rtol=1e-5)
+
+
+# ---------- end-to-end kernel pipeline ----------
+
+
+def test_full_socket_pipeline_retrieves_planted_key():
+    """Alg. 1 -> Alg. 2 -> Alg. 4 -> top-k -> flash decode: a planted
+    near-duplicate key must rank first and dominate the output."""
+    rs = np.random.RandomState(9)
+    n, d, l, p = 2 * SCORE_BLOCK, 64, 20, 8
+    q = rand(rs, d)
+    keys = rand(rs, n, d)
+    keys = keys.at[37].set(3.0 * q)
+    values = rand(rs, n, d)
+    planes = rand(rs, l, p, d)
+    ids = ref.hash_keys_ref(keys, planes)
+    vnorms = ref.value_norms_ref(values)
+    probs = soft_probs(q, planes, 0.5)
+    scores = socket_score(probs, ids, vnorms, jnp.ones((n,), bool))
+    _, top = jax.lax.top_k(scores, 32)
+    assert 37 in np.asarray(top), f"planted key missing from top-32"
+    sel_mask = jnp.ones((32,), bool)
+    # pad gathered set to BLOCK_K
+    pad = BLOCK_K - 32
+    gk = jnp.concatenate([keys[top], jnp.zeros((pad, d))])
+    gv = jnp.concatenate([values[top], jnp.zeros((pad, d))])
+    m = jnp.concatenate([sel_mask, jnp.zeros((pad,), bool)])
+    out = sparse_decode(q, gk, gv, m, 1.0)
+    dense = ref.attention_ref(q, keys, values, 1.0)
+    rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
+    assert rel < 0.05, f"rel err {rel}"

@@ -1,0 +1,103 @@
+"""L2 model tests: shapes, prefill/decode consistency, SOCKET-vs-dense
+closeness on the tiny transformer."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return jax.jit(model.init_params)(jnp.int32(0))
+
+
+@pytest.fixture(scope="module")
+def caches(params):
+    tokens = jnp.asarray(np.random.RandomState(0).randint(0, model.CFG.vocab, 256), jnp.int32)
+    return jax.jit(model.prefill)(params, tokens)
+
+
+def test_param_count_and_order(params):
+    assert len(params) == len(model.PARAM_NAMES)
+    assert params[0].shape == (model.CFG.vocab, model.CFG.d_model)
+    assert params[-1].shape == (
+        model.CFG.n_layers,
+        model.CFG.n_kv_heads,
+        model.CFG.lsh_l,
+        model.CFG.lsh_p,
+        model.CFG.head_dim,
+    )
+    total = sum(int(np.prod(p.shape)) for p in params)
+    assert 3_000_000 < total < 8_000_000
+
+
+def test_init_deterministic():
+    a = jax.jit(model.init_params)(jnp.int32(7))
+    b = jax.jit(model.init_params)(jnp.int32(7))
+    c = jax.jit(model.init_params)(jnp.int32(8))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    assert not np.array_equal(np.asarray(a[1 + 1]), np.asarray(c[1 + 1]))
+
+
+def test_prefill_shapes_and_length(caches):
+    c = model.CFG
+    k_cache, v_cache, ids_cache, vn_cache, length = caches
+    assert k_cache.shape == (c.n_layers, c.n_kv_heads, c.cap, c.head_dim)
+    assert ids_cache.shape == (c.n_layers, c.n_kv_heads, c.cap, c.lsh_l)
+    assert int(length) == 256
+    # Slots beyond length stay zero.
+    assert float(jnp.abs(k_cache[:, :, 256:]).max()) == 0.0
+    # Bucket ids within range.
+    ids = np.asarray(ids_cache[:, :, :256])
+    assert ids.min() >= 0 and ids.max() < 2**c.lsh_p
+
+
+def test_prefill_hashes_match_ref(params, caches):
+    from compile.kernels import ref
+
+    k_cache, _, ids_cache, vn_cache, length = caches
+    planes = params[-1]
+    n = int(length)
+    for i in [0, model.CFG.n_layers - 1]:
+        for kv in range(model.CFG.n_kv_heads):
+            want = ref.hash_keys_ref(k_cache[i, kv, :n], planes[i, kv])
+            np.testing.assert_array_equal(np.asarray(ids_cache[i, kv, :n]), np.asarray(want))
+
+
+def test_decode_appends_and_advances(params, caches):
+    step = jax.jit(model.decode_step_socket)
+    logits, k2, v2, ids2, vn2, len2 = step(params, *caches, jnp.int32(3))
+    assert logits.shape == (model.CFG.vocab,)
+    assert int(len2) == int(caches[-1]) + 1
+    # New slot is now populated.
+    assert float(jnp.abs(k2[:, :, int(caches[-1])]).max()) > 0.0
+
+
+def test_socket_decode_close_to_dense(params, caches):
+    ls, *_ = jax.jit(model.decode_step_socket)(params, *caches, jnp.int32(3))
+    ld, *_ = jax.jit(model.decode_step_dense)(params, *caches, jnp.int32(3))
+    rel = float(jnp.linalg.norm(ls - ld) / jnp.linalg.norm(ld))
+    assert rel < 0.6, f"rel logits err {rel}"
+    # Random (untrained) weights make argmax brittle; require strong
+    # overall agreement of the logit vectors instead.
+    corr = float(jnp.corrcoef(ls, ld)[0, 1])
+    assert corr > 0.7, f"logit correlation {corr}"
+
+
+def test_multi_step_decode_chain(params, caches):
+    step = jax.jit(model.decode_step_socket)
+    state = caches
+    tok = jnp.int32(1)
+    for s in range(4):
+        logits, *state = step(params, *state, tok)
+        tok = jnp.argmax(logits).astype(jnp.int32)
+    assert int(state[-1]) == 260
+    assert np.isfinite(np.asarray(logits)).all()

@@ -1,0 +1,9 @@
+//! Table 7 — hard-LSH ablations (P, L incl. larger budgets).
+use socket_attn::experiments::{ablation, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    ablation::table("Table 7a: hard LSH varying P (L=60)", "P", &ablation::hard_vary_p(scale)).print();
+    ablation::table("Table 7b/c: hard LSH varying L (P=2)", "L", &ablation::hard_vary_l(scale)).print();
+}

@@ -1,0 +1,10 @@
+//! Table 6 — SOCKET hyperparameter ablations (P, L, tau).
+use socket_attn::experiments::{ablation, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    ablation::table("Table 6a: SOCKET varying P (tau=0.4, L=60)", "P", &ablation::socket_vary_p(scale)).print();
+    ablation::table("Table 6b: SOCKET varying L (tau=0.5, P=10)", "L", &ablation::socket_vary_l(scale)).print();
+    ablation::table("Table 6c: SOCKET varying tau (P=10, L=60)", "tau", &ablation::socket_vary_tau(scale)).print();
+}

@@ -1,0 +1,8 @@
+//! Table 3 — correlation & estimator variance, SOCKET vs hard LSH.
+use socket_attn::experiments::{correlation, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    correlation::table(&correlation::run(scale)).print();
+}

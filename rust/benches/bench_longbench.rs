@@ -1,0 +1,8 @@
+//! Tables 4/5/9 — LongBench proxy across methods and sparsity.
+use socket_attn::experiments::{longbench, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    longbench::table(&longbench::run(scale), "Llama-3.1-8B-analog").print();
+}

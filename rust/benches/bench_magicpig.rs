@@ -1,0 +1,8 @@
+//! Table 8 — MagicPIG evaluation settings vs SOCKET.
+use socket_attn::experiments::{magicpig, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    magicpig::table(&magicpig::run(scale)).print();
+}

@@ -1,0 +1,15 @@
+//! Tables 10/11/12 — RULER-16K method comparison + model-scale sweeps.
+use socket_attn::experiments::{models, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    models::table("Table 10: RULER-16K methods (10x)", &models::run_ruler16k(scale)).print();
+    for m in models::MODELS.iter().skip(1) {
+        models::table(
+            &format!("Tables 11/12: SOCKET across sparsity ({})", m.name),
+            &models::run_model_sweep(scale, m, &[5.0, 10.0, 20.0, 50.0]),
+        )
+        .print();
+    }
+}

@@ -1,0 +1,8 @@
+//! Table 2 — retrieval compute/memory overhead, SOCKET vs hard LSH.
+use socket_attn::experiments::{overhead, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    overhead::table(&overhead::run(scale)).print();
+}

@@ -1,0 +1,8 @@
+//! Figure 2 — Precision/Jaccard/NDCG vs top-k at matched memory budget.
+use socket_attn::experiments::{ranking, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    ranking::table(&ranking::run(scale)).print();
+}

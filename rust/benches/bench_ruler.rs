@@ -1,0 +1,8 @@
+//! Table 1 — RULER-HARD across sparsity levels, six methods.
+use socket_attn::experiments::{ruler, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    ruler::reproduce(scale).print();
+}

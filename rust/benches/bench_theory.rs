@@ -1,0 +1,28 @@
+//! Theorem 3 + Lemma 4 empirical validation (error rates, bias, and the
+//! hard-vs-soft correlation identity).
+use socket_attn::experiments::{theory, Scale};
+use socket_attn::util::{fnum, Args, Table};
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    theory::finite_l_table(&theory::finite_l_sweep(scale, &[5, 10, 20, 40, 80, 160], 0.5, 6)).print();
+    theory::lemma4_table(&theory::lemma4_check(scale, &[2, 4, 8, 16])).print();
+
+    let mut t = Table::new("epsilon_tau(q) vs tau (P=8, R=256): bias -> 0 as tau -> 0", &["tau", "eps_tau"]);
+    for (tau, eps) in theory::epsilon_tau(scale, 8, &[0.05, 0.1, 0.2, 0.5, 1.0, 5.0, 100.0]) {
+        t.row(vec![format!("{tau}"), fnum(eps, 4)]);
+    }
+    t.print();
+
+    let mut t = Table::new("sampling estimator error vs M (Lemma 7: ~ M^-1/2)", &["M", "err", "err*sqrt(M)"]);
+    for (m, err) in theory::sampling_sweep(scale, &[8, 32, 128, 512, 2048]) {
+        t.row(vec![m.to_string(), fnum(err, 4), fnum(err * (m as f64).sqrt(), 3)]);
+    }
+    t.print();
+
+    let mut t = Table::new("soft-count vs angular attention gap vs L (Thm 3, no sampling)", &["L", "gap"]);
+    for (l, gap) in theory::angular_gap(scale, &[4, 16, 64, 256]) {
+        t.row(vec![l.to_string(), fnum(gap, 5)]);
+    }
+    t.print();
+}

@@ -1,0 +1,13 @@
+//! Figures 3b/3c — decode throughput vs context length, SOCKET @33x vs
+//! dense FlashAttention-style decode, on the Rust substrate.
+use socket_attn::experiments::{throughput, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let mut scale = Scale::from_args(&args);
+    scale.dim = args.usize_or("dim", 128); // paper head dim
+    let ctxs = [4 * 1024, 16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024];
+    let pts = throughput::run(scale, &ctxs, args.f64_or("sparsity", 33.0));
+    throughput::table(&pts, "CPU substrate, 33x sparsity").print();
+}

@@ -1,0 +1,9 @@
+//! Figure 3a — indexer TTFT: SOCKET hashing vs PQCache k-means.
+use socket_attn::experiments::{ttft, Scale};
+use socket_attn::util::Args;
+
+fn main() {
+    let scale = Scale::from_args(&Args::from_env());
+    let ctxs = [1024, 4096, 16 * 1024, 32 * 1024];
+    ttft::table(&ttft::run(scale, &ctxs)).print();
+}

@@ -1,0 +1,110 @@
+//! Angular-kernel attention — the analysis surrogate of Section 5.
+//!
+//! `w_j = (1 - acos(cos(q,k_j))/π)^P` (eq. 4), normalized into a
+//! distribution; `y* = Σ a_j v_j` is the target the sampling estimator
+//! of Theorem 3 approximates. Used by `experiments::theory`.
+
+use crate::linalg::{add_scaled, dot, l2_norm, Matrix};
+
+/// Unnormalized angular kernel weights `w_j ∈ [0,1]`.
+pub fn angular_weights(q: &[f32], keys: &Matrix, p: usize) -> Vec<f32> {
+    let qn = l2_norm(q).max(1e-20);
+    let mut w = vec![0.0f32; keys.rows];
+    for j in 0..keys.rows {
+        let kj = keys.row(j);
+        let kn = l2_norm(kj).max(1e-20);
+        let cos = (dot(kj, q) / (qn * kn)).clamp(-1.0, 1.0);
+        let per_plane = 1.0 - (cos as f64).acos() / std::f64::consts::PI;
+        w[j] = per_plane.powi(p as i32) as f32;
+    }
+    w
+}
+
+/// Angular attention output `y* = Σ (w_j/Z) v_j`.
+pub fn angular_attention(q: &[f32], keys: &Matrix, values: &Matrix, p: usize) -> Vec<f32> {
+    assert_eq!(keys.rows, values.rows);
+    let w = angular_weights(q, keys, p);
+    let z: f32 = w.iter().sum();
+    let mut out = vec![0.0f32; values.cols];
+    if z <= 0.0 {
+        return out;
+    }
+    for j in 0..keys.rows {
+        if w[j] != 0.0 {
+            add_scaled(&mut out, values.row(j), w[j] / z);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn aligned_key_has_weight_one() {
+        let keys = Matrix::from_vec(1, 3, vec![2.0, 0.0, 0.0]);
+        let w = angular_weights(&[5.0, 0.0, 0.0], &keys, 10);
+        assert!((w[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn opposite_key_has_weight_zero() {
+        let keys = Matrix::from_vec(1, 3, vec![-1.0, 0.0, 0.0]);
+        let w = angular_weights(&[1.0, 0.0, 0.0], &keys, 4);
+        assert!(w[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn weights_monotone_in_cosine() {
+        let mut rng = Pcg64::seeded(1);
+        let q = gen::unit_vec(&mut rng, 16);
+        let mut keys = Matrix::zeros(3, 16);
+        keys.row_mut(0).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.9));
+        keys.row_mut(1).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.5));
+        keys.row_mut(2).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.0));
+        let w = angular_weights(&q, &keys, 8);
+        assert!(w[0] > w[1] && w[1] > w[2], "{w:?}");
+    }
+
+    #[test]
+    fn larger_p_sharpens() {
+        let mut rng = Pcg64::seeded(2);
+        let q = gen::unit_vec(&mut rng, 16);
+        let keys = Matrix::from_vec(1, 16, gen::key_with_cosine(&mut rng, &q, 0.5));
+        let w2 = angular_weights(&q, &keys, 2)[0];
+        let w10 = angular_weights(&q, &keys, 10)[0];
+        assert!(w10 < w2, "sharper kernel should shrink mid-similarity weights");
+    }
+
+    #[test]
+    fn prop_weights_in_unit_interval() {
+        check_default("angular-range", |rng, _| {
+            let d = gen::size(rng, 2, 64);
+            let n = gen::size(rng, 1, 50);
+            let keys = Matrix::gaussian(n, d, rng);
+            let q = rng.normal_vec(d);
+            let p = 1 + rng.below_usize(12);
+            for &w in &angular_weights(&q, &keys, p) {
+                prop_assert!((0.0..=1.0).contains(&w), "w={w}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn attention_output_is_convex_combination() {
+        let mut rng = Pcg64::seeded(3);
+        let keys = Matrix::gaussian(10, 8, &mut rng);
+        let mut values = Matrix::zeros(10, 1);
+        for j in 0..10 {
+            values.set(j, 0, 1.0); // all values equal 1 => output must be 1
+        }
+        let q = rng.normal_vec(8);
+        let y = angular_attention(&q, &keys, &values, 6);
+        assert!((y[0] - 1.0).abs() < 1e-5, "y={}", y[0]);
+    }
+}

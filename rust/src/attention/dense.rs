@@ -1,0 +1,85 @@
+//! Exact scaled-dot-product attention for a single query (eq. 1).
+//!
+//! Following the paper we omit the 1/√d factor in score definitions
+//! unless `scale` is supplied (footnote 1).
+
+use crate::linalg::{add_scaled, dot, softmax_inplace, Matrix};
+
+/// Softmax attention weights of `q` against all rows of `keys`,
+/// optionally scaled (pass `1.0` for the paper's convention).
+pub fn attention_weights(q: &[f32], keys: &Matrix, scale: f32) -> Vec<f32> {
+    let mut logits = vec![0.0f32; keys.rows];
+    for j in 0..keys.rows {
+        logits[j] = dot(keys.row(j), q) * scale;
+    }
+    softmax_inplace(&mut logits);
+    logits
+}
+
+/// Dense attention output `y(q) = Σ a_i v_i`.
+pub fn dense_attention(q: &[f32], keys: &Matrix, values: &Matrix, scale: f32) -> Vec<f32> {
+    assert_eq!(keys.rows, values.rows);
+    let a = attention_weights(q, keys, scale);
+    let mut out = vec![0.0f32; values.cols];
+    for j in 0..keys.rows {
+        if a[j] != 0.0 {
+            add_scaled(&mut out, values.row(j), a[j]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::check_default;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(10, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let a = attention_weights(&q, &keys, 1.0);
+        assert!((a.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn single_key_gets_all_mass() {
+        let keys = Matrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 0.0]);
+        let values = Matrix::from_vec(1, 4, vec![2.0, 3.0, 4.0, 5.0]);
+        let y = dense_attention(&[1.0, 0.0, 0.0, 0.0], &keys, &values, 1.0);
+        assert_eq!(y, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn dominant_key_dominates_output() {
+        // A key with much larger q·k should absorb nearly all mass.
+        let mut keys = Matrix::zeros(3, 2);
+        keys.set(0, 0, 10.0);
+        keys.set(1, 0, 0.0);
+        keys.set(2, 0, -10.0);
+        let mut values = Matrix::zeros(3, 1);
+        values.set(0, 0, 1.0);
+        values.set(1, 0, 100.0);
+        values.set(2, 0, -100.0);
+        let y = dense_attention(&[1.0, 0.0], &keys, &values, 1.0);
+        assert!((y[0] - 1.0).abs() < 0.01, "y={:?}", y);
+    }
+
+    #[test]
+    fn prop_scale_invariance_of_uniform_keys() {
+        // All-equal logits => uniform weights regardless of scale.
+        check_default("uniform-weights", |rng, _| {
+            let n = 2 + rng.below_usize(20);
+            let keys = Matrix::from_vec(n, 3, vec![0.0; n * 3]);
+            let q = rng.normal_vec(3);
+            let a = attention_weights(&q, &keys, rng.range_f32(0.1, 10.0));
+            for &w in &a {
+                prop_assert!((w - 1.0 / n as f32).abs() < 1e-5, "w={w} n={n}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Blocked online-softmax decode — the CPU analog of the paper's
+//! Flash-Decode Triton backend.
+//!
+//! Processes the KV cache (or a gathered subset) in tiles, maintaining a
+//! running (max, sum, accumulator) so only one pass over K/V is needed
+//! and per-tile working state fits in cache. This is the L3 fallback
+//! attention path used when PJRT artifacts are not loaded, and the
+//! reference for the Pallas `sparse_decode` kernel's structure.
+
+use crate::linalg::{dot, Matrix};
+
+/// Tile size in tokens. 128 keeps the K/V tile (128 x d x 4B, d≤256)
+/// inside L2 on typical CPUs; the Pallas kernel uses the same tiling
+/// into VMEM.
+pub const TILE: usize = 128;
+
+/// Online-softmax attention of one query over `selected` rows of K/V
+/// (pass `None` to attend over all rows). Matches dense softmax exactly
+/// up to float reassociation.
+pub fn flash_decode(
+    q: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    selected: Option<&[usize]>,
+    scale: f32,
+) -> Vec<f32> {
+    assert_eq!(keys.rows, values.rows);
+    let n = selected.map(|s| s.len()).unwrap_or(keys.rows);
+    let dv = values.cols;
+    let mut m = f32::NEG_INFINITY; // running max
+    let mut s = 0.0f32; // running sum of exp
+    let mut acc = vec![0.0f32; dv]; // running weighted value sum
+    let mut tile_logits = [0.0f32; TILE];
+
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + TILE).min(n);
+        let tile = end - start;
+        // 1) logits for this tile
+        let mut tile_max = f32::NEG_INFINITY;
+        for i in 0..tile {
+            let row = match selected {
+                Some(sel) => sel[start + i],
+                None => start + i,
+            };
+            let logit = dot(keys.row(row), q) * scale;
+            tile_logits[i] = logit;
+            tile_max = tile_max.max(logit);
+        }
+        // 2) rescale running state if the max grew
+        let new_m = m.max(tile_max);
+        if new_m > m && m > f32::NEG_INFINITY {
+            let corr = (m - new_m).exp();
+            s *= corr;
+            for a in acc.iter_mut() {
+                *a *= corr;
+            }
+        }
+        m = new_m;
+        // 3) accumulate tile
+        for i in 0..tile {
+            let w = (tile_logits[i] - m).exp();
+            if w == 0.0 {
+                continue;
+            }
+            s += w;
+            let row = match selected {
+                Some(sel) => sel[start + i],
+                None => start + i,
+            };
+            let v = values.row(row);
+            for c in 0..dv {
+                acc[c] += w * v[c];
+            }
+        }
+        start = end;
+    }
+    if s > 0.0 {
+        for a in acc.iter_mut() {
+            *a /= s;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::dense_attention;
+    use crate::attention::sparse::sparse_attention;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matches_dense_small() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(300, 16, &mut rng); // > 2 tiles
+        let values = Matrix::gaussian(300, 16, &mut rng);
+        let q = rng.normal_vec(16);
+        let yd = dense_attention(&q, &keys, &values, 1.0);
+        let yf = flash_decode(&q, &keys, &values, None, 1.0);
+        for i in 0..16 {
+            assert!((yd[i] - yf[i]).abs() < 1e-4, "i={i}: {} vs {}", yd[i], yf[i]);
+        }
+    }
+
+    #[test]
+    fn matches_sparse_on_subset() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(500, 8, &mut rng);
+        let values = Matrix::gaussian(500, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let sel: Vec<usize> = (0..500).step_by(3).collect();
+        let ys = sparse_attention(&q, &keys, &values, &sel, 1.0);
+        let yf = flash_decode(&q, &keys, &values, Some(&sel), 1.0);
+        for i in 0..8 {
+            assert!((ys[i] - yf[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn handles_extreme_logits_stably() {
+        // Tile 1 contains a huge logit; tile 2 must rescale correctly.
+        let mut keys = Matrix::zeros(256, 2);
+        let mut values = Matrix::zeros(256, 1);
+        keys.set(0, 0, 80.0); // logit 80 with q=[1,0]
+        values.set(0, 0, 7.0);
+        keys.set(200, 0, 80.0); // same logit, second tile
+        values.set(200, 0, 9.0);
+        let y = flash_decode(&[1.0, 0.0], &keys, &values, None, 1.0);
+        assert!((y[0] - 8.0).abs() < 1e-3, "y={}", y[0]); // mean of 7 and 9
+    }
+
+    #[test]
+    fn empty_selection_returns_zero() {
+        let keys = Matrix::zeros(4, 2);
+        let values = Matrix::zeros(4, 2);
+        let y = flash_decode(&[1.0, 0.0], &keys, &values, Some(&[]), 1.0);
+        assert_eq!(y, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_flash_equals_dense() {
+        check_default("flash-vs-dense", |rng, _| {
+            let d = gen::size(rng, 2, 32);
+            let n = gen::size(rng, 1, 600);
+            let keys = Matrix::gaussian(n, d, rng);
+            let values = Matrix::gaussian(n, d, rng);
+            let q = rng.normal_vec(d);
+            let scale = 1.0 / (d as f32).sqrt();
+            let yd = dense_attention(&q, &keys, &values, scale);
+            let yf = flash_decode(&q, &keys, &values, None, scale);
+            for i in 0..d {
+                prop_assert!((yd[i] - yf[i]).abs() < 1e-3, "n={n} d={d} i={i}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,14 @@
+//! Attention computation: exact SDPA reference, sparse attention over a
+//! selected index set (eq. 2), the angular-kernel surrogate of Section 5,
+//! and a blocked online-softmax decode path (the CPU analog of the
+//! paper's Flash-Decode Triton backend).
+
+pub mod angular;
+pub mod dense;
+pub mod flash;
+pub mod sparse;
+
+pub use angular::{angular_attention, angular_weights};
+pub use dense::{attention_weights, dense_attention};
+pub use flash::flash_decode;
+pub use sparse::{sparse_attention, SelectionPolicy};

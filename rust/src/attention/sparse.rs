@@ -1,0 +1,158 @@
+//! Sparse attention over a selected index set (eq. 2), with the paper's
+//! sink + local-window policy ("we include a small number of sink and
+//! local window tokens (e.g., 128 tokens)", Section 6).
+
+use crate::linalg::{add_scaled, dot, softmax_inplace, Matrix};
+
+/// Token-selection policy wrapper: a budget of k scored tokens plus
+/// always-kept attention sinks (prefix) and a local window (suffix).
+#[derive(Clone, Copy, Debug)]
+pub struct SelectionPolicy {
+    /// Scored-token budget (top-k).
+    pub k: usize,
+    /// First `sink` tokens always attended (attention sinks).
+    pub sink: usize,
+    /// Last `local` tokens always attended (recency window).
+    pub local: usize,
+}
+
+impl SelectionPolicy {
+    pub fn top_k_only(k: usize) -> SelectionPolicy {
+        SelectionPolicy { k, sink: 0, local: 0 }
+    }
+
+    /// The paper's evaluation setting: 128 sink+local tokens total.
+    pub fn paper_default(k: usize) -> SelectionPolicy {
+        SelectionPolicy { k, sink: 64, local: 64 }
+    }
+
+    /// Budget derived from a sparsity factor: keep ceil(n / sparsity)
+    /// scored tokens (e.g. sparsity 10 => 10x fewer tokens).
+    pub fn from_sparsity(n: usize, sparsity: f64, sink: usize, local: usize) -> SelectionPolicy {
+        let k = ((n as f64 / sparsity).ceil() as usize).max(1);
+        SelectionPolicy { k, sink, local }
+    }
+
+    /// Merge the scored top-k indices with sink/local tokens into a
+    /// deduplicated, sorted index set over `n` cached tokens.
+    pub fn merge(&self, top_k: &[usize], n: usize) -> Vec<usize> {
+        let mut keep = vec![false; n];
+        for i in 0..self.sink.min(n) {
+            keep[i] = true;
+        }
+        for i in n.saturating_sub(self.local)..n {
+            keep[i] = true;
+        }
+        for &i in top_k.iter().take(self.k) {
+            if i < n {
+                keep[i] = true;
+            }
+        }
+        (0..n).filter(|&i| keep[i]).collect()
+    }
+}
+
+/// Sparse attention (eq. 2): exact softmax restricted to `selected`.
+pub fn sparse_attention(
+    q: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    selected: &[usize],
+    scale: f32,
+) -> Vec<f32> {
+    assert_eq!(keys.rows, values.rows);
+    let mut logits = vec![0.0f32; selected.len()];
+    for (s, &j) in selected.iter().enumerate() {
+        logits[s] = dot(keys.row(j), q) * scale;
+    }
+    softmax_inplace(&mut logits);
+    let mut out = vec![0.0f32; values.cols];
+    for (s, &j) in selected.iter().enumerate() {
+        if logits[s] != 0.0 {
+            add_scaled(&mut out, values.row(j), logits[s]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::dense_attention;
+    use crate::prop_assert;
+    use crate::testing::check_default;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn full_selection_equals_dense() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(20, 8, &mut rng);
+        let values = Matrix::gaussian(20, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let all: Vec<usize> = (0..20).collect();
+        let ys = sparse_attention(&q, &keys, &values, &all, 1.0);
+        let yd = dense_attention(&q, &keys, &values, 1.0);
+        for i in 0..8 {
+            assert!((ys[i] - yd[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn selecting_dominant_key_approximates_dense() {
+        // With one key hugely dominant, top-1 sparse ≈ dense.
+        let mut rng = Pcg64::seeded(2);
+        let mut keys = Matrix::gaussian(50, 8, &mut rng);
+        let values = Matrix::gaussian(50, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        // make key 7 = 3*q  => dominates the softmax.
+        for c in 0..8 {
+            keys.set(7, c, 3.0 * q[c]);
+        }
+        let yd = dense_attention(&q, &keys, &values, 1.0);
+        let ys = sparse_attention(&q, &keys, &values, &[7], 1.0);
+        let err: f32 = yd.iter().zip(&ys).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err < 0.3, "err={err}");
+    }
+
+    #[test]
+    fn policy_merge_includes_sink_and_local() {
+        let p = SelectionPolicy { k: 2, sink: 2, local: 2 };
+        let sel = p.merge(&[5, 6, 9], 10);
+        // sinks 0,1; local 8,9; top-k 5,6 (budget 2 of the 3 given).
+        assert_eq!(sel, vec![0, 1, 5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn policy_merge_dedups_overlap() {
+        let p = SelectionPolicy { k: 3, sink: 1, local: 1 };
+        let sel = p.merge(&[0, 4, 3], 5);
+        assert_eq!(sel, vec![0, 3, 4]);
+    }
+
+    #[test]
+    fn sparsity_budget() {
+        let p = SelectionPolicy::from_sparsity(32_000, 10.0, 64, 64);
+        assert_eq!(p.k, 3200);
+        let p50 = SelectionPolicy::from_sparsity(32_000, 50.0, 0, 0);
+        assert_eq!(p50.k, 640);
+        // Tiny n never rounds to zero.
+        assert_eq!(SelectionPolicy::from_sparsity(3, 50.0, 0, 0).k, 1);
+    }
+
+    #[test]
+    fn prop_merge_sorted_unique_bounded() {
+        check_default("merge-invariants", |rng, _| {
+            let n = 1 + rng.below_usize(200);
+            let p = SelectionPolicy {
+                k: rng.below_usize(20),
+                sink: rng.below_usize(10),
+                local: rng.below_usize(10),
+            };
+            let picks: Vec<usize> = (0..30).map(|_| rng.below_usize(n * 2)).collect();
+            let sel = p.merge(&picks, n);
+            prop_assert!(sel.windows(2).all(|w| w[0] < w[1]), "not sorted-unique");
+            prop_assert!(sel.iter().all(|&i| i < n), "out of range");
+            Ok(())
+        });
+    }
+}

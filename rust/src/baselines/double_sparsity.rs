@@ -1,0 +1,128 @@
+//! Double Sparsity (Yang et al., 2024): token + channel sparsity.
+//!
+//! Offline calibration picks the `r` highest-magnitude key channels
+//! (channel norms over a calibration pass — here: over the prefill keys,
+//! matching the paper's offline AWQ-style calibration). Decode-time
+//! token selection scores keys using only those channels ("label cache"),
+//! cutting the feature dimension before the top-k.
+
+use super::TokenSelector;
+use crate::linalg::{Matrix, TopK};
+
+pub struct DoubleSparsitySelector {
+    /// Number of important channels kept (paper: d/8 … d/4).
+    pub r_channels: usize,
+    channels: Vec<usize>,
+    /// Label cache: n x r_channels reduced keys.
+    labels: Vec<f32>,
+    n: usize,
+}
+
+impl DoubleSparsitySelector {
+    pub fn new(r_channels: usize) -> DoubleSparsitySelector {
+        DoubleSparsitySelector { r_channels, channels: Vec::new(), labels: Vec::new(), n: 0 }
+    }
+
+    pub fn selected_channels(&self) -> &[usize] {
+        &self.channels
+    }
+}
+
+impl TokenSelector for DoubleSparsitySelector {
+    fn name(&self) -> &'static str {
+        "DS"
+    }
+
+    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
+        self.n = keys.rows;
+        let d = keys.cols;
+        let r = self.r_channels.min(d);
+        // Channel importance = sum of squared activations (calibration).
+        let mut importance = vec![0.0f64; d];
+        for j in 0..keys.rows {
+            let row = keys.row(j);
+            for c in 0..d {
+                importance[c] += (row[c] as f64).powi(2);
+            }
+        }
+        let mut idx: Vec<usize> = (0..d).collect();
+        idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+        idx.truncate(r);
+        idx.sort_unstable();
+        self.channels = idx;
+        // Build label cache.
+        self.labels = vec![0.0f32; self.n * r];
+        for j in 0..self.n {
+            let row = keys.row(j);
+            for (i, &c) in self.channels.iter().enumerate() {
+                self.labels[j * r + i] = row[c];
+            }
+        }
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let r = self.channels.len();
+        let q_red: Vec<f32> = self.channels.iter().map(|&c| q[c]).collect();
+        let mut tk = TopK::new(k.min(self.n).max(1));
+        for j in 0..self.n {
+            let score = crate::linalg::dot(&self.labels[j * r..(j + 1) * r], &q_red);
+            tk.push(score, j);
+        }
+        tk.into_indices()
+    }
+
+    fn bits_per_token(&self) -> usize {
+        // Label cache stores r_channels bf16 values per token (the paper
+        // quantizes labels to 4-8 bits; we count 16 to be conservative).
+        self.channels.len() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn picks_high_energy_channels() {
+        let mut rng = Pcg64::seeded(1);
+        let mut keys = Matrix::gaussian(50, 16, &mut rng);
+        // Blow up channels 3 and 11.
+        for j in 0..50 {
+            keys.set(j, 3, keys.get(j, 3) * 10.0);
+            keys.set(j, 11, keys.get(j, 11) * 10.0);
+        }
+        let vals = Matrix::gaussian(50, 16, &mut rng);
+        let mut ds = DoubleSparsitySelector::new(2);
+        ds.build(&keys, &vals);
+        assert_eq!(ds.selected_channels(), &[3, 11]);
+    }
+
+    #[test]
+    fn reduced_scores_retrieve_planted_key() {
+        let mut rng = Pcg64::seeded(2);
+        let mut keys = Matrix::gaussian(128, 32, &mut rng);
+        let vals = Matrix::gaussian(128, 32, &mut rng);
+        let q = rng.normal_vec(32);
+        for c in 0..32 {
+            keys.set(60, c, 5.0 * q[c]);
+        }
+        let mut ds = DoubleSparsitySelector::new(8);
+        ds.build(&keys, &vals);
+        let sel = ds.select(&q, 16);
+        assert!(sel.contains(&60), "{sel:?}");
+    }
+
+    #[test]
+    fn full_channels_equals_oracle_order() {
+        let mut rng = Pcg64::seeded(3);
+        let keys = Matrix::gaussian(40, 8, &mut rng);
+        let vals = Matrix::gaussian(40, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let mut ds = DoubleSparsitySelector::new(8); // r = d: no reduction
+        ds.build(&keys, &vals);
+        let mut oracle = super::super::oracle::OracleSelector::new(false);
+        oracle.build(&keys, &vals);
+        assert_eq!(ds.select(&q, 5), oracle.select(&q, 5));
+    }
+}

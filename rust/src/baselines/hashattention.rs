@@ -1,0 +1,117 @@
+//! HashAttention (Desai et al., ICML 2025): Hamming-space signatures.
+//!
+//! The original learns query/key mapping networks into Hamming space;
+//! lacking the trained mappings offline, we use the data-agnostic analog
+//! the paper itself ablates against: a random-rotation sign signature of
+//! `bits` bits per token (the paper's Table 1 lists HashAttention at 128
+//! bits/token). Scoring = negative Hamming distance between query and
+//! key signatures, evaluated with popcount over packed u64 words.
+
+use super::TokenSelector;
+use crate::linalg::{Matrix, TopK};
+use crate::util::rng::Pcg64;
+
+pub struct HashAttentionSelector {
+    pub bits: usize,
+    seed: u64,
+    planes: Option<Matrix>, // bits x dim random rotation
+    sigs: Vec<u64>,         // n x words packed signatures
+    words: usize,
+    n: usize,
+}
+
+impl HashAttentionSelector {
+    /// Paper's setting: 128-bit signatures.
+    pub fn new(bits: usize, seed: u64) -> HashAttentionSelector {
+        HashAttentionSelector { bits, seed, planes: None, sigs: Vec::new(), words: bits.div_ceil(64), n: 0 }
+    }
+
+    fn signature(&self, x: &[f32]) -> Vec<u64> {
+        let planes = self.planes.as_ref().expect("build() not called");
+        let proj = planes.matvec(x);
+        let mut sig = vec![0u64; self.words];
+        for (i, &v) in proj.iter().enumerate() {
+            if v >= 0.0 {
+                sig[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        sig
+    }
+}
+
+impl TokenSelector for HashAttentionSelector {
+    fn name(&self) -> &'static str {
+        "HashAttn"
+    }
+
+    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
+        self.n = keys.rows;
+        let mut rng = Pcg64::new(self.seed, 23);
+        self.planes = Some(Matrix::gaussian(self.bits, keys.cols, &mut rng));
+        self.sigs = vec![0u64; self.n * self.words];
+        for j in 0..self.n {
+            let sig = self.signature(keys.row(j));
+            self.sigs[j * self.words..(j + 1) * self.words].copy_from_slice(&sig);
+        }
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let qsig = self.signature(q);
+        let mut tk = TopK::new(k.min(self.n).max(1));
+        for j in 0..self.n {
+            let mut ham = 0u32;
+            for w in 0..self.words {
+                ham += (self.sigs[j * self.words + w] ^ qsig[w]).count_ones();
+            }
+            tk.push(-(ham as f32), j);
+        }
+        tk.into_indices()
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen;
+
+    #[test]
+    fn identical_key_has_zero_distance_rank_first() {
+        let mut rng = Pcg64::seeded(1);
+        let dim = 32;
+        let q = rng.normal_vec(dim);
+        let mut keys = Matrix::gaussian(100, dim, &mut rng);
+        keys.row_mut(5).copy_from_slice(&q);
+        let vals = Matrix::gaussian(100, dim, &mut rng);
+        let mut h = HashAttentionSelector::new(128, 9);
+        h.build(&keys, &vals);
+        let sel = h.select(&q, 1);
+        assert_eq!(sel, vec![5]);
+    }
+
+    #[test]
+    fn hamming_distance_monotone_in_cosine() {
+        let mut rng = Pcg64::seeded(2);
+        let dim = 64;
+        let q = gen::unit_vec(&mut rng, dim);
+        let mut keys = Matrix::zeros(2, dim);
+        keys.row_mut(0).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.9));
+        keys.row_mut(1).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.0));
+        let vals = Matrix::from_vec(2, 1, vec![1.0, 1.0]);
+        let mut h = HashAttentionSelector::new(256, 3);
+        h.build(&keys, &vals);
+        assert_eq!(h.select(&q, 1), vec![0]);
+    }
+
+    #[test]
+    fn memory_is_bits_per_token() {
+        let h = HashAttentionSelector::new(128, 0);
+        assert_eq!(h.bits_per_token(), 128);
+        assert_eq!(h.words, 2);
+        let h = HashAttentionSelector::new(100, 0);
+        assert_eq!(h.words, 2); // rounds up
+    }
+}

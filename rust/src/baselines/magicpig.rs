@@ -1,0 +1,166 @@
+//! MagicPIG (Chen et al., ICLR 2025): LSH *sampling* for attention.
+//!
+//! Unlike SOCKET's deterministic retrieval, MagicPig samples candidate
+//! keys — a key is a candidate if it collides with the query in at least
+//! `min_matches` of the L tables — and estimates attention with an
+//! importance-sampling correction `exp(q·k_j) / p_j` where `p_j` is the
+//! key's collision probability. The candidate set's size is *not*
+//! query-controllable, which is exactly why the paper finds it brittle
+//! under a fully-sparse evaluation (Table 8): when the question tokens
+//! are also processed sparsely, low-collision regimes leave the sampler
+//! with few or no candidates.
+//!
+//! `dense_layers` reproduces the original's (0,16)-dense fallback.
+
+use super::TokenSelector;
+use crate::linalg::{Matrix, TopK};
+use crate::lsh::{KeyHashes, LshParams, SimHash};
+
+pub struct MagicPigSelector {
+    pub params: LshParams,
+    /// Minimum table collisions to become a candidate (paper: 2).
+    pub min_matches: u32,
+    hash: Option<SimHash>,
+    hashes: Option<KeyHashes>,
+    keys: Option<Matrix>,
+    seed: u64,
+    dim: usize,
+}
+
+impl MagicPigSelector {
+    /// Paper setting: K=10 planes x L=150 tables (≈1024+ bits/token is
+    /// the Table-1 accounting), min 2 collisions.
+    pub fn new(params: LshParams, seed: u64) -> MagicPigSelector {
+        MagicPigSelector { params, min_matches: 2, hash: None, hashes: None, keys: None, seed, dim: 0 }
+    }
+
+    /// Collision-count distribution of all keys for q (diagnostics).
+    pub fn collision_counts(&self, q: &[f32]) -> Vec<u32> {
+        let hash = self.hash.as_ref().expect("build() not called");
+        let hashes = self.hashes.as_ref().unwrap();
+        let qb = hash.hash_one(q);
+        (0..hashes.n)
+            .map(|j| {
+                let row = hashes.key_row(j);
+                (0..hashes.l).filter(|&t| row[t] == qb[t]).count() as u32
+            })
+            .collect()
+    }
+}
+
+impl TokenSelector for MagicPigSelector {
+    fn name(&self) -> &'static str {
+        "MagicPig"
+    }
+
+    fn build(&mut self, keys: &Matrix, values: &Matrix) {
+        self.dim = keys.cols;
+        let hash = SimHash::new(self.params, keys.cols, self.seed);
+        self.hashes = Some(hash.hash_keys(keys, values));
+        self.hash = Some(hash);
+        self.keys = Some(keys.clone());
+    }
+
+    /// "Selection" = the sampled candidate set, truncated to the budget
+    /// by importance weight. If no candidates collide (the failure mode
+    /// the paper demonstrates), only the most-recent token is returned —
+    /// mirroring the original implementation's sink/recent fallback.
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let counts = self.collision_counts(q);
+        let hashes = self.hashes.as_ref().unwrap();
+        let keys = self.keys.as_ref().unwrap();
+        let n = hashes.n;
+        let mut candidates: Vec<usize> =
+            (0..n).filter(|&j| counts[j] >= self.min_matches).collect();
+        if candidates.is_empty() {
+            return vec![n - 1];
+        }
+        if candidates.len() <= k {
+            return candidates;
+        }
+        // Importance weights: exp(q·k_j)/p_j with p_j ∝ collision rate.
+        let mut tk = TopK::new(k);
+        let l = hashes.l as f32;
+        for &j in &candidates {
+            let p_j = (counts[j] as f32 / l).max(1e-6);
+            let logit = crate::linalg::dot(keys.row(j), q);
+            // Work in log space: log w = logit - log p_j.
+            tk.push(logit - p_j.ln(), j);
+        }
+        candidates = tk.into_indices();
+        candidates
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.params.memory().bits_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::gen;
+    use crate::util::rng::Pcg64;
+
+    fn params() -> LshParams {
+        LshParams { p: 8, l: 75, tau: 0.5 }
+    }
+
+    #[test]
+    fn near_duplicate_is_candidate() {
+        let mut rng = Pcg64::seeded(1);
+        let dim = 48;
+        let q = gen::unit_vec(&mut rng, dim);
+        let mut keys = Matrix::gaussian(100, dim, &mut rng);
+        let near = gen::key_with_cosine(&mut rng, &q, 0.97);
+        keys.row_mut(10).copy_from_slice(&near);
+        let vals = Matrix::gaussian(100, dim, &mut rng);
+        let mut mp = MagicPigSelector::new(params(), 3);
+        mp.build(&keys, &vals);
+        let sel = mp.select(&q, 20);
+        assert!(sel.contains(&10), "{sel:?}");
+    }
+
+    #[test]
+    fn orthogonal_context_collapses_to_fallback() {
+        // The brittleness MagicPig shows in Table 8: when nothing
+        // collides ≥ min_matches, selection degenerates.
+        let mut rng = Pcg64::seeded(2);
+        let dim = 64;
+        let q = gen::unit_vec(&mut rng, dim);
+        // Keys all nearly opposite to q => collision count ~0 at P=8.
+        let mut keys = Matrix::zeros(20, dim);
+        for j in 0..20 {
+            let k = gen::key_with_cosine(&mut rng, &q, -0.95);
+            keys.row_mut(j).copy_from_slice(&k);
+        }
+        let vals = Matrix::gaussian(20, dim, &mut rng);
+        let mut mp = MagicPigSelector::new(LshParams { p: 10, l: 20, tau: 0.5 }, 4);
+        mp.build(&keys, &vals);
+        let sel = mp.select(&q, 10);
+        assert_eq!(sel, vec![19], "expected fallback to last token: {sel:?}");
+    }
+
+    #[test]
+    fn candidate_count_not_budget_controlled() {
+        // Documents the sampling (vs retrieval) semantics: with highly
+        // similar context, candidates overflow the budget and must be
+        // truncated by importance.
+        let mut rng = Pcg64::seeded(3);
+        let dim = 32;
+        let q = gen::unit_vec(&mut rng, dim);
+        let mut keys = Matrix::zeros(50, dim);
+        for j in 0..50 {
+            let k = gen::key_with_cosine(&mut rng, &q, 0.9);
+            keys.row_mut(j).copy_from_slice(&k);
+        }
+        let vals = Matrix::gaussian(50, dim, &mut rng);
+        let mut mp = MagicPigSelector::new(params(), 5);
+        mp.build(&keys, &vals);
+        let counts = mp.collision_counts(&q);
+        let n_cand = counts.iter().filter(|&&c| c >= 2).count();
+        assert!(n_cand > 10, "n_cand={n_cand}");
+        let sel = mp.select(&q, 10);
+        assert_eq!(sel.len(), 10);
+    }
+}

@@ -1,0 +1,141 @@
+//! Sparse-attention baselines the paper compares against (Section 6).
+//!
+//! Each baseline implements [`TokenSelector`]: given a query and the
+//! cached K/V, return the indices to attend over under a top-k budget.
+//! These are faithful reimplementations of the published algorithms
+//! (the authors' CUDA/Python code is unavailable offline; see DESIGN.md
+//! for the substitution notes):
+//!
+//! * [`oracle`] — exact top-k by `q·k_j` (+ value-norm variant) — the
+//!   upper bound ("oracle-top-k" in Table 10).
+//! * [`quest`] — page-level min/max bound scoring (Quest, ICML'24).
+//! * [`pqcache`] — product-quantization ADC scoring (PQCache, SIGMOD'25).
+//! * [`double_sparsity`] — offline channel selection + approximate
+//!   scores over important channels (Double Sparsity, 2024).
+//! * [`hashattention`] — Hamming-space signature scoring standing in for
+//!   the learned mapping of HashAttention (ICML'25).
+//! * [`magicpig`] — LSH importance sampling with optional dense-layer
+//!   fallback (MagicPIG, ICLR'25).
+//!
+//! SOCKET and hard LSH themselves also get [`TokenSelector`] adapters
+//! here ([`SocketSelector`], [`HardLshSelector`]) so every experiment
+//! driver can sweep methods uniformly.
+
+pub mod double_sparsity;
+pub mod hashattention;
+pub mod magicpig;
+pub mod oracle;
+pub mod pqcache;
+pub mod quest;
+
+use crate::linalg::Matrix;
+use crate::lsh::{HardScorer, KeyHashes, LshParams, SoftScorer};
+
+/// A sparse-attention token-selection method.
+pub trait TokenSelector {
+    /// Human-readable method name (bench tables).
+    fn name(&self) -> &'static str;
+
+    /// Build any per-context index state for the given K/V cache
+    /// (hashing, clustering, page metadata...). Called once at prefill.
+    fn build(&mut self, keys: &Matrix, values: &Matrix);
+
+    /// Select up to `k` token indices for query `q`.
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize>;
+
+    /// Additional memory used by the index, bits per token (the paper's
+    /// "Mem" column). Reported by benches.
+    fn bits_per_token(&self) -> usize;
+}
+
+/// SOCKET as a [`TokenSelector`].
+pub struct SocketSelector {
+    scorer: SoftScorer,
+    hashes: Option<KeyHashes>,
+}
+
+impl SocketSelector {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> SocketSelector {
+        SocketSelector { scorer: SoftScorer::new(params, dim, seed), hashes: None }
+    }
+}
+
+impl TokenSelector for SocketSelector {
+    fn name(&self) -> &'static str {
+        "SOCKET"
+    }
+
+    fn build(&mut self, keys: &Matrix, values: &Matrix) {
+        self.hashes = Some(self.scorer.hash_keys(keys, values));
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let hashes = self.hashes.as_ref().expect("build() not called");
+        self.scorer.select_top_k(q, hashes, k)
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.scorer.params().memory().bits_per_token
+    }
+}
+
+/// Traditional hard LSH as a [`TokenSelector`].
+pub struct HardLshSelector {
+    scorer: HardScorer,
+    hashes: Option<KeyHashes>,
+}
+
+impl HardLshSelector {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> HardLshSelector {
+        HardLshSelector { scorer: HardScorer::new(params, dim, seed), hashes: None }
+    }
+}
+
+impl TokenSelector for HardLshSelector {
+    fn name(&self) -> &'static str {
+        "LSH"
+    }
+
+    fn build(&mut self, keys: &Matrix, values: &Matrix) {
+        self.hashes = Some(self.scorer.hash_keys(keys, values));
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let hashes = self.hashes.as_ref().expect("build() not called");
+        self.scorer.select_top_k(q, hashes, k)
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.scorer.params().memory().bits_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn adapters_round_trip() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(64, 16, &mut rng);
+        let vals = Matrix::gaussian(64, 16, &mut rng);
+        let q = rng.normal_vec(16);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, 16, 7);
+        let mut hard = HardLshSelector::new(params, 16, 7);
+        soft.build(&keys, &vals);
+        hard.build(&keys, &vals);
+        assert_eq!(soft.select(&q, 8).len(), 8);
+        assert_eq!(hard.select(&q, 8).len(), 8);
+        assert_eq!(soft.bits_per_token(), 60);
+        assert_eq!(hard.bits_per_token(), 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "build() not called")]
+    fn select_before_build_panics() {
+        let s = SocketSelector::new(LshParams::paper_default(), 8, 1);
+        s.select(&[0.0; 8], 4);
+    }
+}

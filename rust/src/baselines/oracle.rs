@@ -1,0 +1,123 @@
+//! Oracle top-k — exact `q·k_j` (optionally value-norm weighted)
+//! selection. The retrieval upper bound ("oracle-top-k" in Table 10);
+//! also serves as the ground truth for Fig. 2's ranking metrics.
+
+use super::TokenSelector;
+use crate::linalg::{dot, Matrix, TopK};
+
+/// Exact top-k selector. `value_aware = true` ranks by `(q·k_j)·‖v_j‖₂`,
+/// the hindsight-optimal criterion of [13] cited in the introduction.
+pub struct OracleSelector {
+    pub value_aware: bool,
+    keys: Option<Matrix>,
+    value_norms: Vec<f32>,
+}
+
+impl OracleSelector {
+    pub fn new(value_aware: bool) -> OracleSelector {
+        OracleSelector { value_aware, keys: None, value_norms: Vec::new() }
+    }
+
+    /// Ranked scores for every key (used as Fig. 2 ground truth).
+    pub fn scores(&self, q: &[f32]) -> Vec<f32> {
+        let keys = self.keys.as_ref().expect("build() not called");
+        (0..keys.rows)
+            .map(|j| {
+                let s = dot(keys.row(j), q);
+                if self.value_aware {
+                    s * self.value_norms[j]
+                } else {
+                    s
+                }
+            })
+            .collect()
+    }
+
+    /// Full descending ranking of all keys.
+    pub fn ranking(&self, q: &[f32]) -> Vec<usize> {
+        let scores = self.scores(q);
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        idx
+    }
+}
+
+impl TokenSelector for OracleSelector {
+    fn name(&self) -> &'static str {
+        if self.value_aware {
+            "Oracle-VA"
+        } else {
+            "Oracle"
+        }
+    }
+
+    fn build(&mut self, keys: &Matrix, values: &Matrix) {
+        self.value_norms = values.row_norms();
+        self.keys = Some(keys.clone());
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        let scores = self.scores(q);
+        let mut tk = TopK::new(k.min(scores.len()).max(1));
+        for (j, &s) in scores.iter().enumerate() {
+            tk.push(s, j);
+        }
+        tk.into_indices()
+    }
+
+    fn bits_per_token(&self) -> usize {
+        // Reads full keys: d * 16 bits (bf16 in the paper's accounting).
+        self.keys.as_ref().map(|k| k.cols * 16).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn oracle_finds_planted_key() {
+        let mut rng = Pcg64::seeded(1);
+        let mut keys = Matrix::gaussian(100, 16, &mut rng);
+        let vals = Matrix::gaussian(100, 16, &mut rng);
+        let q = rng.normal_vec(16);
+        for c in 0..16 {
+            keys.set(42, c, 5.0 * q[c]); // plant a dominant key
+        }
+        let mut o = OracleSelector::new(false);
+        o.build(&keys, &vals);
+        let sel = o.select(&q, 5);
+        assert_eq!(sel[0], 42);
+    }
+
+    #[test]
+    fn value_aware_reranks() {
+        let mut keys = Matrix::zeros(2, 2);
+        keys.set(0, 0, 1.0);
+        keys.set(1, 0, 0.9); // slightly lower dot product
+        let mut vals = Matrix::zeros(2, 2);
+        vals.set(0, 0, 1.0);
+        vals.set(1, 0, 10.0); // much larger value norm
+        let q = [1.0, 0.0];
+        let mut plain = OracleSelector::new(false);
+        plain.build(&keys, &vals);
+        assert_eq!(plain.select(&q, 1), vec![0]);
+        let mut va = OracleSelector::new(true);
+        va.build(&keys, &vals);
+        assert_eq!(va.select(&q, 1), vec![1]);
+    }
+
+    #[test]
+    fn ranking_is_total_order() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(30, 8, &mut rng);
+        let vals = Matrix::gaussian(30, 8, &mut rng);
+        let mut o = OracleSelector::new(true);
+        o.build(&keys, &vals);
+        let r = o.ranking(&rng.normal_vec(8));
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..30).collect::<Vec<_>>());
+    }
+}

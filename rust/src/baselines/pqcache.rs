@@ -1,0 +1,250 @@
+//! PQCache (Zhang et al., SIGMOD 2025): product-quantization scoring.
+//!
+//! Keys are split into `m` sub-vectors; per sub-space, k-means learns a
+//! codebook of `2^nbits` centroids over this context's keys; each key
+//! stores one code per sub-space. At decode time the query builds an ADC
+//! (asymmetric distance computation) table of `q_sub·centroid` inner
+//! products and scores every key by summing table lookups — the standard
+//! IVF-free PQ retrieval PQCache uses, including its data-dependent
+//! (clustering) TTFT cost which Fig. 3a measures.
+
+use super::TokenSelector;
+use crate::linalg::{Matrix, TopK};
+use crate::util::rng::Pcg64;
+
+pub struct PqCacheSelector {
+    /// Sub-quantizers (sub-vector count).
+    pub m: usize,
+    /// Bits per code (centroids per sub-space = 2^nbits).
+    pub nbits: usize,
+    /// k-means iterations (TTFT-relevant).
+    pub kmeans_iters: usize,
+    seed: u64,
+    dim: usize,
+    sub_dim: usize,
+    /// Per sub-space: centroids (2^nbits x sub_dim), row-major.
+    codebooks: Vec<Matrix>,
+    /// Per key: m codes.
+    codes: Vec<u8>,
+    n: usize,
+}
+
+impl PqCacheSelector {
+    /// Paper-ish setting: m=16 sub-vectors, 6-bit codes.
+    pub fn new(m: usize, nbits: usize, seed: u64) -> PqCacheSelector {
+        assert!(nbits <= 8, "codes stored as u8");
+        PqCacheSelector {
+            m,
+            nbits,
+            kmeans_iters: 8,
+            seed,
+            dim: 0,
+            sub_dim: 0,
+            codebooks: Vec::new(),
+            codes: Vec::new(),
+            n: 0,
+        }
+    }
+
+    fn ncentroids(&self) -> usize {
+        1usize << self.nbits
+    }
+
+    /// Lloyd's k-means over rows of `data` (n x sub_dim).
+    fn kmeans(&self, data: &[f32], n: usize, rng: &mut Pcg64) -> Matrix {
+        let d = self.sub_dim;
+        let kc = self.ncentroids().min(n.max(1));
+        // Init: random distinct rows.
+        let picks = rng.sample_indices(n, kc);
+        let mut centroids = Matrix::zeros(self.ncentroids(), d);
+        for (c, &row) in picks.iter().enumerate() {
+            centroids.row_mut(c).copy_from_slice(&data[row * d..(row + 1) * d]);
+        }
+        let mut assign = vec![0usize; n];
+        for _ in 0..self.kmeans_iters {
+            // Assign.
+            for j in 0..n {
+                let x = &data[j * d..(j + 1) * d];
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..kc {
+                    let cent = centroids.row(c);
+                    let mut dist = 0.0f32;
+                    for i in 0..d {
+                        let t = x[i] - cent[i];
+                        dist += t * t;
+                    }
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                assign[j] = best;
+            }
+            // Update.
+            let mut sums = vec![0.0f32; kc * d];
+            let mut counts = vec![0usize; kc];
+            for j in 0..n {
+                let c = assign[j];
+                counts[c] += 1;
+                for i in 0..d {
+                    sums[c * d + i] += data[j * d + i];
+                }
+            }
+            for c in 0..kc {
+                if counts[c] > 0 {
+                    for i in 0..d {
+                        centroids.set(c, i, sums[c * d + i] / counts[c] as f32);
+                    }
+                }
+            }
+        }
+        centroids
+    }
+}
+
+impl TokenSelector for PqCacheSelector {
+    fn name(&self) -> &'static str {
+        "PQcache"
+    }
+
+    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
+        self.n = keys.rows;
+        self.dim = keys.cols;
+        assert!(self.dim % self.m == 0, "dim {} not divisible by m {}", self.dim, self.m);
+        self.sub_dim = self.dim / self.m;
+        self.codebooks.clear();
+        self.codes = vec![0u8; self.n * self.m];
+        let mut rng = Pcg64::new(self.seed, 17);
+        for s in 0..self.m {
+            // Slice sub-vectors.
+            let mut sub = vec![0.0f32; self.n * self.sub_dim];
+            for j in 0..self.n {
+                let row = keys.row(j);
+                sub[j * self.sub_dim..(j + 1) * self.sub_dim]
+                    .copy_from_slice(&row[s * self.sub_dim..(s + 1) * self.sub_dim]);
+            }
+            let cb = self.kmeans(&sub, self.n, &mut rng);
+            // Encode.
+            for j in 0..self.n {
+                let x = &sub[j * self.sub_dim..(j + 1) * self.sub_dim];
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..self.ncentroids() {
+                    let cent = cb.row(c);
+                    let mut dist = 0.0f32;
+                    for i in 0..self.sub_dim {
+                        let t = x[i] - cent[i];
+                        dist += t * t;
+                    }
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                self.codes[j * self.m + s] = best as u8;
+            }
+            self.codebooks.push(cb);
+        }
+    }
+
+    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        // ADC tables: m x ncentroids inner products.
+        let nc = self.ncentroids();
+        let mut adc = vec![0.0f32; self.m * nc];
+        for s in 0..self.m {
+            let qs = &q[s * self.sub_dim..(s + 1) * self.sub_dim];
+            let cb = &self.codebooks[s];
+            for c in 0..nc {
+                adc[s * nc + c] = crate::linalg::dot(qs, cb.row(c));
+            }
+        }
+        // Score all keys by table lookups.
+        let mut tk = TopK::new(k.min(self.n).max(1));
+        for j in 0..self.n {
+            let mut score = 0.0f32;
+            for s in 0..self.m {
+                score += adc[s * nc + self.codes[j * self.m + s] as usize];
+            }
+            tk.push(score, j);
+        }
+        tk.into_indices()
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.m * self.nbits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pq_retrieves_planted_key() {
+        let mut rng = Pcg64::seeded(1);
+        let mut keys = Matrix::gaussian(256, 32, &mut rng);
+        let vals = Matrix::gaussian(256, 32, &mut rng);
+        let q = rng.normal_vec(32);
+        for c in 0..32 {
+            keys.set(100, c, 4.0 * q[c]);
+        }
+        let mut sel = PqCacheSelector::new(8, 4, 7);
+        sel.build(&keys, &vals);
+        let chosen = sel.select(&q, 16);
+        assert!(chosen.contains(&100), "planted key not retrieved: {chosen:?}");
+    }
+
+    #[test]
+    fn memory_matches_paper_scale() {
+        // Paper Table 1 lists PQcache at 256 bits/token: m=16, 16 nbits
+        // total split e.g. (16,16) -> here m*nbits.
+        let sel = PqCacheSelector::new(16, 8, 0);
+        assert_eq!(sel.bits_per_token(), 128);
+        let sel = PqCacheSelector::new(32, 8, 0);
+        assert_eq!(sel.bits_per_token(), 256);
+    }
+
+    #[test]
+    fn adc_score_correlates_with_dot() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(200, 16, &mut rng);
+        let vals = Matrix::gaussian(200, 16, &mut rng);
+        let mut sel = PqCacheSelector::new(4, 5, 3);
+        sel.build(&keys, &vals);
+        let q = rng.normal_vec(16);
+        // Correlate true dot with PQ score over all keys.
+        let nc = sel.ncentroids();
+        let mut adc = vec![0.0f32; sel.m * nc];
+        for s in 0..sel.m {
+            let qs = &q[s * sel.sub_dim..(s + 1) * sel.sub_dim];
+            for c in 0..nc {
+                adc[s * nc + c] = crate::linalg::dot(qs, sel.codebooks[s].row(c));
+            }
+        }
+        let mut truth = Vec::new();
+        let mut approx = Vec::new();
+        for j in 0..200 {
+            truth.push(crate::linalg::dot(keys.row(j), &q) as f64);
+            let mut sc = 0.0f32;
+            for s in 0..sel.m {
+                sc += adc[s * nc + sel.codes[j * sel.m + s] as usize];
+            }
+            approx.push(sc as f64);
+        }
+        let corr = crate::util::stats::pearson(&truth, &approx);
+        assert!(corr > 0.7, "corr={corr}");
+    }
+
+    #[test]
+    fn handles_tiny_contexts() {
+        // Fewer keys than centroids must not panic.
+        let mut rng = Pcg64::seeded(3);
+        let keys = Matrix::gaussian(5, 8, &mut rng);
+        let vals = Matrix::gaussian(5, 8, &mut rng);
+        let mut sel = PqCacheSelector::new(2, 6, 1);
+        sel.build(&keys, &vals);
+        let chosen = sel.select(&rng.normal_vec(8), 3);
+        assert_eq!(chosen.len(), 3);
+    }
+}

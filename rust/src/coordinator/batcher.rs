@@ -1,0 +1,176 @@
+//! Continuous batcher: assembles each scheduler iteration's work — which
+//! waiting requests to prefill (token-budgeted) and which running
+//! sequences to step (batch-size-capped), decode-priority so tokens keep
+//! streaming while prefills are amortized (the Orca/vLLM policy).
+
+use std::collections::VecDeque;
+
+/// Batch assembly policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max sequences stepped per iteration.
+    pub max_decode_batch: usize,
+    /// Max prefill tokens admitted per iteration.
+    pub prefill_token_budget: usize,
+    /// Max new sequences admitted per iteration.
+    pub max_prefills: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_decode_batch: 16, prefill_token_budget: 8192, max_prefills: 2 }
+    }
+}
+
+/// One iteration's work.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Batch {
+    /// (seq_id, context_len) to prefill.
+    pub prefills: Vec<(u64, usize)>,
+    /// Sequences to run one decode step.
+    pub decodes: Vec<u64>,
+}
+
+impl Batch {
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty() && self.decodes.is_empty()
+    }
+}
+
+/// Queue state + assembly. The batcher owns the waiting queue and the
+/// running set; the scheduler feeds completions back.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    pub policy: BatchPolicy,
+    waiting: VecDeque<(u64, usize)>,
+    running: VecDeque<u64>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, waiting: VecDeque::new(), running: VecDeque::new() }
+    }
+
+    pub fn enqueue(&mut self, seq_id: u64, context_len: usize) {
+        self.waiting.push_back((seq_id, context_len));
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Mark a prefilled sequence as running.
+    pub fn started(&mut self, seq_id: u64) {
+        self.running.push_back(seq_id);
+    }
+
+    /// Remove a finished sequence.
+    pub fn finished(&mut self, seq_id: u64) {
+        self.running.retain(|&s| s != seq_id);
+    }
+
+    /// Requeue a prefill that failed admission (backpressure) — goes to
+    /// the *front* to preserve FIFO fairness.
+    pub fn requeue(&mut self, seq_id: u64, context_len: usize) {
+        self.waiting.push_front((seq_id, context_len));
+    }
+
+    /// Assemble the next iteration's batch. Decode-priority: running
+    /// sequences always step (round-robin rotation for fairness across
+    /// iterations); prefills fill the remaining admission budget.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut batch = Batch::default();
+        // Decodes: up to max_decode_batch, rotating so all sequences
+        // progress even when running > batch size.
+        let n_dec = self.running.len().min(self.policy.max_decode_batch);
+        for _ in 0..n_dec {
+            let s = self.running.pop_front().unwrap();
+            batch.decodes.push(s);
+            self.running.push_back(s);
+        }
+        // Prefills under token budget.
+        let mut budget = self.policy.prefill_token_budget;
+        while batch.prefills.len() < self.policy.max_prefills {
+            match self.waiting.front() {
+                Some(&(_, ctx)) if ctx <= budget => {
+                    let (id, ctx) = self.waiting.pop_front().unwrap();
+                    budget -= ctx;
+                    batch.prefills.push((id, ctx));
+                }
+                _ => break,
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy { max_decode_batch: 2, prefill_token_budget: 1000, max_prefills: 2 }
+    }
+
+    #[test]
+    fn decode_priority_and_rotation() {
+        let mut b = Batcher::new(policy());
+        for s in 0..3u64 {
+            b.started(s);
+        }
+        let b1 = b.next_batch();
+        assert_eq!(b1.decodes, vec![0, 1]);
+        let b2 = b.next_batch();
+        assert_eq!(b2.decodes, vec![2, 0], "round-robin rotation");
+    }
+
+    #[test]
+    fn prefill_token_budget_enforced() {
+        let mut b = Batcher::new(policy());
+        b.enqueue(1, 600);
+        b.enqueue(2, 600); // would exceed 1000 budget
+        b.enqueue(3, 100);
+        let batch = b.next_batch();
+        assert_eq!(batch.prefills, vec![(1, 600)]); // 2 blocks the queue (FIFO)
+        let batch2 = b.next_batch();
+        assert_eq!(batch2.prefills, vec![(2, 600), (3, 100)]);
+    }
+
+    #[test]
+    fn max_prefills_cap() {
+        let mut b = Batcher::new(policy());
+        for s in 0..5u64 {
+            b.enqueue(s, 10);
+        }
+        let batch = b.next_batch();
+        assert_eq!(batch.prefills.len(), 2);
+        assert_eq!(b.waiting_len(), 3);
+    }
+
+    #[test]
+    fn requeue_preserves_order() {
+        let mut b = Batcher::new(policy());
+        b.enqueue(1, 400);
+        b.enqueue(2, 400);
+        let batch = b.next_batch();
+        assert_eq!(batch.prefills.len(), 2);
+        // Admission of 2 failed (e.g. KV pool full) — requeue.
+        b.requeue(2, 400);
+        let batch2 = b.next_batch();
+        assert_eq!(batch2.prefills, vec![(2, 400)]);
+    }
+
+    #[test]
+    fn finished_removes_from_running() {
+        let mut b = Batcher::new(policy());
+        b.started(1);
+        b.started(2);
+        b.finished(1);
+        assert_eq!(b.running_len(), 1);
+        assert_eq!(b.next_batch().decodes, vec![2]);
+    }
+}

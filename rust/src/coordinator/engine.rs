@@ -1,0 +1,263 @@
+//! The per-sequence decode engine: owns the paged KV cache and the
+//! SOCKET hash side-cars, executes prefill and single-token decode
+//! steps. One engine serves many sequences (state is per-sequence).
+
+use crate::attention::{flash_decode, SelectionPolicy};
+use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
+use crate::lsh::LshParams;
+use crate::model::{ModelConfig, SyntheticModel};
+use std::collections::HashMap;
+
+/// How decode attention selects tokens.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttentionMode {
+    /// Dense attention over the whole cache (FlashAttention baseline).
+    Dense,
+    /// SOCKET sparse attention at the given sparsity factor.
+    Socket { sparsity: f64 },
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub model: ModelConfig,
+    pub lsh: LshParams,
+    pub mode: AttentionMode,
+    /// Paged-KV pool capacity (pages shared across sequences).
+    pub capacity_pages: usize,
+    pub sink: usize,
+    pub local: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: ModelConfig::tiny(),
+            lsh: LshParams::paper_default(),
+            mode: AttentionMode::Socket { sparsity: 33.0 },
+            capacity_pages: 16 * 1024,
+            sink: 64,
+            local: 64,
+        }
+    }
+}
+
+/// Per-sequence state: one KV page table + SOCKET layer cache per
+/// kv-head stream (single representative layer — the decode cost of all
+/// layers scales linearly and is reported as such).
+struct SequenceState {
+    tables: Vec<PageTable>,
+    socket: Vec<LayerCache>,
+    model: SyntheticModel,
+    decoded: usize,
+}
+
+/// The decode engine: paged KV pool + per-sequence SOCKET caches.
+pub struct DecodeEngine {
+    pub config: EngineConfig,
+    kv: PagedKvCache,
+    sequences: HashMap<u64, SequenceState>,
+    /// Pages committed to admitted sequences (context + decode
+    /// headroom) — admission control that guarantees decode appends
+    /// never hit an exhausted pool.
+    committed_pages: usize,
+    /// Per-sequence committed page count (for release bookkeeping).
+    commitments: HashMap<u64, usize>,
+}
+
+impl DecodeEngine {
+    pub fn new(config: EngineConfig) -> DecodeEngine {
+        DecodeEngine {
+            kv: PagedKvCache::new(config.capacity_pages, config.model.head_dim),
+            config,
+            sequences: HashMap::new(),
+            committed_pages: 0,
+            commitments: HashMap::new(),
+        }
+    }
+
+    pub fn n_sequences(&self) -> usize {
+        self.sequences.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.kv.free_pages()
+    }
+
+    /// Admit a sequence: prefill `context_len` tokens (build KV pages +
+    /// hash signatures, Alg. 1) and commit page headroom for up to
+    /// `max_new_tokens` decode appends. Returns false if the pool
+    /// cannot guarantee the commitment (backpressure — caller requeues).
+    pub fn prefill(&mut self, seq_id: u64, context_len: usize, max_new_tokens: usize) -> bool {
+        let heads = self.config.model.n_kv_heads;
+        let needed = heads * PagedKvCache::pages_for(context_len + max_new_tokens);
+        if self.kv.total_pages() - self.committed_pages < needed {
+            return false;
+        }
+        self.committed_pages += needed;
+        self.commitments.insert(seq_id, needed);
+        let model = SyntheticModel::new(self.config.model, seq_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut tables = Vec::with_capacity(heads);
+        let mut socket = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let mut table = PageTable::default();
+            let (keys, values) = model.kv_matrix(h, context_len);
+            let written = self.kv.append_many(&mut table, &keys.data, &values.data);
+            debug_assert_eq!(written, context_len);
+            let mut cache = LayerCache::new(self.config.lsh, self.config.model.head_dim, seq_id ^ (h as u64) << 11);
+            if matches!(self.config.mode, AttentionMode::Socket { .. }) {
+                cache.prefill(&keys, &values);
+            }
+            tables.push(table);
+            socket.push(cache);
+        }
+        self.sequences.insert(seq_id, SequenceState { tables, socket, model, decoded: 0 });
+        true
+    }
+
+    /// One decode step for a sequence; returns the attention outputs
+    /// (per kv-head) and appends the new token's K/V. Panics if the
+    /// sequence was never prefilled.
+    pub fn decode_step(&mut self, seq_id: u64) -> Vec<Vec<f32>> {
+        let state = self.sequences.get_mut(&seq_id).expect("decode before prefill");
+        let heads = self.config.model.n_kv_heads;
+        let dim = self.config.model.head_dim;
+        let scale = 1.0 / (dim as f32).sqrt();
+        let mut outputs = Vec::with_capacity(heads);
+        let step = state.decoded;
+        for h in 0..heads {
+            let n = state.tables[h].n_tokens;
+            let q = state.model.query_at(h, step);
+            // Gather the cache view. (The paged cache is the source of
+            // truth; gather is only done for the selected subset.)
+            let selected: Option<Vec<usize>> = match self.config.mode {
+                AttentionMode::Dense => None,
+                AttentionMode::Socket { sparsity } => {
+                    let policy = SelectionPolicy::from_sparsity(
+                        n,
+                        sparsity,
+                        self.config.sink,
+                        self.config.local,
+                    );
+                    let top = state.socket[h].select(&q, policy.k);
+                    Some(policy.merge(&top, n))
+                }
+            };
+            let out = match &selected {
+                None => {
+                    let all: Vec<usize> = (0..n).collect();
+                    let (keys, values) = self.kv.gather(&state.tables[h], &all);
+                    flash_decode(&q, &keys, &values, None, scale)
+                }
+                Some(sel) => {
+                    let (keys, values) = self.kv.gather(&state.tables[h], sel);
+                    flash_decode(&q, &keys, &values, None, scale)
+                }
+            };
+            outputs.push(out);
+            // Append the newly generated token's K/V.
+            let (k_new, v_new) = state.model.kv_at(h, n);
+            let ok = self.kv.append(&mut state.tables[h], &k_new, &v_new);
+            assert!(ok, "KV pool exhausted mid-decode");
+            if matches!(self.config.mode, AttentionMode::Socket { .. }) {
+                state.socket[h].append_token(&k_new, &v_new);
+            }
+        }
+        state.decoded += 1;
+        outputs
+    }
+
+    pub fn decoded(&self, seq_id: u64) -> usize {
+        self.sequences.get(&seq_id).map(|s| s.decoded).unwrap_or(0)
+    }
+
+    /// Release a finished sequence's pages and its commitment.
+    pub fn release(&mut self, seq_id: u64) {
+        if let Some(mut state) = self.sequences.remove(&seq_id) {
+            for table in state.tables.iter_mut() {
+                self.kv.release(table);
+            }
+        }
+        if let Some(c) = self.commitments.remove(&seq_id) {
+            self.committed_pages -= c;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: AttentionMode) -> EngineConfig {
+        EngineConfig {
+            model: ModelConfig { head_dim: 32, n_kv_heads: 2, ..ModelConfig::tiny() },
+            lsh: LshParams { p: 8, l: 20, tau: 0.5 },
+            mode,
+            capacity_pages: 512,
+            sink: 4,
+            local: 4,
+        }
+    }
+
+    #[test]
+    fn prefill_decode_release_roundtrip() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        assert!(e.prefill(1, 300, 8));
+        assert_eq!(e.n_sequences(), 1);
+        let out = e.decode_step(1);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), 32);
+        assert!(out[0].iter().any(|&x| x != 0.0));
+        assert_eq!(e.decoded(1), 1);
+        let free_before = e.free_pages();
+        e.release(1);
+        assert!(e.free_pages() > free_before);
+        assert_eq!(e.n_sequences(), 0);
+    }
+
+    #[test]
+    fn backpressure_on_pool_exhaustion() {
+        let mut e = DecodeEngine::new(EngineConfig { capacity_pages: 8, ..cfg(AttentionMode::Dense) });
+        // 2 heads x ceil(300/16) pages >> 8.
+        assert!(!e.prefill(1, 300, 8));
+        assert_eq!(e.n_sequences(), 0);
+        // A small context fits.
+        assert!(e.prefill(2, 32, 8));
+    }
+
+    #[test]
+    fn socket_output_close_to_dense() {
+        // The whole point: sparse decode ≈ dense decode outputs.
+        let mut dense = DecodeEngine::new(cfg(AttentionMode::Dense));
+        let mut sparse = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 4.0 }));
+        assert!(dense.prefill(7, 400, 4));
+        assert!(sparse.prefill(7, 400, 4));
+        let yd = dense.decode_step(7);
+        let ys = sparse.decode_step(7);
+        for h in 0..2 {
+            let rel = crate::metrics::output_relative_error(&ys[h], &yd[h]);
+            assert!(rel < 0.5, "head {h} rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn multi_sequence_isolation() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        assert!(e.prefill(1, 100, 8));
+        assert!(e.prefill(2, 150, 8));
+        let o1a = e.decode_step(1);
+        let _ = e.decode_step(2);
+        // Re-running seq 1's step-0 computation via a fresh engine gives
+        // identical output (determinism + isolation).
+        let mut e2 = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        assert!(e2.prefill(1, 100, 8));
+        let o1b = e2.decode_step(1);
+        assert_eq!(o1a, o1b);
+    }
+
+    #[test]
+    #[should_panic(expected = "decode before prefill")]
+    fn decode_unknown_sequence_panics() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::Dense));
+        e.decode_step(42);
+    }
+}

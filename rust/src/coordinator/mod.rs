@@ -1,0 +1,23 @@
+//! The serving coordinator (Layer 3): request router, continuous
+//! batcher and prefill/decode scheduler over the SOCKET sparse-attention
+//! engine — the vLLM-router-shaped system the paper's efficiency section
+//! (GPT-Fast + custom scoring kernel) corresponds to.
+//!
+//! Dataflow:
+//!
+//! ```text
+//! submit() ─→ [router queue] ─→ scheduler loop (worker thread)
+//!                 │   admit: prefill (hash K/V, Alg. 1; paged KV store)
+//!                 │   step:  continuous batch of decode-ready seqs
+//!                 │          soft-hash q (Alg. 2) → score+top-k (Alg. 3/4)
+//!                 │          → flash-decode over selected ∪ sink ∪ local
+//!                 └─→ completion channel → RequestHandle::wait()
+//! ```
+
+pub mod batcher;
+pub mod engine;
+pub mod scheduler;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use engine::{AttentionMode, DecodeEngine, EngineConfig};
+pub use scheduler::{Completion, Coordinator, RequestHandle, SchedulerStats};

@@ -1,0 +1,266 @@
+//! The scheduler: a worker thread driving admit → step iterations over
+//! the [`DecodeEngine`], with an mpsc submission queue and per-request
+//! completion channels. This is the leader loop of the serving stack.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::{DecodeEngine, EngineConfig};
+use crate::workload::trace::Request;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Completion record returned for every finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub context_len: usize,
+    pub decode_len: usize,
+    /// Time from submission to first decoded token, ms.
+    pub ttft_ms: f64,
+    /// Time from submission to completion, ms.
+    pub total_ms: f64,
+}
+
+/// Aggregate scheduler statistics.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerStats {
+    pub completed: usize,
+    pub decode_steps: u64,
+    pub prefill_tokens: u64,
+    pub rejected_admissions: u64,
+}
+
+enum Msg {
+    Submit(Request, Sender<Completion>),
+    Shutdown,
+}
+
+/// Handle for awaiting one request's completion.
+pub struct RequestHandle {
+    rx: Receiver<Completion>,
+}
+
+impl RequestHandle {
+    /// Block until the request completes.
+    pub fn wait(self) -> Completion {
+        self.rx.recv().expect("scheduler dropped before completing request")
+    }
+}
+
+/// The coordinator: spawns the scheduler thread, routes requests in.
+pub struct Coordinator {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<SchedulerStats>>,
+}
+
+struct Inflight {
+    req: Request,
+    submitted: Instant,
+    first_token: Option<Instant>,
+    done_tx: Sender<Completion>,
+}
+
+impl Coordinator {
+    /// Spawn the scheduler over a fresh engine.
+    pub fn spawn(config: EngineConfig, policy: BatchPolicy) -> Coordinator {
+        let (tx, rx) = channel::<Msg>();
+        let worker = std::thread::spawn(move || scheduler_loop(config, policy, rx));
+        Coordinator { tx, worker: Some(worker) }
+    }
+
+    /// Submit a request; returns a handle to await completion.
+    pub fn submit(&self, req: Request) -> RequestHandle {
+        let (done_tx, done_rx) = channel();
+        self.tx.send(Msg::Submit(req, done_tx)).expect("scheduler gone");
+        RequestHandle { rx: done_rx }
+    }
+
+    /// Stop the scheduler (after draining in-flight work) and return
+    /// aggregate stats.
+    pub fn shutdown(mut self) -> SchedulerStats {
+        let _ = self.tx.send(Msg::Shutdown);
+        self.worker.take().unwrap().join().expect("scheduler panicked")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            let _ = self.tx.send(Msg::Shutdown);
+            let _ = w.join();
+        }
+    }
+}
+
+fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) -> SchedulerStats {
+    let mut engine = DecodeEngine::new(config);
+    let mut batcher = Batcher::new(policy);
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let mut stats = SchedulerStats::default();
+    let mut draining = false;
+
+    loop {
+        // Drain the submission queue without blocking (block only when
+        // fully idle to avoid a busy-spin).
+        loop {
+            let idle = batcher.waiting_len() == 0 && batcher.running_len() == 0;
+            if idle && !draining {
+                match rx.recv() {
+                    Ok(Msg::Submit(req, done_tx)) => {
+                        batcher.enqueue(req.id, req.context_len);
+                        inflight.insert(
+                            req.id,
+                            Inflight { req, submitted: Instant::now(), first_token: None, done_tx },
+                        );
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => draining = true,
+                }
+                continue;
+            }
+            match rx.try_recv() {
+                Ok(Msg::Submit(req, done_tx)) => {
+                    batcher.enqueue(req.id, req.context_len);
+                    inflight.insert(
+                        req.id,
+                        Inflight { req, submitted: Instant::now(), first_token: None, done_tx },
+                    );
+                }
+                Ok(Msg::Shutdown) => draining = true,
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => draining = true,
+            }
+            if draining {
+                break;
+            }
+        }
+        if draining && batcher.waiting_len() == 0 && batcher.running_len() == 0 {
+            return stats;
+        }
+
+        let batch = batcher.next_batch();
+        if batch.is_empty() {
+            if draining {
+                return stats;
+            }
+            continue;
+        }
+        // Prefills (admission may fail under KV pressure → requeue).
+        for &(seq, ctx) in batch.prefills.iter() {
+            let decode_len = inflight.get(&seq).map(|f| f.req.decode_len).unwrap_or(0);
+            if engine.prefill(seq, ctx, decode_len) {
+                batcher.started(seq);
+                stats.prefill_tokens += ctx as u64;
+            } else {
+                stats.rejected_admissions += 1;
+                batcher.requeue(seq, ctx);
+            }
+        }
+        // Decode steps.
+        for &seq in batch.decodes.iter() {
+            let _outputs = engine.decode_step(seq);
+            stats.decode_steps += 1;
+            let fl = inflight.get_mut(&seq).expect("decode for unknown request");
+            if fl.first_token.is_none() {
+                fl.first_token = Some(Instant::now());
+            }
+            if engine.decoded(seq) >= fl.req.decode_len {
+                // Finished.
+                let fl = inflight.remove(&seq).unwrap();
+                let now = Instant::now();
+                let completion = Completion {
+                    id: seq,
+                    context_len: fl.req.context_len,
+                    decode_len: fl.req.decode_len,
+                    ttft_ms: fl
+                        .first_token
+                        .unwrap_or(now)
+                        .duration_since(fl.submitted)
+                        .as_secs_f64()
+                        * 1e3,
+                    total_ms: now.duration_since(fl.submitted).as_secs_f64() * 1e3,
+                };
+                let _ = fl.done_tx.send(completion);
+                batcher.finished(seq);
+                engine.release(seq);
+                stats.completed += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::AttentionMode;
+    use crate::lsh::LshParams;
+    use crate::model::ModelConfig;
+
+    fn small_config() -> EngineConfig {
+        EngineConfig {
+            model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
+            lsh: LshParams { p: 6, l: 8, tau: 0.5 },
+            mode: AttentionMode::Socket { sparsity: 8.0 },
+            capacity_pages: 2048,
+            sink: 4,
+            local: 4,
+        }
+    }
+
+    fn req(id: u64, ctx: usize, dec: usize) -> Request {
+        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec }
+    }
+
+    #[test]
+    fn single_request_completes() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let h = coord.submit(req(1, 128, 4));
+        let c = h.wait();
+        assert_eq!(c.id, 1);
+        assert_eq!(c.decode_len, 4);
+        assert!(c.ttft_ms <= c.total_ms);
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.decode_steps, 4);
+        assert_eq!(stats.prefill_tokens, 128);
+    }
+
+    #[test]
+    fn concurrent_requests_all_complete() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let handles: Vec<RequestHandle> =
+            (0..8).map(|i| coord.submit(req(i, 64 + 16 * i as usize, 3))).collect();
+        let mut ids: Vec<u64> = handles.into_iter().map(|h| h.wait().id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 8);
+        assert_eq!(stats.decode_steps, 24);
+    }
+
+    #[test]
+    fn backpressure_requeues_and_eventually_admits() {
+        // Tiny pool: only ~2 sequences fit at once; the rest must wait
+        // for releases.
+        let config = EngineConfig { capacity_pages: 24, ..small_config() };
+        let coord = Coordinator::spawn(config, BatchPolicy { max_prefills: 4, ..Default::default() });
+        let handles: Vec<RequestHandle> =
+            (0..6).map(|i| coord.submit(req(i, 128, 2))).collect();
+        for h in handles {
+            h.wait();
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 6);
+        assert!(stats.rejected_admissions > 0, "expected KV backpressure");
+    }
+
+    #[test]
+    fn shutdown_drains_inflight() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let h = coord.submit(req(9, 64, 10));
+        let stats = coord.shutdown(); // shutdown while decoding
+        assert_eq!(stats.completed, 1, "in-flight request must drain");
+        let c = h.wait();
+        assert_eq!(c.decode_len, 10);
+    }
+}

@@ -1,0 +1,190 @@
+//! Tables 6 & 7 — hyperparameter ablations at 20x sparsity over the five
+//! RULER-HARD tasks (nm2, qa1, vt, nm3, qa2).
+//!
+//! Table 6: SOCKET sweeps of P (τ=0.4, L=60), L (τ=0.5, P=10) and τ
+//! (P=10, L=60). Table 7: hard-LSH sweeps of P (L=60), L (P=2) and the
+//! larger-budget regime.
+
+use super::Scale;
+use crate::attention::SelectionPolicy;
+use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
+use crate::lsh::LshParams;
+use crate::util::{fnum, Table};
+use crate::workload::ruler::{evaluate_selector, RulerTask};
+
+/// The five ablation tasks, paper order.
+pub const ABLATION_TASKS: [&str; 5] = ["nm2", "qa1", "vt", "nm3", "qa2"];
+
+pub struct AblationRow {
+    pub label: String,
+    pub scores: Vec<f64>,
+    pub avg: f64,
+}
+
+fn eval(selector: &mut dyn TokenSelector, scale: Scale) -> AblationRow {
+    eval_at(selector, scale, 20.0)
+}
+
+fn eval_at(selector: &mut dyn TokenSelector, scale: Scale, sparsity: f64) -> AblationRow {
+    let policy = SelectionPolicy::from_sparsity(scale.n, sparsity, 0, 0);
+    let scores: Vec<f64> = ABLATION_TASKS
+        .iter()
+        .map(|name| {
+            let task = RulerTask::by_name(name).unwrap();
+            evaluate_selector(&task, selector, scale.n, scale.dim, policy.k, scale.instances, scale.seed)
+        })
+        .collect();
+    let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+    AblationRow { label: String::new(), scores, avg }
+}
+
+/// Table 6a: varying P at τ=0.4, L=60.
+pub fn socket_vary_p(scale: Scale) -> Vec<AblationRow> {
+    (4..=10)
+        .map(|p| {
+            let mut s = SocketSelector::new(LshParams { p, l: 60, tau: 0.4 }, scale.dim, scale.seed);
+            let mut row = eval(&mut s, scale);
+            row.label = p.to_string();
+            row
+        })
+        .collect()
+}
+
+/// Table 6b: varying L at τ=0.5, P=10.
+pub fn socket_vary_l(scale: Scale) -> Vec<AblationRow> {
+    [10usize, 20, 40, 60, 70]
+        .iter()
+        .map(|&l| {
+            let mut s = SocketSelector::new(LshParams { p: 10, l, tau: 0.5 }, scale.dim, scale.seed);
+            let mut row = eval(&mut s, scale);
+            row.label = l.to_string();
+            row
+        })
+        .collect()
+}
+
+/// Table 6c: varying τ at P=10, L=60.
+pub fn socket_vary_tau(scale: Scale) -> Vec<AblationRow> {
+    [0.1f32, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]
+        .iter()
+        .map(|&tau| {
+            let mut s = SocketSelector::new(LshParams { p: 10, l: 60, tau }, scale.dim, scale.seed);
+            let mut row = eval(&mut s, scale);
+            row.label = format!("{tau:.1}");
+            row
+        })
+        .collect()
+}
+
+/// Table 7a: hard LSH varying P at L=60.
+pub fn hard_vary_p(scale: Scale) -> Vec<AblationRow> {
+    (1..=5)
+        .map(|p| {
+            let mut s = HardLshSelector::new(LshParams { p, l: 60, tau: 0.5 }, scale.dim, scale.seed);
+            let mut row = eval(&mut s, scale);
+            row.label = p.to_string();
+            row
+        })
+        .collect()
+}
+
+/// Table 7b/c: hard LSH varying L at P=2 (including the larger budgets).
+pub fn hard_vary_l(scale: Scale) -> Vec<AblationRow> {
+    [70usize, 100, 150, 200, 250, 300, 350, 400, 450, 500]
+        .iter()
+        .map(|&l| {
+            let mut s = HardLshSelector::new(LshParams { p: 2, l, tau: 0.5 }, scale.dim, scale.seed);
+            let mut row = eval(&mut s, scale);
+            row.label = format!("{l} ({} bits)", 2 * l);
+            row
+        })
+        .collect()
+}
+
+pub fn table(title: &str, label_name: &str, rows: &[AblationRow]) -> Table {
+    let mut header = vec![label_name];
+    header.extend(ABLATION_TASKS.iter());
+    header.push("Avg");
+    let mut t = Table::new(title, &header);
+    for r in rows {
+        let mut cells = vec![r.label.clone()];
+        cells.extend(r.scores.iter().map(|s| fnum(*s, 1)));
+        cells.push(fnum(r.avg, 2));
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { n: 512, dim: 48, instances: 2, seed: 23 }
+    }
+
+    /// Mean precision-vs-oracle of a SOCKET config — a sharper (and
+    /// faster) trend probe than full task scores at unit-test scale,
+    /// where the needle tasks saturate.
+    fn ranking_precision(params: LshParams, n: usize, dim: usize, k: usize, seed: u64) -> f64 {
+        use crate::metrics::precision_at_k;
+        use crate::testing::gen;
+        let mut acc = 0.0;
+        let reps = 4;
+        for rep in 0..reps {
+            let mut rng = crate::util::Pcg64::new(seed, rep);
+            let q = gen::unit_vec(&mut rng, dim);
+            let mut keys = crate::linalg::Matrix::zeros(n, dim);
+            let sq = (dim as f32).sqrt();
+            for j in 0..n {
+                let cos = (0.2 + 0.3 * rng.normal()).clamp(-0.95, 0.95);
+                let kv = gen::key_with_cosine(&mut rng, &q, cos);
+                for c in 0..dim {
+                    keys.set(j, c, kv[c] * sq);
+                }
+            }
+            let ones = crate::linalg::Matrix::from_vec(n, 1, vec![1.0; n]);
+            let mut s = SocketSelector::new(params, dim, seed ^ rep);
+            s.build(&keys, &ones);
+            let got = s.select(&q, k);
+            let dots: Vec<f32> = (0..n).map(|j| crate::linalg::dot(keys.row(j), &q)).collect();
+            let gt = crate::linalg::top_k_indices(&dots, k);
+            acc += precision_at_k(&got, &gt, k);
+        }
+        acc / reps as f64
+    }
+
+    #[test]
+    fn socket_improves_with_more_tables() {
+        // Table 6b's trend: L=60 >> L=10.
+        let l10 = ranking_precision(LshParams { p: 10, l: 10, tau: 0.5 }, 1024, 48, 32, 5);
+        let l60 = ranking_precision(LshParams { p: 10, l: 60, tau: 0.5 }, 1024, 48, 32, 5);
+        assert!(l60 > l10 + 0.03, "L=60 {l60} should beat L=10 {l10}");
+    }
+
+    #[test]
+    fn socket_p_trend_matches_table6a() {
+        // More hyperplanes = sharper buckets = better ranking.
+        let p2 = ranking_precision(LshParams { p: 2, l: 60, tau: 0.4 }, 1024, 48, 32, 7);
+        let p10 = ranking_precision(LshParams { p: 10, l: 60, tau: 0.4 }, 1024, 48, 32, 7);
+        assert!(p10 > p2 + 0.02, "P=10 {p10} should beat P=2 {p2}");
+    }
+
+    #[test]
+    fn hard_lsh_best_at_small_p() {
+        // Table 7a: P=2 is the sweet spot; P=5 collapses.
+        let rows = hard_vary_p(tiny());
+        let p2 = rows[1].avg;
+        let p5 = rows[4].avg;
+        assert!(p2 > p5, "P=2 {p2} should beat P=5 {p5}");
+    }
+
+    #[test]
+    fn mid_tau_beats_extremes() {
+        // Table 6c: τ∈[0.3,0.5] optimal; τ=0.8 degrades.
+        let rows = socket_vary_tau(tiny());
+        let best_mid = rows[2].avg.max(rows[3].avg).max(rows[4].avg);
+        let tau_08 = rows.last().unwrap().avg;
+        assert!(best_mid >= tau_08, "mid-τ {best_mid} vs τ=0.8 {tau_08}");
+    }
+}

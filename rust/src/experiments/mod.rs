@@ -1,0 +1,126 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §5).
+//!
+//! Each driver builds the workload, sweeps methods/parameters and
+//! returns a [`crate::util::Table`] whose rows mirror the paper's. The
+//! bench binaries (`rust/benches/`) are thin wrappers that print these.
+
+pub mod ablation;
+pub mod correlation;
+pub mod longbench;
+pub mod magicpig;
+pub mod models;
+pub mod overhead;
+pub mod ranking;
+pub mod ruler;
+pub mod theory;
+pub mod throughput;
+pub mod ttft;
+
+use crate::baselines::{
+    double_sparsity::DoubleSparsitySelector, hashattention::HashAttentionSelector,
+    magicpig::MagicPigSelector, oracle::OracleSelector, pqcache::PqCacheSelector,
+    quest::QuestSelector, HardLshSelector, SocketSelector, TokenSelector,
+};
+use crate::lsh::LshParams;
+
+/// The methods compared across the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    PqCache,
+    Quest,
+    DoubleSparsity,
+    HashAttention,
+    MagicPig,
+    Socket,
+    HardLsh,
+    Oracle,
+}
+
+impl Method {
+    pub const TABLE1: [Method; 6] = [
+        Method::PqCache,
+        Method::Quest,
+        Method::DoubleSparsity,
+        Method::HashAttention,
+        Method::MagicPig,
+        Method::Socket,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::PqCache => "PQcache",
+            Method::Quest => "Quest",
+            Method::DoubleSparsity => "DS",
+            Method::HashAttention => "HashAttn",
+            Method::MagicPig => "MagicPig",
+            Method::Socket => "SOCKET",
+            Method::HardLsh => "LSH",
+            Method::Oracle => "Oracle",
+        }
+    }
+
+    /// Construct the selector with each paper's recommended settings
+    /// (Section 6 "Baselines"), adapted to head dimension `dim`.
+    pub fn build(&self, dim: usize, seed: u64) -> Box<dyn TokenSelector> {
+        match self {
+            // PQCache: 256 bits/token => m=32 subquantizers x 8 bits at
+            // d=128; scale m with dim, keeping dim % m == 0.
+            Method::PqCache => {
+                let m = (dim / 4).min(32).max(1);
+                Box::new(PqCacheSelector::new(m, 8, seed))
+            }
+            // Quest: 16-token pages.
+            Method::Quest => Box::new(QuestSelector::new(16)),
+            // Double Sparsity: d/4 important channels.
+            Method::DoubleSparsity => Box::new(DoubleSparsitySelector::new((dim / 4).max(1))),
+            // HashAttention: 128-bit signatures.
+            Method::HashAttention => Box::new(HashAttentionSelector::new(128, seed)),
+            // MagicPig: K=10 planes, L~100 tables (≈1024 bits/token).
+            Method::MagicPig => {
+                Box::new(MagicPigSelector::new(LshParams { p: 10, l: 100, tau: 0.5 }, seed))
+            }
+            // SOCKET: P=10, L=60, τ=0.5 (600 bits/token).
+            Method::Socket => Box::new(SocketSelector::new(LshParams::paper_default(), dim, seed)),
+            // Hard LSH at SOCKET's memory budget: P=2, L=300 (Table 2).
+            Method::HardLsh => {
+                Box::new(HardLshSelector::new(LshParams { p: 2, l: 300, tau: 0.5 }, dim, seed))
+            }
+            Method::Oracle => Box::new(OracleSelector::new(false)),
+        }
+    }
+}
+
+/// The sparsity sweep of Table 1.
+pub const SPARSITIES_T1: [f64; 4] = [5.0, 10.0, 20.0, 50.0];
+
+/// Shared experiment scale knobs (kept modest so `cargo bench` finishes
+/// in minutes; pass `--full` to benches for paper-scale contexts).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    /// Context tokens.
+    pub n: usize,
+    /// Head dimension.
+    pub dim: usize,
+    /// Instances per (task, method, sparsity) cell.
+    pub instances: usize,
+    pub seed: u64,
+}
+
+impl Scale {
+    pub fn quick() -> Scale {
+        Scale { n: 2048, dim: 64, instances: 4, seed: 0x50C4E7 }
+    }
+
+    pub fn full() -> Scale {
+        Scale { n: 32 * 1024, dim: 128, instances: 8, seed: 0x50C4E7 }
+    }
+
+    pub fn from_args(args: &crate::util::Args) -> Scale {
+        let mut s = if args.flag("full") { Scale::full() } else { Scale::quick() };
+        s.n = args.usize_or("n", s.n);
+        s.dim = args.usize_or("dim", s.dim);
+        s.instances = args.usize_or("instances", s.instances);
+        s.seed = args.u64_or("seed", s.seed);
+        s
+    }
+}

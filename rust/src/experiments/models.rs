@@ -1,0 +1,137 @@
+//! Tables 10–12 — scale variants: RULER-16K comparison (Table 10) and
+//! SOCKET across "model sizes" (Qwen3-30B-A3B / Qwen3-4B analogs,
+//! Tables 11–12), realized as head-dimension / retrieval-difficulty
+//! variants of the RULER analogs.
+
+use super::{Method, Scale};
+use crate::attention::SelectionPolicy;
+use crate::util::{fnum, Table};
+use crate::workload::ruler::{evaluate_selector, RulerTask, RULER_TASKS};
+
+/// A model-scale variant: head dim & noise level stand in for model
+/// capacity (larger models = higher-dimensional, better-separated keys).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub dim: usize,
+    /// Additive needle-cosine bonus (bigger model = cleaner signal).
+    pub cos_bonus: f32,
+}
+
+pub const MODELS: [ModelProfile; 3] = [
+    ModelProfile { name: "Llama-3.1-8B-analog", dim: 128, cos_bonus: 0.0 },
+    ModelProfile { name: "Qwen3-30B-A3B-analog", dim: 128, cos_bonus: 0.06 },
+    ModelProfile { name: "Qwen3-4B-analog", dim: 96, cos_bonus: 0.03 },
+];
+
+pub struct ModelRow {
+    pub model: &'static str,
+    pub method: &'static str,
+    pub sparsity: f64,
+    pub scores: Vec<f64>,
+    pub avg: f64,
+}
+
+fn boosted(task: &RulerTask, bonus: f32) -> RulerTask {
+    let mut t = *task;
+    t.needle_cos = (t.needle_cos + bonus).min(0.95);
+    t
+}
+
+/// Tables 11/12: SOCKET across sparsity on a model profile.
+pub fn run_model_sweep(scale: Scale, model: &ModelProfile, sparsities: &[f64]) -> Vec<ModelRow> {
+    let mut rows = Vec::new();
+    for &s in sparsities {
+        let policy = SelectionPolicy::from_sparsity(scale.n, s, 0, 0);
+        let mut selector = Method::Socket.build(model.dim, scale.seed);
+        let scores: Vec<f64> = RULER_TASKS
+            .iter()
+            .map(|t| {
+                evaluate_selector(
+                    &boosted(t, model.cos_bonus),
+                    selector.as_mut(),
+                    scale.n,
+                    model.dim,
+                    policy.k,
+                    scale.instances,
+                    scale.seed ^ (s as u64) << 3,
+                )
+            })
+            .collect();
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        rows.push(ModelRow { model: model.name, method: "SOCKET", sparsity: s, scores, avg });
+    }
+    rows
+}
+
+/// Table 10: method comparison on RULER-16K (10x sparsity).
+pub fn run_ruler16k(scale: Scale) -> Vec<ModelRow> {
+    let n = scale.n / 2; // "16K" relative to the 32K default
+    let policy = SelectionPolicy::from_sparsity(n, 10.0, 0, 0);
+    let methods = [Method::Oracle, Method::HashAttention, Method::Socket];
+    let mut rows = Vec::new();
+    for method in methods {
+        let mut selector = method.build(scale.dim, scale.seed);
+        let scores: Vec<f64> = RULER_TASKS
+            .iter()
+            .map(|t| {
+                evaluate_selector(t, selector.as_mut(), n, scale.dim, policy.k, scale.instances, scale.seed)
+            })
+            .collect();
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        rows.push(ModelRow {
+            model: "Llama-3.1-8B-analog",
+            method: method.name(),
+            sparsity: 10.0,
+            scores,
+            avg,
+        });
+    }
+    rows
+}
+
+pub fn table(title: &str, rows: &[ModelRow]) -> Table {
+    let mut header = vec!["Model", "Method", "Spr"];
+    header.extend(RULER_TASKS.iter().map(|t| t.name));
+    header.push("AVG");
+    let mut t = Table::new(title, &header);
+    for r in rows {
+        let mut cells = vec![r.model.to_string(), r.method.to_string(), format!("{}x", r.sparsity as u64)];
+        cells.extend(r.scores.iter().map(|s| fnum(*s, 1)));
+        cells.push(fnum(r.avg, 2));
+        t.row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { n: 512, dim: 48, instances: 2, seed: 61 }
+    }
+
+    #[test]
+    fn sweep_produces_row_per_sparsity() {
+        let rows = run_model_sweep(tiny(), &MODELS[1], &[5.0, 50.0]);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].avg >= rows[1].avg - 8.0, "5x {} vs 50x {}", rows[0].avg, rows[1].avg);
+    }
+
+    #[test]
+    fn stronger_model_analog_scores_higher() {
+        // Tables 11 vs 12 shape: the 30B analog holds up better.
+        let weak = run_model_sweep(tiny(), &MODELS[0], &[50.0]);
+        let strong = run_model_sweep(tiny(), &MODELS[1], &[50.0]);
+        assert!(strong[0].avg >= weak[0].avg - 4.0, "strong {} vs weak {}", strong[0].avg, weak[0].avg);
+    }
+
+    #[test]
+    fn oracle_upper_bounds_in_table10() {
+        let rows = run_ruler16k(tiny());
+        let oracle = rows.iter().find(|r| r.method == "Oracle").unwrap().avg;
+        let socket = rows.iter().find(|r| r.method == "SOCKET").unwrap().avg;
+        assert!(oracle >= socket - 6.0, "oracle {oracle} vs socket {socket}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Table 2 — retrieval compute/memory overhead: SOCKET vs hard LSH at
+//! matched and larger budgets, plus retrieval quality.
+//!
+//! Memory column follows the paper's accounting (index GB over a 32K
+//! context x 8 KV heads x 32 layers); Time is the measured per-query
+//! scoring latency of our Rust scoring hot path; Avg Score is needle
+//! retrieval accuracy on the RULER analogs.
+
+use super::Scale;
+use crate::attention::SelectionPolicy;
+use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
+use crate::lsh::LshParams;
+use crate::util::{bench_ms, fnum, Table};
+use crate::workload::ruler::{evaluate_selector, RULER_TASKS};
+
+pub struct OverheadRow {
+    pub method: &'static str,
+    pub p: usize,
+    pub l: usize,
+    pub memory_gb: f64,
+    pub time_ms: f64,
+    pub avg_score: f64,
+}
+
+/// The paper's Table-2 configurations.
+pub const CONFIGS: [(&str, usize, usize); 5] = [
+    ("SOCKET", 10, 60),
+    ("LSH", 10, 60),
+    ("LSH", 2, 300),
+    ("LSH", 2, 400),
+    ("LSH", 2, 500),
+];
+
+/// *Storage* bits per token: unlike the information-theoretic `P·L`
+/// accounting of `LshParams::memory()`, real kernels store one
+/// word-addressable bucket id per table (u8 for P ≤ 8, u16 above) plus
+/// a 32-bit value norm — which is why the paper's Table 2 reports hard
+/// LSH at (2, 300) as ~2.8x SOCKET's (10, 60) memory despite both being
+/// "600 bits" of signatures.
+pub fn storage_bits_per_token(params: &LshParams) -> usize {
+    let per_table = if params.p <= 8 { 8 } else { 16 };
+    params.l * per_table + 32
+}
+
+pub fn run(scale: Scale) -> Vec<OverheadRow> {
+    // Paper model shape for the GB column: 32 layers x 8 KV heads, 32K.
+    let (layers, kv_heads, ctx) = (32usize, 8usize, 32 * 1024usize);
+    let mut rows = Vec::new();
+    for &(name, p, l) in CONFIGS.iter() {
+        let params = LshParams { p, l, tau: 0.5 };
+        let mut selector: Box<dyn TokenSelector> = if name == "SOCKET" {
+            Box::new(SocketSelector::new(params, scale.dim, scale.seed))
+        } else {
+            Box::new(HardLshSelector::new(params, scale.dim, scale.seed))
+        };
+        // Retrieval quality on the RULER analogs at 20x sparsity.
+        let policy = SelectionPolicy::from_sparsity(scale.n, 20.0, 0, 0);
+        let mut total = 0.0;
+        for task in RULER_TASKS.iter() {
+            total += evaluate_selector(
+                task,
+                selector.as_mut(),
+                scale.n,
+                scale.dim,
+                policy.k,
+                scale.instances,
+                scale.seed,
+            );
+        }
+        let avg_score = total / RULER_TASKS.len() as f64;
+        // Scoring latency over a prepared context of scale.n tokens.
+        let mut rng = crate::util::Pcg64::new(scale.seed, 777);
+        let keys = crate::linalg::Matrix::gaussian(scale.n, scale.dim, &mut rng);
+        let vals = crate::linalg::Matrix::gaussian(scale.n, scale.dim, &mut rng);
+        selector.build(&keys, &vals);
+        let q = rng.normal_vec(scale.dim);
+        let time_ms = bench_ms(2, 8, || selector.select(&q, policy.k));
+        let bits = storage_bits_per_token(&params);
+        let memory_gb = bits as f64 / 8.0 * ctx as f64 * layers as f64 * kv_heads as f64 / 1e9;
+        rows.push(OverheadRow { method: name, p, l, memory_gb, time_ms, avg_score });
+    }
+    rows
+}
+
+pub fn table(rows: &[OverheadRow]) -> Table {
+    let mut t = Table::new(
+        "Table 2: retrieval cost & memory overhead (SOCKET vs hard LSH)",
+        &["Method", "(P, L)", "Memory (GB)", "MemOvh", "Time (ms)", "TimeOvh", "Avg Score"],
+    );
+    let base_mem = rows[0].memory_gb;
+    let base_time = rows[0].time_ms;
+    for r in rows {
+        t.row(vec![
+            r.method.to_string(),
+            format!("({}, {})", r.p, r.l),
+            fnum(r.memory_gb, 3),
+            format!("{}x", fnum(r.memory_gb / base_mem, 2)),
+            fnum(r.time_ms, 3),
+            format!("{}x", fnum(r.time_ms / base_time, 2)),
+            fnum(r.avg_score, 2),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_ratios_match_paper_shape() {
+        // Paper Table 2: (2,300) ≈ 2.81x the (10,60) index, (2,400) ≈
+        // 3.57x, (2,500) ≈ 4.34x. Our storage model lands within ~15%.
+        let bits = |p: usize, l: usize| storage_bits_per_token(&LshParams { p, l, tau: 0.5 }) as f64;
+        let base = bits(10, 60);
+        let r300 = bits(2, 300) / base;
+        let r400 = bits(2, 400) / base;
+        let r500 = bits(2, 500) / base;
+        assert!((r300 - 2.81).abs() < 0.45, "r300={r300}");
+        assert!((r400 - 3.57).abs() < 0.55, "r400={r400}");
+        assert!((r500 - 4.34).abs() < 0.65, "r500={r500}");
+    }
+
+    #[test]
+    fn run_produces_all_configs() {
+        let scale = Scale { n: 256, dim: 32, instances: 1, seed: 5 };
+        let rows = run(scale);
+        assert_eq!(rows.len(), 5);
+        // SOCKET at (10,60) must beat hard LSH at (10,60) — Table 2's
+        // 85.08 vs 10.00 contrast.
+        assert!(
+            rows[0].avg_score > rows[1].avg_score + 5.0,
+            "SOCKET {} vs LSH(10,60) {}",
+            rows[0].avg_score,
+            rows[1].avg_score
+        );
+        let t = table(&rows);
+        assert_eq!(t.n_rows(), 5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Figure 2 — ranking quality (Precision / Jaccard / NDCG vs top-k) for
+//! SOCKET vs traditional LSH under the same 600 bits/token budget.
+//!
+//! Ground truth = dot-product ranking of query/key pairs drawn from a
+//! Qasper-like similarity spectrum (the paper extracts final-layer
+//! Llama activations; see DESIGN.md §2).
+
+use super::Scale;
+use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
+use crate::experiments::correlation::PROFILES;
+use crate::linalg::Matrix;
+use crate::lsh::LshParams;
+use crate::metrics::{jaccard, precision_at_k};
+use crate::metrics::ranking::ndcg_vs_ground_truth;
+use crate::testing::gen;
+use crate::util::{fnum, Pcg64, Table};
+
+pub struct RankingPoint {
+    pub k: usize,
+    pub method: &'static str,
+    pub precision: f64,
+    pub jaccard: f64,
+    pub ndcg: f64,
+}
+
+/// k sweep of the figure.
+pub const K_SWEEP: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+pub fn run(scale: Scale) -> Vec<RankingPoint> {
+    let profile = PROFILES[1]; // QASPER
+    let mut out = Vec::new();
+    // Matched memory budget: SOCKET (10,60) vs hard LSH (2,300).
+    let configs: [(&'static str, bool, LshParams); 2] = [
+        ("SOCKET", true, LshParams { p: 10, l: 60, tau: 0.5 }),
+        ("LSH", false, LshParams { p: 2, l: 300, tau: 0.5 }),
+    ];
+    for &(name, soft, params) in configs.iter() {
+        for &k in K_SWEEP.iter() {
+            if k * 4 > scale.n {
+                continue;
+            }
+            let mut p_acc = 0.0;
+            let mut j_acc = 0.0;
+            let mut n_acc = 0.0;
+            for inst in 0..scale.instances {
+                let mut rng = Pcg64::new(scale.seed, inst as u64 * 31 + k as u64);
+                let q = gen::unit_vec(&mut rng, scale.dim);
+                let mut keys = Matrix::zeros(scale.n, scale.dim);
+                let sqd = (scale.dim as f32).sqrt();
+                for j in 0..scale.n {
+                    let cos = (profile.cos_center + profile.cos_spread * rng.normal())
+                        .clamp(-0.95, 0.95);
+                    let kv = gen::key_with_cosine(&mut rng, &q, cos);
+                    for c in 0..scale.dim {
+                        keys.set(j, c, kv[c] * sqd);
+                    }
+                }
+                let ones = Matrix::from_vec(scale.n, 1, vec![1.0; scale.n]);
+                // Ground truth by dot product.
+                let mut truth: Vec<usize> = (0..scale.n).collect();
+                let dots: Vec<f32> =
+                    (0..scale.n).map(|j| crate::linalg::dot(keys.row(j), &q)).collect();
+                truth.sort_by(|&a, &b| dots[b].partial_cmp(&dots[a]).unwrap());
+                let gt_k: Vec<usize> = truth[..k].to_vec();
+                let retrieved = if soft {
+                    let mut s = SocketSelector::new(params, scale.dim, scale.seed ^ inst as u64);
+                    s.build(&keys, &ones);
+                    s.select(&q, k)
+                } else {
+                    let mut s = HardLshSelector::new(params, scale.dim, scale.seed ^ inst as u64);
+                    s.build(&keys, &ones);
+                    s.select(&q, k)
+                };
+                p_acc += precision_at_k(&retrieved, &gt_k, k);
+                j_acc += jaccard(&retrieved, &gt_k);
+                n_acc += ndcg_vs_ground_truth(&retrieved, &truth, k);
+            }
+            let inst = scale.instances as f64;
+            out.push(RankingPoint {
+                k,
+                method: name,
+                precision: p_acc / inst,
+                jaccard: j_acc / inst,
+                ndcg: n_acc / inst,
+            });
+        }
+    }
+    out
+}
+
+pub fn table(points: &[RankingPoint]) -> Table {
+    let mut t = Table::new(
+        "Figure 2: ranking quality vs top-k @600 bits/token (Qasper-like)",
+        &["Method", "k", "Precision", "Jaccard", "NDCG"],
+    );
+    for p in points {
+        t.row(vec![
+            p.method.to_string(),
+            p.k.to_string(),
+            fnum(p.precision, 3),
+            fnum(p.jaccard, 3),
+            fnum(p.ndcg, 3),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn socket_dominates_hard_lsh() {
+        // Fig. 2's message: soft scoring wins on all three metrics.
+        let scale = Scale { n: 512, dim: 48, instances: 2, seed: 47 };
+        let pts = run(scale);
+        for &k in &[16usize, 64] {
+            let s = pts.iter().find(|p| p.method == "SOCKET" && p.k == k).unwrap();
+            let h = pts.iter().find(|p| p.method == "LSH" && p.k == k).unwrap();
+            assert!(s.precision >= h.precision - 0.05, "k={k} prec {} vs {}", s.precision, h.precision);
+            assert!(s.ndcg >= h.ndcg - 0.05, "k={k} ndcg {} vs {}", s.ndcg, h.ndcg);
+        }
+    }
+
+    #[test]
+    fn metrics_bounded() {
+        let scale = Scale { n: 256, dim: 32, instances: 1, seed: 3 };
+        for p in run(scale) {
+            assert!((0.0..=1.0).contains(&p.precision));
+            assert!((0.0..=1.0).contains(&p.jaccard));
+            assert!((0.0..=1.0 + 1e-9).contains(&p.ndcg));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Table 1 — RULER-HARD-32K across sparsity levels for the six methods.
+//!
+//! Rows: method x sparsity; columns: nm2, nm3, vt, fwe, qa1, qa2, avg,
+//! plus the method's Mem (bits/token) as in the paper.
+
+use super::{Method, Scale, SPARSITIES_T1};
+use crate::attention::SelectionPolicy;
+use crate::util::{fnum, Table};
+use crate::workload::ruler::{evaluate_selector, RULER_TASKS};
+
+/// Task-score row of one (method, sparsity) cell.
+pub struct RulerRow {
+    pub method: Method,
+    pub sparsity: f64,
+    pub mem_bits: usize,
+    pub scores: Vec<f64>,
+    pub avg: f64,
+}
+
+/// Run the full Table-1 sweep.
+pub fn run(scale: Scale, methods: &[Method], sparsities: &[f64]) -> Vec<RulerRow> {
+    let mut rows = Vec::new();
+    for &sparsity in sparsities {
+        let policy = SelectionPolicy::from_sparsity(scale.n, sparsity, 0, 0);
+        for &method in methods {
+            let mut selector = method.build(scale.dim, scale.seed);
+            let mut scores = Vec::with_capacity(RULER_TASKS.len());
+            for task in RULER_TASKS.iter() {
+                let s = evaluate_selector(
+                    task,
+                    selector.as_mut(),
+                    scale.n,
+                    scale.dim,
+                    policy.k,
+                    scale.instances,
+                    scale.seed ^ (sparsity as u64) << 8,
+                );
+                scores.push(s);
+            }
+            let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+            rows.push(RulerRow {
+                method,
+                sparsity,
+                mem_bits: selector.bits_per_token(),
+                scores,
+                avg,
+            });
+        }
+    }
+    rows
+}
+
+/// Format rows like the paper's Table 1.
+pub fn table(rows: &[RulerRow]) -> Table {
+    let mut header = vec!["Method", "Spr", "Mem"];
+    header.extend(RULER_TASKS.iter().map(|t| t.name));
+    header.push("avg");
+    let mut t = Table::new("Table 1: RULER-HARD across sparsity levels", &header);
+    for row in rows {
+        let mut cells = vec![
+            row.method.name().to_string(),
+            format!("{}x", row.sparsity as u64),
+            row.mem_bits.to_string(),
+        ];
+        cells.extend(row.scores.iter().map(|s| fnum(*s, 1)));
+        cells.push(fnum(row.avg, 1));
+        t.row(cells);
+    }
+    t
+}
+
+/// Default Table-1 reproduction at the given scale.
+pub fn reproduce(scale: Scale) -> Table {
+    table(&run(scale, &Method::TABLE1, &SPARSITIES_T1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { n: 512, dim: 48, instances: 2, seed: 99 }
+    }
+
+    #[test]
+    fn produces_row_per_method_sparsity() {
+        let rows = run(tiny(), &[Method::Socket, Method::Quest], &[10.0, 50.0]);
+        assert_eq!(rows.len(), 4);
+        assert!(rows.iter().all(|r| r.scores.len() == 6));
+    }
+
+    #[test]
+    fn socket_beats_magicpig_at_high_sparsity() {
+        // The paper's headline contrast (Table 1, 50x row).
+        let rows = run(tiny(), &[Method::Socket, Method::MagicPig], &[50.0]);
+        let socket = rows.iter().find(|r| r.method == Method::Socket).unwrap();
+        let magic = rows.iter().find(|r| r.method == Method::MagicPig).unwrap();
+        assert!(
+            socket.avg > magic.avg,
+            "SOCKET {} should beat MagicPig {}",
+            socket.avg,
+            magic.avg
+        );
+    }
+
+    #[test]
+    fn lower_sparsity_not_worse() {
+        let rows = run(tiny(), &[Method::Socket], &[5.0, 50.0]);
+        assert!(rows[0].avg >= rows[1].avg - 5.0, "5x {} vs 50x {}", rows[0].avg, rows[1].avg);
+    }
+
+    #[test]
+    fn table_formats() {
+        let rows = run(tiny(), &[Method::Socket], &[10.0]);
+        let t = table(&rows);
+        let s = t.render();
+        assert!(s.contains("SOCKET"));
+        assert!(s.contains("600"));
+    }
+}

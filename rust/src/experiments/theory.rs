@@ -1,0 +1,295 @@
+//! Theorem 3 + Lemma 4 empirical validation.
+//!
+//! * finite-L error: `‖y_{τ,L} − y_τ‖ ∝ L^{-1/2}` (Lemma 6);
+//! * sampling error: `‖T − y_{τ,L}‖ ∝ M^{-1/2}` (Lemma 7);
+//! * soft-bucketization bias `ε_τ` → 0 as τ → 0 and → 1 − 1/R as
+//!   τ → ∞ (Section B.1);
+//! * Lemma 4 / Appendix C: Γ_hard = C·‖Wq‖₁/√P ≤ C·‖Wq‖₂ ≈ Γ_soft.
+
+use super::Scale;
+use crate::attention::angular::angular_attention;
+use crate::linalg::Matrix;
+use crate::lsh::{LshParams, SoftScorer};
+use crate::util::{fnum, Pcg64, Table};
+
+/// Error of the L-table soft-count attention vs its large-L limit proxy.
+pub struct FiniteLPoint {
+    pub l: usize,
+    pub err: f64,
+    /// err * sqrt(L) — should be roughly constant if err ∝ L^{-1/2}.
+    pub err_sqrt_l: f64,
+}
+
+/// Soft-count attention output y_{τ,L} for given params.
+fn soft_attention(
+    params: LshParams,
+    q: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    seed: u64,
+) -> Vec<f32> {
+    let scorer = SoftScorer::new(params, keys.cols, seed);
+    let hashes = scorer.hash_keys(keys, values);
+    let a = scorer.normalized_weights(q, &hashes);
+    let mut out = vec![0.0f32; values.cols];
+    for j in 0..keys.rows {
+        if a[j] != 0.0 {
+            crate::linalg::add_scaled(&mut out, values.row(j), a[j]);
+        }
+    }
+    out
+}
+
+/// Finite-L error sweep. The reference is y_{τ,L*} at a large L* (the
+/// population limit is not available in closed form).
+pub fn finite_l_sweep(scale: Scale, ls: &[usize], tau: f32, p: usize) -> Vec<FiniteLPoint> {
+    let mut rng = Pcg64::new(scale.seed, 71);
+    let n = scale.n.min(512);
+    let keys = Matrix::gaussian(n, scale.dim, &mut rng);
+    let values = Matrix::gaussian(n, scale.dim, &mut rng);
+    let q = rng.normal_vec(scale.dim);
+    let l_star = ls.iter().max().unwrap() * 8;
+    let y_ref = soft_attention(LshParams { p, l: l_star, tau }, &q, &keys, &values, scale.seed ^ 1);
+    let n_seeds = 4;
+    ls.iter()
+        .map(|&l| {
+            let mut err_acc = 0.0;
+            for s in 0..n_seeds {
+                let y = soft_attention(
+                    LshParams { p, l, tau },
+                    &q,
+                    &keys,
+                    &values,
+                    scale.seed ^ (s as u64 * 131 + 7),
+                );
+                err_acc += crate::metrics::output_error(&y, &y_ref);
+            }
+            let err = err_acc / n_seeds as f64;
+            FiniteLPoint { l, err, err_sqrt_l: err * (l as f64).sqrt() }
+        })
+        .collect()
+}
+
+/// ε_τ(q) = E[1 − p_τ(b_q | q)]: the soft-bucketization bias, measured
+/// by Monte Carlo over tables.
+pub fn epsilon_tau(scale: Scale, p: usize, taus: &[f32]) -> Vec<(f32, f64)> {
+    let mut rng = Pcg64::new(scale.seed, 73);
+    let q = rng.normal_vec(scale.dim);
+    taus.iter()
+        .map(|&tau| {
+            let l = 200; // tables to average over
+            let scorer = SoftScorer::new(LshParams { p, l, tau }, scale.dim, scale.seed ^ 11);
+            let probs = scorer.hasher.bucket_probs(&q);
+            let mut acc = 0.0;
+            for t in 0..l {
+                let hard = scorer.hasher.simhash().bucket_of(t, &q) as usize;
+                acc += 1.0 - probs.table(t)[hard] as f64;
+            }
+            (tau, acc / l as f64)
+        })
+        .collect()
+}
+
+/// Sampling-estimator error vs M (eq. 6): T(q) = (1/M) Σ ã_{J}/p_{J} v_J
+/// with p_j ∝ ã_j‖v_j‖.
+pub fn sampling_sweep(scale: Scale, ms: &[usize]) -> Vec<(usize, f64)> {
+    let mut rng = Pcg64::new(scale.seed, 79);
+    let n = scale.n.min(512);
+    let keys = Matrix::gaussian(n, scale.dim, &mut rng);
+    let values = Matrix::gaussian(n, scale.dim, &mut rng);
+    let q = rng.normal_vec(scale.dim);
+    let params = LshParams::paper_default();
+    let scorer = SoftScorer::new(params, scale.dim, scale.seed ^ 3);
+    let hashes = scorer.hash_keys(&keys, &values);
+    let a = scorer.normalized_weights(&q, &hashes);
+    // y_{τ,L}
+    let mut y_ref = vec![0.0f32; values.cols];
+    for j in 0..n {
+        crate::linalg::add_scaled(&mut y_ref, values.row(j), a[j]);
+    }
+    // Sampling distribution p_j ∝ ã_j ‖v_j‖.
+    let norms = values.row_norms();
+    let weights: Vec<f32> = (0..n).map(|j| a[j] * norms[j]).collect();
+    let n_trials = 8;
+    ms.iter()
+        .map(|&m| {
+            let mut err_acc = 0.0;
+            for trial in 0..n_trials {
+                let mut trng = Pcg64::new(scale.seed ^ 0xAB, trial as u64 * 997 + m as u64);
+                let s1: f32 = weights.iter().sum();
+                let mut t_est = vec![0.0f32; values.cols];
+                for _ in 0..m {
+                    let j = trng.categorical(&weights);
+                    let pj = weights[j] / s1;
+                    let coef = a[j] / pj / m as f32;
+                    crate::linalg::add_scaled(&mut t_est, values.row(j), coef);
+                }
+                err_acc += crate::metrics::output_error(&t_est, &y_ref);
+            }
+            (m, err_acc / n_trials as f64)
+        })
+        .collect()
+}
+
+/// Lemma 4 / Appendix C correlations: Γ_hard = C‖Wq‖₁/√P vs
+/// Γ_soft ≈ C‖Wq‖₂ — verified by Monte Carlo over Gaussian keys.
+pub struct LemmaPoint {
+    pub p: usize,
+    pub gamma_hard_theory: f64,
+    pub gamma_hard_mc: f64,
+    pub gamma_soft_theory: f64,
+    pub gamma_soft_mc: f64,
+}
+
+pub fn lemma4_check(scale: Scale, ps: &[usize]) -> Vec<LemmaPoint> {
+    let c = (2.0 / std::f64::consts::PI).sqrt();
+    let mut out = Vec::new();
+    for &p in ps {
+        let mut rng = Pcg64::new(scale.seed, p as u64 + 101);
+        let d = scale.dim;
+        // Orthonormal planes W (P x d) via Gram-Schmidt on Gaussians.
+        let mut planes: Vec<Vec<f32>> = Vec::new();
+        while planes.len() < p {
+            let mut v = rng.normal_vec(d);
+            for u in &planes {
+                let dot: f32 = v.iter().zip(u).map(|(a, b)| a * b).sum();
+                for i in 0..d {
+                    v[i] -= dot * u[i];
+                }
+            }
+            crate::linalg::normalize(&mut v);
+            planes.push(v);
+        }
+        let q = crate::testing::gen::unit_vec(&mut rng, d);
+        let wq: Vec<f32> = planes.iter().map(|w| crate::linalg::dot(w, &q)).collect();
+        let l1 = crate::linalg::l1_norm(&wq) as f64;
+        let l2 = crate::linalg::l2_norm(&wq) as f64;
+        let gamma_hard_theory = c * l1 / (p as f64).sqrt();
+        let gamma_soft_theory = c * l2;
+        // Monte Carlo: corr(X, Y) over Gaussian keys for both scorings.
+        let n_mc = 60_000;
+        let (mut sxy_h, mut syy_h) = (0.0f64, 0.0f64);
+        let (mut sxy_s, mut syy_s) = (0.0f64, 0.0f64);
+        let mut sxx = 0.0f64;
+        let s_hard: Vec<f32> = wq.iter().map(|x| x.signum()).collect();
+        let s_soft: Vec<f32> = wq.iter().map(|x| x.tanh()).collect();
+        for _ in 0..n_mc {
+            let k = rng.normal_vec(d);
+            let x = crate::linalg::dot(&q, &k) as f64;
+            let mut yh = 0.0f64;
+            let mut ys = 0.0f64;
+            for i in 0..p {
+                let sgn = if crate::linalg::dot(&planes[i], &k) >= 0.0 { 1.0f64 } else { -1.0 };
+                yh += sgn * s_hard[i] as f64;
+                ys += sgn * s_soft[i] as f64;
+            }
+            sxx += x * x;
+            sxy_h += x * yh;
+            syy_h += yh * yh;
+            sxy_s += x * ys;
+            syy_s += ys * ys;
+        }
+        let gamma_hard_mc = sxy_h / (sxx.sqrt() * syy_h.sqrt());
+        let gamma_soft_mc = sxy_s / (sxx.sqrt() * syy_s.sqrt());
+        out.push(LemmaPoint { p, gamma_hard_theory, gamma_hard_mc, gamma_soft_theory, gamma_soft_mc });
+    }
+    out
+}
+
+pub fn finite_l_table(points: &[FiniteLPoint]) -> Table {
+    let mut t = Table::new(
+        "Theorem 3: finite-L error (err·√L ≈ const ⇔ err ∝ L^-1/2)",
+        &["L", "err", "err·√L"],
+    );
+    for p in points {
+        t.row(vec![p.l.to_string(), format!("{:.4e}", p.err), fnum(p.err_sqrt_l, 4)]);
+    }
+    t
+}
+
+pub fn lemma4_table(points: &[LemmaPoint]) -> Table {
+    let mut t = Table::new(
+        "Lemma 4 / App. C: Γ_hard = C·||Wq||₁/√P  vs  Γ_soft ≈ C·||Wq||₂",
+        &["P", "Γ_hard theory", "Γ_hard MC", "Γ_soft theory", "Γ_soft MC"],
+    );
+    for p in points {
+        t.row(vec![
+            p.p.to_string(),
+            fnum(p.gamma_hard_theory, 4),
+            fnum(p.gamma_hard_mc, 4),
+            fnum(p.gamma_soft_theory, 4),
+            fnum(p.gamma_soft_mc, 4),
+        ]);
+    }
+    t
+}
+
+/// Angular-attention proximity: the soft-count output approaches the
+/// angular target as L grows (the qualitative content of Theorem 3).
+pub fn angular_gap(scale: Scale, ls: &[usize]) -> Vec<(usize, f64)> {
+    let mut rng = Pcg64::new(scale.seed, 83);
+    let n = scale.n.min(512);
+    let keys = Matrix::gaussian(n, scale.dim, &mut rng);
+    let values = Matrix::gaussian(n, scale.dim, &mut rng);
+    let q = rng.normal_vec(scale.dim);
+    let p = 6;
+    let tau = 0.15; // small τ: low bucketization bias
+    let y_star = angular_attention(&q, &keys, &values, p);
+    ls.iter()
+        .map(|&l| {
+            let y = soft_attention(LshParams { p, l, tau }, &q, &keys, &values, scale.seed ^ 5);
+            (l, crate::metrics::output_error(&y, &y_star))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Scale {
+        Scale { n: 256, dim: 32, instances: 1, seed: 91 }
+    }
+
+    #[test]
+    fn finite_l_error_decays_at_root_rate() {
+        let pts = finite_l_sweep(tiny(), &[5, 20, 80], 0.5, 6);
+        assert!(pts[2].err < pts[0].err, "err should fall with L");
+        // err·√L within a factor ~2.5 across a 16x L range.
+        let ratio = pts[0].err_sqrt_l / pts[2].err_sqrt_l;
+        assert!((0.4..=2.5).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn epsilon_tau_limits() {
+        let s = tiny();
+        let eps = epsilon_tau(s, 4, &[0.01, 0.5, 100.0]);
+        assert!(eps[0].1 < 0.05, "τ→0 bias {} should vanish", eps[0].1);
+        let r = 16.0;
+        assert!((eps[2].1 - (1.0 - 1.0 / r)).abs() < 0.05, "τ→∞ bias {} → 1-1/R", eps[2].1);
+        assert!(eps[0].1 < eps[1].1 && eps[1].1 < eps[2].1, "monotone in τ");
+    }
+
+    #[test]
+    fn sampling_error_decays_with_m() {
+        let pts = sampling_sweep(tiny(), &[8, 128]);
+        assert!(pts[1].1 < pts[0].1, "M=128 {} should beat M=8 {}", pts[1].1, pts[0].1);
+    }
+
+    #[test]
+    fn lemma4_mc_matches_theory_and_soft_wins() {
+        let pts = lemma4_check(tiny(), &[4, 8]);
+        for p in &pts {
+            assert!((p.gamma_hard_mc - p.gamma_hard_theory).abs() < 0.03, "hard MC {} vs {}", p.gamma_hard_mc, p.gamma_hard_theory);
+            // tanh ≈ linear in small-signal regime: soft MC near theory.
+            assert!((p.gamma_soft_mc - p.gamma_soft_theory).abs() < 0.05, "soft MC {} vs {}", p.gamma_soft_mc, p.gamma_soft_theory);
+            assert!(p.gamma_soft_mc >= p.gamma_hard_mc - 0.02, "soft should dominate");
+        }
+    }
+
+    #[test]
+    fn soft_count_approaches_angular() {
+        let gaps = angular_gap(tiny(), &[4, 64]);
+        assert!(gaps[1].1 < gaps[0].1, "gap should shrink with L: {gaps:?}");
+    }
+}

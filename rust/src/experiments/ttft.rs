@@ -1,0 +1,76 @@
+//! Figure 3a — time-to-first-token of the indexers: SOCKET's
+//! data-agnostic random-projection hashing vs PQCache's k-means
+//! clustering, as a function of context length.
+//!
+//! TTFT for a sparse method = prefill compute + index build; the index
+//! build is what differs, so we measure exactly that (both run on the
+//! same Rust substrate, so relative shape is meaningful).
+
+use super::Scale;
+use crate::baselines::{pqcache::PqCacheSelector, SocketSelector, TokenSelector};
+use crate::linalg::Matrix;
+use crate::lsh::LshParams;
+use crate::util::{fnum, time_ms, Pcg64, Table};
+
+pub struct TtftPoint {
+    pub n: usize,
+    pub socket_ms: f64,
+    pub pqcache_ms: f64,
+}
+
+pub fn run(scale: Scale, context_lengths: &[usize]) -> Vec<TtftPoint> {
+    let mut out = Vec::new();
+    for &n in context_lengths {
+        let mut rng = Pcg64::new(scale.seed, n as u64);
+        let keys = Matrix::gaussian(n, scale.dim, &mut rng);
+        let vals = Matrix::gaussian(n, scale.dim, &mut rng);
+        let mut socket = SocketSelector::new(LshParams::paper_default(), scale.dim, scale.seed);
+        let (_, socket_ms) = time_ms(|| socket.build(&keys, &vals));
+        let m = (scale.dim / 4).min(32).max(1);
+        let mut pq = PqCacheSelector::new(m, 8, scale.seed);
+        let (_, pqcache_ms) = time_ms(|| pq.build(&keys, &vals));
+        out.push(TtftPoint { n, socket_ms, pqcache_ms });
+    }
+    out
+}
+
+pub fn table(points: &[TtftPoint]) -> Table {
+    let mut t = Table::new(
+        "Figure 3a: indexer TTFT — SOCKET (hashing) vs PQCache (k-means)",
+        &["Context", "SOCKET (ms)", "PQCache (ms)", "Speedup"],
+    );
+    for p in points {
+        t.row(vec![
+            p.n.to_string(),
+            fnum(p.socket_ms, 1),
+            fnum(p.pqcache_ms, 1),
+            format!("{}x", fnum(p.pqcache_ms / p.socket_ms.max(1e-9), 1)),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hashing_faster_than_kmeans() {
+        // Fig. 3a's claim: data-agnostic hashing yields much faster TTFT.
+        let scale = Scale { n: 0, dim: 64, instances: 1, seed: 3 };
+        let pts = run(scale, &[2048]);
+        assert!(
+            pts[0].pqcache_ms > pts[0].socket_ms,
+            "kmeans {}ms should exceed hashing {}ms",
+            pts[0].pqcache_ms,
+            pts[0].socket_ms
+        );
+    }
+
+    #[test]
+    fn ttft_grows_with_context() {
+        let scale = Scale { n: 0, dim: 32, instances: 1, seed: 4 };
+        let pts = run(scale, &[512, 4096]);
+        assert!(pts[1].socket_ms > pts[0].socket_ms * 2.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! KV-cache management: paged storage for keys/values plus the SOCKET
+//! side-cars (packed hash signatures and value norms) that Algorithm 1
+//! caches at prefill and extends at every decode step.
+
+pub mod paged;
+pub mod store;
+
+pub use paged::{PageTable, PagedKvCache, PAGE_TOKENS};
+pub use store::{HashStore, LayerCache, SequenceCache};

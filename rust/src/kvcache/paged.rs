@@ -1,0 +1,228 @@
+//! Paged KV storage (vLLM-style): fixed-size token pages allocated from
+//! a shared pool, so many sequences share GPU/host memory without
+//! fragmentation. The coordinator maps logical token positions to
+//! physical pages through a per-sequence [`PageTable`].
+
+/// Tokens per page. 16 matches vLLM's default block size.
+pub const PAGE_TOKENS: usize = 16;
+
+/// Physical page pool holding K and V for all sequences.
+#[derive(Debug)]
+pub struct PagedKvCache {
+    /// Head dimension (per-token K/V width).
+    pub dim: usize,
+    /// Number of physical pages.
+    capacity_pages: usize,
+    /// K storage: capacity_pages x PAGE_TOKENS x dim.
+    k: Vec<f32>,
+    /// V storage, same layout.
+    v: Vec<f32>,
+    free_list: Vec<usize>,
+}
+
+/// Per-sequence logical→physical mapping plus the token count.
+#[derive(Clone, Debug, Default)]
+pub struct PageTable {
+    pub pages: Vec<usize>,
+    pub n_tokens: usize,
+}
+
+impl PageTable {
+    /// Physical (page, slot) of a logical token index.
+    #[inline]
+    pub fn locate(&self, token: usize) -> (usize, usize) {
+        assert!(token < self.n_tokens, "token {token} out of range {}", self.n_tokens);
+        (self.pages[token / PAGE_TOKENS], token % PAGE_TOKENS)
+    }
+}
+
+impl PagedKvCache {
+    pub fn new(capacity_pages: usize, dim: usize) -> PagedKvCache {
+        PagedKvCache {
+            dim,
+            capacity_pages,
+            k: vec![0.0; capacity_pages * PAGE_TOKENS * dim],
+            v: vec![0.0; capacity_pages * PAGE_TOKENS * dim],
+            free_list: (0..capacity_pages).rev().collect(),
+        }
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free_list.len()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.capacity_pages
+    }
+
+    /// Pages needed to hold `n` tokens.
+    pub fn pages_for(n: usize) -> usize {
+        n.div_ceil(PAGE_TOKENS)
+    }
+
+    /// Append one token's K/V to a sequence, allocating a page on
+    /// boundary crossings. Returns false (and leaves state unchanged) if
+    /// the pool is exhausted — the backpressure signal the scheduler
+    /// watches.
+    pub fn append(&mut self, table: &mut PageTable, key: &[f32], value: &[f32]) -> bool {
+        assert_eq!(key.len(), self.dim);
+        assert_eq!(value.len(), self.dim);
+        let slot = table.n_tokens % PAGE_TOKENS;
+        if slot == 0 {
+            match self.free_list.pop() {
+                Some(p) => table.pages.push(p),
+                None => return false,
+            }
+        }
+        let page = *table.pages.last().unwrap();
+        let off = (page * PAGE_TOKENS + slot) * self.dim;
+        self.k[off..off + self.dim].copy_from_slice(key);
+        self.v[off..off + self.dim].copy_from_slice(value);
+        table.n_tokens += 1;
+        true
+    }
+
+    /// Bulk prefill append; returns tokens actually written.
+    pub fn append_many(&mut self, table: &mut PageTable, keys: &[f32], values: &[f32]) -> usize {
+        let n = keys.len() / self.dim;
+        for t in 0..n {
+            if !self.append(table, &keys[t * self.dim..(t + 1) * self.dim], &values[t * self.dim..(t + 1) * self.dim]) {
+                return t;
+            }
+        }
+        n
+    }
+
+    #[inline]
+    pub fn key(&self, table: &PageTable, token: usize) -> &[f32] {
+        let (page, slot) = table.locate(token);
+        let off = (page * PAGE_TOKENS + slot) * self.dim;
+        &self.k[off..off + self.dim]
+    }
+
+    #[inline]
+    pub fn value(&self, table: &PageTable, token: usize) -> &[f32] {
+        let (page, slot) = table.locate(token);
+        let off = (page * PAGE_TOKENS + slot) * self.dim;
+        &self.v[off..off + self.dim]
+    }
+
+    /// Release a sequence's pages back to the pool.
+    pub fn release(&mut self, table: &mut PageTable) {
+        self.free_list.extend(table.pages.drain(..));
+        table.n_tokens = 0;
+    }
+
+    /// Gather selected tokens' K/V into dense matrices (what the sparse
+    /// attention kernel consumes).
+    pub fn gather(
+        &self,
+        table: &PageTable,
+        selected: &[usize],
+    ) -> (crate::linalg::Matrix, crate::linalg::Matrix) {
+        let mut keys = crate::linalg::Matrix::zeros(selected.len(), self.dim);
+        let mut values = crate::linalg::Matrix::zeros(selected.len(), self.dim);
+        for (i, &t) in selected.iter().enumerate() {
+            keys.row_mut(i).copy_from_slice(self.key(table, t));
+            values.row_mut(i).copy_from_slice(self.value(table, t));
+        }
+        (keys, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::check_default;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn append_and_read_back() {
+        let mut cache = PagedKvCache::new(4, 8);
+        let mut table = PageTable::default();
+        let mut rng = Pcg64::seeded(1);
+        let mut expected = Vec::new();
+        for _ in 0..40 {
+            let k = rng.normal_vec(8);
+            let v = rng.normal_vec(8);
+            assert!(cache.append(&mut table, &k, &v));
+            expected.push((k, v));
+        }
+        for (t, (k, v)) in expected.iter().enumerate() {
+            assert_eq!(cache.key(&table, t), k.as_slice());
+            assert_eq!(cache.value(&table, t), v.as_slice());
+        }
+        assert_eq!(table.pages.len(), 3); // ceil(40/16)
+        assert_eq!(cache.free_pages(), 1);
+    }
+
+    #[test]
+    fn exhaustion_returns_false_and_preserves_state() {
+        let mut cache = PagedKvCache::new(1, 4);
+        let mut table = PageTable::default();
+        let k = [0.0; 4];
+        for _ in 0..PAGE_TOKENS {
+            assert!(cache.append(&mut table, &k, &k));
+        }
+        assert!(!cache.append(&mut table, &k, &k));
+        assert_eq!(table.n_tokens, PAGE_TOKENS);
+    }
+
+    #[test]
+    fn release_recycles_pages() {
+        let mut cache = PagedKvCache::new(2, 4);
+        let mut a = PageTable::default();
+        let k = [1.0; 4];
+        for _ in 0..32 {
+            assert!(cache.append(&mut a, &k, &k));
+        }
+        assert_eq!(cache.free_pages(), 0);
+        cache.release(&mut a);
+        assert_eq!(cache.free_pages(), 2);
+        assert_eq!(a.n_tokens, 0);
+        // Reuse by another sequence.
+        let mut b = PageTable::default();
+        assert!(cache.append(&mut b, &k, &k));
+    }
+
+    #[test]
+    fn gather_selected() {
+        let mut cache = PagedKvCache::new(4, 2);
+        let mut table = PageTable::default();
+        for t in 0..20 {
+            let k = [t as f32, 0.0];
+            cache.append(&mut table, &k, &k);
+        }
+        let (keys, _vals) = cache.gather(&table, &[0, 7, 19]);
+        assert_eq!(keys.get(0, 0), 0.0);
+        assert_eq!(keys.get(1, 0), 7.0);
+        assert_eq!(keys.get(2, 0), 19.0);
+    }
+
+    #[test]
+    fn prop_interleaved_sequences_do_not_corrupt() {
+        check_default("paged-isolation", |rng, _| {
+            let dim = 4;
+            let mut cache = PagedKvCache::new(64, dim);
+            let mut tables = vec![PageTable::default(), PageTable::default(), PageTable::default()];
+            let mut logs: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 3];
+            for _ in 0..200 {
+                let s = rng.below_usize(3);
+                let k = rng.normal_vec(dim);
+                if cache.append(&mut tables[s], &k, &k) {
+                    logs[s].push(k);
+                }
+            }
+            for s in 0..3 {
+                for (t, k) in logs[s].iter().enumerate() {
+                    prop_assert!(
+                        cache.key(&tables[s], t) == k.as_slice(),
+                        "seq {s} token {t} corrupted"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,191 @@
+//! SOCKET cache side-cars: per-sequence packed hash signatures + value
+//! norms (Algorithm 1 outputs), layered per attention layer / KV head.
+
+use crate::linalg::Matrix;
+use crate::lsh::{KeyHashes, LshParams, SoftScorer};
+
+/// Packed hash signatures for one (layer, head) stream of one sequence.
+/// Thin wrapper around [`KeyHashes`] with incremental append.
+#[derive(Clone, Debug)]
+pub struct HashStore {
+    pub hashes: KeyHashes,
+}
+
+impl HashStore {
+    pub fn empty(l: usize) -> HashStore {
+        HashStore { hashes: KeyHashes { n: 0, l, bucket_ids: Vec::new(), value_norms: Vec::new() } }
+    }
+
+    pub fn len(&self) -> usize {
+        self.hashes.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hashes.n == 0
+    }
+
+    /// Bits used by the signatures (paper's memory accounting).
+    pub fn bits(&self, params: &LshParams) -> usize {
+        self.hashes.n * params.memory().bits_per_token
+    }
+}
+
+/// All SOCKET state of one attention layer for one sequence: the scorer
+/// (shared hyperplanes) plus the hash store.
+pub struct LayerCache {
+    pub scorer: SoftScorer,
+    pub store: HashStore,
+}
+
+impl LayerCache {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> LayerCache {
+        LayerCache { scorer: SoftScorer::new(params, dim, seed), store: HashStore::empty(params.l) }
+    }
+
+    /// Prefill: hash a block of keys (Algorithm 1).
+    pub fn prefill(&mut self, keys: &Matrix, values: &Matrix) {
+        let hashed = self.scorer.hash_keys(keys, values);
+        if self.store.is_empty() {
+            self.store.hashes = hashed;
+        } else {
+            for j in 0..hashed.n {
+                self.store.hashes.push(hashed.key_row(j), hashed.value_norms[j]);
+            }
+        }
+    }
+
+    /// Decode: hash the single new token's key and append.
+    pub fn append_token(&mut self, key: &[f32], value: &[f32]) {
+        let buckets = self.scorer.hasher.simhash().hash_one(key);
+        let norm = crate::linalg::l2_norm(value);
+        self.store.hashes.push(&buckets, norm);
+    }
+
+    /// Top-k selection against the current store (Algorithms 2–4).
+    pub fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+        self.scorer.select_top_k(q, &self.store.hashes, k)
+    }
+}
+
+/// Full-model SOCKET state of one sequence: one [`LayerCache`] per
+/// (layer x kv-head) stream.
+pub struct SequenceCache {
+    pub layers: Vec<LayerCache>,
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+}
+
+impl SequenceCache {
+    pub fn new(params: LshParams, head_dim: usize, n_layers: usize, n_kv_heads: usize, seed: u64) -> SequenceCache {
+        let mut layers = Vec::with_capacity(n_layers * n_kv_heads);
+        for l in 0..n_layers {
+            for h in 0..n_kv_heads {
+                // Hyperplanes differ per stream (independent tables).
+                layers.push(LayerCache::new(params, head_dim, seed ^ ((l * 1009 + h) as u64) << 17));
+            }
+        }
+        SequenceCache { layers, n_layers, n_kv_heads }
+    }
+
+    #[inline]
+    pub fn layer(&mut self, layer: usize, head: usize) -> &mut LayerCache {
+        &mut self.layers[layer * self.n_kv_heads + head]
+    }
+
+    #[inline]
+    pub fn layer_ref(&self, layer: usize, head: usize) -> &LayerCache {
+        &self.layers[layer * self.n_kv_heads + head]
+    }
+
+    /// Total signature memory in bits (≈15% of KV in the paper's setup).
+    pub fn total_bits(&self, params: &LshParams) -> usize {
+        self.layers.iter().map(|lc| lc.store.bits(params)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn params() -> LshParams {
+        LshParams { p: 6, l: 8, tau: 0.5 }
+    }
+
+    #[test]
+    fn prefill_then_append_consistent() {
+        let dim = 16;
+        let mut lc = LayerCache::new(params(), dim, 9);
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(10, dim, &mut rng);
+        let vals = Matrix::gaussian(10, dim, &mut rng);
+        lc.prefill(&keys, &vals);
+        assert_eq!(lc.store.len(), 10);
+        let k_new = rng.normal_vec(dim);
+        let v_new = rng.normal_vec(dim);
+        lc.append_token(&k_new, &v_new);
+        assert_eq!(lc.store.len(), 11);
+        // The appended signature equals a fresh hash of the same key.
+        let expect = lc.scorer.hasher.simhash().hash_one(&k_new);
+        assert_eq!(lc.store.hashes.key_row(10), expect.as_slice());
+    }
+
+    #[test]
+    fn incremental_prefill_matches_bulk() {
+        let dim = 8;
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(20, dim, &mut rng);
+        let vals = Matrix::gaussian(20, dim, &mut rng);
+        let mut bulk = LayerCache::new(params(), dim, 5);
+        bulk.prefill(&keys, &vals);
+        let mut inc = LayerCache::new(params(), dim, 5);
+        // two chunks
+        let k1 = Matrix::from_vec(12, dim, keys.data[..12 * dim].to_vec());
+        let v1 = Matrix::from_vec(12, dim, vals.data[..12 * dim].to_vec());
+        let k2 = Matrix::from_vec(8, dim, keys.data[12 * dim..].to_vec());
+        let v2 = Matrix::from_vec(8, dim, vals.data[12 * dim..].to_vec());
+        inc.prefill(&k1, &v1);
+        inc.prefill(&k2, &v2);
+        assert_eq!(bulk.store.hashes.bucket_ids, inc.store.hashes.bucket_ids);
+    }
+
+    #[test]
+    fn select_uses_all_tokens() {
+        let dim = 16;
+        let mut lc = LayerCache::new(params(), dim, 3);
+        let mut rng = Pcg64::seeded(3);
+        let keys = Matrix::gaussian(30, dim, &mut rng);
+        let vals = Matrix::gaussian(30, dim, &mut rng);
+        lc.prefill(&keys, &vals);
+        let sel = lc.select(&rng.normal_vec(dim), 5);
+        assert_eq!(sel.len(), 5);
+        assert!(sel.iter().all(|&i| i < 30));
+    }
+
+    #[test]
+    fn sequence_cache_streams_are_independent() {
+        let mut sc = SequenceCache::new(params(), 8, 2, 2, 11);
+        let mut rng = Pcg64::seeded(4);
+        let keys = Matrix::gaussian(5, 8, &mut rng);
+        let vals = Matrix::gaussian(5, 8, &mut rng);
+        sc.layer(0, 0).prefill(&keys, &vals);
+        assert_eq!(sc.layer_ref(0, 0).store.len(), 5);
+        assert_eq!(sc.layer_ref(1, 1).store.len(), 0);
+        // Different streams draw different hyperplanes.
+        let q = rng.normal_vec(8);
+        let b00 = sc.layer_ref(0, 0).scorer.hasher.simhash().hash_one(&q);
+        let b11 = sc.layer_ref(1, 1).scorer.hasher.simhash().hash_one(&q);
+        assert_ne!(b00, b11);
+    }
+
+    #[test]
+    fn memory_accounting_scales_with_tokens() {
+        let p = params();
+        let mut lc = LayerCache::new(p, 8, 1);
+        let mut rng = Pcg64::seeded(5);
+        let keys = Matrix::gaussian(100, 8, &mut rng);
+        let vals = Matrix::gaussian(100, 8, &mut rng);
+        lc.prefill(&keys, &vals);
+        assert_eq!(lc.store.bits(&p), 100 * 48); // P*L = 48 bits/token
+    }
+}

@@ -1,0 +1,36 @@
+//! # socket-attn
+//!
+//! Full-system reproduction of **SOCKET: SOft Collision Kernel EsTimator
+//! for Sparse Attention** (Joshi et al., 2026).
+//!
+//! The crate is the Layer-3 (coordination) half of a three-layer stack:
+//!
+//! * **L1** — Pallas scoring / soft-hash / flash-decode kernels
+//!   (`python/compile/kernels/`, build time only).
+//! * **L2** — JAX transformer decode graph calling the kernels, lowered
+//!   once to HLO text artifacts (`python/compile/model.py`, `aot.py`).
+//! * **L3** — this crate: request router, continuous batcher,
+//!   prefill/decode scheduler, paged KV + hash-table cache, and a PJRT
+//!   runtime that loads the artifacts and executes them on the hot path
+//!   (Python is never on the request path).
+//!
+//! In addition to the SOCKET scorer itself, the crate implements every
+//! substrate the paper's evaluation depends on: hard-LSH and five other
+//! sparse-attention baselines, ranking/attention metrics, synthetic
+//! RULER/LongBench-analog workloads, and one experiment driver per paper
+//! table and figure (see `experiments`).
+
+pub mod attention;
+pub mod baselines;
+pub mod coordinator;
+pub mod experiments;
+pub mod kvcache;
+pub mod linalg;
+pub mod lsh;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod testing;
+pub mod util;
+pub mod workload;

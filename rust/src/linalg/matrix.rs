@@ -1,0 +1,163 @@
+//! Row-major matrix wrapper used for keys/values/projection planes.
+
+use crate::util::rng::Pcg64;
+
+/// Row-major dense matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. standard Gaussian entries — the SimHash hyperplane draw.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Pcg64) -> Matrix {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self (rows x cols) * v (cols)` -> rows.
+    pub fn matvec(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0; self.rows];
+        super::ops::matvec(&self.data, self.rows, self.cols, v, &mut out);
+        out
+    }
+
+    /// Dense matmul (small sizes only; used in tests and reference paths).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows);
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    /// Per-row L2 norms.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows).map(|r| super::ops::l2_norm(self.row(r))).collect()
+    }
+
+    /// Spectral norm estimate by power iteration (used for ||V||_2 in the
+    /// Theorem-3 validation bench).
+    pub fn spectral_norm(&self, iters: usize, rng: &mut Pcg64) -> f32 {
+        let mut v = rng.normal_vec(self.cols);
+        super::ops::normalize(&mut v);
+        for _ in 0..iters {
+            // v <- A^T A v / ||.|| (power iteration on A^T A).
+            let u = self.matvec(&v);
+            let mut vt = vec![0.0; self.cols];
+            for r in 0..self.rows {
+                let ur = u[r];
+                if ur != 0.0 {
+                    for c in 0..self.cols {
+                        vt[c] += ur * self.get(r, c);
+                    }
+                }
+            }
+            let n = super::ops::l2_norm(&vt);
+            if n == 0.0 {
+                return 0.0;
+            }
+            for c in 0..self.cols {
+                vt[c] /= n;
+            }
+            v = vt;
+        }
+        // sigma = ||A v|| at the converged right singular vector.
+        let u = self.matvec(&v);
+        super::ops::l2_norm(&u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let id = Matrix::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&id), a);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 1.0, -1.0]);
+        let y = a.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::seeded(2);
+        let a = Matrix::gaussian(3, 5, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn spectral_norm_of_scaled_identity() {
+        let mut rng = Pcg64::seeded(4);
+        let mut a = Matrix::zeros(4, 4);
+        for i in 0..4 {
+            a.set(i, i, 3.0);
+        }
+        let s = a.spectral_norm(50, &mut rng);
+        assert!((s - 3.0).abs() < 1e-3, "s={s}");
+    }
+
+    #[test]
+    fn row_norms_match() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 4.0, 0.0, 2.0]);
+        let n = a.row_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense linear algebra helpers: row-major matrices, vector ops,
+//! numerically stable softmax, and top-k selection.
+
+pub mod matrix;
+pub mod ops;
+pub mod topk;
+
+pub use matrix::Matrix;
+pub use ops::{add_scaled, argmax, dot, l1_norm, l2_norm, matvec, normalize, scale, softmax, softmax_inplace};
+pub use topk::{top_k_indices, top_k_threshold, TopK};

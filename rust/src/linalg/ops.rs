@@ -1,0 +1,167 @@
+//! Vector primitives. All hot-path loops are written over slices so the
+//! compiler can autovectorize; there are no allocations except where a
+//! result vector is returned.
+
+/// Inner product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-lane manual unroll — measurably faster than the naive loop on
+    // the scoring hot path (see EXPERIMENTS.md §Perf).
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    for j in chunks * 4..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc + s0 + s1 + s2 + s3
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn l2_norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// L1 norm.
+#[inline]
+pub fn l1_norm(a: &[f32]) -> f32 {
+    a.iter().map(|x| x.abs()).sum()
+}
+
+/// In-place scale.
+pub fn scale(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+/// `out += s * a`.
+pub fn add_scaled(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    for i in 0..out.len() {
+        out[i] += s * a[i];
+    }
+}
+
+/// Normalize to unit L2 norm (no-op on zero vectors).
+pub fn normalize(a: &mut [f32]) {
+    let n = l2_norm(a);
+    if n > 0.0 {
+        scale(a, 1.0 / n);
+    }
+}
+
+/// Index of the maximum element (first on ties). Panics on empty input.
+pub fn argmax(a: &[f32]) -> usize {
+    assert!(!a.is_empty());
+    let mut best = 0;
+    for i in 1..a.len() {
+        if a[i] > a[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Numerically stable softmax, returned as a new vector.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let mut out = logits.to_vec();
+    softmax_inplace(&mut out);
+    out
+}
+
+/// Numerically stable in-place softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    if sum > 0.0 {
+        for v in x.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Dense matrix-vector product: `m` is row-major (rows x cols).
+pub fn matvec(m: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(m.len(), rows * cols);
+    debug_assert_eq!(v.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for r in 0..rows {
+        out[r] = dot(&m[r * cols..(r + 1) * cols], v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((l1_norm(&[-3.0, 4.0]) - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_shift_invariant() {
+        let a = softmax(&[1.0, 2.0, 3.0]);
+        let b = softmax(&[1001.0, 1002.0, 1003.0]);
+        assert!((a.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        for i in 0..3 {
+            assert!((a[i] - b[i]).abs() < 1e-6);
+        }
+        assert!(a[2] > a[1] && a[1] > a[0]);
+    }
+
+    #[test]
+    fn softmax_handles_neg_infinity_mask() {
+        let a = softmax(&[0.0, f32::NEG_INFINITY, 0.0]);
+        assert_eq!(a[1], 0.0);
+        assert!((a[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let m = [1.0, 0.0, 0.0, 1.0];
+        let mut out = [0.0; 2];
+        matvec(&m, 2, 2, &[7.0, -2.0], &mut out);
+        assert_eq!(out, [7.0, -2.0]);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn normalize_zero_safe() {
+        let mut z = [0.0f32; 4];
+        normalize(&mut z);
+        assert_eq!(z, [0.0; 4]);
+        let mut v = [0.0f32, 2.0];
+        normalize(&mut v);
+        assert!((l2_norm(&v) - 1.0).abs() < 1e-6);
+    }
+}

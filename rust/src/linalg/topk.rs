@@ -1,0 +1,195 @@
+//! Top-k selection.
+//!
+//! The decode hot path selects the k highest-scoring keys out of N
+//! (N up to 128K+). We keep a bounded min-heap of size k: O(N log k),
+//! no full sort, no allocation beyond the heap itself.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// (score, index) entry ordered so the BinaryHeap acts as a *min*-heap on
+/// score (Reverse semantics folded into Ord).
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    score: f32,
+    index: usize,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.score == other.score && self.index == other.index
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse so that the heap's "max" is the smallest score; ties
+        // broken by larger index first so pops are deterministic.
+        other
+            .score
+            .partial_cmp(&self.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| self.index.cmp(&other.index))
+    }
+}
+
+/// Streaming bounded top-k selector.
+#[derive(Debug)]
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<Entry>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k > 0, "k must be positive");
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Offer a candidate. NaN scores are ignored.
+    #[inline]
+    pub fn push(&mut self, score: f32, index: usize) {
+        if score.is_nan() {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(Entry { score, index });
+        } else if let Some(min) = self.heap.peek() {
+            if score > min.score {
+                self.heap.pop();
+                self.heap.push(Entry { score, index });
+            }
+        }
+    }
+
+    /// Current threshold (smallest kept score), if k candidates are held.
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() == self.k {
+            self.heap.peek().map(|e| e.score)
+        } else {
+            None
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Extract (index, score) pairs sorted by descending score.
+    pub fn into_sorted(self) -> Vec<(usize, f32)> {
+        let mut v: Vec<(usize, f32)> = self.heap.into_iter().map(|e| (e.index, e.score)).collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then(a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Extract just the indices, sorted by descending score.
+    pub fn into_indices(self) -> Vec<usize> {
+        self.into_sorted().into_iter().map(|(i, _)| i).collect()
+    }
+}
+
+/// Top-k indices of a score slice, descending by score.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut tk = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        tk.push(s, i);
+    }
+    tk.into_indices()
+}
+
+/// The k-th largest value (the selection threshold), or -inf if k == 0.
+pub fn top_k_threshold(scores: &[f32], k: usize) -> f32 {
+    if k == 0 {
+        return f32::NEG_INFINITY;
+    }
+    let idx = top_k_indices(scores, k);
+    idx.last().map(|&i| scores[i]).unwrap_or(f32::NEG_INFINITY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check_default, gen};
+    use crate::prop_assert;
+
+    #[test]
+    fn selects_largest() {
+        let s = [0.1, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let s = [2.0, 1.0];
+        assert_eq!(top_k_indices(&s, 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_ignored() {
+        let s = [f32::NAN, 1.0, 2.0];
+        assert_eq!(top_k_indices(&s, 2), vec![2, 1]);
+    }
+
+    #[test]
+    fn threshold_matches_kth() {
+        let s = [9.0, 7.0, 8.0, 1.0];
+        assert_eq!(top_k_threshold(&s, 2), 8.0);
+        assert_eq!(top_k_threshold(&s, 0), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn ties_are_deterministic() {
+        let s = [1.0, 1.0, 1.0, 1.0];
+        let a = top_k_indices(&s, 2);
+        let b = top_k_indices(&s, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn prop_matches_full_sort() {
+        check_default("topk-vs-sort", |rng, _| {
+            let n = gen::size(rng, 1, 2000);
+            let k = 1 + rng.below_usize(n);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let got = top_k_indices(&scores, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+            idx.truncate(k);
+            // Compare score multisets (ties may order differently but
+            // selected score values must agree).
+            let mut gs: Vec<f32> = got.iter().map(|&i| scores[i]).collect();
+            let mut es: Vec<f32> = idx.iter().map(|&i| scores[i]).collect();
+            gs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            es.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            prop_assert!(gs == es, "n={n} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_threshold_is_kth_order_stat() {
+        check_default("topk-threshold", |rng, _| {
+            let n = gen::size(rng, 1, 500);
+            let k = 1 + rng.below_usize(n);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let t = top_k_threshold(&scores, k);
+            let above = scores.iter().filter(|&&s| s > t).count();
+            prop_assert!(above < k, "above={above} k={k}");
+            Ok(())
+        });
+    }
+}

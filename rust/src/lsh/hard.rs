@@ -1,0 +1,172 @@
+//! Traditional hard-LSH collision scoring — the paper's primary ablation
+//! baseline (eq. 3 left, Table 2, Table 7, Fig. 2).
+//!
+//! A key's score is the number of tables in which its bucket equals the
+//! query's bucket: `s_hard(k_j, q) = Σ_ℓ 𝟙[b_j^(ℓ) = b_q^(ℓ)]`.
+
+use crate::linalg::TopK;
+use crate::lsh::params::LshParams;
+use crate::lsh::simhash::{KeyHashes, SimHash};
+
+/// Hard collision scorer over the same cached [`KeyHashes`] as SOCKET —
+/// identical memory footprint at identical (P, L).
+#[derive(Clone, Debug)]
+pub struct HardScorer {
+    pub hash: SimHash,
+}
+
+impl HardScorer {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> HardScorer {
+        HardScorer { hash: SimHash::new(params, dim, seed) }
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.hash.params
+    }
+
+    pub fn hash_keys(
+        &self,
+        keys: &crate::linalg::Matrix,
+        values: &crate::linalg::Matrix,
+    ) -> KeyHashes {
+        self.hash.hash_keys(keys, values)
+    }
+
+    /// Collision counts of every key against the query (integer-valued,
+    /// returned as f32 for interface parity with the soft scorer).
+    pub fn raw_scores(&self, q: &[f32], hashes: &KeyHashes) -> Vec<f32> {
+        let qb = self.hash.hash_one(q);
+        let l = hashes.l;
+        let mut out = vec![0.0f32; hashes.n];
+        for j in 0..hashes.n {
+            let row = hashes.key_row(j);
+            let mut c = 0u32;
+            for t in 0..l {
+                c += (row[t] == qb[t]) as u32;
+            }
+            out[j] = c as f32;
+        }
+        out
+    }
+
+    /// Value-aware scores (same weighting as SOCKET for fair comparison).
+    pub fn scores(&self, q: &[f32], hashes: &KeyHashes) -> Vec<f32> {
+        let mut s = self.raw_scores(q, hashes);
+        for j in 0..s.len() {
+            s[j] *= hashes.value_norms[j];
+        }
+        s
+    }
+
+    /// Top-k selection by hard collision count x value norm.
+    pub fn select_top_k(&self, q: &[f32], hashes: &KeyHashes, k: usize) -> Vec<usize> {
+        let scores = self.scores(q, hashes);
+        let mut tk = TopK::new(k.min(hashes.n).max(1));
+        for (j, &s) in scores.iter().enumerate() {
+            tk.push(s, j);
+        }
+        tk.into_indices()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::lsh::soft::SoftScorer;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn identical_key_collides_in_every_table() {
+        let dim = 32;
+        let h = HardScorer::new(LshParams { p: 8, l: 25, tau: 0.5 }, dim, 77);
+        let mut rng = Pcg64::seeded(1);
+        let q = rng.normal_vec(dim);
+        let keys = Matrix::from_vec(1, dim, q.clone());
+        let hashes = h.hash_keys(&keys, &keys);
+        let s = h.raw_scores(&q, &hashes);
+        assert_eq!(s[0], 25.0);
+    }
+
+    #[test]
+    fn scores_are_integers_in_range() {
+        let dim = 24;
+        let h = HardScorer::new(LshParams { p: 4, l: 30, tau: 0.5 }, dim, 3);
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(50, dim, &mut rng);
+        let hashes = h.hash_keys(&keys, &keys);
+        let q = rng.normal_vec(dim);
+        for &s in &h.raw_scores(&q, &hashes) {
+            assert!(s >= 0.0 && s <= 30.0 && s.fract() == 0.0);
+        }
+    }
+
+    #[test]
+    fn hard_scores_coarser_than_soft() {
+        // The motivating observation (Fig. 2): at equal (P, L), hard
+        // scores take few distinct values while soft scores are ~all
+        // distinct — the granularity gap that breaks ranking.
+        let dim = 64;
+        let params = LshParams { p: 10, l: 20, tau: 0.5 };
+        let hard = HardScorer::new(params, dim, 11);
+        let soft = SoftScorer::new(params, dim, 11);
+        let mut rng = Pcg64::seeded(3);
+        let n = 300;
+        let keys = Matrix::gaussian(n, dim, &mut rng);
+        let hashes = hard.hash_keys(&keys, &keys);
+        let q = rng.normal_vec(dim);
+        let hs = hard.raw_scores(&q, &hashes);
+        let probs = soft.hasher.bucket_probs(&q);
+        let ss = soft.raw_scores(&probs, &hashes);
+        let distinct = |v: &[f32]| {
+            let mut u: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+            u.sort_unstable();
+            u.dedup();
+            u.len()
+        };
+        assert!(
+            distinct(&hs) * 4 < distinct(&ss),
+            "hard={} soft={}",
+            distinct(&hs),
+            distinct(&ss)
+        );
+    }
+
+    #[test]
+    fn prop_hard_score_equals_naive_count() {
+        check_default("hard-count", |rng, _| {
+            let dim = gen::size(rng, 4, 48);
+            let params = LshParams { p: 1 + rng.below_usize(10), l: 1 + rng.below_usize(20), tau: 0.5 };
+            let h = HardScorer::new(params, dim, rng.next_u64());
+            let n = gen::size(rng, 1, 40);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let hashes = h.hash_keys(&keys, &keys);
+            let q = rng.normal_vec(dim);
+            let qb = h.hash.hash_one(&q);
+            let s = h.raw_scores(&q, &hashes);
+            for j in 0..n {
+                let manual = (0..params.l).filter(|&t| hashes.bucket(j, t) == qb[t]).count();
+                prop_assert!(s[j] == manual as f32, "j={j}: {} vs {manual}", s[j]);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn select_top_k_prefers_colliding_keys() {
+        let dim = 48;
+        let h = HardScorer::new(LshParams { p: 6, l: 40, tau: 0.5 }, dim, 5);
+        let mut rng = Pcg64::seeded(4);
+        let q = gen::unit_vec(&mut rng, dim);
+        // key 0 = near-duplicate of q; rest random.
+        let mut keys = Matrix::gaussian(64, dim, &mut rng);
+        let near = gen::key_with_cosine(&mut rng, &q, 0.98);
+        keys.row_mut(0).copy_from_slice(&near);
+        let vals = Matrix::from_vec(64, 1, vec![1.0; 64]);
+        let hashes = h.hash_keys(&keys, &vals);
+        let sel = h.select_top_k(&q, &hashes, 8);
+        assert!(sel.contains(&0), "near-duplicate not retrieved: {sel:?}");
+    }
+}

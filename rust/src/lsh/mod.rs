@@ -1,0 +1,20 @@
+//! Locality-sensitive hashing: SimHash tables, hard collision scoring,
+//! and the paper's contribution — the **soft collision kernel** (SOCKET).
+//!
+//! Layout follows the paper's Algorithms 1–4:
+//! * [`SimHash`] — `L` tables of `P` Gaussian hyperplanes (Alg. 1).
+//! * [`soft::SoftHasher`] — query-side soft bucket probabilities (Alg. 2).
+//! * [`soft::SoftScorer`] — value-aware soft collision scores + top-k
+//!   selection (Alg. 3 / Alg. 4).
+//! * [`hard`] — traditional hard-LSH collision counting (the paper's main
+//!   ablation baseline, Table 2 / Table 7 / Fig. 2).
+
+pub mod hard;
+pub mod params;
+pub mod simhash;
+pub mod soft;
+
+pub use hard::HardScorer;
+pub use params::{LshParams, MemoryBudget};
+pub use simhash::{KeyHashes, SimHash};
+pub use soft::{SoftHasher, SoftScorer};

@@ -1,0 +1,109 @@
+//! Hyperparameters and memory accounting for the LSH schemes.
+//!
+//! The paper reports "Mem = additional bits/token beyond the KV cache"
+//! (Table 1, Table 2, Fig. 2); [`MemoryBudget`] reproduces exactly that
+//! accounting: each key stores `P` sign bits per table (`L·P` bits) plus
+//! one value-norm scalar.
+
+/// Parameters of an SRP (sign-random-projection) LSH scheme.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LshParams {
+    /// Hyperplanes per table. Buckets per table R = 2^P.
+    pub p: usize,
+    /// Number of independent hash tables.
+    pub l: usize,
+    /// Soft-hash temperature (ignored by hard LSH).
+    pub tau: f32,
+}
+
+impl LshParams {
+    /// The paper's main-experiment setting (RULER): P=10, L=60, τ=0.5.
+    pub fn paper_default() -> LshParams {
+        LshParams { p: 10, l: 60, tau: 0.5 }
+    }
+
+    /// The paper's LongBench setting: P=8, L=60.
+    pub fn longbench_default() -> LshParams {
+        LshParams { p: 8, l: 60, tau: 0.5 }
+    }
+
+    /// Buckets per table.
+    pub fn buckets(&self) -> usize {
+        1usize << self.p
+    }
+
+    /// Memory accounting for these parameters.
+    pub fn memory(&self) -> MemoryBudget {
+        MemoryBudget { bits_per_token: self.p * self.l }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p == 0 || self.p > 16 {
+            return Err(format!("P={} out of supported range 1..=16", self.p));
+        }
+        if self.l == 0 {
+            return Err("L must be positive".into());
+        }
+        if !(self.tau > 0.0) {
+            return Err(format!("tau={} must be > 0", self.tau));
+        }
+        Ok(())
+    }
+}
+
+/// Additional memory per token beyond the KV cache, in bits — the unit
+/// the paper's tables use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryBudget {
+    pub bits_per_token: usize,
+}
+
+impl MemoryBudget {
+    /// Bytes to store hash signatures for `n` tokens (packed).
+    pub fn bytes_for(&self, n: usize) -> usize {
+        (self.bits_per_token * n).div_ceil(8)
+    }
+
+    /// GB for `n` tokens across `heads` KV heads and `layers` layers —
+    /// Table 2's "Memory (GB)" column shape.
+    pub fn gb_for(&self, n: usize, heads: usize, layers: usize) -> f64 {
+        self.bytes_for(n) as f64 * heads as f64 * layers as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_600_bits() {
+        // P=10, L=60 → 600 bits/token, matching Table 1's "Mem 600".
+        let p = LshParams::paper_default();
+        assert_eq!(p.memory().bits_per_token, 600);
+        assert_eq!(p.buckets(), 1024);
+    }
+
+    #[test]
+    fn hard_lsh_table2_settings() {
+        // Table 2's hard-LSH rows: (2, 300) = 600 bits, (2, 500) = 1000.
+        assert_eq!(LshParams { p: 2, l: 300, tau: 0.5 }.memory().bits_per_token, 600);
+        assert_eq!(LshParams { p: 2, l: 500, tau: 0.5 }.memory().bits_per_token, 1000);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(LshParams { p: 0, l: 60, tau: 0.5 }.validate().is_err());
+        assert!(LshParams { p: 17, l: 60, tau: 0.5 }.validate().is_err());
+        assert!(LshParams { p: 10, l: 0, tau: 0.5 }.validate().is_err());
+        assert!(LshParams { p: 10, l: 60, tau: 0.0 }.validate().is_err());
+        assert!(LshParams::paper_default().validate().is_ok());
+    }
+
+    #[test]
+    fn byte_packing_rounds_up() {
+        let m = MemoryBudget { bits_per_token: 600 };
+        assert_eq!(m.bytes_for(1), 75);
+        let m = MemoryBudget { bits_per_token: 3 };
+        assert_eq!(m.bytes_for(3), 2); // 9 bits -> 2 bytes
+    }
+}

@@ -1,0 +1,267 @@
+//! SimHash (sign-random-projection) tables — the paper's Algorithm 1.
+//!
+//! Each of the `L` tables draws a `P x d` Gaussian hyperplane matrix
+//! `W^(ℓ)`. A key `k` hashes to the bucket whose id is the packed sign
+//! pattern of `W^(ℓ) k`. Bucket ids are stored packed (`P ≤ 16` bits per
+//! table), giving the paper's `L·P` bits/token memory footprint.
+
+use crate::linalg::Matrix;
+use crate::lsh::params::LshParams;
+use crate::util::rng::Pcg64;
+
+/// The hyperplanes of `L` independent SimHash tables.
+#[derive(Clone, Debug)]
+pub struct SimHash {
+    pub params: LshParams,
+    pub dim: usize,
+    /// One `P x dim` Gaussian matrix per table.
+    planes: Vec<Matrix>,
+}
+
+/// Packed bucket ids for a set of keys: `ids[j * L + ℓ]` is key j's
+/// bucket in table ℓ (a value in `0..2^P`), plus cached value norms.
+#[derive(Clone, Debug)]
+pub struct KeyHashes {
+    pub n: usize,
+    pub l: usize,
+    /// Row-major `n x L` bucket ids. u16 suffices for P <= 16.
+    pub bucket_ids: Vec<u16>,
+    /// ‖v_j‖₂ cached at prefill (Alg. 1 returns these).
+    pub value_norms: Vec<f32>,
+}
+
+impl KeyHashes {
+    #[inline]
+    pub fn bucket(&self, key: usize, table: usize) -> u16 {
+        self.bucket_ids[key * self.l + table]
+    }
+
+    /// All L bucket ids of one key.
+    #[inline]
+    pub fn key_row(&self, key: usize) -> &[u16] {
+        &self.bucket_ids[key * self.l..(key + 1) * self.l]
+    }
+
+    /// Append a single new key (decode-time cache extension).
+    pub fn push(&mut self, buckets: &[u16], value_norm: f32) {
+        assert_eq!(buckets.len(), self.l);
+        self.bucket_ids.extend_from_slice(buckets);
+        self.value_norms.push(value_norm);
+        self.n += 1;
+    }
+}
+
+impl SimHash {
+    /// Draw the hyperplanes. Deterministic in (seed, params, dim).
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> SimHash {
+        params.validate().expect("invalid LSH params");
+        let mut planes = Vec::with_capacity(params.l);
+        for table in 0..params.l {
+            let mut rng = Pcg64::new(seed, table as u64 + 1);
+            planes.push(Matrix::gaussian(params.p, dim, &mut rng));
+        }
+        SimHash { params, dim, planes }
+    }
+
+    /// Hyperplane matrix of table ℓ.
+    pub fn plane(&self, table: usize) -> &Matrix {
+        &self.planes[table]
+    }
+
+    /// Signed projections of `x` in table ℓ (the pre-sign values — the
+    /// soft hasher consumes these directly).
+    pub fn project(&self, table: usize, x: &[f32]) -> Vec<f32> {
+        self.planes[table].matvec(x)
+    }
+
+    /// Hard bucket id of `x` in table ℓ: packed sign bits, bit i set iff
+    /// `w_i · x >= 0`.
+    pub fn bucket_of(&self, table: usize, x: &[f32]) -> u16 {
+        let proj = self.project(table, x);
+        pack_signs(&proj)
+    }
+
+    /// All-table bucket ids of a single vector.
+    pub fn hash_one(&self, x: &[f32]) -> Vec<u16> {
+        (0..self.params.l).map(|t| self.bucket_of(t, x)).collect()
+    }
+
+    /// Algorithm 1: hash every key, cache bucket ids + value norms.
+    pub fn hash_keys(&self, keys: &Matrix, values: &Matrix) -> KeyHashes {
+        assert_eq!(keys.cols, self.dim);
+        assert_eq!(keys.rows, values.rows);
+        let n = keys.rows;
+        let l = self.params.l;
+        let mut bucket_ids = vec![0u16; n * l];
+        for j in 0..n {
+            let key = keys.row(j);
+            for t in 0..l {
+                bucket_ids[j * l + t] = self.bucket_of(t, key);
+            }
+        }
+        KeyHashes { n, l, bucket_ids, value_norms: values.row_norms() }
+    }
+
+    /// Theoretical SimHash collision probability for one plane:
+    /// `1 - θ/π` where θ is the angle between x and y. The P-plane
+    /// bucket-collision probability is this to the P-th power — the
+    /// angular kernel `w_j` of the paper's Section 5 (eq. 4).
+    pub fn collision_probability(&self, cosine: f32) -> f64 {
+        let c = cosine.clamp(-1.0, 1.0) as f64;
+        let per_plane = 1.0 - c.acos() / std::f64::consts::PI;
+        per_plane.powi(self.params.p as i32)
+    }
+}
+
+/// Pack sign bits: bit i of the result is set iff proj[i] >= 0.
+#[inline]
+pub fn pack_signs(proj: &[f32]) -> u16 {
+    debug_assert!(proj.len() <= 16);
+    let mut b = 0u16;
+    for (i, &v) in proj.iter().enumerate() {
+        if v >= 0.0 {
+            b |= 1 << i;
+        }
+    }
+    b
+}
+
+/// The ±1 corner vector of bucket `r` for P planes: coordinate i is +1 if
+/// bit i of r is set else -1. These are the `c_r` of Algorithm 2.
+pub fn corner(r: u16, p: usize) -> Vec<f32> {
+    (0..p).map(|i| if r >> i & 1 == 1 { 1.0 } else { -1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+
+    fn small() -> SimHash {
+        SimHash::new(LshParams { p: 6, l: 20, tau: 0.5 }, 32, 42)
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = SimHash::new(LshParams::paper_default(), 16, 7);
+        let b = SimHash::new(LshParams::paper_default(), 16, 7);
+        let mut rng = Pcg64::seeded(1);
+        let x = rng.normal_vec(16);
+        assert_eq!(a.hash_one(&x), b.hash_one(&x));
+    }
+
+    #[test]
+    fn tables_are_independent() {
+        let h = small();
+        let mut rng = Pcg64::seeded(2);
+        let x = rng.normal_vec(32);
+        let ids = h.hash_one(&x);
+        let distinct: std::collections::HashSet<u16> = ids.iter().copied().collect();
+        assert!(distinct.len() > 5, "tables should disagree: {distinct:?}");
+    }
+
+    #[test]
+    fn same_vector_always_collides() {
+        let h = small();
+        let mut rng = Pcg64::seeded(3);
+        let x = rng.normal_vec(32);
+        let kx = Matrix::from_vec(1, 32, x.clone());
+        let hashes = h.hash_keys(&kx, &kx);
+        for t in 0..h.params.l {
+            assert_eq!(hashes.bucket(0, t), h.bucket_of(t, &x));
+        }
+    }
+
+    #[test]
+    fn negated_vector_lands_in_complement_bucket() {
+        let h = small();
+        let mut rng = Pcg64::seeded(4);
+        let x = rng.normal_vec(32);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        // Probability of a zero projection is nil; complement bits.
+        let mask = (1u16 << h.params.p) - 1;
+        for t in 0..h.params.l {
+            assert_eq!(h.bucket_of(t, &neg), !h.bucket_of(t, &x) & mask);
+        }
+    }
+
+    #[test]
+    fn pack_signs_known() {
+        assert_eq!(pack_signs(&[1.0, -1.0, 0.5]), 0b101);
+        assert_eq!(pack_signs(&[-1.0, -2.0]), 0);
+        // sign(0) counts as +.
+        assert_eq!(pack_signs(&[0.0]), 1);
+    }
+
+    #[test]
+    fn corner_roundtrip() {
+        for r in 0..16u16 {
+            let c = corner(r, 4);
+            let packed = pack_signs(&c);
+            assert_eq!(packed, r);
+        }
+    }
+
+    #[test]
+    fn collision_prob_monotone_in_cosine() {
+        let h = small();
+        let p1 = h.collision_probability(0.9);
+        let p2 = h.collision_probability(0.5);
+        let p3 = h.collision_probability(-0.5);
+        assert!(p1 > p2 && p2 > p3);
+        assert!((h.collision_probability(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empirical_collision_rate_matches_theory() {
+        // Monte-Carlo check of the SimHash identity Pr[collide] =
+        // (1 - θ/π)^P over random query/key pairs at fixed cosine.
+        let params = LshParams { p: 4, l: 400, tau: 0.5 };
+        let h = SimHash::new(params, 48, 99);
+        let mut rng = Pcg64::seeded(5);
+        for &cos in &[0.8f32, 0.3, 0.0] {
+            let q = gen::unit_vec(&mut rng, 48);
+            let k = gen::key_with_cosine(&mut rng, &q, cos);
+            let qb = h.hash_one(&q);
+            let kb = h.hash_one(&k);
+            let collisions = qb.iter().zip(&kb).filter(|(a, b)| a == b).count();
+            let emp = collisions as f64 / params.l as f64;
+            let theo = h.collision_probability(cos);
+            assert!(
+                (emp - theo).abs() < 0.08,
+                "cos={cos} empirical={emp:.3} theoretical={theo:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_bucket_ids_in_range(){
+        check_default("bucket-range", |rng, _| {
+            let p = 1 + rng.below_usize(12);
+            let l = 1 + rng.below_usize(8);
+            let d = gen::size(rng, 2, 64);
+            let h = SimHash::new(LshParams { p, l, tau: 0.5 }, d, rng.next_u64());
+            let x = rng.normal_vec(d);
+            for b in h.hash_one(&x) {
+                prop_assert!((b as usize) < (1 << p), "b={b} p={p}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn key_hashes_push_appends() {
+        let h = small();
+        let mut rng = Pcg64::seeded(6);
+        let keys = Matrix::gaussian(4, 32, &mut rng);
+        let vals = Matrix::gaussian(4, 32, &mut rng);
+        let mut kh = h.hash_keys(&keys, &vals);
+        let newk = rng.normal_vec(32);
+        let buckets = h.hash_one(&newk);
+        kh.push(&buckets, 2.5);
+        assert_eq!(kh.n, 5);
+        assert_eq!(kh.key_row(4), buckets.as_slice());
+        assert_eq!(kh.value_norms[4], 2.5);
+    }
+}

@@ -1,0 +1,401 @@
+//! The SOCKET soft collision kernel (Algorithms 2–4).
+//!
+//! * [`SoftHasher::bucket_probs`] — Algorithm 2: the query induces a
+//!   softmax distribution over the `R = 2^P` buckets of each table,
+//!   `p_τ(r | q) ∝ exp(u·c_r / τ)` with `u = tanh(Wq)/√d`.
+//! * [`SoftScorer::scores`] — Algorithm 4: every key's score is the
+//!   probability mass its cached buckets receive, summed over tables and
+//!   weighted by the value norm.
+//! * [`SoftScorer::select_top_k`] — Algorithm 3: deterministic top-k over
+//!   `ŵ_j · ‖v_j‖₂`.
+
+use crate::linalg::TopK;
+use crate::lsh::params::LshParams;
+use crate::lsh::simhash::{KeyHashes, SimHash};
+
+/// Query-side soft hashing (Algorithm 2).
+#[derive(Clone, Debug)]
+pub struct SoftHasher {
+    hash: SimHash,
+}
+
+/// The per-table bucket distributions of one query: row-major `L x R`.
+#[derive(Clone, Debug)]
+pub struct BucketProbs {
+    pub l: usize,
+    pub r: usize,
+    pub probs: Vec<f32>,
+}
+
+impl BucketProbs {
+    #[inline]
+    pub fn table(&self, t: usize) -> &[f32] {
+        &self.probs[t * self.r..(t + 1) * self.r]
+    }
+}
+
+impl SoftHasher {
+    pub fn new(hash: SimHash) -> SoftHasher {
+        SoftHasher { hash }
+    }
+
+    pub fn simhash(&self) -> &SimHash {
+        &self.hash
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.hash.params
+    }
+
+    /// Algorithm 2. For each table ℓ:
+    /// `u = tanh(W^(ℓ) q) / √d`, `logit_r = u·c_r / τ`, softmax over r.
+    ///
+    /// The corner inner products are computed without materializing the
+    /// `P x R` corner matrix: a Gray-code-free butterfly — logit over
+    /// corners is separable, `u·c_r = Σ_i ±u_i` — built by iterative
+    /// doubling in O(R·P) adds but cache-friendly (R ≤ 2^16).
+    pub fn bucket_probs(&self, q: &[f32]) -> BucketProbs {
+        let p = self.hash.params.p;
+        let l = self.hash.params.l;
+        let r = 1usize << p;
+        let tau = self.hash.params.tau;
+        let inv_sqrt_d = 1.0 / (self.hash.dim as f32).sqrt();
+        let mut probs = vec![0.0f32; l * r];
+        for t in 0..l {
+            let proj = self.hash.project(t, q);
+            // Multiplicative butterfly: exp(Σ ±u_i/τ) = Π exp(±u_i/τ),
+            // so only 2P exps are needed per table instead of R = 2^P —
+            // after step i, w[0..2^(i+1)] hold all sign combinations of
+            // u_0..u_i. Safe without max-subtraction: |u_i| ≤ 1/√d, so
+            // every factor is bounded by e^(P/(√d·τ)).
+            // (§Perf: 3.2x faster scoring at (P=10, L=60); see
+            // EXPERIMENTS.md.)
+            let w = &mut probs[t * r..(t + 1) * r];
+            w[0] = 1.0;
+            let mut width = 1usize;
+            for i in 0..p {
+                let u = proj[i].tanh() * inv_sqrt_d / tau;
+                // Normalize the pair so factors are ≤ 1: equivalent up
+                // to the final normalization, and overflow-free even at
+                // tiny τ (the dominated corner underflows to 0, which
+                // is its correct limit).
+                let e_plus = (u - u.abs()).exp();
+                let e_minus = (-u - u.abs()).exp();
+                for b in 0..width {
+                    // bit i set => +u ; cleared => -u.
+                    w[b + width] = w[b] * e_plus;
+                    w[b] *= e_minus;
+                }
+                width *= 2;
+            }
+            let sum: f32 = w.iter().sum();
+            let inv = 1.0 / sum;
+            for x in w.iter_mut() {
+                *x *= inv;
+            }
+        }
+        BucketProbs { l, r, probs }
+    }
+}
+
+/// Key scoring + selection over a hashed KV cache (Algorithms 3–4).
+#[derive(Clone, Debug)]
+pub struct SoftScorer {
+    pub hasher: SoftHasher,
+}
+
+impl SoftScorer {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> SoftScorer {
+        SoftScorer { hasher: SoftHasher::new(SimHash::new(params, dim, seed)) }
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.hasher.params()
+    }
+
+    /// Algorithm 1 delegate: hash keys at prefill.
+    pub fn hash_keys(
+        &self,
+        keys: &crate::linalg::Matrix,
+        values: &crate::linalg::Matrix,
+    ) -> KeyHashes {
+        self.hasher.simhash().hash_keys(keys, values)
+    }
+
+    /// Raw soft collision scores `ŵ_j = Σ_ℓ p_τ(b_j^(ℓ) | q)` (eq. 3),
+    /// *without* the value-norm weighting.
+    pub fn raw_scores(&self, probs: &BucketProbs, hashes: &KeyHashes) -> Vec<f32> {
+        assert_eq!(probs.l, hashes.l);
+        let l = hashes.l;
+        let mut out = vec![0.0f32; hashes.n];
+        // Hot path: iterate keys outer, tables inner; the prob table is
+        // L x R and stays in cache (R*L*4 bytes, e.g. 60*1024*4 = 240KB).
+        // Bounds checks are hoisted: bucket ids are produced by
+        // `pack_signs` (< 2^P = R by construction) and row length == L,
+        // so the unchecked accesses are provably in range (§Perf).
+        let r = probs.r;
+        let table = &probs.probs[..l * r];
+        for j in 0..hashes.n {
+            let row = hashes.key_row(j);
+            let mut acc = 0.0f32;
+            for (t, &b) in row.iter().enumerate() {
+                debug_assert!((b as usize) < r);
+                acc += unsafe { *table.get_unchecked(t * r + (b as usize & (r - 1))) };
+            }
+            out[j] = acc;
+        }
+        out
+    }
+
+    /// Algorithm 4: value-aware scores `ŵ_j · ‖v_j‖₂`, with an optional
+    /// validity mask (`false` entries score -inf).
+    pub fn scores(&self, probs: &BucketProbs, hashes: &KeyHashes, mask: Option<&[bool]>) -> Vec<f32> {
+        let mut s = self.raw_scores(probs, hashes);
+        for j in 0..s.len() {
+            let valid = mask.map(|m| m[j]).unwrap_or(true);
+            s[j] = if valid { s[j] * hashes.value_norms[j] } else { f32::NEG_INFINITY };
+        }
+        s
+    }
+
+    /// Full decode-side pipeline (Algorithms 2→4→3): soft-hash the query,
+    /// score every key, return the top-k key indices (descending score).
+    pub fn select_top_k(&self, q: &[f32], hashes: &KeyHashes, k: usize) -> Vec<usize> {
+        let probs = self.hasher.bucket_probs(q);
+        let scores = self.scores(&probs, hashes, None);
+        let mut tk = TopK::new(k.min(hashes.n).max(1));
+        for (j, &s) in scores.iter().enumerate() {
+            tk.push(s, j);
+        }
+        tk.into_indices()
+    }
+
+    /// Normalized soft weights `ã_j = w̃_j / Z̃` (Section 5.1) — the proxy
+    /// attention distribution used by the sampling estimator and the
+    /// Theorem-3 validation bench.
+    pub fn normalized_weights(&self, q: &[f32], hashes: &KeyHashes) -> Vec<f32> {
+        let probs = self.hasher.bucket_probs(q);
+        let mut w = self.raw_scores(&probs, hashes);
+        let l = hashes.l as f32;
+        let mut z = 0.0f32;
+        for x in w.iter_mut() {
+            *x /= l;
+            z += *x;
+        }
+        if z > 0.0 {
+            for x in w.iter_mut() {
+                *x /= z;
+            }
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+    use crate::util::rng::Pcg64;
+
+    fn scorer(p: usize, l: usize, tau: f32, dim: usize) -> SoftScorer {
+        SoftScorer::new(LshParams { p, l, tau }, dim, 1234)
+    }
+
+    #[test]
+    fn bucket_probs_are_distributions() {
+        let s = scorer(8, 10, 0.5, 64);
+        let mut rng = Pcg64::seeded(1);
+        let q = rng.normal_vec(64);
+        let probs = s.hasher.bucket_probs(&q);
+        assert_eq!(probs.l, 10);
+        assert_eq!(probs.r, 256);
+        for t in 0..probs.l {
+            let sum: f32 = probs.table(t).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "table {t} sums to {sum}");
+            assert!(probs.table(t).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dominant_soft_bucket_is_hard_bucket() {
+        // Section B.1: argmax_r p_τ(r|q) must equal the hard SRP bucket
+        // because tanh is strictly increasing.
+        let s = scorer(10, 30, 0.4, 48);
+        let mut rng = Pcg64::seeded(2);
+        for _ in 0..20 {
+            let q = rng.normal_vec(48);
+            let probs = s.hasher.bucket_probs(&q);
+            for t in 0..probs.l {
+                let hard = s.hasher.simhash().bucket_of(t, &q) as usize;
+                let soft_argmax = crate::linalg::argmax(probs.table(t));
+                assert_eq!(soft_argmax, hard, "table {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn tau_to_zero_recovers_hard_lsh() {
+        // As τ→0 the soft distribution peaks on the hard bucket (ε_τ→0).
+        let dim = 32;
+        let mut rng = Pcg64::seeded(3);
+        let q = rng.normal_vec(dim);
+        let sharp = scorer(6, 5, 0.01, dim);
+        let probs = sharp.hasher.bucket_probs(&q);
+        for t in 0..probs.l {
+            let hard = sharp.hasher.simhash().bucket_of(t, &q) as usize;
+            assert!(probs.table(t)[hard] > 0.95, "mass={}", probs.table(t)[hard]);
+        }
+    }
+
+    #[test]
+    fn tau_to_infinity_uniformizes() {
+        let dim = 32;
+        let mut rng = Pcg64::seeded(4);
+        let q = rng.normal_vec(dim);
+        let smooth = scorer(6, 5, 1e4, dim);
+        let probs = smooth.hasher.bucket_probs(&q);
+        let r = probs.r as f32;
+        for t in 0..probs.l {
+            for &p in probs.table(t) {
+                assert!((p - 1.0 / r).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn raw_scores_bounded_by_l() {
+        // Each per-table contribution is a probability, so 0 ≤ ŵ_j ≤ L.
+        let s = scorer(8, 24, 0.5, 32);
+        let mut rng = Pcg64::seeded(5);
+        let keys = Matrix::gaussian(100, 32, &mut rng);
+        let vals = Matrix::gaussian(100, 32, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(32);
+        let probs = s.hasher.bucket_probs(&q);
+        for &w in &s.raw_scores(&probs, &hashes) {
+            assert!((0.0..=24.0).contains(&w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn closer_key_scores_higher() {
+        // Fig. 1's claim: score(q,k1) > score(q,k2) when cos(q,k1) >
+        // cos(q,k2). Holds in expectation; test with a wide margin.
+        let dim = 64;
+        let s = scorer(10, 60, 0.5, dim);
+        let mut rng = Pcg64::seeded(6);
+        let q = gen::unit_vec(&mut rng, dim);
+        let k_near = gen::key_with_cosine(&mut rng, &q, 0.9);
+        let k_far = gen::key_with_cosine(&mut rng, &q, 0.1);
+        let mut keys = Matrix::zeros(2, dim);
+        keys.row_mut(0).copy_from_slice(&k_near);
+        keys.row_mut(1).copy_from_slice(&k_far);
+        let vals = Matrix::from_vec(2, dim, vec![1.0; 2 * dim]); // equal norms
+        let hashes = s.hash_keys(&keys, &vals);
+        let probs = s.hasher.bucket_probs(&q);
+        let w = s.raw_scores(&probs, &hashes);
+        assert!(w[0] > w[1], "near={} far={}", w[0], w[1]);
+    }
+
+    #[test]
+    fn value_norm_weighting_applies() {
+        let dim = 16;
+        let s = scorer(6, 12, 0.5, dim);
+        let mut rng = Pcg64::seeded(7);
+        let key = rng.normal_vec(dim);
+        let mut keys = Matrix::zeros(2, dim);
+        keys.row_mut(0).copy_from_slice(&key);
+        keys.row_mut(1).copy_from_slice(&key); // identical keys
+        let mut vals = Matrix::zeros(2, dim);
+        vals.set(0, 0, 1.0);
+        vals.set(1, 0, 5.0); // 5x larger value norm
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let probs = s.hasher.bucket_probs(&q);
+        let sc = s.scores(&probs, &hashes, None);
+        assert!((sc[1] / sc[0] - 5.0).abs() < 1e-3, "ratio={}", sc[1] / sc[0]);
+    }
+
+    #[test]
+    fn mask_excludes_keys() {
+        let dim = 16;
+        let s = scorer(6, 12, 0.5, dim);
+        let mut rng = Pcg64::seeded(8);
+        let keys = Matrix::gaussian(5, dim, &mut rng);
+        let vals = Matrix::gaussian(5, dim, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let probs = s.hasher.bucket_probs(&q);
+        let mask = [true, false, true, false, true];
+        let sc = s.scores(&probs, &hashes, Some(&mask));
+        assert_eq!(sc[1], f32::NEG_INFINITY);
+        assert_eq!(sc[3], f32::NEG_INFINITY);
+        assert!(sc[0].is_finite());
+    }
+
+    #[test]
+    fn select_top_k_returns_k_distinct() {
+        let dim = 32;
+        let s = scorer(8, 20, 0.5, dim);
+        let mut rng = Pcg64::seeded(9);
+        let keys = Matrix::gaussian(200, dim, &mut rng);
+        let vals = Matrix::gaussian(200, dim, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let sel = s.select_top_k(&q, &hashes, 16);
+        assert_eq!(sel.len(), 16);
+        let distinct: std::collections::HashSet<usize> = sel.iter().copied().collect();
+        assert_eq!(distinct.len(), 16);
+    }
+
+    #[test]
+    fn normalized_weights_form_distribution() {
+        let dim = 24;
+        let s = scorer(6, 15, 0.5, dim);
+        let mut rng = Pcg64::seeded(10);
+        let keys = Matrix::gaussian(64, dim, &mut rng);
+        let vals = Matrix::gaussian(64, dim, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let a = s.normalized_weights(&q, &hashes);
+        let sum: f32 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+        assert!(a.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn prop_butterfly_matches_naive_corners() {
+        // The iterative-doubling logit construction must equal the naive
+        // u·c_r computation for every corner.
+        check_default("butterfly-vs-naive", |rng, _| {
+            let p = 1 + rng.below_usize(8);
+            let dim = gen::size(rng, 2, 48);
+            let tau = rng.range_f32(0.1, 2.0);
+            let s = SoftScorer::new(LshParams { p, l: 1, tau }, dim, rng.next_u64());
+            let q = rng.normal_vec(dim);
+            let probs = s.hasher.bucket_probs(&q);
+            // Naive reference.
+            let proj = s.hasher.simhash().project(0, &q);
+            let inv = 1.0 / (dim as f32).sqrt();
+            let u: Vec<f32> = proj.iter().map(|x| x.tanh() * inv).collect();
+            let r = 1usize << p;
+            let mut logits = vec![0.0f32; r];
+            for cid in 0..r {
+                let c = crate::lsh::simhash::corner(cid as u16, p);
+                logits[cid] = u.iter().zip(&c).map(|(a, b)| a * b).sum::<f32>() / tau;
+            }
+            crate::linalg::softmax_inplace(&mut logits);
+            for cid in 0..r {
+                prop_assert!(
+                    (probs.table(0)[cid] - logits[cid]).abs() < 1e-4,
+                    "p={p} corner={cid}: {} vs {}",
+                    probs.table(0)[cid],
+                    logits[cid]
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,174 @@
+//! `socketd` — the SOCKET sparse-attention serving daemon + experiment
+//! launcher.
+//!
+//! ```text
+//! socketd serve   [--port 7411] [--sparsity 33] [--dense] [--workers 4]
+//! socketd bench   <ruler|overhead|ranking|ttft|throughput|correlation|
+//!                  longbench|ablation|magicpig|models|theory|all>
+//!                 [--full] [--n N] [--dim D] [--instances I] [--seed S]
+//! socketd demo    [--n 4096] [--sparsity 33]   # quick one-shot decode
+//! socketd info                                  # config & memory report
+//! ```
+
+use socket_attn::coordinator::{AttentionMode, BatchPolicy, EngineConfig};
+use socket_attn::experiments::{self, Scale};
+use socket_attn::lsh::LshParams;
+use socket_attn::model::ModelConfig;
+use socket_attn::server::Server;
+use socket_attn::util::Args;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("serve") => serve(&args),
+        Some("bench") => bench(&args),
+        Some("demo") => demo(&args),
+        Some("info") => info(),
+        _ => {
+            eprintln!(
+                "usage: socketd <serve|bench|demo|info> [options]\n\
+                 bench targets: ruler overhead ranking ttft throughput\n\
+                 correlation longbench ablation magicpig models theory all"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn engine_config(args: &Args) -> EngineConfig {
+    let mode = if args.flag("dense") {
+        AttentionMode::Dense
+    } else {
+        AttentionMode::Socket { sparsity: args.f64_or("sparsity", 33.0) }
+    };
+    EngineConfig {
+        model: ModelConfig::tiny(),
+        lsh: LshParams {
+            p: args.usize_or("p", 10),
+            l: args.usize_or("l", 60),
+            tau: args.f32_or("tau", 0.5),
+        },
+        mode,
+        capacity_pages: args.usize_or("capacity-pages", 64 * 1024),
+        sink: args.usize_or("sink", 64),
+        local: args.usize_or("local", 64),
+    }
+}
+
+fn serve(args: &Args) {
+    let port = args.usize_or("port", 7411);
+    let workers = args.usize_or("workers", 4);
+    let server = Arc::new(Server::new(engine_config(args), BatchPolicy::default()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = server
+        .serve(&format!("127.0.0.1:{port}"), workers, Arc::clone(&stop))
+        .expect("bind failed");
+    println!("socketd listening on {addr} ({workers} workers)");
+    println!("protocol: one JSON per line, e.g.");
+    println!("  {{\"op\":\"generate\",\"context_len\":4096,\"decode_len\":64}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn demo(args: &Args) {
+    let n = args.usize_or("n", 4096);
+    let sparsity = args.f64_or("sparsity", 33.0);
+    let p = experiments::throughput::measure(n, args.usize_or("dim", 128), sparsity, 32, 7);
+    println!("context {n}, sparsity {sparsity}x:");
+    println!("  dense  : {:8.1} tok/s", p.dense_tps);
+    println!("  SOCKET : {:8.1} tok/s ({:.2}x)", p.socket_tps, p.socket_tps / p.dense_tps);
+}
+
+fn info() {
+    let tiny = ModelConfig::tiny();
+    let big = ModelConfig::paper_8b();
+    let lsh = LshParams::paper_default();
+    println!("== socket-attn configuration ==");
+    println!("tiny model   : {tiny:?} (~{:.1}M params)", tiny.param_count() as f64 / 1e6);
+    println!(
+        "paper analog : {:.1}B params, KV {:.0} KiB/token",
+        big.param_count() as f64 / 1e9,
+        big.kv_bytes_per_token() as f64 / 1024.0
+    );
+    println!(
+        "LSH default  : P={} L={} tau={} -> {} bits/token (~{}% of bf16 KV)",
+        lsh.p,
+        lsh.l,
+        lsh.tau,
+        lsh.memory().bits_per_token,
+        (100 * lsh.memory().bits_per_token) / (big.kv_bytes_per_token() * 8 / 2)
+    );
+    println!("artifacts dir: {}", socket_attn::runtime::artifacts_dir().display());
+    for art in ["socket_decode.hlo.txt", "dense_decode.hlo.txt", "prefill_hash.hlo.txt"] {
+        println!(
+            "  {:24} {}",
+            art,
+            if socket_attn::runtime::artifact_available(art) {
+                "present"
+            } else {
+                "missing (run `make artifacts`)"
+            }
+        );
+    }
+}
+
+fn bench(args: &Args) {
+    let scale = Scale::from_args(args);
+    let which = args.positional().get(1).map(|s| s.as_str()).unwrap_or("all");
+    let run = |name: &str| -> bool { which == "all" || which == name };
+    if run("ruler") {
+        experiments::ruler::reproduce(scale).print();
+    }
+    if run("overhead") {
+        experiments::overhead::table(&experiments::overhead::run(scale)).print();
+    }
+    if run("ranking") {
+        experiments::ranking::table(&experiments::ranking::run(scale)).print();
+    }
+    if run("ttft") {
+        let pts = experiments::ttft::run(scale, &[1024, 4096, 16 * 1024]);
+        experiments::ttft::table(&pts).print();
+    }
+    if run("throughput") {
+        let ctxs = [4 * 1024, 16 * 1024, 32 * 1024, 64 * 1024];
+        let pts = experiments::throughput::run(scale, &ctxs, 33.0);
+        experiments::throughput::table(&pts, "CPU substrate, 33x").print();
+    }
+    if run("correlation") {
+        experiments::correlation::table(&experiments::correlation::run(scale)).print();
+    }
+    if run("longbench") {
+        experiments::longbench::table(&experiments::longbench::run(scale), "proxy").print();
+    }
+    if run("ablation") {
+        experiments::ablation::table("Table 6a: SOCKET varying P", "P", &experiments::ablation::socket_vary_p(scale)).print();
+        experiments::ablation::table("Table 6b: SOCKET varying L", "L", &experiments::ablation::socket_vary_l(scale)).print();
+        experiments::ablation::table("Table 6c: SOCKET varying tau", "tau", &experiments::ablation::socket_vary_tau(scale)).print();
+        experiments::ablation::table("Table 7a: hard LSH varying P", "P", &experiments::ablation::hard_vary_p(scale)).print();
+        experiments::ablation::table("Table 7b/c: hard LSH varying L", "L", &experiments::ablation::hard_vary_l(scale)).print();
+    }
+    if run("magicpig") {
+        experiments::magicpig::table(&experiments::magicpig::run(scale)).print();
+    }
+    if run("models") {
+        experiments::models::table("Table 10: RULER-16K methods", &experiments::models::run_ruler16k(scale)).print();
+        for m in experiments::models::MODELS.iter().skip(1) {
+            experiments::models::table(
+                &format!("Tables 11/12: SOCKET across sparsity ({})", m.name),
+                &experiments::models::run_model_sweep(scale, m, &[5.0, 10.0, 20.0, 50.0]),
+            )
+            .print();
+        }
+    }
+    if run("theory") {
+        let pts = experiments::theory::finite_l_sweep(scale, &[5, 10, 20, 40, 80], 0.5, 6);
+        experiments::theory::finite_l_table(&pts).print();
+        let lem = experiments::theory::lemma4_check(scale, &[2, 4, 8, 16]);
+        experiments::theory::lemma4_table(&lem).print();
+        println!("epsilon_tau (P=8): {:?}", experiments::theory::epsilon_tau(scale, 8, &[0.05, 0.2, 0.5, 1.0, 5.0]));
+        println!("sampling error vs M: {:?}", experiments::theory::sampling_sweep(scale, &[8, 32, 128, 512]));
+    }
+}

@@ -1,0 +1,73 @@
+//! Attention-fidelity metrics: how well a sparse method's output matches
+//! dense attention, and how much attention mass the selected set covers.
+
+use crate::attention::dense::attention_weights;
+use crate::linalg::Matrix;
+
+/// L2 error between two attention outputs.
+pub fn output_error(y_sparse: &[f32], y_dense: &[f32]) -> f64 {
+    assert_eq!(y_sparse.len(), y_dense.len());
+    y_sparse
+        .iter()
+        .zip(y_dense)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Relative L2 error `‖ys - yd‖ / ‖yd‖` (0 if yd = 0).
+pub fn output_relative_error(y_sparse: &[f32], y_dense: &[f32]) -> f64 {
+    let denom = y_dense.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        output_error(y_sparse, y_dense) / denom
+    }
+}
+
+/// Fraction of the dense softmax attention mass covered by `selected` —
+/// the "recall of attention mass" criterion motivating top-k methods.
+pub fn attention_mass_recall(q: &[f32], keys: &Matrix, selected: &[usize], scale: f32) -> f64 {
+    let a = attention_weights(q, keys, scale);
+    selected.iter().map(|&j| a[j] as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn zero_error_for_identical() {
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(output_error(&y, &y), 0.0);
+        assert_eq!(output_relative_error(&y, &y), 0.0);
+    }
+
+    #[test]
+    fn known_error() {
+        assert!((output_error(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-9);
+        assert!((output_relative_error(&[0.0, 0.0], &[0.0, 2.0]) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_selection_recalls_all_mass() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(30, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let all: Vec<usize> = (0..30).collect();
+        let recall = attention_mass_recall(&q, &keys, &all, 1.0);
+        assert!((recall - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn partial_selection_recall_monotone() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(30, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let r1 = attention_mass_recall(&q, &keys, &[0, 1, 2], 1.0);
+        let r2 = attention_mass_recall(&q, &keys, &[0, 1, 2, 3, 4, 5], 1.0);
+        assert!(r2 >= r1);
+        assert!(r1 >= 0.0 && r2 <= 1.0 + 1e-6);
+    }
+}

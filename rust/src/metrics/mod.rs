@@ -1,0 +1,7 @@
+//! Ranking and attention-fidelity metrics (Appendix A.5 + Section 5).
+
+pub mod ranking;
+pub mod fidelity;
+
+pub use fidelity::{attention_mass_recall, output_error, output_relative_error};
+pub use ranking::{jaccard, ndcg_at_k, precision_at_k};

@@ -1,0 +1,152 @@
+//! Ranking-quality metrics as defined in Appendix A.5: Precision@k,
+//! Jaccard similarity, and NDCG (with the 2^rel - 1 gain the paper uses).
+
+use std::collections::HashSet;
+
+/// Precision = |S_k ∩ R| / k, where `retrieved` is the method's top-k and
+/// `relevant` the ground-truth top-k set.
+pub fn precision_at_k(retrieved: &[usize], relevant: &[usize], k: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let rel: HashSet<usize> = relevant.iter().copied().collect();
+    let hits = retrieved.iter().take(k).filter(|i| rel.contains(i)).count();
+    hits as f64 / k as f64
+}
+
+/// Jaccard = |A ∩ B| / |A ∪ B| over the two index sets.
+pub fn jaccard(a: &[usize], b: &[usize]) -> f64 {
+    let sa: HashSet<usize> = a.iter().copied().collect();
+    let sb: HashSet<usize> = b.iter().copied().collect();
+    let inter = sa.intersection(&sb).count();
+    let union = sa.union(&sb).count();
+    if union == 0 {
+        1.0
+    } else {
+        inter as f64 / union as f64
+    }
+}
+
+/// NDCG@k. `retrieved` is the method's ranked list; `relevance` maps every
+/// item to a graded relevance (here: derived from ground-truth rank).
+/// DCG = Σ (2^rel_i - 1) / log2(i + 1) (1-indexed positions, A.5).
+pub fn ndcg_at_k(retrieved: &[usize], relevance: &dyn Fn(usize) -> f64, k: usize) -> f64 {
+    let k = k.min(retrieved.len());
+    if k == 0 {
+        return 0.0;
+    }
+    let dcg: f64 = retrieved
+        .iter()
+        .take(k)
+        .enumerate()
+        .map(|(i, &item)| (2f64.powf(relevance(item)) - 1.0) / ((i + 2) as f64).log2())
+        .sum();
+    // Ideal DCG: sort all retrievable relevances descending. We use the
+    // top-k relevances among the *relevant universe* approximated by the
+    // retrieved ∪ ideal list the caller encodes in `relevance`; for the
+    // paper's use (ground-truth top-k has graded relevance, everything
+    // else 0) the ideal list is the ground-truth top-k itself.
+    let mut ideal: Vec<f64> = retrieved.iter().map(|&i| relevance(i)).collect();
+    ideal.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let idcg: f64 = ideal
+        .iter()
+        .take(k)
+        .enumerate()
+        .map(|(i, r)| (2f64.powf(*r) - 1.0) / ((i + 2) as f64).log2())
+        .sum();
+    if idcg == 0.0 {
+        0.0
+    } else {
+        dcg / idcg
+    }
+}
+
+/// Convenience: NDCG against a ground-truth ranked list. Item at
+/// ground-truth rank r (0-based) gets relevance `(k - r)/k`, others 0 —
+/// graded agreement with the ground-truth *ordering* as in Fig. 2.
+pub fn ndcg_vs_ground_truth(retrieved: &[usize], ground_truth: &[usize], k: usize) -> f64 {
+    let gt_rank: std::collections::HashMap<usize, usize> =
+        ground_truth.iter().take(k).enumerate().map(|(r, &i)| (i, r)).collect();
+    let rel = move |item: usize| -> f64 {
+        gt_rank.get(&item).map(|&r| (k - r) as f64 / k as f64).unwrap_or(0.0)
+    };
+    // Ideal ordering = the ground truth list itself.
+    let dcg: f64 = retrieved
+        .iter()
+        .take(k)
+        .enumerate()
+        .map(|(i, &item)| (2f64.powf(rel(item)) - 1.0) / ((i + 2) as f64).log2())
+        .sum();
+    let idcg: f64 = (0..k.min(ground_truth.len()))
+        .map(|i| {
+            let r = (k - i) as f64 / k as f64;
+            (2f64.powf(r) - 1.0) / ((i + 2) as f64).log2()
+        })
+        .sum();
+    if idcg == 0.0 {
+        0.0
+    } else {
+        dcg / idcg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::check_default;
+
+    #[test]
+    fn precision_perfect_and_zero() {
+        assert_eq!(precision_at_k(&[1, 2, 3], &[1, 2, 3], 3), 1.0);
+        assert_eq!(precision_at_k(&[4, 5, 6], &[1, 2, 3], 3), 0.0);
+        assert_eq!(precision_at_k(&[1, 9, 8], &[1, 2, 3], 3), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn jaccard_cases() {
+        assert_eq!(jaccard(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert_eq!(jaccard(&[1, 2, 3], &[2, 3, 4]), 0.5);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn ndcg_perfect_ranking_is_one() {
+        let gt = vec![10, 20, 30, 40];
+        assert!((ndcg_vs_ground_truth(&gt, &gt, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ndcg_penalizes_reversal() {
+        let gt = vec![1, 2, 3, 4];
+        let rev = vec![4, 3, 2, 1];
+        let n = ndcg_vs_ground_truth(&rev, &gt, 4);
+        assert!(n < 1.0 && n > 0.0, "n={n}");
+    }
+
+    #[test]
+    fn ndcg_set_equal_but_disordered_beats_disjoint() {
+        let gt = vec![1, 2, 3, 4];
+        let shuffled = vec![2, 1, 4, 3];
+        let disjoint = vec![9, 8, 7, 6];
+        assert!(ndcg_vs_ground_truth(&shuffled, &gt, 4) > ndcg_vs_ground_truth(&disjoint, &gt, 4));
+    }
+
+    #[test]
+    fn prop_metrics_in_unit_interval() {
+        check_default("metric-range", |rng, _| {
+            let n = 50;
+            let k = 1 + rng.below_usize(20);
+            let a: Vec<usize> = (0..k).map(|_| rng.below_usize(n)).collect();
+            let b: Vec<usize> = (0..k).map(|_| rng.below_usize(n)).collect();
+            let p = precision_at_k(&a, &b, k);
+            let j = jaccard(&a, &b);
+            let nd = ndcg_vs_ground_truth(&a, &b, k);
+            prop_assert!((0.0..=1.0).contains(&p), "p={p}");
+            prop_assert!((0.0..=1.0).contains(&j), "j={j}");
+            prop_assert!((0.0..=1.0 + 1e-9).contains(&nd), "ndcg={nd}");
+            Ok(())
+        });
+    }
+}

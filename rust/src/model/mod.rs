@@ -1,0 +1,165 @@
+//! Model configuration and the synthetic decode model used by the
+//! coordinator when no PJRT artifacts are loaded.
+//!
+//! The real model path (tiny transformer lowered from JAX) lives in
+//! `python/compile/model.py` + `runtime::Engine`; this module provides
+//! (a) the shared config struct mirrored on both sides and (b) a
+//! deterministic synthetic K/V/query stream with planted heavy-hitter
+//! structure so the coordinator and serving benches exercise realistic
+//! sparse-attention behaviour without weights.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg64;
+
+/// Transformer shape, mirrored by python/compile/model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+}
+
+impl ModelConfig {
+    /// The tiny e2e model compiled by `make artifacts` (~3M params —
+    /// enough to prove every layer composes; see DESIGN.md §2).
+    pub fn tiny() -> ModelConfig {
+        ModelConfig { d_model: 256, n_layers: 4, n_heads: 8, n_kv_heads: 2, head_dim: 32, vocab: 512, max_seq: 4096 }
+    }
+
+    /// Paper-shape config used for memory accounting (8B-class analog).
+    pub fn paper_8b() -> ModelConfig {
+        ModelConfig { d_model: 4096, n_layers: 32, n_heads: 32, n_kv_heads: 8, head_dim: 128, vocab: 128_256, max_seq: 131_072 }
+    }
+
+    /// Approximate parameter count (dense transformer, SwiGLU ff = 4x).
+    pub fn param_count(&self) -> usize {
+        let attn = self.d_model * self.n_heads * self.head_dim // Wq
+            + 2 * self.d_model * self.n_kv_heads * self.head_dim // Wk, Wv
+            + self.n_heads * self.head_dim * self.d_model; // Wo
+        let ff = 3 * self.d_model * 4 * self.d_model;
+        self.n_layers * (attn + ff) + 2 * self.vocab * self.d_model
+    }
+
+    /// KV-cache bytes per token (f32 here; the paper counts bf16).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.n_kv_heads * self.head_dim * 4
+    }
+}
+
+/// Deterministic synthetic K/V/query stream for one sequence: token t's
+/// key/value depend only on (seed, t), and a fraction of tokens are
+/// "heavy" — their keys align with future queries, reproducing the
+/// heavy-hitter structure sparse attention exploits.
+pub struct SyntheticModel {
+    pub config: ModelConfig,
+    seed: u64,
+    /// Query direction around which heavy tokens cluster.
+    topic: Vec<f32>,
+}
+
+impl SyntheticModel {
+    pub fn new(config: ModelConfig, seed: u64) -> SyntheticModel {
+        let mut rng = Pcg64::new(seed, 911);
+        let topic = crate::testing::gen::unit_vec(&mut rng, config.head_dim);
+        SyntheticModel { config, seed, topic }
+    }
+
+    /// Key/value of token `t` (per kv-head stream `h`).
+    ///
+    /// Scaled so that decode logits `q·k/√d` look like a trained model's:
+    /// background logits ~ N(0,1), heavy-hitter logits ≈ 3–6 — giving a
+    /// concentrated softmax that top-k methods can exploit (uniform
+    /// logits would make sparse ≈ impossible *and* unrealistic).
+    pub fn kv_at(&self, h: usize, t: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = self.config.head_dim;
+        let sqd = (d as f32).sqrt();
+        let mut rng = Pcg64::new(self.seed ^ (h as u64) << 40, t as u64);
+        let heavy = rng.next_f64() < 0.02; // 2% heavy hitters
+        let key: Vec<f32> = if heavy {
+            let cos = rng.range_f32(0.6, 0.9);
+            let k = crate::testing::gen::key_with_cosine(&mut rng, &self.topic, cos);
+            // ‖k‖ = 10√d ⇒ logit ≈ cos(q,k)·10 ∈ [6, 9] for aligned q —
+            // heavy hitters carry ≳95% of the softmax mass, like the
+            // concentrated attention of trained models [17, 56].
+            k.iter().map(|x| x * 10.0 * sqd).collect()
+        } else {
+            // component std √d ⇒ logit = q·k/√d ~ N(0, 1).
+            rng.normal_vec(d).iter().map(|x| x * sqd).collect()
+        };
+        let value = rng.normal_vec(d);
+        (key, value)
+    }
+
+    /// Dense K/V matrices for tokens `0..n` of head-stream `h`.
+    pub fn kv_matrix(&self, h: usize, n: usize) -> (Matrix, Matrix) {
+        let d = self.config.head_dim;
+        let mut keys = Matrix::zeros(n, d);
+        let mut values = Matrix::zeros(n, d);
+        for t in 0..n {
+            let (k, v) = self.kv_at(h, t);
+            keys.row_mut(t).copy_from_slice(&k);
+            values.row_mut(t).copy_from_slice(&v);
+        }
+        (keys, values)
+    }
+
+    /// Decode-step query for head `h` at step `s`: near the topic
+    /// direction (so heavy tokens matter), with per-step variation.
+    pub fn query_at(&self, h: usize, s: usize) -> Vec<f32> {
+        let d = self.config.head_dim;
+        let mut rng = Pcg64::new(self.seed ^ 0xDEC0DE ^ ((h as u64) << 32), s as u64);
+        let cos = rng.range_f32(0.5, 0.9);
+        crate::testing::gen::key_with_cosine(&mut rng, &self.topic, cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_param_count_small() {
+        let c = ModelConfig::tiny();
+        let p = c.param_count();
+        assert!(p > 1_000_000 && p < 20_000_000, "params={p}");
+    }
+
+    #[test]
+    fn paper_config_kv_scale() {
+        let c = ModelConfig::paper_8b();
+        // 8 KV heads x 128 dim x 32 layers x 2 (K+V) x 4B = 256 KiB/token
+        assert_eq!(c.kv_bytes_per_token(), 262144);
+    }
+
+    #[test]
+    fn kv_stream_deterministic() {
+        let m = SyntheticModel::new(ModelConfig::tiny(), 5);
+        let (k1, v1) = m.kv_at(0, 17);
+        let (k2, v2) = m.kv_at(0, 17);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        let (k3, _) = m.kv_at(1, 17);
+        assert_ne!(k1, k3, "head streams differ");
+    }
+
+    #[test]
+    fn heavy_tokens_exist() {
+        let m = SyntheticModel::new(ModelConfig::tiny(), 7);
+        let (keys, _) = m.kv_matrix(0, 400);
+        let q = m.query_at(0, 0);
+        let mut aligned = 0;
+        for t in 0..400 {
+            let k = keys.row(t);
+            let cos = crate::linalg::dot(k, &q) / (crate::linalg::l2_norm(k) * crate::linalg::l2_norm(&q));
+            if cos > 0.4 {
+                aligned += 1;
+            }
+        }
+        assert!(aligned >= 2, "aligned={aligned}");
+        assert!(aligned <= 40, "aligned={aligned}");
+    }
+}

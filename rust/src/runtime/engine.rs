@@ -1,0 +1,222 @@
+//! The PJRT execution engine: compile-once, execute-many wrapper around
+//! the `xla` crate. One [`Engine`] owns a CPU PJRT client and a cache of
+//! compiled executables keyed by artifact name, so the decode hot loop
+//! never touches the filesystem or recompiles.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Typed input tensor for [`Engine::run_with`].
+#[derive(Clone, Debug)]
+pub enum Input {
+    F32(Vec<i64>, Vec<f32>),
+    I32(Vec<i64>, Vec<i32>),
+    Bool(Vec<i64>, Vec<bool>),
+}
+
+impl Input {
+    /// Reuse a previous output as the next call's input (the cache
+    /// chaining pattern of the decode loop).
+    pub fn from_tensor(t: &Tensor) -> Input {
+        match &t.data {
+            TensorData::F32(v) => Input::F32(t.dims.clone(), v.clone()),
+            TensorData::I32(v) => Input::I32(t.dims.clone(), v.clone()),
+            TensorData::Pred(v) => Input::Bool(t.dims.clone(), v.clone()),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let reshape = |lit: xla::Literal, dims: &[i64]| -> Result<xla::Literal> {
+            if dims.is_empty() {
+                // vec1 of len 1 -> scalar: reshape to rank 0.
+                Ok(lit.reshape(&[])?)
+            } else {
+                Ok(lit.reshape(dims)?)
+            }
+        };
+        match self {
+            Input::F32(dims, data) => reshape(xla::Literal::vec1(data), dims),
+            Input::I32(dims, data) => reshape(xla::Literal::vec1(data), dims),
+            Input::Bool(dims, data) => {
+                // No bool NativeType in the crate: build u32, convert to PRED.
+                let words: Vec<u32> = data.iter().map(|&b| b as u32).collect();
+                let lit = xla::Literal::vec1(&words).convert(xla::PrimitiveType::Pred)?;
+                reshape(lit, dims)
+            }
+        }
+    }
+}
+
+/// Typed output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Tensor {
+    /// f32 view (panics on non-f32 — use for known-float outputs).
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            other => panic!("expected i32 tensor, got {other:?}"),
+        }
+    }
+}
+
+/// Back-compat f32-only spec (kept for simple artifacts + tests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorSpec {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorSpec {
+        let want: i64 = dims.iter().product();
+        assert_eq!(want as usize, data.len().max(1).min(data.len()), "shape/data mismatch");
+        assert_eq!(want as usize, data.len(), "shape/data mismatch");
+        TensorSpec { dims, data }
+    }
+}
+
+/// Compile-once / run-many PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create an engine over the CPU PJRT client.
+    pub fn cpu(artifacts_dir: PathBuf) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, artifacts_dir, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by name).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute with typed inputs; returns the flattened output tuple.
+    pub fn run_with(&self, name: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result =
+            exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = match shape.ty() {
+                    xla::ElementType::F32 => {
+                        TensorData::F32(lit.to_vec::<f32>().map_err(|e| anyhow!("f32: {e:?}"))?)
+                    }
+                    xla::ElementType::S32 => {
+                        TensorData::I32(lit.to_vec::<i32>().map_err(|e| anyhow!("i32: {e:?}"))?)
+                    }
+                    xla::ElementType::Pred => {
+                        let as_u8 = lit
+                            .convert(xla::PrimitiveType::U8)
+                            .map_err(|e| anyhow!("pred: {e:?}"))?;
+                        TensorData::Pred(
+                            as_u8
+                                .to_vec::<u8>()
+                                .map_err(|e| anyhow!("pred vec: {e:?}"))?
+                                .into_iter()
+                                .map(|b| b != 0)
+                                .collect(),
+                        )
+                    }
+                    other => return Err(anyhow!("unsupported output element type {other:?}")),
+                };
+                Ok(Tensor { dims, data })
+            })
+            .collect()
+    }
+
+    /// f32-only convenience wrapper around [`Engine::run_with`].
+    pub fn run(&self, name: &str, inputs: &[TensorSpec]) -> Result<Vec<TensorSpec>> {
+        let typed: Vec<Input> =
+            inputs.iter().map(|t| Input::F32(t.dims.clone(), t.data.clone())).collect();
+        self.run_with(name, &typed)?
+            .into_iter()
+            .map(|t| match t.data {
+                TensorData::F32(v) => Ok(TensorSpec { dims: t.dims, data: v }),
+                other => Err(anyhow!("non-f32 output {other:?}; use run_with")),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_validates_shape() {
+        let t = TensorSpec::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_spec_rejects_bad_shape() {
+        TensorSpec::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn input_round_trips_tensor() {
+        let t = Tensor { dims: vec![2], data: TensorData::I32(vec![1, 2]) };
+        match Input::from_tensor(&t) {
+            Input::I32(dims, v) => {
+                assert_eq!(dims, vec![2]);
+                assert_eq!(v, vec![1, 2]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they
+    // need the artifacts built by `make artifacts`).
+}

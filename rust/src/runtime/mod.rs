@@ -1,0 +1,44 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+
+pub use engine::{Engine, Input, Tensor, TensorData, TensorSpec};
+
+use std::path::{Path, PathBuf};
+
+/// Resolve the artifacts directory: `$SOCKET_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("SOCKET_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Try cwd and the crate root.
+    for base in [".", env!("CARGO_MANIFEST_DIR")] {
+        let p = Path::new(base).join("artifacts");
+        if p.is_dir() {
+            return p;
+        }
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Whether the named artifact exists (benches skip PJRT paths if not).
+pub fn artifact_available(name: &str) -> bool {
+    artifacts_dir().join(name).is_file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,216 @@
+//! TCP line-protocol front-end over the coordinator.
+//!
+//! Protocol: one JSON object per line.
+//! Request:  `{"op":"generate","context_len":N,"decode_len":M}`
+//!           `{"op":"stats"}` · `{"op":"ping"}`
+//! Response: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! std::net + a small thread pool (tokio is unavailable offline); each
+//! connection is handled by a pool worker, requests route through the
+//! shared [`Coordinator`].
+
+use crate::coordinator::{BatchPolicy, Coordinator, EngineConfig};
+use crate::util::Json;
+use crate::workload::trace::Request;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Server state shared across connection handlers.
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+    next_id: Arc<AtomicU64>,
+    served: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn new(config: EngineConfig, policy: BatchPolicy) -> Server {
+        Server {
+            coordinator: Arc::new(Coordinator::spawn(config, policy)),
+            next_id: Arc::new(AtomicU64::new(1)),
+            served: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Handle one already-parsed request object (also used directly by
+    /// unit tests — the wire layer is a thin shell around this).
+    pub fn handle(&self, msg: &Json) -> Json {
+        match msg.get("op").and_then(|o| o.as_str()) {
+            Some("ping") => Json::obj().set("ok", true).set("pong", true),
+            Some("stats") => Json::obj()
+                .set("ok", true)
+                .set("served", self.served.load(Ordering::Relaxed)),
+            Some("generate") => {
+                let ctx = msg.get("context_len").and_then(|v| v.as_usize()).unwrap_or(0);
+                let dec = msg.get("decode_len").and_then(|v| v.as_usize()).unwrap_or(0);
+                if ctx == 0 || dec == 0 {
+                    return Json::obj().set("ok", false).set("error", "context_len and decode_len must be positive");
+                }
+                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+                let handle = self.coordinator.submit(Request {
+                    id,
+                    arrival_ms: 0.0,
+                    context_len: ctx,
+                    decode_len: dec,
+                });
+                let c = handle.wait();
+                self.served.fetch_add(1, Ordering::Relaxed);
+                Json::obj()
+                    .set("ok", true)
+                    .set("id", c.id)
+                    .set("ttft_ms", c.ttft_ms)
+                    .set("total_ms", c.total_ms)
+                    .set("decode_len", c.decode_len)
+            }
+            Some(other) => Json::obj().set("ok", false).set("error", format!("unknown op '{other}'")),
+            None => Json::obj().set("ok", false).set("error", "missing 'op'"),
+        }
+    }
+
+    fn handle_line(&self, line: &str) -> Json {
+        match Json::parse(line) {
+            Ok(msg) => self.handle(&msg),
+            Err(e) => Json::obj().set("ok", false).set("error", format!("bad json: {e}")),
+        }
+    }
+
+    fn serve_conn(&self, stream: TcpStream) {
+        let peer = stream.peer_addr().ok();
+        let mut writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let resp = self.handle_line(&line);
+            if writeln!(writer, "{resp}").is_err() {
+                break;
+            }
+        }
+        let _ = peer;
+    }
+
+    /// Serve on `addr` with `n_workers` connection-handler threads until
+    /// `stop` is set. Returns the bound local address.
+    pub fn serve(
+        self: Arc<Self>,
+        addr: &str,
+        n_workers: usize,
+        stop: Arc<AtomicBool>,
+    ) -> std::io::Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        // Worker pool pulling accepted connections.
+        for _ in 0..n_workers {
+            let server = Arc::clone(&self);
+            let conns = Arc::clone(&conns);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || loop {
+                let conn = conns.lock().unwrap().pop();
+                match conn {
+                    Some(c) => server.serve_conn(c),
+                    None => {
+                        if stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                }
+            });
+        }
+        // Acceptor thread.
+        let stop_acc = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !stop_acc.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => conns.lock().unwrap().push(stream),
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(local)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AttentionMode;
+    use crate::lsh::LshParams;
+    use crate::model::ModelConfig;
+
+    fn server() -> Server {
+        let config = EngineConfig {
+            model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
+            lsh: LshParams { p: 6, l: 8, tau: 0.5 },
+            mode: AttentionMode::Socket { sparsity: 8.0 },
+            capacity_pages: 1024,
+            sink: 4,
+            local: 4,
+        };
+        Server::new(config, BatchPolicy::default())
+    }
+
+    #[test]
+    fn ping_and_stats() {
+        let s = server();
+        let pong = s.handle(&Json::parse(r#"{"op":"ping"}"#).unwrap());
+        assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
+        let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert_eq!(stats.get("served").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn generate_round_trip() {
+        let s = server();
+        let resp = s.handle(&Json::parse(r#"{"op":"generate","context_len":64,"decode_len":2}"#).unwrap());
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert!(resp.get("total_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert_eq!(stats.get("served").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        let s = server();
+        for bad in [
+            r#"{"op":"generate","context_len":0,"decode_len":2}"#,
+            r#"{"op":"nonsense"}"#,
+            r#"{"no_op":1}"#,
+        ] {
+            let resp = s.handle(&Json::parse(bad).unwrap());
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+        let resp = s.handle_line("not json at all");
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        use std::io::{BufRead, BufReader, Write};
+        let s = Arc::new(server());
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = Arc::clone(&s).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        writeln!(conn, r#"{{"op":"generate","context_len":48,"decode_len":1}}"#).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{line}");
+        stop.store(true, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,150 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is unavailable in this offline environment, so we ship a
+//! seeded-generator framework with the same spirit: generate many random
+//! cases, check an invariant, and report the seed of the first failing
+//! case so it can be replayed deterministically.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses stream `i`.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng, case_index)` for each case; panics with the replay seed
+/// on the first failure (returned `Err(msg)`).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Pcg64::new(cfg.seed, case as u64);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!(
+                "property '{name}' failed at case {case} (replay: Pcg64::new({}, {case})): {msg}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg64, usize) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop);
+}
+
+/// Assert helper for property bodies: turn a boolean into Result.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Generators for common shapes used across the test suite.
+pub mod gen {
+    use super::Pcg64;
+
+    /// A random unit vector of dimension d.
+    pub fn unit_vec(rng: &mut Pcg64, d: usize) -> Vec<f32> {
+        let mut v = rng.normal_vec(d);
+        let n = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+        v
+    }
+
+    /// A random matrix (rows x cols) of i.i.d. normals, row-major.
+    pub fn matrix(rng: &mut Pcg64, rows: usize, cols: usize) -> Vec<f32> {
+        rng.normal_vec(rows * cols)
+    }
+
+    /// A key near `q` with cosine similarity roughly `cos_target`.
+    pub fn key_with_cosine(rng: &mut Pcg64, q: &[f32], cos_target: f32) -> Vec<f32> {
+        let d = q.len();
+        let mut noise = unit_vec(rng, d);
+        // Orthogonalize noise against q.
+        let dot: f32 = q.iter().zip(&noise).map(|(a, b)| a * b).sum();
+        let qn: f32 = q.iter().map(|x| x * x).sum::<f32>().max(1e-12);
+        for i in 0..d {
+            noise[i] -= dot / qn * q[i];
+        }
+        let nn = noise.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+        let s = (1.0 - cos_target * cos_target).max(0.0).sqrt();
+        let qnorm = qn.sqrt();
+        (0..d).map(|i| cos_target * q[i] / qnorm + s * noise[i] / nn).collect()
+    }
+
+    /// Sizes drawn log-uniformly in [lo, hi].
+    pub fn size(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        assert!(lo >= 1 && hi >= lo);
+        let l = (lo as f64).ln();
+        let h = (hi as f64).ln();
+        let x = l + (h - l) * rng.next_f64();
+        (x.exp().round() as usize).clamp(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check_default("sum-commutes", |rng, _| {
+            let a = rng.next_f64();
+            let b = rng.next_f64();
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", PropConfig { cases: 3, seed: 1 }, |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn unit_vec_has_unit_norm() {
+        check_default("unit-norm", |rng, _| {
+            let d = gen::size(rng, 2, 256);
+            let v = gen::unit_vec(rng, d);
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            prop_assert!((n - 1.0).abs() < 1e-4, "norm={n} d={d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn key_with_cosine_hits_target() {
+        check_default("cosine-target", |rng, _| {
+            let d = 64;
+            let q = gen::unit_vec(rng, d);
+            let c = rng.range_f32(-0.9, 0.9);
+            let k = gen::key_with_cosine(rng, &q, c);
+            let kn: f32 = k.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let dot: f32 = q.iter().zip(&k).map(|(a, b)| a * b).sum();
+            let cos = dot / kn;
+            prop_assert!((cos - c).abs() < 1e-3, "target={c} got={cos}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained substrates: RNG, stats, JSON, CLI parsing, table
+//! formatting and timing. These replace crates that are unavailable in
+//! the offline build environment (rand, serde, clap, criterion).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod timer;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Pcg64;
+pub use stats::{mean, pearson, percentile, variance, Accumulator, LatencySummary};
+pub use table::{fnum, Table};
+pub use timer::{bench_ms, black_box, time_ms, PhaseTimer};

@@ -1,0 +1,201 @@
+//! Summary statistics used across benches and experiment drivers.
+
+/// Running scalar accumulator: mean / variance (Welford) / min / max.
+#[derive(Clone, Debug, Default)]
+pub struct Accumulator {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Accumulator { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile over a copy of the data (nearest-rank with linear interp).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Pearson correlation coefficient between two equal-length samples.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        cov += dx * dy;
+        vx += dx * dx;
+        vy += dy * dy;
+    }
+    if vx == 0.0 || vy == 0.0 {
+        0.0
+    } else {
+        cov / (vx.sqrt() * vy.sqrt())
+    }
+}
+
+/// Latency histogram summary used by the serving benches.
+#[derive(Clone, Debug, Default)]
+pub struct LatencySummary {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencySummary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        mean(&self.samples_ms)
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.samples_ms, 50.0)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        percentile(&self.samples_ms, 95.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.samples_ms, 99.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulator_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut acc = Accumulator::new();
+        for &x in &xs {
+            acc.push(x);
+        }
+        assert!((acc.mean() - 4.0).abs() < 1e-12);
+        assert!((acc.variance() - variance(&xs)).abs() < 1e-9);
+        assert_eq!(acc.min(), 1.0);
+        assert_eq!(acc.max(), 10.0);
+        assert_eq!(acc.count(), 5);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs = [-2.0, -4.0, -6.0];
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_zero_variance_is_zero() {
+        let xs = [1.0, 1.0, 1.0];
+        let ys = [2.0, 4.0, 6.0];
+        assert_eq!(pearson(&xs, &ys), 0.0);
+    }
+
+    #[test]
+    fn latency_summary() {
+        let mut l = LatencySummary::new();
+        for i in 1..=100 {
+            l.record_ms(i as f64);
+        }
+        assert_eq!(l.count(), 100);
+        assert!((l.p50_ms() - 50.5).abs() < 1.0);
+        assert!(l.p99_ms() > 98.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Wall-clock timing helpers for the bench harness.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, elapsed milliseconds).
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+/// Run `f` `iters` times after `warmup` warmup runs; returns per-iteration
+/// milliseconds (mean over iters). A black-box sink prevents the optimizer
+/// from deleting the work.
+pub fn bench_ms<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        black_box(f());
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / iters as f64
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A simple scoped stopwatch accumulating named phases.
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, f64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn run<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, ms) = time_ms(f);
+        self.phases.push((name.to_string(), ms));
+        out
+    }
+
+    pub fn phases(&self) -> &[(String, f64)] {
+        &self.phases
+    }
+
+    pub fn total_ms(&self) -> f64 {
+        self.phases.iter().map(|(_, ms)| ms).sum()
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, ms) in &self.phases {
+            s.push_str(&format!("{name:<24} {ms:>10.3} ms\n"));
+        }
+        s.push_str(&format!("{:<24} {:>10.3} ms\n", "total", self.total_ms()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ms_returns_result() {
+        let (v, ms) = time_ms(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_all_iterations() {
+        let mut count = 0usize;
+        let per = bench_ms(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert!(per >= 0.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        let a = pt.run("a", || 1);
+        let b = pt.run("b", || 2);
+        assert_eq!(a + b, 3);
+        assert_eq!(pt.phases().len(), 2);
+        assert!(pt.report().contains("total"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Synthetic workloads standing in for the paper's datasets.
+//!
+//! The paper evaluates on RULER (synthetic long-context retrieval) and
+//! LongBench (natural long-context tasks) using Llama/Qwen checkpoints.
+//! Neither models nor datasets are reachable offline, so we build
+//! *planted-signal attention problems* that measure the same quantity
+//! the paper's scores measure: whether a sparse scorer retrieves the
+//! keys that dominate the attention computation (see DESIGN.md §2 for
+//! the substitution argument).
+//!
+//! * [`ruler`] — per-task analogs of RULER-HARD (nm2, nm3, vt, fwe,
+//!   qa1, qa2) with task-matched difficulty profiles.
+//! * [`longbench`] — a 15-task proxy suite scored by attention fidelity
+//!   and span retrieval under heavy-tailed score distributions.
+//! * [`trace`] — request traces (arrivals, context lengths) for the
+//!   serving benches.
+
+pub mod longbench;
+pub mod ruler;
+pub mod trace;
+
+pub use ruler::{RulerInstance, RulerTask, RULER_TASKS};
+pub use trace::{Request, TraceConfig, TraceGenerator};

@@ -1,0 +1,244 @@
+//! RULER-HARD analogs: planted-needle attention retrieval tasks.
+//!
+//! Each task generates a long context of key/value vectors in which a
+//! small set of **needle** tokens carries the answer: needle keys have a
+//! task-specific cosine similarity to the query, embedded among
+//! *distractors* (near-needle similarity — multi-key confusion) and
+//! diffuse background tokens. A sparse method's task score is the
+//! (ceiling-scaled) recall of the needles within its selected set — the
+//! exact quantity RULER's string-matching accuracy measures one level
+//! up the stack: if the needle tokens are not attended, the model
+//! cannot emit the answer.
+//!
+//! Task profiles are tuned so that *dense/oracle* attains roughly the
+//! paper's dense baselines (e.g. qa2 ≈ 50 even when retrieval is easy:
+//! the ceiling encodes the model's intrinsic task ability).
+
+use crate::linalg::Matrix;
+use crate::testing::gen;
+use crate::util::rng::Pcg64;
+
+/// A RULER-analog task profile.
+#[derive(Clone, Copy, Debug)]
+pub struct RulerTask {
+    pub name: &'static str,
+    /// Number of answer-carrying tokens.
+    pub n_needles: usize,
+    /// Cosine similarity of needle keys to the query.
+    pub needle_cos: f32,
+    /// Number of distractor tokens (confusable near-needles).
+    pub n_distractors: usize,
+    /// Cosine similarity of distractors to the query.
+    pub distractor_cos: f32,
+    /// Max achievable score (dense-model task ability).
+    pub ceiling: f64,
+}
+
+/// The six RULER-HARD-32K tasks of Table 1.
+///
+/// Profiles ordered by observed difficulty in the paper: nm2/nm3 are
+/// single-needle multikey tasks (nm3 with tighter margin — it is the
+/// first to collapse), vt tracks a 5-hop chain, fwe needs ~30 frequent
+/// tokens, qa1/qa2 are QA tasks whose dense ceiling is itself limited.
+pub const RULER_TASKS: [RulerTask; 6] = [
+    RulerTask { name: "nm2", n_needles: 1, needle_cos: 0.82, n_distractors: 24, distractor_cos: 0.58, ceiling: 100.0 },
+    RulerTask { name: "nm3", n_needles: 1, needle_cos: 0.74, n_distractors: 48, distractor_cos: 0.60, ceiling: 100.0 },
+    RulerTask { name: "vt", n_needles: 5, needle_cos: 0.78, n_distractors: 32, distractor_cos: 0.55, ceiling: 98.0 },
+    RulerTask { name: "fwe", n_needles: 30, needle_cos: 0.72, n_distractors: 60, distractor_cos: 0.52, ceiling: 94.0 },
+    RulerTask { name: "qa1", n_needles: 4, needle_cos: 0.70, n_distractors: 80, distractor_cos: 0.58, ceiling: 85.0 },
+    RulerTask { name: "qa2", n_needles: 4, needle_cos: 0.62, n_distractors: 120, distractor_cos: 0.55, ceiling: 55.0 },
+];
+
+/// Tokens per planted span (a RULER needle is a sentence, not a token).
+pub const SPAN_LEN: usize = 4;
+
+/// One generated task instance.
+pub struct RulerInstance {
+    pub keys: Matrix,
+    pub values: Matrix,
+    pub query: Vec<f32>,
+    /// Token indices of the needles.
+    pub needles: Vec<usize>,
+}
+
+impl RulerTask {
+    pub fn by_name(name: &str) -> Option<RulerTask> {
+        RULER_TASKS.iter().find(|t| t.name == name).copied()
+    }
+
+    /// Generate an instance with `n` context tokens of dimension `dim`.
+    ///
+    /// Realism notes (these matter for baseline fairness):
+    /// * background keys follow an AR(1) process over positions
+    ///   (adjacent tokens are correlated, like real hidden states) — this
+    ///   is what makes page-level methods (Quest) viable;
+    /// * each needle/distractor is a contiguous *span* of
+    ///   [`SPAN_LEN`] tokens (RULER needles are sentences); the needle
+    ///   set contains every token of every needle span.
+    pub fn generate(&self, n: usize, dim: usize, rng: &mut Pcg64) -> RulerInstance {
+        let span = SPAN_LEN;
+        // Needle/distractor counts are in *tokens*; group them into
+        // contiguous spans (a RULER needle is a sentence). Distractor
+        // density scales with context length (task profiles are tuned
+        // at 2048 tokens) so difficulty is roughly n-invariant.
+        let mult = (n / 2048).max(1);
+        let needle_spans = self.n_needles.div_ceil(span);
+        let distractor_spans = (self.n_distractors * mult).div_ceil(span);
+        let n_special = needle_spans + distractor_spans;
+        assert!(n > n_special * span * 2, "context too small for task");
+        let query = gen::unit_vec(rng, dim);
+        let mut keys = Matrix::zeros(n, dim);
+        let mut values = Matrix::zeros(n, dim);
+        let scale = (dim as f32).sqrt();
+        // Background: AR(1) token locality, unit-direction keys at
+        // norm ~sqrt(d) like the planted spans.
+        let rho = 0.85f32;
+        let mut prev = gen::unit_vec(rng, dim);
+        for j in 0..n {
+            let noise = gen::unit_vec(rng, dim);
+            let mut dir = vec![0.0f32; dim];
+            for c in 0..dim {
+                dir[c] = rho * prev[c] + (1.0 - rho * rho).sqrt() * noise[c];
+            }
+            crate::linalg::normalize(&mut dir);
+            for c in 0..dim {
+                keys.set(j, c, dir[c] * scale);
+            }
+            prev = dir;
+            let v = rng.normal_vec(dim);
+            values.row_mut(j).copy_from_slice(&v);
+        }
+        // Pick non-overlapping span starts.
+        let slots = n / span;
+        let starts = rng.sample_indices(slots, n_special);
+        let (needle_slots, distractor_slots) = starts.split_at(needle_spans);
+        let mut needles = Vec::with_capacity(needle_spans * span);
+        for &slot in needle_slots {
+            // Slight per-needle cosine jitter models phrasing variation.
+            let base = (self.needle_cos + rng.range_f32(-0.03, 0.03)).clamp(0.05, 0.99);
+            for t in 0..span {
+                let j = slot * span + t;
+                let cos = (base + rng.range_f32(-0.02, 0.02)).clamp(0.05, 0.99);
+                let k = gen::key_with_cosine(rng, &query, cos);
+                for c in 0..dim {
+                    keys.set(j, c, k[c] * scale);
+                }
+                // Answer tokens carry above-average value norm.
+                let mut v = rng.normal_vec(dim);
+                for x in v.iter_mut() {
+                    *x *= 1.4;
+                }
+                values.row_mut(j).copy_from_slice(&v);
+                needles.push(j);
+            }
+        }
+        for &slot in distractor_slots {
+            let base = (self.distractor_cos + rng.range_f32(-0.05, 0.05)).clamp(0.0, 0.95);
+            for t in 0..span {
+                let j = slot * span + t;
+                let k = gen::key_with_cosine(rng, &query, base);
+                for c in 0..dim {
+                    keys.set(j, c, k[c] * scale);
+                }
+            }
+        }
+        needles.sort_unstable();
+        RulerInstance { keys, values, query, needles }
+    }
+
+    /// Score a selection: ceiling-scaled needle recall.
+    pub fn score(&self, selected: &[usize], needles: &[usize]) -> f64 {
+        if needles.is_empty() {
+            return self.ceiling;
+        }
+        let sel: std::collections::HashSet<usize> = selected.iter().copied().collect();
+        let hit = needles.iter().filter(|i| sel.contains(i)).count();
+        self.ceiling * hit as f64 / needles.len() as f64
+    }
+}
+
+/// Evaluate a [`TokenSelector`] on a task: mean score over `instances`
+/// independently generated instances of `n` tokens.
+pub fn evaluate_selector(
+    task: &RulerTask,
+    selector: &mut dyn crate::baselines::TokenSelector,
+    n: usize,
+    dim: usize,
+    k: usize,
+    instances: usize,
+    seed: u64,
+) -> f64 {
+    let mut total = 0.0;
+    for i in 0..instances {
+        let mut rng = Pcg64::new(seed, i as u64 * 7919 + 1);
+        let inst = task.generate(n, dim, &mut rng);
+        selector.build(&inst.keys, &inst.values);
+        let selected = selector.select(&inst.query, k);
+        total += task.score(&selected, &inst.needles);
+    }
+    total / instances as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::oracle::OracleSelector;
+    use crate::baselines::TokenSelector;
+
+    #[test]
+    fn tasks_have_unique_names() {
+        let mut names: Vec<&str> = RULER_TASKS.iter().map(|t| t.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 6);
+        assert!(RulerTask::by_name("vt").is_some());
+        assert!(RulerTask::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn instance_shape_and_needles() {
+        let mut rng = Pcg64::seeded(1);
+        let t = RulerTask::by_name("vt").unwrap();
+        let inst = t.generate(512, 32, &mut rng);
+        assert_eq!(inst.keys.rows, 512);
+        // vt has 5 needle tokens -> ceil(5/4)=2 spans -> 8 tokens.
+        assert_eq!(inst.needles.len(), 5usize.div_ceil(SPAN_LEN) * SPAN_LEN);
+        assert!(inst.needles.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn needles_have_high_cosine() {
+        let mut rng = Pcg64::seeded(2);
+        let t = RULER_TASKS[0]; // nm2
+        let inst = t.generate(256, 48, &mut rng);
+        let j = inst.needles[0];
+        let k = inst.keys.row(j);
+        let cos = crate::linalg::dot(k, &inst.query) / crate::linalg::l2_norm(k);
+        assert!(cos > 0.7, "needle cos={cos}");
+    }
+
+    #[test]
+    fn score_is_ceiling_scaled_recall() {
+        let t = RULER_TASKS[2]; // vt, 5 needles, ceiling 98
+        assert_eq!(t.score(&[1, 2, 3, 4, 5], &[1, 2, 3, 4, 5]), 98.0);
+        assert!((t.score(&[1, 2], &[1, 2, 3, 4, 5]) - 98.0 * 0.4).abs() < 1e-9);
+        assert_eq!(t.score(&[9], &[1]), 0.0);
+    }
+
+    #[test]
+    fn oracle_scores_near_ceiling_on_easy_task() {
+        let t = RulerTask::by_name("nm2").unwrap();
+        let mut oracle = OracleSelector::new(false);
+        let score = evaluate_selector(&t, &mut oracle, 512, 48, 64, 8, 42);
+        assert!(score > 0.85 * t.ceiling, "oracle score {score} vs ceiling {}", t.ceiling);
+    }
+
+    #[test]
+    fn tiny_budget_hurts() {
+        let t = RulerTask::by_name("qa2").unwrap();
+        let mut oracle = OracleSelector::new(false);
+        let generous = evaluate_selector(&t, &mut oracle, 512, 48, 128, 6, 7);
+        let starved = evaluate_selector(&t, &mut oracle, 512, 48, 2, 6, 7);
+        assert!(generous > starved, "generous={generous} starved={starved}");
+    }
+}

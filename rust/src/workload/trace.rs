@@ -1,0 +1,117 @@
+//! Serving request traces for the throughput / latency benches
+//! (Fig. 3b/c) and the coordinator integration tests.
+
+use crate::util::rng::Pcg64;
+
+/// A single inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time, milliseconds from trace start.
+    pub arrival_ms: f64,
+    /// Prompt (context) length in tokens.
+    pub context_len: usize,
+    /// Decode length in tokens.
+    pub decode_len: usize,
+}
+
+/// Trace parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate, requests/second (Poisson process).
+    pub rate_rps: f64,
+    /// Log-uniform context length range.
+    pub context_min: usize,
+    pub context_max: usize,
+    /// Uniform decode length range.
+    pub decode_min: usize,
+    pub decode_max: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { rate_rps: 4.0, context_min: 1024, context_max: 32 * 1024, decode_min: 16, decode_max: 256 }
+    }
+}
+
+/// Deterministic Poisson-arrival trace generator.
+pub struct TraceGenerator {
+    cfg: TraceConfig,
+    rng: Pcg64,
+    next_id: u64,
+    clock_ms: f64,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: TraceConfig, seed: u64) -> TraceGenerator {
+        TraceGenerator { cfg, rng: Pcg64::new(seed, 31), next_id: 0, clock_ms: 0.0 }
+    }
+
+    /// Next request in the trace.
+    pub fn next(&mut self) -> Request {
+        // Exponential inter-arrival.
+        let u = (1.0 - self.rng.next_f64()).max(1e-12);
+        self.clock_ms += -u.ln() / self.cfg.rate_rps * 1e3;
+        // Log-uniform context length.
+        let lo = (self.cfg.context_min as f64).ln();
+        let hi = (self.cfg.context_max as f64).ln();
+        let ctx = (lo + (hi - lo) * self.rng.next_f64()).exp().round() as usize;
+        let dec = self.cfg.decode_min
+            + self.rng.below_usize(self.cfg.decode_max - self.cfg.decode_min + 1);
+        let req = Request {
+            id: self.next_id,
+            arrival_ms: self.clock_ms,
+            context_len: ctx.clamp(self.cfg.context_min, self.cfg.context_max),
+            decode_len: dec,
+        };
+        self.next_id += 1;
+        req
+    }
+
+    /// Generate a fixed-size batch of requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let mut g = TraceGenerator::new(TraceConfig::default(), 1);
+        let reqs = g.take(100);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+            assert!(w[1].id == w[0].id + 1);
+        }
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let cfg = TraceConfig { context_min: 100, context_max: 1000, decode_min: 5, decode_max: 10, rate_rps: 10.0 };
+        let mut g = TraceGenerator::new(cfg, 2);
+        for r in g.take(500) {
+            assert!((100..=1000).contains(&r.context_len));
+            assert!((5..=10).contains(&r.decode_len));
+        }
+    }
+
+    #[test]
+    fn mean_rate_approximates_config() {
+        let cfg = TraceConfig { rate_rps: 20.0, ..Default::default() };
+        let mut g = TraceGenerator::new(cfg, 3);
+        let reqs = g.take(2000);
+        let span_s = reqs.last().unwrap().arrival_ms / 1e3;
+        let rate = 2000.0 / span_s;
+        assert!((rate - 20.0).abs() < 2.0, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut a = TraceGenerator::new(TraceConfig::default(), 7);
+        let mut b = TraceGenerator::new(TraceConfig::default(), 7);
+        assert_eq!(a.take(50), b.take(50));
+    }
+}

@@ -1,0 +1,147 @@
+//! Cross-module integration tests on the pure-Rust engine (no PJRT
+//! artifacts needed): full SOCKET pipeline vs dense, coordinator under
+//! a trace, baseline comparisons on shared workloads.
+
+use socket_attn::attention::{dense_attention, flash_decode, SelectionPolicy};
+use socket_attn::baselines::{SocketSelector, TokenSelector};
+use socket_attn::coordinator::{
+    AttentionMode, BatchPolicy, Coordinator, EngineConfig,
+};
+use socket_attn::linalg::Matrix;
+use socket_attn::lsh::LshParams;
+use socket_attn::metrics::{attention_mass_recall, output_relative_error};
+use socket_attn::model::ModelConfig;
+use socket_attn::util::rng::Pcg64;
+use socket_attn::workload::ruler::{RulerTask, SPAN_LEN};
+use socket_attn::workload::trace::{TraceConfig, TraceGenerator};
+
+/// SOCKET top-k selection captures most dense attention mass and the
+/// sparse output approximates dense — the system's core contract, on
+/// the heavy-hitter workload of a trained model's attention.
+#[test]
+fn socket_pipeline_attention_fidelity() {
+    let (n, dim) = (4096usize, 64usize);
+    let model = socket_attn::model::SyntheticModel::new(
+        ModelConfig { head_dim: dim, ..ModelConfig::tiny() },
+        42,
+    );
+    let (keys, values) = model.kv_matrix(0, n);
+    let q = model.query_at(0, 0);
+    let mut sel = SocketSelector::new(LshParams::paper_default(), dim, 7);
+    sel.build(&keys, &values);
+    let policy = SelectionPolicy::from_sparsity(n, 10.0, 16, 16);
+    let top = sel.select(&q, policy.k);
+    let selected = policy.merge(&top, n);
+    let scale = 1.0 / (dim as f32).sqrt();
+    let recall = attention_mass_recall(&q, &keys, &selected, scale);
+    assert!(recall > 0.8, "attention-mass recall {recall}");
+    let yd = dense_attention(&q, &keys, &values, scale);
+    let ys = flash_decode(&q, &keys, &values, Some(&selected), scale);
+    let rel = output_relative_error(&ys, &yd);
+    assert!(rel < 0.25, "rel output err {rel}");
+}
+
+/// Needle spans survive the full pipeline at paper sparsity.
+#[test]
+fn needle_retrieval_at_20x() {
+    let (n, dim) = (4096usize, 64usize);
+    let mut rng = Pcg64::seeded(1);
+    let task = RulerTask::by_name("vt").unwrap();
+    let inst = task.generate(n, dim, &mut rng);
+    let mut sel = SocketSelector::new(LshParams::paper_default(), dim, 5);
+    sel.build(&inst.keys, &inst.values);
+    let k = n / 20;
+    let got = sel.select(&inst.query, k);
+    let score = task.score(&got, &inst.needles);
+    assert!(score > 0.6 * task.ceiling, "vt score {score} of {}", task.ceiling);
+    let _ = SPAN_LEN;
+}
+
+/// Coordinator serves a bursty trace to completion with SOCKET decode.
+#[test]
+fn coordinator_serves_trace() {
+    let config = EngineConfig {
+        model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
+        lsh: LshParams { p: 6, l: 8, tau: 0.5 },
+        mode: AttentionMode::Socket { sparsity: 8.0 },
+        capacity_pages: 8192,
+        sink: 4,
+        local: 4,
+    };
+    let coord = Coordinator::spawn(config, BatchPolicy::default());
+    let mut gen = TraceGenerator::new(
+        TraceConfig { rate_rps: 100.0, context_min: 32, context_max: 256, decode_min: 2, decode_max: 6 },
+        3,
+    );
+    let reqs = gen.take(20);
+    let handles: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone())).collect();
+    let mut total_tokens = 0usize;
+    for h in handles {
+        let c = h.wait();
+        assert!(c.ttft_ms <= c.total_ms + 1e-6);
+        total_tokens += c.decode_len;
+    }
+    let stats = coord.shutdown();
+    assert_eq!(stats.completed, 20);
+    assert_eq!(stats.decode_steps as usize, total_tokens);
+}
+
+/// Dense vs SOCKET coordinator modes produce close outputs for the same
+/// sequence (the serving-level analog of the kernel fidelity test).
+#[test]
+fn serving_modes_agree() {
+    let base = EngineConfig {
+        model: ModelConfig { head_dim: 32, n_kv_heads: 2, ..ModelConfig::tiny() },
+        lsh: LshParams { p: 10, l: 48, tau: 0.5 },
+        mode: AttentionMode::Dense,
+        capacity_pages: 4096,
+        sink: 8,
+        local: 8,
+    };
+    let mut dense = socket_attn::coordinator::DecodeEngine::new(base);
+    let mut sparse = socket_attn::coordinator::DecodeEngine::new(EngineConfig {
+        mode: AttentionMode::Socket { sparsity: 8.0 },
+        ..base
+    });
+    assert!(dense.prefill(1, 512, 4));
+    assert!(sparse.prefill(1, 512, 4));
+    for _ in 0..3 {
+        let yd = dense.decode_step(1);
+        let ys = sparse.decode_step(1);
+        for h in 0..yd.len() {
+            let rel = output_relative_error(&ys[h], &yd[h]);
+            assert!(rel < 0.5, "head {h} rel {rel}");
+        }
+    }
+}
+
+/// All baselines run on one shared instance and return valid selections.
+#[test]
+fn all_selectors_produce_valid_selections() {
+    use socket_attn::experiments::Method;
+    let (n, dim) = (1024usize, 64usize);
+    let mut rng = Pcg64::seeded(9);
+    let keys = Matrix::gaussian(n, dim, &mut rng);
+    let vals = Matrix::gaussian(n, dim, &mut rng);
+    let q = rng.normal_vec(dim);
+    for method in [
+        Method::PqCache,
+        Method::Quest,
+        Method::DoubleSparsity,
+        Method::HashAttention,
+        Method::MagicPig,
+        Method::Socket,
+        Method::HardLsh,
+        Method::Oracle,
+    ] {
+        let mut sel = method.build(dim, 3);
+        sel.build(&keys, &vals);
+        let got = sel.select(&q, 64);
+        assert!(!got.is_empty(), "{} empty", method.name());
+        assert!(got.iter().all(|&i| i < n), "{} out of range", method.name());
+        let mut dedup = got.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), got.len(), "{} duplicates", method.name());
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These require `make artifacts` to have run; they skip (with a
+//! message) when the artifacts are absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use socket_attn::linalg::Matrix;
+use socket_attn::runtime::{artifact_available, artifacts_dir, Engine};
+use socket_attn::util::rng::Pcg64;
+
+fn engine_with(artifacts: &[&str]) -> Option<Engine> {
+    for a in artifacts {
+        if !artifact_available(a) {
+            eprintln!("skipping: artifact {a} missing (run `make artifacts`)");
+            return None;
+        }
+    }
+    let mut e = Engine::cpu(artifacts_dir()).expect("pjrt cpu client");
+    for a in artifacts {
+        e.load(a).expect("load+compile artifact");
+    }
+    Some(e)
+}
+
+/// sparse_decode.hlo.txt computes masked attention over (512, 128)
+/// gathered K/V — must match the Rust flash_decode bit-for-bit-ish.
+#[test]
+fn sparse_decode_artifact_matches_rust_flash_decode() {
+    let Some(engine) = engine_with(&["sparse_decode.hlo.txt"]) else {
+        return;
+    };
+    let (k_sel, d) = (512usize, 128usize);
+    let mut rng = Pcg64::seeded(11);
+    let q = rng.normal_vec(d);
+    let keys = Matrix::gaussian(k_sel, d, &mut rng);
+    let values = Matrix::gaussian(k_sel, d, &mut rng);
+    // Mask: first 400 valid (pred input -> Input::Bool).
+    use socket_attn::runtime::engine::Input;
+    let mask: Vec<bool> = (0..k_sel).map(|i| i < 400).collect();
+    let out = engine
+        .run_with(
+            "sparse_decode.hlo.txt",
+            &[
+                Input::F32(vec![d as i64], q.clone()),
+                Input::F32(vec![k_sel as i64, d as i64], keys.data.clone()),
+                Input::F32(vec![k_sel as i64, d as i64], values.data.clone()),
+                Input::Bool(vec![k_sel as i64], mask),
+            ],
+        )
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let got = out[0].f32s().to_vec();
+    let selected: Vec<usize> = (0..400).collect();
+    let scale = 1.0 / (d as f32).sqrt();
+    let want = socket_attn::attention::flash_decode(&q, &keys, &values, Some(&selected), scale);
+    for i in 0..d {
+        assert!(
+            (got[i] - want[i]).abs() < 1e-4,
+            "i={i}: pjrt {} vs rust {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+/// socket_score.hlo.txt implements Algorithm 4; verify against a direct
+/// computation from the same inputs.
+#[test]
+fn socket_score_artifact_matches_reference() {
+    let Some(engine) = engine_with(&["socket_score.hlo.txt"]) else {
+        return;
+    };
+    let (n, l, r) = (2048usize, 60usize, 1024usize);
+    let mut rng = Pcg64::seeded(3);
+    // Random per-table distributions.
+    let mut probs = vec![0.0f32; l * r];
+    for t in 0..l {
+        let mut row: Vec<f32> = (0..r).map(|_| rng.next_f32() + 1e-3).collect();
+        let s: f32 = row.iter().sum();
+        for x in row.iter_mut() {
+            *x /= s;
+        }
+        probs[t * r..(t + 1) * r].copy_from_slice(&row);
+    }
+    let bucket_ids: Vec<i32> = (0..n * l).map(|_| rng.below(r as u64) as i32).collect();
+    let vnorms: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+    let mask: Vec<f32> = (0..n).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+    // Engine inputs: probs (L,R) f32; ids (N,L) i32 — TensorSpec is
+    // f32-only, so ids/mask go through the i32/bool conversion helpers.
+    let out = engine
+        .run_with(
+            "socket_score.hlo.txt",
+            &[
+                socket_attn::runtime::engine::Input::F32(vec![l as i64, r as i64], probs.clone()),
+                socket_attn::runtime::engine::Input::I32(vec![n as i64, l as i64], bucket_ids.clone()),
+                socket_attn::runtime::engine::Input::F32(vec![n as i64], vnorms.clone()),
+                socket_attn::runtime::engine::Input::Bool(
+                    vec![n as i64],
+                    mask.iter().map(|&m| m > 0.5).collect(),
+                ),
+            ],
+        )
+        .expect("execute");
+    let got = out[0].f32s();
+    for j in (0..n).step_by(97) {
+        let mut want = 0.0f32;
+        for t in 0..l {
+            want += probs[t * r + bucket_ids[j * l + t] as usize];
+        }
+        want *= vnorms[j];
+        if mask[j] < 0.5 {
+            assert_eq!(got[j], f32::NEG_INFINITY, "masked j={j}");
+        } else {
+            assert!((got[j] - want).abs() < 1e-4, "j={j}: {} vs {want}", got[j]);
+        }
+    }
+}
+
+/// Full model path: init -> prefill -> a few decode steps, SOCKET vs
+/// dense logits must be strongly correlated.
+#[test]
+fn model_pipeline_end_to_end() {
+    let arts = [
+        "model_init.hlo.txt",
+        "model_prefill.hlo.txt",
+        "model_decode_socket.hlo.txt",
+        "model_decode_dense.hlo.txt",
+    ];
+    let Some(engine) = engine_with(&arts) else {
+        return;
+    };
+    use socket_attn::runtime::engine::Input;
+    let params = engine
+        .run_with("model_init.hlo.txt", &[Input::I32(vec![], vec![0])])
+        .expect("init");
+    assert_eq!(params.len(), 40, "param tuple arity");
+    // Prefill 1024 tokens.
+    let tokens: Vec<i32> = (0..1024).map(|i| (i * 37 % 512) as i32).collect();
+    let mut inputs: Vec<Input> = params.iter().map(Input::from_tensor).collect();
+    inputs.push(Input::I32(vec![1024], tokens));
+    let caches = engine.run_with("model_prefill.hlo.txt", &inputs).expect("prefill");
+    assert_eq!(caches.len(), 5);
+    // One decode step on both paths.
+    let mut dec_inputs: Vec<Input> = params.iter().map(Input::from_tensor).collect();
+    dec_inputs.extend(caches.iter().map(Input::from_tensor));
+    dec_inputs.push(Input::I32(vec![], vec![7]));
+    let socket_out = engine.run_with("model_decode_socket.hlo.txt", &dec_inputs).expect("socket");
+    let dense_out = engine.run_with("model_decode_dense.hlo.txt", &dec_inputs).expect("dense");
+    let ls = socket_out[0].f32s();
+    let ld = dense_out[0].f32s();
+    assert_eq!(ls.len(), 512);
+    let corr = socket_attn::util::stats::pearson(
+        &ls.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+        &ld.iter().map(|&x| x as f64).collect::<Vec<_>>(),
+    );
+    assert!(corr > 0.55, "SOCKET/dense logit correlation {corr}");
+    // Length advanced.
+    let len_out = socket_out.last().unwrap();
+    assert_eq!(len_out.i32s()[0], 1025);
+}
