@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: release build, offline tests (default and
+# pjrt feature), and clippy with warnings denied. Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+echo "==> cargo test -q --features pjrt"
+cargo test -q --features pjrt
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "==> clippy not installed; skipping lint step"
+fi
+
+echo "OK: tier-1 green"

@@ -1,5 +1,6 @@
 //! Figures 3b/3c — decode throughput vs context length, SOCKET @33x vs
-//! dense FlashAttention-style decode, on the Rust substrate.
+//! dense FlashAttention-style decode, on the Rust substrate — plus the
+//! serial-vs-pooled scoring comparison for the shared worker pool.
 use socket_attn::experiments::{throughput, Scale};
 use socket_attn::util::Args;
 
@@ -8,6 +9,14 @@ fn main() {
     let mut scale = Scale::from_args(&args);
     scale.dim = args.usize_or("dim", 128); // paper head dim
     let ctxs = [4 * 1024, 16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024];
-    let pts = throughput::run(scale, &ctxs, args.f64_or("sparsity", 33.0));
+    let sparsity = args.f64_or("sparsity", 33.0);
+    let pts = throughput::run(scale, &ctxs, sparsity);
     throughput::table(&pts, "CPU substrate, 33x sparsity").print();
+
+    // Worker-pool scoring: the same SOCKET selection, one query at a
+    // time on one thread vs a batch fanned across the pool.
+    let batch = args.usize_or("batch", 16);
+    let pool_ctxs = [4 * 1024, 16 * 1024, 64 * 1024];
+    let modes = throughput::run_scoring_modes(scale, &pool_ctxs, batch, sparsity);
+    throughput::scoring_modes_table(&modes).print();
 }

@@ -155,4 +155,45 @@ mod tests {
             Ok(())
         });
     }
+
+    #[test]
+    fn prop_merge_is_exactly_sink_local_topk() {
+        // The merged set must contain every sink token, every local
+        // token, every in-range top-k pick within budget — and nothing
+        // else (dedup across the three sources, never out-of-range).
+        check_default("merge-containment", |rng, _| {
+            let n = 1 + rng.below_usize(300);
+            let p = SelectionPolicy {
+                k: rng.below_usize(30),
+                sink: rng.below_usize(12),
+                local: rng.below_usize(12),
+            };
+            // Picks deliberately include duplicates and out-of-range
+            // indices beyond n.
+            let picks: Vec<usize> =
+                (0..p.k + rng.below_usize(10)).map(|_| rng.below_usize(n + 20)).collect();
+            let sel = p.merge(&picks, n);
+            let set: std::collections::HashSet<usize> = sel.iter().copied().collect();
+            prop_assert!(set.len() == sel.len(), "duplicates in merge output");
+            for i in 0..p.sink.min(n) {
+                prop_assert!(set.contains(&i), "sink {i} missing (n={n})");
+            }
+            for i in n.saturating_sub(p.local)..n {
+                prop_assert!(set.contains(&i), "local {i} missing (n={n})");
+            }
+            for &i in picks.iter().take(p.k).filter(|&&i| i < n) {
+                prop_assert!(set.contains(&i), "top-k pick {i} missing (n={n})");
+            }
+            for &i in &sel {
+                let from_sink = i < p.sink;
+                let from_local = i >= n.saturating_sub(p.local);
+                let from_topk = picks.iter().take(p.k).any(|&x| x == i);
+                prop_assert!(
+                    from_sink || from_local || from_topk,
+                    "unexpected index {i} (n={n})"
+                );
+            }
+            Ok(())
+        });
+    }
 }

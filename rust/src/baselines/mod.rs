@@ -30,9 +30,14 @@ pub mod quest;
 
 use crate::linalg::Matrix;
 use crate::lsh::{HardScorer, KeyHashes, LshParams, SoftScorer};
+use crate::util::pool;
 
 /// A sparse-attention token-selection method.
-pub trait TokenSelector {
+///
+/// Selectors are `Send + Sync` (they hold only plain index data), so
+/// the serving layer can score many queries across the shared worker
+/// pool through [`TokenSelector::select_batch`].
+pub trait TokenSelector: Send + Sync {
     /// Human-readable method name (bench tables).
     fn name(&self) -> &'static str;
 
@@ -42,6 +47,14 @@ pub trait TokenSelector {
 
     /// Select up to `k` token indices for query `q`.
     fn select(&self, q: &[f32], k: usize) -> Vec<usize>;
+
+    /// Batch path: select for many queries at once. The default scores
+    /// queries in parallel on the shared worker pool (long-lived
+    /// threads — no per-call spawning); results are identical to
+    /// calling [`TokenSelector::select`] per query.
+    fn select_batch(&self, queries: &[Vec<f32>], k: usize) -> Vec<Vec<usize>> {
+        pool::global().map(queries.len(), |i| self.select(&queries[i], k))
+    }
 
     /// Additional memory used by the index, bits per token (the paper's
     /// "Mem" column). Reported by benches.
@@ -66,12 +79,17 @@ impl TokenSelector for SocketSelector {
     }
 
     fn build(&mut self, keys: &Matrix, values: &Matrix) {
-        self.hashes = Some(self.scorer.hash_keys(keys, values));
+        // Prefill-time hashing (Alg. 1) chunks keys across the pool.
+        self.hashes =
+            Some(self.scorer.hasher.simhash().hash_keys_with(keys, values, pool::global()));
     }
 
     fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
         let hashes = self.hashes.as_ref().expect("build() not called");
-        self.scorer.select_top_k(q, hashes, k)
+        // Decode-time scoring (Alg. 2-4) runs on the shared pool; for
+        // small caches (or from inside a pool worker, as in
+        // select_batch) it degrades to the serial hot path.
+        self.scorer.select_top_k_with(q, hashes, k, pool::global())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -137,5 +155,25 @@ mod tests {
     fn select_before_build_panics() {
         let s = SocketSelector::new(LshParams::paper_default(), 8, 1);
         s.select(&[0.0; 8], 4);
+    }
+
+    #[test]
+    fn batch_select_matches_serial() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(512, 16, &mut rng);
+        let vals = Matrix::gaussian(512, 16, &mut rng);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, 16, 7);
+        let mut hard = HardLshSelector::new(params, 16, 7);
+        soft.build(&keys, &vals);
+        hard.build(&keys, &vals);
+        let queries: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(16)).collect();
+        for sel in [&soft as &dyn TokenSelector, &hard as &dyn TokenSelector] {
+            let batch = sel.select_batch(&queries, 16);
+            assert_eq!(batch.len(), queries.len());
+            for (q, got) in queries.iter().zip(&batch) {
+                assert_eq!(*got, sel.select(q, 16), "{} batch/serial diverge", sel.name());
+            }
+        }
     }
 }

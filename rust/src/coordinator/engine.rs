@@ -51,6 +51,13 @@ struct SequenceState {
     decoded: usize,
 }
 
+/// The read-only half of a decode step: per-head attention outputs plus
+/// the new token's (key, value) per head, ready to be committed.
+struct StepResult {
+    outputs: Vec<Vec<f32>>,
+    appends: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
 /// The decode engine: paged KV pool + per-sequence SOCKET caches.
 pub struct DecodeEngine {
     pub config: EngineConfig,
@@ -118,11 +125,46 @@ impl DecodeEngine {
     /// (per kv-head) and appends the new token's K/V. Panics if the
     /// sequence was never prefilled.
     pub fn decode_step(&mut self, seq_id: u64) -> Vec<Vec<f32>> {
-        let state = self.sequences.get_mut(&seq_id).expect("decode before prefill");
+        let state = self.sequences.get(&seq_id).expect("decode before prefill");
+        let computed = self.compute_step(state);
+        self.apply_step(seq_id, computed)
+    }
+
+    /// One decode step for each sequence in `seq_ids`, with the
+    /// compute phase (soft-hash, score, top-k, attention — all reads)
+    /// fanned out across the shared worker pool, then the KV/hash
+    /// appends committed serially in `seq_ids` order. Outputs are
+    /// identical to calling [`DecodeEngine::decode_step`] per sequence.
+    pub fn decode_batch(&mut self, seq_ids: &[u64]) -> Vec<Vec<Vec<f32>>> {
+        // A duplicated id would compute both steps from the same
+        // pre-step snapshot, breaking the serial equivalence.
+        debug_assert!(
+            {
+                let mut ids = seq_ids.to_vec();
+                ids.sort_unstable();
+                ids.dedup();
+                ids.len() == seq_ids.len()
+            },
+            "decode_batch requires distinct sequence ids"
+        );
+        let computed: Vec<StepResult> = {
+            let eng: &DecodeEngine = &*self;
+            crate::util::pool::global().map(seq_ids.len(), |i| {
+                let state = eng.sequences.get(&seq_ids[i]).expect("decode before prefill");
+                eng.compute_step(state)
+            })
+        };
+        seq_ids.iter().zip(computed).map(|(&seq, result)| self.apply_step(seq, result)).collect()
+    }
+
+    /// Immutable phase of one decode step: per-head attention outputs
+    /// plus the new token's K/V, computed without touching engine state.
+    fn compute_step(&self, state: &SequenceState) -> StepResult {
         let heads = self.config.model.n_kv_heads;
         let dim = self.config.model.head_dim;
         let scale = 1.0 / (dim as f32).sqrt();
         let mut outputs = Vec::with_capacity(heads);
+        let mut appends = Vec::with_capacity(heads);
         let step = state.decoded;
         for h in 0..heads {
             let n = state.tables[h].n_tokens;
@@ -154,16 +196,24 @@ impl DecodeEngine {
                 }
             };
             outputs.push(out);
-            // Append the newly generated token's K/V.
-            let (k_new, v_new) = state.model.kv_at(h, n);
-            let ok = self.kv.append(&mut state.tables[h], &k_new, &v_new);
+            appends.push(state.model.kv_at(h, n));
+        }
+        StepResult { outputs, appends }
+    }
+
+    /// Mutable phase: commit the new token's K/V to the paged cache and
+    /// the hash side-cars, advance the decode counter.
+    fn apply_step(&mut self, seq_id: u64, result: StepResult) -> Vec<Vec<f32>> {
+        let state = self.sequences.get_mut(&seq_id).expect("decode before prefill");
+        for (h, (k_new, v_new)) in result.appends.iter().enumerate() {
+            let ok = self.kv.append(&mut state.tables[h], k_new, v_new);
             assert!(ok, "KV pool exhausted mid-decode");
             if matches!(self.config.mode, AttentionMode::Socket { .. }) {
-                state.socket[h].append_token(&k_new, &v_new);
+                state.socket[h].append_token(k_new, v_new);
             }
         }
         state.decoded += 1;
-        outputs
+        result.outputs
     }
 
     pub fn decoded(&self, seq_id: u64) -> usize {
@@ -259,5 +309,28 @@ mod tests {
     fn decode_unknown_sequence_panics() {
         let mut e = DecodeEngine::new(cfg(AttentionMode::Dense));
         e.decode_step(42);
+    }
+
+    #[test]
+    fn decode_batch_matches_serial_steps() {
+        // The pooled batch path must be step-for-step identical to
+        // serial decode_step calls (same selection, same outputs, same
+        // cache state afterwards).
+        let mut serial = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        let mut batched = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        let seqs = [1u64, 2, 3];
+        for &(seq, ctx) in &[(1u64, 120usize), (2, 200), (3, 64)] {
+            assert!(serial.prefill(seq, ctx, 4));
+            assert!(batched.prefill(seq, ctx, 4));
+        }
+        for _ in 0..3 {
+            let want: Vec<Vec<Vec<f32>>> = seqs.iter().map(|&s| serial.decode_step(s)).collect();
+            let got = batched.decode_batch(&seqs);
+            assert_eq!(got, want);
+        }
+        for &s in &seqs {
+            assert_eq!(serial.decoded(s), 3);
+            assert_eq!(batched.decoded(s), 3);
+        }
     }
 }

@@ -156,9 +156,12 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
                 batcher.requeue(seq, ctx);
             }
         }
-        // Decode steps.
+        // Decode steps: one batched call — sequences score their keys
+        // across the shared worker pool, appends commit in batch order.
+        if !batch.decodes.is_empty() {
+            let _outputs = engine.decode_batch(&batch.decodes);
+        }
         for &seq in batch.decodes.iter() {
-            let _outputs = engine.decode_step(seq);
             stats.decode_steps += 1;
             let fl = inflight.get_mut(&seq).expect("decode for unknown request");
             if fl.first_token.is_none() {

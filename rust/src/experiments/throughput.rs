@@ -8,10 +8,11 @@
 
 use super::Scale;
 use crate::attention::{flash_decode, SelectionPolicy};
+use crate::baselines::{SocketSelector, TokenSelector};
 use crate::kvcache::LayerCache;
 use crate::linalg::Matrix;
 use crate::lsh::LshParams;
-use crate::util::{fnum, Pcg64, Table};
+use crate::util::{fnum, pool, Pcg64, Table};
 use std::time::Instant;
 
 pub struct ThroughputPoint {
@@ -62,6 +63,85 @@ pub fn run(scale: Scale, context_lengths: &[usize], sparsity: f64) -> Vec<Throug
         .collect()
 }
 
+/// Serial vs pooled scoring on one workload: one SOCKET index, a batch
+/// of decode queries, `select()` in a serial loop vs `select_batch()`
+/// on the shared worker pool. Selections are identical; only wall-clock
+/// differs — this is the worker-pool acceptance measurement.
+pub struct ScoringModePoint {
+    pub n: usize,
+    pub batch: usize,
+    pub serial_ms: f64,
+    pub pooled_ms: f64,
+}
+
+/// Measure both scoring modes at one context length.
+pub fn measure_scoring_modes(
+    n: usize,
+    dim: usize,
+    batch: usize,
+    sparsity: f64,
+    seed: u64,
+) -> ScoringModePoint {
+    let mut rng = Pcg64::new(seed, n as u64);
+    let keys = Matrix::gaussian(n, dim, &mut rng);
+    let values = Matrix::gaussian(n, dim, &mut rng);
+    let k = SelectionPolicy::from_sparsity(n, sparsity, 0, 0).k;
+    let queries: Vec<Vec<f32>> = (0..batch).map(|_| rng.normal_vec(dim)).collect();
+
+    // Serial reference: the plain per-query pipeline on one thread.
+    let scorer = crate::lsh::SoftScorer::new(LshParams::paper_default(), dim, seed);
+    let hashes = scorer.hash_keys(&keys, &values);
+    let t0 = Instant::now();
+    for q in &queries {
+        crate::util::black_box(scorer.select_top_k(q, &hashes, k));
+    }
+    let serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Pooled: the serving batch path (same hyperplanes + index, so the
+    // selections are identical; only the wall-clock differs).
+    let mut sel = SocketSelector::new(LshParams::paper_default(), dim, seed);
+    sel.build(&keys, &values);
+    let t1 = Instant::now();
+    crate::util::black_box(sel.select_batch(&queries, k));
+    let pooled_ms = t1.elapsed().as_secs_f64() * 1e3;
+
+    ScoringModePoint { n, batch, serial_ms, pooled_ms }
+}
+
+/// Sweep [`measure_scoring_modes`] across context lengths.
+pub fn run_scoring_modes(
+    scale: Scale,
+    context_lengths: &[usize],
+    batch: usize,
+    sparsity: f64,
+) -> Vec<ScoringModePoint> {
+    context_lengths
+        .iter()
+        .map(|&n| measure_scoring_modes(n, scale.dim, batch, sparsity, scale.seed))
+        .collect()
+}
+
+/// Render the serial-vs-pooled comparison.
+pub fn scoring_modes_table(points: &[ScoringModePoint]) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Batched scoring: serial vs worker pool ({} threads)",
+            pool::global().threads()
+        ),
+        &["Context", "Batch", "Serial ms", "Pooled ms", "Speedup"],
+    );
+    for p in points {
+        t.row(vec![
+            p.n.to_string(),
+            p.batch.to_string(),
+            fnum(p.serial_ms, 1),
+            fnum(p.pooled_ms, 1),
+            format!("{}x", fnum(p.serial_ms / p.pooled_ms.max(1e-9), 2)),
+        ]);
+    }
+    t
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -98,5 +178,15 @@ mod tests {
         let a = measure(1024, 64, 33.0, 8, 9);
         let b = measure(8192, 64, 33.0, 8, 9);
         assert!(b.dense_tps < a.dense_tps);
+    }
+
+    #[test]
+    fn scoring_modes_measures_both_paths() {
+        let p = measure_scoring_modes(2048, 32, 8, 16.0, 3);
+        assert_eq!(p.n, 2048);
+        assert_eq!(p.batch, 8);
+        assert!(p.serial_ms > 0.0 && p.serial_ms.is_finite());
+        assert!(p.pooled_ms > 0.0 && p.pooled_ms.is_finite());
+        assert_eq!(scoring_modes_table(&[p]).n_rows(), 1);
     }
 }

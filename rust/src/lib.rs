@@ -19,6 +19,19 @@
 //! sparse-attention baselines, ranking/attention metrics, synthetic
 //! RULER/LongBench-analog workloads, and one experiment driver per paper
 //! table and figure (see `experiments`).
+//!
+//! ## Build matrix
+//!
+//! **L3 builds standalone**: the default `cargo build` / `cargo test`
+//! needs no network, no Python, and no PJRT — the `runtime` module
+//! compiles against an API-compatible stub and every pure-Rust test and
+//! bench runs offline. Building with `--features pjrt` swaps in the
+//! real PJRT engine (the `xla` bindings + `anyhow`, vendored offline
+//! stand-ins by default); its integration tests additionally skip
+//! per-test unless `make artifacts` has produced the HLO artifacts. The
+//! scoring hot paths fan out over a shared worker pool
+//! (`util::pool::global`, sized by `SOCKET_THREADS` or the machine's
+//! parallelism). See `rust/README.md` for the full matrix.
 
 pub mod attention;
 pub mod baselines;

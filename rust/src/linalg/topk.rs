@@ -181,6 +181,32 @@ mod tests {
     }
 
     #[test]
+    fn prop_tie_stability_prefers_low_indices() {
+        // Scores drawn from a 3-value set force heavy ties; selection
+        // must resolve them deterministically toward lower indices
+        // (first-seen wins at the threshold) and order the output by
+        // (score desc, index asc) — i.e. exactly the stable full sort.
+        check_default("topk-tie-stability", |rng, _| {
+            let n = gen::size(rng, 2, 300);
+            let k = 1 + rng.below_usize(n);
+            let vals = [0.0f32, 1.0, 2.0];
+            let scores: Vec<f32> = (0..n).map(|_| vals[rng.below_usize(3)]).collect();
+            let got = top_k_indices(&scores, k);
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+            idx.truncate(k);
+            prop_assert!(got == idx, "n={n} k={k}: {got:?} vs {idx:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn all_equal_scores_select_first_k_indices() {
+        let s = [3.0f32; 7];
+        assert_eq!(top_k_indices(&s, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
     fn prop_threshold_is_kth_order_stat() {
         check_default("topk-threshold", |rng, _| {
             let n = gen::size(rng, 1, 500);

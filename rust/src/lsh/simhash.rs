@@ -7,6 +7,7 @@
 
 use crate::linalg::Matrix;
 use crate::lsh::params::LshParams;
+use crate::util::pool::WorkerPool;
 use crate::util::rng::Pcg64;
 
 /// The hyperplanes of `L` independent SimHash tables.
@@ -99,6 +100,24 @@ impl SimHash {
                 bucket_ids[j * l + t] = self.bucket_of(t, key);
             }
         }
+        KeyHashes { n, l, bucket_ids, value_norms: values.row_norms() }
+    }
+
+    /// Algorithm 1 across a worker pool: each key's `L`-table signature
+    /// row is independent, so threads hash disjoint key ranges. Output
+    /// is bit-identical to [`SimHash::hash_keys`].
+    pub fn hash_keys_with(&self, keys: &Matrix, values: &Matrix, pool: &WorkerPool) -> KeyHashes {
+        assert_eq!(keys.cols, self.dim);
+        assert_eq!(keys.rows, values.rows);
+        let n = keys.rows;
+        let l = self.params.l;
+        let mut bucket_ids = vec![0u16; n * l];
+        pool.fill_rows(&mut bucket_ids, l, |j, row| {
+            let key = keys.row(j);
+            for (t, slot) in row.iter_mut().enumerate() {
+                *slot = self.bucket_of(t, key);
+            }
+        });
         KeyHashes { n, l, bucket_ids, value_norms: values.row_norms() }
     }
 
@@ -248,6 +267,19 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn pooled_hash_keys_matches_serial() {
+        let h = SimHash::new(LshParams { p: 8, l: 12, tau: 0.5 }, 24, 7);
+        let mut rng = Pcg64::seeded(8);
+        let keys = Matrix::gaussian(300, 24, &mut rng);
+        let vals = Matrix::gaussian(300, 24, &mut rng);
+        let pool = WorkerPool::new(4);
+        let serial = h.hash_keys(&keys, &vals);
+        let pooled = h.hash_keys_with(&keys, &vals, &pool);
+        assert_eq!(serial.bucket_ids, pooled.bucket_ids);
+        assert_eq!(serial.value_norms, pooled.value_norms);
     }
 
     #[test]

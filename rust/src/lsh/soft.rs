@@ -12,6 +12,7 @@
 use crate::linalg::TopK;
 use crate::lsh::params::LshParams;
 use crate::lsh::simhash::{KeyHashes, SimHash};
+use crate::util::pool::WorkerPool;
 
 /// Query-side soft hashing (Algorithm 2).
 #[derive(Clone, Debug)]
@@ -47,53 +48,68 @@ impl SoftHasher {
         self.hash.params
     }
 
-    /// Algorithm 2. For each table ℓ:
-    /// `u = tanh(W^(ℓ) q) / √d`, `logit_r = u·c_r / τ`, softmax over r.
+    /// Algorithm 2 for one table ℓ: `u = tanh(W^(ℓ) q) / √d`,
+    /// `logit_r = u·c_r / τ`, softmax over r, written into `w` (len R).
     ///
     /// The corner inner products are computed without materializing the
     /// `P x R` corner matrix: a Gray-code-free butterfly — logit over
     /// corners is separable, `u·c_r = Σ_i ±u_i` — built by iterative
     /// doubling in O(R·P) adds but cache-friendly (R ≤ 2^16).
-    pub fn bucket_probs(&self, q: &[f32]) -> BucketProbs {
+    fn table_probs(&self, t: usize, q: &[f32], w: &mut [f32]) {
         let p = self.hash.params.p;
-        let l = self.hash.params.l;
-        let r = 1usize << p;
         let tau = self.hash.params.tau;
         let inv_sqrt_d = 1.0 / (self.hash.dim as f32).sqrt();
-        let mut probs = vec![0.0f32; l * r];
-        for t in 0..l {
-            let proj = self.hash.project(t, q);
-            // Multiplicative butterfly: exp(Σ ±u_i/τ) = Π exp(±u_i/τ),
-            // so only 2P exps are needed per table instead of R = 2^P —
-            // after step i, w[0..2^(i+1)] hold all sign combinations of
-            // u_0..u_i. Safe without max-subtraction: |u_i| ≤ 1/√d, so
-            // every factor is bounded by e^(P/(√d·τ)).
-            // (§Perf: 3.2x faster scoring at (P=10, L=60); see
-            // EXPERIMENTS.md.)
-            let w = &mut probs[t * r..(t + 1) * r];
-            w[0] = 1.0;
-            let mut width = 1usize;
-            for i in 0..p {
-                let u = proj[i].tanh() * inv_sqrt_d / tau;
-                // Normalize the pair so factors are ≤ 1: equivalent up
-                // to the final normalization, and overflow-free even at
-                // tiny τ (the dominated corner underflows to 0, which
-                // is its correct limit).
-                let e_plus = (u - u.abs()).exp();
-                let e_minus = (-u - u.abs()).exp();
-                for b in 0..width {
-                    // bit i set => +u ; cleared => -u.
-                    w[b + width] = w[b] * e_plus;
-                    w[b] *= e_minus;
-                }
-                width *= 2;
+        let proj = self.hash.project(t, q);
+        // Multiplicative butterfly: exp(Σ ±u_i/τ) = Π exp(±u_i/τ),
+        // so only 2P exps are needed per table instead of R = 2^P —
+        // after step i, w[0..2^(i+1)] hold all sign combinations of
+        // u_0..u_i. Safe without max-subtraction: |u_i| ≤ 1/√d, so
+        // every factor is bounded by e^(P/(√d·τ)).
+        // (§Perf: 3.2x faster scoring at (P=10, L=60); see
+        // EXPERIMENTS.md.)
+        w[0] = 1.0;
+        let mut width = 1usize;
+        for i in 0..p {
+            let u = proj[i].tanh() * inv_sqrt_d / tau;
+            // Normalize the pair so factors are ≤ 1: equivalent up
+            // to the final normalization, and overflow-free even at
+            // tiny τ (the dominated corner underflows to 0, which
+            // is its correct limit).
+            let e_plus = (u - u.abs()).exp();
+            let e_minus = (-u - u.abs()).exp();
+            for b in 0..width {
+                // bit i set => +u ; cleared => -u.
+                w[b + width] = w[b] * e_plus;
+                w[b] *= e_minus;
             }
-            let sum: f32 = w.iter().sum();
-            let inv = 1.0 / sum;
-            for x in w.iter_mut() {
-                *x *= inv;
-            }
+            width *= 2;
         }
+        let sum: f32 = w.iter().sum();
+        let inv = 1.0 / sum;
+        for x in w.iter_mut() {
+            *x *= inv;
+        }
+    }
+
+    /// Algorithm 2: the per-table bucket distributions of one query.
+    pub fn bucket_probs(&self, q: &[f32]) -> BucketProbs {
+        let l = self.hash.params.l;
+        let r = 1usize << self.hash.params.p;
+        let mut probs = vec![0.0f32; l * r];
+        for (t, w) in probs.chunks_mut(r).enumerate() {
+            self.table_probs(t, q, w);
+        }
+        BucketProbs { l, r, probs }
+    }
+
+    /// Algorithm 2 across a worker pool: tables are independent, so
+    /// threads fill disjoint blocks of per-table distributions. Output
+    /// is bit-identical to [`SoftHasher::bucket_probs`].
+    pub fn bucket_probs_with(&self, q: &[f32], pool: &WorkerPool) -> BucketProbs {
+        let l = self.hash.params.l;
+        let r = 1usize << self.hash.params.p;
+        let mut probs = vec![0.0f32; l * r];
+        pool.fill_rows(&mut probs, r, |t, w| self.table_probs(t, q, w));
         BucketProbs { l, r, probs }
     }
 }
@@ -122,6 +138,22 @@ impl SoftScorer {
         self.hasher.simhash().hash_keys(keys, values)
     }
 
+    /// One key's soft collision mass against a query's prob table.
+    /// `table` is the flattened `L x R` distributions; `row` the key's
+    /// `L` bucket ids. Bounds checks are hoisted: bucket ids are
+    /// produced by `pack_signs` (< 2^P = R by construction) and row
+    /// length == L, so the unchecked accesses are provably in range
+    /// (§Perf).
+    #[inline]
+    fn score_key(table: &[f32], r: usize, row: &[u16]) -> f32 {
+        let mut acc = 0.0f32;
+        for (t, &b) in row.iter().enumerate() {
+            debug_assert!((b as usize) < r);
+            acc += unsafe { *table.get_unchecked(t * r + (b as usize & (r - 1))) };
+        }
+        acc
+    }
+
     /// Raw soft collision scores `ŵ_j = Σ_ℓ p_τ(b_j^(ℓ) | q)` (eq. 3),
     /// *without* the value-norm weighting.
     pub fn raw_scores(&self, probs: &BucketProbs, hashes: &KeyHashes) -> Vec<f32> {
@@ -130,31 +162,60 @@ impl SoftScorer {
         let mut out = vec![0.0f32; hashes.n];
         // Hot path: iterate keys outer, tables inner; the prob table is
         // L x R and stays in cache (R*L*4 bytes, e.g. 60*1024*4 = 240KB).
-        // Bounds checks are hoisted: bucket ids are produced by
-        // `pack_signs` (< 2^P = R by construction) and row length == L,
-        // so the unchecked accesses are provably in range (§Perf).
         let r = probs.r;
         let table = &probs.probs[..l * r];
-        for j in 0..hashes.n {
-            let row = hashes.key_row(j);
-            let mut acc = 0.0f32;
-            for (t, &b) in row.iter().enumerate() {
-                debug_assert!((b as usize) < r);
-                acc += unsafe { *table.get_unchecked(t * r + (b as usize & (r - 1))) };
-            }
-            out[j] = acc;
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = Self::score_key(table, r, hashes.key_row(j));
         }
         out
+    }
+
+    /// [`SoftScorer::raw_scores`] across a worker pool: keys are
+    /// independent and the `L x R` prob table is read-only, so threads
+    /// score disjoint key ranges. Output is bit-identical to the serial
+    /// path (no cross-chunk reductions).
+    pub fn raw_scores_with(
+        &self,
+        probs: &BucketProbs,
+        hashes: &KeyHashes,
+        pool: &WorkerPool,
+    ) -> Vec<f32> {
+        assert_eq!(probs.l, hashes.l);
+        let l = hashes.l;
+        let r = probs.r;
+        let table = &probs.probs[..l * r];
+        let mut out = vec![0.0f32; hashes.n];
+        pool.fill(&mut out, |j| Self::score_key(table, r, hashes.key_row(j)));
+        out
+    }
+
+    /// Apply Algorithm 4's value-norm weighting + optional validity mask
+    /// (`false` entries score -inf) to raw scores, in place.
+    fn weight_scores(s: &mut [f32], hashes: &KeyHashes, mask: Option<&[bool]>) {
+        for j in 0..s.len() {
+            let valid = mask.map(|m| m[j]).unwrap_or(true);
+            s[j] = if valid { s[j] * hashes.value_norms[j] } else { f32::NEG_INFINITY };
+        }
     }
 
     /// Algorithm 4: value-aware scores `ŵ_j · ‖v_j‖₂`, with an optional
     /// validity mask (`false` entries score -inf).
     pub fn scores(&self, probs: &BucketProbs, hashes: &KeyHashes, mask: Option<&[bool]>) -> Vec<f32> {
         let mut s = self.raw_scores(probs, hashes);
-        for j in 0..s.len() {
-            let valid = mask.map(|m| m[j]).unwrap_or(true);
-            s[j] = if valid { s[j] * hashes.value_norms[j] } else { f32::NEG_INFINITY };
-        }
+        Self::weight_scores(&mut s, hashes, mask);
+        s
+    }
+
+    /// [`SoftScorer::scores`] with the scoring loop on a worker pool.
+    pub fn scores_with(
+        &self,
+        probs: &BucketProbs,
+        hashes: &KeyHashes,
+        mask: Option<&[bool]>,
+        pool: &WorkerPool,
+    ) -> Vec<f32> {
+        let mut s = self.raw_scores_with(probs, hashes, pool);
+        Self::weight_scores(&mut s, hashes, mask);
         s
     }
 
@@ -163,7 +224,27 @@ impl SoftScorer {
     pub fn select_top_k(&self, q: &[f32], hashes: &KeyHashes, k: usize) -> Vec<usize> {
         let probs = self.hasher.bucket_probs(q);
         let scores = self.scores(&probs, hashes, None);
-        let mut tk = TopK::new(k.min(hashes.n).max(1));
+        Self::top_k_of(&scores, k, hashes.n)
+    }
+
+    /// [`SoftScorer::select_top_k`] with soft-hashing and scoring
+    /// parallelized on `pool` — the serving hot path. Selection is
+    /// identical to the serial pipeline (chunked fills reduce nothing
+    /// across threads, and top-k stays serial).
+    pub fn select_top_k_with(
+        &self,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+        pool: &WorkerPool,
+    ) -> Vec<usize> {
+        let probs = self.hasher.bucket_probs_with(q, pool);
+        let scores = self.scores_with(&probs, hashes, None, pool);
+        Self::top_k_of(&scores, k, hashes.n)
+    }
+
+    fn top_k_of(scores: &[f32], k: usize, n: usize) -> Vec<usize> {
+        let mut tk = TopK::new(k.min(n).max(1));
         for (j, &s) in scores.iter().enumerate() {
             tk.push(s, j);
         }
@@ -196,7 +277,7 @@ mod tests {
     use super::*;
     use crate::linalg::Matrix;
     use crate::prop_assert;
-    use crate::testing::{check_default, gen};
+    use crate::testing::{check, check_default, gen, PropConfig};
     use crate::util::rng::Pcg64;
 
     fn scorer(p: usize, l: usize, tau: f32, dim: usize) -> SoftScorer {
@@ -397,5 +478,162 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_collision_mass_monotone_in_cosine() {
+        // Theorem 1's substance: the expected soft collision mass grows
+        // with cos(q, k). With a wide cosine gap and many tables the
+        // ordering holds for every seeded draw, not just on average.
+        check("soft-monotone-cosine", PropConfig { cases: 24, seed: 0x50F7 }, |rng, _| {
+            let dim = gen::size(rng, 24, 64);
+            let params =
+                LshParams { p: 6 + rng.below_usize(4), l: 150, tau: rng.range_f32(0.3, 0.8) };
+            let s = SoftScorer::new(params, dim, rng.next_u64());
+            let q = gen::unit_vec(rng, dim);
+            let c_hi = rng.range_f32(0.85, 0.95);
+            let c_lo = rng.range_f32(-0.1, 0.15);
+            let mut keys = Matrix::zeros(2, dim);
+            keys.row_mut(0).copy_from_slice(&gen::key_with_cosine(rng, &q, c_hi));
+            keys.row_mut(1).copy_from_slice(&gen::key_with_cosine(rng, &q, c_lo));
+            let vals = Matrix::from_vec(2, dim, vec![1.0; 2 * dim]);
+            let hashes = s.hash_keys(&keys, &vals);
+            let probs = s.hasher.bucket_probs(&q);
+            let w = s.raw_scores(&probs, &hashes);
+            prop_assert!(
+                w[0] > w[1],
+                "cos {c_hi:.2} scored {} <= cos {c_lo:.2} scored {}",
+                w[0],
+                w[1]
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_negated_query_mirrors_buckets() {
+        // Exact symmetry of the soft kernel: tanh is odd, so
+        // p_τ(r | -q) = p_τ(~r | q) (bitwise-complement bucket), table
+        // by table — the soft analog of SimHash's antipodal symmetry.
+        check_default("soft-sign-symmetry", |rng, _| {
+            let p = 1 + rng.below_usize(8);
+            let dim = gen::size(rng, 2, 48);
+            let tau = rng.range_f32(0.1, 2.0);
+            let s = SoftScorer::new(LshParams { p, l: 3, tau }, dim, rng.next_u64());
+            let q = rng.normal_vec(dim);
+            let neg: Vec<f32> = q.iter().map(|x| -x).collect();
+            let pq = s.hasher.bucket_probs(&q);
+            let pn = s.hasher.bucket_probs(&neg);
+            let r = 1usize << p;
+            for t in 0..3 {
+                for b in 0..r {
+                    let mirrored = pn.table(t)[b ^ (r - 1)];
+                    prop_assert!(
+                        (pq.table(t)[b] - mirrored).abs() < 1e-4,
+                        "t={t} b={b}: {} vs {}",
+                        pq.table(t)[b],
+                        mirrored
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_collision_kernel_symmetric_in_expectation() {
+        // κ(q, k) = κ(k, q): swapping the query and key roles yields the
+        // same collision mass up to finite-L fluctuation. Coarse buckets
+        // (P=3) and many tables keep the fluctuation far below the slack.
+        check("soft-exchange-symmetry", PropConfig { cases: 12, seed: 0xE4C4 }, |rng, _| {
+            let dim = gen::size(rng, 16, 48);
+            let params = LshParams { p: 3, l: 600, tau: 0.7 };
+            let s = SoftScorer::new(params, dim, rng.next_u64());
+            let q = gen::unit_vec(rng, dim);
+            let k = gen::key_with_cosine(rng, &q, rng.range_f32(0.4, 0.8));
+            let mass = |query: &[f32], key: &[f32]| -> f32 {
+                let keys = Matrix::from_vec(1, dim, key.to_vec());
+                let vals = Matrix::from_vec(1, dim, vec![1.0; dim]);
+                let hashes = s.hash_keys(&keys, &vals);
+                let probs = s.hasher.bucket_probs(query);
+                s.raw_scores(&probs, &hashes)[0]
+            };
+            let qk = mass(&q, &k);
+            let kq = mass(&k, &q);
+            let mid = 0.5 * (qk + kq);
+            prop_assert!((qk - kq).abs() < 0.5 * mid + 5.0, "w(q,k)={qk} w(k,q)={kq}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tau_boundary_behaviour() {
+        // τ→0 recovers hard LSH (all mass on the hard bucket); τ→∞ is
+        // the uniform distribution — the two ends of Section 4's knob.
+        check("tau-boundary", PropConfig { cases: 32, seed: 0x7A0 }, |rng, _| {
+            let dim = gen::size(rng, 8, 48);
+            let p = 2 + rng.below_usize(6);
+            let seed = rng.next_u64();
+            let q = rng.normal_vec(dim);
+            let r = 1usize << p;
+            // Sharp limit. Tables where the smallest |u_i| leaves less
+            // than e^-28 of margin are skipped: a near-zero projection
+            // genuinely splits mass between two adjacent buckets.
+            let tau_sharp = 1e-3f32;
+            let sharp = SoftScorer::new(LshParams { p, l: 6, tau: tau_sharp }, dim, seed);
+            let probs = sharp.hasher.bucket_probs(&q);
+            let inv_sqrt_d = 1.0 / (dim as f32).sqrt();
+            for t in 0..6 {
+                let proj = sharp.hasher.simhash().project(t, &q);
+                let min_u = proj
+                    .iter()
+                    .map(|x| x.tanh().abs() * inv_sqrt_d)
+                    .fold(f32::INFINITY, f32::min);
+                if min_u / tau_sharp < 14.0 {
+                    continue;
+                }
+                let hard = sharp.hasher.simhash().bucket_of(t, &q) as usize;
+                prop_assert!(probs.table(t)[hard] > 0.99, "t={t} mass={}", probs.table(t)[hard]);
+            }
+            // Smooth limit: every bucket within 1% of uniform.
+            let smooth = SoftScorer::new(LshParams { p, l: 6, tau: 1e5 }, dim, seed);
+            let probs = smooth.hasher.bucket_probs(&q);
+            for t in 0..6 {
+                for &pr in probs.table(t) {
+                    prop_assert!((pr * r as f32 - 1.0).abs() < 1e-2, "t={t} p={pr}");
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pooled_pipeline_matches_serial() {
+        // The worker-pool variants must be bit-identical to the serial
+        // hot path: chunked fills reduce nothing across threads.
+        let dim = 48;
+        let s = scorer(8, 24, 0.5, dim);
+        let pool = WorkerPool::new(4);
+        let mut rng = Pcg64::seeded(21);
+        let keys = Matrix::gaussian(2000, dim, &mut rng);
+        let vals = Matrix::gaussian(2000, dim, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let probs_serial = s.hasher.bucket_probs(&q);
+        let probs_pooled = s.hasher.bucket_probs_with(&q, &pool);
+        assert_eq!(probs_serial.probs, probs_pooled.probs);
+        assert_eq!(
+            s.raw_scores(&probs_serial, &hashes),
+            s.raw_scores_with(&probs_pooled, &hashes, &pool)
+        );
+        let mask: Vec<bool> = (0..2000).map(|j| j % 3 != 0).collect();
+        assert_eq!(
+            s.scores(&probs_serial, &hashes, Some(&mask)),
+            s.scores_with(&probs_pooled, &hashes, Some(&mask), &pool)
+        );
+        assert_eq!(
+            s.select_top_k(&q, &hashes, 64),
+            s.select_top_k_with(&q, &hashes, 64, &pool)
+        );
     }
 }

@@ -4,4 +4,4 @@ pub mod ranking;
 pub mod fidelity;
 
 pub use fidelity::{attention_mass_recall, output_error, output_relative_error};
-pub use ranking::{jaccard, ndcg_at_k, precision_at_k};
+pub use ranking::{jaccard, ndcg_at_k, precision_at_k, recall_at_k};

@@ -14,6 +14,21 @@ pub fn precision_at_k(retrieved: &[usize], relevant: &[usize], k: usize) -> f64 
     hits as f64 / k as f64
 }
 
+/// Recall = |S_k ∩ R| / |R|: the fraction of the ground-truth relevant
+/// set the method's top-k retrieves. An empty relevant set counts as
+/// perfectly recalled.
+pub fn recall_at_k(retrieved: &[usize], relevant: &[usize], k: usize) -> f64 {
+    let rel: HashSet<usize> = relevant.iter().copied().collect();
+    if rel.is_empty() {
+        return 1.0;
+    }
+    // Count distinct relevant items present in the retrieved prefix (a
+    // duplicated retrieval must not count twice).
+    let prefix: HashSet<usize> = retrieved.iter().take(k).copied().collect();
+    let hits = rel.intersection(&prefix).count();
+    hits as f64 / rel.len() as f64
+}
+
 /// Jaccard = |A ∩ B| / |A ∪ B| over the two index sets.
 pub fn jaccard(a: &[usize], b: &[usize]) -> f64 {
     let sa: HashSet<usize> = a.iter().copied().collect();
@@ -101,6 +116,54 @@ mod tests {
         assert_eq!(precision_at_k(&[1, 2, 3], &[1, 2, 3], 3), 1.0);
         assert_eq!(precision_at_k(&[4, 5, 6], &[1, 2, 3], 3), 0.0);
         assert_eq!(precision_at_k(&[1, 9, 8], &[1, 2, 3], 3), 1.0 / 3.0);
+    }
+
+    #[test]
+    fn recall_identical_ranking_is_one() {
+        // Recall@k of a ranking against itself is exactly 1.0.
+        let gt = vec![4, 2, 9, 7];
+        assert_eq!(recall_at_k(&gt, &gt, 4), 1.0);
+        // ...and so is any permutation: recall is set-based.
+        assert_eq!(recall_at_k(&[7, 9, 2, 4], &gt, 4), 1.0);
+    }
+
+    #[test]
+    fn recall_reversed_ranking_bounds() {
+        let gt = vec![1, 2, 3, 4];
+        let rev = vec![4, 3, 2, 1];
+        // Full-k reversal still recalls the whole set...
+        assert_eq!(recall_at_k(&rev, &gt, 4), 1.0);
+        // ...but truncation exposes the ordering: at k=2 the reversed
+        // list only recovers the back half.
+        assert_eq!(recall_at_k(&rev, &gt, 2), 0.5);
+        // NDCG penalizes the reversal even at full k (strictly < 1).
+        let n = ndcg_vs_ground_truth(&rev, &gt, 4);
+        assert!(n > 0.0 && n < 1.0, "n={n}");
+    }
+
+    #[test]
+    fn recall_edge_cases() {
+        assert_eq!(recall_at_k(&[1, 2], &[], 2), 1.0);
+        assert_eq!(recall_at_k(&[], &[1, 2], 2), 0.0);
+        assert_eq!(recall_at_k(&[5, 1], &[1, 2, 3, 4], 2), 0.25);
+    }
+
+    #[test]
+    fn prop_recall_in_unit_interval_and_monotone_in_k() {
+        check_default("recall-range-monotone", |rng, _| {
+            let n = 60;
+            let ka = 1 + rng.below_usize(20);
+            let retrieved: Vec<usize> = (0..20).map(|_| rng.below_usize(n)).collect();
+            let relevant: Vec<usize> = (0..ka).map(|_| rng.below_usize(n)).collect();
+            let mut prev = 0.0;
+            for k in 1..=retrieved.len() {
+                let r = recall_at_k(&retrieved, &relevant, k);
+                prop_assert!((0.0..=1.0).contains(&r), "recall {r} out of range");
+                prop_assert!(r >= prev - 1e-12, "recall not monotone in k");
+                prev = r;
+            }
+            Ok(())
+        });
     }
 
     #[test]

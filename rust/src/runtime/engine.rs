@@ -2,96 +2,34 @@
 //! the `xla` crate. One [`Engine`] owns a CPU PJRT client and a cache of
 //! compiled executables keyed by artifact name, so the decode hot loop
 //! never touches the filesystem or recompiles.
+//!
+//! Built only with `--features pjrt`; the default build substitutes the
+//! API-compatible stub in `runtime/stub.rs`.
+
+pub use super::tensor::{Input, Tensor, TensorData, TensorSpec};
 
 use anyhow::{anyhow, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-/// Typed input tensor for [`Engine::run_with`].
-#[derive(Clone, Debug)]
-pub enum Input {
-    F32(Vec<i64>, Vec<f32>),
-    I32(Vec<i64>, Vec<i32>),
-    Bool(Vec<i64>, Vec<bool>),
-}
-
-impl Input {
-    /// Reuse a previous output as the next call's input (the cache
-    /// chaining pattern of the decode loop).
-    pub fn from_tensor(t: &Tensor) -> Input {
-        match &t.data {
-            TensorData::F32(v) => Input::F32(t.dims.clone(), v.clone()),
-            TensorData::I32(v) => Input::I32(t.dims.clone(), v.clone()),
-            TensorData::Pred(v) => Input::Bool(t.dims.clone(), v.clone()),
+fn to_literal(input: &Input) -> Result<xla::Literal> {
+    let reshape = |lit: xla::Literal, dims: &[i64]| -> Result<xla::Literal> {
+        if dims.is_empty() {
+            // vec1 of len 1 -> scalar: reshape to rank 0.
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(dims)?)
         }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let reshape = |lit: xla::Literal, dims: &[i64]| -> Result<xla::Literal> {
-            if dims.is_empty() {
-                // vec1 of len 1 -> scalar: reshape to rank 0.
-                Ok(lit.reshape(&[])?)
-            } else {
-                Ok(lit.reshape(dims)?)
-            }
-        };
-        match self {
-            Input::F32(dims, data) => reshape(xla::Literal::vec1(data), dims),
-            Input::I32(dims, data) => reshape(xla::Literal::vec1(data), dims),
-            Input::Bool(dims, data) => {
-                // No bool NativeType in the crate: build u32, convert to PRED.
-                let words: Vec<u32> = data.iter().map(|&b| b as u32).collect();
-                let lit = xla::Literal::vec1(&words).convert(xla::PrimitiveType::Pred)?;
-                reshape(lit, dims)
-            }
+    };
+    match input {
+        Input::F32(dims, data) => reshape(xla::Literal::vec1(data), dims),
+        Input::I32(dims, data) => reshape(xla::Literal::vec1(data), dims),
+        Input::Bool(dims, data) => {
+            // No bool NativeType in the crate: build u32, convert to PRED.
+            let words: Vec<u32> = data.iter().map(|&b| b as u32).collect();
+            let lit = xla::Literal::vec1(&words).convert(xla::PrimitiveType::Pred)?;
+            reshape(lit, dims)
         }
-    }
-}
-
-/// Typed output tensor.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Tensor {
-    pub dims: Vec<i64>,
-    pub data: TensorData,
-}
-
-#[derive(Clone, Debug, PartialEq)]
-pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-    Pred(Vec<bool>),
-}
-
-impl Tensor {
-    /// f32 view (panics on non-f32 — use for known-float outputs).
-    pub fn f32s(&self) -> &[f32] {
-        match &self.data {
-            TensorData::F32(v) => v,
-            other => panic!("expected f32 tensor, got {other:?}"),
-        }
-    }
-
-    pub fn i32s(&self) -> &[i32] {
-        match &self.data {
-            TensorData::I32(v) => v,
-            other => panic!("expected i32 tensor, got {other:?}"),
-        }
-    }
-}
-
-/// Back-compat f32-only spec (kept for simple artifacts + tests).
-#[derive(Clone, Debug, PartialEq)]
-pub struct TensorSpec {
-    pub dims: Vec<i64>,
-    pub data: Vec<f32>,
-}
-
-impl TensorSpec {
-    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorSpec {
-        let want: i64 = dims.iter().product();
-        assert_eq!(want as usize, data.len().max(1).min(data.len()), "shape/data mismatch");
-        assert_eq!(want as usize, data.len(), "shape/data mismatch");
-        TensorSpec { dims, data }
     }
 }
 
@@ -138,7 +76,7 @@ impl Engine {
             .get(name)
             .with_context(|| format!("artifact '{name}' not loaded"))?;
         let literals: Vec<xla::Literal> =
-            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+            inputs.iter().map(to_literal).collect::<Result<_>>()?;
         let result =
             exe.execute::<xla::Literal>(&literals).map_err(|e| anyhow!("execute {name}: {e:?}"))?;
         let out = result[0][0].to_literal_sync().map_err(|e| anyhow!("sync {name}: {e:?}"))?;
@@ -189,34 +127,6 @@ impl Engine {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn tensor_spec_validates_shape() {
-        let t = TensorSpec::new(vec![2, 3], vec![0.0; 6]);
-        assert_eq!(t.dims, vec![2, 3]);
-    }
-
-    #[test]
-    #[should_panic(expected = "shape/data mismatch")]
-    fn tensor_spec_rejects_bad_shape() {
-        TensorSpec::new(vec![2, 3], vec![0.0; 5]);
-    }
-
-    #[test]
-    fn input_round_trips_tensor() {
-        let t = Tensor { dims: vec![2], data: TensorData::I32(vec![1, 2]) };
-        match Input::from_tensor(&t) {
-            Input::I32(dims, v) => {
-                assert_eq!(dims, vec![2]);
-                assert_eq!(v, vec![1, 2]);
-            }
-            other => panic!("{other:?}"),
-        }
-    }
-
-    // PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they
-    // need the artifacts built by `make artifacts`).
-}
+// PJRT round-trip tests live in rust/tests/runtime_pjrt.rs (they need
+// the artifacts built by `make artifacts`); the shared tensor types are
+// tested in runtime/tensor.rs.

@@ -1,13 +1,30 @@
-//! PJRT runtime: loads the HLO-text artifacts produced by
+//! Execution runtime: loads the HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them on the request path.
+//!
+//! The PJRT-backed engine (and its `xla`/`anyhow` dependencies) only
+//! builds with `--features pjrt`; the default build substitutes an
+//! API-compatible stub whose constructor reports that the runtime is
+//! unavailable, so the pure-Rust Layer-3 stack builds and tests fully
+//! offline. [`PJRT_ENABLED`] tells callers which engine they got.
 //!
 //! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 
+pub mod tensor;
+
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
-pub use engine::{Engine, Input, Tensor, TensorData, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
+pub mod engine;
+
+pub use engine::Engine;
+pub use tensor::{Input, Tensor, TensorData, TensorSpec};
+
+/// True when the crate was built with the PJRT runtime.
+pub const PJRT_ENABLED: bool = cfg!(feature = "pjrt");
 
 use std::path::{Path, PathBuf};
 
@@ -40,5 +57,10 @@ mod tests {
     fn artifacts_dir_resolves() {
         let d = artifacts_dir();
         assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[test]
+    fn pjrt_flag_matches_build() {
+        assert_eq!(PJRT_ENABLED, cfg!(feature = "pjrt"));
     }
 }

@@ -1,0 +1,74 @@
+//! Offline stand-in for the PJRT engine, compiled when the `pjrt`
+//! feature is off (the default). Mirrors the engine API so callers
+//! compile unchanged; every path that would execute on PJRT returns
+//! [`RuntimeUnavailable`]. Benches and tests gate on
+//! `runtime::artifact_available`, so in practice the stub's errors are
+//! never hit — they exist to make misuse loud instead of silent.
+
+pub use super::tensor::{Input, Tensor, TensorData, TensorSpec};
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// Error returned by every stub operation.
+#[derive(Debug, Clone)]
+pub struct RuntimeUnavailable;
+
+impl fmt::Display for RuntimeUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PJRT runtime not compiled in; rebuild with `--features pjrt`")
+    }
+}
+
+impl std::error::Error for RuntimeUnavailable {}
+
+/// API-shaped stub of the compile-once / run-many engine.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    /// Always fails in the stub build.
+    pub fn cpu(_artifacts_dir: PathBuf) -> Result<Engine, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<(), RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn is_loaded(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn run_with(
+        &self,
+        _name: &str,
+        _inputs: &[Input],
+    ) -> Result<Vec<Tensor>, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+
+    pub fn run(
+        &self,
+        _name: &str,
+        _inputs: &[TensorSpec],
+    ) -> Result<Vec<TensorSpec>, RuntimeUnavailable> {
+        Err(RuntimeUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_engine_reports_unavailable() {
+        let err = Engine::cpu(PathBuf::from("artifacts")).err().expect("stub must fail");
+        assert!(err.to_string().contains("--features pjrt"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Typed host tensors exchanged with the execution engine. Shared by the
+//! real PJRT engine (`--features pjrt`) and the offline stub, so callers
+//! compile identically in both configurations.
+
+/// Typed input tensor for `Engine::run_with`.
+#[derive(Clone, Debug)]
+pub enum Input {
+    F32(Vec<i64>, Vec<f32>),
+    I32(Vec<i64>, Vec<i32>),
+    Bool(Vec<i64>, Vec<bool>),
+}
+
+impl Input {
+    /// Reuse a previous output as the next call's input (the cache
+    /// chaining pattern of the decode loop).
+    pub fn from_tensor(t: &Tensor) -> Input {
+        match &t.data {
+            TensorData::F32(v) => Input::F32(t.dims.clone(), v.clone()),
+            TensorData::I32(v) => Input::I32(t.dims.clone(), v.clone()),
+            TensorData::Pred(v) => Input::Bool(t.dims.clone(), v.clone()),
+        }
+    }
+}
+
+/// Typed output tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<i64>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Pred(Vec<bool>),
+}
+
+impl Tensor {
+    /// f32 view (panics on non-f32 — use for known-float outputs).
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            other => panic!("expected f32 tensor, got {other:?}"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            other => panic!("expected i32 tensor, got {other:?}"),
+        }
+    }
+}
+
+/// Back-compat f32-only spec (kept for simple artifacts + tests).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorSpec {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorSpec {
+        let want: i64 = dims.iter().product();
+        assert_eq!(want as usize, data.len(), "shape/data mismatch");
+        TensorSpec { dims, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_validates_shape() {
+        let t = TensorSpec::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.dims, vec![2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_spec_rejects_bad_shape() {
+        TensorSpec::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn input_round_trips_tensor() {
+        let t = Tensor { dims: vec![2], data: TensorData::I32(vec![1, 2]) };
+        match Input::from_tensor(&t) {
+            Input::I32(dims, v) => {
+                assert_eq!(dims, vec![2]);
+                assert_eq!(v, vec![1, 2]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,9 +1,11 @@
 //! Small self-contained substrates: RNG, stats, JSON, CLI parsing, table
-//! formatting and timing. These replace crates that are unavailable in
-//! the offline build environment (rand, serde, clap, criterion).
+//! formatting, timing, and a reusable worker pool. These replace crates
+//! that are unavailable in the offline build environment (rand, serde,
+//! clap, criterion, rayon).
 
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod table;
@@ -11,6 +13,7 @@ pub mod timer;
 
 pub use cli::Args;
 pub use json::Json;
+pub use pool::WorkerPool;
 pub use rng::Pcg64;
 pub use stats::{mean, pearson, percentile, variance, Accumulator, LatencySummary};
 pub use table::{fnum, Table};

@@ -1,0 +1,330 @@
+//! A small reusable worker pool over std threads: long-lived workers, a
+//! shared job queue, and structured (scoped) execution — jobs may borrow
+//! the caller's stack because every call blocks until its jobs finish,
+//! the same guarantee `std::thread::scope` provides, without re-spawning
+//! threads on the decode hot path.
+//!
+//! `rayon`/`crossbeam` are unavailable offline; this is the minimal
+//! substrate the scoring hot paths need (chunked fills over slices and
+//! coarse index maps), shared process-wide through [`global`].
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Below this many output elements an elementwise fill runs inline: the
+/// per-element work would not amortize the cross-thread handoff.
+const PARALLEL_MIN_ELEMS: usize = 1024;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Exit,
+}
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Completion latch shared between one `run_all` call and its jobs.
+struct Latch {
+    remaining: Mutex<usize>,
+    all_done: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+/// Reusable thread pool with scoped (borrowing) job execution.
+pub struct WorkerPool {
+    tx: Mutex<Sender<Msg>>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool with `threads` execution lanes. `threads <= 1` means fully
+    /// inline execution (no worker threads are spawned).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::new();
+        if threads > 1 {
+            for _ in 0..threads {
+                let rx = Arc::clone(&rx);
+                workers.push(std::thread::spawn(move || worker_loop(rx)));
+            }
+        }
+        WorkerPool { tx: Mutex::new(tx), workers, threads }
+    }
+
+    /// Number of execution lanes (1 means inline).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when called from inside a pool worker thread. Nested
+    /// parallel calls run inline to avoid self-deadlock, so pool-using
+    /// code composes freely.
+    pub fn in_worker() -> bool {
+        IN_POOL_WORKER.with(|flag| flag.get())
+    }
+
+    /// Run every job to completion, blocking the caller. Jobs may borrow
+    /// from the caller's stack: the borrows cannot escape because this
+    /// function does not return until every job has executed and been
+    /// dropped (the `thread::scope` guarantee). A panicking job's
+    /// payload is re-raised here after the remaining jobs finish.
+    pub fn run_all<'scope>(&self, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        if self.workers.is_empty() || Self::in_worker() {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch {
+            remaining: Mutex::new(jobs.len()),
+            all_done: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        for job in jobs {
+            let latch_for_job = Arc::clone(&latch);
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(job)) {
+                    *latch_for_job.panic.lock().unwrap() = Some(payload);
+                }
+                let mut remaining = latch_for_job.remaining.lock().unwrap();
+                *remaining -= 1;
+                if *remaining == 0 {
+                    latch_for_job.all_done.notify_all();
+                }
+            });
+            // SAFETY: the closure is only lifetime-erased so it can
+            // cross the channel; run_all blocks on the latch until every
+            // job has executed and been dropped, so no borrow outlives
+            // the caller's frame (the scoped-threadpool pattern).
+            let erased: Job =
+                unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(wrapped) };
+            let sent = self.tx.lock().unwrap().send(Msg::Run(erased));
+            if let Err(err) = sent {
+                // Workers gone (teardown race): run inline instead.
+                if let Msg::Run(job) = err.0 {
+                    job();
+                }
+            }
+        }
+        let mut remaining = latch.remaining.lock().unwrap();
+        while *remaining > 0 {
+            remaining = latch.all_done.wait(remaining).unwrap();
+        }
+        drop(remaining);
+        if let Some(payload) = latch.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// `out[i] = f(i)` for every index, split across the pool when the
+    /// output is large enough to amortize the handoff. Exactly the
+    /// serial result (no cross-chunk reductions), in either regime.
+    pub fn fill<R, F>(&self, out: &mut [R], f: F)
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        self.fill_rows_impl(out, 1, PARALLEL_MIN_ELEMS, |i, dst| dst[0] = f(i));
+    }
+
+    /// Row-granular fill: `out` is `n_rows x row` row-major and
+    /// `f(i, dst)` writes row `i` into its `row`-wide slot.
+    pub fn fill_rows<R, F>(&self, out: &mut [R], row: usize, f: F)
+    where
+        R: Send,
+        F: Fn(usize, &mut [R]) + Sync,
+    {
+        self.fill_rows_impl(out, row, PARALLEL_MIN_ELEMS, f);
+    }
+
+    /// Collect `f(0..n)` into a `Vec`. Unlike [`WorkerPool::fill`] this
+    /// parallelizes even tiny `n`: it is meant for coarse-grained items
+    /// (whole queries / sequences), where each call is itself expensive.
+    pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        self.fill_rows_impl(&mut out, 1, 2, |i, dst| dst[0] = Some(f(i)));
+        out.into_iter().map(|slot| slot.expect("pool job filled every slot")).collect()
+    }
+
+    fn fill_rows_impl<R, F>(&self, out: &mut [R], row: usize, min_elems: usize, f: F)
+    where
+        R: Send,
+        F: Fn(usize, &mut [R]) + Sync,
+    {
+        assert!(row > 0, "row width must be positive");
+        assert_eq!(out.len() % row, 0, "output length must be a multiple of the row width");
+        let nrows = out.len() / row;
+        if nrows == 0 {
+            return;
+        }
+        let serial = self.workers.is_empty()
+            || Self::in_worker()
+            || nrows < 2
+            || out.len() < min_elems;
+        if serial {
+            for (i, dst) in out.chunks_mut(row).enumerate() {
+                f(i, dst);
+            }
+            return;
+        }
+        let rows_per_job = nrows.div_ceil(self.threads);
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(rows_per_job * row)
+            .enumerate()
+            .map(|(block_idx, block)| {
+                let base = block_idx * rows_per_job;
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    for (off, dst) in block.chunks_mut(row).enumerate() {
+                        f(base + off, dst);
+                    }
+                });
+                job
+            })
+            .collect();
+        self.run_all(jobs);
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let tx = self.tx.lock().unwrap();
+            for _ in &self.workers {
+                let _ = tx.send(Msg::Exit);
+            }
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
+    IN_POOL_WORKER.with(|flag| flag.set(true));
+    loop {
+        // Lock, receive one message, release (the guard is a temporary).
+        let msg = rx.lock().unwrap().recv();
+        match msg {
+            Ok(Msg::Run(job)) => job(),
+            Ok(Msg::Exit) | Err(_) => return,
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide shared pool used by the scoring hot paths. Sized by
+/// `SOCKET_THREADS` if set, else the machine's available parallelism.
+/// Created on first use; its workers live for the process lifetime, so
+/// hot-path callers never pay a thread spawn.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL_POOL.get_or_init(|| {
+        let threads = std::env::var("SOCKET_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+        WorkerPool::new(threads)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map(100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn fill_covers_every_index_in_parallel_regime() {
+        let pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 5000]; // above the inline threshold
+        pool.fill(&mut out, |i| i + 1);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i + 1));
+    }
+
+    #[test]
+    fn fill_rows_writes_disjoint_rows() {
+        let pool = WorkerPool::new(4);
+        let (rows, width) = (600usize, 8usize);
+        let mut out = vec![0u16; rows * width];
+        pool.fill_rows(&mut out, width, |i, dst| {
+            for (c, slot) in dst.iter_mut().enumerate() {
+                *slot = (i * width + c) as u16;
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v as usize == i));
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_state() {
+        let pool = WorkerPool::new(2);
+        let data: Vec<usize> = (0..4096).collect();
+        let mut out = vec![0usize; 4096];
+        pool.fill(&mut out, |i| data[i] * 2);
+        assert_eq!(out[4095], 8190);
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_deadlock() {
+        let pool = WorkerPool::new(4);
+        let got = pool.map(8, |i| {
+            let inner = global().map(4, move |j| i * 10 + j);
+            inner.into_iter().sum::<usize>()
+        });
+        assert_eq!(got.len(), 8);
+        // i = 1: (10 + 0) + (10 + 1) + (10 + 2) + (10 + 3) = 46.
+        assert_eq!(got[1], 46);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn job_panics_propagate_with_payload() {
+        let pool = WorkerPool::new(2);
+        let _ = pool.map(4, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let got = pool.map(16, |i| i + 1);
+        assert_eq!(got[15], 16);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(global().threads() >= 1);
+    }
+}

@@ -1,0 +1,219 @@
+//! Offline API stub of the `xla` PJRT bindings.
+//!
+//! The build environment cannot fetch or link the real XLA/PJRT
+//! bindings, so this crate mirrors exactly the API surface
+//! `socket_attn::runtime::engine` uses and reports a descriptive error
+//! from every operation that would need the native runtime. Swapping
+//! this path dependency for the real bindings (and rebuilding with
+//! `--features pjrt`) turns the same engine code into a working PJRT
+//! runtime; nothing downstream changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type standing in for the bindings' status/error enum.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} needs the native XLA/PJRT runtime; this build links the offline \
+         stub (swap vendor/xla for the real bindings)"
+    ))
+}
+
+/// Element types the stub can describe in literals.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u16 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// XLA primitive types (conversion targets).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+/// Array element types (shape queries).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    F32,
+    F64,
+}
+
+/// Host-side literal. The stub only tracks the element count so shape
+/// plumbing (vec1 → reshape) behaves; data never reaches a device.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    elems: usize,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { elems: data.len() }
+    }
+
+    /// Reshape; `&[]` means scalar (rank 0, one element).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let want: i64 = dims.iter().product();
+        let want = if dims.is_empty() { 1 } else { want };
+        if want as usize == self.elems {
+            Ok(self.clone())
+        } else {
+            Err(Error(format!("reshape to {dims:?} mismatches {} elements", self.elems)))
+        }
+    }
+
+    /// Element-type conversion (identity in the stub).
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal, Error> {
+        Ok(self.clone())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        Err(unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto, Error> {
+        Err(Error(format!(
+            "cannot parse {}: HLO parsing needs the native runtime (offline stub build)",
+            path.as_ref().display()
+        )))
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no PJRT plugin to load.
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute over device buffers; returns per-device output buffers.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_plumbing() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[2, 3]).is_ok());
+        assert!(lit.reshape(&[4, 2]).is_err());
+        let scalar = Literal::vec1(&[7i32]);
+        assert!(scalar.reshape(&[]).is_ok());
+        assert!(scalar.convert(PrimitiveType::Pred).is_ok());
+    }
+
+    #[test]
+    fn runtime_operations_report_stub() {
+        assert!(PjRtClient::cpu().is_err());
+        let err = HloModuleProto::from_text_file("artifacts/x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        let err = Literal::vec1(&[0u8]).to_vec::<u8>().unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+    }
+}
