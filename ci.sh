@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 gate in one command: release build, offline tests (default and
-# pjrt feature), and clippy with warnings denied. Run from anywhere.
+# pjrt feature), bench compile + smoke perf artifact, and clippy with
+# warnings denied. Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -12,6 +13,13 @@ cargo test -q
 
 echo "==> cargo test -q --features pjrt"
 cargo test -q --features pjrt
+
+echo "==> cargo bench --no-run"
+cargo bench --no-run
+
+echo "==> bench_throughput smoke (gather-vs-paged artifact)"
+cargo bench --bench bench_throughput -- --smoke --json-out "$PWD/BENCH_throughput.json"
+echo "    artifact: $PWD/BENCH_throughput.json"
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "==> cargo clippy --all-targets -- -D warnings"

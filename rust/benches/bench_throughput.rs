@@ -1,22 +1,54 @@
 //! Figures 3b/3c — decode throughput vs context length, SOCKET @33x vs
 //! dense FlashAttention-style decode, on the Rust substrate — plus the
-//! serial-vs-pooled scoring comparison for the shared worker pool.
+//! serial-vs-pooled scoring comparison for the shared worker pool and
+//! the gather-vs-paged KV hot-path comparison (KvView acceptance
+//! measurement). Writes the gather-vs-paged table to a `BENCH_*.json`
+//! artifact for the perf trajectory (`--json-out <path>`, empty string
+//! to skip). `--smoke` shrinks every sweep so ci.sh can emit the
+//! artifact in seconds.
 use socket_attn::experiments::{throughput, Scale};
-use socket_attn::util::Args;
+use socket_attn::util::{Args, Json};
 
 fn main() {
     let args = Args::from_env();
+    let smoke = args.flag("smoke");
     let mut scale = Scale::from_args(&args);
     scale.dim = args.usize_or("dim", 128); // paper head dim
-    let ctxs = [4 * 1024, 16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024];
     let sparsity = args.f64_or("sparsity", 33.0);
-    let pts = throughput::run(scale, &ctxs, sparsity);
+    let batch = args.usize_or("batch", 16);
+
+    let ctxs: &[usize] = if smoke {
+        &[2 * 1024, 8 * 1024]
+    } else {
+        &[4 * 1024, 16 * 1024, 32 * 1024, 64 * 1024, 128 * 1024]
+    };
+    let pts = throughput::run(scale, ctxs, sparsity);
     throughput::table(&pts, "CPU substrate, 33x sparsity").print();
 
     // Worker-pool scoring: the same SOCKET selection, one query at a
     // time on one thread vs a batch fanned across the pool.
-    let batch = args.usize_or("batch", 16);
-    let pool_ctxs = [4 * 1024, 16 * 1024, 64 * 1024];
-    let modes = throughput::run_scoring_modes(scale, &pool_ctxs, batch, sparsity);
+    let pool_ctxs: &[usize] =
+        if smoke { &[2 * 1024, 8 * 1024] } else { &[4 * 1024, 16 * 1024, 64 * 1024] };
+    let modes = throughput::run_scoring_modes(scale, pool_ctxs, batch, sparsity);
     throughput::scoring_modes_table(&modes).print();
+
+    // Gather vs paged-view KV hot path (serial + pooled lanes). Same
+    // selections, bit-identical outputs; the delta is gather overhead.
+    let pg_batch = args.usize_or("lanes", 8);
+    let pg = throughput::run_paged_vs_gather(scale, pool_ctxs, pg_batch, sparsity);
+    throughput::paged_vs_gather_table(&pg).print();
+
+    let artifact = args.get_or("json-out", "BENCH_throughput.json");
+    if !artifact.is_empty() {
+        let doc = Json::obj()
+            .set("bench", "throughput")
+            .set("smoke", smoke)
+            .set("dim", scale.dim)
+            .set("sparsity", sparsity)
+            .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg));
+        match std::fs::write(&artifact, doc.dumps() + "\n") {
+            Ok(()) => println!("wrote {artifact}"),
+            Err(e) => eprintln!("could not write {artifact}: {e}"),
+        }
+    }
 }

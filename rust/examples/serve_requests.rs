@@ -36,8 +36,15 @@ fn main() {
     let mut ttft = LatencySummary::new();
     let mut total = LatencySummary::new();
     let mut tokens = 0usize;
+    let mut failed = 0usize;
     for h in handles {
         let c = h.wait();
+        if !c.ok {
+            // Rejected up front (never admittable): keep it out of the
+            // latency/throughput stats — nothing was decoded.
+            failed += 1;
+            continue;
+        }
         ttft.record_ms(c.ttft_ms);
         total.record_ms(c.total_ms);
         tokens += c.decode_len;
@@ -48,5 +55,8 @@ fn main() {
     println!("throughput : {:.1} tok/s decode, {:.1} req/s", tokens as f64 / wall, stats.completed as f64 / wall);
     println!("TTFT  p50/p95/p99 : {:.1} / {:.1} / {:.1} ms", ttft.p50_ms(), ttft.p95_ms(), ttft.p99_ms());
     println!("total p50/p95/p99 : {:.1} / {:.1} / {:.1} ms", total.p50_ms(), total.p95_ms(), total.p99_ms());
-    println!("prefill tokens: {}, KV admission rejections: {}", stats.prefill_tokens, stats.rejected_admissions);
+    println!(
+        "prefill tokens: {}, KV admission rejections: {}, failed requests: {failed}",
+        stats.prefill_tokens, stats.rejected_admissions
+    );
 }

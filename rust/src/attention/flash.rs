@@ -1,12 +1,16 @@
 //! Blocked online-softmax decode — the CPU analog of the paper's
 //! Flash-Decode Triton backend.
 //!
-//! Processes the KV cache (or a gathered subset) in tiles, maintaining a
-//! running (max, sum, accumulator) so only one pass over K/V is needed
-//! and per-tile working state fits in cache. This is the L3 fallback
-//! attention path used when PJRT artifacts are not loaded, and the
-//! reference for the Pallas `sparse_decode` kernel's structure.
+//! Processes the KV cache in tiles, maintaining a running (max, sum,
+//! accumulator) so only one pass over K/V is needed and per-tile working
+//! state fits in cache. The core [`flash_decode_into`] is generic over
+//! [`KvSource`], so it runs directly over the paged KV pool (zero-copy,
+//! via `kvcache::KvView`) as well as over dense matrices; the float-op
+//! order is identical in both, so outputs are bit-identical. This is the
+//! L3 fallback attention path used when PJRT artifacts are not loaded,
+//! and the reference for the Pallas `sparse_decode` kernel's structure.
 
+use super::source::{DenseKv, KvSource};
 use crate::linalg::{dot, Matrix};
 
 /// Tile size in tokens. 128 keeps the K/V tile (128 x d x 4B, d≤256)
@@ -14,22 +18,27 @@ use crate::linalg::{dot, Matrix};
 /// into VMEM.
 pub const TILE: usize = 128;
 
-/// Online-softmax attention of one query over `selected` rows of K/V
-/// (pass `None` to attend over all rows). Matches dense softmax exactly
-/// up to float reassociation.
-pub fn flash_decode(
+/// Online-softmax attention of one query over `selected` tokens of `kv`
+/// (pass `None` to attend over all tokens), written into `out` (cleared
+/// and resized to the value dimension). Matches dense softmax exactly up
+/// to float reassociation. With `selected = None` the logit pass streams
+/// contiguous runs ([`KvSource::key_run`]), so paged backends pay one
+/// page-table lookup per run rather than per token.
+pub fn flash_decode_into<S: KvSource + ?Sized>(
     q: &[f32],
-    keys: &Matrix,
-    values: &Matrix,
+    kv: &S,
     selected: Option<&[usize]>,
     scale: f32,
-) -> Vec<f32> {
-    assert_eq!(keys.rows, values.rows);
-    let n = selected.map(|s| s.len()).unwrap_or(keys.rows);
-    let dv = values.cols;
+    out: &mut Vec<f32>,
+) {
+    let n = selected.map(|s| s.len()).unwrap_or(kv.n_tokens());
+    let d = kv.key_dim();
+    let dv = kv.value_dim();
+    debug_assert_eq!(q.len(), d);
+    out.clear();
+    out.resize(dv, 0.0);
     let mut m = f32::NEG_INFINITY; // running max
     let mut s = 0.0f32; // running sum of exp
-    let mut acc = vec![0.0f32; dv]; // running weighted value sum
     let mut tile_logits = [0.0f32; TILE];
 
     let mut start = 0usize;
@@ -38,21 +47,35 @@ pub fn flash_decode(
         let tile = end - start;
         // 1) logits for this tile
         let mut tile_max = f32::NEG_INFINITY;
-        for i in 0..tile {
-            let row = match selected {
-                Some(sel) => sel[start + i],
-                None => start + i,
-            };
-            let logit = dot(keys.row(row), q) * scale;
-            tile_logits[i] = logit;
-            tile_max = tile_max.max(logit);
+        match selected {
+            Some(sel) => {
+                for i in 0..tile {
+                    let logit = dot(kv.key(sel[start + i]), q) * scale;
+                    tile_logits[i] = logit;
+                    tile_max = tile_max.max(logit);
+                }
+            }
+            None => {
+                // Stream contiguous runs within the tile.
+                let mut i = 0usize;
+                while i < tile {
+                    let (keys, run_len) = kv.key_run(start + i, tile - i);
+                    let run = run_len.min(tile - i);
+                    for r in 0..run {
+                        let logit = dot(&keys[r * d..(r + 1) * d], q) * scale;
+                        tile_logits[i + r] = logit;
+                        tile_max = tile_max.max(logit);
+                    }
+                    i += run;
+                }
+            }
         }
         // 2) rescale running state if the max grew
         let new_m = m.max(tile_max);
         if new_m > m && m > f32::NEG_INFINITY {
             let corr = (m - new_m).exp();
             s *= corr;
-            for a in acc.iter_mut() {
+            for a in out.iter_mut() {
                 *a *= corr;
             }
         }
@@ -64,23 +87,38 @@ pub fn flash_decode(
                 continue;
             }
             s += w;
-            let row = match selected {
+            let t = match selected {
                 Some(sel) => sel[start + i],
                 None => start + i,
             };
-            let v = values.row(row);
+            let v = kv.value(t);
             for c in 0..dv {
-                acc[c] += w * v[c];
+                out[c] += w * v[c];
             }
         }
         start = end;
     }
     if s > 0.0 {
-        for a in acc.iter_mut() {
+        for a in out.iter_mut() {
             *a /= s;
         }
     }
-    acc
+}
+
+/// Online-softmax attention of one query over `selected` rows of dense
+/// K/V matrices (pass `None` to attend over all rows). Thin adapter over
+/// [`flash_decode_into`], kept for the experiment drivers and as the
+/// gather-path reference.
+pub fn flash_decode(
+    q: &[f32],
+    keys: &Matrix,
+    values: &Matrix,
+    selected: Option<&[usize]>,
+    scale: f32,
+) -> Vec<f32> {
+    let mut out = Vec::new();
+    flash_decode_into(q, &DenseKv::new(keys, values), selected, scale, &mut out);
+    out
 }
 
 #[cfg(test)]
@@ -88,6 +126,7 @@ mod tests {
     use super::*;
     use crate::attention::dense::dense_attention;
     use crate::attention::sparse::sparse_attention;
+    use crate::kvcache::{PageTable, PagedKvCache, PAGE_TOKENS};
     use crate::prop_assert;
     use crate::testing::{check_default, gen};
     use crate::util::rng::Pcg64;
@@ -141,6 +180,17 @@ mod tests {
     }
 
     #[test]
+    fn into_reuses_buffer_and_clears_stale_state() {
+        let mut rng = Pcg64::seeded(5);
+        let keys = Matrix::gaussian(50, 8, &mut rng);
+        let values = Matrix::gaussian(50, 8, &mut rng);
+        let q = rng.normal_vec(8);
+        let mut out = vec![9.0f32; 32]; // wrong size, stale contents
+        flash_decode_into(&q, &DenseKv::new(&keys, &values), None, 1.0, &mut out);
+        assert_eq!(out, flash_decode(&q, &keys, &values, None, 1.0));
+    }
+
+    #[test]
     fn prop_flash_equals_dense() {
         check_default("flash-vs-dense", |rng, _| {
             let d = gen::size(rng, 2, 32);
@@ -154,6 +204,59 @@ mod tests {
             for i in 0..d {
                 prop_assert!((yd[i] - yf[i]).abs() < 1e-3, "n={n} d={d} i={i}");
             }
+            Ok(())
+        });
+    }
+
+    /// The tentpole equivalence gate: the paged-view decode path must be
+    /// *bit-identical* to the gather path across random (n, dim,
+    /// sparsity, selection) — including page tables whose physical pages
+    /// are non-adjacent (a decoy sequence interleaves allocations).
+    #[test]
+    fn prop_paged_view_bit_identical_to_gather() {
+        check_default("paged-vs-gather", |rng, _| {
+            let d = gen::size(rng, 2, 48);
+            let n = gen::size(rng, 1, 500);
+            let capacity = 2 * PagedKvCache::pages_for(n) + 4;
+            let mut cache = PagedKvCache::new(capacity, d);
+            let mut table = PageTable::default();
+            let mut decoy = PageTable::default();
+            let filler = vec![0.0f32; d];
+            for t in 0..n {
+                let k = rng.normal_vec(d);
+                let v = rng.normal_vec(d);
+                assert!(cache.append(&mut table, &k, &v));
+                // Half the time, claim the next physical page for the
+                // decoy right after a page boundary, so the main
+                // sequence's pages are not physically contiguous.
+                if t % PAGE_TOKENS == PAGE_TOKENS - 1 && rng.next_f64() < 0.5 {
+                    for _ in 0..PAGE_TOKENS {
+                        if cache.free_pages() > PagedKvCache::pages_for(n - t) {
+                            assert!(cache.append(&mut decoy, &filler, &filler));
+                        }
+                    }
+                }
+            }
+            let q = rng.normal_vec(d);
+            let scale = 1.0 / (d as f32).sqrt();
+            let view = cache.view(&table);
+
+            // Random selection at a random sparsity level.
+            let density = rng.next_f64();
+            let sel: Vec<usize> = (0..n).filter(|_| rng.next_f64() < density).collect();
+            let (gk, gv) = cache.gather(&table, &sel);
+            let want = flash_decode(&q, &gk, &gv, None, scale);
+            let mut got = Vec::new();
+            flash_decode_into(&q, &view, Some(&sel), scale, &mut got);
+            prop_assert!(got == want, "selected path differs: n={n} d={d} sel={}", sel.len());
+
+            // Full-cache (dense-mode) path against gathering everything.
+            let all: Vec<usize> = (0..n).collect();
+            let (ak, av) = cache.gather(&table, &all);
+            let want_all = flash_decode(&q, &ak, &av, None, scale);
+            let mut got_all = Vec::new();
+            flash_decode_into(&q, &view, None, scale, &mut got_all);
+            prop_assert!(got_all == want_all, "dense path differs: n={n} d={d}");
             Ok(())
         });
     }

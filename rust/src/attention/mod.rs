@@ -6,9 +6,11 @@
 pub mod angular;
 pub mod dense;
 pub mod flash;
+pub mod source;
 pub mod sparse;
 
 pub use angular::{angular_attention, angular_weights};
 pub use dense::{attention_weights, dense_attention};
-pub use flash::flash_decode;
-pub use sparse::{sparse_attention, SelectionPolicy};
+pub use flash::{flash_decode, flash_decode_into};
+pub use source::{DenseKv, KvSource};
+pub use sparse::{sparse_attention, sparse_attention_into, SelectionPolicy};

@@ -1,0 +1,128 @@
+//! The [`KvSource`] abstraction: what the decode attention kernels need
+//! from a K/V backing store. Implemented by dense `Matrix` pairs (the
+//! gather/reference layout) and by `kvcache::KvView` (the zero-copy
+//! paged layout), so the tiled online-softmax runs identically over
+//! both — same float-op order, bit-identical outputs.
+
+use crate::linalg::Matrix;
+
+/// Read-only token-addressed K/V storage consumed by the attention
+/// kernels. `key`/`value` give per-token vectors; `key_run`/`value_run`
+/// expose the longest *contiguous* slice starting at a token so tiled
+/// kernels can stream memory without a page-table lookup per token.
+pub trait KvSource {
+    /// Number of cached tokens.
+    fn n_tokens(&self) -> usize;
+
+    /// Key vector width.
+    fn key_dim(&self) -> usize;
+
+    /// Value vector width (the attention output dimension).
+    fn value_dim(&self) -> usize;
+
+    /// Key vector of token `t`.
+    fn key(&self, t: usize) -> &[f32];
+
+    /// Value vector of token `t`.
+    fn value(&self, t: usize) -> &[f32];
+
+    /// Keys of a contiguous run starting at token `t`, capped at `max`
+    /// tokens: a slice of at least `len * key_dim()` floats plus its
+    /// token length `1 <= len <= max`. The cap lets backends bound
+    /// their run-discovery scan to what the caller will consume.
+    /// Defaults to a single-token run; contiguous backends override.
+    fn key_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        let _ = max;
+        (self.key(t), 1)
+    }
+
+    /// Values of a contiguous run starting at token `t`, capped at
+    /// `max` tokens.
+    fn value_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        let _ = max;
+        (self.value(t), 1)
+    }
+}
+
+/// Dense `Matrix`-backed K/V — the layout `PagedKvCache::gather`
+/// produces and the experiment drivers build directly. One contiguous
+/// run spans the whole store.
+pub struct DenseKv<'a> {
+    pub keys: &'a Matrix,
+    pub values: &'a Matrix,
+}
+
+impl<'a> DenseKv<'a> {
+    pub fn new(keys: &'a Matrix, values: &'a Matrix) -> DenseKv<'a> {
+        assert_eq!(keys.rows, values.rows, "keys/values row mismatch");
+        DenseKv { keys, values }
+    }
+}
+
+impl KvSource for DenseKv<'_> {
+    #[inline]
+    fn n_tokens(&self) -> usize {
+        self.keys.rows
+    }
+
+    #[inline]
+    fn key_dim(&self) -> usize {
+        self.keys.cols
+    }
+
+    #[inline]
+    fn value_dim(&self) -> usize {
+        self.values.cols
+    }
+
+    #[inline]
+    fn key(&self, t: usize) -> &[f32] {
+        self.keys.row(t)
+    }
+
+    #[inline]
+    fn value(&self, t: usize) -> &[f32] {
+        self.values.row(t)
+    }
+
+    #[inline]
+    fn key_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        (&self.keys.data[t * self.keys.cols..], (self.keys.rows - t).min(max))
+    }
+
+    #[inline]
+    fn value_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        (&self.values.data[t * self.values.cols..], (self.values.rows - t).min(max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_source_addresses_rows() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(10, 4, &mut rng);
+        let values = Matrix::gaussian(10, 4, &mut rng);
+        let kv = DenseKv::new(&keys, &values);
+        assert_eq!(kv.n_tokens(), 10);
+        assert_eq!(kv.key_dim(), 4);
+        assert_eq!(kv.key(3), keys.row(3));
+        assert_eq!(kv.value(7), values.row(7));
+        let (run, len) = kv.key_run(6, 100);
+        assert_eq!(len, 4);
+        assert_eq!(&run[..4], keys.row(6));
+        let (_, capped) = kv.value_run(2, 3);
+        assert_eq!(capped, 3, "run length must respect the caller's cap");
+    }
+
+    #[test]
+    #[should_panic(expected = "row mismatch")]
+    fn dense_source_rejects_shape_mismatch() {
+        let keys = Matrix::zeros(3, 2);
+        let values = Matrix::zeros(4, 2);
+        DenseKv::new(&keys, &values);
+    }
+}

@@ -2,6 +2,7 @@
 //! sink + local-window policy ("we include a small number of sink and
 //! local window tokens (e.g., 128 tokens)", Section 6).
 
+use super::source::{DenseKv, KvSource};
 use crate::linalg::{add_scaled, dot, softmax_inplace, Matrix};
 
 /// Token-selection policy wrapper: a budget of k scored tokens plus
@@ -36,23 +37,55 @@ impl SelectionPolicy {
     /// Merge the scored top-k indices with sink/local tokens into a
     /// deduplicated, sorted index set over `n` cached tokens.
     pub fn merge(&self, top_k: &[usize], n: usize) -> Vec<usize> {
-        let mut keep = vec![false; n];
-        for i in 0..self.sink.min(n) {
-            keep[i] = true;
+        let mut out = Vec::new();
+        self.merge_into(top_k, n, &mut out);
+        out
+    }
+
+    /// [`SelectionPolicy::merge`] writing into a reusable buffer — the
+    /// decode hot path calls this once per head per step, so the merged
+    /// index set lives in per-worker scratch instead of a fresh
+    /// allocation (see `util::pool::with_decode_scratch`).
+    pub fn merge_into(&self, top_k: &[usize], n: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..self.sink.min(n));
+        out.extend(n.saturating_sub(self.local)..n);
+        out.extend(top_k.iter().take(self.k).copied().filter(|&i| i < n));
+        out.sort_unstable();
+        out.dedup();
+    }
+}
+
+/// Sparse attention (eq. 2) over any [`KvSource`]: exact softmax
+/// restricted to `selected`, written into `out`. `logits` is caller
+/// scratch (cleared and resized) so the hot path reuses buffers across
+/// steps. Runs in place over the paged cache via `kvcache::KvView` —
+/// no gather, no dense copy.
+pub fn sparse_attention_into<S: KvSource + ?Sized>(
+    q: &[f32],
+    kv: &S,
+    selected: &[usize],
+    scale: f32,
+    logits: &mut Vec<f32>,
+    out: &mut Vec<f32>,
+) {
+    logits.clear();
+    logits.resize(selected.len(), 0.0);
+    for (s, &j) in selected.iter().enumerate() {
+        logits[s] = dot(kv.key(j), q) * scale;
+    }
+    softmax_inplace(logits);
+    out.clear();
+    out.resize(kv.value_dim(), 0.0);
+    for (s, &j) in selected.iter().enumerate() {
+        if logits[s] != 0.0 {
+            add_scaled(out, kv.value(j), logits[s]);
         }
-        for i in n.saturating_sub(self.local)..n {
-            keep[i] = true;
-        }
-        for &i in top_k.iter().take(self.k) {
-            if i < n {
-                keep[i] = true;
-            }
-        }
-        (0..n).filter(|&i| keep[i]).collect()
     }
 }
 
 /// Sparse attention (eq. 2): exact softmax restricted to `selected`.
+/// Thin dense-matrix adapter over [`sparse_attention_into`].
 pub fn sparse_attention(
     q: &[f32],
     keys: &Matrix,
@@ -60,18 +93,9 @@ pub fn sparse_attention(
     selected: &[usize],
     scale: f32,
 ) -> Vec<f32> {
-    assert_eq!(keys.rows, values.rows);
-    let mut logits = vec![0.0f32; selected.len()];
-    for (s, &j) in selected.iter().enumerate() {
-        logits[s] = dot(keys.row(j), q) * scale;
-    }
-    softmax_inplace(&mut logits);
-    let mut out = vec![0.0f32; values.cols];
-    for (s, &j) in selected.iter().enumerate() {
-        if logits[s] != 0.0 {
-            add_scaled(&mut out, values.row(j), logits[s]);
-        }
-    }
+    let mut logits = Vec::new();
+    let mut out = Vec::new();
+    sparse_attention_into(q, &DenseKv::new(keys, values), selected, scale, &mut logits, &mut out);
     out
 }
 
@@ -112,6 +136,34 @@ mod tests {
         let ys = sparse_attention(&q, &keys, &values, &[7], 1.0);
         let err: f32 = yd.iter().zip(&ys).map(|(a, b)| (a - b).abs()).sum();
         assert!(err < 0.3, "err={err}");
+    }
+
+    #[test]
+    fn view_sparse_matches_matrix_sparse_exactly() {
+        // The paged view and the dense-matrix adapter must agree
+        // bit-for-bit (same kernel, same float-op order).
+        use crate::kvcache::{PageTable, PagedKvCache};
+        let mut rng = Pcg64::seeded(9);
+        let dim = 8;
+        let mut cache = PagedKvCache::new(8, dim);
+        let mut table = PageTable::default();
+        let mut kvec = Vec::new();
+        let mut vvec = Vec::new();
+        for _ in 0..50 {
+            let k = rng.normal_vec(dim);
+            let v = rng.normal_vec(dim);
+            assert!(cache.append(&mut table, &k, &v));
+            kvec.extend_from_slice(&k);
+            vvec.extend_from_slice(&v);
+        }
+        let keys = Matrix::from_vec(50, dim, kvec);
+        let values = Matrix::from_vec(50, dim, vvec);
+        let q = rng.normal_vec(dim);
+        let sel = [0usize, 3, 15, 16, 17, 31, 49]; // spans page boundaries
+        let want = sparse_attention(&q, &keys, &values, &sel, 0.5);
+        let (mut logits, mut out) = (Vec::new(), Vec::new());
+        sparse_attention_into(&q, &cache.view(&table), &sel, 0.5, &mut logits, &mut out);
+        assert_eq!(out, want);
     }
 
     #[test]

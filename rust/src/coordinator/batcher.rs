@@ -92,13 +92,16 @@ impl Batcher {
             batch.decodes.push(s);
             self.running.push_back(s);
         }
-        // Prefills under token budget.
+        // Prefills under token budget. The first prefill of an
+        // iteration is exempt: a context longer than the whole budget
+        // must still be offered (alone) or it would block the queue
+        // head forever — the token-budget twin of the KV livelock.
         let mut budget = self.policy.prefill_token_budget;
         while batch.prefills.len() < self.policy.max_prefills {
             match self.waiting.front() {
-                Some(&(_, ctx)) if ctx <= budget => {
+                Some(&(_, ctx)) if ctx <= budget || batch.prefills.is_empty() => {
                     let (id, ctx) = self.waiting.pop_front().unwrap();
-                    budget -= ctx;
+                    budget = budget.saturating_sub(ctx);
                     batch.prefills.push((id, ctx));
                 }
                 _ => break,
@@ -138,6 +141,20 @@ mod tests {
         assert_eq!(batch.prefills, vec![(1, 600)]); // 2 blocks the queue (FIFO)
         let batch2 = b.next_batch();
         assert_eq!(batch2.prefills, vec![(2, 600), (3, 100)]);
+    }
+
+    #[test]
+    fn oversized_context_is_offered_alone() {
+        // A context longer than the whole token budget is still offered
+        // as the sole prefill of its iteration (otherwise it would pin
+        // the queue head forever).
+        let mut b = Batcher::new(policy());
+        b.enqueue(1, 5000); // budget is 1000
+        b.enqueue(2, 100);
+        let batch = b.next_batch();
+        assert_eq!(batch.prefills, vec![(1, 5000)]);
+        let batch2 = b.next_batch();
+        assert_eq!(batch2.prefills, vec![(2, 100)]);
     }
 
     #[test]

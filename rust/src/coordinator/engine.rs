@@ -2,10 +2,11 @@
 //! SOCKET hash side-cars, executes prefill and single-token decode
 //! steps. One engine serves many sequences (state is per-sequence).
 
-use crate::attention::{flash_decode, SelectionPolicy};
+use crate::attention::{flash_decode_into, SelectionPolicy};
 use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
 use crate::lsh::LshParams;
 use crate::model::{ModelConfig, SyntheticModel};
+use crate::util::pool::with_decode_scratch;
 use std::collections::HashMap;
 
 /// How decode attention selects tokens.
@@ -90,6 +91,16 @@ impl DecodeEngine {
         self.kv.free_pages()
     }
 
+    /// Whether a request of this shape can *ever* be admitted: its full
+    /// page commitment must fit an empty pool. The scheduler rejects
+    /// inadmissible requests up front with a failed completion instead
+    /// of requeueing them forever (no running sequence can release
+    /// enough pages to make them fit).
+    pub fn admissible(&self, context_len: usize, max_new_tokens: usize) -> bool {
+        self.config.model.n_kv_heads * PagedKvCache::pages_for(context_len + max_new_tokens)
+            <= self.kv.total_pages()
+    }
+
     /// Admit a sequence: prefill `context_len` tokens (build KV pages +
     /// hash signatures, Alg. 1) and commit page headroom for up to
     /// `max_new_tokens` decode appends. Returns false if the pool
@@ -169,10 +180,16 @@ impl DecodeEngine {
         for h in 0..heads {
             let n = state.tables[h].n_tokens;
             let q = state.model.query_at(h, step);
-            // Gather the cache view. (The paged cache is the source of
-            // truth; gather is only done for the selected subset.)
-            let selected: Option<Vec<usize>> = match self.config.mode {
-                AttentionMode::Dense => None,
+            // Attend in place over the paged cache: the view addresses
+            // pages through the page table, so no K/V row is copied and
+            // no dense matrix is allocated per step. The merged
+            // selection lives in per-worker scratch.
+            let view = self.kv.view(&state.tables[h]);
+            let mut out = Vec::new();
+            match self.config.mode {
+                AttentionMode::Dense => {
+                    flash_decode_into(&q, &view, None, scale, &mut out);
+                }
                 AttentionMode::Socket { sparsity } => {
                     let policy = SelectionPolicy::from_sparsity(
                         n,
@@ -181,20 +198,12 @@ impl DecodeEngine {
                         self.config.local,
                     );
                     let top = state.socket[h].select(&q, policy.k);
-                    Some(policy.merge(&top, n))
+                    with_decode_scratch(|scratch| {
+                        policy.merge_into(&top, n, &mut scratch.indices);
+                        flash_decode_into(&q, &view, Some(&scratch.indices), scale, &mut out);
+                    });
                 }
-            };
-            let out = match &selected {
-                None => {
-                    let all: Vec<usize> = (0..n).collect();
-                    let (keys, values) = self.kv.gather(&state.tables[h], &all);
-                    flash_decode(&q, &keys, &values, None, scale)
-                }
-                Some(sel) => {
-                    let (keys, values) = self.kv.gather(&state.tables[h], sel);
-                    flash_decode(&q, &keys, &values, None, scale)
-                }
-            };
+            }
             outputs.push(out);
             appends.push(state.model.kv_at(h, n));
         }
@@ -262,6 +271,15 @@ mod tests {
         e.release(1);
         assert!(e.free_pages() > free_before);
         assert_eq!(e.n_sequences(), 0);
+    }
+
+    #[test]
+    fn admissible_matches_pool_capacity() {
+        let e = DecodeEngine::new(EngineConfig { capacity_pages: 8, ..cfg(AttentionMode::Dense) });
+        // 2 kv-heads x pages_for(ctx + dec) must fit the 8-page pool.
+        assert!(e.admissible(32, 16)); // 2 * 3 = 6
+        assert!(e.admissible(48, 16)); // 2 * 4 = 8
+        assert!(!e.admissible(64, 16)); // 2 * 5 = 10
     }
 
     #[test]

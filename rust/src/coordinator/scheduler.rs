@@ -6,11 +6,12 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::engine::{DecodeEngine, EngineConfig};
 use crate::workload::trace::Request;
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// Completion record returned for every finished request.
+/// Completion record returned for every finished request — served or
+/// failed (`ok` distinguishes; failed completions carry `error`).
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
@@ -20,6 +21,12 @@ pub struct Completion {
     pub ttft_ms: f64,
     /// Time from submission to completion, ms.
     pub total_ms: f64,
+    /// Whether the request was actually served. False for requests the
+    /// scheduler rejected up front (e.g. a KV commitment that could
+    /// never fit the pool).
+    pub ok: bool,
+    /// Failure reason when `ok` is false.
+    pub error: Option<String>,
 }
 
 /// Aggregate scheduler statistics.
@@ -29,6 +36,9 @@ pub struct SchedulerStats {
     pub decode_steps: u64,
     pub prefill_tokens: u64,
     pub rejected_admissions: u64,
+    /// Requests failed up front: their full KV commitment exceeds the
+    /// pool, so no amount of waiting could ever admit them.
+    pub failed_requests: u64,
 }
 
 enum Msg {
@@ -45,6 +55,20 @@ impl RequestHandle {
     /// Block until the request completes.
     pub fn wait(self) -> Completion {
         self.rx.recv().expect("scheduler dropped before completing request")
+    }
+
+    /// Block until the request completes or `timeout` elapses. `None`
+    /// on timeout — the request is still in flight and the handle
+    /// remains usable for another wait. Panics if the scheduler
+    /// dropped without completing the request.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<Completion> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(c) => Some(c),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                panic!("scheduler dropped before completing request")
+            }
+        }
     }
 }
 
@@ -93,6 +117,40 @@ impl Drop for Coordinator {
     }
 }
 
+/// Accept a submission into the waiting queue, or fail it immediately
+/// when its full KV commitment could never fit the pool. Pre-fix, such
+/// a request was requeued by every iteration forever: no running
+/// sequence can release enough pages to make it fit, so the scheduler
+/// livelocked in a hot spin.
+fn accept(
+    engine: &DecodeEngine,
+    batcher: &mut Batcher,
+    inflight: &mut HashMap<u64, Inflight>,
+    stats: &mut SchedulerStats,
+    req: Request,
+    done_tx: Sender<Completion>,
+) {
+    if !engine.admissible(req.context_len, req.decode_len) {
+        stats.failed_requests += 1;
+        let _ = done_tx.send(Completion {
+            id: req.id,
+            context_len: req.context_len,
+            decode_len: req.decode_len,
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            ok: false,
+            error: Some(format!(
+                "never admittable: {} context + {} decode tokens exceed the {}-page KV pool",
+                req.context_len, req.decode_len, engine.config.capacity_pages
+            )),
+        });
+        return;
+    }
+    batcher.enqueue(req.id, req.context_len);
+    inflight
+        .insert(req.id, Inflight { req, submitted: Instant::now(), first_token: None, done_tx });
+}
+
 fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) -> SchedulerStats {
     let mut engine = DecodeEngine::new(config);
     let mut batcher = Batcher::new(policy);
@@ -108,11 +166,7 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
             if idle && !draining {
                 match rx.recv() {
                     Ok(Msg::Submit(req, done_tx)) => {
-                        batcher.enqueue(req.id, req.context_len);
-                        inflight.insert(
-                            req.id,
-                            Inflight { req, submitted: Instant::now(), first_token: None, done_tx },
-                        );
+                        accept(&engine, &mut batcher, &mut inflight, &mut stats, req, done_tx);
                     }
                     Ok(Msg::Shutdown) | Err(_) => draining = true,
                 }
@@ -120,11 +174,7 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
             }
             match rx.try_recv() {
                 Ok(Msg::Submit(req, done_tx)) => {
-                    batcher.enqueue(req.id, req.context_len);
-                    inflight.insert(
-                        req.id,
-                        Inflight { req, submitted: Instant::now(), first_token: None, done_tx },
-                    );
+                    accept(&engine, &mut batcher, &mut inflight, &mut stats, req, done_tx);
                 }
                 Ok(Msg::Shutdown) => draining = true,
                 Err(TryRecvError::Empty) => break,
@@ -145,12 +195,35 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
             }
             continue;
         }
+        let mut progressed = !batch.decodes.is_empty();
         // Prefills (admission may fail under KV pressure → requeue).
         for &(seq, ctx) in batch.prefills.iter() {
             let decode_len = inflight.get(&seq).map(|f| f.req.decode_len).unwrap_or(0);
             if engine.prefill(seq, ctx, decode_len) {
-                batcher.started(seq);
                 stats.prefill_tokens += ctx as u64;
+                progressed = true;
+                if decode_len == 0 {
+                    // Zero-length decode: complete at prefill time. No
+                    // decode step runs and no token is appended, so
+                    // `decode_steps` stays untouched and the cache holds
+                    // exactly the context that was requested.
+                    let fl = inflight.remove(&seq).expect("prefill for unknown request");
+                    let now = Instant::now();
+                    let ms = now.duration_since(fl.submitted).as_secs_f64() * 1e3;
+                    let _ = fl.done_tx.send(Completion {
+                        id: seq,
+                        context_len: fl.req.context_len,
+                        decode_len: 0,
+                        ttft_ms: ms,
+                        total_ms: ms,
+                        ok: true,
+                        error: None,
+                    });
+                    engine.release(seq);
+                    stats.completed += 1;
+                } else {
+                    batcher.started(seq);
+                }
             } else {
                 stats.rejected_admissions += 1;
                 batcher.requeue(seq, ctx);
@@ -182,12 +255,21 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
                         .as_secs_f64()
                         * 1e3,
                     total_ms: now.duration_since(fl.submitted).as_secs_f64() * 1e3,
+                    ok: true,
+                    error: None,
                 };
                 let _ = fl.done_tx.send(completion);
                 batcher.finished(seq);
                 engine.release(seq);
                 stats.completed += 1;
             }
+        }
+        if !progressed {
+            // Every admission was requeued and nothing decoded. Pages
+            // only free when a future iteration completes a request, so
+            // spinning is pure waste — park briefly instead of burning
+            // a core re-offering the same batch.
+            std::thread::sleep(Duration::from_micros(200));
         }
     }
 }
@@ -220,6 +302,7 @@ mod tests {
         let h = coord.submit(req(1, 128, 4));
         let c = h.wait();
         assert_eq!(c.id, 1);
+        assert!(c.ok, "{:?}", c.error);
         assert_eq!(c.decode_len, 4);
         assert!(c.ttft_ms <= c.total_ms);
         let stats = coord.shutdown();
@@ -255,6 +338,68 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.completed, 6);
         assert!(stats.rejected_admissions > 0, "expected KV backpressure");
+    }
+
+    #[test]
+    fn oversized_request_fails_fast_instead_of_livelocking() {
+        // 8-page pool x 16 tokens x 1 kv-head = 128 cacheable tokens; a
+        // 1024-token request can never be admitted. Pre-fix the
+        // scheduler requeued it forever in a hot spin (nothing running,
+        // so no pages could ever free). Now it must complete with an
+        // error, and later requests must still be served.
+        let config = EngineConfig { capacity_pages: 8, ..small_config() };
+        let coord = Coordinator::spawn(config, BatchPolicy::default());
+        let h_big = coord.submit(req(1, 1024, 4));
+        let h_ok = coord.submit(req(2, 48, 2));
+        let c_big = h_big
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .expect("oversized request must fail fast, not livelock");
+        assert!(!c_big.ok);
+        assert!(
+            c_big.error.as_deref().unwrap_or("").contains("never admittable"),
+            "{:?}",
+            c_big.error
+        );
+        let c_ok = h_ok
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .expect("small request must still be served");
+        assert!(c_ok.ok);
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed_requests, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn zero_length_decode_completes_at_prefill() {
+        // Pre-fix, a decode_len == 0 request still ran one decode step
+        // (appending a token nobody asked for) before the completion
+        // check fired. It must now finish at prefill time with zero
+        // decode steps on the books.
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let c = coord.submit(req(5, 64, 0)).wait();
+        assert!(c.ok, "{:?}", c.error);
+        assert_eq!(c.decode_len, 0);
+        assert!(c.ttft_ms <= c.total_ms + 1e-9);
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.decode_steps, 0, "no decode step may run for decode_len=0");
+        assert_eq!(stats.prefill_tokens, 64);
+    }
+
+    #[test]
+    fn context_longer_than_prefill_budget_still_served() {
+        // The token-budget twin of the KV livelock: a context longer
+        // than prefill_token_budget must be offered alone, not pinned
+        // at the queue head forever.
+        let policy = BatchPolicy { prefill_token_budget: 64, ..Default::default() };
+        let coord = Coordinator::spawn(small_config(), policy);
+        let c = coord
+            .submit(req(3, 256, 2))
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .expect("oversized context must be admitted alone");
+        assert!(c.ok, "{:?}", c.error);
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 1);
     }
 
     #[test]

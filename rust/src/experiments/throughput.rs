@@ -7,12 +7,12 @@
 //! set — reproduces the paper's crossover shape.
 
 use super::Scale;
-use crate::attention::{flash_decode, SelectionPolicy};
+use crate::attention::{flash_decode, flash_decode_into, SelectionPolicy};
 use crate::baselines::{SocketSelector, TokenSelector};
-use crate::kvcache::LayerCache;
+use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
 use crate::linalg::Matrix;
 use crate::lsh::LshParams;
-use crate::util::{fnum, pool, Pcg64, Table};
+use crate::util::{fnum, pool, Json, Pcg64, Table};
 use std::time::Instant;
 
 pub struct ThroughputPoint {
@@ -142,6 +142,192 @@ pub fn scoring_modes_table(points: &[ScoringModePoint]) -> Table {
     t
 }
 
+/// Gather-vs-paged hot-path comparison: the same precomputed SOCKET
+/// selections executed (a) through [`PagedKvCache::gather`] into fresh
+/// dense matrices — the pre-KvView serving path — and (b) in place over
+/// the paged view. Outputs are bit-identical (property-tested in
+/// `attention::flash`); only the memory path differs, so the tokens/s
+/// delta is pure gather overhead. Reported serially and fanned across
+/// the worker pool (the `decode_batch` shape).
+pub struct PagedVsGatherPoint {
+    pub n: usize,
+    pub batch: usize,
+    /// tokens/s, gather path, lanes stepped serially.
+    pub gather_serial_tps: f64,
+    /// tokens/s, paged-view path, lanes stepped serially.
+    pub paged_serial_tps: f64,
+    /// tokens/s, gather path, lanes fanned across the worker pool.
+    pub gather_pooled_tps: f64,
+    /// tokens/s, paged-view path, lanes fanned across the worker pool.
+    pub paged_pooled_tps: f64,
+}
+
+/// Measure both hot paths at one context length, `batch` lanes sharing
+/// one paged pool (each lane is a sequence of `n` cached tokens).
+pub fn measure_paged_vs_gather(
+    n: usize,
+    dim: usize,
+    batch: usize,
+    sparsity: f64,
+    steps: usize,
+    seed: u64,
+) -> PagedVsGatherPoint {
+    let mut rng = Pcg64::new(seed, n as u64);
+    let scale = 1.0 / (dim as f32).sqrt();
+    let mut cache = PagedKvCache::new(batch * PagedKvCache::pages_for(n), dim);
+    let policy = SelectionPolicy::from_sparsity(n, sparsity, 16, 16);
+    let mut tables: Vec<PageTable> = Vec::with_capacity(batch);
+    let mut queries: Vec<Vec<Vec<f32>>> = Vec::with_capacity(batch);
+    // Selections are precomputed outside the timed region so the timed
+    // paths differ only in how K/V reaches the kernel.
+    let mut selections: Vec<Vec<Vec<usize>>> = Vec::with_capacity(batch);
+    for lane in 0..batch {
+        let keys = Matrix::gaussian(n, dim, &mut rng);
+        let values = Matrix::gaussian(n, dim, &mut rng);
+        let mut table = PageTable::default();
+        let written = cache.append_many(&mut table, &keys.data, &values.data);
+        assert_eq!(written, n, "bench pool sized to hold every lane");
+        let mut layer = LayerCache::new(LshParams::paper_default(), dim, seed ^ (lane as u64) << 9);
+        layer.prefill(&keys, &values);
+        let qs: Vec<Vec<f32>> = (0..steps).map(|_| rng.normal_vec(dim)).collect();
+        let sels: Vec<Vec<usize>> =
+            qs.iter().map(|q| policy.merge(&layer.select(q, policy.k), n)).collect();
+        tables.push(table);
+        queries.push(qs);
+        selections.push(sels);
+    }
+    let tokens = (batch * steps) as f64;
+
+    // (a) gather path, serial over lanes.
+    let t0 = Instant::now();
+    for s in 0..steps {
+        for lane in 0..batch {
+            let (keys, values) = cache.gather(&tables[lane], &selections[lane][s]);
+            crate::util::black_box(flash_decode(&queries[lane][s], &keys, &values, None, scale));
+        }
+    }
+    let gather_serial_tps = tokens / t0.elapsed().as_secs_f64();
+
+    // (b) paged view, serial over lanes. The output vec is allocated
+    // per step, exactly like the production compute_step (outputs are
+    // returned by value there too) and like the pooled lane below —
+    // the lanes differ only in the K/V memory path.
+    let t1 = Instant::now();
+    for s in 0..steps {
+        for lane in 0..batch {
+            let view = cache.view(&tables[lane]);
+            let mut out = Vec::new();
+            flash_decode_into(&queries[lane][s], &view, Some(&selections[lane][s]), scale, &mut out);
+            crate::util::black_box(out);
+        }
+    }
+    let paged_serial_tps = tokens / t1.elapsed().as_secs_f64();
+
+    // (c) gather path, lanes fanned across the pool per step (the
+    // decode_batch shape: lanes in parallel, steps in order).
+    let t2 = Instant::now();
+    for s in 0..steps {
+        crate::util::black_box(pool::global().map(batch, |lane| {
+            let (keys, values) = cache.gather(&tables[lane], &selections[lane][s]);
+            flash_decode(&queries[lane][s], &keys, &values, None, scale)
+        }));
+    }
+    let gather_pooled_tps = tokens / t2.elapsed().as_secs_f64();
+
+    // (d) paged view, pooled.
+    let t3 = Instant::now();
+    for s in 0..steps {
+        crate::util::black_box(pool::global().map(batch, |lane| {
+            let view = cache.view(&tables[lane]);
+            let mut out = Vec::new();
+            flash_decode_into(&queries[lane][s], &view, Some(&selections[lane][s]), scale, &mut out);
+            out
+        }));
+    }
+    let paged_pooled_tps = tokens / t3.elapsed().as_secs_f64();
+
+    PagedVsGatherPoint {
+        n,
+        batch,
+        gather_serial_tps,
+        paged_serial_tps,
+        gather_pooled_tps,
+        paged_pooled_tps,
+    }
+}
+
+/// Sweep [`measure_paged_vs_gather`] across context lengths.
+pub fn run_paged_vs_gather(
+    scale: Scale,
+    context_lengths: &[usize],
+    batch: usize,
+    sparsity: f64,
+) -> Vec<PagedVsGatherPoint> {
+    context_lengths
+        .iter()
+        .map(|&n| {
+            measure_paged_vs_gather(
+                n,
+                scale.dim,
+                batch,
+                sparsity,
+                8.max(scale.instances * 2),
+                scale.seed,
+            )
+        })
+        .collect()
+}
+
+/// Render the gather-vs-paged comparison.
+pub fn paged_vs_gather_table(points: &[PagedVsGatherPoint]) -> Table {
+    let mut t = Table::new(
+        "Decode hot path: gather vs paged view (tokens/s)",
+        &[
+            "Context",
+            "Batch",
+            "Gather ser",
+            "Paged ser",
+            "Ser x",
+            "Gather pool",
+            "Paged pool",
+            "Pool x",
+        ],
+    );
+    for p in points {
+        t.row(vec![
+            p.n.to_string(),
+            p.batch.to_string(),
+            fnum(p.gather_serial_tps, 1),
+            fnum(p.paged_serial_tps, 1),
+            format!("{}x", fnum(p.paged_serial_tps / p.gather_serial_tps.max(1e-9), 2)),
+            fnum(p.gather_pooled_tps, 1),
+            fnum(p.paged_pooled_tps, 1),
+            format!("{}x", fnum(p.paged_pooled_tps / p.gather_pooled_tps.max(1e-9), 2)),
+        ]);
+    }
+    t
+}
+
+/// Serialize the gather-vs-paged rows for the `BENCH_*.json` perf
+/// artifact emitted by `bench_throughput` / `ci.sh`.
+pub fn paged_vs_gather_json(points: &[PagedVsGatherPoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .set("context", p.n)
+                .set("batch", p.batch)
+                .set("gather_serial_tps", p.gather_serial_tps)
+                .set("paged_serial_tps", p.paged_serial_tps)
+                .set("serial_speedup", p.paged_serial_tps / p.gather_serial_tps.max(1e-9))
+                .set("gather_pooled_tps", p.gather_pooled_tps)
+                .set("paged_pooled_tps", p.paged_pooled_tps)
+                .set("pooled_speedup", p.paged_pooled_tps / p.gather_pooled_tps.max(1e-9))
+        })
+        .collect();
+    Json::obj().set("bench", "throughput_paged_vs_gather").set("rows", Json::Arr(rows))
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -178,6 +364,25 @@ mod tests {
         let a = measure(1024, 64, 33.0, 8, 9);
         let b = measure(8192, 64, 33.0, 8, 9);
         assert!(b.dense_tps < a.dense_tps);
+    }
+
+    #[test]
+    fn paged_vs_gather_measures_all_modes() {
+        let pts = [measure_paged_vs_gather(1024, 32, 4, 8.0, 3, 11)];
+        let p = &pts[0];
+        assert_eq!(p.n, 1024);
+        assert_eq!(p.batch, 4);
+        for tps in
+            [p.gather_serial_tps, p.paged_serial_tps, p.gather_pooled_tps, p.paged_pooled_tps]
+        {
+            assert!(tps > 0.0 && tps.is_finite());
+        }
+        assert_eq!(paged_vs_gather_table(&pts).n_rows(), 1);
+        let doc = paged_vs_gather_json(&pts);
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        // The artifact round-trips through the writer/parser.
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_paged_vs_gather"));
     }
 
     #[test]

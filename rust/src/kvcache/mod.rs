@@ -5,5 +5,5 @@
 pub mod paged;
 pub mod store;
 
-pub use paged::{PageTable, PagedKvCache, PAGE_TOKENS};
+pub use paged::{KvView, PageTable, PagedKvCache, PAGE_TOKENS};
 pub use store::{HashStore, LayerCache, SequenceCache};

@@ -84,6 +84,21 @@ impl PagedKvCache {
 
     /// Bulk prefill append; returns tokens actually written.
     pub fn append_many(&mut self, table: &mut PageTable, keys: &[f32], values: &[f32]) -> usize {
+        assert_eq!(
+            keys.len() % self.dim,
+            0,
+            "keys length {} is not a multiple of dim {}",
+            keys.len(),
+            self.dim
+        );
+        assert_eq!(
+            values.len() % self.dim,
+            0,
+            "values length {} is not a multiple of dim {}",
+            values.len(),
+            self.dim
+        );
+        assert_eq!(keys.len(), values.len(), "keys/values length mismatch");
         let n = keys.len() / self.dim;
         for t in 0..n {
             if !self.append(table, &keys[t * self.dim..(t + 1) * self.dim], &values[t * self.dim..(t + 1) * self.dim]) {
@@ -113,8 +128,17 @@ impl PagedKvCache {
         table.n_tokens = 0;
     }
 
-    /// Gather selected tokens' K/V into dense matrices (what the sparse
-    /// attention kernel consumes).
+    /// Zero-copy read view of one sequence — the decode hot path's
+    /// input. Replaces [`PagedKvCache::gather`] on the serving path:
+    /// attention kernels address pages through the table in place
+    /// instead of copying selected rows into dense matrices.
+    pub fn view<'a>(&'a self, table: &'a PageTable) -> KvView<'a> {
+        KvView { k: &self.k, v: &self.v, table, dim: self.dim }
+    }
+
+    /// Gather selected tokens' K/V into dense matrices (the pre-KvView
+    /// hot-path layout; kept as the equivalence reference and for
+    /// callers that need an owned dense copy).
     pub fn gather(
         &self,
         table: &PageTable,
@@ -127,6 +151,132 @@ impl PagedKvCache {
             values.row_mut(i).copy_from_slice(self.value(table, t));
         }
         (keys, values)
+    }
+}
+
+/// Zero-copy view of one sequence's K/V in the paged pool: per-token
+/// addressing through the page table plus contiguous-run access for
+/// tiled kernels. Borrowed from [`PagedKvCache`] for the duration of a
+/// read-only compute phase; implements `attention::KvSource`, so
+/// `flash_decode_into` / `sparse_attention_into` consume pages in place
+/// — no gather, no per-step dense allocation.
+#[derive(Clone, Copy, Debug)]
+pub struct KvView<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    table: &'a PageTable,
+    dim: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Tokens visible through the view.
+    pub fn len(&self) -> usize {
+        self.table.n_tokens
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.table.n_tokens == 0
+    }
+
+    /// Per-token K/V width.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn offset(&self, t: usize) -> usize {
+        // `locate` hard-asserts t < n_tokens: a stale selection index
+        // would otherwise silently read another sequence's recycled
+        // slot in the last page's tail.
+        let (page, slot) = self.table.locate(t);
+        (page * PAGE_TOKENS + slot) * self.dim
+    }
+
+    /// Key vector of logical token `t`.
+    #[inline]
+    pub fn key(&self, t: usize) -> &'a [f32] {
+        let off = self.offset(t);
+        &self.k[off..off + self.dim]
+    }
+
+    /// Value vector of logical token `t`.
+    #[inline]
+    pub fn value(&self, t: usize) -> &'a [f32] {
+        let off = self.offset(t);
+        &self.v[off..off + self.dim]
+    }
+
+    /// Length (in tokens, capped at `max`) of the physically contiguous
+    /// run starting at `t`: to the end of `t`'s page, extended across
+    /// physically adjacent pages — the common layout right after a
+    /// prefill burst, where one sequence takes consecutive pages. The
+    /// cap bounds the adjacency scan to what the caller will consume
+    /// (tiled kernels pass their tile remainder), keeping the per-tile
+    /// cost O(max / PAGE_TOKENS) instead of O(total pages).
+    pub fn run_len(&self, t: usize, max: usize) -> usize {
+        debug_assert!(max >= 1);
+        let pages = &self.table.pages;
+        let cap = t.saturating_add(max).min(self.table.n_tokens);
+        let mut p = t / PAGE_TOKENS;
+        let mut end = ((p + 1) * PAGE_TOKENS).min(cap);
+        while end < cap && pages[p + 1] == pages[p] + 1 {
+            p += 1;
+            end = ((p + 1) * PAGE_TOKENS).min(cap);
+        }
+        end - t
+    }
+
+    /// Keys of the contiguous run starting at `t` (at most `max`
+    /// tokens), as a `(slice, len)` pair with `slice.len() == len * dim`.
+    pub fn key_run(&self, t: usize, max: usize) -> (&'a [f32], usize) {
+        let len = self.run_len(t, max);
+        let off = self.offset(t);
+        (&self.k[off..off + len * self.dim], len)
+    }
+
+    /// Values of the contiguous run starting at `t` (at most `max`
+    /// tokens).
+    pub fn value_run(&self, t: usize, max: usize) -> (&'a [f32], usize) {
+        let len = self.run_len(t, max);
+        let off = self.offset(t);
+        (&self.v[off..off + len * self.dim], len)
+    }
+}
+
+impl crate::attention::KvSource for KvView<'_> {
+    #[inline]
+    fn n_tokens(&self) -> usize {
+        self.table.n_tokens
+    }
+
+    #[inline]
+    fn key_dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn value_dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    fn key(&self, t: usize) -> &[f32] {
+        KvView::key(self, t)
+    }
+
+    #[inline]
+    fn value(&self, t: usize) -> &[f32] {
+        KvView::value(self, t)
+    }
+
+    #[inline]
+    fn key_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        KvView::key_run(self, t, max)
+    }
+
+    #[inline]
+    fn value_run(&self, t: usize, max: usize) -> (&[f32], usize) {
+        KvView::value_run(self, t, max)
     }
 }
 
@@ -198,6 +348,93 @@ mod tests {
         assert_eq!(keys.get(0, 0), 0.0);
         assert_eq!(keys.get(1, 0), 7.0);
         assert_eq!(keys.get(2, 0), 19.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple of dim")]
+    fn append_many_rejects_partial_key_rows() {
+        let mut cache = PagedKvCache::new(2, 4);
+        let mut table = PageTable::default();
+        let keys = [0.0; 6]; // 1.5 rows at dim 4
+        let values = [0.0; 6];
+        cache.append_many(&mut table, &keys, &values);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn append_many_rejects_key_value_mismatch() {
+        let mut cache = PagedKvCache::new(2, 4);
+        let mut table = PageTable::default();
+        let keys = [0.0; 8];
+        let values = [0.0; 4];
+        cache.append_many(&mut table, &keys, &values);
+    }
+
+    #[test]
+    fn view_addresses_tokens_across_page_boundaries() {
+        let dim = 8;
+        let mut cache = PagedKvCache::new(4, dim);
+        let mut table = PageTable::default();
+        let mut rng = Pcg64::seeded(7);
+        let mut expected = Vec::new();
+        for _ in 0..40 {
+            // 3 pages, last one partial
+            let k = rng.normal_vec(dim);
+            let v = rng.normal_vec(dim);
+            assert!(cache.append(&mut table, &k, &v));
+            expected.push((k, v));
+        }
+        let view = cache.view(&table);
+        assert_eq!(view.len(), 40);
+        assert_eq!(view.dim(), dim);
+        for (t, (k, v)) in expected.iter().enumerate() {
+            assert_eq!(view.key(t), k.as_slice(), "key {t}");
+            assert_eq!(view.value(t), v.as_slice(), "value {t}");
+        }
+        // Pages allocated back-to-back are physically adjacent, so the
+        // whole sequence is one run from token 0...
+        let (ks, len) = view.key_run(0, 64);
+        assert_eq!(len, 40);
+        assert_eq!(ks.len(), 40 * dim);
+        assert_eq!(&ks[17 * dim..18 * dim], expected[17].0.as_slice());
+        // ...and a mid-page start (page 1, slot 1) runs to the end.
+        let (vs, len17) = view.value_run(17, 64);
+        assert_eq!(len17, 23);
+        assert_eq!(&vs[0..dim], expected[17].1.as_slice());
+        // The caller's cap bounds both the run and the adjacency scan.
+        let (_, capped) = view.key_run(3, 10);
+        assert_eq!(capped, 10);
+    }
+
+    #[test]
+    fn view_runs_break_at_non_adjacent_pages() {
+        let dim = 2;
+        let mut cache = PagedKvCache::new(4, dim);
+        let mut a = PageTable::default();
+        let mut b = PageTable::default();
+        // a takes page 0, b takes page 1, a takes page 2: a's pages are
+        // physically non-adjacent, so its runs must break at the page
+        // boundary while addressing stays correct.
+        for t in 0..PAGE_TOKENS {
+            assert!(cache.append(&mut a, &[t as f32, 0.0], &[t as f32, 1.0]));
+        }
+        for _ in 0..PAGE_TOKENS {
+            assert!(cache.append(&mut b, &[9.0, 9.0], &[9.0, 9.0]));
+        }
+        for t in PAGE_TOKENS..PAGE_TOKENS + 5 {
+            assert!(cache.append(&mut a, &[t as f32, 0.0], &[t as f32, 1.0]));
+        }
+        let view = cache.view(&a);
+        assert_eq!(view.len(), PAGE_TOKENS + 5);
+        let (_, run0) = view.key_run(0, 100);
+        assert_eq!(run0, PAGE_TOKENS, "run must stop at the non-adjacent page");
+        let (ks, run1) = view.key_run(PAGE_TOKENS, 100);
+        assert_eq!(run1, 5);
+        assert_eq!(ks[0], PAGE_TOKENS as f32);
+        // Per-token addressing crosses the gap transparently.
+        assert_eq!(view.key(PAGE_TOKENS - 1)[0], (PAGE_TOKENS - 1) as f32);
+        assert_eq!(view.key(PAGE_TOKENS)[0], PAGE_TOKENS as f32);
+        assert_eq!(view.value(PAGE_TOKENS + 4), [(PAGE_TOKENS + 4) as f32, 1.0]);
     }
 
     #[test]

@@ -55,6 +55,14 @@ impl Server {
                     decode_len: dec,
                 });
                 let c = handle.wait();
+                if !c.ok {
+                    // Failed admission (e.g. request larger than the KV
+                    // pool) — surface the scheduler's reason.
+                    return Json::obj()
+                        .set("ok", false)
+                        .set("id", c.id)
+                        .set("error", c.error.unwrap_or_else(|| "request rejected".to_string()));
+                }
                 self.served.fetch_add(1, Ordering::Relaxed);
                 Json::obj()
                     .set("ok", true)
@@ -196,6 +204,27 @@ mod tests {
         }
         let resp = s.handle_line("not json at all");
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn oversized_generate_returns_error_not_hang() {
+        let config = EngineConfig {
+            model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
+            lsh: LshParams { p: 6, l: 8, tau: 0.5 },
+            mode: AttentionMode::Socket { sparsity: 8.0 },
+            capacity_pages: 8, // 128 cacheable tokens
+            sink: 4,
+            local: 4,
+        };
+        let s = Server::new(config, BatchPolicy::default());
+        let resp =
+            s.handle(&Json::parse(r#"{"op":"generate","context_len":4096,"decode_len":2}"#).unwrap());
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("never admittable"));
+        // The pool is untouched: a small request still succeeds.
+        let small =
+            s.handle(&Json::parse(r#"{"op":"generate","context_len":48,"decode_len":1}"#).unwrap());
+        assert_eq!(small.get("ok").unwrap().as_bool(), Some(true), "{small}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! substrate the scoring hot paths need (chunked fills over slices and
 //! coarse index maps), shared process-wide through [`global`].
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -220,13 +220,40 @@ impl Drop for WorkerPool {
 fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
     IN_POOL_WORKER.with(|flag| flag.set(true));
     loop {
-        // Lock, receive one message, release (the guard is a temporary).
+        // The receiver mutex is held across the blocking recv (the
+        // temporary guard lives to the end of the statement): idle
+        // workers queue on the lock and handoffs serialize through it —
+        // acceptable for the coarse jobs this pool runs.
         let msg = rx.lock().unwrap().recv();
         match msg {
             Ok(Msg::Run(job)) => job(),
             Ok(Msg::Exit) | Err(_) => return,
         }
     }
+}
+
+/// Reusable per-worker decode scratch: the buffer the decode hot path
+/// fills once per (sequence, head, step) and would otherwise reallocate
+/// — the merged selection index set, the largest per-step temporary.
+/// Every pool worker (and the caller thread) owns one via thread-local
+/// storage, so `decode_batch` fan-out reuses warm buffers instead of
+/// hitting the allocator per step.
+#[derive(Debug, Default)]
+pub struct DecodeScratch {
+    /// Merged selection indices (top-k ∪ sink ∪ local).
+    pub indices: Vec<usize>,
+}
+
+thread_local! {
+    static DECODE_SCRATCH: RefCell<DecodeScratch> = RefCell::new(DecodeScratch::default());
+}
+
+/// Run `f` with this thread's [`DecodeScratch`]. Buffer contents are
+/// unspecified on entry (callers clear what they use); capacity persists
+/// across calls. Not reentrant: `f` must not call `with_decode_scratch`
+/// itself (the `RefCell` would panic).
+pub fn with_decode_scratch<R>(f: impl FnOnce(&mut DecodeScratch) -> R) -> R {
+    DECODE_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
@@ -318,6 +345,29 @@ mod tests {
         assert_eq!(pool.threads(), 1);
         let got = pool.map(16, |i| i + 1);
         assert_eq!(got[15], 16);
+    }
+
+    #[test]
+    fn decode_scratch_persists_capacity_per_thread() {
+        let cap = with_decode_scratch(|s| {
+            s.indices.clear();
+            s.indices.extend(0..1000);
+            s.indices.capacity()
+        });
+        with_decode_scratch(|s| {
+            assert!(s.indices.capacity() >= cap, "scratch capacity must persist");
+            s.indices.clear();
+        });
+        // Workers each get their own scratch — concurrent use is safe.
+        let pool = WorkerPool::new(4);
+        let sums = pool.map(16, |i| {
+            with_decode_scratch(|s| {
+                s.indices.clear();
+                s.indices.extend(0..=i);
+                s.indices.iter().sum::<usize>()
+            })
+        });
+        assert_eq!(sums[3], 6);
     }
 
     #[test]

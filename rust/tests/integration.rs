@@ -78,6 +78,7 @@ fn coordinator_serves_trace() {
     let mut total_tokens = 0usize;
     for h in handles {
         let c = h.wait();
+        assert!(c.ok, "{:?}", c.error);
         assert!(c.ttft_ms <= c.total_ms + 1e-6);
         total_tokens += c.decode_len;
     }
