@@ -1,9 +1,27 @@
 #!/usr/bin/env bash
-# Tier-1 gate in one command: release build, offline tests (default and
-# pjrt feature), bench compile + smoke perf artifact, and clippy with
-# warnings denied. Run from anywhere.
+# Tier-1 gate in one command: formatting + lints first (fail fast,
+# before the expensive build), then release build, offline tests
+# (default and pjrt feature), bench compile + smoke perf artifact.
+# Run from anywhere.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+# Lint gates run ahead of the build so style/lint fallout fails in
+# seconds, not after a full compile. Both skip gracefully when the
+# component is not installed (offline containers vary).
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+else
+    echo "==> rustfmt not installed; skipping format check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "==> cargo clippy --all-targets -- -D warnings"
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "==> clippy not installed; skipping lint step"
+fi
 
 echo "==> cargo build --release"
 cargo build --release
@@ -17,15 +35,8 @@ cargo test -q --features pjrt
 echo "==> cargo bench --no-run"
 cargo bench --no-run
 
-echo "==> bench_throughput smoke (gather-vs-paged artifact)"
+echo "==> bench_throughput smoke (gather-vs-paged + per-method artifact)"
 cargo bench --bench bench_throughput -- --smoke --json-out "$PWD/BENCH_throughput.json"
 echo "    artifact: $PWD/BENCH_throughput.json"
-
-if cargo clippy --version >/dev/null 2>&1; then
-    echo "==> cargo clippy --all-targets -- -D warnings"
-    cargo clippy --all-targets -- -D warnings
-else
-    echo "==> clippy not installed; skipping lint step"
-fi
 
 echo "OK: tier-1 green"

@@ -1,11 +1,13 @@
 //! Figures 3b/3c — decode throughput vs context length, SOCKET @33x vs
 //! dense FlashAttention-style decode, on the Rust substrate — plus the
-//! serial-vs-pooled scoring comparison for the shared worker pool and
-//! the gather-vs-paged KV hot-path comparison (KvView acceptance
-//! measurement). Writes the gather-vs-paged table to a `BENCH_*.json`
-//! artifact for the perf trajectory (`--json-out <path>`, empty string
-//! to skip). `--smoke` shrinks every sweep so ci.sh can emit the
-//! artifact in seconds.
+//! serial-vs-pooled scoring comparison for the shared worker pool, the
+//! gather-vs-paged KV hot-path comparison (KvView acceptance
+//! measurement), and the per-method serving lane (decode tokens/s for
+//! every `selector::registry` method over the paged pool at the paper's
+//! sparsity budget). Writes the gather-vs-paged and per-method tables
+//! to a `BENCH_*.json` artifact for the perf trajectory
+//! (`--json-out <path>`, empty string to skip). `--smoke` shrinks every
+//! sweep so ci.sh can emit the artifact in seconds.
 use socket_attn::experiments::{throughput, Scale};
 use socket_attn::util::{Args, Json};
 
@@ -38,6 +40,15 @@ fn main() {
     let pg = throughput::run_paged_vs_gather(scale, pool_ctxs, pg_batch, sparsity);
     throughput::paged_vs_gather_table(&pg).print();
 
+    // Per-method serving lane: every registered selector decoding over
+    // the paged pool (index build at prefill + per-step select/attend/
+    // append). PQCache's k-means build dominates the large-context
+    // rows, which is exactly the TTFT contrast Fig. 3a reports.
+    let lane_ctxs: &[usize] = if smoke { &[2 * 1024] } else { &[4 * 1024, 16 * 1024] };
+    let lane_steps = if smoke { 4 } else { 16 };
+    let lane = throughput::run_method_lane(scale, lane_ctxs, sparsity, lane_steps);
+    throughput::method_lane_table(&lane, sparsity).print();
+
     let artifact = args.get_or("json-out", "BENCH_throughput.json");
     if !artifact.is_empty() {
         let doc = Json::obj()
@@ -45,7 +56,8 @@ fn main() {
             .set("smoke", smoke)
             .set("dim", scale.dim)
             .set("sparsity", sparsity)
-            .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg));
+            .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg))
+            .set("method_lane", throughput::method_lane_json(&lane));
         match std::fs::write(&artifact, doc.dumps() + "\n") {
             Ok(()) => println!("wrote {artifact}"),
             Err(e) => eprintln!("could not write {artifact}: {e}"),

@@ -15,15 +15,21 @@ fn main() {
     let args = Args::from_env();
     let n_requests = args.usize_or("requests", 48);
     let sparsity = args.f64_or("sparsity", 16.0);
+    // Any registered selector is servable: --method quest|magicpig|...
+    let method = args.get_or("method", "socket");
     let config = EngineConfig {
         model: ModelConfig::tiny(),
         lsh: LshParams { p: 8, l: 24, tau: 0.5 },
-        mode: if args.flag("dense") { AttentionMode::Dense } else { AttentionMode::Socket { sparsity } },
+        mode: if args.flag("dense") {
+            AttentionMode::Dense
+        } else {
+            AttentionMode::sparse(method.as_str(), sparsity)
+        },
         capacity_pages: 64 * 1024,
         sink: 16,
         local: 16,
     };
-    let mode = if args.flag("dense") { "dense".to_string() } else { format!("SOCKET {sparsity}x") };
+    let mode = if args.flag("dense") { "dense".to_string() } else { format!("{method} {sparsity}x") };
     println!("serving {n_requests} requests ({mode} decode)...");
     let coord = Coordinator::spawn(config, BatchPolicy::default());
     let mut gen = TraceGenerator::new(

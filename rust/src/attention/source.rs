@@ -7,10 +7,13 @@
 use crate::linalg::Matrix;
 
 /// Read-only token-addressed K/V storage consumed by the attention
-/// kernels. `key`/`value` give per-token vectors; `key_run`/`value_run`
-/// expose the longest *contiguous* slice starting at a token so tiled
-/// kernels can stream memory without a page-table lookup per token.
-pub trait KvSource {
+/// kernels and the selector indexers. `key`/`value` give per-token
+/// vectors; `key_run`/`value_run` expose the longest *contiguous* slice
+/// starting at a token so tiled kernels can stream memory without a
+/// page-table lookup per token. Sources are `Sync` so prefill index
+/// construction (`selector::hash_kv_source` and friends) can fan reads
+/// across the shared worker pool.
+pub trait KvSource: Sync {
     /// Number of cached tokens.
     fn n_tokens(&self) -> usize;
 

@@ -1,27 +1,24 @@
 //! The per-sequence decode engine: owns the paged KV cache and the
-//! SOCKET hash side-cars, executes prefill and single-token decode
-//! steps. One engine serves many sequences (state is per-sequence).
+//! per-sequence selector indexes, executes prefill and single-token
+//! decode steps. One engine serves many sequences (state is
+//! per-sequence), and *any* registered selection method is servable —
+//! per request — over the same zero-copy paged hot path.
 
 use crate::attention::{flash_decode_into, SelectionPolicy};
-use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
+use crate::kvcache::{PageTable, PagedKvCache};
 use crate::lsh::LshParams;
 use crate::model::{ModelConfig, SyntheticModel};
+use crate::selector::{self, Selector, SelectorConfig, SelectorError};
 use crate::util::pool::with_decode_scratch;
 use std::collections::HashMap;
 
-/// How decode attention selects tokens.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum AttentionMode {
-    /// Dense attention over the whole cache (FlashAttention baseline).
-    Dense,
-    /// SOCKET sparse attention at the given sparsity factor.
-    Socket { sparsity: f64 },
-}
+pub use crate::selector::AttentionMode;
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub model: ModelConfig,
     pub lsh: LshParams,
+    /// Default attention mode; requests may override per sequence.
     pub mode: AttentionMode,
     /// Paged-KV pool capacity (pages shared across sequences).
     pub capacity_pages: usize,
@@ -34,7 +31,7 @@ impl Default for EngineConfig {
         EngineConfig {
             model: ModelConfig::tiny(),
             lsh: LshParams::paper_default(),
-            mode: AttentionMode::Socket { sparsity: 33.0 },
+            mode: AttentionMode::socket(33.0),
             capacity_pages: 16 * 1024,
             sink: 64,
             local: 64,
@@ -42,12 +39,17 @@ impl Default for EngineConfig {
     }
 }
 
-/// Per-sequence state: one KV page table + SOCKET layer cache per
-/// kv-head stream (single representative layer — the decode cost of all
-/// layers scales linearly and is reported as such).
+/// Per-sequence state: one KV page table per kv-head stream, plus —
+/// for sparse modes — one selector index per stream, built at prefill
+/// from the paged view and *extended* per decoded token (single
+/// representative layer — the decode cost of all layers scales linearly
+/// and is reported as such).
 struct SequenceState {
     tables: Vec<PageTable>,
-    socket: Vec<LayerCache>,
+    /// One selector per kv-head stream; empty in dense mode.
+    selectors: Vec<Box<dyn Selector>>,
+    /// The resolved mode this sequence attends under.
+    mode: AttentionMode,
     model: SyntheticModel,
     decoded: usize,
 }
@@ -59,7 +61,7 @@ struct StepResult {
     appends: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
-/// The decode engine: paged KV pool + per-sequence SOCKET caches.
+/// The decode engine: paged KV pool + per-sequence selector indexes.
 pub struct DecodeEngine {
     pub config: EngineConfig,
     kv: PagedKvCache,
@@ -101,35 +103,77 @@ impl DecodeEngine {
             <= self.kv.total_pages()
     }
 
-    /// Admit a sequence: prefill `context_len` tokens (build KV pages +
-    /// hash signatures, Alg. 1) and commit page headroom for up to
-    /// `max_new_tokens` decode appends. Returns false if the pool
-    /// cannot guarantee the commitment (backpressure — caller requeues).
+    /// Check that a request's attention mode (or the engine default
+    /// when `None`) names a registered selector. The scheduler fails
+    /// such requests up front — like inadmissible shapes, they could
+    /// never be served.
+    pub fn validate_mode(&self, mode: Option<&AttentionMode>) -> Result<(), SelectorError> {
+        match mode.unwrap_or(&self.config.mode) {
+            AttentionMode::Dense => Ok(()),
+            AttentionMode::Sparse { method, .. } => selector::lookup(method).map(|_| ()),
+        }
+    }
+
+    /// Admit a sequence under the engine's default mode. See
+    /// [`DecodeEngine::prefill_as`].
     pub fn prefill(&mut self, seq_id: u64, context_len: usize, max_new_tokens: usize) -> bool {
+        self.prefill_as(seq_id, context_len, max_new_tokens, None)
+            .expect("engine default mode must name a registered selector")
+    }
+
+    /// Admit a sequence: prefill `context_len` tokens (KV pages + the
+    /// selector index, built in place over the paged view) and commit
+    /// page headroom for up to `max_new_tokens` decode appends. `mode`
+    /// overrides the engine default for this sequence — any registered
+    /// method is servable per request. `Ok(false)` means the pool
+    /// cannot guarantee the commitment (backpressure — caller
+    /// requeues); `Err` means the mode names no registered selector
+    /// (never admittable; nothing was committed).
+    pub fn prefill_as(
+        &mut self,
+        seq_id: u64,
+        context_len: usize,
+        max_new_tokens: usize,
+        mode: Option<&AttentionMode>,
+    ) -> Result<bool, SelectorError> {
+        let mode = mode.unwrap_or(&self.config.mode).clone();
+        // Resolve the method before committing any pages.
+        let spec = match &mode {
+            AttentionMode::Dense => None,
+            AttentionMode::Sparse { method, .. } => Some(selector::lookup(method)?),
+        };
         let heads = self.config.model.n_kv_heads;
         let needed = heads * PagedKvCache::pages_for(context_len + max_new_tokens);
         if self.kv.total_pages() - self.committed_pages < needed {
-            return false;
+            return Ok(false);
         }
         self.committed_pages += needed;
         self.commitments.insert(seq_id, needed);
         let model = SyntheticModel::new(self.config.model, seq_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
         let mut tables = Vec::with_capacity(heads);
-        let mut socket = Vec::with_capacity(heads);
+        let mut selectors = Vec::with_capacity(heads);
         for h in 0..heads {
             let mut table = PageTable::default();
             let (keys, values) = model.kv_matrix(h, context_len);
             let written = self.kv.append_many(&mut table, &keys.data, &values.data);
             debug_assert_eq!(written, context_len);
-            let mut cache = LayerCache::new(self.config.lsh, self.config.model.head_dim, seq_id ^ (h as u64) << 11);
-            if matches!(self.config.mode, AttentionMode::Socket { .. }) {
-                cache.prefill(&keys, &values);
+            if let Some(spec) = spec {
+                // Paged-native prefill (Alg. 1 for SOCKET; page
+                // min/max, PQ codes, channel stats... for the rest):
+                // the index is built straight off the pool view — the
+                // same bytes the decode kernels read — and extended per
+                // decoded token thereafter, never rebuilt.
+                let cfg = SelectorConfig::new(self.config.model.head_dim, seq_id ^ (h as u64) << 11)
+                    .with_lsh(self.config.lsh);
+                let mut s = (spec.build)(&cfg);
+                s.build(&self.kv.view(&table));
+                selectors.push(s);
             }
             tables.push(table);
-            socket.push(cache);
         }
-        self.sequences.insert(seq_id, SequenceState { tables, socket, model, decoded: 0 });
-        true
+        self.sequences
+            .insert(seq_id, SequenceState { tables, selectors, mode, model, decoded: 0 });
+        Ok(true)
     }
 
     /// One decode step for a sequence; returns the attention outputs
@@ -142,8 +186,8 @@ impl DecodeEngine {
     }
 
     /// One decode step for each sequence in `seq_ids`, with the
-    /// compute phase (soft-hash, score, top-k, attention — all reads)
-    /// fanned out across the shared worker pool, then the KV/hash
+    /// compute phase (selector scoring, top-k, attention — all reads)
+    /// fanned out across the shared worker pool, then the KV/index
     /// appends committed serially in `seq_ids` order. Outputs are
     /// identical to calling [`DecodeEngine::decode_step`] per sequence.
     pub fn decode_batch(&mut self, seq_ids: &[u64]) -> Vec<Vec<Vec<f32>>> {
@@ -182,24 +226,26 @@ impl DecodeEngine {
             let q = state.model.query_at(h, step);
             // Attend in place over the paged cache: the view addresses
             // pages through the page table, so no K/V row is copied and
-            // no dense matrix is allocated per step. The merged
-            // selection lives in per-worker scratch.
+            // no dense matrix is allocated per step. Selector scoring
+            // and the merged selection live in per-worker scratch.
             let view = self.kv.view(&state.tables[h]);
             let mut out = Vec::new();
-            match self.config.mode {
+            match &state.mode {
                 AttentionMode::Dense => {
                     flash_decode_into(&q, &view, None, scale, &mut out);
                 }
-                AttentionMode::Socket { sparsity } => {
+                AttentionMode::Sparse { sparsity, .. } => {
                     let policy = SelectionPolicy::from_sparsity(
                         n,
-                        sparsity,
+                        *sparsity,
                         self.config.sink,
                         self.config.local,
                     );
-                    let top = state.socket[h].select(&q, policy.k);
                     with_decode_scratch(|scratch| {
-                        policy.merge_into(&top, n, &mut scratch.indices);
+                        state.selectors[h]
+                            .select_into(&q, policy.k, &mut scratch.selection)
+                            .expect("selector index built at prefill");
+                        policy.merge_into(&scratch.selection.indices, n, &mut scratch.indices);
                         flash_decode_into(&q, &view, Some(&scratch.indices), scale, &mut out);
                     });
                 }
@@ -211,14 +257,14 @@ impl DecodeEngine {
     }
 
     /// Mutable phase: commit the new token's K/V to the paged cache and
-    /// the hash side-cars, advance the decode counter.
+    /// extend the selector indexes, advance the decode counter.
     fn apply_step(&mut self, seq_id: u64, result: StepResult) -> Vec<Vec<f32>> {
         let state = self.sequences.get_mut(&seq_id).expect("decode before prefill");
         for (h, (k_new, v_new)) in result.appends.iter().enumerate() {
             let ok = self.kv.append(&mut state.tables[h], k_new, v_new);
             assert!(ok, "KV pool exhausted mid-decode");
-            if matches!(self.config.mode, AttentionMode::Socket { .. }) {
-                state.socket[h].append_token(k_new, v_new);
+            if let Some(s) = state.selectors.get_mut(h) {
+                s.append(k_new, v_new).expect("selector index built at prefill");
             }
         }
         state.decoded += 1;
@@ -259,7 +305,7 @@ mod tests {
 
     #[test]
     fn prefill_decode_release_roundtrip() {
-        let mut e = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
         assert!(e.prefill(1, 300, 8));
         assert_eq!(e.n_sequences(), 1);
         let out = e.decode_step(1);
@@ -296,7 +342,7 @@ mod tests {
     fn socket_output_close_to_dense() {
         // The whole point: sparse decode ≈ dense decode outputs.
         let mut dense = DecodeEngine::new(cfg(AttentionMode::Dense));
-        let mut sparse = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 4.0 }));
+        let mut sparse = DecodeEngine::new(cfg(AttentionMode::socket(4.0)));
         assert!(dense.prefill(7, 400, 4));
         assert!(sparse.prefill(7, 400, 4));
         let yd = dense.decode_step(7);
@@ -308,15 +354,81 @@ mod tests {
     }
 
     #[test]
+    fn every_registered_method_is_servable() {
+        // The redesign's acceptance bar: any registry method decodes
+        // over the paged pool — prefill builds its index from the view,
+        // decode steps select + attend + extend the index.
+        for spec in crate::selector::registry() {
+            let mut e = DecodeEngine::new(cfg(AttentionMode::sparse(spec.name, 4.0)));
+            assert!(e.prefill(1, 200, 4), "{} prefill", spec.name);
+            for step in 0..2 {
+                let out = e.decode_step(1);
+                assert_eq!(out.len(), 2, "{} step {step}", spec.name);
+                assert_eq!(out[0].len(), 32, "{}", spec.name);
+                assert!(
+                    out.iter().all(|y| y.iter().all(|x| x.is_finite())),
+                    "{} non-finite output",
+                    spec.name
+                );
+                assert!(
+                    out[0].iter().any(|&x| x != 0.0),
+                    "{} all-zero output",
+                    spec.name
+                );
+            }
+            assert_eq!(e.decoded(1), 2, "{}", spec.name);
+            e.release(1);
+        }
+    }
+
+    #[test]
+    fn per_request_mode_overrides_engine_default() {
+        // One engine, three sequences, three different modes — the
+        // per-request configuration surface the server exposes.
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        assert!(e.prefill_as(1, 100, 4, None).unwrap());
+        assert!(e.prefill_as(2, 100, 4, Some(&AttentionMode::Dense)).unwrap());
+        assert!(e.prefill_as(3, 100, 4, Some(&AttentionMode::sparse("quest", 8.0))).unwrap());
+        for seq in [1, 2, 3] {
+            let out = e.decode_step(seq);
+            assert_eq!(out.len(), 2);
+            assert!(out[0].iter().any(|&x| x != 0.0), "seq {seq}");
+        }
+        // Identical sequence under the default mode on a fresh engine
+        // matches seq 1 (override of None == engine default).
+        let mut e2 = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        assert!(e2.prefill(1, 100, 4));
+        assert_eq!(e2.decode_step(1), {
+            let mut e3 = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+            assert!(e3.prefill(1, 100, 4));
+            e3.decode_step(1)
+        });
+    }
+
+    #[test]
+    fn unknown_method_is_an_error_before_any_commitment() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        let free = e.free_pages();
+        let bad = AttentionMode::sparse("definitely-not-a-method", 8.0);
+        assert!(e.validate_mode(Some(&bad)).is_err());
+        let err = e.prefill_as(1, 100, 4, Some(&bad)).unwrap_err();
+        assert!(err.to_string().contains("unknown method"), "{err}");
+        assert_eq!(e.free_pages(), free, "no pages may be committed");
+        assert_eq!(e.n_sequences(), 0);
+        // Engine default is valid.
+        assert!(e.validate_mode(None).is_ok());
+    }
+
+    #[test]
     fn multi_sequence_isolation() {
-        let mut e = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
         assert!(e.prefill(1, 100, 8));
         assert!(e.prefill(2, 150, 8));
         let o1a = e.decode_step(1);
         let _ = e.decode_step(2);
         // Re-running seq 1's step-0 computation via a fresh engine gives
         // identical output (determinism + isolation).
-        let mut e2 = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        let mut e2 = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
         assert!(e2.prefill(1, 100, 8));
         let o1b = e2.decode_step(1);
         assert_eq!(o1a, o1b);
@@ -333,13 +445,16 @@ mod tests {
     fn decode_batch_matches_serial_steps() {
         // The pooled batch path must be step-for-step identical to
         // serial decode_step calls (same selection, same outputs, same
-        // cache state afterwards).
-        let mut serial = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
-        let mut batched = DecodeEngine::new(cfg(AttentionMode::Socket { sparsity: 8.0 }));
+        // cache state afterwards) — including with mixed per-sequence
+        // methods in one batch.
+        let mut serial = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        let mut batched = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
         let seqs = [1u64, 2, 3];
-        for &(seq, ctx) in &[(1u64, 120usize), (2, 200), (3, 64)] {
-            assert!(serial.prefill(seq, ctx, 4));
-            assert!(batched.prefill(seq, ctx, 4));
+        let modes: [Option<AttentionMode>; 3] =
+            [None, Some(AttentionMode::sparse("quest", 8.0)), Some(AttentionMode::Dense)];
+        for (&(seq, ctx), mode) in [(1u64, 120usize), (2, 200), (3, 64)].iter().zip(&modes) {
+            assert!(serial.prefill_as(seq, ctx, 4, mode.as_ref()).unwrap());
+            assert!(batched.prefill_as(seq, ctx, 4, mode.as_ref()).unwrap());
         }
         for _ in 0..3 {
             let want: Vec<Vec<Vec<f32>>> = seqs.iter().map(|&s| serial.decode_step(s)).collect();

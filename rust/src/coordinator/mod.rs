@@ -7,10 +7,13 @@
 //!
 //! ```text
 //! submit() ─→ [router queue] ─→ scheduler loop (worker thread)
-//!                 │   admit: prefill (hash K/V, Alg. 1; paged KV store)
+//!                 │   admit: prefill (paged KV store + the request's
+//!                 │          selector index, built over the pool view —
+//!                 │          any `selector::registry` method, per request)
 //!                 │   step:  continuous batch of decode-ready seqs
-//!                 │          soft-hash q (Alg. 2) → score+top-k (Alg. 3/4)
+//!                 │          selector.select_into (per-worker scratch)
 //!                 │          → flash-decode over selected ∪ sink ∪ local
+//!                 │          → extend KV pages + selector index
 //!                 └─→ completion channel → RequestHandle::wait()
 //! ```
 

@@ -117,11 +117,32 @@ impl Drop for Coordinator {
     }
 }
 
+/// Fail a request with an error completion (the one shape both the
+/// accept-time and prefill-time failure paths emit).
+fn send_failure(
+    done_tx: &Sender<Completion>,
+    req: &Request,
+    error: String,
+    stats: &mut SchedulerStats,
+) {
+    stats.failed_requests += 1;
+    let _ = done_tx.send(Completion {
+        id: req.id,
+        context_len: req.context_len,
+        decode_len: req.decode_len,
+        ttft_ms: 0.0,
+        total_ms: 0.0,
+        ok: false,
+        error: Some(error),
+    });
+}
+
 /// Accept a submission into the waiting queue, or fail it immediately
-/// when its full KV commitment could never fit the pool. Pre-fix, such
-/// a request was requeued by every iteration forever: no running
-/// sequence can release enough pages to make it fit, so the scheduler
-/// livelocked in a hot spin.
+/// when it could never be served: a KV commitment that cannot fit the
+/// pool (pre-fix, such a request was requeued by every iteration
+/// forever — no running sequence can release enough pages to make it
+/// fit, so the scheduler livelocked in a hot spin), or an attention
+/// mode naming no registered selector.
 fn accept(
     engine: &DecodeEngine,
     batcher: &mut Batcher,
@@ -130,20 +151,16 @@ fn accept(
     req: Request,
     done_tx: Sender<Completion>,
 ) {
+    if let Err(e) = engine.validate_mode(req.mode.as_ref()) {
+        send_failure(&done_tx, &req, e.to_string(), stats);
+        return;
+    }
     if !engine.admissible(req.context_len, req.decode_len) {
-        stats.failed_requests += 1;
-        let _ = done_tx.send(Completion {
-            id: req.id,
-            context_len: req.context_len,
-            decode_len: req.decode_len,
-            ttft_ms: 0.0,
-            total_ms: 0.0,
-            ok: false,
-            error: Some(format!(
-                "never admittable: {} context + {} decode tokens exceed the {}-page KV pool",
-                req.context_len, req.decode_len, engine.config.capacity_pages
-            )),
-        });
+        let error = format!(
+            "never admittable: {} context + {} decode tokens exceed the {}-page KV pool",
+            req.context_len, req.decode_len, engine.config.capacity_pages
+        );
+        send_failure(&done_tx, &req, error, stats);
         return;
     }
     batcher.enqueue(req.id, req.context_len);
@@ -198,8 +215,26 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
         let mut progressed = !batch.decodes.is_empty();
         // Prefills (admission may fail under KV pressure → requeue).
         for &(seq, ctx) in batch.prefills.iter() {
-            let decode_len = inflight.get(&seq).map(|f| f.req.decode_len).unwrap_or(0);
-            if engine.prefill(seq, ctx, decode_len) {
+            let (decode_len, mode) = inflight
+                .get(&seq)
+                .map(|f| (f.req.decode_len, f.req.mode.clone()))
+                .unwrap_or((0, None));
+            let admitted = match engine.prefill_as(seq, ctx, decode_len, mode.as_ref()) {
+                Ok(admitted) => admitted,
+                Err(e) => {
+                    // Defensive: accept() validates modes up front, so
+                    // this only fires on direct-API misuse. Fail the
+                    // request instead of spinning on it.
+                    if let Some(fl) = inflight.remove(&seq) {
+                        send_failure(&fl.done_tx, &fl.req, e.to_string(), &mut stats);
+                    } else {
+                        stats.failed_requests += 1;
+                    }
+                    progressed = true;
+                    continue;
+                }
+            };
+            if admitted {
                 stats.prefill_tokens += ctx as u64;
                 progressed = true;
                 if decode_len == 0 {
@@ -285,7 +320,7 @@ mod tests {
         EngineConfig {
             model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
             lsh: LshParams { p: 6, l: 8, tau: 0.5 },
-            mode: AttentionMode::Socket { sparsity: 8.0 },
+            mode: AttentionMode::socket(8.0),
             capacity_pages: 2048,
             sink: 4,
             local: 4,
@@ -293,7 +328,11 @@ mod tests {
     }
 
     fn req(id: u64, ctx: usize, dec: usize) -> Request {
-        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec }
+        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None }
+    }
+
+    fn req_as(id: u64, ctx: usize, dec: usize, mode: AttentionMode) -> Request {
+        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: Some(mode) }
     }
 
     #[test]
@@ -367,6 +406,52 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.failed_requests, 1);
         assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn unknown_method_fails_fast_with_error_completion() {
+        // An unregistered method can never be served: like an oversized
+        // request it must complete with an error, not hang or panic a
+        // worker, and later requests must be unaffected.
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let h_bad = coord.submit(req_as(1, 64, 2, AttentionMode::sparse("nope", 8.0)));
+        let h_ok = coord.submit(req(2, 64, 2));
+        let c_bad = h_bad
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .expect("unknown method must fail fast");
+        assert!(!c_bad.ok);
+        assert!(
+            c_bad.error.as_deref().unwrap_or("").contains("unknown method"),
+            "{:?}",
+            c_bad.error
+        );
+        let c_ok = h_ok.wait_timeout(std::time::Duration::from_secs(30)).expect("served");
+        assert!(c_ok.ok, "{:?}", c_ok.error);
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed_requests, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn per_request_methods_served_through_one_scheduler() {
+        // Quest and MagicPIG end-to-end through the continuous batcher
+        // — every baseline is servable, per request, on one engine.
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let handles = vec![
+            coord.submit(req_as(1, 96, 3, AttentionMode::sparse("quest", 8.0))),
+            coord.submit(req_as(2, 96, 3, AttentionMode::sparse("magicpig", 8.0))),
+            coord.submit(req_as(3, 96, 3, AttentionMode::Dense)),
+            coord.submit(req(4, 96, 3)),
+        ];
+        for h in handles {
+            let c = h.wait();
+            assert!(c.ok, "{:?}", c.error);
+            assert_eq!(c.decode_len, 3);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.decode_steps, 12);
+        assert_eq!(stats.failed_requests, 0);
     }
 
     #[test]

@@ -7,8 +7,8 @@
 
 use super::Scale;
 use crate::attention::SelectionPolicy;
-use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
 use crate::lsh::LshParams;
+use crate::selector::{HardLshSelector, Selector, SocketSelector};
 use crate::util::{fnum, Table};
 use crate::workload::ruler::{evaluate_selector, RulerTask};
 
@@ -21,11 +21,11 @@ pub struct AblationRow {
     pub avg: f64,
 }
 
-fn eval(selector: &mut dyn TokenSelector, scale: Scale) -> AblationRow {
+fn eval(selector: &mut dyn Selector, scale: Scale) -> AblationRow {
     eval_at(selector, scale, 20.0)
 }
 
-fn eval_at(selector: &mut dyn TokenSelector, scale: Scale, sparsity: f64) -> AblationRow {
+fn eval_at(selector: &mut dyn Selector, scale: Scale, sparsity: f64) -> AblationRow {
     let policy = SelectionPolicy::from_sparsity(scale.n, sparsity, 0, 0);
     let scores: Vec<f64> = ABLATION_TASKS
         .iter()
@@ -145,8 +145,8 @@ mod tests {
             }
             let ones = crate::linalg::Matrix::from_vec(n, 1, vec![1.0; n]);
             let mut s = SocketSelector::new(params, dim, seed ^ rep);
-            s.build(&keys, &ones);
-            let got = s.select(&q, k);
+            s.build_dense(&keys, &ones);
+            let got = s.select(&q, k).expect("selector built");
             let dots: Vec<f32> = (0..n).map(|j| crate::linalg::dot(keys.row(j), &q)).collect();
             let gt = crate::linalg::top_k_indices(&dots, k);
             acc += precision_at_k(&got, &gt, k);

@@ -16,12 +16,8 @@ pub mod theory;
 pub mod throughput;
 pub mod ttft;
 
-use crate::baselines::{
-    double_sparsity::DoubleSparsitySelector, hashattention::HashAttentionSelector,
-    magicpig::MagicPigSelector, oracle::OracleSelector, pqcache::PqCacheSelector,
-    quest::QuestSelector, HardLshSelector, SocketSelector, TokenSelector,
-};
 use crate::lsh::LshParams;
+use crate::selector::{self, Selector, SelectorConfig};
 
 /// The methods compared across the paper's tables.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,34 +55,33 @@ impl Method {
         }
     }
 
-    /// Construct the selector with each paper's recommended settings
-    /// (Section 6 "Baselines"), adapted to head dimension `dim`.
-    pub fn build(&self, dim: usize, seed: u64) -> Box<dyn TokenSelector> {
+    /// Registry key of this method (see `selector::registry`).
+    pub fn key(&self) -> &'static str {
         match self {
-            // PQCache: 256 bits/token => m=32 subquantizers x 8 bits at
-            // d=128; scale m with dim, keeping dim % m == 0.
-            Method::PqCache => {
-                let m = (dim / 4).min(32).max(1);
-                Box::new(PqCacheSelector::new(m, 8, seed))
-            }
-            // Quest: 16-token pages.
-            Method::Quest => Box::new(QuestSelector::new(16)),
-            // Double Sparsity: d/4 important channels.
-            Method::DoubleSparsity => Box::new(DoubleSparsitySelector::new((dim / 4).max(1))),
-            // HashAttention: 128-bit signatures.
-            Method::HashAttention => Box::new(HashAttentionSelector::new(128, seed)),
-            // MagicPig: K=10 planes, L~100 tables (≈1024 bits/token).
-            Method::MagicPig => {
-                Box::new(MagicPigSelector::new(LshParams { p: 10, l: 100, tau: 0.5 }, seed))
-            }
-            // SOCKET: P=10, L=60, τ=0.5 (600 bits/token).
-            Method::Socket => Box::new(SocketSelector::new(LshParams::paper_default(), dim, seed)),
-            // Hard LSH at SOCKET's memory budget: P=2, L=300 (Table 2).
-            Method::HardLsh => {
-                Box::new(HardLshSelector::new(LshParams { p: 2, l: 300, tau: 0.5 }, dim, seed))
-            }
-            Method::Oracle => Box::new(OracleSelector::new(false)),
+            Method::PqCache => "pqcache",
+            Method::Quest => "quest",
+            Method::DoubleSparsity => "double_sparsity",
+            Method::HashAttention => "hashattention",
+            Method::MagicPig => "magicpig",
+            Method::Socket => "socket",
+            Method::HardLsh => "lsh",
+            Method::Oracle => "oracle",
         }
+    }
+
+    /// Construct the selector through the registry — the same
+    /// constructors the serving stack uses, with each paper's
+    /// recommended settings (Section 6 "Baselines") adapted to head
+    /// dimension `dim`. Hard LSH gets the budget-matched Table-2
+    /// geometry (P=2, L=300) instead of SOCKET's default.
+    pub fn build(&self, dim: usize, seed: u64) -> Box<dyn Selector> {
+        let cfg = match self {
+            Method::HardLsh => {
+                SelectorConfig::new(dim, seed).with_lsh(LshParams { p: 2, l: 300, tau: 0.5 })
+            }
+            _ => SelectorConfig::new(dim, seed),
+        };
+        selector::build_named(self.key(), &cfg).expect("every Method maps to a registered selector")
     }
 }
 
@@ -122,5 +117,32 @@ impl Scale {
         s.instances = args.usize_or("instances", s.instances);
         s.seed = args.u64_or("seed", s.seed);
         s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_method_builds_through_the_registry() {
+        for method in [
+            Method::PqCache,
+            Method::Quest,
+            Method::DoubleSparsity,
+            Method::HashAttention,
+            Method::MagicPig,
+            Method::Socket,
+            Method::HardLsh,
+            Method::Oracle,
+        ] {
+            assert!(selector::lookup(method.key()).is_ok(), "{}", method.name());
+            let s = method.build(64, 7);
+            assert_eq!(s.n_tokens(), 0);
+        }
+        // The display names used in tables resolve too (aliases).
+        for method in Method::TABLE1 {
+            assert!(selector::lookup(method.name()).is_ok(), "{}", method.name());
+        }
     }
 }

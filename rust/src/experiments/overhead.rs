@@ -8,8 +8,8 @@
 
 use super::Scale;
 use crate::attention::SelectionPolicy;
-use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
 use crate::lsh::LshParams;
+use crate::selector::{HardLshSelector, Selector, SocketSelector};
 use crate::util::{bench_ms, fnum, Table};
 use crate::workload::ruler::{evaluate_selector, RULER_TASKS};
 
@@ -48,7 +48,7 @@ pub fn run(scale: Scale) -> Vec<OverheadRow> {
     let mut rows = Vec::new();
     for &(name, p, l) in CONFIGS.iter() {
         let params = LshParams { p, l, tau: 0.5 };
-        let mut selector: Box<dyn TokenSelector> = if name == "SOCKET" {
+        let mut selector: Box<dyn Selector> = if name == "SOCKET" {
             Box::new(SocketSelector::new(params, scale.dim, scale.seed))
         } else {
             Box::new(HardLshSelector::new(params, scale.dim, scale.seed))
@@ -72,9 +72,9 @@ pub fn run(scale: Scale) -> Vec<OverheadRow> {
         let mut rng = crate::util::Pcg64::new(scale.seed, 777);
         let keys = crate::linalg::Matrix::gaussian(scale.n, scale.dim, &mut rng);
         let vals = crate::linalg::Matrix::gaussian(scale.n, scale.dim, &mut rng);
-        selector.build(&keys, &vals);
+        selector.build_dense(&keys, &vals);
         let q = rng.normal_vec(scale.dim);
-        let time_ms = bench_ms(2, 8, || selector.select(&q, policy.k));
+        let time_ms = bench_ms(2, 8, || selector.select(&q, policy.k).expect("selector built"));
         let bits = storage_bits_per_token(&params);
         let memory_gb = bits as f64 / 8.0 * ctx as f64 * layers as f64 * kv_heads as f64 / 1e9;
         rows.push(OverheadRow { method: name, p, l, memory_gb, time_ms, avg_score });

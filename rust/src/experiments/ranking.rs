@@ -6,7 +6,7 @@
 //! Llama activations; see DESIGN.md §2).
 
 use super::Scale;
-use crate::baselines::{HardLshSelector, SocketSelector, TokenSelector};
+use crate::selector::{HardLshSelector, Selector, SocketSelector};
 use crate::experiments::correlation::PROFILES;
 use crate::linalg::Matrix;
 use crate::lsh::LshParams;
@@ -64,12 +64,12 @@ pub fn run(scale: Scale) -> Vec<RankingPoint> {
                 let gt_k: Vec<usize> = truth[..k].to_vec();
                 let retrieved = if soft {
                     let mut s = SocketSelector::new(params, scale.dim, scale.seed ^ inst as u64);
-                    s.build(&keys, &ones);
-                    s.select(&q, k)
+                    s.build_dense(&keys, &ones);
+                    s.select(&q, k).expect("selector built")
                 } else {
                     let mut s = HardLshSelector::new(params, scale.dim, scale.seed ^ inst as u64);
-                    s.build(&keys, &ones);
-                    s.select(&q, k)
+                    s.build_dense(&keys, &ones);
+                    s.select(&q, k).expect("selector built")
                 };
                 p_acc += precision_at_k(&retrieved, &gt_k, k);
                 j_acc += jaccard(&retrieved, &gt_k);

@@ -8,10 +8,10 @@
 
 use super::Scale;
 use crate::attention::{flash_decode, flash_decode_into, SelectionPolicy};
-use crate::baselines::{SocketSelector, TokenSelector};
 use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
 use crate::linalg::Matrix;
 use crate::lsh::LshParams;
+use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
 use crate::util::{fnum, pool, Json, Pcg64, Table};
 use std::time::Instant;
 
@@ -100,9 +100,9 @@ pub fn measure_scoring_modes(
     // Pooled: the serving batch path (same hyperplanes + index, so the
     // selections are identical; only the wall-clock differs).
     let mut sel = SocketSelector::new(LshParams::paper_default(), dim, seed);
-    sel.build(&keys, &values);
+    sel.build_dense(&keys, &values);
     let t1 = Instant::now();
-    crate::util::black_box(sel.select_batch(&queries, k));
+    crate::util::black_box(sel.select_batch(&queries, k).expect("selector built"));
     let pooled_ms = t1.elapsed().as_secs_f64() * 1e3;
 
     ScoringModePoint { n, batch, serial_ms, pooled_ms }
@@ -328,6 +328,123 @@ pub fn paged_vs_gather_json(points: &[PagedVsGatherPoint]) -> Json {
     Json::obj().set("bench", "throughput_paged_vs_gather").set("rows", Json::Arr(rows))
 }
 
+/// Per-method serving lane: one row per `selector::registry` method,
+/// decoding over the paged pool exactly like `DecodeEngine` does —
+/// paged-native index build at prefill, then per step: `select_into`
+/// into reusable scratch, merged sink/local policy, in-place flash
+/// decode over the view, and a KV + index append. tokens/s at the
+/// paper's sparsity budget, plus the index build cost and memory.
+pub struct MethodLanePoint {
+    pub method: &'static str,
+    pub n: usize,
+    pub bits_per_token: usize,
+    /// Index construction time at prefill, ms (the TTFT component).
+    pub build_ms: f64,
+    /// Decode tokens/second through select + attend + append.
+    pub decode_tps: f64,
+}
+
+/// Measure every registered method at one context length.
+pub fn measure_method_lane(
+    n: usize,
+    dim: usize,
+    sparsity: f64,
+    steps: usize,
+    seed: u64,
+) -> Vec<MethodLanePoint> {
+    let mut out = Vec::new();
+    let scale = 1.0 / (dim as f32).sqrt();
+    for spec in selector::registry() {
+        let mut rng = Pcg64::new(seed, n as u64);
+        let mut cache = PagedKvCache::new(PagedKvCache::pages_for(n + steps) + 1, dim);
+        let mut table = PageTable::default();
+        let keys = Matrix::gaussian(n, dim, &mut rng);
+        let values = Matrix::gaussian(n, dim, &mut rng);
+        let written = cache.append_many(&mut table, &keys.data, &values.data);
+        assert_eq!(written, n, "bench pool sized to hold the lane");
+        let mut sel = (spec.build)(&SelectorConfig::new(dim, seed));
+        let t0 = Instant::now();
+        sel.build(&cache.view(&table));
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let queries: Vec<Vec<f32>> = (0..steps).map(|_| rng.normal_vec(dim)).collect();
+        let appends: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..steps).map(|_| (rng.normal_vec(dim), rng.normal_vec(dim))).collect();
+        let mut selection = Selection::default();
+        let mut merged = Vec::new();
+        let mut y = Vec::new();
+        let t1 = Instant::now();
+        for (q, (k_new, v_new)) in queries.iter().zip(appends.iter()) {
+            let n_now = table.n_tokens;
+            let policy = SelectionPolicy::from_sparsity(n_now, sparsity, 16, 16);
+            sel.select_into(q, policy.k, &mut selection).expect("index built");
+            policy.merge_into(&selection.indices, n_now, &mut merged);
+            {
+                let view = cache.view(&table);
+                flash_decode_into(q, &view, Some(&merged), scale, &mut y);
+            }
+            crate::util::black_box(&y);
+            assert!(cache.append(&mut table, k_new, v_new));
+            sel.append(k_new, v_new).expect("index built");
+        }
+        let decode_tps = steps as f64 / t1.elapsed().as_secs_f64();
+        out.push(MethodLanePoint {
+            method: spec.name,
+            n,
+            bits_per_token: sel.bits_per_token(),
+            build_ms,
+            decode_tps,
+        });
+    }
+    out
+}
+
+/// Sweep [`measure_method_lane`] across context lengths.
+pub fn run_method_lane(
+    scale: Scale,
+    context_lengths: &[usize],
+    sparsity: f64,
+    steps: usize,
+) -> Vec<MethodLanePoint> {
+    context_lengths
+        .iter()
+        .flat_map(|&n| measure_method_lane(n, scale.dim, sparsity, steps, scale.seed))
+        .collect()
+}
+
+/// Render the per-method serving lane.
+pub fn method_lane_table(points: &[MethodLanePoint], sparsity: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Per-method serving lane over paged KV ({sparsity}x sparsity)"),
+        &["Method", "Context", "Mem(b/tok)", "Build ms", "Decode tok/s"],
+    );
+    for p in points {
+        t.row(vec![
+            p.method.to_string(),
+            p.n.to_string(),
+            p.bits_per_token.to_string(),
+            fnum(p.build_ms, 1),
+            fnum(p.decode_tps, 1),
+        ]);
+    }
+    t
+}
+
+/// Serialize the per-method lane for the `BENCH_*.json` artifact.
+pub fn method_lane_json(points: &[MethodLanePoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .set("method", p.method)
+                .set("context", p.n)
+                .set("bits_per_token", p.bits_per_token)
+                .set("build_ms", p.build_ms)
+                .set("decode_tps", p.decode_tps)
+        })
+        .collect();
+    Json::obj().set("bench", "throughput_method_lane").set("rows", Json::Arr(rows))
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -383,6 +500,23 @@ mod tests {
         // The artifact round-trips through the writer/parser.
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_paged_vs_gather"));
+    }
+
+    #[test]
+    fn method_lane_covers_every_registered_selector() {
+        let pts = measure_method_lane(256, 32, 8.0, 2, 5);
+        assert_eq!(pts.len(), selector::registry().len());
+        for p in &pts {
+            assert!(p.decode_tps > 0.0 && p.decode_tps.is_finite(), "{}", p.method);
+            assert!(p.build_ms >= 0.0 && p.build_ms.is_finite(), "{}", p.method);
+        }
+        let names: Vec<&str> = pts.iter().map(|p| p.method).collect();
+        assert!(names.contains(&"socket") && names.contains(&"quest"));
+        assert_eq!(method_lane_table(&pts, 8.0).n_rows(), pts.len());
+        let doc = method_lane_json(&pts);
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_method_lane"));
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), pts.len());
     }
 
     #[test]

@@ -7,9 +7,9 @@
 //! same Rust substrate, so relative shape is meaningful).
 
 use super::Scale;
-use crate::baselines::{pqcache::PqCacheSelector, SocketSelector, TokenSelector};
 use crate::linalg::Matrix;
 use crate::lsh::LshParams;
+use crate::selector::{self, Selector, SelectorConfig, SocketSelector};
 use crate::util::{fnum, time_ms, Pcg64, Table};
 
 pub struct TtftPoint {
@@ -25,10 +25,12 @@ pub fn run(scale: Scale, context_lengths: &[usize]) -> Vec<TtftPoint> {
         let keys = Matrix::gaussian(n, scale.dim, &mut rng);
         let vals = Matrix::gaussian(n, scale.dim, &mut rng);
         let mut socket = SocketSelector::new(LshParams::paper_default(), scale.dim, scale.seed);
-        let (_, socket_ms) = time_ms(|| socket.build(&keys, &vals));
-        let m = (scale.dim / 4).min(32).max(1);
-        let mut pq = PqCacheSelector::new(m, 8, scale.seed);
-        let (_, pqcache_ms) = time_ms(|| pq.build(&keys, &vals));
+        let (_, socket_ms) = time_ms(|| socket.build_dense(&keys, &vals));
+        // Build through the registry so the TTFT contrast measures
+        // exactly the PQCache the serving stack constructs.
+        let mut pq = selector::build_named("pqcache", &SelectorConfig::new(scale.dim, scale.seed))
+            .expect("pqcache is registered");
+        let (_, pqcache_ms) = time_ms(|| pq.build_dense(&keys, &vals));
         out.push(TtftPoint { n, socket_ms, pqcache_ms });
     }
     out

@@ -15,10 +15,13 @@
 //!   (Python is never on the request path).
 //!
 //! In addition to the SOCKET scorer itself, the crate implements every
-//! substrate the paper's evaluation depends on: hard-LSH and five other
-//! sparse-attention baselines, ranking/attention metrics, synthetic
-//! RULER/LongBench-analog workloads, and one experiment driver per paper
-//! table and figure (see `experiments`).
+//! substrate the paper's evaluation depends on: hard-LSH and the five
+//! other sparse-attention baselines — all behind the unified
+//! [`selector::Selector`] trait, paged-native and registry-driven, so
+//! any method is servable over the zero-copy paged decode path by name
+//! (`"quest"`, `"magicpig"`, ...) — plus ranking/attention metrics,
+//! synthetic RULER/LongBench-analog workloads, and one experiment
+//! driver per paper table and figure (see `experiments`).
 //!
 //! ## Build matrix
 //!
@@ -34,7 +37,6 @@
 //! parallelism). See `rust/README.md` for the full matrix.
 
 pub mod attention;
-pub mod baselines;
 pub mod coordinator;
 pub mod experiments;
 pub mod kvcache;
@@ -43,6 +45,7 @@ pub mod lsh;
 pub mod metrics;
 pub mod model;
 pub mod runtime;
+pub mod selector;
 pub mod server;
 pub mod testing;
 pub mod util;

@@ -110,6 +110,26 @@ pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
     tk.into_indices()
 }
 
+/// [`top_k_indices`] into a reusable buffer: the indices of the `k`
+/// highest scores, descending (ties toward lower indices), written to a
+/// cleared `out`. Identical selection and order; the bounded O(k) heap
+/// is the only transient allocation — the decode hot path's entry
+/// point.
+pub fn top_k_into(scores: &[f32], k: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let k = k.min(scores.len());
+    if k == 0 {
+        return;
+    }
+    let mut tk = TopK::new(k);
+    for (i, &s) in scores.iter().enumerate() {
+        tk.push(s, i);
+    }
+    for (i, _) in tk.into_sorted() {
+        out.push(i);
+    }
+}
+
 /// The k-th largest value (the selection threshold), or -inf if k == 0.
 pub fn top_k_threshold(scores: &[f32], k: usize) -> f32 {
     if k == 0 {
@@ -196,6 +216,19 @@ mod tests {
             idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
             idx.truncate(k);
             prop_assert!(got == idx, "n={n} k={k}: {got:?} vs {idx:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_top_k_into_matches_top_k_indices() {
+        check_default("topk-into-vs-alloc", |rng, _| {
+            let n = gen::size(rng, 1, 400);
+            let k = rng.below_usize(n + 10); // may exceed n or be 0
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut out = vec![77usize; 3]; // stale buffer
+            top_k_into(&scores, k, &mut out);
+            prop_assert!(out == top_k_indices(&scores, k), "n={n} k={k}");
             Ok(())
         });
     }

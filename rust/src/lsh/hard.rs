@@ -36,26 +36,27 @@ impl HardScorer {
     /// returned as f32 for interface parity with the soft scorer).
     pub fn raw_scores(&self, q: &[f32], hashes: &KeyHashes) -> Vec<f32> {
         let qb = self.hash.hash_one(q);
-        let l = hashes.l;
-        let mut out = vec![0.0f32; hashes.n];
-        for j in 0..hashes.n {
-            let row = hashes.key_row(j);
-            let mut c = 0u32;
-            for t in 0..l {
-                c += (row[t] == qb[t]) as u32;
-            }
-            out[j] = c as f32;
-        }
+        let mut out = Vec::new();
+        hashes.collision_counts_into(&qb, &mut out);
         out
     }
 
     /// Value-aware scores (same weighting as SOCKET for fair comparison).
     pub fn scores(&self, q: &[f32], hashes: &KeyHashes) -> Vec<f32> {
-        let mut s = self.raw_scores(q, hashes);
-        for j in 0..s.len() {
-            s[j] *= hashes.value_norms[j];
+        let mut out = Vec::new();
+        self.scores_into(q, hashes, &mut out);
+        out
+    }
+
+    /// [`HardScorer::scores`] into a reusable buffer (the selector hot
+    /// path's zero-alloc entry point). Bit-identical: the per-key score
+    /// is the same `count as f32 * ‖v_j‖` product.
+    pub fn scores_into(&self, q: &[f32], hashes: &KeyHashes, out: &mut Vec<f32>) {
+        let qb = self.hash.hash_one(q);
+        hashes.collision_counts_into(&qb, out);
+        for (slot, norm) in out.iter_mut().zip(hashes.value_norms.iter()) {
+            *slot *= norm;
         }
-        s
     }
 
     /// Top-k selection by hard collision count x value norm.
@@ -152,6 +153,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn scores_into_matches_raw_times_norm() {
+        let dim = 16;
+        let h = HardScorer::new(LshParams { p: 5, l: 12, tau: 0.5 }, dim, 8);
+        let mut rng = Pcg64::seeded(6);
+        let keys = Matrix::gaussian(40, dim, &mut rng);
+        let vals = Matrix::gaussian(40, dim, &mut rng);
+        let hashes = h.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let raw = h.raw_scores(&q, &hashes);
+        let mut got = vec![5.0f32; 3]; // stale, wrong size
+        h.scores_into(&q, &hashes, &mut got);
+        assert_eq!(got.len(), 40);
+        for j in 0..40 {
+            assert_eq!(got[j], raw[j] * hashes.value_norms[j], "key {j}");
+        }
     }
 
     #[test]

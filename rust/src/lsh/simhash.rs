@@ -50,6 +50,24 @@ impl KeyHashes {
         self.value_norms.push(value_norm);
         self.n += 1;
     }
+
+    /// Per-key table-collision counts against a query's bucket row
+    /// (`q_buckets[t]` = the query's bucket in table t), written into a
+    /// reusable buffer as f32 (counts ≤ L are exact in f32). The shared
+    /// kernel of hard-LSH scoring and MagicPIG candidate sampling.
+    pub fn collision_counts_into(&self, q_buckets: &[u16], out: &mut Vec<f32>) {
+        assert_eq!(q_buckets.len(), self.l);
+        out.clear();
+        out.resize(self.n, 0.0);
+        for (j, slot) in out.iter_mut().enumerate() {
+            let row = self.key_row(j);
+            let mut c = 0u32;
+            for t in 0..self.l {
+                c += (row[t] == q_buckets[t]) as u32;
+            }
+            *slot = c as f32;
+        }
+    }
 }
 
 impl SimHash {

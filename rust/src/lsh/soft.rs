@@ -106,11 +106,27 @@ impl SoftHasher {
     /// threads fill disjoint blocks of per-table distributions. Output
     /// is bit-identical to [`SoftHasher::bucket_probs`].
     pub fn bucket_probs_with(&self, q: &[f32], pool: &WorkerPool) -> BucketProbs {
+        let mut probs = Vec::new();
+        let (l, r) = self.bucket_probs_into(q, &mut probs, pool);
+        BucketProbs { l, r, probs }
+    }
+
+    /// Algorithm 2 into a reusable buffer: fills `out` with the
+    /// flattened `L x R` per-table distributions (capacity persists
+    /// across calls — the decode hot path's zero-alloc entry point).
+    /// Returns `(L, R)`. Bit-identical to [`SoftHasher::bucket_probs`].
+    pub fn bucket_probs_into(
+        &self,
+        q: &[f32],
+        out: &mut Vec<f32>,
+        pool: &WorkerPool,
+    ) -> (usize, usize) {
         let l = self.hash.params.l;
         let r = 1usize << self.hash.params.p;
-        let mut probs = vec![0.0f32; l * r];
-        pool.fill_rows(&mut probs, r, |t, w| self.table_probs(t, q, w));
-        BucketProbs { l, r, probs }
+        out.clear();
+        out.resize(l * r, 0.0);
+        pool.fill_rows(out, r, |t, w| self.table_probs(t, q, w));
+        (l, r)
     }
 }
 
@@ -204,6 +220,28 @@ impl SoftScorer {
         let mut s = self.raw_scores(probs, hashes);
         Self::weight_scores(&mut s, hashes, mask);
         s
+    }
+
+    /// Algorithm 4 into a reusable buffer: value-norm-weighted soft
+    /// collision scores over a flattened `L x R` prob table (as filled
+    /// by [`SoftHasher::bucket_probs_into`]), pooled. Bit-identical to
+    /// [`SoftScorer::scores_with`] without the per-call allocation —
+    /// the selector hot path's entry point.
+    pub fn scores_into(
+        &self,
+        probs: &[f32],
+        r: usize,
+        hashes: &KeyHashes,
+        pool: &WorkerPool,
+        out: &mut Vec<f32>,
+    ) {
+        let l = hashes.l;
+        assert_eq!(probs.len(), l * r, "prob table shape mismatch");
+        out.clear();
+        out.resize(hashes.n, 0.0);
+        let table = &probs[..l * r];
+        pool.fill(out, |j| Self::score_key(table, r, hashes.key_row(j)));
+        Self::weight_scores(out, hashes, None);
     }
 
     /// [`SoftScorer::scores`] with the scoring loop on a worker pool.
@@ -635,5 +673,29 @@ mod tests {
             s.select_top_k(&q, &hashes, 64),
             s.select_top_k_with(&q, &hashes, 64, &pool)
         );
+    }
+
+    #[test]
+    fn into_buffers_match_allocating_paths() {
+        // The zero-alloc entry points (bucket_probs_into / scores_into)
+        // must be bit-identical to the allocating ones, including when
+        // handed dirty, wrong-sized buffers.
+        let dim = 32;
+        let s = scorer(6, 10, 0.5, dim);
+        let pool = WorkerPool::new(3);
+        let mut rng = Pcg64::seeded(33);
+        let keys = Matrix::gaussian(400, dim, &mut rng);
+        let vals = Matrix::gaussian(400, dim, &mut rng);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let want_probs = s.hasher.bucket_probs(&q);
+        let mut probs = vec![7.5f32; 3]; // stale, wrong size
+        let (l, r) = s.hasher.bucket_probs_into(&q, &mut probs, &pool);
+        assert_eq!((l, r), (10, 64));
+        assert_eq!(probs, want_probs.probs);
+        let want_scores = s.scores(&want_probs, &hashes, None);
+        let mut scores = vec![-1.0f32; 9999]; // stale, wrong size
+        s.scores_into(&probs, r, &hashes, &pool, &mut scores);
+        assert_eq!(scores, want_scores);
     }
 }

@@ -2,7 +2,8 @@
 //! launcher.
 //!
 //! ```text
-//! socketd serve   [--port 7411] [--sparsity 33] [--dense] [--workers 4]
+//! socketd serve   [--port 7411] [--method socket|quest|...] [--sparsity 33]
+//!                 [--dense] [--workers 4]
 //! socketd bench   <ruler|overhead|ranking|ttft|throughput|correlation|
 //!                  longbench|ablation|magicpig|models|theory|all>
 //!                 [--full] [--n N] [--dim D] [--instances I] [--seed S]
@@ -38,10 +39,18 @@ fn main() {
 }
 
 fn engine_config(args: &Args) -> EngineConfig {
+    // Any registered selector serves as the default: --method quest...
+    // Validated here so a typo'd name fails at startup with the
+    // registry listing, not on the first request.
     let mode = if args.flag("dense") {
         AttentionMode::Dense
     } else {
-        AttentionMode::Socket { sparsity: args.f64_or("sparsity", 33.0) }
+        let method = args.get_or("method", "socket");
+        if let Err(e) = socket_attn::selector::lookup(&method) {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+        AttentionMode::sparse(method.as_str(), args.f64_or("sparsity", 33.0))
     };
     EngineConfig {
         model: ModelConfig::tiny(),
@@ -67,7 +76,7 @@ fn serve(args: &Args) {
         .expect("bind failed");
     println!("socketd listening on {addr} ({workers} workers)");
     println!("protocol: one JSON per line, e.g.");
-    println!("  {{\"op\":\"generate\",\"context_len\":4096,\"decode_len\":64}}");
+    println!("  {{\"op\":\"generate\",\"context_len\":4096,\"decode_len\":64,\"method\":\"quest\"}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

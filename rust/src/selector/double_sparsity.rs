@@ -5,9 +5,14 @@
 //! matching the paper's offline AWQ-style calibration). Decode-time
 //! token selection scores keys using only those channels ("label cache"),
 //! cutting the feature dimension before the top-k.
+//!
+//! Paged-native semantics: the channel choice is calibrated at prefill
+//! and frozen; each decoded token appends its reduced label against the
+//! frozen channel set — the label cache is extended, never rebuilt.
 
-use super::TokenSelector;
-use crate::linalg::{Matrix, TopK};
+use super::{Selection, Selector, SelectorError};
+use crate::attention::KvSource;
+use crate::linalg::TopK;
 
 pub struct DoubleSparsitySelector {
     /// Number of important channels kept (paper: d/8 … d/4).
@@ -16,11 +21,20 @@ pub struct DoubleSparsitySelector {
     /// Label cache: n x r_channels reduced keys.
     labels: Vec<f32>,
     n: usize,
+    dim: usize,
+    built: bool,
 }
 
 impl DoubleSparsitySelector {
     pub fn new(r_channels: usize) -> DoubleSparsitySelector {
-        DoubleSparsitySelector { r_channels, channels: Vec::new(), labels: Vec::new(), n: 0 }
+        DoubleSparsitySelector {
+            r_channels,
+            channels: Vec::new(),
+            labels: Vec::new(),
+            n: 0,
+            dim: 0,
+            built: false,
+        }
     }
 
     pub fn selected_channels(&self) -> &[usize] {
@@ -28,19 +42,20 @@ impl DoubleSparsitySelector {
     }
 }
 
-impl TokenSelector for DoubleSparsitySelector {
+impl Selector for DoubleSparsitySelector {
     fn name(&self) -> &'static str {
         "DS"
     }
 
-    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
-        self.n = keys.rows;
-        let d = keys.cols;
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.n = kv.n_tokens();
+        self.dim = kv.key_dim();
+        let d = self.dim;
         let r = self.r_channels.min(d);
         // Channel importance = sum of squared activations (calibration).
         let mut importance = vec![0.0f64; d];
-        for j in 0..keys.rows {
-            let row = keys.row(j);
+        for j in 0..self.n {
+            let row = kv.key(j);
             for c in 0..d {
                 importance[c] += (row[c] as f64).powi(2);
             }
@@ -51,24 +66,54 @@ impl TokenSelector for DoubleSparsitySelector {
         idx.sort_unstable();
         self.channels = idx;
         // Build label cache.
-        self.labels = vec![0.0f32; self.n * r];
+        self.labels.clear();
+        self.labels.reserve(self.n * r);
         for j in 0..self.n {
-            let row = keys.row(j);
-            for (i, &c) in self.channels.iter().enumerate() {
-                self.labels[j * r + i] = row[c];
+            let row = kv.key(j);
+            for &c in self.channels.iter() {
+                self.labels.push(row[c]);
             }
         }
+        self.built = true;
     }
 
-    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+    fn append(&mut self, key: &[f32], _value: &[f32]) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        debug_assert_eq!(key.len(), self.dim);
+        for &c in self.channels.iter() {
+            self.labels.push(key[c]);
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.n
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        sel.indices.clear();
+        if self.n == 0 {
+            return Ok(());
+        }
         let r = self.channels.len();
-        let q_red: Vec<f32> = self.channels.iter().map(|&c| q[c]).collect();
+        // Reduced query in reusable scratch.
+        sel.aux.clear();
+        sel.aux.extend(self.channels.iter().map(|&c| q[c]));
         let mut tk = TopK::new(k.min(self.n).max(1));
         for j in 0..self.n {
-            let score = crate::linalg::dot(&self.labels[j * r..(j + 1) * r], &q_red);
+            let score = crate::linalg::dot(&self.labels[j * r..(j + 1) * r], &sel.aux);
             tk.push(score, j);
         }
-        tk.into_indices()
+        for (i, _) in tk.into_sorted() {
+            sel.indices.push(i);
+        }
+        Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -81,6 +126,7 @@ impl TokenSelector for DoubleSparsitySelector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -94,7 +140,7 @@ mod tests {
         }
         let vals = Matrix::gaussian(50, 16, &mut rng);
         let mut ds = DoubleSparsitySelector::new(2);
-        ds.build(&keys, &vals);
+        ds.build_dense(&keys, &vals);
         assert_eq!(ds.selected_channels(), &[3, 11]);
     }
 
@@ -108,8 +154,8 @@ mod tests {
             keys.set(60, c, 5.0 * q[c]);
         }
         let mut ds = DoubleSparsitySelector::new(8);
-        ds.build(&keys, &vals);
-        let sel = ds.select(&q, 16);
+        ds.build_dense(&keys, &vals);
+        let sel = ds.select(&q, 16).unwrap();
         assert!(sel.contains(&60), "{sel:?}");
     }
 
@@ -120,9 +166,26 @@ mod tests {
         let vals = Matrix::gaussian(40, 8, &mut rng);
         let q = rng.normal_vec(8);
         let mut ds = DoubleSparsitySelector::new(8); // r = d: no reduction
-        ds.build(&keys, &vals);
+        ds.build_dense(&keys, &vals);
         let mut oracle = super::super::oracle::OracleSelector::new(false);
-        oracle.build(&keys, &vals);
-        assert_eq!(ds.select(&q, 5), oracle.select(&q, 5));
+        oracle.build_dense(&keys, &vals);
+        assert_eq!(ds.select(&q, 5).unwrap(), oracle.select(&q, 5).unwrap());
+    }
+
+    #[test]
+    fn append_uses_frozen_channels() {
+        let mut rng = Pcg64::seeded(4);
+        let keys = Matrix::gaussian(30, 16, &mut rng);
+        let vals = Matrix::gaussian(30, 16, &mut rng);
+        let mut ds = DoubleSparsitySelector::new(4);
+        ds.build_dense(&keys, &vals);
+        let channels = ds.selected_channels().to_vec();
+        let extra = rng.normal_vec(16);
+        ds.append(&extra, &rng.normal_vec(16)).unwrap();
+        assert_eq!(ds.selected_channels(), channels.as_slice(), "calibration must not move");
+        assert_eq!(ds.n_tokens(), 31);
+        let r = channels.len();
+        let want: Vec<f32> = channels.iter().map(|&c| extra[c]).collect();
+        assert_eq!(&ds.labels[30 * r..31 * r], want.as_slice());
     }
 }

@@ -6,8 +6,12 @@
 //! `bits` bits per token (the paper's Table 1 lists HashAttention at 128
 //! bits/token). Scoring = negative Hamming distance between query and
 //! key signatures, evaluated with popcount over packed u64 words.
+//!
+//! Paged-native: the rotation is drawn at prefill (data-agnostic) and
+//! each decoded token appends its packed signature.
 
-use super::TokenSelector;
+use super::{Selection, Selector, SelectorError};
+use crate::attention::KvSource;
 use crate::linalg::{Matrix, TopK};
 use crate::util::rng::Pcg64;
 
@@ -23,13 +27,19 @@ pub struct HashAttentionSelector {
 impl HashAttentionSelector {
     /// Paper's setting: 128-bit signatures.
     pub fn new(bits: usize, seed: u64) -> HashAttentionSelector {
-        HashAttentionSelector { bits, seed, planes: None, sigs: Vec::new(), words: bits.div_ceil(64), n: 0 }
+        HashAttentionSelector {
+            bits,
+            seed,
+            planes: None,
+            sigs: Vec::new(),
+            words: bits.div_ceil(64),
+            n: 0,
+        }
     }
 
-    fn signature(&self, x: &[f32]) -> Vec<u64> {
-        let planes = self.planes.as_ref().expect("build() not called");
+    fn signature(planes: &Matrix, words: usize, x: &[f32]) -> Vec<u64> {
         let proj = planes.matvec(x);
-        let mut sig = vec![0u64; self.words];
+        let mut sig = vec![0u64; words];
         for (i, &v) in proj.iter().enumerate() {
             if v >= 0.0 {
                 sig[i / 64] |= 1u64 << (i % 64);
@@ -39,24 +49,43 @@ impl HashAttentionSelector {
     }
 }
 
-impl TokenSelector for HashAttentionSelector {
+impl Selector for HashAttentionSelector {
     fn name(&self) -> &'static str {
         "HashAttn"
     }
 
-    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
-        self.n = keys.rows;
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.n = kv.n_tokens();
         let mut rng = Pcg64::new(self.seed, 23);
-        self.planes = Some(Matrix::gaussian(self.bits, keys.cols, &mut rng));
-        self.sigs = vec![0u64; self.n * self.words];
+        let planes = Matrix::gaussian(self.bits, kv.key_dim(), &mut rng);
+        self.sigs.clear();
+        self.sigs.reserve(self.n * self.words);
         for j in 0..self.n {
-            let sig = self.signature(keys.row(j));
-            self.sigs[j * self.words..(j + 1) * self.words].copy_from_slice(&sig);
+            let sig = Self::signature(&planes, self.words, kv.key(j));
+            self.sigs.extend_from_slice(&sig);
         }
+        self.planes = Some(planes);
     }
 
-    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
-        let qsig = self.signature(q);
+    fn append(&mut self, key: &[f32], _value: &[f32]) -> Result<(), SelectorError> {
+        let planes = self.planes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        let sig = Self::signature(planes, self.words, key);
+        self.sigs.extend_from_slice(&sig);
+        self.n += 1;
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.n
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        let planes = self.planes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        sel.indices.clear();
+        if self.n == 0 {
+            return Ok(());
+        }
+        let qsig = Self::signature(planes, self.words, q);
         let mut tk = TopK::new(k.min(self.n).max(1));
         for j in 0..self.n {
             let mut ham = 0u32;
@@ -65,7 +94,10 @@ impl TokenSelector for HashAttentionSelector {
             }
             tk.push(-(ham as f32), j);
         }
-        tk.into_indices()
+        for (i, _) in tk.into_sorted() {
+            sel.indices.push(i);
+        }
+        Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -87,8 +119,8 @@ mod tests {
         keys.row_mut(5).copy_from_slice(&q);
         let vals = Matrix::gaussian(100, dim, &mut rng);
         let mut h = HashAttentionSelector::new(128, 9);
-        h.build(&keys, &vals);
-        let sel = h.select(&q, 1);
+        h.build_dense(&keys, &vals);
+        let sel = h.select(&q, 1).unwrap();
         assert_eq!(sel, vec![5]);
     }
 
@@ -102,8 +134,8 @@ mod tests {
         keys.row_mut(1).copy_from_slice(&gen::key_with_cosine(&mut rng, &q, 0.0));
         let vals = Matrix::from_vec(2, 1, vec![1.0, 1.0]);
         let mut h = HashAttentionSelector::new(256, 3);
-        h.build(&keys, &vals);
-        assert_eq!(h.select(&q, 1), vec![0]);
+        h.build_dense(&keys, &vals);
+        assert_eq!(h.select(&q, 1).unwrap(), vec![0]);
     }
 
     #[test]
@@ -113,5 +145,19 @@ mod tests {
         assert_eq!(h.words, 2);
         let h = HashAttentionSelector::new(100, 0);
         assert_eq!(h.words, 2); // rounds up
+    }
+
+    #[test]
+    fn appended_duplicate_of_query_ranks_first() {
+        let mut rng = Pcg64::seeded(7);
+        let dim = 24;
+        let keys = Matrix::gaussian(40, dim, &mut rng);
+        let vals = Matrix::gaussian(40, dim, &mut rng);
+        let q = rng.normal_vec(dim);
+        let mut h = HashAttentionSelector::new(128, 4);
+        h.build_dense(&keys, &vals);
+        h.append(&q, &rng.normal_vec(dim)).unwrap();
+        assert_eq!(h.n_tokens(), 41);
+        assert_eq!(h.select(&q, 1).unwrap(), vec![40]);
     }
 }

@@ -10,11 +10,16 @@
 //! are also processed sparsely, low-collision regimes leave the sampler
 //! with few or no candidates.
 //!
-//! `dense_layers` reproduces the original's (0,16)-dense fallback.
+//! Paged-native: hyperplanes are drawn at prefill (data-agnostic), so
+//! appends hash the new key and push its signature + a CPU-side key
+//! copy (the importance weights need exact dot products, mirroring the
+//! original's host-resident key store).
 
-use super::TokenSelector;
-use crate::linalg::{Matrix, TopK};
+use super::{hash_kv_source, Selection, Selector, SelectorError};
+use crate::attention::KvSource;
+use crate::linalg::TopK;
 use crate::lsh::{KeyHashes, LshParams, SimHash};
+use crate::util::pool;
 
 pub struct MagicPigSelector {
     pub params: LshParams,
@@ -22,7 +27,8 @@ pub struct MagicPigSelector {
     pub min_matches: u32,
     hash: Option<SimHash>,
     hashes: Option<KeyHashes>,
-    keys: Option<Matrix>,
+    /// CPU-side key copy, row-major n x dim (importance weighting).
+    keys: Vec<f32>,
     seed: u64,
     dim: usize,
 }
@@ -31,64 +37,107 @@ impl MagicPigSelector {
     /// Paper setting: K=10 planes x L=150 tables (≈1024+ bits/token is
     /// the Table-1 accounting), min 2 collisions.
     pub fn new(params: LshParams, seed: u64) -> MagicPigSelector {
-        MagicPigSelector { params, min_matches: 2, hash: None, hashes: None, keys: None, seed, dim: 0 }
+        MagicPigSelector {
+            params,
+            min_matches: 2,
+            hash: None,
+            hashes: None,
+            keys: Vec::new(),
+            seed,
+            dim: 0,
+        }
     }
 
     /// Collision-count distribution of all keys for q (diagnostics).
+    /// Panics if `build` was not called — use the [`Selector`] API for
+    /// error-reporting behaviour.
     pub fn collision_counts(&self, q: &[f32]) -> Vec<u32> {
         let hash = self.hash.as_ref().expect("build() not called");
         let hashes = self.hashes.as_ref().unwrap();
         let qb = hash.hash_one(q);
-        (0..hashes.n)
-            .map(|j| {
-                let row = hashes.key_row(j);
-                (0..hashes.l).filter(|&t| row[t] == qb[t]).count() as u32
-            })
-            .collect()
+        let mut counts = Vec::new();
+        hashes.collision_counts_into(&qb, &mut counts);
+        counts.into_iter().map(|c| c as u32).collect()
+    }
+
+    fn key_row(&self, j: usize) -> &[f32] {
+        &self.keys[j * self.dim..(j + 1) * self.dim]
     }
 }
 
-impl TokenSelector for MagicPigSelector {
+impl Selector for MagicPigSelector {
     fn name(&self) -> &'static str {
         "MagicPig"
     }
 
-    fn build(&mut self, keys: &Matrix, values: &Matrix) {
-        self.dim = keys.cols;
-        let hash = SimHash::new(self.params, keys.cols, self.seed);
-        self.hashes = Some(hash.hash_keys(keys, values));
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.dim = kv.key_dim();
+        let hash = SimHash::new(self.params, self.dim, self.seed);
+        self.hashes = Some(hash_kv_source(&hash, kv, pool::global()));
         self.hash = Some(hash);
-        self.keys = Some(keys.clone());
+        let n = kv.n_tokens();
+        self.keys.clear();
+        self.keys.reserve(n * self.dim);
+        for t in 0..n {
+            self.keys.extend_from_slice(kv.key(t));
+        }
+    }
+
+    fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
+        let hash = self.hash.as_ref().ok_or(SelectorError::NotBuilt)?;
+        let buckets = hash.hash_one(key);
+        self.hashes
+            .as_mut()
+            .ok_or(SelectorError::NotBuilt)?
+            .push(&buckets, crate::linalg::l2_norm(value));
+        self.keys.extend_from_slice(key);
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.hashes.as_ref().map(|h| h.n).unwrap_or(0)
     }
 
     /// "Selection" = the sampled candidate set, truncated to the budget
     /// by importance weight. If no candidates collide (the failure mode
     /// the paper demonstrates), only the most-recent token is returned —
     /// mirroring the original implementation's sink/recent fallback.
-    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
-        let counts = self.collision_counts(q);
-        let hashes = self.hashes.as_ref().unwrap();
-        let keys = self.keys.as_ref().unwrap();
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        let hash = self.hash.as_ref().ok_or(SelectorError::NotBuilt)?;
+        let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        sel.indices.clear();
         let n = hashes.n;
-        let mut candidates: Vec<usize> =
-            (0..n).filter(|&j| counts[j] >= self.min_matches).collect();
-        if candidates.is_empty() {
-            return vec![n - 1];
+        if n == 0 {
+            return Ok(());
         }
-        if candidates.len() <= k {
-            return candidates;
+        let k = k.max(1);
+        // Collision counts into reusable scratch (exact as f32: counts
+        // are small integers).
+        let qb = hash.hash_one(q);
+        hashes.collision_counts_into(&qb, &mut sel.scores);
+        let min_matches = self.min_matches as f32;
+        sel.indices.extend((0..n).filter(|&j| sel.scores[j] >= min_matches));
+        if sel.indices.is_empty() {
+            sel.indices.push(n - 1);
+            return Ok(());
+        }
+        if sel.indices.len() <= k {
+            return Ok(());
         }
         // Importance weights: exp(q·k_j)/p_j with p_j ∝ collision rate.
         let mut tk = TopK::new(k);
         let l = hashes.l as f32;
-        for &j in &candidates {
-            let p_j = (counts[j] as f32 / l).max(1e-6);
-            let logit = crate::linalg::dot(keys.row(j), q);
+        for &j in sel.indices.iter() {
+            let p_j = (sel.scores[j] / l).max(1e-6);
+            let logit = crate::linalg::dot(self.key_row(j), q);
             // Work in log space: log w = logit - log p_j.
             tk.push(logit - p_j.ln(), j);
         }
-        candidates = tk.into_indices();
-        candidates
+        sel.indices.clear();
+        for (j, _) in tk.into_sorted() {
+            sel.indices.push(j);
+        }
+        Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -99,6 +148,7 @@ impl TokenSelector for MagicPigSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::testing::gen;
     use crate::util::rng::Pcg64;
 
@@ -116,8 +166,8 @@ mod tests {
         keys.row_mut(10).copy_from_slice(&near);
         let vals = Matrix::gaussian(100, dim, &mut rng);
         let mut mp = MagicPigSelector::new(params(), 3);
-        mp.build(&keys, &vals);
-        let sel = mp.select(&q, 20);
+        mp.build_dense(&keys, &vals);
+        let sel = mp.select(&q, 20).unwrap();
         assert!(sel.contains(&10), "{sel:?}");
     }
 
@@ -136,8 +186,8 @@ mod tests {
         }
         let vals = Matrix::gaussian(20, dim, &mut rng);
         let mut mp = MagicPigSelector::new(LshParams { p: 10, l: 20, tau: 0.5 }, 4);
-        mp.build(&keys, &vals);
-        let sel = mp.select(&q, 10);
+        mp.build_dense(&keys, &vals);
+        let sel = mp.select(&q, 10).unwrap();
         assert_eq!(sel, vec![19], "expected fallback to last token: {sel:?}");
     }
 
@@ -156,11 +206,27 @@ mod tests {
         }
         let vals = Matrix::gaussian(50, dim, &mut rng);
         let mut mp = MagicPigSelector::new(params(), 5);
-        mp.build(&keys, &vals);
+        mp.build_dense(&keys, &vals);
         let counts = mp.collision_counts(&q);
         let n_cand = counts.iter().filter(|&&c| c >= 2).count();
         assert!(n_cand > 10, "n_cand={n_cand}");
-        let sel = mp.select(&q, 10);
+        let sel = mp.select(&q, 10).unwrap();
         assert_eq!(sel.len(), 10);
+    }
+
+    #[test]
+    fn appended_near_duplicate_becomes_candidate() {
+        let mut rng = Pcg64::seeded(6);
+        let dim = 48;
+        let q = gen::unit_vec(&mut rng, dim);
+        let keys = Matrix::gaussian(60, dim, &mut rng);
+        let vals = Matrix::gaussian(60, dim, &mut rng);
+        let mut mp = MagicPigSelector::new(params(), 3);
+        mp.build_dense(&keys, &vals);
+        let near = gen::key_with_cosine(&mut rng, &q, 0.97);
+        mp.append(&near, &rng.normal_vec(dim)).unwrap();
+        assert_eq!(mp.n_tokens(), 61);
+        let sel = mp.select(&q, 20).unwrap();
+        assert!(sel.contains(&60), "{sel:?}");
     }
 }

@@ -1,0 +1,458 @@
+//! The unified token-selection subsystem: every sparse-attention method
+//! behind one **paged-native** trait, served through a name-keyed
+//! registry.
+//!
+//! This replaces the old `baselines::TokenSelector` contract (dense
+//! `Matrix` K/V in, fresh `Vec<usize>` out, `build()` misuse panicking)
+//! with [`Selector`], whose contract is what the serving stack actually
+//! needs:
+//!
+//! * **paged-native** — [`Selector::build`] consumes any
+//!   [`KvSource`] (the zero-copy `kvcache::KvView` over the paged pool,
+//!   or a dense-matrix adapter), and [`Selector::append`] extends the
+//!   index per decoded token instead of rebuilding it;
+//! * **zero-alloc scoring** — [`Selector::select_into`] writes into a
+//!   reusable [`Selection`] (per-worker scratch via
+//!   `util::pool::with_decode_scratch`), so the decode hot path performs
+//!   no token-scale allocations; `select`/`select_batch` survive as thin
+//!   compatibility wrappers;
+//! * **registry-driven** — [`registry`] maps method names to boxed
+//!   constructors, so `EngineConfig`/the JSON server address methods by
+//!   string (`"quest"`, `"magicpig"`, ...) and every registered method
+//!   is servable over the paged decode path;
+//! * **misuse is an error, not a panic** — selecting or appending before
+//!   `build` returns [`SelectorError::NotBuilt`]; the server surfaces it
+//!   (and unknown method names) as JSON errors instead of worker panics.
+//!
+//! The methods themselves are faithful reimplementations of the
+//! published algorithms the paper compares against (Section 6):
+//! [`oracle`] (exact top-k upper bound), [`quest`] (page min/max bounds,
+//! ICML'24), [`pqcache`] (PQ ADC scoring, SIGMOD'25),
+//! [`double_sparsity`] (important-channel label cache, 2024),
+//! [`hashattention`] (Hamming signatures, ICML'25), [`magicpig`] (LSH
+//! sampling, ICLR'25) — plus SOCKET itself and hard LSH ([`socket`]).
+//!
+//! Property tests (`props`) hold every registered method to the central
+//! guarantee: selections from an index built over the paged pool —
+//! including physically non-adjacent page layouts and mid-decode
+//! appends — are **bit-identical** to the dense-matrix path.
+
+pub mod double_sparsity;
+pub mod hashattention;
+pub mod magicpig;
+pub mod oracle;
+pub mod pqcache;
+pub mod quest;
+pub mod socket;
+
+#[cfg(test)]
+mod props;
+
+pub use double_sparsity::DoubleSparsitySelector;
+pub use hashattention::HashAttentionSelector;
+pub use magicpig::MagicPigSelector;
+pub use oracle::OracleSelector;
+pub use pqcache::PqCacheSelector;
+pub use quest::QuestSelector;
+pub use socket::{HardLshSelector, SocketSelector};
+
+use crate::attention::{DenseKv, KvSource};
+use crate::linalg::Matrix;
+use crate::lsh::{KeyHashes, LshParams, SimHash};
+use crate::util::pool::{self, WorkerPool};
+use std::fmt;
+
+/// How decode attention selects tokens. `Sparse` names any method in
+/// the [`registry`] plus its sparsity budget (keep `ceil(n / sparsity)`
+/// scored tokens) — the whole per-request configuration surface.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttentionMode {
+    /// Dense attention over the whole cache (FlashAttention baseline).
+    Dense,
+    /// Sparse attention through a registered selector.
+    Sparse {
+        /// Registry method name (`"socket"`, `"quest"`, ...).
+        method: String,
+        /// Sparsity factor: keep `ceil(n / sparsity)` scored tokens.
+        sparsity: f64,
+    },
+}
+
+impl AttentionMode {
+    /// SOCKET at the given sparsity — the engine's default mode.
+    pub fn socket(sparsity: f64) -> AttentionMode {
+        AttentionMode::sparse("socket", sparsity)
+    }
+
+    /// Any registered method at the given sparsity.
+    pub fn sparse(method: impl Into<String>, sparsity: f64) -> AttentionMode {
+        AttentionMode::Sparse { method: method.into(), sparsity }
+    }
+
+    /// Stable label for stats/logs: the method name, or `"dense"`.
+    pub fn method_label(&self) -> &str {
+        match self {
+            AttentionMode::Dense => "dense",
+            AttentionMode::Sparse { method, .. } => method,
+        }
+    }
+}
+
+/// Errors of the selector API. Misuse (selecting before building, an
+/// unregistered method name) is reported, never panicked, so the
+/// serving layer can turn it into a JSON error.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SelectorError {
+    /// `select`/`append` called before `build`.
+    NotBuilt,
+    /// Method name not present in the [`registry`].
+    UnknownMethod(String),
+}
+
+impl fmt::Display for SelectorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SelectorError::NotBuilt => write!(f, "selector used before build()"),
+            SelectorError::UnknownMethod(m) => {
+                write!(f, "unknown method '{m}' (registered: {})", method_names().join(", "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for SelectorError {}
+
+/// Reusable selection output + scratch for [`Selector::select_into`]:
+/// `indices` receives the chosen token ids (descending score), while
+/// `scores` and `aux` are method-specific working space (key scores,
+/// soft-hash bucket tables, ADC tables, reduced queries...). Buffer
+/// contents are unspecified on entry; capacity persists across calls,
+/// so a per-worker `Selection` (see `util::pool::DecodeScratch`) makes
+/// repeated scoring allocation-free at token scale.
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    /// Selected token indices, highest score first.
+    pub indices: Vec<usize>,
+    /// Per-key score scratch.
+    pub scores: Vec<f32>,
+    /// Method-specific float scratch.
+    pub aux: Vec<f32>,
+}
+
+/// A sparse-attention token-selection method, paged-native.
+///
+/// Lifecycle: construct (via [`registry`] or a concrete `new`), `build`
+/// once at prefill from any [`KvSource`], then `append` each decoded
+/// token's (key, value) to extend the index in place — indexes are
+/// *extended*, never rebuilt, on the decode path. Rebuilding via
+/// `build` resets the index to the new source.
+///
+/// Selectors are `Send + Sync` (they hold only plain index data), so
+/// the serving layer scores many queries/sequences across the shared
+/// worker pool.
+pub trait Selector: Send + Sync {
+    /// Human-readable method name (bench tables, stats labels).
+    fn name(&self) -> &'static str;
+
+    /// Build the per-context index (hashes, page min/max, PQ codes,
+    /// channel stats...) from the KV source. Called once at prefill;
+    /// data-dependent calibration (PQ codebooks, important channels)
+    /// happens here and is *frozen* — `append` only extends per-token
+    /// state.
+    fn build(&mut self, kv: &dyn KvSource);
+
+    /// Extend the index with one decoded token's key/value without
+    /// rebuilding. `Err(NotBuilt)` before `build`.
+    fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError>;
+
+    /// Number of tokens currently indexed (prefill + appends).
+    fn n_tokens(&self) -> usize;
+
+    /// Select up to `k` token indices for query `q` into `sel.indices`
+    /// (descending score), using `sel`'s buffers as scratch — no
+    /// token-scale allocation. `Err(NotBuilt)` before `build`.
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError>;
+
+    /// Additional index memory, bits per token (the paper's "Mem"
+    /// column). Reported by benches.
+    fn bits_per_token(&self) -> usize;
+
+    /// Compatibility wrapper: build from dense K/V matrices.
+    fn build_dense(&mut self, keys: &Matrix, values: &Matrix) {
+        self.build(&DenseKv::new(keys, values));
+    }
+
+    /// Compatibility wrapper over [`Selector::select_into`], returning
+    /// a fresh allocation per call.
+    fn select(&self, q: &[f32], k: usize) -> Result<Vec<usize>, SelectorError> {
+        let mut sel = Selection::default();
+        self.select_into(q, k, &mut sel)?;
+        Ok(sel.indices)
+    }
+
+    /// Batch compatibility wrapper: select for many queries across the
+    /// shared worker pool; results are identical to per-query
+    /// [`Selector::select`] calls.
+    fn select_batch(&self, queries: &[Vec<f32>], k: usize) -> Result<Vec<Vec<usize>>, SelectorError> {
+        pool::global().map(queries.len(), |i| self.select(&queries[i], k)).into_iter().collect()
+    }
+}
+
+/// Constructor inputs shared by every registered method. Methods use
+/// what applies: `lsh` drives the hash-table selectors (socket, lsh),
+/// `dim`/`seed` everything data- or randomness-dependent.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorConfig {
+    /// Key/value head dimension.
+    pub dim: usize,
+    /// Randomness seed (hyperplanes, k-means init...).
+    pub seed: u64,
+    /// LSH geometry for the hash-based selectors.
+    pub lsh: LshParams,
+}
+
+impl SelectorConfig {
+    /// Paper-default config: SOCKET's (P=10, L=60, τ=0.5) geometry.
+    pub fn new(dim: usize, seed: u64) -> SelectorConfig {
+        SelectorConfig { dim, seed, lsh: LshParams::paper_default() }
+    }
+
+    /// Override the LSH geometry (hard-LSH budget sweeps etc.).
+    pub fn with_lsh(mut self, lsh: LshParams) -> SelectorConfig {
+        self.lsh = lsh;
+        self
+    }
+}
+
+/// One registry row: canonical method name, accepted aliases, and the
+/// boxed constructor applying the paper's recommended settings.
+pub struct MethodSpec {
+    /// Canonical registry key (lowercase).
+    pub name: &'static str,
+    /// Additional accepted spellings (matched case-insensitively, like
+    /// the canonical name).
+    pub aliases: &'static [&'static str],
+    /// Construct the selector for a config.
+    pub build: fn(&SelectorConfig) -> Box<dyn Selector>,
+}
+
+fn build_socket(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    Box::new(SocketSelector::new(cfg.lsh, cfg.dim, cfg.seed))
+}
+
+fn build_hard_lsh(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    Box::new(HardLshSelector::new(cfg.lsh, cfg.dim, cfg.seed))
+}
+
+fn build_quest(_cfg: &SelectorConfig) -> Box<dyn Selector> {
+    // Quest's default: 16-token pages.
+    Box::new(QuestSelector::new(16))
+}
+
+fn build_pqcache(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    // 256 bits/token at d=128: m=32 subquantizers x 8-bit codes; m
+    // scales with dim. PQ requires dim % m == 0, so step down from the
+    // target to the nearest divisor (m=1 always divides) — a paged
+    // request must never be able to panic the scheduler on an awkward
+    // head dimension.
+    let mut m = (cfg.dim / 4).clamp(1, 32);
+    while cfg.dim % m != 0 {
+        m -= 1;
+    }
+    Box::new(PqCacheSelector::new(m, 8, cfg.seed))
+}
+
+fn build_double_sparsity(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    // d/4 important channels.
+    Box::new(DoubleSparsitySelector::new((cfg.dim / 4).max(1)))
+}
+
+fn build_hashattention(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    // 128-bit signatures (Table 1).
+    Box::new(HashAttentionSelector::new(128, cfg.seed))
+}
+
+fn build_magicpig(cfg: &SelectorConfig) -> Box<dyn Selector> {
+    // K=10 planes x L=100 tables (≈1024 bits/token accounting).
+    Box::new(MagicPigSelector::new(LshParams { p: 10, l: 100, tau: 0.5 }, cfg.seed))
+}
+
+fn build_oracle(_cfg: &SelectorConfig) -> Box<dyn Selector> {
+    Box::new(OracleSelector::new(false))
+}
+
+static REGISTRY: &[MethodSpec] = &[
+    MethodSpec { name: "socket", aliases: &["soft"], build: build_socket },
+    MethodSpec { name: "lsh", aliases: &["hardlsh", "hard_lsh"], build: build_hard_lsh },
+    MethodSpec { name: "quest", aliases: &[], build: build_quest },
+    MethodSpec { name: "pqcache", aliases: &["pq"], build: build_pqcache },
+    MethodSpec {
+        name: "double_sparsity",
+        aliases: &["ds", "double-sparsity"],
+        build: build_double_sparsity,
+    },
+    MethodSpec { name: "hashattention", aliases: &["hashattn"], build: build_hashattention },
+    MethodSpec { name: "magicpig", aliases: &[], build: build_magicpig },
+    MethodSpec { name: "oracle", aliases: &[], build: build_oracle },
+];
+
+/// Every registered method, in sweep order. Experiment drivers and the
+/// per-method serving bench iterate this instead of hardcoding lists.
+pub fn registry() -> &'static [MethodSpec] {
+    REGISTRY
+}
+
+/// Resolve a method name (canonical or alias, case-insensitive).
+pub fn lookup(name: &str) -> Result<&'static MethodSpec, SelectorError> {
+    let needle = name.trim();
+    for spec in REGISTRY {
+        if spec.name.eq_ignore_ascii_case(needle)
+            || spec.aliases.iter().any(|a| a.eq_ignore_ascii_case(needle))
+        {
+            return Ok(spec);
+        }
+    }
+    Err(SelectorError::UnknownMethod(needle.to_string()))
+}
+
+/// Construct a selector by registered name.
+pub fn build_named(name: &str, cfg: &SelectorConfig) -> Result<Box<dyn Selector>, SelectorError> {
+    Ok((lookup(name)?.build)(cfg))
+}
+
+/// Canonical names of every registered method.
+pub fn method_names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+/// Algorithm 1 over any KV source: hash every key into the `L` SimHash
+/// tables (fanned across the worker pool) and cache value norms —
+/// bit-identical to `SimHash::hash_keys` over the equivalent dense
+/// matrices, but reading keys straight out of the paged pool.
+pub fn hash_kv_source(hash: &SimHash, kv: &dyn KvSource, pool: &WorkerPool) -> KeyHashes {
+    assert_eq!(kv.key_dim(), hash.dim, "key dim {} != hash dim {}", kv.key_dim(), hash.dim);
+    let n = kv.n_tokens();
+    let l = hash.params.l;
+    let mut bucket_ids = vec![0u16; n * l];
+    pool.fill_rows(&mut bucket_ids, l, |j, row| {
+        let key = kv.key(j);
+        for (t, slot) in row.iter_mut().enumerate() {
+            *slot = hash.bucket_of(t, key);
+        }
+    });
+    let value_norms = (0..n).map(|t| crate::linalg::l2_norm(kv.value(t))).collect();
+    KeyHashes { n, l, bucket_ids, value_norms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let mut names = method_names();
+        assert_eq!(names.len(), 8);
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 8, "duplicate registry names");
+        for spec in registry() {
+            assert!(lookup(spec.name).is_ok());
+            for alias in spec.aliases {
+                assert_eq!(lookup(alias).unwrap().name, spec.name, "alias {alias}");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_maps_display_names() {
+        // The experiment tables' display names must all resolve.
+        for display in ["SOCKET", "LSH", "Quest", "PQcache", "DS", "HashAttn", "MagicPig", "Oracle"]
+        {
+            assert!(lookup(display).is_ok(), "display name {display}");
+        }
+        assert_eq!(lookup(" quest ").unwrap().name, "quest");
+    }
+
+    #[test]
+    fn unknown_method_error_lists_registry() {
+        let err = lookup("definitely-not-a-method").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown method"), "{msg}");
+        assert!(msg.contains("socket") && msg.contains("quest"), "{msg}");
+        assert_eq!(err, SelectorError::UnknownMethod("definitely-not-a-method".into()));
+    }
+
+    #[test]
+    fn build_named_constructs_every_method() {
+        let cfg = SelectorConfig::new(16, 7);
+        for spec in registry() {
+            let s = build_named(spec.name, &cfg).unwrap();
+            assert!(!s.name().is_empty());
+            assert_eq!(s.n_tokens(), 0, "{} starts empty", spec.name);
+        }
+        assert!(build_named("nope", &cfg).is_err());
+    }
+
+    #[test]
+    fn pqcache_builds_on_awkward_dims() {
+        // (dim/4).clamp(1,32) is not always a divisor of dim (144 → 32,
+        // 9 → 2); the registry constructor must step down to a divisor
+        // so a per-request pqcache can never panic prefill.
+        let mut rng = Pcg64::seeded(11);
+        for dim in [144usize, 9, 20, 132, 128, 1] {
+            let mut s = build_named("pqcache", &SelectorConfig::new(dim, 3)).unwrap();
+            let keys = Matrix::gaussian(24, dim, &mut rng);
+            let vals = Matrix::gaussian(24, dim, &mut rng);
+            s.build(&DenseKv::new(&keys, &vals));
+            assert_eq!(s.n_tokens(), 24, "dim {dim}");
+            assert!(!s.select(&rng.normal_vec(dim), 4).unwrap().is_empty(), "dim {dim}");
+        }
+    }
+
+    #[test]
+    fn every_method_errors_before_build() {
+        let cfg = SelectorConfig::new(16, 3);
+        let q = vec![0.5f32; 16];
+        for spec in registry() {
+            let mut s = (spec.build)(&cfg);
+            let mut sel = Selection::default();
+            assert_eq!(
+                s.select_into(&q, 4, &mut sel),
+                Err(SelectorError::NotBuilt),
+                "{} select before build",
+                spec.name
+            );
+            assert_eq!(s.select(&q, 4), Err(SelectorError::NotBuilt), "{}", spec.name);
+            assert_eq!(
+                s.append(&q, &q),
+                Err(SelectorError::NotBuilt),
+                "{} append before build",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn attention_mode_labels() {
+        assert_eq!(AttentionMode::Dense.method_label(), "dense");
+        assert_eq!(AttentionMode::socket(8.0).method_label(), "socket");
+        assert_eq!(
+            AttentionMode::sparse("quest", 10.0),
+            AttentionMode::Sparse { method: "quest".into(), sparsity: 10.0 }
+        );
+    }
+
+    #[test]
+    fn hash_kv_source_matches_dense_hashing() {
+        let mut rng = Pcg64::seeded(5);
+        let keys = Matrix::gaussian(50, 12, &mut rng);
+        let vals = Matrix::gaussian(50, 12, &mut rng);
+        let hash = SimHash::new(LshParams { p: 6, l: 9, tau: 0.5 }, 12, 11);
+        let want = hash.hash_keys(&keys, &vals);
+        let got = hash_kv_source(&hash, &DenseKv::new(&keys, &vals), pool::global());
+        assert_eq!(want.bucket_ids, got.bucket_ids);
+        assert_eq!(want.value_norms, got.value_norms);
+        assert_eq!(got.n, 50);
+    }
+}

@@ -1,0 +1,184 @@
+//! Oracle top-k — exact `q·k_j` (optionally value-norm weighted)
+//! selection. The retrieval upper bound ("oracle-top-k" in Table 10);
+//! also serves as the ground truth for Fig. 2's ranking metrics.
+
+use super::{Selection, Selector, SelectorError};
+use crate::attention::KvSource;
+use crate::linalg::{dot, l2_norm, top_k_into};
+
+/// Exact top-k selector. `value_aware = true` ranks by `(q·k_j)·‖v_j‖₂`,
+/// the hindsight-optimal criterion of [13] cited in the introduction.
+/// The index is simply the keys themselves (copied out of the source)
+/// plus cached value norms, so `append` is a push.
+pub struct OracleSelector {
+    pub value_aware: bool,
+    dim: usize,
+    /// Indexed keys, row-major n x dim.
+    keys: Vec<f32>,
+    value_norms: Vec<f32>,
+    built: bool,
+}
+
+impl OracleSelector {
+    pub fn new(value_aware: bool) -> OracleSelector {
+        OracleSelector { value_aware, dim: 0, keys: Vec::new(), value_norms: Vec::new(), built: false }
+    }
+
+    fn n(&self) -> usize {
+        self.value_norms.len()
+    }
+
+    fn score_of(&self, j: usize, q: &[f32]) -> f32 {
+        let s = dot(&self.keys[j * self.dim..(j + 1) * self.dim], q);
+        if self.value_aware {
+            s * self.value_norms[j]
+        } else {
+            s
+        }
+    }
+
+    /// Ranked scores for every key (used as Fig. 2 ground truth).
+    /// Panics if `build` was not called — use the [`Selector`] API for
+    /// error-reporting behaviour.
+    pub fn scores(&self, q: &[f32]) -> Vec<f32> {
+        assert!(self.built, "build() not called");
+        (0..self.n()).map(|j| self.score_of(j, q)).collect()
+    }
+
+    /// Full descending ranking of all keys (panics before `build`,
+    /// like [`OracleSelector::scores`]).
+    pub fn ranking(&self, q: &[f32]) -> Vec<usize> {
+        let scores = self.scores(q);
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        idx
+    }
+}
+
+impl Selector for OracleSelector {
+    fn name(&self) -> &'static str {
+        if self.value_aware {
+            "Oracle-VA"
+        } else {
+            "Oracle"
+        }
+    }
+
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.dim = kv.key_dim();
+        let n = kv.n_tokens();
+        self.keys.clear();
+        self.keys.reserve(n * self.dim);
+        self.value_norms.clear();
+        self.value_norms.reserve(n);
+        for t in 0..n {
+            self.keys.extend_from_slice(kv.key(t));
+            self.value_norms.push(l2_norm(kv.value(t)));
+        }
+        self.built = true;
+    }
+
+    fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        debug_assert_eq!(key.len(), self.dim);
+        self.keys.extend_from_slice(key);
+        self.value_norms.push(l2_norm(value));
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.n()
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        sel.indices.clear();
+        if self.n() == 0 {
+            return Ok(());
+        }
+        sel.scores.clear();
+        sel.scores.extend((0..self.n()).map(|j| self.score_of(j, q)));
+        top_k_into(&sel.scores, k.max(1), &mut sel.indices);
+        Ok(())
+    }
+
+    fn bits_per_token(&self) -> usize {
+        // Reads full keys: d * 16 bits (bf16 in the paper's accounting).
+        if self.built {
+            self.dim * 16
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn oracle_finds_planted_key() {
+        let mut rng = Pcg64::seeded(1);
+        let mut keys = Matrix::gaussian(100, 16, &mut rng);
+        let vals = Matrix::gaussian(100, 16, &mut rng);
+        let q = rng.normal_vec(16);
+        for c in 0..16 {
+            keys.set(42, c, 5.0 * q[c]); // plant a dominant key
+        }
+        let mut o = OracleSelector::new(false);
+        o.build_dense(&keys, &vals);
+        let sel = o.select(&q, 5).unwrap();
+        assert_eq!(sel[0], 42);
+    }
+
+    #[test]
+    fn value_aware_reranks() {
+        let mut keys = Matrix::zeros(2, 2);
+        keys.set(0, 0, 1.0);
+        keys.set(1, 0, 0.9); // slightly lower dot product
+        let mut vals = Matrix::zeros(2, 2);
+        vals.set(0, 0, 1.0);
+        vals.set(1, 0, 10.0); // much larger value norm
+        let q = [1.0, 0.0];
+        let mut plain = OracleSelector::new(false);
+        plain.build_dense(&keys, &vals);
+        assert_eq!(plain.select(&q, 1).unwrap(), vec![0]);
+        let mut va = OracleSelector::new(true);
+        va.build_dense(&keys, &vals);
+        assert_eq!(va.select(&q, 1).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn ranking_is_total_order() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(30, 8, &mut rng);
+        let vals = Matrix::gaussian(30, 8, &mut rng);
+        let mut o = OracleSelector::new(true);
+        o.build_dense(&keys, &vals);
+        let r = o.ranking(&rng.normal_vec(8));
+        let mut sorted = r.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn append_extends_the_index() {
+        let mut rng = Pcg64::seeded(3);
+        let keys = Matrix::gaussian(10, 8, &mut rng);
+        let vals = Matrix::gaussian(10, 8, &mut rng);
+        let mut o = OracleSelector::new(false);
+        o.build_dense(&keys, &vals);
+        let q = rng.normal_vec(8);
+        // Append a key that dominates every built one.
+        let planted: Vec<f32> = q.iter().map(|x| 7.0 * x).collect();
+        o.append(&planted, &rng.normal_vec(8)).unwrap();
+        assert_eq!(o.n_tokens(), 11);
+        assert_eq!(o.select(&q, 1).unwrap(), vec![10]);
+    }
+}

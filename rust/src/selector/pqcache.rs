@@ -7,8 +7,14 @@
 //! products and scores every key by summing table lookups — the standard
 //! IVF-free PQ retrieval PQCache uses, including its data-dependent
 //! (clustering) TTFT cost which Fig. 3a measures.
+//!
+//! Paged-native semantics: the codebooks are calibrated over the
+//! *prefill* keys and frozen (exactly PQCache's offline clustering);
+//! each decoded token is encoded against the frozen codebooks and its
+//! codes appended — no re-clustering on the decode path.
 
-use super::TokenSelector;
+use super::{Selection, Selector, SelectorError};
+use crate::attention::KvSource;
 use crate::linalg::{Matrix, TopK};
 use crate::util::rng::Pcg64;
 
@@ -27,6 +33,7 @@ pub struct PqCacheSelector {
     /// Per key: m codes.
     codes: Vec<u8>,
     n: usize,
+    built: bool,
 }
 
 impl PqCacheSelector {
@@ -43,6 +50,7 @@ impl PqCacheSelector {
             codebooks: Vec::new(),
             codes: Vec::new(),
             n: 0,
+            built: false,
         }
     }
 
@@ -101,62 +109,110 @@ impl PqCacheSelector {
         }
         centroids
     }
+
+    /// Nearest centroid of sub-vector `x` in sub-space `s` (the PQ
+    /// encoder, shared by build and append).
+    fn nearest_centroid(&self, s: usize, x: &[f32]) -> u8 {
+        let cb = &self.codebooks[s];
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.ncentroids() {
+            let cent = cb.row(c);
+            let mut dist = 0.0f32;
+            for i in 0..self.sub_dim {
+                let t = x[i] - cent[i];
+                dist += t * t;
+            }
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        best as u8
+    }
 }
 
-impl TokenSelector for PqCacheSelector {
+impl Selector for PqCacheSelector {
     fn name(&self) -> &'static str {
         "PQcache"
     }
 
-    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
-        self.n = keys.rows;
-        self.dim = keys.cols;
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.n = kv.n_tokens();
+        self.dim = kv.key_dim();
         assert!(self.dim % self.m == 0, "dim {} not divisible by m {}", self.dim, self.m);
         self.sub_dim = self.dim / self.m;
         self.codebooks.clear();
-        self.codes = vec![0u8; self.n * self.m];
+        if self.n == 0 {
+            // Nothing to calibrate on: zero codebooks keep appends and
+            // selection well-defined (every code quantizes to 0).
+            for _ in 0..self.m {
+                self.codebooks.push(Matrix::zeros(self.ncentroids(), self.sub_dim));
+            }
+            self.codes.clear();
+            self.built = true;
+            return;
+        }
         let mut rng = Pcg64::new(self.seed, 17);
+        // Calibration: learn every sub-space codebook over the prefill
+        // keys (same rng stream order as before the refactor).
         for s in 0..self.m {
-            // Slice sub-vectors.
             let mut sub = vec![0.0f32; self.n * self.sub_dim];
             for j in 0..self.n {
-                let row = keys.row(j);
+                let row = kv.key(j);
                 sub[j * self.sub_dim..(j + 1) * self.sub_dim]
                     .copy_from_slice(&row[s * self.sub_dim..(s + 1) * self.sub_dim]);
             }
             let cb = self.kmeans(&sub, self.n, &mut rng);
-            // Encode.
-            for j in 0..self.n {
-                let x = &sub[j * self.sub_dim..(j + 1) * self.sub_dim];
-                let mut best = 0usize;
-                let mut best_d = f32::INFINITY;
-                for c in 0..self.ncentroids() {
-                    let cent = cb.row(c);
-                    let mut dist = 0.0f32;
-                    for i in 0..self.sub_dim {
-                        let t = x[i] - cent[i];
-                        dist += t * t;
-                    }
-                    if dist < best_d {
-                        best_d = dist;
-                        best = c;
-                    }
-                }
-                self.codes[j * self.m + s] = best as u8;
-            }
             self.codebooks.push(cb);
         }
+        // Encode every prefill key against the frozen codebooks.
+        let mut codes = vec![0u8; self.n * self.m];
+        for j in 0..self.n {
+            let row = kv.key(j);
+            for s in 0..self.m {
+                codes[j * self.m + s] =
+                    self.nearest_centroid(s, &row[s * self.sub_dim..(s + 1) * self.sub_dim]);
+            }
+        }
+        self.codes = codes;
+        self.built = true;
     }
 
-    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
-        // ADC tables: m x ncentroids inner products.
+    fn append(&mut self, key: &[f32], _value: &[f32]) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        debug_assert_eq!(key.len(), self.dim);
+        for s in 0..self.m {
+            let code = self.nearest_centroid(s, &key[s * self.sub_dim..(s + 1) * self.sub_dim]);
+            self.codes.push(code);
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.n
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        sel.indices.clear();
+        if self.n == 0 {
+            return Ok(());
+        }
+        // ADC tables: m x ncentroids inner products, in reusable scratch.
         let nc = self.ncentroids();
-        let mut adc = vec![0.0f32; self.m * nc];
+        sel.aux.clear();
+        sel.aux.resize(self.m * nc, 0.0);
         for s in 0..self.m {
             let qs = &q[s * self.sub_dim..(s + 1) * self.sub_dim];
             let cb = &self.codebooks[s];
             for c in 0..nc {
-                adc[s * nc + c] = crate::linalg::dot(qs, cb.row(c));
+                sel.aux[s * nc + c] = crate::linalg::dot(qs, cb.row(c));
             }
         }
         // Score all keys by table lookups.
@@ -164,11 +220,14 @@ impl TokenSelector for PqCacheSelector {
         for j in 0..self.n {
             let mut score = 0.0f32;
             for s in 0..self.m {
-                score += adc[s * nc + self.codes[j * self.m + s] as usize];
+                score += sel.aux[s * nc + self.codes[j * self.m + s] as usize];
             }
             tk.push(score, j);
         }
-        tk.into_indices()
+        for (i, _) in tk.into_sorted() {
+            sel.indices.push(i);
+        }
+        Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -190,8 +249,8 @@ mod tests {
             keys.set(100, c, 4.0 * q[c]);
         }
         let mut sel = PqCacheSelector::new(8, 4, 7);
-        sel.build(&keys, &vals);
-        let chosen = sel.select(&q, 16);
+        sel.build_dense(&keys, &vals);
+        let chosen = sel.select(&q, 16).unwrap();
         assert!(chosen.contains(&100), "planted key not retrieved: {chosen:?}");
     }
 
@@ -211,7 +270,7 @@ mod tests {
         let keys = Matrix::gaussian(200, 16, &mut rng);
         let vals = Matrix::gaussian(200, 16, &mut rng);
         let mut sel = PqCacheSelector::new(4, 5, 3);
-        sel.build(&keys, &vals);
+        sel.build_dense(&keys, &vals);
         let q = rng.normal_vec(16);
         // Correlate true dot with PQ score over all keys.
         let nc = sel.ncentroids();
@@ -243,8 +302,28 @@ mod tests {
         let keys = Matrix::gaussian(5, 8, &mut rng);
         let vals = Matrix::gaussian(5, 8, &mut rng);
         let mut sel = PqCacheSelector::new(2, 6, 1);
-        sel.build(&keys, &vals);
-        let chosen = sel.select(&rng.normal_vec(8), 3);
+        sel.build_dense(&keys, &vals);
+        let chosen = sel.select(&rng.normal_vec(8), 3).unwrap();
         assert_eq!(chosen.len(), 3);
+    }
+
+    #[test]
+    fn append_encodes_against_frozen_codebooks() {
+        // The append path must encode exactly like build's encoder: a
+        // token appended after build gets the same codes it would have
+        // gotten had it been encoded at build time with these codebooks.
+        let mut rng = Pcg64::seeded(9);
+        let keys = Matrix::gaussian(60, 16, &mut rng);
+        let vals = Matrix::gaussian(60, 16, &mut rng);
+        let mut sel = PqCacheSelector::new(4, 4, 5);
+        sel.build_dense(&keys, &vals);
+        let extra = rng.normal_vec(16);
+        sel.append(&extra, &rng.normal_vec(16)).unwrap();
+        assert_eq!(sel.n_tokens(), 61);
+        let mut want = Vec::new();
+        for s in 0..sel.m {
+            want.push(sel.nearest_centroid(s, &extra[s * sel.sub_dim..(s + 1) * sel.sub_dim]));
+        }
+        assert_eq!(&sel.codes[60 * sel.m..61 * sel.m], want.as_slice());
     }
 }

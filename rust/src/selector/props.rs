@@ -1,0 +1,230 @@
+//! Cross-method equivalence properties — the acceptance gate of the
+//! selector redesign: for **every** registered method, selections from
+//! an index built in place over the paged KV pool are **bit-identical**
+//! to the dense-matrix path, including
+//!
+//! * page tables whose physical pages are non-adjacent (a decoy
+//!   sequence interleaves allocations), and
+//! * mid-decode appends (index built on a prefix, extended per token).
+//!
+//! Data-agnostic indexes (hashes, signatures, page min/max, exact keys)
+//! additionally satisfy `prefix build + appends == full rebuild`. The
+//! calibration-frozen methods (PQCache codebooks, Double Sparsity
+//! channels — learned at prefill by design) satisfy the serving-level
+//! guarantee instead: the append path is invariant to whether the
+//! prefix index came from dense matrices or the paged pool.
+
+use super::*;
+use crate::kvcache::{PageTable, PagedKvCache, PAGE_TOKENS};
+use crate::prop_assert;
+use crate::testing::{check, gen, PropConfig};
+use crate::util::rng::Pcg64;
+
+/// Small-but-nontrivial LSH geometry for the hash-based methods (keeps
+/// the soft-hash tables 32 buckets wide so debug-profile cases stay
+/// fast).
+fn test_cfg(dim: usize, seed: u64) -> SelectorConfig {
+    SelectorConfig::new(dim, seed).with_lsh(LshParams { p: 5, l: 8, tau: 0.5 })
+}
+
+/// Append `keys`/`values` to `cache` under `table`, claiming decoy
+/// pages at random page boundaries so the sequence's pages end up
+/// physically non-adjacent — the layout a busy shared pool produces.
+fn append_with_gaps(
+    cache: &mut PagedKvCache,
+    table: &mut PageTable,
+    keys: &Matrix,
+    values: &Matrix,
+    rng: &mut Pcg64,
+) {
+    let mut decoy = PageTable::default();
+    let filler = vec![0.0f32; keys.cols];
+    for t in 0..keys.rows {
+        assert!(cache.append(table, keys.row(t), values.row(t)));
+        if t % PAGE_TOKENS == PAGE_TOKENS - 1 && rng.next_f64() < 0.5 {
+            for _ in 0..PAGE_TOKENS {
+                if cache.free_pages() > PagedKvCache::pages_for(keys.rows - t) + 1 {
+                    assert!(cache.append(&mut decoy, &filler, &filler));
+                }
+            }
+        }
+    }
+}
+
+/// Random K/V plus a paged copy with a gappy layout.
+fn random_kv(rng: &mut Pcg64, n: usize, dim: usize) -> (Matrix, Matrix, PagedKvCache, PageTable) {
+    let keys = Matrix::gaussian(n, dim, rng);
+    let values = Matrix::gaussian(n, dim, rng);
+    let mut cache = PagedKvCache::new(2 * PagedKvCache::pages_for(n) + 8, dim);
+    let mut table = PageTable::default();
+    append_with_gaps(&mut cache, &mut table, &keys, &values, rng);
+    (keys, values, cache, table)
+}
+
+#[test]
+fn prop_every_selector_paged_build_matches_dense() {
+    check("selector-paged-vs-dense", PropConfig { cases: 12, seed: 0x5E1EC7 }, |rng, case| {
+        let dim = 4 * gen::size(rng, 2, 8); // 8..=32, divisible by PQ's m
+        let n = gen::size(rng, 1, 120);
+        let (keys, values, cache, table) = random_kv(rng, n, dim);
+        let q = rng.normal_vec(dim);
+        let k = 1 + rng.below_usize(n);
+        for spec in registry() {
+            let cfg = test_cfg(dim, 0xA11CE ^ case as u64);
+            let mut dense = (spec.build)(&cfg);
+            let mut paged = (spec.build)(&cfg);
+            dense.build(&DenseKv::new(&keys, &values));
+            paged.build(&cache.view(&table));
+            let a = dense.select(&q, k).expect("built");
+            let b = paged.select(&q, k).expect("built");
+            prop_assert!(
+                a == b,
+                "{}: dense {:?} != paged {:?} (n={n} dim={dim} k={k})",
+                spec.name,
+                a,
+                b
+            );
+            prop_assert!(
+                dense.n_tokens() == n && paged.n_tokens() == n,
+                "{}: n_tokens {} / {} != {n}",
+                spec.name,
+                dense.n_tokens(),
+                paged.n_tokens()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Methods whose index construction is order-compatible with appends:
+/// building on a prefix and appending the rest is *exactly* a full
+/// rebuild (hashes/signatures are per-token, Quest's min/max folds in
+/// token order, Oracle/MagicPig store keys verbatim).
+const APPEND_REBUILD_EXACT: [&str; 6] =
+    ["socket", "lsh", "quest", "hashattention", "magicpig", "oracle"];
+
+#[test]
+fn prop_incremental_append_matches_full_rebuild() {
+    check("selector-append-vs-rebuild", PropConfig { cases: 12, seed: 0xAB5EED }, |rng, case| {
+        let dim = 4 * gen::size(rng, 2, 8);
+        let n0 = gen::size(rng, 1, 80);
+        let extra = gen::size(rng, 1, 40);
+        let n = n0 + extra;
+        let keys = Matrix::gaussian(n, dim, rng);
+        let values = Matrix::gaussian(n, dim, rng);
+        // Paged copy of the *prefix* only, gappy layout.
+        let prefix_k = Matrix::from_vec(n0, dim, keys.data[..n0 * dim].to_vec());
+        let prefix_v = Matrix::from_vec(n0, dim, values.data[..n0 * dim].to_vec());
+        let mut cache = PagedKvCache::new(2 * PagedKvCache::pages_for(n0) + 8, dim);
+        let mut table = PageTable::default();
+        append_with_gaps(&mut cache, &mut table, &prefix_k, &prefix_v, rng);
+        let q = rng.normal_vec(dim);
+        let k = 1 + rng.below_usize(n);
+        for name in APPEND_REBUILD_EXACT {
+            let spec = lookup(name).expect("registered");
+            let cfg = test_cfg(dim, 0xBEE5 ^ case as u64);
+            let mut inc = (spec.build)(&cfg);
+            inc.build(&cache.view(&table));
+            for t in n0..n {
+                inc.append(keys.row(t), values.row(t)).expect("built");
+            }
+            let mut full = (spec.build)(&cfg);
+            full.build(&DenseKv::new(&keys, &values));
+            let a = inc.select(&q, k).expect("built");
+            let b = full.select(&q, k).expect("built");
+            prop_assert!(
+                a == b,
+                "{name}: paged-prefix+append {:?} != full rebuild {:?} (n0={n0} n={n} k={k})",
+                a,
+                b
+            );
+            prop_assert!(inc.n_tokens() == n, "{name}: n_tokens {}", inc.n_tokens());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_append_path_is_source_invariant_for_every_method() {
+    // Including the calibration-frozen methods: whatever the prefix was
+    // built from (dense matrices or gappy paged views), the extended
+    // index selects identically.
+    check("selector-append-source-invariance", PropConfig { cases: 10, seed: 0xF0D }, |rng, case| {
+        let dim = 4 * gen::size(rng, 2, 8);
+        let n0 = 1 + rng.below_usize(80);
+        let extra = 1 + rng.below_usize(30);
+        let prefix_k = Matrix::gaussian(n0, dim, rng);
+        let prefix_v = Matrix::gaussian(n0, dim, rng);
+        let mut cache = PagedKvCache::new(2 * PagedKvCache::pages_for(n0) + 8, dim);
+        let mut table = PageTable::default();
+        append_with_gaps(&mut cache, &mut table, &prefix_k, &prefix_v, rng);
+        let appended: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..extra).map(|_| (rng.normal_vec(dim), rng.normal_vec(dim))).collect();
+        let q = rng.normal_vec(dim);
+        let k = 1 + rng.below_usize(n0 + extra);
+        for spec in registry() {
+            let cfg = test_cfg(dim, 0xDEC0 ^ case as u64);
+            let mut from_dense = (spec.build)(&cfg);
+            from_dense.build(&DenseKv::new(&prefix_k, &prefix_v));
+            let mut from_paged = (spec.build)(&cfg);
+            from_paged.build(&cache.view(&table));
+            for (key, value) in appended.iter() {
+                from_dense.append(key, value).expect("built");
+                from_paged.append(key, value).expect("built");
+            }
+            let a = from_dense.select(&q, k).expect("built");
+            let b = from_paged.select(&q, k).expect("built");
+            prop_assert!(
+                a == b,
+                "{}: dense-prefix {:?} != paged-prefix {:?} (n0={n0} extra={extra} k={k})",
+                spec.name,
+                a,
+                b
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn select_into_ignores_stale_scratch() {
+    // select_into must fully own its buffers: dirty scratch from a
+    // previous (different) selector or query must not leak into the
+    // result, and capacity reuse must not change selections.
+    let mut rng = Pcg64::seeded(0x51A7E);
+    let dim = 16;
+    let n = 64;
+    let keys = Matrix::gaussian(n, dim, &mut rng);
+    let values = Matrix::gaussian(n, dim, &mut rng);
+    let q = rng.normal_vec(dim);
+    for spec in registry() {
+        let cfg = test_cfg(dim, 3);
+        let mut s = (spec.build)(&cfg);
+        s.build(&DenseKv::new(&keys, &values));
+        let want = s.select(&q, 9).expect("built");
+        let mut sel = Selection {
+            indices: vec![usize::MAX; 37],
+            scores: vec![f32::NEG_INFINITY; 5],
+            aux: vec![9.99; 11],
+        };
+        s.select_into(&q, 9, &mut sel).expect("built");
+        assert_eq!(sel.indices, want, "{} first reuse", spec.name);
+        // Second call on the now-warm buffers.
+        s.select_into(&q, 9, &mut sel).expect("built");
+        assert_eq!(sel.indices, want, "{} second reuse", spec.name);
+    }
+}
+
+#[test]
+fn empty_context_selects_nothing_for_every_method() {
+    let keys = Matrix::zeros(0, 8);
+    let values = Matrix::zeros(0, 8);
+    let q = vec![1.0f32; 8];
+    for spec in registry() {
+        let cfg = test_cfg(8, 1);
+        let mut s = (spec.build)(&cfg);
+        s.build(&DenseKv::new(&keys, &values));
+        assert_eq!(s.n_tokens(), 0, "{}", spec.name);
+        assert_eq!(s.select(&q, 4).expect("built"), Vec::<usize>::new(), "{}", spec.name);
+    }
+}

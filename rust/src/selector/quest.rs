@@ -5,15 +5,22 @@
 //! upper-bound score is `Σ_c max(q_c·min_c, q_c·max_c)` — an upper bound
 //! on any `q·k` within the page. The top pages under the budget are
 //! selected and *all* their tokens attended.
+//!
+//! Paged-native: page metadata is computed from the KV source at
+//! prefill, and each decoded token folds into the last (partial) page's
+//! min/max — bit-identical to rebuilding over the full context, since
+//! the per-channel min/max fold runs in the same token order.
 
-use super::TokenSelector;
-use crate::linalg::{Matrix, TopK};
+use super::{Selection, Selector, SelectorError};
+use crate::attention::KvSource;
+use crate::linalg::TopK;
 
 pub struct QuestSelector {
     pub page_size: usize,
     pages: Vec<PageMeta>,
     n: usize,
     dim: usize,
+    built: bool,
 }
 
 struct PageMeta {
@@ -27,7 +34,7 @@ impl QuestSelector {
     /// Paper setting: 16-token pages (Quest's default).
     pub fn new(page_size: usize) -> QuestSelector {
         assert!(page_size > 0);
-        QuestSelector { page_size, pages: Vec::new(), n: 0, dim: 0 }
+        QuestSelector { page_size, pages: Vec::new(), n: 0, dim: 0, built: false }
     }
 
     /// Upper-bound score of a page for query q.
@@ -42,22 +49,22 @@ impl QuestSelector {
     }
 }
 
-impl TokenSelector for QuestSelector {
+impl Selector for QuestSelector {
     fn name(&self) -> &'static str {
         "Quest"
     }
 
-    fn build(&mut self, keys: &Matrix, _values: &Matrix) {
-        self.n = keys.rows;
-        self.dim = keys.cols;
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.n = kv.n_tokens();
+        self.dim = kv.key_dim();
         self.pages.clear();
         let mut start = 0;
-        while start < keys.rows {
-            let len = self.page_size.min(keys.rows - start);
+        while start < self.n {
+            let len = self.page_size.min(self.n - start);
             let mut min = vec![f32::INFINITY; self.dim];
             let mut max = vec![f32::NEG_INFINITY; self.dim];
             for j in start..start + len {
-                let row = keys.row(j);
+                let row = kv.key(j);
                 for c in 0..self.dim {
                     min[c] = min[c].min(row[c]);
                     max[c] = max[c].max(row[c]);
@@ -66,22 +73,65 @@ impl TokenSelector for QuestSelector {
             self.pages.push(PageMeta { start, len, min, max });
             start += len;
         }
+        self.built = true;
     }
 
-    fn select(&self, q: &[f32], k: usize) -> Vec<usize> {
+    fn append(&mut self, key: &[f32], _value: &[f32]) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        debug_assert_eq!(key.len(), self.dim);
+        let start_new = match self.pages.last() {
+            Some(p) => p.len == self.page_size,
+            None => true,
+        };
+        if start_new {
+            self.pages.push(PageMeta {
+                start: self.n,
+                len: 1,
+                min: key.to_vec(),
+                max: key.to_vec(),
+            });
+        } else {
+            let p = self.pages.last_mut().unwrap();
+            for c in 0..self.dim {
+                p.min[c] = p.min[c].min(key[c]);
+                p.max[c] = p.max[c].max(key[c]);
+            }
+            p.len += 1;
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.n
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        if !self.built {
+            return Err(SelectorError::NotBuilt);
+        }
+        sel.indices.clear();
+        if self.pages.is_empty() {
+            return Ok(());
+        }
+        sel.scores.clear();
+        for page in &self.pages {
+            sel.scores.push(self.page_bound(page, q));
+        }
         // Budget in pages: floor(k / page_size) pages (>= 1).
         let budget_pages = (k / self.page_size).max(1).min(self.pages.len());
         let mut tk = TopK::new(budget_pages);
-        for (i, page) in self.pages.iter().enumerate() {
-            tk.push(self.page_bound(page, q), i);
+        for (i, &s) in sel.scores.iter().enumerate() {
+            tk.push(s, i);
         }
-        let mut out = Vec::with_capacity(budget_pages * self.page_size);
-        for pid in tk.into_indices() {
+        for (pid, _) in tk.into_sorted() {
             let p = &self.pages[pid];
-            out.extend(p.start..p.start + p.len);
+            sel.indices.extend(p.start..p.start + p.len);
         }
-        out.truncate(k.max(self.page_size)); // stay near budget
-        out
+        sel.indices.truncate(k.max(self.page_size)); // stay near budget
+        Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
@@ -93,6 +143,7 @@ impl TokenSelector for QuestSelector {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::Matrix;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -101,7 +152,7 @@ mod tests {
         let keys = Matrix::gaussian(64, 8, &mut rng);
         let vals = Matrix::gaussian(64, 8, &mut rng);
         let mut sel = QuestSelector::new(16);
-        sel.build(&keys, &vals);
+        sel.build_dense(&keys, &vals);
         let q = rng.normal_vec(8);
         for page in &sel.pages {
             let bound = sel.page_bound(page, &q);
@@ -122,8 +173,8 @@ mod tests {
             keys.set(77, c, 6.0 * q[c]);
         }
         let mut sel = QuestSelector::new(16);
-        sel.build(&keys, &vals);
-        let chosen = sel.select(&q, 32);
+        sel.build_dense(&keys, &vals);
+        let chosen = sel.select(&q, 32).unwrap();
         assert!(chosen.contains(&77), "planted key's page not selected");
     }
 
@@ -133,9 +184,28 @@ mod tests {
         let keys = Matrix::gaussian(20, 4, &mut rng); // 16 + 4
         let vals = Matrix::gaussian(20, 4, &mut rng);
         let mut sel = QuestSelector::new(16);
-        sel.build(&keys, &vals);
+        sel.build_dense(&keys, &vals);
         assert_eq!(sel.pages.len(), 2);
         assert_eq!(sel.pages[1].len, 4);
+    }
+
+    #[test]
+    fn append_fills_partial_page_then_opens_new_one() {
+        let mut rng = Pcg64::seeded(5);
+        let keys = Matrix::gaussian(20, 4, &mut rng); // pages [16, 4]
+        let vals = Matrix::gaussian(20, 4, &mut rng);
+        let mut sel = QuestSelector::new(16);
+        sel.build_dense(&keys, &vals);
+        for _ in 0..12 {
+            sel.append(&rng.normal_vec(4), &rng.normal_vec(4)).unwrap();
+        }
+        // 20 + 12 = 32 tokens: the partial page filled to 16, no third.
+        assert_eq!(sel.n_tokens(), 32);
+        assert_eq!(sel.pages.len(), 2);
+        assert_eq!(sel.pages[1].len, 16);
+        sel.append(&rng.normal_vec(4), &rng.normal_vec(4)).unwrap();
+        assert_eq!(sel.pages.len(), 3);
+        assert_eq!(sel.pages[2].start, 32);
     }
 
     #[test]
@@ -147,7 +217,7 @@ mod tests {
         let keys = Matrix::gaussian(32, 128, &mut rng);
         let vals = Matrix::gaussian(32, 128, &mut rng);
         let mut sel = QuestSelector::new(16);
-        sel.build(&keys, &vals);
+        sel.build_dense(&keys, &vals);
         // 2*128*16/16 = 256 bits/token — within 2x of the paper's 512
         // (which counts fp16 min+max plus metadata).
         assert_eq!(sel.bits_per_token(), 256);

@@ -1,0 +1,194 @@
+//! SOCKET (the paper's soft collision kernel) and traditional hard LSH
+//! as paged-native [`Selector`]s.
+//!
+//! Both share the same index: packed SimHash bucket ids plus value
+//! norms ([`KeyHashes`], Algorithm 1), built straight off the paged
+//! pool at prefill and extended one signature per decoded token. Only
+//! the scoring differs — soft collision mass (Algorithms 2–4) vs hard
+//! collision counting.
+
+use super::{hash_kv_source, Selection, Selector, SelectorError};
+use crate::attention::KvSource;
+use crate::linalg::{l2_norm, top_k_into};
+use crate::lsh::{HardScorer, KeyHashes, LshParams, SoftScorer};
+use crate::util::pool;
+
+/// SOCKET as a [`Selector`].
+pub struct SocketSelector {
+    scorer: SoftScorer,
+    hashes: Option<KeyHashes>,
+}
+
+impl SocketSelector {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> SocketSelector {
+        SocketSelector { scorer: SoftScorer::new(params, dim, seed), hashes: None }
+    }
+}
+
+impl Selector for SocketSelector {
+    fn name(&self) -> &'static str {
+        "SOCKET"
+    }
+
+    fn build(&mut self, kv: &dyn KvSource) {
+        // Prefill-time hashing (Alg. 1) fans keys across the shared
+        // pool, reading straight from the paged (or dense) source.
+        self.hashes = Some(hash_kv_source(self.scorer.hasher.simhash(), kv, pool::global()));
+    }
+
+    fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
+        let hashes = self.hashes.as_mut().ok_or(SelectorError::NotBuilt)?;
+        let buckets = self.scorer.hasher.simhash().hash_one(key);
+        hashes.push(&buckets, l2_norm(value));
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.hashes.as_ref().map(|h| h.n).unwrap_or(0)
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        sel.indices.clear();
+        if hashes.n == 0 {
+            return Ok(());
+        }
+        let pool = pool::global();
+        // Alg. 2 soft-hash and Alg. 4 scoring fill reusable scratch
+        // (pooled; degrades to the serial hot path inside workers);
+        // Alg. 3's top-k writes the output buffer.
+        let (_, r) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool);
+        self.scorer.scores_into(&sel.aux, r, hashes, pool, &mut sel.scores);
+        top_k_into(&sel.scores, k.max(1), &mut sel.indices);
+        Ok(())
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.scorer.params().memory().bits_per_token
+    }
+}
+
+/// Traditional hard LSH as a [`Selector`].
+pub struct HardLshSelector {
+    scorer: HardScorer,
+    hashes: Option<KeyHashes>,
+}
+
+impl HardLshSelector {
+    pub fn new(params: LshParams, dim: usize, seed: u64) -> HardLshSelector {
+        HardLshSelector { scorer: HardScorer::new(params, dim, seed), hashes: None }
+    }
+}
+
+impl Selector for HardLshSelector {
+    fn name(&self) -> &'static str {
+        "LSH"
+    }
+
+    fn build(&mut self, kv: &dyn KvSource) {
+        self.hashes = Some(hash_kv_source(&self.scorer.hash, kv, pool::global()));
+    }
+
+    fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
+        let hashes = self.hashes.as_mut().ok_or(SelectorError::NotBuilt)?;
+        let buckets = self.scorer.hash.hash_one(key);
+        hashes.push(&buckets, l2_norm(value));
+        Ok(())
+    }
+
+    fn n_tokens(&self) -> usize {
+        self.hashes.as_ref().map(|h| h.n).unwrap_or(0)
+    }
+
+    fn select_into(&self, q: &[f32], k: usize, sel: &mut Selection) -> Result<(), SelectorError> {
+        let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        sel.indices.clear();
+        if hashes.n == 0 {
+            return Ok(());
+        }
+        self.scorer.scores_into(q, hashes, &mut sel.scores);
+        top_k_into(&sel.scores, k.max(1), &mut sel.indices);
+        Ok(())
+    }
+
+    fn bits_per_token(&self) -> usize {
+        self.scorer.params().memory().bits_per_token
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn adapters_round_trip() {
+        let mut rng = Pcg64::seeded(1);
+        let keys = Matrix::gaussian(64, 16, &mut rng);
+        let vals = Matrix::gaussian(64, 16, &mut rng);
+        let q = rng.normal_vec(16);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, 16, 7);
+        let mut hard = HardLshSelector::new(params, 16, 7);
+        soft.build_dense(&keys, &vals);
+        hard.build_dense(&keys, &vals);
+        assert_eq!(soft.select(&q, 8).unwrap().len(), 8);
+        assert_eq!(hard.select(&q, 8).unwrap().len(), 8);
+        assert_eq!(soft.bits_per_token(), 60);
+        assert_eq!(hard.bits_per_token(), 60);
+        assert_eq!(soft.n_tokens(), 64);
+    }
+
+    #[test]
+    fn select_before_build_is_an_error_not_a_panic() {
+        // The old trait panicked with expect("build() not called"); the
+        // serving layer needs a reportable error instead.
+        let s = SocketSelector::new(LshParams::paper_default(), 8, 1);
+        assert_eq!(s.select(&[0.0; 8], 4), Err(SelectorError::NotBuilt));
+        let h = HardLshSelector::new(LshParams::paper_default(), 8, 1);
+        assert_eq!(h.select(&[0.0; 8], 4), Err(SelectorError::NotBuilt));
+    }
+
+    #[test]
+    fn select_matches_legacy_scorer_pipeline() {
+        // The trait path must select exactly what the underlying
+        // Algorithm 2-4 pipeline selects.
+        let mut rng = Pcg64::seeded(4);
+        let dim = 24;
+        let keys = Matrix::gaussian(300, dim, &mut rng);
+        let vals = Matrix::gaussian(300, dim, &mut rng);
+        let params = LshParams { p: 7, l: 12, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, dim, 9);
+        soft.build_dense(&keys, &vals);
+        let scorer = SoftScorer::new(params, dim, 9);
+        let hashes = scorer.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        assert_eq!(soft.select(&q, 32).unwrap(), scorer.select_top_k(&q, &hashes, 32));
+
+        let mut hard = HardLshSelector::new(params, dim, 9);
+        hard.build_dense(&keys, &vals);
+        let hscorer = HardScorer::new(params, dim, 9);
+        assert_eq!(hard.select(&q, 32).unwrap(), hscorer.select_top_k(&q, &hashes, 32));
+    }
+
+    #[test]
+    fn batch_select_matches_serial() {
+        let mut rng = Pcg64::seeded(2);
+        let keys = Matrix::gaussian(512, 16, &mut rng);
+        let vals = Matrix::gaussian(512, 16, &mut rng);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, 16, 7);
+        let mut hard = HardLshSelector::new(params, 16, 7);
+        soft.build_dense(&keys, &vals);
+        hard.build_dense(&keys, &vals);
+        let queries: Vec<Vec<f32>> = (0..12).map(|_| rng.normal_vec(16)).collect();
+        for sel in [&soft as &dyn Selector, &hard as &dyn Selector] {
+            let batch = sel.select_batch(&queries, 16).unwrap();
+            assert_eq!(batch.len(), queries.len());
+            for (q, got) in queries.iter().zip(&batch) {
+                assert_eq!(*got, sel.select(q, 16).unwrap(), "{} batch/serial diverge", sel.name());
+            }
+        }
+    }
+}

@@ -2,16 +2,23 @@
 //!
 //! Protocol: one JSON object per line.
 //! Request:  `{"op":"generate","context_len":N,"decode_len":M}`
+//!           with optional `"method":"quest"|"magicpig"|...|"dense"`
+//!           (any `selector::registry` name; default = engine config)
+//!           and `"sparsity":S` (default = engine config),
 //!           `{"op":"stats"}` · `{"op":"ping"}`
 //! Response: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//! `stats` reports total served plus a per-method breakdown.
 //!
 //! std::net + a small thread pool (tokio is unavailable offline); each
 //! connection is handled by a pool worker, requests route through the
-//! shared [`Coordinator`].
+//! shared [`Coordinator`]. Selector misuse (an unknown method name, a
+//! bad sparsity) is a JSON error, never a worker panic.
 
 use crate::coordinator::{BatchPolicy, Coordinator, EngineConfig};
+use crate::selector::{self, AttentionMode};
 use crate::util::Json;
 use crate::workload::trace::Request;
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -22,15 +29,88 @@ pub struct Server {
     coordinator: Arc<Coordinator>,
     next_id: Arc<AtomicU64>,
     served: Arc<AtomicU64>,
+    /// Successful generates per method label (the `stats` breakdown).
+    served_by_method: Arc<Mutex<BTreeMap<String, u64>>>,
+    /// Label of the engine's default mode (used when a request names
+    /// no method).
+    default_label: String,
+    /// Sparsity applied when a request names a method without one.
+    default_sparsity: f64,
 }
 
 impl Server {
     pub fn new(config: EngineConfig, policy: BatchPolicy) -> Server {
+        // Canonicalize the default label through the registry so stats
+        // never split one method across an alias and its canonical name
+        // (e.g. a server configured with "PQ" vs requests naming
+        // "pqcache").
+        let default_label = match &config.mode {
+            AttentionMode::Dense => "dense".to_string(),
+            AttentionMode::Sparse { method, .. } => selector::lookup(method)
+                .map(|spec| spec.name.to_string())
+                .unwrap_or_else(|_| method.clone()),
+        };
+        let default_sparsity = match &config.mode {
+            AttentionMode::Sparse { sparsity, .. } => *sparsity,
+            AttentionMode::Dense => 33.0, // the paper's headline budget
+        };
         Server {
             coordinator: Arc::new(Coordinator::spawn(config, policy)),
             next_id: Arc::new(AtomicU64::new(1)),
             served: Arc::new(AtomicU64::new(0)),
+            served_by_method: Arc::new(Mutex::new(BTreeMap::new())),
+            default_label,
+            default_sparsity,
         }
+    }
+
+    /// Resolve a request's optional `"method"`/`"sparsity"` fields into
+    /// a per-request [`AttentionMode`] override plus its stats label.
+    /// A bare `"sparsity"` (no method) re-budgets the server's default
+    /// sparse method; it is an error against a dense default.
+    fn request_mode(&self, msg: &Json) -> Result<(Option<AttentionMode>, String), String> {
+        let sparsity = match msg.get("sparsity") {
+            None => None,
+            // A present-but-non-numeric sparsity is a client error, not
+            // something to silently serve at the default budget.
+            Some(v) => match v.as_f64() {
+                Some(s) if s.is_nan() || s < 1.0 => {
+                    return Err(format!("sparsity must be a number >= 1, got {s}"));
+                }
+                Some(s) => Some(s),
+                None => return Err(format!("sparsity must be a number >= 1, got {v}")),
+            },
+        };
+        let method = match msg.get("method").and_then(|m| m.as_str()) {
+            None => match sparsity {
+                // No overrides at all: engine default.
+                None => return Ok((None, self.default_label.clone())),
+                // Sparsity-only override: the default method re-budgeted.
+                Some(s) => {
+                    if self.default_label == "dense" {
+                        return Err(format!(
+                            "sparsity {s} requires a \"method\" (server default is dense)"
+                        ));
+                    }
+                    let label = self.default_label.clone();
+                    return Ok((
+                        Some(AttentionMode::Sparse { method: label.clone(), sparsity: s }),
+                        label,
+                    ));
+                }
+            },
+            Some(m) => m,
+        };
+        if method.eq_ignore_ascii_case("dense") {
+            if let Some(s) = sparsity {
+                return Err(format!("sparsity {s} is meaningless for method \"dense\""));
+            }
+            return Ok((Some(AttentionMode::Dense), "dense".to_string()));
+        }
+        let spec = selector::lookup(method).map_err(|e| e.to_string())?;
+        let label = spec.name.to_string();
+        let sparsity = sparsity.unwrap_or(self.default_sparsity);
+        Ok((Some(AttentionMode::Sparse { method: label.clone(), sparsity }), label))
     }
 
     /// Handle one already-parsed request object (also used directly by
@@ -38,21 +118,35 @@ impl Server {
     pub fn handle(&self, msg: &Json) -> Json {
         match msg.get("op").and_then(|o| o.as_str()) {
             Some("ping") => Json::obj().set("ok", true).set("pong", true),
-            Some("stats") => Json::obj()
-                .set("ok", true)
-                .set("served", self.served.load(Ordering::Relaxed)),
+            Some("stats") => {
+                let mut methods = Json::obj();
+                for (name, count) in self.served_by_method.lock().unwrap().iter() {
+                    methods = methods.set(name, *count);
+                }
+                Json::obj()
+                    .set("ok", true)
+                    .set("served", self.served.load(Ordering::Relaxed))
+                    .set("methods", methods)
+            }
             Some("generate") => {
                 let ctx = msg.get("context_len").and_then(|v| v.as_usize()).unwrap_or(0);
                 let dec = msg.get("decode_len").and_then(|v| v.as_usize()).unwrap_or(0);
                 if ctx == 0 || dec == 0 {
                     return Json::obj().set("ok", false).set("error", "context_len and decode_len must be positive");
                 }
+                let (mode, label) = match self.request_mode(msg) {
+                    Ok(resolved) => resolved,
+                    // Unknown method / bad sparsity: a typed JSON error
+                    // straight from the registry, no queue round-trip.
+                    Err(e) => return Json::obj().set("ok", false).set("error", e),
+                };
                 let id = self.next_id.fetch_add(1, Ordering::Relaxed);
                 let handle = self.coordinator.submit(Request {
                     id,
                     arrival_ms: 0.0,
                     context_len: ctx,
                     decode_len: dec,
+                    mode,
                 });
                 let c = handle.wait();
                 if !c.ok {
@@ -64,9 +158,11 @@ impl Server {
                         .set("error", c.error.unwrap_or_else(|| "request rejected".to_string()));
                 }
                 self.served.fetch_add(1, Ordering::Relaxed);
+                *self.served_by_method.lock().unwrap().entry(label.clone()).or_insert(0) += 1;
                 Json::obj()
                     .set("ok", true)
                     .set("id", c.id)
+                    .set("method", label)
                     .set("ttft_ms", c.ttft_ms)
                     .set("total_ms", c.total_ms)
                     .set("decode_len", c.decode_len)
@@ -164,7 +260,7 @@ mod tests {
         let config = EngineConfig {
             model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
             lsh: LshParams { p: 6, l: 8, tau: 0.5 },
-            mode: AttentionMode::Socket { sparsity: 8.0 },
+            mode: AttentionMode::socket(8.0),
             capacity_pages: 1024,
             sink: 4,
             local: 4,
@@ -187,8 +283,92 @@ mod tests {
         let resp = s.handle(&Json::parse(r#"{"op":"generate","context_len":64,"decode_len":2}"#).unwrap());
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
         assert!(resp.get("total_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("socket"));
         let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
         assert_eq!(stats.get("served").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn per_request_methods_round_trip_with_stats() {
+        // Quest and MagicPIG served end-to-end through the scheduler by
+        // naming them in the request — plus the per-method breakdown.
+        let s = server();
+        for (method, times) in [("quest", 2usize), ("magicpig", 1), ("dense", 1)] {
+            for _ in 0..times {
+                let line = format!(
+                    r#"{{"op":"generate","context_len":96,"decode_len":2,"method":"{method}"}}"#
+                );
+                let resp = s.handle(&Json::parse(&line).unwrap());
+                assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{method}: {resp}");
+                assert_eq!(resp.get("method").unwrap().as_str(), Some(method));
+            }
+        }
+        // One request on the engine default (socket).
+        let resp =
+            s.handle(&Json::parse(r#"{"op":"generate","context_len":64,"decode_len":1}"#).unwrap());
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert_eq!(stats.get("served").unwrap().as_usize(), Some(5));
+        let methods = stats.get("methods").unwrap();
+        assert_eq!(methods.get("quest").unwrap().as_usize(), Some(2));
+        assert_eq!(methods.get("magicpig").unwrap().as_usize(), Some(1));
+        assert_eq!(methods.get("dense").unwrap().as_usize(), Some(1));
+        assert_eq!(methods.get("socket").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn unknown_method_and_bad_sparsity_are_json_errors() {
+        let s = server();
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","context_len":64,"decode_len":2,"method":"zzz"}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        let err = resp.get("error").unwrap().as_str().unwrap();
+        assert!(err.contains("unknown method 'zzz'"), "{err}");
+        assert!(err.contains("socket"), "error should list registered methods: {err}");
+
+        let resp = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","context_len":64,"decode_len":2,"method":"quest","sparsity":0.5}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("sparsity"), "{resp}");
+        // Bare sparsity is validated too (no method field to hide behind).
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","context_len":64,"decode_len":2,"sparsity":0.5}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        // ...as is a non-numeric sparsity (not silently dropped).
+        let resp = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","context_len":64,"decode_len":2,"method":"quest","sparsity":"64"}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("sparsity"), "{resp}");
+        // Nothing was served or counted.
+        let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert_eq!(stats.get("served").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn bare_sparsity_rebudgets_the_default_method() {
+        // {"sparsity": S} without "method" re-budgets the server's
+        // default sparse method instead of being silently dropped.
+        let s = server();
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","context_len":64,"decode_len":1,"sparsity":4}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("socket"));
+        let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+        assert_eq!(stats.get("methods").unwrap().get("socket").unwrap().as_usize(), Some(1));
     }
 
     #[test]
@@ -211,7 +391,7 @@ mod tests {
         let config = EngineConfig {
             model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
             lsh: LshParams { p: 6, l: 8, tau: 0.5 },
-            mode: AttentionMode::Socket { sparsity: 8.0 },
+            mode: AttentionMode::socket(8.0),
             capacity_pages: 8, // 128 cacheable tokens
             sink: 4,
             local: 4,

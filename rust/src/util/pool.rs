@@ -232,16 +232,21 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
     }
 }
 
-/// Reusable per-worker decode scratch: the buffer the decode hot path
+/// Reusable per-worker decode scratch: the buffers the decode hot path
 /// fills once per (sequence, head, step) and would otherwise reallocate
-/// — the merged selection index set, the largest per-step temporary.
-/// Every pool worker (and the caller thread) owns one via thread-local
-/// storage, so `decode_batch` fan-out reuses warm buffers instead of
-/// hitting the allocator per step.
+/// — the selector's scoring workspace and the merged selection index
+/// set, the largest per-step temporaries. Every pool worker (and the
+/// caller thread) owns one via thread-local storage, so `decode_batch`
+/// fan-out reuses warm buffers instead of hitting the allocator per
+/// step.
 #[derive(Debug, Default)]
 pub struct DecodeScratch {
     /// Merged selection indices (top-k ∪ sink ∪ local).
     pub indices: Vec<usize>,
+    /// Selector output + scoring scratch consumed by
+    /// `selector::Selector::select_into` (top-k indices, key scores,
+    /// soft-hash bucket tables...).
+    pub selection: crate::selector::Selection,
 }
 
 thread_local! {

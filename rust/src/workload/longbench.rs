@@ -56,7 +56,7 @@ impl LongBenchTask {
     /// Evaluate a selector on this task: mean over `instances`.
     pub fn evaluate(
         &self,
-        selector: &mut dyn crate::baselines::TokenSelector,
+        selector: &mut dyn crate::selector::Selector,
         n: usize,
         dim: usize,
         k: usize,
@@ -76,8 +76,8 @@ impl LongBenchTask {
         for i in 0..instances {
             let mut rng = Pcg64::new(seed, i as u64 * 104729 + 3);
             let inst = gen_task.generate(n, dim, &mut rng);
-            selector.build(&inst.keys, &inst.values);
-            let selected = selector.select(&inst.query, k);
+            selector.build_dense(&inst.keys, &inst.values);
+            let selected = selector.select(&inst.query, k).expect("selector built");
             // Retrieval component: needle recall.
             let recall = gen_task.score(&selected, &inst.needles) / 100.0;
             // Fidelity component: sparse-vs-dense output error with the
@@ -100,7 +100,7 @@ pub fn task_by_name(name: &str) -> Option<LongBenchTask> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::oracle::OracleSelector;
+    use crate::selector::OracleSelector;
 
     #[test]
     fn fifteen_unique_tasks() {

@@ -157,11 +157,11 @@ impl RulerTask {
     }
 }
 
-/// Evaluate a [`TokenSelector`] on a task: mean score over `instances`
-/// independently generated instances of `n` tokens.
+/// Evaluate a [`crate::selector::Selector`] on a task: mean score over
+/// `instances` independently generated instances of `n` tokens.
 pub fn evaluate_selector(
     task: &RulerTask,
-    selector: &mut dyn crate::baselines::TokenSelector,
+    selector: &mut dyn crate::selector::Selector,
     n: usize,
     dim: usize,
     k: usize,
@@ -172,8 +172,8 @@ pub fn evaluate_selector(
     for i in 0..instances {
         let mut rng = Pcg64::new(seed, i as u64 * 7919 + 1);
         let inst = task.generate(n, dim, &mut rng);
-        selector.build(&inst.keys, &inst.values);
-        let selected = selector.select(&inst.query, k);
+        selector.build_dense(&inst.keys, &inst.values);
+        let selected = selector.select(&inst.query, k).expect("selector built");
         total += task.score(&selected, &inst.needles);
     }
     total / instances as f64
@@ -182,8 +182,7 @@ pub fn evaluate_selector(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::baselines::oracle::OracleSelector;
-    use crate::baselines::TokenSelector;
+    use crate::selector::OracleSelector;
 
     #[test]
     fn tasks_have_unique_names() {

@@ -1,6 +1,7 @@
 //! Serving request traces for the throughput / latency benches
 //! (Fig. 3b/c) and the coordinator integration tests.
 
+use crate::selector::AttentionMode;
 use crate::util::rng::Pcg64;
 
 /// A single inference request.
@@ -13,6 +14,9 @@ pub struct Request {
     pub context_len: usize,
     /// Decode length in tokens.
     pub decode_len: usize,
+    /// Per-request attention mode (`None` = the engine's default). Any
+    /// method in `selector::registry` is servable by name.
+    pub mode: Option<AttentionMode>,
 }
 
 /// Trace parameters.
@@ -63,6 +67,7 @@ impl TraceGenerator {
             arrival_ms: self.clock_ms,
             context_len: ctx.clamp(self.cfg.context_min, self.cfg.context_max),
             decode_len: dec,
+            mode: None,
         };
         self.next_id += 1;
         req

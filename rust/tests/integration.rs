@@ -3,7 +3,7 @@
 //! a trace, baseline comparisons on shared workloads.
 
 use socket_attn::attention::{dense_attention, flash_decode, SelectionPolicy};
-use socket_attn::baselines::{SocketSelector, TokenSelector};
+use socket_attn::selector::{Selector, SocketSelector};
 use socket_attn::coordinator::{
     AttentionMode, BatchPolicy, Coordinator, EngineConfig,
 };
@@ -28,9 +28,9 @@ fn socket_pipeline_attention_fidelity() {
     let (keys, values) = model.kv_matrix(0, n);
     let q = model.query_at(0, 0);
     let mut sel = SocketSelector::new(LshParams::paper_default(), dim, 7);
-    sel.build(&keys, &values);
+    sel.build_dense(&keys, &values);
     let policy = SelectionPolicy::from_sparsity(n, 10.0, 16, 16);
-    let top = sel.select(&q, policy.k);
+    let top = sel.select(&q, policy.k).expect("selector built");
     let selected = policy.merge(&top, n);
     let scale = 1.0 / (dim as f32).sqrt();
     let recall = attention_mass_recall(&q, &keys, &selected, scale);
@@ -49,9 +49,9 @@ fn needle_retrieval_at_20x() {
     let task = RulerTask::by_name("vt").unwrap();
     let inst = task.generate(n, dim, &mut rng);
     let mut sel = SocketSelector::new(LshParams::paper_default(), dim, 5);
-    sel.build(&inst.keys, &inst.values);
+    sel.build_dense(&inst.keys, &inst.values);
     let k = n / 20;
-    let got = sel.select(&inst.query, k);
+    let got = sel.select(&inst.query, k).expect("selector built");
     let score = task.score(&got, &inst.needles);
     assert!(score > 0.6 * task.ceiling, "vt score {score} of {}", task.ceiling);
     let _ = SPAN_LEN;
@@ -63,7 +63,7 @@ fn coordinator_serves_trace() {
     let config = EngineConfig {
         model: ModelConfig { head_dim: 16, n_kv_heads: 1, ..ModelConfig::tiny() },
         lsh: LshParams { p: 6, l: 8, tau: 0.5 },
-        mode: AttentionMode::Socket { sparsity: 8.0 },
+        mode: AttentionMode::socket(8.0),
         capacity_pages: 8192,
         sink: 4,
         local: 4,
@@ -99,9 +99,9 @@ fn serving_modes_agree() {
         sink: 8,
         local: 8,
     };
-    let mut dense = socket_attn::coordinator::DecodeEngine::new(base);
+    let mut dense = socket_attn::coordinator::DecodeEngine::new(base.clone());
     let mut sparse = socket_attn::coordinator::DecodeEngine::new(EngineConfig {
-        mode: AttentionMode::Socket { sparsity: 8.0 },
+        mode: AttentionMode::socket(8.0),
         ..base
     });
     assert!(dense.prefill(1, 512, 4));
@@ -136,8 +136,8 @@ fn all_selectors_produce_valid_selections() {
         Method::Oracle,
     ] {
         let mut sel = method.build(dim, 3);
-        sel.build(&keys, &vals);
-        let got = sel.select(&q, 64);
+        sel.build_dense(&keys, &vals);
+        let got = sel.select(&q, 64).expect("selector built");
         assert!(!got.is_empty(), "{} empty", method.name());
         assert!(got.iter().all(|&i| i < n), "{} out of range", method.name());
         let mut dedup = got.clone();
