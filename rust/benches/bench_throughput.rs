@@ -2,9 +2,11 @@
 //! dense FlashAttention-style decode, on the Rust substrate — plus the
 //! serial-vs-pooled scoring comparison for the shared worker pool, the
 //! gather-vs-paged KV hot-path comparison (KvView acceptance
-//! measurement), and the per-method serving lane (decode tokens/s for
-//! every `selector::registry` method over the paged pool at the paper's
-//! sparsity budget). Writes the gather-vs-paged and per-method tables
+//! measurement), the scoring-kernel lane (exhaustive vs block-pruned vs
+//! GQA-batched SOCKET selection + prune rate), and the per-method
+//! serving lane (decode tokens/s for every `selector::registry` method
+//! over the paged pool at the paper's sparsity budget). Writes the
+//! gather-vs-paged, scoring-lane, and per-method tables
 //! to a `BENCH_*.json` artifact for the perf trajectory
 //! (`--json-out <path>`, empty string to skip). `--smoke` shrinks every
 //! sweep so ci.sh can emit the artifact in seconds.
@@ -40,6 +42,16 @@ fn main() {
     let pg = throughput::run_paged_vs_gather(scale, pool_ctxs, pg_batch, sparsity);
     throughput::paged_vs_gather_table(&pg).print();
 
+    // Scoring kernels: exhaustive vs block-pruned vs GQA-batched over
+    // one SOCKET index (bit-identical selections; wall-clock + pruning
+    // rate are the block-pruning acceptance numbers).
+    let group = args.usize_or("group", 4).max(1);
+    let sl_ctxs: &[usize] =
+        if smoke { &[2 * 1024, 8 * 1024] } else { &[8 * 1024, 32 * 1024, 128 * 1024] };
+    let sl_steps = if smoke { 2 } else { 8 };
+    let sl = throughput::run_scoring_lane(scale, sl_ctxs, sparsity, group, sl_steps);
+    throughput::scoring_lane_table(&sl, sparsity).print();
+
     // Per-method serving lane: every registered selector decoding over
     // the paged pool (index build at prefill + per-step select/attend/
     // append). PQCache's k-means build dominates the large-context
@@ -57,6 +69,7 @@ fn main() {
             .set("dim", scale.dim)
             .set("sparsity", sparsity)
             .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg))
+            .set("scoring_lane", throughput::scoring_lane_json(&sl))
             .set("method_lane", throughput::method_lane_json(&lane));
         match std::fs::write(&artifact, doc.dumps() + "\n") {
             Ok(()) => println!("wrote {artifact}"),

@@ -54,8 +54,10 @@ struct SequenceState {
     decoded: usize,
 }
 
-/// The read-only half of a decode step: per-head attention outputs plus
-/// the new token's (key, value) per head, ready to be committed.
+/// The read-only half of a decode step: per-*query-head* attention
+/// outputs (`n_heads` of them — the GQA group of each kv head attends
+/// through its shared KV stream) plus the new token's (key, value) per
+/// *kv head*, ready to be committed.
 struct StepResult {
     outputs: Vec<Vec<f32>>,
     appends: Vec<(Vec<f32>, Vec<f32>)>,
@@ -76,6 +78,14 @@ pub struct DecodeEngine {
 
 impl DecodeEngine {
     pub fn new(config: EngineConfig) -> DecodeEngine {
+        // A malformed head layout must fail at construction, not panic
+        // mid-serving on the first decode step.
+        assert!(
+            config.model.n_kv_heads > 0 && config.model.n_heads % config.model.n_kv_heads == 0,
+            "n_heads {} must be a multiple of n_kv_heads {}",
+            config.model.n_heads,
+            config.model.n_kv_heads
+        );
         DecodeEngine {
             kv: PagedKvCache::new(config.capacity_pages, config.model.head_dim),
             config,
@@ -177,8 +187,9 @@ impl DecodeEngine {
     }
 
     /// One decode step for a sequence; returns the attention outputs
-    /// (per kv-head) and appends the new token's K/V. Panics if the
-    /// sequence was never prefilled.
+    /// (one per *query* head — each kv head's GQA group is scored in a
+    /// single pass over its shared index) and appends the new token's
+    /// K/V per kv head. Panics if the sequence was never prefilled.
     pub fn decode_step(&mut self, seq_id: u64) -> Vec<Vec<f32>> {
         let state = self.sequences.get(&seq_id).expect("decode before prefill");
         let computed = self.compute_step(state);
@@ -212,27 +223,45 @@ impl DecodeEngine {
         seq_ids.iter().zip(computed).map(|(&seq, result)| self.apply_step(seq, result)).collect()
     }
 
-    /// Immutable phase of one decode step: per-head attention outputs
-    /// plus the new token's K/V, computed without touching engine state.
+    /// Query heads sharing each kv head's KV stream (the GQA group).
+    /// Divisibility is validated at [`DecodeEngine::new`].
+    fn gqa_group(&self) -> usize {
+        self.config.model.n_heads / self.config.model.n_kv_heads
+    }
+
+    /// Immutable phase of one decode step: per-query-head attention
+    /// outputs plus the new token's K/V per kv head, computed without
+    /// touching engine state.
+    ///
+    /// Each kv head serves its whole GQA group in one lane: the group's
+    /// queries are selected together (`Selector::select_group_into` —
+    /// for SOCKET a single fused pass over the hash blocks), then each
+    /// query head attends over its own merged selection. Output `g` of
+    /// kv head `h` lands at query-head index `h * group + g`.
     fn compute_step(&self, state: &SequenceState) -> StepResult {
         let heads = self.config.model.n_kv_heads;
+        let group = self.gqa_group();
         let dim = self.config.model.head_dim;
         let scale = 1.0 / (dim as f32).sqrt();
-        let mut outputs = Vec::with_capacity(heads);
+        let mut outputs = Vec::with_capacity(heads * group);
         let mut appends = Vec::with_capacity(heads);
         let step = state.decoded;
         for h in 0..heads {
             let n = state.tables[h].n_tokens;
-            let q = state.model.query_at(h, step);
+            let queries: Vec<Vec<f32>> =
+                (0..group).map(|g| state.model.query_at(h * group + g, step)).collect();
             // Attend in place over the paged cache: the view addresses
             // pages through the page table, so no K/V row is copied and
             // no dense matrix is allocated per step. Selector scoring
             // and the merged selection live in per-worker scratch.
             let view = self.kv.view(&state.tables[h]);
-            let mut out = Vec::new();
             match &state.mode {
                 AttentionMode::Dense => {
-                    flash_decode_into(&q, &view, None, scale, &mut out);
+                    for q in &queries {
+                        let mut out = Vec::new();
+                        flash_decode_into(q, &view, None, scale, &mut out);
+                        outputs.push(out);
+                    }
                 }
                 AttentionMode::Sparse { sparsity, .. } => {
                     let policy = SelectionPolicy::from_sparsity(
@@ -242,15 +271,19 @@ impl DecodeEngine {
                         self.config.local,
                     );
                     with_decode_scratch(|scratch| {
+                        let sels = scratch.group_selections(group);
                         state.selectors[h]
-                            .select_into(&q, policy.k, &mut scratch.selection)
+                            .select_group_into(&queries, policy.k, sels)
                             .expect("selector index built at prefill");
-                        policy.merge_into(&scratch.selection.indices, n, &mut scratch.indices);
-                        flash_decode_into(&q, &view, Some(&scratch.indices), scale, &mut out);
+                        for (q, sel) in queries.iter().zip(scratch.selections.iter()) {
+                            policy.merge_into(&sel.indices, n, &mut scratch.indices);
+                            let mut out = Vec::new();
+                            flash_decode_into(q, &view, Some(&scratch.indices), scale, &mut out);
+                            outputs.push(out);
+                        }
                     });
                 }
             }
-            outputs.push(out);
             appends.push(state.model.kv_at(h, n));
         }
         StepResult { outputs, appends }
@@ -309,7 +342,10 @@ mod tests {
         assert!(e.prefill(1, 300, 8));
         assert_eq!(e.n_sequences(), 1);
         let out = e.decode_step(1);
-        assert_eq!(out.len(), 2);
+        // One output per *query* head: the 2 kv heads each serve their
+        // 4-head GQA group.
+        assert_eq!(out.len(), e.config.model.n_heads);
+        assert_eq!(out.len(), 8);
         assert_eq!(out[0].len(), 32);
         assert!(out[0].iter().any(|&x| x != 0.0));
         assert_eq!(e.decoded(1), 1);
@@ -347,9 +383,10 @@ mod tests {
         assert!(sparse.prefill(7, 400, 4));
         let yd = dense.decode_step(7);
         let ys = sparse.decode_step(7);
-        for h in 0..2 {
+        assert_eq!(yd.len(), 8);
+        for h in 0..8 {
             let rel = crate::metrics::output_relative_error(&ys[h], &yd[h]);
-            assert!(rel < 0.5, "head {h} rel err {rel}");
+            assert!(rel < 0.5, "query head {h} rel err {rel}");
         }
     }
 
@@ -363,7 +400,7 @@ mod tests {
             assert!(e.prefill(1, 200, 4), "{} prefill", spec.name);
             for step in 0..2 {
                 let out = e.decode_step(1);
-                assert_eq!(out.len(), 2, "{} step {step}", spec.name);
+                assert_eq!(out.len(), 8, "{} step {step}", spec.name);
                 assert_eq!(out[0].len(), 32, "{}", spec.name);
                 assert!(
                     out.iter().all(|y| y.iter().all(|x| x.is_finite())),
@@ -391,7 +428,7 @@ mod tests {
         assert!(e.prefill_as(3, 100, 4, Some(&AttentionMode::sparse("quest", 8.0))).unwrap());
         for seq in [1, 2, 3] {
             let out = e.decode_step(seq);
-            assert_eq!(out.len(), 2);
+            assert_eq!(out.len(), 8);
             assert!(out[0].iter().any(|&x| x != 0.0), "seq {seq}");
         }
         // Identical sequence under the default mode on a fresh engine
@@ -432,6 +469,20 @@ mod tests {
         assert!(e2.prefill(1, 100, 8));
         let o1b = e2.decode_step(1);
         assert_eq!(o1a, o1b);
+    }
+
+    #[test]
+    fn mha_config_group_of_one_still_serves() {
+        // n_kv_heads == n_heads is plain MHA: every GQA group has one
+        // query head and the lane degrades to the scalar path.
+        let mut e = DecodeEngine::new(EngineConfig {
+            model: ModelConfig { head_dim: 32, n_kv_heads: 8, ..ModelConfig::tiny() },
+            ..cfg(AttentionMode::socket(8.0))
+        });
+        assert!(e.prefill(1, 100, 4));
+        let out = e.decode_step(1);
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|y| y.iter().all(|x| x.is_finite())));
     }
 
     #[test]

@@ -9,8 +9,9 @@
 use super::Scale;
 use crate::attention::{flash_decode, flash_decode_into, SelectionPolicy};
 use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
-use crate::linalg::Matrix;
-use crate::lsh::LshParams;
+use crate::linalg::{top_k_into, Matrix};
+use crate::lsh::{GroupLane, LshParams, SoftScorer};
+use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
 use crate::util::{fnum, pool, Json, Pcg64, Table};
 use std::time::Instant;
@@ -328,6 +329,159 @@ pub fn paged_vs_gather_json(points: &[PagedVsGatherPoint]) -> Json {
     Json::obj().set("bench", "throughput_paged_vs_gather").set("rows", Json::Arr(rows))
 }
 
+/// Scoring-kernel lane: one SOCKET index queried through (a) the
+/// exhaustive pipeline (Alg. 2 soft-hash + full Alg. 4 scoring +
+/// top-k), (b) the block-pruned branch-and-bound kernel, and (c) the
+/// GQA-batched group kernel (`group` query heads per pass over the
+/// hash blocks). Selections are bit-identical across all three
+/// (property-tested in `lsh::soft`); only wall-clock and the pruning
+/// rate differ — this is the block-pruning acceptance measurement.
+pub struct ScoringLanePoint {
+    pub n: usize,
+    pub group: usize,
+    /// Selections/second through exhaustive scoring + top-k.
+    pub exhaustive_sps: f64,
+    /// Selections/second through the block-pruned kernel.
+    pub pruned_sps: f64,
+    /// Selections/second through the GQA group kernel.
+    pub gqa_sps: f64,
+    /// Fraction of (lane, block) visits the admissible bound skipped
+    /// (pruned + GQA passes combined).
+    pub prune_rate: f64,
+}
+
+/// Measure the three scoring kernels at one context length. K/V come
+/// from the synthetic heavy-hitter stream (concentrated scores — the
+/// regime pruning exploits); every kernel processes the same
+/// `steps * group` queries.
+pub fn measure_scoring_lane(
+    n: usize,
+    dim: usize,
+    sparsity: f64,
+    group: usize,
+    steps: usize,
+    seed: u64,
+) -> ScoringLanePoint {
+    assert!(group >= 1, "GQA group must be at least 1");
+    let model = SyntheticModel::new(ModelConfig { head_dim: dim, ..ModelConfig::tiny() }, seed);
+    let (keys, values) = model.kv_matrix(0, n);
+    let scorer = SoftScorer::new(LshParams::paper_default(), dim, seed);
+    let hashes = scorer.hash_keys(&keys, &values);
+    let k = SelectionPolicy::from_sparsity(n, sparsity, 0, 0).k;
+    let queries: Vec<Vec<f32>> = (0..steps * group).map(|s| model.query_at(0, s)).collect();
+    let pool = pool::global();
+
+    // (a) exhaustive: score every key, then top-k.
+    let mut probs = Vec::new();
+    let mut scores = Vec::new();
+    let mut idx = Vec::new();
+    let t0 = Instant::now();
+    for q in &queries {
+        let (_, r) = scorer.hasher.bucket_probs_into(q, &mut probs, pool);
+        scorer.scores_into(&probs, r, &hashes, pool, &mut scores);
+        top_k_into(&scores, k, &mut idx);
+        crate::util::black_box(&idx);
+    }
+    let exhaustive_sps = queries.len() as f64 / t0.elapsed().as_secs_f64();
+
+    // (b) block-pruned, one query at a time.
+    let mut sel_scores = Vec::new();
+    let (mut visits, mut pruned) = (0usize, 0usize);
+    let t1 = Instant::now();
+    for q in &queries {
+        let (_, r) = scorer.hasher.bucket_probs_into(q, &mut probs, pool);
+        let st = scorer.select_pruned_into(&probs, r, &hashes, k, &mut idx, &mut sel_scores);
+        visits += st.blocks;
+        pruned += st.pruned;
+        crate::util::black_box(&idx);
+    }
+    let pruned_sps = queries.len() as f64 / t1.elapsed().as_secs_f64();
+
+    // (c) GQA-batched: `group` lanes share each pass over the blocks.
+    let mut lane_probs = vec![Vec::new(); group];
+    let mut lane_idx = vec![Vec::new(); group];
+    let mut lane_scores = vec![Vec::new(); group];
+    let t2 = Instant::now();
+    for chunk in queries.chunks(group) {
+        let mut r = 0;
+        for (q, buf) in chunk.iter().zip(lane_probs.iter_mut()) {
+            r = scorer.hasher.bucket_probs_into(q, buf, pool).1;
+        }
+        let mut lanes: Vec<GroupLane<'_>> = lane_probs[..chunk.len()]
+            .iter()
+            .zip(lane_idx.iter_mut().zip(lane_scores.iter_mut()))
+            .map(|(p, (i, s))| GroupLane { probs: p, indices: i, scores: s })
+            .collect();
+        let st = scorer.select_pruned_group_into(r, &hashes, k, &mut lanes);
+        visits += st.blocks;
+        pruned += st.pruned;
+        crate::util::black_box(&lane_idx);
+    }
+    let gqa_sps = queries.len() as f64 / t2.elapsed().as_secs_f64();
+
+    ScoringLanePoint {
+        n,
+        group,
+        exhaustive_sps,
+        pruned_sps,
+        gqa_sps,
+        prune_rate: pruned as f64 / (visits as f64).max(1.0),
+    }
+}
+
+/// Sweep [`measure_scoring_lane`] across context lengths.
+pub fn run_scoring_lane(
+    scale: Scale,
+    context_lengths: &[usize],
+    sparsity: f64,
+    group: usize,
+    steps: usize,
+) -> Vec<ScoringLanePoint> {
+    context_lengths
+        .iter()
+        .map(|&n| measure_scoring_lane(n, scale.dim, sparsity, group, steps, scale.seed))
+        .collect()
+}
+
+/// Render the scoring-kernel comparison.
+pub fn scoring_lane_table(points: &[ScoringLanePoint], sparsity: f64) -> Table {
+    let mut t = Table::new(
+        &format!("SOCKET scoring kernels ({sparsity}x sparsity): selections/s"),
+        &["Context", "Exhaustive", "Pruned", "Prune x", "GQA(g)", "GQA x", "Prune rate"],
+    );
+    for p in points {
+        t.row(vec![
+            p.n.to_string(),
+            fnum(p.exhaustive_sps, 1),
+            fnum(p.pruned_sps, 1),
+            format!("{}x", fnum(p.pruned_sps / p.exhaustive_sps.max(1e-9), 2)),
+            format!("{} (g={})", fnum(p.gqa_sps, 1), p.group),
+            format!("{}x", fnum(p.gqa_sps / p.exhaustive_sps.max(1e-9), 2)),
+            format!("{}%", fnum(100.0 * p.prune_rate, 1)),
+        ]);
+    }
+    t
+}
+
+/// Serialize the scoring lane for the `BENCH_*.json` artifact.
+pub fn scoring_lane_json(points: &[ScoringLanePoint]) -> Json {
+    let rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .set("context", p.n)
+                .set("group", p.group)
+                .set("exhaustive_sps", p.exhaustive_sps)
+                .set("pruned_sps", p.pruned_sps)
+                .set("pruned_speedup", p.pruned_sps / p.exhaustive_sps.max(1e-9))
+                .set("gqa_sps", p.gqa_sps)
+                .set("gqa_speedup", p.gqa_sps / p.exhaustive_sps.max(1e-9))
+                .set("prune_rate", p.prune_rate)
+        })
+        .collect();
+    Json::obj().set("bench", "throughput_scoring_lane").set("rows", Json::Arr(rows))
+}
+
 /// Per-method serving lane: one row per `selector::registry` method,
 /// decoding over the paged pool exactly like `DecodeEngine` does —
 /// paged-native index build at prefill, then per step: `select_into`
@@ -517,6 +671,23 @@ mod tests {
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_method_lane"));
         assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), pts.len());
+    }
+
+    #[test]
+    fn scoring_lane_measures_all_three_kernels() {
+        let pts = [measure_scoring_lane(1024, 32, 16.0, 4, 2, 7)];
+        let p = &pts[0];
+        assert_eq!(p.n, 1024);
+        assert_eq!(p.group, 4);
+        for sps in [p.exhaustive_sps, p.pruned_sps, p.gqa_sps] {
+            assert!(sps > 0.0 && sps.is_finite());
+        }
+        assert!((0.0..=1.0).contains(&p.prune_rate), "rate {}", p.prune_rate);
+        assert_eq!(scoring_lane_table(&pts, 16.0).n_rows(), 1);
+        let doc = scoring_lane_json(&pts);
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_scoring_lane"));
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -6,6 +6,15 @@
 /// Tokens per page. 16 matches vLLM's default block size.
 pub const PAGE_TOKENS: usize = 16;
 
+// The lsh scoring blocks are a whole number of KV pages, so a hash
+// block never straddles a page boundary: pruning a block skips an
+// exact set of pages, and a page's tokens always share one block's
+// summaries.
+const _: () = assert!(
+    crate::lsh::BLOCK_TOKENS % PAGE_TOKENS == 0,
+    "lsh::BLOCK_TOKENS must be a whole number of KV pages"
+);
+
 /// Physical page pool holding K and V for all sequences.
 #[derive(Debug)]
 pub struct PagedKvCache {

@@ -12,8 +12,10 @@ pub struct HashStore {
 }
 
 impl HashStore {
-    pub fn empty(l: usize) -> HashStore {
-        HashStore { hashes: KeyHashes { n: 0, l, bucket_ids: Vec::new(), value_norms: Vec::new() } }
+    /// An empty store for `l` tables over a bucket space of size `r`
+    /// (= 2^P; appended ids are validated against it).
+    pub fn empty(l: usize, r: usize) -> HashStore {
+        HashStore { hashes: KeyHashes::empty(l, r) }
     }
 
     pub fn len(&self) -> usize {
@@ -39,7 +41,10 @@ pub struct LayerCache {
 
 impl LayerCache {
     pub fn new(params: LshParams, dim: usize, seed: u64) -> LayerCache {
-        LayerCache { scorer: SoftScorer::new(params, dim, seed), store: HashStore::empty(params.l) }
+        LayerCache {
+            scorer: SoftScorer::new(params, dim, seed),
+            store: HashStore::empty(params.l, params.buckets()),
+        }
     }
 
     /// Prefill: hash a block of keys (Algorithm 1).
@@ -48,9 +53,7 @@ impl LayerCache {
         if self.store.is_empty() {
             self.store.hashes = hashed;
         } else {
-            for j in 0..hashed.n {
-                self.store.hashes.push(hashed.key_row(j), hashed.value_norms[j]);
-            }
+            self.store.hashes.extend_from(&hashed);
         }
     }
 
@@ -146,7 +149,7 @@ mod tests {
         let v2 = Matrix::from_vec(8, dim, vals.data[12 * dim..].to_vec());
         inc.prefill(&k1, &v1);
         inc.prefill(&k2, &v2);
-        assert_eq!(bulk.store.hashes.bucket_ids, inc.store.hashes.bucket_ids);
+        assert_eq!(bulk.store.hashes.to_row_major(), inc.store.hashes.to_row_major());
     }
 
     #[test]

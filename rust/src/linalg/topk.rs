@@ -76,6 +76,11 @@ impl TopK {
         }
     }
 
+    /// The selection size this heap was built for.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -94,6 +99,61 @@ impl TopK {
     /// Extract just the indices, sorted by descending score.
     pub fn into_indices(self) -> Vec<usize> {
         self.into_sorted().into_iter().map(|(i, _)| i).collect()
+    }
+}
+
+/// Branch-and-bound top-k: a [`TopK`] plus the streaming k-th-score
+/// pruning threshold. Block-pruned scoring kernels test each candidate
+/// block's admissible score upper bound against [`BoundHeap::prunes`]
+/// and skip the block when no member could enter the selection — the
+/// skipped keys are exactly keys a plain `TopK` fed every score would
+/// have rejected (its `push` requires a *strictly* greater score), so
+/// the surviving selection is bit-identical to the exhaustive one.
+#[derive(Debug)]
+pub struct BoundHeap {
+    tk: TopK,
+}
+
+impl BoundHeap {
+    pub fn new(k: usize) -> BoundHeap {
+        BoundHeap { tk: TopK::new(k) }
+    }
+
+    /// Offer a candidate (NaN scores are ignored, as in [`TopK`]).
+    #[inline]
+    pub fn push(&mut self, score: f32, index: usize) {
+        self.tk.push(score, index);
+    }
+
+    /// Whether k candidates are held — only then may anything be
+    /// pruned (an unfilled heap accepts every score, even -inf).
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.tk.len() == self.tk.k()
+    }
+
+    /// The current pruning threshold: the k-th best score seen so far,
+    /// or -inf while fewer than k candidates are held.
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        self.tk.threshold().unwrap_or(f32::NEG_INFINITY)
+    }
+
+    /// True when a candidate set whose scores are all `<= ub` cannot
+    /// change the selection: the heap is full and even `ub` itself
+    /// would be rejected (push requires strictly beating the
+    /// threshold, so `ub == threshold` still prunes).
+    #[inline]
+    pub fn prunes(&self, ub: f32) -> bool {
+        match self.tk.threshold() {
+            Some(t) => ub <= t,
+            None => false,
+        }
+    }
+
+    /// Extract (index, score) pairs sorted by descending score.
+    pub fn into_sorted(self) -> Vec<(usize, f32)> {
+        self.tk.into_sorted()
     }
 }
 
@@ -237,6 +297,51 @@ mod tests {
     fn all_equal_scores_select_first_k_indices() {
         let s = [3.0f32; 7];
         assert_eq!(top_k_indices(&s, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn bound_heap_threshold_streams() {
+        let mut bh = BoundHeap::new(2);
+        assert!(!bh.is_full());
+        assert_eq!(bh.bound(), f32::NEG_INFINITY);
+        assert!(!bh.prunes(f32::NEG_INFINITY), "unfilled heap may never prune");
+        bh.push(1.0, 0);
+        bh.push(3.0, 1);
+        assert!(bh.is_full());
+        assert_eq!(bh.bound(), 1.0);
+        assert!(bh.prunes(1.0), "ub == threshold prunes: push requires strict >");
+        assert!(!bh.prunes(1.0 + 1e-6));
+        bh.push(2.0, 2);
+        assert_eq!(bh.bound(), 2.0);
+        assert_eq!(bh.into_sorted(), vec![(1, 3.0), (2, 2.0)]);
+    }
+
+    #[test]
+    fn prop_bound_heap_pruning_is_lossless() {
+        // Feeding every score vs skipping whole chunks whose true max
+        // is ≤ the streaming threshold must yield identical selections
+        // — the branch-and-bound identity the scoring kernels rely on.
+        check_default("bound-heap-lossless", |rng, _| {
+            let n = gen::size(rng, 1, 600);
+            let k = 1 + rng.below_usize(n);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut plain = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                plain.push(s, i);
+            }
+            let mut bh = BoundHeap::new(k);
+            for (c, chunk) in scores.chunks(7).enumerate() {
+                let ub = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if bh.is_full() && bh.prunes(ub) {
+                    continue;
+                }
+                for (i, &s) in chunk.iter().enumerate() {
+                    bh.push(s, c * 7 + i);
+                }
+            }
+            prop_assert!(bh.into_sorted() == plain.into_sorted(), "n={n} k={k}");
+            Ok(())
+        });
     }
 
     #[test]

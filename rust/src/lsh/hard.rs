@@ -4,9 +4,10 @@
 //! A key's score is the number of tables in which its bucket equals the
 //! query's bucket: `s_hard(k_j, q) = Σ_ℓ 𝟙[b_j^(ℓ) = b_q^(ℓ)]`.
 
-use crate::linalg::TopK;
+use crate::linalg::{BoundHeap, TopK};
 use crate::lsh::params::LshParams;
-use crate::lsh::simhash::{KeyHashes, SimHash};
+use crate::lsh::simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
+use crate::lsh::soft::PruneStats;
 
 /// Hard collision scorer over the same cached [`KeyHashes`] as SOCKET —
 /// identical memory footprint at identical (P, L).
@@ -67,6 +68,57 @@ impl HardScorer {
             tk.push(s, j);
         }
         tk.into_indices()
+    }
+
+    /// Block-pruned top-k over `count_j · ‖v_j‖`: the SoA port of the
+    /// shared collision kernel with the same branch-and-bound as
+    /// `SoftScorer::select_pruned_into`. A block's bound is the number
+    /// of tables whose summary contains the query's bucket, times the
+    /// block max norm — counts are small integers (exact in f32) and
+    /// f32 products are monotone on non-negative operands, so the bound
+    /// dominates every resident key's computed score and pruning is
+    /// lossless. Bit-identical (indices and scores) to the exhaustive
+    /// [`HardScorer::scores_into`] + `top_k` pipeline.
+    pub fn select_pruned_into(
+        &self,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+        indices: &mut Vec<usize>,
+        scores: &mut Vec<f32>,
+    ) -> PruneStats {
+        indices.clear();
+        scores.clear();
+        let mut stats = PruneStats::default();
+        let n = hashes.n;
+        if n == 0 || k == 0 {
+            return stats;
+        }
+        let k = k.min(n);
+        let qb = self.hash.hash_one(q);
+        let mut heap = BoundHeap::new(k);
+        let mut counts = [0.0f32; BLOCK_TOKENS];
+        for blk in 0..hashes.n_blocks() {
+            stats.blocks += 1;
+            let blen = hashes.block_len(blk);
+            let base = blk * BLOCK_TOKENS;
+            if heap.is_full() {
+                let ub = hashes.block_collision_bound(blk, &qb) * hashes.block_max_norm(blk);
+                if heap.prunes(ub) {
+                    stats.pruned += 1;
+                    continue;
+                }
+            }
+            hashes.block_collision_counts(blk, &qb, &mut counts);
+            for (j, &c) in counts[..blen].iter().enumerate() {
+                heap.push(c * hashes.value_norms[base + j], base + j);
+            }
+        }
+        for (i, s) in heap.into_sorted() {
+            indices.push(i);
+            scores.push(s);
+        }
+        stats
     }
 }
 
@@ -171,6 +223,45 @@ mod tests {
         for j in 0..40 {
             assert_eq!(got[j], raw[j] * hashes.value_norms[j], "key {j}");
         }
+    }
+
+    #[test]
+    fn prop_pruned_select_matches_exhaustive() {
+        // The SoA/pruned port of the shared collision kernel must be
+        // bit-identical (indices and scores) to the scalar reference —
+        // across block-straddling sizes, ragged tails, and mid-decode
+        // appends that mutate the tail summary.
+        check_default("hard-pruned-vs-exhaustive", |rng, _| {
+            let dim = gen::size(rng, 4, 32);
+            let p = 1 + rng.below_usize(8);
+            let l = 1 + rng.below_usize(16);
+            let h = HardScorer::new(LshParams { p, l, tau: 0.5 }, dim, rng.next_u64());
+            let n = 1 + rng.below_usize(2 * crate::lsh::simhash::BLOCK_TOKENS + 11);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let vals = Matrix::gaussian(n, dim, rng);
+            let mut hashes = h.hash_keys(&keys, &vals);
+            if rng.below_usize(2) == 0 {
+                for _ in 0..rng.below_usize(24) {
+                    let nk = rng.normal_vec(dim);
+                    hashes.push(&h.hash.hash_one(&nk), rng.next_f32() * 2.0);
+                }
+            }
+            let q = rng.normal_vec(dim);
+            let k = 1 + rng.below_usize(hashes.n + 2);
+            // Exhaustive reference: full scores + plain TopK.
+            let scores = h.scores(&q, &hashes);
+            let mut tk = TopK::new(k.min(hashes.n));
+            for (j, &s) in scores.iter().enumerate() {
+                tk.push(s, j);
+            }
+            let want = tk.into_sorted();
+            let mut idx = vec![9usize; 3]; // stale
+            let mut sc = vec![0.5f32; 7];
+            h.select_pruned_into(&q, &hashes, k, &mut idx, &mut sc);
+            let got: Vec<(usize, f32)> = idx.into_iter().zip(sc).collect();
+            prop_assert!(got == want, "n={} k={k}: {got:?} vs {want:?}", hashes.n);
+            Ok(())
+        });
     }
 
     #[test]

@@ -16,5 +16,5 @@ pub mod soft;
 
 pub use hard::HardScorer;
 pub use params::{LshParams, MemoryBudget};
-pub use simhash::{KeyHashes, SimHash};
-pub use soft::{SoftHasher, SoftScorer};
+pub use simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
+pub use soft::{GroupLane, PruneStats, SoftHasher, SoftScorer};

@@ -4,11 +4,26 @@
 //! `W^(ℓ)`. A key `k` hashes to the bucket whose id is the packed sign
 //! pattern of `W^(ℓ) k`. Bucket ids are stored packed (`P ≤ 16` bits per
 //! table), giving the paper's `L·P` bits/token memory footprint.
+//!
+//! Storage is **table-major SoA blocks** ([`BLOCK_TOKENS`] keys per
+//! block, a whole number of paged-KV pages): within a block, one table's
+//! bucket ids for all keys are contiguous, so the scoring hot paths
+//! stream table-outer/key-inner instead of gathering an `L`-wide row per
+//! key. Each block additionally carries a per-table summary (the set of
+//! distinct bucket ids present) plus the block's max value norm, from
+//! which the scorers compute *admissible* per-block score upper bounds —
+//! the branch-and-bound pruning of `SoftScorer::select_pruned_into` and
+//! `HardScorer::select_pruned_into`.
 
 use crate::linalg::Matrix;
 use crate::lsh::params::LshParams;
 use crate::util::pool::WorkerPool;
 use crate::util::rng::Pcg64;
+
+/// Keys per SoA hash block. A multiple of the paged-KV page size
+/// (`kvcache::PAGE_TOKENS`, asserted there), so block boundaries always
+/// land on page boundaries and a page never straddles two blocks.
+pub const BLOCK_TOKENS: usize = 64;
 
 /// The hyperplanes of `L` independent SimHash tables.
 #[derive(Clone, Debug)]
@@ -19,54 +34,276 @@ pub struct SimHash {
     planes: Vec<Matrix>,
 }
 
-/// Packed bucket ids for a set of keys: `ids[j * L + ℓ]` is key j's
-/// bucket in table ℓ (a value in `0..2^P`), plus cached value norms.
+/// Packed bucket ids for a set of keys in table-major SoA blocks, plus
+/// cached value norms and per-block pruning summaries.
+///
+/// Key `j`'s bucket in table `t` lives at
+/// `data[(j / B) * L * B + t * B + j % B]` with `B = BLOCK_TOKENS`: the
+/// `B` ids of one (block, table) pair are contiguous. `data` always
+/// holds whole blocks (the tail block is allocated full-size and filled
+/// as keys arrive), so per-block slices are always in range.
+///
+/// Every stored id is validated against the bucket-space size `R = 2^P`
+/// once, at construction / [`KeyHashes::push`] — the scoring kernels'
+/// unchecked gathers rely on this invariant instead of re-masking ids
+/// on the hot path.
 #[derive(Clone, Debug)]
 pub struct KeyHashes {
     pub n: usize,
     pub l: usize,
-    /// Row-major `n x L` bucket ids. u16 suffices for P <= 16.
-    pub bucket_ids: Vec<u16>,
+    /// Bucket-space size (`2^P`); every id in `data` is `< r`.
+    r: usize,
+    /// Table-major SoA blocks (see type docs).
+    data: Vec<u16>,
     /// ‖v_j‖₂ cached at prefill (Alg. 1 returns these).
     pub value_norms: Vec<f32>,
+    summaries: BlockSummaries,
+}
+
+/// Per-block pruning summaries: for each (block, table) the distinct
+/// bucket ids present (insertion-ordered, stride [`BLOCK_TOKENS`]), and
+/// per block the max cached value norm. Maintained incrementally by
+/// [`KeyHashes::push`]; the scorers reduce them to admissible per-block
+/// score upper bounds.
+#[derive(Clone, Debug, Default)]
+struct BlockSummaries {
+    /// Distinct ids of (block, table) at
+    /// `ids[(blk * l + t) * BLOCK_TOKENS..][..lens[blk * l + t]]`.
+    ids: Vec<u16>,
+    /// Distinct-id count per (block, table).
+    lens: Vec<u16>,
+    /// Max ‖v‖₂ per block (0.0 for a block with no keys yet).
+    max_norm: Vec<f32>,
+}
+
+impl BlockSummaries {
+    #[inline]
+    fn table_ids(&self, blk: usize, table: usize, l: usize) -> &[u16] {
+        let cell = blk * l + table;
+        let base = cell * BLOCK_TOKENS;
+        &self.ids[base..base + self.lens[cell] as usize]
+    }
+
+    /// Record one key's id in (blk, table); dedups against the ids
+    /// already present.
+    #[inline]
+    fn note(&mut self, blk: usize, table: usize, l: usize, id: u16) {
+        let cell = blk * l + table;
+        let base = cell * BLOCK_TOKENS;
+        let len = self.lens[cell] as usize;
+        if !self.ids[base..base + len].contains(&id) {
+            self.ids[base + len] = id;
+            self.lens[cell] = (len + 1) as u16;
+        }
+    }
+
+    /// Extend the summary arrays with one fresh (all-empty) block.
+    fn grow_block(&mut self, l: usize) {
+        self.ids.resize(self.ids.len() + l * BLOCK_TOKENS, 0);
+        self.lens.resize(self.lens.len() + l, 0);
+        self.max_norm.push(0.0);
+    }
 }
 
 impl KeyHashes {
+    /// An empty store for `l` tables over a bucket space of size `r`.
+    pub fn empty(l: usize, r: usize) -> KeyHashes {
+        assert!(l > 0, "L must be positive");
+        assert!(r > 0 && r <= 1 << 16, "bucket space {r} out of u16 range");
+        KeyHashes {
+            n: 0,
+            l,
+            r,
+            data: Vec::new(),
+            value_norms: Vec::new(),
+            summaries: BlockSummaries::default(),
+        }
+    }
+
+    /// Build from a row-major `n x L` id table (the layout the pooled
+    /// hashing fills, one key row per job). Validates every id against
+    /// `r` once, here — the scoring kernels then gather unchecked.
+    pub fn from_row_major(
+        l: usize,
+        r: usize,
+        row_major: &[u16],
+        value_norms: Vec<f32>,
+    ) -> KeyHashes {
+        let mut kh = KeyHashes::empty(l, r);
+        assert_eq!(row_major.len() % l, 0, "id table is not n x L");
+        let n = row_major.len() / l;
+        assert_eq!(value_norms.len(), n, "value norms length mismatch");
+        kh.data = vec![0u16; n.div_ceil(BLOCK_TOKENS) * l * BLOCK_TOKENS];
+        for blk in 0..n.div_ceil(BLOCK_TOKENS) {
+            kh.summaries.grow_block(l);
+            let base = blk * BLOCK_TOKENS;
+            for slot in 0..BLOCK_TOKENS.min(n - base) {
+                let j = base + slot;
+                let row = &row_major[j * l..(j + 1) * l];
+                for (t, &b) in row.iter().enumerate() {
+                    assert!((b as usize) < r, "bucket id {b} out of range for R={r}");
+                    kh.data[(blk * l + t) * BLOCK_TOKENS + slot] = b;
+                    kh.summaries.note(blk, t, l, b);
+                }
+                let norm = value_norms[j];
+                kh.summaries.max_norm[blk] = kh.summaries.max_norm[blk].max(norm);
+            }
+        }
+        kh.n = n;
+        kh.value_norms = value_norms;
+        kh
+    }
+
+    /// Bucket-space size (`2^P`) the stored ids were validated against.
+    #[inline]
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    #[inline]
+    fn slot_of(&self, key: usize, table: usize) -> usize {
+        (key / BLOCK_TOKENS) * self.l * BLOCK_TOKENS + table * BLOCK_TOKENS + key % BLOCK_TOKENS
+    }
+
     #[inline]
     pub fn bucket(&self, key: usize, table: usize) -> u16 {
-        self.bucket_ids[key * self.l + table]
+        self.data[self.slot_of(key, table)]
     }
 
-    /// All L bucket ids of one key.
+    /// All L bucket ids of one key, gathered out of the SoA blocks.
+    /// (Allocates — a compat/diagnostic view, not a hot path; the
+    /// scoring kernels iterate blocks directly.)
+    pub fn key_row(&self, key: usize) -> Vec<u16> {
+        (0..self.l).map(|t| self.bucket(key, t)).collect()
+    }
+
+    /// The full id table in the legacy row-major `n x L` layout
+    /// (equivalence tests against the pre-SoA reference).
+    pub fn to_row_major(&self) -> Vec<u16> {
+        let mut out = Vec::with_capacity(self.n * self.l);
+        for j in 0..self.n {
+            for t in 0..self.l {
+                out.push(self.bucket(j, t));
+            }
+        }
+        out
+    }
+
+    /// Number of SoA blocks currently allocated.
     #[inline]
-    pub fn key_row(&self, key: usize) -> &[u16] {
-        &self.bucket_ids[key * self.l..(key + 1) * self.l]
+    pub fn n_blocks(&self) -> usize {
+        self.n.div_ceil(BLOCK_TOKENS)
     }
 
-    /// Append a single new key (decode-time cache extension).
+    /// Keys resident in block `blk` (the tail block may be partial).
+    #[inline]
+    pub fn block_len(&self, blk: usize) -> usize {
+        (self.n - blk * BLOCK_TOKENS).min(BLOCK_TOKENS)
+    }
+
+    /// Block `blk`'s full `L x BLOCK_TOKENS` id storage (table-major;
+    /// only the first [`KeyHashes::block_len`] slots of each table row
+    /// hold live keys).
+    #[inline]
+    pub fn block_data(&self, blk: usize) -> &[u16] {
+        let base = blk * self.l * BLOCK_TOKENS;
+        &self.data[base..base + self.l * BLOCK_TOKENS]
+    }
+
+    /// The distinct bucket ids block `blk` occupies in `table`
+    /// (insertion-ordered). Every live key's id is a member — the
+    /// invariant the pruning bounds rest on.
+    #[inline]
+    pub fn block_table_ids(&self, blk: usize, table: usize) -> &[u16] {
+        self.summaries.table_ids(blk, table, self.l)
+    }
+
+    /// Max cached value norm of block `blk`.
+    #[inline]
+    pub fn block_max_norm(&self, blk: usize) -> f32 {
+        self.summaries.max_norm[blk]
+    }
+
+    /// Append a single new key (decode-time cache extension), extending
+    /// the tail block's storage and summaries in place. Ids are
+    /// validated here — the scoring kernels gather unchecked.
     pub fn push(&mut self, buckets: &[u16], value_norm: f32) {
         assert_eq!(buckets.len(), self.l);
-        self.bucket_ids.extend_from_slice(buckets);
+        let slot = self.n % BLOCK_TOKENS;
+        if slot == 0 {
+            self.data.resize(self.data.len() + self.l * BLOCK_TOKENS, 0);
+            self.summaries.grow_block(self.l);
+        }
+        let blk = self.n / BLOCK_TOKENS;
+        for (t, &b) in buckets.iter().enumerate() {
+            assert!((b as usize) < self.r, "bucket id {b} out of range for R={}", self.r);
+            self.data[(blk * self.l + t) * BLOCK_TOKENS + slot] = b;
+            self.summaries.note(blk, t, self.l, b);
+        }
+        self.summaries.max_norm[blk] = self.summaries.max_norm[blk].max(value_norm);
         self.value_norms.push(value_norm);
         self.n += 1;
+    }
+
+    /// Append every key of `other` (same L and bucket space) — the
+    /// incremental-prefill path. One reusable row buffer instead of a
+    /// per-key allocation.
+    pub fn extend_from(&mut self, other: &KeyHashes) {
+        assert_eq!(self.l, other.l, "table count mismatch");
+        assert_eq!(self.r, other.r, "bucket space mismatch");
+        let mut row = vec![0u16; self.l];
+        for j in 0..other.n {
+            for (t, slot) in row.iter_mut().enumerate() {
+                *slot = other.bucket(j, t);
+            }
+            self.push(&row, other.value_norms[j]);
+        }
     }
 
     /// Per-key table-collision counts against a query's bucket row
     /// (`q_buckets[t]` = the query's bucket in table t), written into a
     /// reusable buffer as f32 (counts ≤ L are exact in f32). The shared
-    /// kernel of hard-LSH scoring and MagicPIG candidate sampling.
+    /// kernel of hard-LSH scoring and MagicPIG candidate sampling —
+    /// streams the SoA blocks table-outer/key-inner.
     pub fn collision_counts_into(&self, q_buckets: &[u16], out: &mut Vec<f32>) {
         assert_eq!(q_buckets.len(), self.l);
         out.clear();
         out.resize(self.n, 0.0);
-        for (j, slot) in out.iter_mut().enumerate() {
-            let row = self.key_row(j);
-            let mut c = 0u32;
-            for t in 0..self.l {
-                c += (row[t] == q_buckets[t]) as u32;
-            }
-            *slot = c as f32;
+        for blk in 0..self.n_blocks() {
+            let blen = self.block_len(blk);
+            self.block_collision_counts(blk, q_buckets, &mut out[blk * BLOCK_TOKENS..][..blen]);
         }
+    }
+
+    /// Collision counts of block `blk`'s resident keys against
+    /// `q_buckets`, written to `counts[..block_len(blk)]` — the shared
+    /// per-block kernel of [`KeyHashes::collision_counts_into`] and the
+    /// pruned hard-LSH walk (counts accumulate in t order; ≤ L, exact
+    /// in f32).
+    pub fn block_collision_counts(&self, blk: usize, q_buckets: &[u16], counts: &mut [f32]) {
+        assert_eq!(q_buckets.len(), self.l);
+        let blen = self.block_len(blk);
+        let block = self.block_data(blk);
+        let counts = &mut counts[..blen];
+        counts.fill(0.0);
+        for (t, &qb) in q_buckets.iter().enumerate() {
+            let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
+            for (c, &b) in counts.iter_mut().zip(row) {
+                *c += (b == qb) as u32 as f32;
+            }
+        }
+    }
+
+    /// Upper bound on any key-in-block collision count against
+    /// `q_buckets`: the number of tables whose block summary contains
+    /// the query's bucket. Admissible because a key can only collide in
+    /// table t if its id — a summary member — equals `q_buckets[t]`.
+    pub fn block_collision_bound(&self, blk: usize, q_buckets: &[u16]) -> f32 {
+        let mut c = 0u32;
+        for (t, &qb) in q_buckets.iter().enumerate() {
+            c += self.block_table_ids(blk, t).contains(&qb) as u32;
+        }
+        c as f32
     }
 }
 
@@ -118,7 +355,7 @@ impl SimHash {
                 bucket_ids[j * l + t] = self.bucket_of(t, key);
             }
         }
-        KeyHashes { n, l, bucket_ids, value_norms: values.row_norms() }
+        KeyHashes::from_row_major(l, self.params.buckets(), &bucket_ids, values.row_norms())
     }
 
     /// Algorithm 1 across a worker pool: each key's `L`-table signature
@@ -136,7 +373,7 @@ impl SimHash {
                 *slot = self.bucket_of(t, key);
             }
         });
-        KeyHashes { n, l, bucket_ids, value_norms: values.row_norms() }
+        KeyHashes::from_row_major(l, self.params.buckets(), &bucket_ids, values.row_norms())
     }
 
     /// Theoretical SimHash collision probability for one plane:
@@ -296,7 +533,7 @@ mod tests {
         let pool = WorkerPool::new(4);
         let serial = h.hash_keys(&keys, &vals);
         let pooled = h.hash_keys_with(&keys, &vals, &pool);
-        assert_eq!(serial.bucket_ids, pooled.bucket_ids);
+        assert_eq!(serial.to_row_major(), pooled.to_row_major());
         assert_eq!(serial.value_norms, pooled.value_norms);
     }
 
@@ -311,7 +548,157 @@ mod tests {
         let buckets = h.hash_one(&newk);
         kh.push(&buckets, 2.5);
         assert_eq!(kh.n, 5);
-        assert_eq!(kh.key_row(4), buckets.as_slice());
+        assert_eq!(kh.key_row(4), buckets);
         assert_eq!(kh.value_norms[4], 2.5);
+    }
+
+    #[test]
+    fn soa_layout_round_trips_row_major() {
+        // from_row_major / bucket / key_row / to_row_major all agree,
+        // across multiple blocks and a partial tail.
+        let l = 5;
+        let r = 32;
+        let n = 2 * BLOCK_TOKENS + 17;
+        let mut rng = Pcg64::seeded(9);
+        let ids: Vec<u16> = (0..n * l).map(|_| rng.below(r as u64) as u16).collect();
+        let norms: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let kh = KeyHashes::from_row_major(l, r, &ids, norms.clone());
+        assert_eq!(kh.n, n);
+        assert_eq!(kh.n_blocks(), 3);
+        assert_eq!(kh.block_len(2), 17);
+        assert_eq!(kh.to_row_major(), ids);
+        for j in [0, 1, BLOCK_TOKENS - 1, BLOCK_TOKENS, n - 1] {
+            assert_eq!(kh.key_row(j), ids[j * l..(j + 1) * l].to_vec(), "key {j}");
+        }
+        assert_eq!(kh.value_norms, norms);
+    }
+
+    #[test]
+    fn push_matches_bulk_construction() {
+        // Incremental pushes and from_row_major must agree on layout,
+        // summaries, and norms — including a tail block mutated in
+        // place across a block boundary.
+        let l = 4;
+        let r = 64;
+        let n = BLOCK_TOKENS + 9;
+        let mut rng = Pcg64::seeded(10);
+        let ids: Vec<u16> = (0..n * l).map(|_| rng.below(r as u64) as u16).collect();
+        let norms: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+        let bulk = KeyHashes::from_row_major(l, r, &ids, norms.clone());
+        let mut inc = KeyHashes::empty(l, r);
+        for j in 0..n {
+            inc.push(&ids[j * l..(j + 1) * l], norms[j]);
+        }
+        assert_eq!(inc.n, bulk.n);
+        assert_eq!(inc.to_row_major(), bulk.to_row_major());
+        for blk in 0..bulk.n_blocks() {
+            assert_eq!(inc.block_max_norm(blk), bulk.block_max_norm(blk), "block {blk}");
+            for t in 0..l {
+                assert_eq!(inc.block_table_ids(blk, t), bulk.block_table_ids(blk, t));
+            }
+        }
+    }
+
+    #[test]
+    fn extend_from_equals_bulk_hash_of_concatenation() {
+        let h = small();
+        let mut rng = Pcg64::seeded(14);
+        let k1 = Matrix::gaussian(70, 32, &mut rng);
+        let v1 = Matrix::gaussian(70, 32, &mut rng);
+        let k2 = Matrix::gaussian(30, 32, &mut rng);
+        let v2 = Matrix::gaussian(30, 32, &mut rng);
+        let mut inc = h.hash_keys(&k1, &v1);
+        inc.extend_from(&h.hash_keys(&k2, &v2));
+        let kall = Matrix::from_vec(100, 32, [k1.data, k2.data].concat());
+        let vall = Matrix::from_vec(100, 32, [v1.data, v2.data].concat());
+        let bulk = h.hash_keys(&kall, &vall);
+        assert_eq!(inc.n, 100);
+        assert_eq!(inc.to_row_major(), bulk.to_row_major());
+        assert_eq!(inc.value_norms, bulk.value_norms);
+        for blk in 0..bulk.n_blocks() {
+            assert_eq!(inc.block_max_norm(blk), bulk.block_max_norm(blk), "block {blk}");
+            for t in 0..bulk.l {
+                assert_eq!(inc.block_table_ids(blk, t), bulk.block_table_ids(blk, t));
+            }
+        }
+    }
+
+    #[test]
+    fn block_summaries_cover_every_resident_id() {
+        // The pruning invariant: every live key's id is a member of its
+        // block's per-table summary, and the block max norm dominates
+        // every resident norm.
+        let h = small();
+        let mut rng = Pcg64::seeded(11);
+        let n = BLOCK_TOKENS + 21;
+        let keys = Matrix::gaussian(n, 32, &mut rng);
+        let vals = Matrix::gaussian(n, 32, &mut rng);
+        let kh = h.hash_keys(&keys, &vals);
+        for j in 0..n {
+            let blk = j / BLOCK_TOKENS;
+            for t in 0..kh.l {
+                assert!(
+                    kh.block_table_ids(blk, t).contains(&kh.bucket(j, t)),
+                    "key {j} table {t} missing from summary"
+                );
+            }
+            assert!(kh.block_max_norm(blk) >= kh.value_norms[j], "key {j} norm");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn push_rejects_out_of_range_ids() {
+        // The satellite fix: out-of-range ids used to be silently
+        // masked by the release-mode gather; now they fail loudly at
+        // the single validated entry point.
+        let mut kh = KeyHashes::empty(3, 16);
+        kh.push(&[1, 2, 16], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn from_row_major_rejects_out_of_range_ids() {
+        let _ = KeyHashes::from_row_major(2, 8, &[0, 7, 8, 1], vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn collision_counts_match_scalar_reference() {
+        // The blocked SoA kernel against the obvious per-key scalar
+        // loop, across block boundaries and a partial tail.
+        let h = small();
+        let mut rng = Pcg64::seeded(12);
+        let n = 2 * BLOCK_TOKENS + 5;
+        let keys = Matrix::gaussian(n, 32, &mut rng);
+        let kh = h.hash_keys(&keys, &keys);
+        let q = rng.normal_vec(32);
+        let qb = h.hash_one(&q);
+        let mut got = vec![9.0f32; 3]; // stale, wrong size
+        kh.collision_counts_into(&qb, &mut got);
+        assert_eq!(got.len(), n);
+        for j in 0..n {
+            let want = (0..kh.l).filter(|&t| kh.bucket(j, t) == qb[t]).count() as f32;
+            assert_eq!(got[j], want, "key {j}");
+        }
+    }
+
+    #[test]
+    fn collision_bound_dominates_block_counts() {
+        let h = small();
+        let mut rng = Pcg64::seeded(13);
+        let n = BLOCK_TOKENS + 30;
+        let keys = Matrix::gaussian(n, 32, &mut rng);
+        let kh = h.hash_keys(&keys, &keys);
+        let q = rng.normal_vec(32);
+        let qb = h.hash_one(&q);
+        let mut counts = Vec::new();
+        kh.collision_counts_into(&qb, &mut counts);
+        for blk in 0..kh.n_blocks() {
+            let ub = kh.block_collision_bound(blk, &qb);
+            let base = blk * BLOCK_TOKENS;
+            for j in base..base + kh.block_len(blk) {
+                assert!(counts[j] <= ub, "key {j}: count {} > bound {ub}", counts[j]);
+            }
+        }
     }
 }

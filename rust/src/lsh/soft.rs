@@ -9,9 +9,9 @@
 //! * [`SoftScorer::select_top_k`] — Algorithm 3: deterministic top-k over
 //!   `ŵ_j · ‖v_j‖₂`.
 
-use crate::linalg::TopK;
+use crate::linalg::{BoundHeap, TopK};
 use crate::lsh::params::LshParams;
-use crate::lsh::simhash::{KeyHashes, SimHash};
+use crate::lsh::simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
 use crate::util::pool::WorkerPool;
 
 /// Query-side soft hashing (Algorithm 2).
@@ -130,6 +130,30 @@ impl SoftHasher {
     }
 }
 
+/// Pruning telemetry of one block-pruned selection pass: how many
+/// (lane, block) visits there were and how many the admissible bound
+/// skipped without scoring.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// (lane, block) pairs visited.
+    pub blocks: usize,
+    /// (lane, block) pairs pruned by the bound.
+    pub pruned: usize,
+}
+
+/// One lane of [`SoftScorer::select_pruned_group_into`]: a query's
+/// flattened `L x R` prob table plus the buffers receiving its
+/// selection.
+pub struct GroupLane<'a> {
+    /// This lane's per-table bucket distributions (as filled by
+    /// [`SoftHasher::bucket_probs_into`]).
+    pub probs: &'a [f32],
+    /// Receives the selected token ids, descending score.
+    pub indices: &'a mut Vec<usize>,
+    /// Receives the selected scores, parallel to `indices`.
+    pub scores: &'a mut Vec<f32>,
+}
+
 /// Key scoring + selection over a hashed KV cache (Algorithms 3–4).
 #[derive(Clone, Debug)]
 pub struct SoftScorer {
@@ -155,17 +179,24 @@ impl SoftScorer {
     }
 
     /// One key's soft collision mass against a query's prob table.
-    /// `table` is the flattened `L x R` distributions; `row` the key's
-    /// `L` bucket ids. Bounds checks are hoisted: bucket ids are
-    /// produced by `pack_signs` (< 2^P = R by construction) and row
-    /// length == L, so the unchecked accesses are provably in range
-    /// (§Perf).
+    /// `table` is the flattened `L x R` distributions; the key's bucket
+    /// ids are gathered out of its SoA block. Bounds checks are
+    /// hoisted: every stored id was validated `< R` at [`KeyHashes`]
+    /// construction/push (the satellite fix for the old silent
+    /// release-mode id masking), and the block slice is always a full
+    /// `L x BLOCK_TOKENS` allocation, so the unchecked accesses are
+    /// provably in range (§Perf, see EXPERIMENTS.md).
     #[inline]
-    fn score_key(table: &[f32], r: usize, row: &[u16]) -> f32 {
+    fn score_key(table: &[f32], r: usize, hashes: &KeyHashes, j: usize) -> f32 {
+        let block = hashes.block_data(j / BLOCK_TOKENS);
+        let slot = j % BLOCK_TOKENS;
         let mut acc = 0.0f32;
-        for (t, &b) in row.iter().enumerate() {
-            debug_assert!((b as usize) < r);
-            acc += unsafe { *table.get_unchecked(t * r + (b as usize & (r - 1))) };
+        for t in 0..hashes.l {
+            // SAFETY: block.len() == L * BLOCK_TOKENS and slot <
+            // BLOCK_TOKENS; the loaded id is < r by construction and
+            // the caller asserts table.len() == L * r.
+            let b = unsafe { *block.get_unchecked(t * BLOCK_TOKENS + slot) } as usize;
+            acc += unsafe { *table.get_unchecked(t * r + b) };
         }
         acc
     }
@@ -174,14 +205,27 @@ impl SoftScorer {
     /// *without* the value-norm weighting.
     pub fn raw_scores(&self, probs: &BucketProbs, hashes: &KeyHashes) -> Vec<f32> {
         assert_eq!(probs.l, hashes.l);
+        assert_eq!(probs.r, hashes.r());
         let l = hashes.l;
-        let mut out = vec![0.0f32; hashes.n];
-        // Hot path: iterate keys outer, tables inner; the prob table is
-        // L x R and stays in cache (R*L*4 bytes, e.g. 60*1024*4 = 240KB).
         let r = probs.r;
         let table = &probs.probs[..l * r];
-        for (j, slot) in out.iter_mut().enumerate() {
-            *slot = Self::score_key(table, r, hashes.key_row(j));
+        let mut out = vec![0.0f32; hashes.n];
+        // Stream the SoA blocks table-outer / key-inner: one (table,
+        // block) id row is contiguous, and the per-key accumulation
+        // order (t = 0..L) matches the per-key gather exactly, so the
+        // sums are bit-identical to [`SoftScorer::score_key`].
+        for blk in 0..hashes.n_blocks() {
+            let blen = hashes.block_len(blk);
+            let block = hashes.block_data(blk);
+            let acc = &mut out[blk * BLOCK_TOKENS..blk * BLOCK_TOKENS + blen];
+            for t in 0..l {
+                let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
+                let ptab = &table[t * r..(t + 1) * r];
+                for (a, &b) in acc.iter_mut().zip(row) {
+                    // SAFETY: ids validated < r at KeyHashes construction.
+                    *a += unsafe { *ptab.get_unchecked(b as usize) };
+                }
+            }
         }
         out
     }
@@ -197,11 +241,12 @@ impl SoftScorer {
         pool: &WorkerPool,
     ) -> Vec<f32> {
         assert_eq!(probs.l, hashes.l);
+        assert_eq!(probs.r, hashes.r());
         let l = hashes.l;
         let r = probs.r;
         let table = &probs.probs[..l * r];
         let mut out = vec![0.0f32; hashes.n];
-        pool.fill(&mut out, |j| Self::score_key(table, r, hashes.key_row(j)));
+        pool.fill(&mut out, |j| Self::score_key(table, r, hashes, j));
         out
     }
 
@@ -237,10 +282,11 @@ impl SoftScorer {
     ) {
         let l = hashes.l;
         assert_eq!(probs.len(), l * r, "prob table shape mismatch");
+        assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
         out.clear();
         out.resize(hashes.n, 0.0);
         let table = &probs[..l * r];
-        pool.fill(out, |j| Self::score_key(table, r, hashes.key_row(j)));
+        pool.fill(out, |j| Self::score_key(table, r, hashes, j));
         Self::weight_scores(out, hashes, None);
     }
 
@@ -255,6 +301,128 @@ impl SoftScorer {
         let mut s = self.raw_scores_with(probs, hashes, pool);
         Self::weight_scores(&mut s, hashes, mask);
         s
+    }
+
+    /// Admissible score upper bound for every key in block `blk`:
+    /// `(Σ_t max_{b ∈ S_t} p_t(b|q)) · max_{j ∈ blk} ‖v_j‖`, where
+    /// `S_t` is the block's distinct-bucket summary for table t. Each
+    /// per-table max dominates the corresponding term of every resident
+    /// key's score (the key's bucket is a summary member), the sums add
+    /// term-for-term in the same t order, and f32 addition and
+    /// multiplication are monotone on non-negative operands — so the
+    /// bound dominates every resident key's *computed f32* score, not
+    /// just its real-arithmetic value. That is the exactness guarantee
+    /// of the branch-and-bound selection.
+    pub fn block_bound(hashes: &KeyHashes, blk: usize, probs: &[f32], r: usize) -> f32 {
+        // The unchecked reads below are only in range for the bucket
+        // space the ids were validated against — enforce it here too,
+        // not just in the kernels, since this is a public entry point.
+        assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
+        assert!(probs.len() >= hashes.l * r, "prob table shape mismatch");
+        let mut sum = 0.0f32;
+        for t in 0..hashes.l {
+            let ptab = &probs[t * r..(t + 1) * r];
+            let mut m = 0.0f32;
+            for &b in hashes.block_table_ids(blk, t) {
+                // SAFETY: summary ids validated < r at construction.
+                let p = unsafe { *ptab.get_unchecked(b as usize) };
+                if p > m {
+                    m = p;
+                }
+            }
+            sum += m;
+        }
+        sum * hashes.block_max_norm(blk)
+    }
+
+    /// Algorithms 4→3 with block pruning: exact top-k over
+    /// `ŵ_j · ‖v_j‖₂` that skips whole hash blocks whose admissible
+    /// upper bound cannot beat the streaming k-th-score threshold.
+    /// Writes the selected indices (descending score) and their scores;
+    /// both are **bit-identical** to the exhaustive
+    /// [`SoftScorer::scores_into`] + `top_k_into` pipeline (see
+    /// [`SoftScorer::block_bound`] for why pruning is lossless).
+    /// Returns pruning telemetry.
+    pub fn select_pruned_into(
+        &self,
+        probs: &[f32],
+        r: usize,
+        hashes: &KeyHashes,
+        k: usize,
+        indices: &mut Vec<usize>,
+        scores: &mut Vec<f32>,
+    ) -> PruneStats {
+        let mut lanes = [GroupLane { probs, indices, scores }];
+        self.select_pruned_group_into(r, hashes, k, &mut lanes)
+    }
+
+    /// The GQA lane: [`SoftScorer::select_pruned_into`] for a *group*
+    /// of queries sharing one KV stream, in a single pass over the hash
+    /// blocks — each block's id rows are loaded once and scored for
+    /// every lane while cache-hot, amortizing the table walk across the
+    /// query heads of a GQA group. Each lane prunes against its own
+    /// streaming threshold; per-lane results are bit-identical to
+    /// per-query [`SoftScorer::select_pruned_into`] calls (lanes share
+    /// no state).
+    pub fn select_pruned_group_into(
+        &self,
+        r: usize,
+        hashes: &KeyHashes,
+        k: usize,
+        lanes: &mut [GroupLane<'_>],
+    ) -> PruneStats {
+        let l = hashes.l;
+        assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
+        for lane in lanes.iter_mut() {
+            assert_eq!(lane.probs.len(), l * r, "prob table shape mismatch");
+            lane.indices.clear();
+            lane.scores.clear();
+        }
+        let mut stats = PruneStats::default();
+        let n = hashes.n;
+        if n == 0 || k == 0 || lanes.is_empty() {
+            return stats;
+        }
+        let k = k.min(n);
+        let mut heaps: Vec<BoundHeap> = (0..lanes.len()).map(|_| BoundHeap::new(k)).collect();
+        let mut acc = [0.0f32; BLOCK_TOKENS];
+        for blk in 0..hashes.n_blocks() {
+            let blen = hashes.block_len(blk);
+            let base = blk * BLOCK_TOKENS;
+            let block = hashes.block_data(blk);
+            let norms = &hashes.value_norms[base..base + blen];
+            for (lane, heap) in lanes.iter().zip(heaps.iter_mut()) {
+                stats.blocks += 1;
+                // The bound is only worth computing once the heap holds
+                // k candidates (nothing may be pruned earlier).
+                if heap.is_full() && heap.prunes(Self::block_bound(hashes, blk, lane.probs, r)) {
+                    stats.pruned += 1;
+                    continue;
+                }
+                // Score the block table-outer / key-inner; per key the
+                // accumulation order (t = 0..L) matches the exhaustive
+                // gather exactly, so scores are bit-identical.
+                acc[..blen].fill(0.0);
+                for t in 0..l {
+                    let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
+                    let ptab = &lane.probs[t * r..(t + 1) * r];
+                    for (a, &b) in acc[..blen].iter_mut().zip(row) {
+                        // SAFETY: ids validated < r at construction.
+                        *a += unsafe { *ptab.get_unchecked(b as usize) };
+                    }
+                }
+                for (j, (&a, &norm)) in acc[..blen].iter().zip(norms).enumerate() {
+                    heap.push(a * norm, base + j);
+                }
+            }
+        }
+        for (lane, heap) in lanes.iter_mut().zip(heaps) {
+            for (i, s) in heap.into_sorted() {
+                lane.indices.push(i);
+                lane.scores.push(s);
+            }
+        }
+        stats
     }
 
     /// Full decode-side pipeline (Algorithms 2→4→3): soft-hash the query,
@@ -643,6 +811,199 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// Exhaustive reference: Alg. 2 + Alg. 4 scores over every key,
+    /// then a plain TopK — the pre-pruning pipeline, kept as the
+    /// bit-identity oracle.
+    fn exhaustive_reference(
+        s: &SoftScorer,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+    ) -> (Vec<usize>, Vec<f32>) {
+        let probs = s.hasher.bucket_probs(q);
+        let scores = s.scores(&probs, hashes, None);
+        let mut tk = TopK::new(k.min(hashes.n).max(1));
+        for (j, &x) in scores.iter().enumerate() {
+            tk.push(x, j);
+        }
+        let sorted = tk.into_sorted();
+        (sorted.iter().map(|p| p.0).collect(), sorted.iter().map(|p| p.1).collect())
+    }
+
+    fn pruned(
+        s: &SoftScorer,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+    ) -> (Vec<usize>, Vec<f32>, PruneStats) {
+        let probs = s.hasher.bucket_probs(q);
+        let mut idx = vec![77usize; 2]; // stale
+        let mut sc = vec![-3.0f32; 5];
+        let stats = s.select_pruned_into(&probs.probs, probs.r, hashes, k, &mut idx, &mut sc);
+        (idx, sc, stats)
+    }
+
+    #[test]
+    fn prop_pruned_select_bit_identical_to_exhaustive() {
+        // The tentpole acceptance bar: branch-and-bound selection over
+        // the SoA blocks returns exactly the exhaustive top-k — indices
+        // AND scores — across τ extremes, non-block-aligned tails, and
+        // adversarial bucket/norm distributions.
+        check("pruned-vs-exhaustive", PropConfig { cases: 40, seed: 0xB10C }, |rng, _| {
+            let dim = gen::size(rng, 4, 48);
+            let p = 1 + rng.below_usize(8);
+            let tau = [0.01f32, 0.3, 1.0, 1e4][rng.below_usize(4)];
+            let l = 1 + rng.below_usize(12);
+            let s = SoftScorer::new(LshParams { p, l, tau }, dim, rng.next_u64());
+            // Span multiple blocks with a ragged tail more often than not.
+            let n = 1 + rng.below_usize(3 * crate::lsh::simhash::BLOCK_TOKENS + 7);
+            let adversarial = rng.below_usize(3) == 0;
+            let mut keys = Matrix::gaussian(n, dim, rng);
+            let mut vals = Matrix::gaussian(n, dim, rng);
+            if adversarial {
+                // Every key identical (one bucket per table) and one
+                // huge-norm outlier: the degenerate distributions that
+                // stress tie handling and the norm-weighted bound.
+                let proto = rng.normal_vec(dim);
+                for j in 0..n {
+                    keys.row_mut(j).copy_from_slice(&proto);
+                }
+                let outlier = rng.below_usize(n);
+                for x in vals.row_mut(outlier) {
+                    *x *= 1000.0;
+                }
+            }
+            let mut hashes = s.hash_keys(&keys, &vals);
+            let q = rng.normal_vec(dim);
+            let k = 1 + rng.below_usize(n + 3);
+            let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, k);
+            let (got_i, got_s, _) = pruned(&s, &q, &hashes, k);
+            prop_assert!(
+                got_i == want_i,
+                "indices diverge (n={n} k={k} tau={tau}): {got_i:?} vs {want_i:?}"
+            );
+            prop_assert!(got_s == want_s, "scores diverge (n={n} k={k} tau={tau})");
+            // Mid-decode appends mutate the tail block's summary in
+            // place; equivalence must survive them.
+            for _ in 0..1 + rng.below_usize(20) {
+                let nk = rng.normal_vec(dim);
+                let buckets = s.hasher.simhash().hash_one(&nk);
+                hashes.push(&buckets, rng.next_f32() * 2.0);
+            }
+            let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, k);
+            let (got_i, got_s, _) = pruned(&s, &q, &hashes, k);
+            prop_assert!(got_i == want_i, "post-append indices diverge (n={} k={k})", hashes.n);
+            prop_assert!(got_s == want_s, "post-append scores diverge");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_block_bounds_are_admissible() {
+        // Theorem behind the pruning: every block's bound dominates the
+        // computed f32 score of every resident key — across τ extremes
+        // and degenerate bucket distributions.
+        check("block-bound-admissible", PropConfig { cases: 40, seed: 0xADB0 }, |rng, _| {
+            let dim = gen::size(rng, 4, 40);
+            let p = 1 + rng.below_usize(8);
+            let tau = [1e-3f32, 0.5, 1e5][rng.below_usize(3)];
+            let l = 1 + rng.below_usize(10);
+            let s = SoftScorer::new(LshParams { p, l, tau }, dim, rng.next_u64());
+            let n = 1 + rng.below_usize(2 * crate::lsh::simhash::BLOCK_TOKENS + 9);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let vals = Matrix::gaussian(n, dim, rng);
+            let mut hashes = s.hash_keys(&keys, &vals);
+            // Half the cases extend mid-decode so the tail summary is
+            // exercised in its mutated-in-place state.
+            if rng.below_usize(2) == 0 {
+                for _ in 0..rng.below_usize(30) {
+                    let nk = rng.normal_vec(dim);
+                    let buckets = s.hasher.simhash().hash_one(&nk);
+                    hashes.push(&buckets, rng.next_f32() * 3.0);
+                }
+            }
+            let q = rng.normal_vec(dim);
+            let probs = s.hasher.bucket_probs(&q);
+            let scores = s.scores(&probs, &hashes, None);
+            let bt = crate::lsh::simhash::BLOCK_TOKENS;
+            for blk in 0..hashes.n_blocks() {
+                let ub = SoftScorer::block_bound(&hashes, blk, &probs.probs, probs.r);
+                for j in blk * bt..blk * bt + hashes.block_len(blk) {
+                    prop_assert!(
+                        scores[j] <= ub,
+                        "block {blk} key {j}: score {} > bound {ub} (tau={tau})",
+                        scores[j]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_group_lanes_match_scalar_pruned() {
+        // The GQA kernel is a pure fusion: every lane's selection must
+        // equal its own scalar select_pruned_into run.
+        check("gqa-group-vs-scalar", PropConfig { cases: 24, seed: 0x6A4 }, |rng, _| {
+            let dim = gen::size(rng, 4, 32);
+            let p = 1 + rng.below_usize(7);
+            let l = 1 + rng.below_usize(8);
+            let tau = rng.range_f32(0.1, 1.0);
+            let s = SoftScorer::new(LshParams { p, l, tau }, dim, rng.next_u64());
+            let n = 1 + rng.below_usize(2 * crate::lsh::simhash::BLOCK_TOKENS + 5);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let vals = Matrix::gaussian(n, dim, rng);
+            let hashes = s.hash_keys(&keys, &vals);
+            let group = 1 + rng.below_usize(6);
+            let k = 1 + rng.below_usize(n + 2);
+            let queries: Vec<Vec<f32>> = (0..group).map(|_| rng.normal_vec(dim)).collect();
+            let probs: Vec<BucketProbs> =
+                queries.iter().map(|q| s.hasher.bucket_probs(q)).collect();
+            let r = probs[0].r;
+            let mut idx = vec![Vec::new(); group];
+            let mut sc = vec![Vec::new(); group];
+            {
+                let mut lanes: Vec<GroupLane<'_>> = probs
+                    .iter()
+                    .zip(idx.iter_mut().zip(sc.iter_mut()))
+                    .map(|(bp, (i, sv))| GroupLane { probs: &bp.probs, indices: i, scores: sv })
+                    .collect();
+                s.select_pruned_group_into(r, &hashes, k, &mut lanes);
+            }
+            for g in 0..group {
+                let (want_i, want_s, _) = pruned(&s, &queries[g], &hashes, k);
+                prop_assert!(idx[g] == want_i, "lane {g} indices diverge (n={n} k={k})");
+                prop_assert!(sc[g] == want_s, "lane {g} scores diverge");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pruning_skips_dominated_blocks() {
+        // Deterministic pruning witness: identical keys everywhere mean
+        // every later block's bound equals the streaming threshold
+        // exactly, which prunes (push requires strictly beating it).
+        let dim = 24;
+        let s = scorer(6, 8, 0.5, dim);
+        let mut rng = Pcg64::seeded(77);
+        let proto = rng.normal_vec(dim);
+        let n = 4 * crate::lsh::simhash::BLOCK_TOKENS;
+        let mut keys = Matrix::zeros(n, dim);
+        for j in 0..n {
+            keys.row_mut(j).copy_from_slice(&proto);
+        }
+        let vals = Matrix::from_vec(n, dim, vec![1.0; n * dim]);
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let (idx, sc, stats) = pruned(&s, &q, &hashes, 1);
+        assert_eq!(stats.blocks, 4);
+        assert_eq!(stats.pruned, 3, "blocks 1..3 must be bounded out");
+        let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, 1);
+        assert_eq!(idx, want_i);
+        assert_eq!(sc, want_s);
     }
 
     #[test]

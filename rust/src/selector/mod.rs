@@ -177,6 +177,24 @@ pub trait Selector: Send + Sync {
     /// column). Reported by benches.
     fn bits_per_token(&self) -> usize;
 
+    /// GQA lane: select for a *group* of queries sharing this KV
+    /// stream (the query heads of one GQA group), one [`Selection`]
+    /// per query. The default loops [`Selector::select_into`]; methods
+    /// with a fused single-pass kernel (SOCKET's block walk) override
+    /// it. Results must be identical to per-query `select_into` calls.
+    fn select_group_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        sels: &mut [Selection],
+    ) -> Result<(), SelectorError> {
+        assert_eq!(queries.len(), sels.len(), "one Selection per query");
+        for (q, sel) in queries.iter().zip(sels.iter_mut()) {
+            self.select_into(q, k, sel)?;
+        }
+        Ok(())
+    }
+
     /// Compatibility wrapper: build from dense K/V matrices.
     fn build_dense(&mut self, keys: &Matrix, values: &Matrix) {
         self.build(&DenseKv::new(keys, values));
@@ -341,7 +359,7 @@ pub fn hash_kv_source(hash: &SimHash, kv: &dyn KvSource, pool: &WorkerPool) -> K
         }
     });
     let value_norms = (0..n).map(|t| crate::linalg::l2_norm(kv.value(t))).collect();
-    KeyHashes { n, l, bucket_ids, value_norms }
+    KeyHashes::from_row_major(l, hash.params.buckets(), &bucket_ids, value_norms)
 }
 
 #[cfg(test)]
@@ -451,7 +469,7 @@ mod tests {
         let hash = SimHash::new(LshParams { p: 6, l: 9, tau: 0.5 }, 12, 11);
         let want = hash.hash_keys(&keys, &vals);
         let got = hash_kv_source(&hash, &DenseKv::new(&keys, &vals), pool::global());
-        assert_eq!(want.bucket_ids, got.bucket_ids);
+        assert_eq!(want.to_row_major(), got.to_row_major());
         assert_eq!(want.value_norms, got.value_norms);
         assert_eq!(got.n, 50);
     }

@@ -187,6 +187,39 @@ fn prop_append_path_is_source_invariant_for_every_method() {
 }
 
 #[test]
+fn prop_group_select_matches_per_query_for_every_method() {
+    // The GQA lane contract: select_group_into (fused single-pass
+    // kernel for socket, default loop elsewhere) selects exactly what
+    // per-query select_into calls select, for every registered method.
+    check("selector-group-vs-serial", PropConfig { cases: 10, seed: 0x6A1A }, |rng, case| {
+        let dim = 4 * gen::size(rng, 2, 8);
+        let n = gen::size(rng, 1, 120);
+        let (_keys, _values, cache, table) = random_kv(rng, n, dim);
+        let group = 1 + rng.below_usize(4);
+        let queries: Vec<Vec<f32>> = (0..group).map(|_| rng.normal_vec(dim)).collect();
+        let k = 1 + rng.below_usize(n);
+        for spec in registry() {
+            let cfg = test_cfg(dim, 0x96A ^ case as u64);
+            let mut s = (spec.build)(&cfg);
+            s.build(&cache.view(&table));
+            let mut sels: Vec<Selection> = (0..group).map(|_| Selection::default()).collect();
+            s.select_group_into(&queries, k, &mut sels).expect("built");
+            for (g, q) in queries.iter().enumerate() {
+                let want = s.select(q, k).expect("built");
+                prop_assert!(
+                    sels[g].indices == want,
+                    "{} lane {g}: {:?} vs {:?} (n={n} k={k} group={group})",
+                    spec.name,
+                    sels[g].indices,
+                    want
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn select_into_ignores_stale_scratch() {
     // select_into must fully own its buffers: dirty scratch from a
     // previous (different) selector or query must not leak into the

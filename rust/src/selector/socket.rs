@@ -10,8 +10,8 @@
 use super::{hash_kv_source, Selection, Selector, SelectorError};
 use crate::attention::KvSource;
 use crate::linalg::{l2_norm, top_k_into};
-use crate::lsh::{HardScorer, KeyHashes, LshParams, SoftScorer};
-use crate::util::pool;
+use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, SoftScorer};
+use crate::util::pool::{self, WorkerPool};
 
 /// SOCKET as a [`Selector`].
 pub struct SocketSelector {
@@ -51,15 +51,71 @@ impl Selector for SocketSelector {
         let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
         sel.indices.clear();
         if hashes.n == 0 {
+            sel.scores.clear();
             return Ok(());
         }
+        // Alg. 2 soft-hash fills reusable scratch (pooled; degrades to
+        // the serial hot path inside workers). For Algs. 4→3 the two
+        // engines select *identically* (property-tested bit-identity),
+        // so pick by context: inside a pool worker — the decode_batch /
+        // select_batch fan-out, where every core is already busy — run
+        // the block-pruned branch-and-bound walk; on a free caller
+        // thread with idle workers, fan exhaustive scoring across the
+        // pool instead, which beats a serial walk whenever pruning
+        // doesn't bite (uniform-random keys at long context).
         let pool = pool::global();
-        // Alg. 2 soft-hash and Alg. 4 scoring fill reusable scratch
-        // (pooled; degrades to the serial hot path inside workers);
-        // Alg. 3's top-k writes the output buffer.
         let (_, r) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool);
-        self.scorer.scores_into(&sel.aux, r, hashes, pool, &mut sel.scores);
-        top_k_into(&sel.scores, k.max(1), &mut sel.indices);
+        let Selection { indices, scores, aux } = sel;
+        if WorkerPool::in_worker() || pool.threads() == 1 {
+            self.scorer.select_pruned_into(aux, r, hashes, k.max(1), indices, scores);
+        } else {
+            self.scorer.scores_into(aux, r, hashes, pool, scores);
+            top_k_into(scores, k.max(1), indices);
+        }
+        Ok(())
+    }
+
+    fn select_group_into(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        sels: &mut [Selection],
+    ) -> Result<(), SelectorError> {
+        assert_eq!(queries.len(), sels.len(), "one Selection per query");
+        let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
+        if queries.is_empty() {
+            return Ok(());
+        }
+        // A group of one is just a scalar select — take select_into's
+        // hedged engine choice (pruned walk in workers, pooled
+        // exhaustive scoring on a free caller thread) instead of
+        // forcing the serial walk.
+        if queries.len() == 1 {
+            return self.select_into(&queries[0], k, &mut sels[0]);
+        }
+        // Soft-hash every query head first (Alg. 2, pooled)...
+        let mut r = 0;
+        for (q, sel) in queries.iter().zip(sels.iter_mut()) {
+            sel.indices.clear();
+            sel.scores.clear();
+            let (_, rr) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool::global());
+            r = rr;
+        }
+        if hashes.n == 0 {
+            return Ok(());
+        }
+        // ...then one fused pass over the hash blocks scores the whole
+        // GQA group: each block's id rows are consumed by every lane
+        // while cache-hot. Per-lane results are identical to per-query
+        // select_into.
+        let mut lanes: Vec<GroupLane<'_>> = sels
+            .iter_mut()
+            .map(|sel| {
+                let Selection { indices, scores, aux } = sel;
+                GroupLane { probs: aux, indices, scores }
+            })
+            .collect();
+        self.scorer.select_pruned_group_into(r, hashes, k.max(1), &mut lanes);
         Ok(())
     }
 
@@ -104,10 +160,12 @@ impl Selector for HardLshSelector {
         let hashes = self.hashes.as_ref().ok_or(SelectorError::NotBuilt)?;
         sel.indices.clear();
         if hashes.n == 0 {
+            sel.scores.clear();
             return Ok(());
         }
-        self.scorer.scores_into(q, hashes, &mut sel.scores);
-        top_k_into(&sel.scores, k.max(1), &mut sel.indices);
+        // The SoA/pruned port of the shared collision kernel —
+        // bit-identical to exhaustive counting + top-k.
+        self.scorer.select_pruned_into(q, hashes, k.max(1), &mut sel.indices, &mut sel.scores);
         Ok(())
     }
 
@@ -170,6 +228,52 @@ mod tests {
         hard.build_dense(&keys, &vals);
         let hscorer = HardScorer::new(params, dim, 9);
         assert_eq!(hard.select(&q, 32).unwrap(), hscorer.select_top_k(&q, &hashes, 32));
+    }
+
+    #[test]
+    fn group_select_matches_per_query() {
+        // The GQA lane (fused single-pass kernel for socket, default
+        // loop for hard LSH) must select exactly what per-query
+        // select_into calls select — indices and scratch scores.
+        let mut rng = Pcg64::seeded(9);
+        let dim = 24;
+        let keys = Matrix::gaussian(300, dim, &mut rng);
+        let vals = Matrix::gaussian(300, dim, &mut rng);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, dim, 7);
+        let mut hard = HardLshSelector::new(params, dim, 7);
+        soft.build_dense(&keys, &vals);
+        hard.build_dense(&keys, &vals);
+        let queries: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(dim)).collect();
+        for sel in [&soft as &dyn Selector, &hard as &dyn Selector] {
+            let mut group: Vec<Selection> = (0..queries.len())
+                .map(|_| Selection {
+                    indices: vec![3; 5], // stale scratch
+                    scores: vec![0.25; 2],
+                    aux: vec![7.5; 9],
+                })
+                .collect();
+            sel.select_group_into(&queries, 16, &mut group).expect("built");
+            for (g, q) in queries.iter().enumerate() {
+                let mut want = Selection::default();
+                sel.select_into(q, 16, &mut want).expect("built");
+                // Scratch `scores` layouts may differ between the fused
+                // and scalar engines; the selection contract is the
+                // indices (score bit-identity is property-tested in
+                // lsh::soft / lsh::hard).
+                assert_eq!(group[g].indices, want.indices, "{} lane {g}", sel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn group_select_before_build_is_an_error() {
+        let s = SocketSelector::new(LshParams::paper_default(), 8, 1);
+        let mut sels = vec![Selection::default()];
+        assert_eq!(
+            s.select_group_into(&[vec![0.0; 8]], 4, &mut sels),
+            Err(SelectorError::NotBuilt)
+        );
     }
 
     #[test]

@@ -243,10 +243,22 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
 pub struct DecodeScratch {
     /// Merged selection indices (top-k ∪ sink ∪ local).
     pub indices: Vec<usize>,
-    /// Selector output + scoring scratch consumed by
-    /// `selector::Selector::select_into` (top-k indices, key scores,
-    /// soft-hash bucket tables...).
-    pub selection: crate::selector::Selection,
+    /// Per-query-head selector output + scoring scratch consumed by
+    /// `selector::Selector::select_group_into` (top-k indices, key
+    /// scores, soft-hash bucket tables...) — one `Selection` per query
+    /// head of the GQA group the engine decodes through this worker.
+    pub selections: Vec<crate::selector::Selection>,
+}
+
+impl DecodeScratch {
+    /// The first `group` per-head selections, growing the pool of
+    /// reusable buffers on first use (capacity persists across steps).
+    pub fn group_selections(&mut self, group: usize) -> &mut [crate::selector::Selection] {
+        if self.selections.len() < group {
+            self.selections.resize_with(group, Default::default);
+        }
+        &mut self.selections[..group]
+    }
 }
 
 thread_local! {
