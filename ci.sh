@@ -39,4 +39,57 @@ echo "==> bench_throughput smoke (gather-vs-paged + per-method artifact)"
 cargo bench --bench bench_throughput -- --smoke --json-out "$PWD/BENCH_throughput.json"
 echo "    artifact: $PWD/BENCH_throughput.json"
 
+# Bench-regression guard: compare the scoring_lane rows of the fresh
+# artifact against the checked-in BENCH_baseline.json (10% tolerance,
+# matched by context/group/variant). Only rows present in BOTH
+# artifacts are compared — a baseline recorded at full (non-smoke)
+# scale carries contexts the smoke artifact never measures, and that
+# must not turn CI permanently red; mismatched coverage is a warning.
+# Record the baseline with this script (same machine, same smoke
+# scale) so absolute selections/s are comparable. Skips gracefully
+# when the baseline has not been recorded yet (no toolchain container
+# has run the bench) or python3 is unavailable.
+echo "==> bench regression guard (scoring_lane vs BENCH_baseline.json)"
+if [ -f "$PWD/BENCH_baseline.json" ] && command -v python3 >/dev/null 2>&1; then
+    python3 - "$PWD/BENCH_throughput.json" "$PWD/BENCH_baseline.json" <<'PY'
+import json, sys
+
+new_doc, base_doc = (json.load(open(p)) for p in sys.argv[1:3])
+
+def rows(doc):
+    lane = doc.get("scoring_lane", {}).get("rows", [])
+    return {(r.get("context"), r.get("group"), r.get("variant")): r for r in lane}
+
+TOLERANCE = 0.10
+new, base = rows(new_doc), rows(base_doc)
+failures = []
+compared = 0
+for key, b in sorted(base.items(), key=str):
+    r = new.get(key)
+    if r is None:
+        # Coverage mismatch (e.g. full-scale baseline vs smoke
+        # artifact) is not a regression.
+        print(f"  warning: baseline row {key} not in fresh artifact; skipping")
+        continue
+    want = b.get("sps") or 0.0
+    got = r.get("sps") or 0.0
+    if want <= 0.0:
+        continue
+    compared += 1
+    if got < (1.0 - TOLERANCE) * want:
+        failures.append(
+            f"{key}: {got:.1f} sel/s < {100 * (1 - TOLERANCE):.0f}% of baseline {want:.1f}"
+        )
+if failures:
+    print("bench regression guard FAILED:")
+    for f in failures:
+        print(f"  {f}")
+    sys.exit(1)
+print(f"bench regression guard OK: {compared} rows within {int(TOLERANCE * 100)}% of baseline")
+PY
+else
+    echo "    BENCH_baseline.json or python3 absent; skipping guard"
+    echo "    (record a baseline by copying a trusted BENCH_throughput.json)"
+fi
+
 echo "OK: tier-1 green"

@@ -2,8 +2,9 @@
 //! dense FlashAttention-style decode, on the Rust substrate — plus the
 //! serial-vs-pooled scoring comparison for the shared worker pool, the
 //! gather-vs-paged KV hot-path comparison (KvView acceptance
-//! measurement), the scoring-kernel lane (exhaustive vs block-pruned vs
-//! GQA-batched SOCKET selection + prune rate), and the per-method
+//! measurement), the scoring-engine lane (exhaustive vs serial_pruned
+//! vs parallel_pruned vs parallel_pruned_ordered vs GQA-fused SOCKET
+//! selection + prune rate + threshold warmup), and the per-method
 //! serving lane (decode tokens/s for every `selector::registry` method
 //! over the paged pool at the paper's sparsity budget). Writes the
 //! gather-vs-paged, scoring-lane, and per-method tables
@@ -42,9 +43,11 @@ fn main() {
     let pg = throughput::run_paged_vs_gather(scale, pool_ctxs, pg_batch, sparsity);
     throughput::paged_vs_gather_table(&pg).print();
 
-    // Scoring kernels: exhaustive vs block-pruned vs GQA-batched over
-    // one SOCKET index (bit-identical selections; wall-clock + pruning
-    // rate are the block-pruning acceptance numbers).
+    // Scoring engines: exhaustive vs the branch-and-bound matrix
+    // (serial / parallel / parallel+bound-ordered / GQA-fused) over one
+    // SOCKET index — bit-identical selections; wall-clock, prune rate,
+    // and threshold-warmup blocks are the parallel-pruning acceptance
+    // numbers.
     let group = args.usize_or("group", 4).max(1);
     let sl_ctxs: &[usize] =
         if smoke { &[2 * 1024, 8 * 1024] } else { &[8 * 1024, 32 * 1024, 128 * 1024] };

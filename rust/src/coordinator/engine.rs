@@ -235,9 +235,12 @@ impl DecodeEngine {
     ///
     /// Each kv head serves its whole GQA group in one lane: the group's
     /// queries are selected together (`Selector::select_group_into` —
-    /// for SOCKET a single fused pass over the hash blocks), then each
-    /// query head attends over its own merged selection. Output `g` of
-    /// kv head `h` lands at query-head index `h * group + g`.
+    /// for SOCKET the pool-parallel branch-and-bound walk, which fans
+    /// blocks x lanes across idle workers when this step runs on the
+    /// caller thread, and runs inline when `decode_batch` has already
+    /// fanned sequences across the pool), then each query head attends
+    /// over its own merged selection. Output `g` of kv head `h` lands
+    /// at query-head index `h * group + g`.
     fn compute_step(&self, state: &SequenceState) -> StepResult {
         let heads = self.config.model.n_kv_heads;
         let group = self.gqa_group();

@@ -10,9 +10,10 @@ use super::Scale;
 use crate::attention::{flash_decode, flash_decode_into, SelectionPolicy};
 use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
 use crate::linalg::{top_k_into, Matrix};
-use crate::lsh::{GroupLane, LshParams, SoftScorer};
+use crate::lsh::{GroupLane, LshParams, PruneStats, SoftScorer};
 use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
+use crate::util::pool::WorkerPool;
 use crate::util::{fnum, pool, Json, Pcg64, Table};
 use std::time::Instant;
 
@@ -329,31 +330,41 @@ pub fn paged_vs_gather_json(points: &[PagedVsGatherPoint]) -> Json {
     Json::obj().set("bench", "throughput_paged_vs_gather").set("rows", Json::Arr(rows))
 }
 
-/// Scoring-kernel lane: one SOCKET index queried through (a) the
-/// exhaustive pipeline (Alg. 2 soft-hash + full Alg. 4 scoring +
-/// top-k), (b) the block-pruned branch-and-bound kernel, and (c) the
-/// GQA-batched group kernel (`group` query heads per pass over the
-/// hash blocks). Selections are bit-identical across all three
-/// (property-tested in `lsh::soft`); only wall-clock and the pruning
-/// rate differ — this is the block-pruning acceptance measurement.
+/// Scoring-kernel lane: one SOCKET index queried through the exhaustive
+/// pipeline (Alg. 2 soft-hash + full Alg. 4 scoring + top-k) and every
+/// engine of the pool-parallel branch-and-bound walk — `serial_pruned`
+/// (one thread, storage order), `parallel_pruned` (shared pool, storage
+/// order), `parallel_pruned_ordered` (shared pool, bound-descending
+/// order), and `gqa_parallel` (`group` lanes fused per walk). Selections
+/// are bit-identical across all of them (property-tested in
+/// `lsh::soft`); only wall-clock, prune rate, and the threshold-warmup
+/// block count differ — this is the parallel-pruning acceptance
+/// measurement.
 pub struct ScoringLanePoint {
     pub n: usize,
     pub group: usize,
     /// Selections/second through exhaustive scoring + top-k.
     pub exhaustive_sps: f64,
-    /// Selections/second through the block-pruned kernel.
-    pub pruned_sps: f64,
-    /// Selections/second through the GQA group kernel.
-    pub gqa_sps: f64,
-    /// Fraction of (lane, block) visits the admissible bound skipped
-    /// (pruned + GQA passes combined).
-    pub prune_rate: f64,
+    /// One row per branch-and-bound engine.
+    pub variants: Vec<ScoringVariant>,
 }
 
-/// Measure the three scoring kernels at one context length. K/V come
-/// from the synthetic heavy-hitter stream (concentrated scores — the
-/// regime pruning exploits); every kernel processes the same
-/// `steps * group` queries.
+/// One branch-and-bound engine's measurements.
+pub struct ScoringVariant {
+    pub name: &'static str,
+    /// Selections/second.
+    pub sps: f64,
+    /// Fraction of (lane, block) visits the admissible bound skipped.
+    pub prune_rate: f64,
+    /// Mean (lane, block) visits scored before each worker-lane's first
+    /// prune, per selection — how long the threshold took to warm.
+    pub warmup_blocks: f64,
+}
+
+/// Measure the scoring engines at one context length. K/V come from
+/// the synthetic heavy-hitter stream (concentrated scores — the regime
+/// pruning exploits); every engine processes the same `steps * group`
+/// queries.
 pub fn measure_scoring_lane(
     n: usize,
     dim: usize,
@@ -370,8 +381,9 @@ pub fn measure_scoring_lane(
     let k = SelectionPolicy::from_sparsity(n, sparsity, 0, 0).k;
     let queries: Vec<Vec<f32>> = (0..steps * group).map(|s| model.query_at(0, s)).collect();
     let pool = pool::global();
+    let serial = WorkerPool::new(1);
 
-    // (a) exhaustive: score every key, then top-k.
+    // Exhaustive reference: score every key, then top-k.
     let mut probs = Vec::new();
     let mut scores = Vec::new();
     let mut idx = Vec::new();
@@ -384,23 +396,50 @@ pub fn measure_scoring_lane(
     }
     let exhaustive_sps = queries.len() as f64 / t0.elapsed().as_secs_f64();
 
-    // (b) block-pruned, one query at a time.
+    // The branch-and-bound engine matrix, scalar lanes.
+    let mut variants = Vec::new();
     let mut sel_scores = Vec::new();
-    let (mut visits, mut pruned) = (0usize, 0usize);
-    let t1 = Instant::now();
-    for q in &queries {
-        let (_, r) = scorer.hasher.bucket_probs_into(q, &mut probs, pool);
-        let st = scorer.select_pruned_into(&probs, r, &hashes, k, &mut idx, &mut sel_scores);
-        visits += st.blocks;
-        pruned += st.pruned;
-        crate::util::black_box(&idx);
+    for (name, walk_pool, ordered) in [
+        ("serial_pruned", &serial, false),
+        ("parallel_pruned", pool, false),
+        ("parallel_pruned_ordered", pool, true),
+    ] {
+        let mut st = PruneStats::default();
+        let t = Instant::now();
+        for q in &queries {
+            // Alg. 2 hashing always runs on the shared pool: the rows
+            // compare the *walk* engines, so only the walk's pool and
+            // order vary per variant.
+            let (_, r) = scorer.hasher.bucket_probs_into(q, &mut probs, pool);
+            let s = scorer.select_pruned_with(
+                &probs,
+                r,
+                &hashes,
+                k,
+                &mut idx,
+                &mut sel_scores,
+                walk_pool,
+                ordered,
+            );
+            st.blocks += s.blocks;
+            st.pruned += s.pruned;
+            st.warmup += s.warmup;
+            crate::util::black_box(&idx);
+        }
+        variants.push(ScoringVariant {
+            name,
+            sps: queries.len() as f64 / t.elapsed().as_secs_f64(),
+            prune_rate: st.pruned as f64 / (st.blocks as f64).max(1.0),
+            warmup_blocks: st.warmup as f64 / queries.len() as f64,
+        });
     }
-    let pruned_sps = queries.len() as f64 / t1.elapsed().as_secs_f64();
 
-    // (c) GQA-batched: `group` lanes share each pass over the blocks.
+    // GQA-batched: `group` lanes share each parallel bound-ordered walk.
     let mut lane_probs = vec![Vec::new(); group];
     let mut lane_idx = vec![Vec::new(); group];
     let mut lane_scores = vec![Vec::new(); group];
+    let mut st = PruneStats::default();
+    let n_group_selections = queries.len();
     let t2 = Instant::now();
     for chunk in queries.chunks(group) {
         let mut r = 0;
@@ -412,21 +451,20 @@ pub fn measure_scoring_lane(
             .zip(lane_idx.iter_mut().zip(lane_scores.iter_mut()))
             .map(|(p, (i, s))| GroupLane { probs: p, indices: i, scores: s })
             .collect();
-        let st = scorer.select_pruned_group_into(r, &hashes, k, &mut lanes);
-        visits += st.blocks;
-        pruned += st.pruned;
+        let s = scorer.select_pruned_group_into(r, &hashes, k, &mut lanes);
+        st.blocks += s.blocks;
+        st.pruned += s.pruned;
+        st.warmup += s.warmup;
         crate::util::black_box(&lane_idx);
     }
-    let gqa_sps = queries.len() as f64 / t2.elapsed().as_secs_f64();
+    variants.push(ScoringVariant {
+        name: "gqa_parallel",
+        sps: n_group_selections as f64 / t2.elapsed().as_secs_f64(),
+        prune_rate: st.pruned as f64 / (st.blocks as f64).max(1.0),
+        warmup_blocks: st.warmup as f64 / n_group_selections as f64,
+    });
 
-    ScoringLanePoint {
-        n,
-        group,
-        exhaustive_sps,
-        pruned_sps,
-        gqa_sps,
-        prune_rate: pruned as f64 / (visits as f64).max(1.0),
-    }
+    ScoringLanePoint { n, group, exhaustive_sps, variants }
 }
 
 /// Sweep [`measure_scoring_lane`] across context lengths.
@@ -443,42 +481,72 @@ pub fn run_scoring_lane(
         .collect()
 }
 
-/// Render the scoring-kernel comparison.
+/// Render the scoring-engine comparison.
 pub fn scoring_lane_table(points: &[ScoringLanePoint], sparsity: f64) -> Table {
     let mut t = Table::new(
-        &format!("SOCKET scoring kernels ({sparsity}x sparsity): selections/s"),
-        &["Context", "Exhaustive", "Pruned", "Prune x", "GQA(g)", "GQA x", "Prune rate"],
+        &format!(
+            "SOCKET scoring engines ({sparsity}x sparsity, {} threads): selections/s",
+            pool::global().threads()
+        ),
+        &["Context", "Engine", "Sel/s", "vs exhaustive", "Prune rate", "Warmup blks"],
     );
     for p in points {
         t.row(vec![
             p.n.to_string(),
+            "exhaustive".to_string(),
             fnum(p.exhaustive_sps, 1),
-            fnum(p.pruned_sps, 1),
-            format!("{}x", fnum(p.pruned_sps / p.exhaustive_sps.max(1e-9), 2)),
-            format!("{} (g={})", fnum(p.gqa_sps, 1), p.group),
-            format!("{}x", fnum(p.gqa_sps / p.exhaustive_sps.max(1e-9), 2)),
-            format!("{}%", fnum(100.0 * p.prune_rate, 1)),
+            "1.00x".to_string(),
+            "-".to_string(),
+            "-".to_string(),
         ]);
+        for v in &p.variants {
+            let label = if v.name == "gqa_parallel" {
+                format!("{} (g={})", v.name, p.group)
+            } else {
+                v.name.to_string()
+            };
+            t.row(vec![
+                p.n.to_string(),
+                label,
+                fnum(v.sps, 1),
+                format!("{}x", fnum(v.sps / p.exhaustive_sps.max(1e-9), 2)),
+                format!("{}%", fnum(100.0 * v.prune_rate, 1)),
+                fnum(v.warmup_blocks, 1),
+            ]);
+        }
     }
     t
 }
 
-/// Serialize the scoring lane for the `BENCH_*.json` artifact.
+/// Serialize the scoring lane for the `BENCH_*.json` artifact: one flat
+/// row per (context, engine) so the ci.sh regression guard can match
+/// rows against `BENCH_baseline.json` by (context, group, variant).
 pub fn scoring_lane_json(points: &[ScoringLanePoint]) -> Json {
-    let rows: Vec<Json> = points
-        .iter()
-        .map(|p| {
+    let mut rows: Vec<Json> = Vec::new();
+    for p in points {
+        rows.push(
             Json::obj()
                 .set("context", p.n)
                 .set("group", p.group)
-                .set("exhaustive_sps", p.exhaustive_sps)
-                .set("pruned_sps", p.pruned_sps)
-                .set("pruned_speedup", p.pruned_sps / p.exhaustive_sps.max(1e-9))
-                .set("gqa_sps", p.gqa_sps)
-                .set("gqa_speedup", p.gqa_sps / p.exhaustive_sps.max(1e-9))
-                .set("prune_rate", p.prune_rate)
-        })
-        .collect();
+                .set("variant", "exhaustive")
+                .set("sps", p.exhaustive_sps)
+                .set("speedup_vs_exhaustive", 1.0)
+                .set("prune_rate", 0.0)
+                .set("warmup_blocks", 0.0),
+        );
+        for v in &p.variants {
+            rows.push(
+                Json::obj()
+                    .set("context", p.n)
+                    .set("group", p.group)
+                    .set("variant", v.name)
+                    .set("sps", v.sps)
+                    .set("speedup_vs_exhaustive", v.sps / p.exhaustive_sps.max(1e-9))
+                    .set("prune_rate", v.prune_rate)
+                    .set("warmup_blocks", v.warmup_blocks),
+            );
+        }
+    }
     Json::obj().set("bench", "throughput_scoring_lane").set("rows", Json::Arr(rows))
 }
 
@@ -674,20 +742,33 @@ mod tests {
     }
 
     #[test]
-    fn scoring_lane_measures_all_three_kernels() {
+    fn scoring_lane_measures_every_engine() {
         let pts = [measure_scoring_lane(1024, 32, 16.0, 4, 2, 7)];
         let p = &pts[0];
         assert_eq!(p.n, 1024);
         assert_eq!(p.group, 4);
-        for sps in [p.exhaustive_sps, p.pruned_sps, p.gqa_sps] {
-            assert!(sps > 0.0 && sps.is_finite());
+        assert!(p.exhaustive_sps > 0.0 && p.exhaustive_sps.is_finite());
+        let names: Vec<&str> = p.variants.iter().map(|v| v.name).collect();
+        assert_eq!(
+            names,
+            ["serial_pruned", "parallel_pruned", "parallel_pruned_ordered", "gqa_parallel"]
+        );
+        for v in &p.variants {
+            assert!(v.sps > 0.0 && v.sps.is_finite(), "{}", v.name);
+            assert!((0.0..=1.0).contains(&v.prune_rate), "{} rate {}", v.name, v.prune_rate);
+            assert!(
+                v.warmup_blocks >= 0.0 && v.warmup_blocks.is_finite(),
+                "{} warmup {}",
+                v.name,
+                v.warmup_blocks
+            );
         }
-        assert!((0.0..=1.0).contains(&p.prune_rate), "rate {}", p.prune_rate);
-        assert_eq!(scoring_lane_table(&pts, 16.0).n_rows(), 1);
+        // One table/JSON row per engine plus the exhaustive reference.
+        assert_eq!(scoring_lane_table(&pts, 16.0).n_rows(), 5);
         let doc = scoring_lane_json(&pts);
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_scoring_lane"));
-        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 5);
     }
 
     #[test]

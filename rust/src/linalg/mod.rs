@@ -7,4 +7,4 @@ pub mod topk;
 
 pub use matrix::Matrix;
 pub use ops::{add_scaled, argmax, dot, l1_norm, l2_norm, matvec, normalize, scale, softmax, softmax_inplace};
-pub use topk::{top_k_indices, top_k_into, top_k_threshold, BoundHeap, TopK};
+pub use topk::{top_k_indices, top_k_into, top_k_threshold, BoundHeap, SharedBoundHeap, TopK};

@@ -4,6 +4,7 @@
 //! (N up to 128K+). We keep a bounded min-heap of size k: O(N log k),
 //! no full sort, no allocation beyond the heap itself.
 
+use crate::util::pool::ThresholdCell;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -52,6 +53,16 @@ impl TopK {
     }
 
     /// Offer a candidate. NaN scores are ignored.
+    ///
+    /// The replacement test is **tie-aware**: a candidate enters a full
+    /// heap when it beats the current worst entry under the total order
+    /// (score desc, index asc) — strictly higher score, or an equal
+    /// score with a lower index. That makes the held set the exact
+    /// top-k of everything pushed so far *regardless of push order*,
+    /// which is what lets the parallel / bound-ordered block walks
+    /// select bit-identically to the storage-order scan. For
+    /// ascending-index feeds (every pre-existing caller) the tie clause
+    /// can never fire, so behaviour there is unchanged.
     #[inline]
     pub fn push(&mut self, score: f32, index: usize) {
         if score.is_nan() {
@@ -60,7 +71,7 @@ impl TopK {
         if self.heap.len() < self.k {
             self.heap.push(Entry { score, index });
         } else if let Some(min) = self.heap.peek() {
-            if score > min.score {
+            if score > min.score || (score == min.score && index < min.index) {
                 self.heap.pop();
                 self.heap.push(Entry { score, index });
             }
@@ -74,6 +85,37 @@ impl TopK {
         } else {
             None
         }
+    }
+
+    /// The worst held entry under the total order (score desc, index
+    /// asc) — the lowest kept score, largest index among equals — if k
+    /// candidates are held. The tie-break half is what the
+    /// order-independent pruning predicate needs.
+    pub fn worst(&self) -> Option<(f32, usize)> {
+        if self.heap.len() == self.k {
+            self.heap.peek().map(|e| (e.score, e.index))
+        } else {
+            None
+        }
+    }
+
+    /// Reset to an empty selector of size `k`, keeping the heap's
+    /// allocation — the per-worker scratch reuse entry point.
+    pub fn reset(&mut self, k: usize) {
+        assert!(k > 0, "k must be positive");
+        self.k = k;
+        self.heap.clear();
+    }
+
+    /// Drain the held (index, score) pairs in unspecified order into a
+    /// reusable buffer (cleared first), keeping both the heap's and the
+    /// buffer's allocations. Order-independent consumers (the parallel
+    /// walk's exact merge) use this instead of the consuming
+    /// [`TopK::into_sorted`] so the decode hot path stays allocation-free
+    /// at steady state.
+    pub fn drain_into(&mut self, out: &mut Vec<(usize, f32)>) {
+        out.clear();
+        out.extend(self.heap.drain().map(|e| (e.index, e.score)));
     }
 
     /// The selection size this heap was built for.
@@ -142,7 +184,10 @@ impl BoundHeap {
     /// True when a candidate set whose scores are all `<= ub` cannot
     /// change the selection: the heap is full and even `ub` itself
     /// would be rejected (push requires strictly beating the
-    /// threshold, so `ub == threshold` still prunes).
+    /// threshold, so `ub == threshold` still prunes). Only exact for
+    /// ascending-index traversals — an `ub == threshold` block visited
+    /// *out of order* could still hold an index-tie winner; those
+    /// traversals use [`BoundHeap::prunes_at`] instead.
     #[inline]
     pub fn prunes(&self, ub: f32) -> bool {
         match self.tk.threshold() {
@@ -151,9 +196,93 @@ impl BoundHeap {
         }
     }
 
+    /// Traversal-order-independent pruning predicate: true when no
+    /// candidate from a block whose scores are all `<= ub` and whose
+    /// indices are all `>= base` can enter the selection. The best
+    /// conceivable block member is `(ub, base)`; if that does not beat
+    /// the worst kept entry under (score desc, index asc), nothing in
+    /// the block does. For ascending-index traversals (`base` beyond
+    /// every held index) this degrades to exactly [`BoundHeap::prunes`].
+    #[inline]
+    pub fn prunes_at(&self, ub: f32, base: usize) -> bool {
+        match self.tk.worst() {
+            Some((w, i)) => ub < w || (ub == w && base >= i),
+            None => false,
+        }
+    }
+
+    /// The worst held entry under (score desc, index asc), if full.
+    #[inline]
+    pub fn worst(&self) -> Option<(f32, usize)> {
+        self.tk.worst()
+    }
+
+    /// Reset to an empty heap of size `k`, keeping allocations.
+    pub fn reset(&mut self, k: usize) {
+        self.tk.reset(k);
+    }
+
+    /// Drain the held (index, score) pairs in unspecified order into a
+    /// reusable buffer (see [`TopK::drain_into`]).
+    pub fn drain_into(&mut self, out: &mut Vec<(usize, f32)>) {
+        self.tk.drain_into(out);
+    }
+
     /// Extract (index, score) pairs sorted by descending score.
     pub fn into_sorted(self) -> Vec<(usize, f32)> {
         self.tk.into_sorted()
+    }
+}
+
+/// A [`BoundHeap`] wired to a shared monotone threshold: the worker-side
+/// half of the pool-parallel branch-and-bound walk (`lsh::bnb`). Every
+/// push that leaves the local heap full publishes the local k-th score
+/// into the [`ThresholdCell`] all workers share; the pruning predicate
+/// then combines the exact tie-aware local test with a strict
+/// (`ub < shared`) test against the freshest published score. A stale
+/// read only sees an *older, lower* threshold — the cell is monotone —
+/// so staleness weakens pruning but can never drop a true top-k
+/// candidate; see `ThresholdCell` for why the f32-bits-as-u32 `fetch_max`
+/// is order-preserving for the non-negative collision scores.
+pub struct SharedBoundHeap<'a> {
+    heap: &'a mut BoundHeap,
+    cell: &'a ThresholdCell,
+}
+
+impl<'a> SharedBoundHeap<'a> {
+    pub fn new(heap: &'a mut BoundHeap, cell: &'a ThresholdCell) -> SharedBoundHeap<'a> {
+        SharedBoundHeap { heap, cell }
+    }
+
+    /// Offer a candidate; publishes the local k-th score so sibling
+    /// workers can prune against it — but only when that score actually
+    /// changed (heap just filled, or a replacement raised the min), so
+    /// rejected offers and tie-break swaps cost no shared-cache-line
+    /// RMW on the scoring inner loop.
+    #[inline]
+    pub fn push(&mut self, score: f32, index: usize) {
+        let before = self.heap.worst().map(|(w, _)| w);
+        self.heap.push(score, index);
+        if let Some((w, _)) = self.heap.worst() {
+            if before != Some(w) {
+                self.cell.publish(w);
+            }
+        }
+    }
+
+    /// Whether a block with score bound `ub` and first index `base` can
+    /// be skipped: exact against the local heap ([`BoundHeap::prunes_at`])
+    /// or strictly below the shared published threshold. Both tests are
+    /// individually lossless, so their union is too.
+    #[inline]
+    pub fn prunes_block(&self, ub: f32, base: usize) -> bool {
+        self.heap.prunes_at(ub, base) || ub < self.cell.get()
+    }
+
+    /// True when k candidates are held locally.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.heap.is_full()
     }
 }
 
@@ -342,6 +471,109 @@ mod tests {
             prop_assert!(bh.into_sorted() == plain.into_sorted(), "n={n} k={k}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_push_order_is_irrelevant() {
+        // The tie-aware push makes TopK order-independent: feeding the
+        // same (score, index) pairs in any permutation must hold the
+        // same set — exactly the stable (score desc, index asc) top-k.
+        // Heavy ties (3-value score set) stress the tie clause.
+        check_default("topk-order-independent", |rng, _| {
+            let n = gen::size(rng, 1, 300);
+            let k = 1 + rng.below_usize(n);
+            let vals = [0.0f32, 1.0, 2.0];
+            let scores: Vec<f32> = (0..n).map(|_| vals[rng.below_usize(3)]).collect();
+            let mut perm: Vec<usize> = (0..n).collect();
+            // Fisher-Yates shuffle.
+            for i in (1..n).rev() {
+                perm.swap(i, rng.below_usize(i + 1));
+            }
+            let mut fwd = TopK::new(k);
+            for (i, &s) in scores.iter().enumerate() {
+                fwd.push(s, i);
+            }
+            let mut shuffled = TopK::new(k);
+            for &i in &perm {
+                shuffled.push(scores[i], i);
+            }
+            let want = fwd.into_sorted();
+            prop_assert!(shuffled.into_sorted() == want, "n={n} k={k}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn worst_reports_score_and_largest_tied_index() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.worst(), None);
+        tk.push(1.0, 4);
+        assert_eq!(tk.worst(), None, "not full yet");
+        tk.push(1.0, 2);
+        // Worst under (score desc, index asc) is the larger index.
+        assert_eq!(tk.worst(), Some((1.0, 4)));
+        tk.push(1.0, 1); // ties with worst but lower index: replaces it
+        assert_eq!(tk.worst(), Some((1.0, 2)));
+        tk.push(1.0, 3); // ties but higher index than worst: rejected
+        assert_eq!(tk.into_sorted(), vec![(1, 1.0), (2, 1.0)]);
+    }
+
+    #[test]
+    fn reset_and_drain_reuse_the_heap() {
+        let mut tk = TopK::new(3);
+        for (i, s) in [5.0f32, 1.0, 3.0, 4.0].into_iter().enumerate() {
+            tk.push(s, i);
+        }
+        let mut got = vec![(99usize, 0.0f32)]; // stale buffer
+        tk.drain_into(&mut got);
+        got.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        assert_eq!(got, vec![(0, 5.0), (3, 4.0), (2, 3.0)]);
+        tk.reset(1);
+        tk.push(2.0, 9);
+        tk.push(7.0, 1);
+        assert_eq!(tk.into_sorted(), vec![(1, 7.0)]);
+    }
+
+    #[test]
+    fn prunes_at_is_tie_break_aware() {
+        let mut bh = BoundHeap::new(1);
+        assert!(!bh.prunes_at(f32::INFINITY, 0), "unfilled heap never prunes");
+        bh.push(5.0, 10);
+        // Equal bound, block starting below the held index: a member
+        // could win the index tie-break, so the block must be scored.
+        assert!(!bh.prunes_at(5.0, 3));
+        // Equal bound, block wholly above the held index: prune.
+        assert!(bh.prunes_at(5.0, 11));
+        // Strictly lower bound prunes regardless of position.
+        assert!(bh.prunes_at(4.9, 0));
+        assert!(!bh.prunes_at(5.1, 999));
+    }
+
+    #[test]
+    fn shared_bound_heap_publishes_and_prunes_across_heaps() {
+        let cell = ThresholdCell::new();
+        let mut a = BoundHeap::new(2);
+        let mut b = BoundHeap::new(2);
+        {
+            let mut sa = SharedBoundHeap::new(&mut a, &cell);
+            assert!(!sa.prunes_block(0.0, 0), "nothing published yet");
+            sa.push(3.0, 0);
+            assert!(!sa.is_full());
+            sa.push(5.0, 1); // full: publishes k-th score 3.0
+        }
+        {
+            let sb = SharedBoundHeap::new(&mut b, &cell);
+            // b is empty, but the shared threshold prunes strictly-below
+            // blocks on its behalf.
+            assert!(sb.prunes_block(2.9, 0));
+            assert!(!sb.prunes_block(3.0, 0), "shared test is strict at equality");
+        }
+        {
+            let mut sa = SharedBoundHeap::new(&mut a, &cell);
+            sa.push(4.0, 2); // threshold rises to 4.0
+        }
+        let sb = SharedBoundHeap::new(&mut b, &cell);
+        assert!(sb.prunes_block(3.5, 0));
     }
 
     #[test]

@@ -1,0 +1,393 @@
+//! Pool-parallel branch-and-bound top-k: the single traversal engine
+//! behind `SoftScorer::select_pruned_group_with` and
+//! `HardScorer::select_pruned_with`.
+//!
+//! The walk shards the hash blocks across the worker pool in a strided
+//! order over a (possibly bound-sorted) visit permutation — striding
+//! means *every* worker starts near the top of the bound order, so the
+//! thresholds warm in the first few visits everywhere. Each worker runs
+//! branch-and-bound with its own per-lane [`BoundHeap`] (reused via
+//! per-worker scratch) and prunes against two tests at once:
+//!
+//! * **local, tie-aware** — `BoundHeap::prunes_at(ub, base)`: exact
+//!   under the (score desc, index asc) total order, so equal-bound
+//!   blocks that could still win an index tie-break are never skipped;
+//! * **shared, strict** — `ub < ThresholdCell::get()`: any worker whose
+//!   heap fills publishes its k-th score through a relaxed monotone
+//!   atomic (f32 bits as u32 — order-preserving for the non-negative
+//!   collision scores), so one worker's warm threshold prunes for all.
+//!   A stale read only weakens pruning, never correctness.
+//!
+//! The final per-lane top-k is an **exact merge** of the per-worker
+//! candidate sets under the same total order. Every key skipped by
+//! either test is provably outside the global top-k, every key evicted
+//! from a local heap is beaten by k keys of its own shard, and the
+//! tie-aware [`TopK`] is push-order independent — so selections (indices
+//! AND scores) are bit-identical to exhaustive scoring for every pool
+//! size, lane count, and traversal order (property-tested across pool
+//! sizes 1/2/8, both orderings, and GQA groups in `lsh::soft` /
+//! `lsh::hard`).
+
+use crate::linalg::{SharedBoundHeap, TopK};
+use crate::lsh::simhash::{KeyHashes, BLOCK_TOKENS};
+use crate::lsh::soft::PruneStats;
+use crate::util::pool::{self, ThresholdCell, WorkerPool};
+
+/// Fill `order` with the identity block permutation (storage-order
+/// walks).
+pub fn identity_order(n_blocks: usize, order: &mut Vec<u32>) {
+    order.clear();
+    order.extend(0..n_blocks as u32);
+}
+
+/// Fill `order` with the permutation visiting blocks in descending
+/// `agg` (the per-block bound aggregate), ties toward lower block ids —
+/// the deterministic bound-descending visit order both scorers hand to
+/// [`run_walk`]. Any permutation selects identically; this one warms
+/// the pruning thresholds fastest.
+pub fn bound_order(agg: &[f32], order: &mut Vec<u32>) {
+    identity_order(agg.len(), order);
+    order.sort_by(|&a, &b| {
+        agg[b as usize]
+            .partial_cmp(&agg[a as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+}
+
+/// Reusable caller-side storage of one walk invocation: the per-lane
+/// shared threshold cells and the per-(job, lane) candidate buffers.
+/// Owned by `util::pool::BnbPlanScratch` so every buffer's capacity
+/// persists across decode steps — `run_walk`'s only unavoidable
+/// steady-state allocations are the boxed job closures handed to
+/// `WorkerPool::run_all` (the same cost every pooled fill pays) and the
+/// O(k) merge heap per lane (matching the pre-parallel walk).
+#[derive(Debug, Default)]
+pub struct WalkScratch {
+    /// One shared threshold cell per lane (reset per walk).
+    cells: Vec<ThresholdCell>,
+    /// Per-job pruning telemetry.
+    stats: Vec<PruneStats>,
+    /// Flat per-(job, job-lane) drained candidate buffers,
+    /// `lanes_per_job` wide per job.
+    cands: Vec<Vec<(usize, f32)>>,
+}
+
+/// One job's disjoint view into [`WalkScratch`].
+struct JobSlot<'a> {
+    stats: &'a mut PruneStats,
+    cands: &'a mut [Vec<(usize, f32)>],
+}
+
+/// Run the pool-parallel branch-and-bound walk.
+///
+/// * `bounds` — admissible per-(lane, block) score upper bounds,
+///   lane-major (`outs.len() * n_blocks`): `bounds[g * n_blocks + b]`
+///   must dominate the computed f32 score of every key in block `b`
+///   under lane `g`. Scores must be non-negative (the shared threshold
+///   cell relies on it).
+/// * `order` — the block visit permutation (identity for storage
+///   order, bound-descending for the warm-start walk). Any permutation
+///   yields the same selection; only the prune rate differs.
+/// * `score_block(lane, blk, acc)` — fill `acc[..block_len(blk)]` with
+///   the final (value-weighted) scores of the block's resident keys,
+///   accumulated exactly like the exhaustive kernel so scores stay
+///   bit-identical.
+/// * `outs` — one `(indices, scores)` pair per lane; receives the
+///   exact top-k, descending score, ties toward lower indices.
+#[allow(clippy::too_many_arguments)]
+pub fn run_walk<F>(
+    hashes: &KeyHashes,
+    k: usize,
+    bounds: &[f32],
+    order: &[u32],
+    pool: &WorkerPool,
+    score_block: F,
+    outs: &mut [(&mut Vec<usize>, &mut Vec<f32>)],
+    scratch: &mut WalkScratch,
+) -> PruneStats
+where
+    F: Fn(usize, usize, &mut [f32; BLOCK_TOKENS]) + Sync,
+{
+    let n = hashes.n;
+    let n_lanes = outs.len();
+    for (indices, scores) in outs.iter_mut() {
+        indices.clear();
+        scores.clear();
+    }
+    if n == 0 || k == 0 || n_lanes == 0 {
+        return PruneStats::default();
+    }
+    let n_blocks = hashes.n_blocks();
+    assert_eq!(bounds.len(), n_lanes * n_blocks, "bounds shape mismatch");
+    assert_eq!(order.len(), n_blocks, "order permutation length mismatch");
+    let k = k.min(n);
+
+    // Tiling over the blocks x lanes grid: stride blocks across jobs
+    // first (keeps every lane's pass over a block cache-hot inside one
+    // job, and hands each job early high-bound blocks), splitting lanes
+    // only when blocks alone cannot feed the pool. Inside a pool worker
+    // the walk runs as one inline job — the cores are already busy.
+    let threads = if WorkerPool::in_worker() { 1 } else { pool.threads() };
+    let target = if threads > 1 { threads * 2 } else { 1 };
+    let block_jobs = n_blocks.min(target).max(1);
+    let lane_jobs =
+        if block_jobs < target { n_lanes.min(target / block_jobs).max(1) } else { 1 };
+    let lanes_per_job = n_lanes.div_ceil(lane_jobs);
+    let lane_jobs = n_lanes.div_ceil(lanes_per_job);
+    let n_jobs = block_jobs * lane_jobs;
+
+    // Reusable storage: cells reset per walk, candidate buffers keep
+    // their capacity across decode steps.
+    if scratch.cells.len() < n_lanes {
+        scratch.cells.resize_with(n_lanes, ThresholdCell::new);
+    }
+    for cell in scratch.cells[..n_lanes].iter_mut() {
+        cell.reset();
+    }
+    scratch.stats.clear();
+    scratch.stats.resize(n_jobs, PruneStats::default());
+    if scratch.cands.len() < n_jobs * lanes_per_job {
+        scratch.cands.resize_with(n_jobs * lanes_per_job, Vec::new);
+    }
+
+    {
+        let cells = &scratch.cells[..n_lanes];
+        let score_block = &score_block;
+        let run_job = move |j: usize, slot: JobSlot<'_>| {
+            let jb = j % block_jobs;
+            let lane_lo = (j / block_jobs) * lanes_per_job;
+            let lane_hi = (lane_lo + lanes_per_job).min(n_lanes);
+            let job_lanes = lane_hi - lane_lo;
+            let mut acc = [0.0f32; BLOCK_TOKENS];
+            pool::with_bnb_worker(|w| {
+                let (heaps, seen_prune) = w.lanes(job_lanes, k);
+                for &ob in order.iter().skip(jb).step_by(block_jobs) {
+                    let blk = ob as usize;
+                    let blen = hashes.block_len(blk);
+                    let base = blk * BLOCK_TOKENS;
+                    for li in 0..job_lanes {
+                        let lane = lane_lo + li;
+                        slot.stats.blocks += 1;
+                        let mut heap = SharedBoundHeap::new(&mut heaps[li], &cells[lane]);
+                        if heap.prunes_block(bounds[lane * n_blocks + blk], base) {
+                            slot.stats.pruned += 1;
+                            seen_prune[li] = true;
+                            continue;
+                        }
+                        if !seen_prune[li] {
+                            slot.stats.warmup += 1;
+                        }
+                        score_block(lane, blk, &mut acc);
+                        for (off, &s) in acc[..blen].iter().enumerate() {
+                            heap.push(s, base + off);
+                        }
+                    }
+                }
+                for (h, cand) in heaps.iter_mut().zip(slot.cands.iter_mut()) {
+                    h.drain_into(cand);
+                }
+                // Unused trailing buffers of a short final lane chunk
+                // must not leak a previous walk's candidates.
+                for cand in slot.cands.iter_mut().skip(job_lanes) {
+                    cand.clear();
+                }
+            });
+        };
+        let mut slots: Vec<JobSlot<'_>> = scratch
+            .stats
+            .iter_mut()
+            .zip(scratch.cands.chunks_mut(lanes_per_job))
+            .map(|(stats, cands)| JobSlot { stats, cands })
+            .collect();
+        if n_jobs == 1 {
+            run_job(0, slots.pop().expect("one slot per job"));
+        } else {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
+                .into_iter()
+                .enumerate()
+                .map(|(j, slot)| {
+                    let run_job = &run_job;
+                    let job: Box<dyn FnOnce() + Send + '_> =
+                        Box::new(move || run_job(j, slot));
+                    job
+                })
+                .collect();
+            pool.run_all(jobs);
+        }
+    }
+
+    // Exact merge: per lane, the global top-k of the union of its
+    // jobs' candidate sets under (score desc, index asc). The tie-aware
+    // TopK is push-order independent, so the merge result — and with it
+    // the whole walk — is bit-identical to the exhaustive scan.
+    let mut stats = PruneStats::default();
+    for (lane, (indices, scores)) in outs.iter_mut().enumerate() {
+        let mut merge = TopK::new(k);
+        for j in 0..n_jobs {
+            // Job j's lane range, recomputed from the same tiling
+            // arithmetic the jobs used.
+            let lane_lo = (j / block_jobs) * lanes_per_job;
+            if lane >= lane_lo && lane < (lane_lo + lanes_per_job).min(n_lanes) {
+                for &(i, s) in &scratch.cands[j * lanes_per_job + (lane - lane_lo)] {
+                    merge.push(s, i);
+                }
+            }
+        }
+        for (i, s) in merge.into_sorted() {
+            indices.push(i);
+            scores.push(s);
+        }
+    }
+    for job_stats in scratch.stats.iter() {
+        stats.blocks += job_stats.blocks;
+        stats.pruned += job_stats.pruned;
+        stats.warmup += job_stats.warmup;
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Hashes whose "score" for lane g is `(id of table 0) + g`, with
+    /// unit norms — enough to drive the driver directly.
+    fn toy_hashes(n: usize, r: usize, rng: &mut Pcg64) -> KeyHashes {
+        let ids: Vec<u16> = (0..n).map(|_| rng.below(r as u64) as u16).collect();
+        KeyHashes::from_row_major(1, r, &ids, vec![1.0; n])
+    }
+
+    fn walk(
+        hashes: &KeyHashes,
+        k: usize,
+        lanes: usize,
+        pool: &WorkerPool,
+    ) -> (Vec<Vec<usize>>, Vec<Vec<f32>>, PruneStats) {
+        let mut scratch = WalkScratch::default();
+        walk_with(hashes, k, lanes, pool, &mut scratch)
+    }
+
+    fn walk_with(
+        hashes: &KeyHashes,
+        k: usize,
+        lanes: usize,
+        pool: &WorkerPool,
+        scratch: &mut WalkScratch,
+    ) -> (Vec<Vec<usize>>, Vec<Vec<f32>>, PruneStats) {
+        let n_blocks = hashes.n_blocks();
+        let mut bounds = vec![0.0f32; lanes * n_blocks];
+        for g in 0..lanes {
+            for blk in 0..n_blocks {
+                let mut m = 0.0f32;
+                for j in blk * BLOCK_TOKENS..blk * BLOCK_TOKENS + hashes.block_len(blk) {
+                    m = m.max(hashes.bucket(j, 0) as f32 + g as f32);
+                }
+                bounds[g * n_blocks + blk] = m;
+            }
+        }
+        let order: Vec<u32> = (0..n_blocks as u32).collect();
+        let mut idx = vec![Vec::new(); lanes];
+        let mut sc = vec![Vec::new(); lanes];
+        let stats = {
+            let mut outs: Vec<(&mut Vec<usize>, &mut Vec<f32>)> =
+                idx.iter_mut().zip(sc.iter_mut()).map(|(i, s)| (i, s)).collect();
+            run_walk(
+                hashes,
+                k,
+                &bounds,
+                &order,
+                pool,
+                |g, blk, acc| {
+                    let blen = hashes.block_len(blk);
+                    for (off, slot) in acc[..blen].iter_mut().enumerate() {
+                        *slot = hashes.bucket(blk * BLOCK_TOKENS + off, 0) as f32 + g as f32;
+                    }
+                },
+                &mut outs,
+                scratch,
+            )
+        };
+        (idx, sc, stats)
+    }
+
+    #[test]
+    fn walk_matches_plain_topk_across_pool_sizes_and_lanes() {
+        let mut rng = Pcg64::seeded(0xB4B);
+        let hashes = toy_hashes(3 * BLOCK_TOKENS + 11, 32, &mut rng);
+        let pools = [WorkerPool::new(1), WorkerPool::new(3), WorkerPool::new(8)];
+        for k in [1usize, 7, 64, 500] {
+            for lanes in [1usize, 2, 5] {
+                // Reference: exhaustive tie-aware top-k per lane.
+                let mut want: Vec<Vec<(usize, f32)>> = Vec::new();
+                for g in 0..lanes {
+                    let mut tk = TopK::new(k.min(hashes.n));
+                    for j in 0..hashes.n {
+                        tk.push(hashes.bucket(j, 0) as f32 + g as f32, j);
+                    }
+                    want.push(tk.into_sorted());
+                }
+                for pool in &pools {
+                    let (idx, sc, _) = walk(&hashes, k, lanes, pool);
+                    for g in 0..lanes {
+                        let got: Vec<(usize, f32)> =
+                            idx[g].iter().copied().zip(sc[g].iter().copied()).collect();
+                        assert_eq!(
+                            got, want[g],
+                            "k={k} lanes={lanes} threads={} lane {g}",
+                            pool.threads()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_n_visits_every_block_and_prunes_nothing() {
+        // With k == n no heap can reject a candidate, so nothing may be
+        // pruned and every (lane, block) pair must be visited exactly
+        // once — the coverage invariant of the tiling.
+        let mut rng = Pcg64::seeded(7);
+        let hashes = toy_hashes(2 * BLOCK_TOKENS + 5, 16, &mut rng);
+        let pool = WorkerPool::new(4);
+        let lanes = 3;
+        let (idx, _, stats) = walk(&hashes, hashes.n, lanes, &pool);
+        assert_eq!(stats.blocks, hashes.n_blocks() * lanes);
+        assert_eq!(stats.pruned, 0);
+        for lane_idx in idx {
+            assert_eq!(lane_idx.len(), hashes.n);
+        }
+    }
+
+    #[test]
+    fn walk_scratch_reuse_is_stateless() {
+        // One WalkScratch reused across walks of shrinking shapes
+        // (fewer lanes, smaller k, fewer keys) must select exactly what
+        // fresh scratch selects — stale candidate buffers, thresholds,
+        // or job slots from the bigger walk must not leak in.
+        let mut rng = Pcg64::seeded(0x5C8A);
+        let big = toy_hashes(3 * BLOCK_TOKENS + 9, 64, &mut rng);
+        let small = toy_hashes(BLOCK_TOKENS / 2, 16, &mut rng);
+        let pool = WorkerPool::new(4);
+        let mut scratch = WalkScratch::default();
+        let _ = walk_with(&big, 100, 6, &pool, &mut scratch);
+        for (hashes, k, lanes) in [(&small, 5usize, 2usize), (&big, 1, 1), (&small, 40, 3)] {
+            let got = walk_with(hashes, k, lanes, &pool, &mut scratch);
+            let want = walk(hashes, k, lanes, &pool);
+            assert_eq!(got.0, want.0, "indices leak (k={k} lanes={lanes})");
+            assert_eq!(got.1, want.1, "scores leak (k={k} lanes={lanes})");
+        }
+    }
+
+    #[test]
+    fn empty_inputs_clear_outputs() {
+        let mut rng = Pcg64::seeded(9);
+        let hashes = toy_hashes(10, 8, &mut rng);
+        let pool = WorkerPool::new(2);
+        let (idx, sc, stats) = walk(&hashes, 0, 2, &pool);
+        assert_eq!(stats, PruneStats::default());
+        assert!(idx.iter().all(Vec::is_empty) && sc.iter().all(Vec::is_empty));
+    }
+}

@@ -4,10 +4,12 @@
 //! A key's score is the number of tables in which its bucket equals the
 //! query's bucket: `s_hard(k_j, q) = Σ_ℓ 𝟙[b_j^(ℓ) = b_q^(ℓ)]`.
 
-use crate::linalg::{BoundHeap, TopK};
+use crate::linalg::TopK;
+use crate::lsh::bnb;
 use crate::lsh::params::LshParams;
 use crate::lsh::simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
 use crate::lsh::soft::PruneStats;
+use crate::util::pool::{self, WorkerPool};
 
 /// Hard collision scorer over the same cached [`KeyHashes`] as SOCKET —
 /// identical memory footprint at identical (P, L).
@@ -71,14 +73,18 @@ impl HardScorer {
     }
 
     /// Block-pruned top-k over `count_j · ‖v_j‖`: the SoA port of the
-    /// shared collision kernel with the same branch-and-bound as
-    /// `SoftScorer::select_pruned_into`. A block's bound is the number
-    /// of tables whose summary contains the query's bucket, times the
-    /// block max norm — counts are small integers (exact in f32) and
-    /// f32 products are monotone on non-negative operands, so the bound
-    /// dominates every resident key's computed score and pruning is
-    /// lossless. Bit-identical (indices and scores) to the exhaustive
-    /// [`HardScorer::scores_into`] + `top_k` pipeline.
+    /// shared collision kernel on the same pool-parallel
+    /// branch-and-bound walk as `SoftScorer::select_pruned_into`
+    /// (`lsh::bnb`). A block's bound is the number of tables whose
+    /// summary contains the query's bucket (saturated summaries count
+    /// unconditionally), times the block max norm — counts are small
+    /// integers (exact in f32) and f32 products are monotone on
+    /// non-negative operands, so the bound dominates every resident
+    /// key's computed score and pruning is lossless. Bit-identical
+    /// (indices and scores) to the exhaustive
+    /// [`HardScorer::scores_into`] + `top_k` pipeline, for every pool
+    /// size and traversal order. Runs bound-ordered on the shared
+    /// global pool.
     pub fn select_pruned_into(
         &self,
         q: &[f32],
@@ -87,38 +93,55 @@ impl HardScorer {
         indices: &mut Vec<usize>,
         scores: &mut Vec<f32>,
     ) -> PruneStats {
+        self.select_pruned_with(q, hashes, k, indices, scores, pool::global(), true)
+    }
+
+    /// [`HardScorer::select_pruned_into`] with an explicit pool and
+    /// traversal order (the bench/test engine matrix).
+    pub fn select_pruned_with(
+        &self,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+        indices: &mut Vec<usize>,
+        scores: &mut Vec<f32>,
+        pool: &WorkerPool,
+        ordered: bool,
+    ) -> PruneStats {
         indices.clear();
         scores.clear();
-        let mut stats = PruneStats::default();
-        let n = hashes.n;
-        if n == 0 || k == 0 {
-            return stats;
+        if hashes.n == 0 || k == 0 {
+            return PruneStats::default();
         }
-        let k = k.min(n);
+        let n_blocks = hashes.n_blocks();
         let qb = self.hash.hash_one(q);
-        let mut heap = BoundHeap::new(k);
-        let mut counts = [0.0f32; BLOCK_TOKENS];
-        for blk in 0..hashes.n_blocks() {
-            stats.blocks += 1;
-            let blen = hashes.block_len(blk);
-            let base = blk * BLOCK_TOKENS;
-            if heap.is_full() {
-                let ub = hashes.block_collision_bound(blk, &qb) * hashes.block_max_norm(blk);
-                if heap.prunes(ub) {
-                    stats.pruned += 1;
-                    continue;
+        pool::with_bnb_plan(|plan| {
+            let crate::util::pool::BnbPlanScratch { bounds, order, walk, .. } = plan;
+            bounds.clear();
+            bounds.resize(n_blocks, 0.0);
+            // Per-block bounds fanned over the pool (pure computation;
+            // the fill degrades to a serial loop below its element
+            // threshold and inside workers, bit-identically).
+            pool.fill(bounds, |blk| {
+                hashes.block_collision_bound(blk, &qb) * hashes.block_max_norm(blk)
+            });
+            if ordered && n_blocks > 1 {
+                bnb::bound_order(bounds, order);
+            } else {
+                bnb::identity_order(n_blocks, order);
+            }
+            let norms = &hashes.value_norms;
+            let score_block = |_lane: usize, blk: usize, acc: &mut [f32; BLOCK_TOKENS]| {
+                let blen = hashes.block_len(blk);
+                let base = blk * BLOCK_TOKENS;
+                hashes.block_collision_counts(blk, &qb, &mut acc[..]);
+                for (a, &norm) in acc[..blen].iter_mut().zip(&norms[base..base + blen]) {
+                    *a *= norm;
                 }
-            }
-            hashes.block_collision_counts(blk, &qb, &mut counts);
-            for (j, &c) in counts[..blen].iter().enumerate() {
-                heap.push(c * hashes.value_norms[base + j], base + j);
-            }
-        }
-        for (i, s) in heap.into_sorted() {
-            indices.push(i);
-            scores.push(s);
-        }
-        stats
+            };
+            let mut outs = [(indices, scores)];
+            bnb::run_walk(hashes, k, bounds, order, pool, score_block, &mut outs, walk)
+        })
     }
 }
 
@@ -229,8 +252,11 @@ mod tests {
     fn prop_pruned_select_matches_exhaustive() {
         // The SoA/pruned port of the shared collision kernel must be
         // bit-identical (indices and scores) to the scalar reference —
-        // across block-straddling sizes, ragged tails, and mid-decode
-        // appends that mutate the tail summary.
+        // across block-straddling sizes, ragged tails, mid-decode
+        // appends that mutate the tail summary, and the whole engine
+        // matrix (pool sizes 1/2/8 x storage/bound order).
+        let pools =
+            [WorkerPool::new(1), WorkerPool::new(2), WorkerPool::new(8)];
         check_default("hard-pruned-vs-exhaustive", |rng, _| {
             let dim = gen::size(rng, 4, 32);
             let p = 1 + rng.below_usize(8);
@@ -260,6 +286,20 @@ mod tests {
             h.select_pruned_into(&q, &hashes, k, &mut idx, &mut sc);
             let got: Vec<(usize, f32)> = idx.into_iter().zip(sc).collect();
             prop_assert!(got == want, "n={} k={k}: {got:?} vs {want:?}", hashes.n);
+            for pool in &pools {
+                for ordered in [false, true] {
+                    let mut idx = vec![9usize; 3]; // stale
+                    let mut sc = vec![0.5f32; 7];
+                    h.select_pruned_with(&q, &hashes, k, &mut idx, &mut sc, pool, ordered);
+                    let got: Vec<(usize, f32)> = idx.into_iter().zip(sc).collect();
+                    prop_assert!(
+                        got == want,
+                        "threads={} ordered={ordered} (n={} k={k}): {got:?} vs {want:?}",
+                        pool.threads(),
+                        hashes.n
+                    );
+                }
+            }
             Ok(())
         });
     }

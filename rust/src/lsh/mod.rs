@@ -9,6 +9,7 @@
 //! * [`hard`] — traditional hard-LSH collision counting (the paper's main
 //!   ablation baseline, Table 2 / Table 7 / Fig. 2).
 
+pub mod bnb;
 pub mod hard;
 pub mod params;
 pub mod simhash;
@@ -16,5 +17,5 @@ pub mod soft;
 
 pub use hard::HardScorer;
 pub use params::{LshParams, MemoryBudget};
-pub use simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
+pub use simhash::{KeyHashes, SimHash, BLOCK_TOKENS, SUMMARY_CAP};
 pub use soft::{GroupLane, PruneStats, SoftHasher, SoftScorer};

@@ -10,10 +10,11 @@
 //! bucket ids for all keys are contiguous, so the scoring hot paths
 //! stream table-outer/key-inner instead of gathering an `L`-wide row per
 //! key. Each block additionally carries a per-table summary (the set of
-//! distinct bucket ids present) plus the block's max value norm, from
-//! which the scorers compute *admissible* per-block score upper bounds —
-//! the branch-and-bound pruning of `SoftScorer::select_pruned_into` and
-//! `HardScorer::select_pruned_into`.
+//! distinct bucket ids present, capped at [`SUMMARY_CAP`] with a
+//! saturating "use the table-wide max" fallback) plus the block's max
+//! value norm, from which the scorers compute *admissible* per-block
+//! score upper bounds — the branch-and-bound pruning of
+//! `SoftScorer::select_pruned_into` and `HardScorer::select_pruned_into`.
 
 use crate::linalg::Matrix;
 use crate::lsh::params::LshParams;
@@ -24,6 +25,22 @@ use crate::util::rng::Pcg64;
 /// (`kvcache::PAGE_TOKENS`, asserted there), so block boundaries always
 /// land on page boundaries and a page never straddles two blocks.
 pub const BLOCK_TOKENS: usize = 64;
+
+/// Distinct-bucket budget of one (block, table) summary. Uncapped
+/// summaries cost a worst-case `BLOCK_TOKENS` u16 per cell — doubling
+/// the signature bytes; the cap cuts that to `SUMMARY_CAP / BLOCK_TOKENS`
+/// (4x less). A cell whose distinct-id count overflows the budget
+/// **saturates**: its summary is dropped and the scorers fall back to
+/// the table-wide max probability (soft) / an unconditional collision
+/// (hard) for that term — still admissible, because the table-wide max
+/// dominates every bucket's probability. Blocks diverse enough to
+/// overflow had near-table-max bounds anyway; the blocks pruning
+/// actually wins on (temporally clustered keys sharing buckets) stay
+/// under the cap.
+pub const SUMMARY_CAP: usize = 16;
+
+/// `lens` sentinel marking a saturated (block, table) summary.
+const SUMMARY_SATURATED: u16 = u16::MAX;
 
 /// The hyperplanes of `L` independent SimHash tables.
 #[derive(Clone, Debug)]
@@ -61,45 +78,67 @@ pub struct KeyHashes {
 }
 
 /// Per-block pruning summaries: for each (block, table) the distinct
-/// bucket ids present (insertion-ordered, stride [`BLOCK_TOKENS`]), and
+/// bucket ids present (insertion-ordered, stride [`SUMMARY_CAP`], with
+/// overflow saturating to "no summary — use the table-wide max"), and
 /// per block the max cached value norm. Maintained incrementally by
 /// [`KeyHashes::push`]; the scorers reduce them to admissible per-block
 /// score upper bounds.
 #[derive(Clone, Debug, Default)]
 struct BlockSummaries {
     /// Distinct ids of (block, table) at
-    /// `ids[(blk * l + t) * BLOCK_TOKENS..][..lens[blk * l + t]]`.
+    /// `ids[(blk * l + t) * SUMMARY_CAP..][..lens[blk * l + t]]`.
     ids: Vec<u16>,
-    /// Distinct-id count per (block, table).
+    /// Distinct-id count per (block, table); [`SUMMARY_SATURATED`]
+    /// marks an overflowed cell.
     lens: Vec<u16>,
     /// Max ‖v‖₂ per block (0.0 for a block with no keys yet).
     max_norm: Vec<f32>,
+    /// Whether any cell has saturated (tells the scorers to compute
+    /// table-wide maxima for the fallback bound).
+    saturated: bool,
 }
 
 impl BlockSummaries {
+    /// The distinct ids of (blk, table), or `None` once the cell's
+    /// budget overflowed (bound falls back to the table-wide max).
     #[inline]
-    fn table_ids(&self, blk: usize, table: usize, l: usize) -> &[u16] {
+    fn table_ids(&self, blk: usize, table: usize, l: usize) -> Option<&[u16]> {
         let cell = blk * l + table;
-        let base = cell * BLOCK_TOKENS;
-        &self.ids[base..base + self.lens[cell] as usize]
+        let len = self.lens[cell];
+        if len == SUMMARY_SATURATED {
+            return None;
+        }
+        let base = cell * SUMMARY_CAP;
+        Some(&self.ids[base..base + len as usize])
     }
 
     /// Record one key's id in (blk, table); dedups against the ids
-    /// already present.
+    /// already present, saturating when a new distinct id would exceed
+    /// the [`SUMMARY_CAP`] budget.
     #[inline]
     fn note(&mut self, blk: usize, table: usize, l: usize, id: u16) {
         let cell = blk * l + table;
-        let base = cell * BLOCK_TOKENS;
-        let len = self.lens[cell] as usize;
-        if !self.ids[base..base + len].contains(&id) {
-            self.ids[base + len] = id;
-            self.lens[cell] = (len + 1) as u16;
+        let len = self.lens[cell];
+        if len == SUMMARY_SATURATED {
+            return;
         }
+        let len = len as usize;
+        let base = cell * SUMMARY_CAP;
+        if self.ids[base..base + len].contains(&id) {
+            return;
+        }
+        if len == SUMMARY_CAP {
+            self.lens[cell] = SUMMARY_SATURATED;
+            self.saturated = true;
+            return;
+        }
+        self.ids[base + len] = id;
+        self.lens[cell] = (len + 1) as u16;
     }
 
     /// Extend the summary arrays with one fresh (all-empty) block.
     fn grow_block(&mut self, l: usize) {
-        self.ids.resize(self.ids.len() + l * BLOCK_TOKENS, 0);
+        self.ids.resize(self.ids.len() + l * SUMMARY_CAP, 0);
         self.lens.resize(self.lens.len() + l, 0);
         self.max_norm.push(0.0);
     }
@@ -211,11 +250,22 @@ impl KeyHashes {
     }
 
     /// The distinct bucket ids block `blk` occupies in `table`
-    /// (insertion-ordered). Every live key's id is a member — the
-    /// invariant the pruning bounds rest on.
+    /// (insertion-ordered), or `None` once the cell's
+    /// [`SUMMARY_CAP`] budget overflowed. While `Some`, every live
+    /// key's id is a member — the invariant the pruning bounds rest on;
+    /// on `None` the scorers substitute the table-wide max, which
+    /// dominates every bucket and keeps the bound admissible.
     #[inline]
-    pub fn block_table_ids(&self, blk: usize, table: usize) -> &[u16] {
+    pub fn block_table_ids(&self, blk: usize, table: usize) -> Option<&[u16]> {
         self.summaries.table_ids(blk, table, self.l)
+    }
+
+    /// Whether any (block, table) summary has saturated — tells the
+    /// soft scorer to precompute per-table max probabilities for the
+    /// fallback bound.
+    #[inline]
+    pub fn summaries_saturated(&self) -> bool {
+        self.summaries.saturated
     }
 
     /// Max cached value norm of block `blk`.
@@ -297,11 +347,15 @@ impl KeyHashes {
     /// Upper bound on any key-in-block collision count against
     /// `q_buckets`: the number of tables whose block summary contains
     /// the query's bucket. Admissible because a key can only collide in
-    /// table t if its id — a summary member — equals `q_buckets[t]`.
+    /// table t if its id — a summary member — equals `q_buckets[t]`; a
+    /// saturated summary conservatively counts as containing it.
     pub fn block_collision_bound(&self, blk: usize, q_buckets: &[u16]) -> f32 {
         let mut c = 0u32;
         for (t, &qb) in q_buckets.iter().enumerate() {
-            c += self.block_table_ids(blk, t).contains(&qb) as u32;
+            c += match self.block_table_ids(blk, t) {
+                Some(ids) => ids.contains(&qb) as u32,
+                None => 1,
+            };
         }
         c as f32
     }
@@ -637,13 +691,54 @@ mod tests {
         for j in 0..n {
             let blk = j / BLOCK_TOKENS;
             for t in 0..kh.l {
-                assert!(
-                    kh.block_table_ids(blk, t).contains(&kh.bucket(j, t)),
-                    "key {j} table {t} missing from summary"
-                );
+                match kh.block_table_ids(blk, t) {
+                    Some(ids) => assert!(
+                        ids.contains(&kh.bucket(j, t)),
+                        "key {j} table {t} missing from summary"
+                    ),
+                    // Saturated: covered by the table-wide fallback.
+                    None => assert!(kh.summaries_saturated()),
+                }
             }
             assert!(kh.block_max_norm(blk) >= kh.value_norms[j], "key {j} norm");
         }
+    }
+
+    #[test]
+    fn summary_saturates_at_cap_and_stays_saturated() {
+        // One table, bucket space wide enough to overflow the budget:
+        // the first SUMMARY_CAP distinct ids are tracked, the next one
+        // saturates the cell, and later ids (new or repeated) are
+        // no-ops.
+        let r = 4 * SUMMARY_CAP;
+        let mut kh = KeyHashes::empty(1, r);
+        for id in 0..SUMMARY_CAP as u16 {
+            kh.push(&[id], 1.0);
+        }
+        assert!(!kh.summaries_saturated());
+        let ids = kh.block_table_ids(0, 0).expect("under budget");
+        assert_eq!(ids.len(), SUMMARY_CAP);
+        kh.push(&[SUMMARY_CAP as u16], 1.0); // budget overflow
+        assert!(kh.summaries_saturated());
+        assert_eq!(kh.block_table_ids(0, 0), None);
+        kh.push(&[0], 2.0); // repeat id after saturation: still None
+        assert_eq!(kh.block_table_ids(0, 0), None);
+        assert_eq!(kh.block_max_norm(0), 2.0, "norms keep folding in");
+        // The hard bound conservatively counts the saturated table.
+        assert_eq!(kh.block_collision_bound(0, &[(r - 1) as u16]), 1.0);
+    }
+
+    #[test]
+    fn narrow_bucket_spaces_never_saturate() {
+        // r <= SUMMARY_CAP cannot overflow the budget: there are at
+        // most r distinct ids.
+        let r = SUMMARY_CAP;
+        let mut kh = KeyHashes::empty(1, r);
+        for j in 0..2 * BLOCK_TOKENS {
+            kh.push(&[(j % r) as u16], 1.0);
+        }
+        assert!(!kh.summaries_saturated());
+        assert_eq!(kh.block_table_ids(0, 0).expect("full space").len(), r);
     }
 
     #[test]

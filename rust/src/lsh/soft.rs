@@ -9,10 +9,11 @@
 //! * [`SoftScorer::select_top_k`] — Algorithm 3: deterministic top-k over
 //!   `ŵ_j · ‖v_j‖₂`.
 
-use crate::linalg::{BoundHeap, TopK};
+use crate::linalg::TopK;
+use crate::lsh::bnb;
 use crate::lsh::params::LshParams;
 use crate::lsh::simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{self, WorkerPool};
 
 /// Query-side soft hashing (Algorithm 2).
 #[derive(Clone, Debug)]
@@ -131,14 +132,23 @@ impl SoftHasher {
 }
 
 /// Pruning telemetry of one block-pruned selection pass: how many
-/// (lane, block) visits there were and how many the admissible bound
-/// skipped without scoring.
+/// (lane, block) visits there were, how many the admissible bound
+/// skipped without scoring, and how long the pruning threshold took to
+/// warm up. Telemetry only — with a parallel walk the counts depend on
+/// shared-threshold timing and are not deterministic; the *selection*
+/// always is.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PruneStats {
     /// (lane, block) pairs visited.
     pub blocks: usize,
     /// (lane, block) pairs pruned by the bound.
     pub pruned: usize,
+    /// (lane, block) pairs *scored* before each (job, lane)'s first
+    /// prune — all of its scored visits when it never pruned. (A
+    /// parallel walk runs ~2 jobs per worker, so this counts job-local
+    /// ramps, not per-thread ones.) The threshold warm-up cost that
+    /// bound-ordered traversal exists to shrink.
+    pub warmup: usize,
 }
 
 /// One lane of [`SoftScorer::select_pruned_group_into`]: a query's
@@ -313,7 +323,19 @@ impl SoftScorer {
     /// bound dominates every resident key's *computed f32* score, not
     /// just its real-arithmetic value. That is the exactness guarantee
     /// of the branch-and-bound selection.
-    pub fn block_bound(hashes: &KeyHashes, blk: usize, probs: &[f32], r: usize) -> f32 {
+    ///
+    /// A saturated summary (distinct-id count overflowed
+    /// `lsh::SUMMARY_CAP`) contributes the *table-wide* max probability
+    /// instead — it dominates every bucket, so the bound stays
+    /// admissible. `table_max` supplies those `L` maxima precomputed
+    /// (the pre-pass path); with `None` they are computed inline.
+    pub fn block_bound_with(
+        hashes: &KeyHashes,
+        blk: usize,
+        probs: &[f32],
+        r: usize,
+        table_max: Option<&[f32]>,
+    ) -> f32 {
         // The unchecked reads below are only in range for the bucket
         // space the ids were validated against — enforce it here too,
         // not just in the kernels, since this is a public entry point.
@@ -322,27 +344,56 @@ impl SoftScorer {
         let mut sum = 0.0f32;
         for t in 0..hashes.l {
             let ptab = &probs[t * r..(t + 1) * r];
-            let mut m = 0.0f32;
-            for &b in hashes.block_table_ids(blk, t) {
-                // SAFETY: summary ids validated < r at construction.
-                let p = unsafe { *ptab.get_unchecked(b as usize) };
-                if p > m {
-                    m = p;
+            let m = match hashes.block_table_ids(blk, t) {
+                Some(ids) => {
+                    let mut m = 0.0f32;
+                    for &b in ids {
+                        // SAFETY: summary ids validated < r at construction.
+                        let p = unsafe { *ptab.get_unchecked(b as usize) };
+                        if p > m {
+                            m = p;
+                        }
+                    }
+                    m
                 }
-            }
+                None => match table_max {
+                    Some(tm) => tm[t],
+                    None => ptab.iter().fold(0.0f32, |m, &p| if p > m { p } else { m }),
+                },
+            };
             sum += m;
         }
         sum * hashes.block_max_norm(blk)
     }
 
+    /// [`SoftScorer::block_bound_with`] computing any saturated-summary
+    /// fallback maxima inline.
+    pub fn block_bound(hashes: &KeyHashes, blk: usize, probs: &[f32], r: usize) -> f32 {
+        Self::block_bound_with(hashes, blk, probs, r, None)
+    }
+
+    /// Per-table max probability of a flattened `L x R` prob table —
+    /// the saturated-summary fallback terms, computed once per lane by
+    /// the pre-pass. `out` must be `l` long.
+    pub fn table_maxes(probs: &[f32], l: usize, r: usize, out: &mut [f32]) {
+        assert_eq!(probs.len(), l * r, "prob table shape mismatch");
+        assert_eq!(out.len(), l, "one max per table");
+        for (t, slot) in out.iter_mut().enumerate() {
+            *slot = probs[t * r..(t + 1) * r]
+                .iter()
+                .fold(0.0f32, |m, &p| if p > m { p } else { m });
+        }
+    }
+
     /// Algorithms 4→3 with block pruning: exact top-k over
     /// `ŵ_j · ‖v_j‖₂` that skips whole hash blocks whose admissible
-    /// upper bound cannot beat the streaming k-th-score threshold.
-    /// Writes the selected indices (descending score) and their scores;
-    /// both are **bit-identical** to the exhaustive
+    /// upper bound cannot beat the branch-and-bound threshold. Writes
+    /// the selected indices (descending score) and their scores; both
+    /// are **bit-identical** to the exhaustive
     /// [`SoftScorer::scores_into`] + `top_k_into` pipeline (see
-    /// [`SoftScorer::block_bound`] for why pruning is lossless).
-    /// Returns pruning telemetry.
+    /// [`SoftScorer::block_bound_with`] and `lsh::bnb` for why pruning
+    /// is lossless). Runs the pool-parallel bound-ordered walk on the
+    /// shared global pool; returns pruning telemetry.
     pub fn select_pruned_into(
         &self,
         probs: &[f32],
@@ -352,24 +403,71 @@ impl SoftScorer {
         indices: &mut Vec<usize>,
         scores: &mut Vec<f32>,
     ) -> PruneStats {
+        self.select_pruned_with(probs, r, hashes, k, indices, scores, pool::global(), true)
+    }
+
+    /// [`SoftScorer::select_pruned_into`] with an explicit pool and
+    /// traversal order — the bench/test surface for comparing the
+    /// serial, parallel, and bound-ordered engines (selections are
+    /// bit-identical across all of them; only wall-clock and the prune
+    /// telemetry differ).
+    #[allow(clippy::too_many_arguments)]
+    pub fn select_pruned_with(
+        &self,
+        probs: &[f32],
+        r: usize,
+        hashes: &KeyHashes,
+        k: usize,
+        indices: &mut Vec<usize>,
+        scores: &mut Vec<f32>,
+        pool: &WorkerPool,
+        ordered: bool,
+    ) -> PruneStats {
         let mut lanes = [GroupLane { probs, indices, scores }];
-        self.select_pruned_group_into(r, hashes, k, &mut lanes)
+        self.select_pruned_group_with(r, hashes, k, &mut lanes, pool, ordered)
     }
 
     /// The GQA lane: [`SoftScorer::select_pruned_into`] for a *group*
-    /// of queries sharing one KV stream, in a single pass over the hash
-    /// blocks — each block's id rows are loaded once and scored for
-    /// every lane while cache-hot, amortizing the table walk across the
-    /// query heads of a GQA group. Each lane prunes against its own
-    /// streaming threshold; per-lane results are bit-identical to
-    /// per-query [`SoftScorer::select_pruned_into`] calls (lanes share
-    /// no state).
+    /// of queries sharing one KV stream. Each worker's pass loads a
+    /// block's id rows once and scores them for every lane while
+    /// cache-hot, amortizing the table walk across the query heads of a
+    /// GQA group; per-lane results are bit-identical to per-query
+    /// [`SoftScorer::select_pruned_into`] calls. Runs bound-ordered on
+    /// the shared global pool.
     pub fn select_pruned_group_into(
         &self,
         r: usize,
         hashes: &KeyHashes,
         k: usize,
         lanes: &mut [GroupLane<'_>],
+    ) -> PruneStats {
+        self.select_pruned_group_with(r, hashes, k, lanes, pool::global(), true)
+    }
+
+    /// The full engine behind every soft selection: a pool-parallel
+    /// branch-and-bound walk over the hash blocks (`lsh::bnb`).
+    ///
+    /// The pre-pass computes every (lane, block) admissible bound into
+    /// per-thread plan scratch and — when `ordered` — sorts a block
+    /// visit permutation by descending summed bound, so the first
+    /// visits everywhere are the blocks most likely to hold top-k keys
+    /// and the pruning thresholds warm immediately. The walk itself
+    /// shards `blocks x lanes` across `pool`'s workers, each pruning
+    /// against its tie-aware local heap plus the shared monotone
+    /// threshold, and the per-worker candidate sets merge exactly —
+    /// selections (indices AND scores) are bit-identical to exhaustive
+    /// scoring for every pool size and either ordering (property-tested
+    /// across pool sizes 1/2/8). Inside a pool worker the walk runs
+    /// inline (cores are already busy); on a free caller thread it fans
+    /// out — one engine, parallel everywhere it can be.
+    pub fn select_pruned_group_with(
+        &self,
+        r: usize,
+        hashes: &KeyHashes,
+        k: usize,
+        lanes: &mut [GroupLane<'_>],
+        pool: &WorkerPool,
+        ordered: bool,
     ) -> PruneStats {
         let l = hashes.l;
         assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
@@ -378,51 +476,89 @@ impl SoftScorer {
             lane.indices.clear();
             lane.scores.clear();
         }
-        let mut stats = PruneStats::default();
         let n = hashes.n;
         if n == 0 || k == 0 || lanes.is_empty() {
-            return stats;
+            return PruneStats::default();
         }
-        let k = k.min(n);
-        let mut heaps: Vec<BoundHeap> = (0..lanes.len()).map(|_| BoundHeap::new(k)).collect();
-        let mut acc = [0.0f32; BLOCK_TOKENS];
-        for blk in 0..hashes.n_blocks() {
-            let blen = hashes.block_len(blk);
-            let base = blk * BLOCK_TOKENS;
-            let block = hashes.block_data(blk);
-            let norms = &hashes.value_norms[base..base + blen];
-            for (lane, heap) in lanes.iter().zip(heaps.iter_mut()) {
-                stats.blocks += 1;
-                // The bound is only worth computing once the heap holds
-                // k candidates (nothing may be pruned earlier).
-                if heap.is_full() && heap.prunes(Self::block_bound(hashes, blk, lane.probs, r)) {
-                    stats.pruned += 1;
-                    continue;
+        let n_lanes = lanes.len();
+        let n_blocks = hashes.n_blocks();
+        // Split the lanes into the shared prob tables (read by the
+        // score/bound closures) and the output buffers (written by the
+        // walk) so both can be borrowed at once.
+        let mut probs_by_lane: Vec<&[f32]> = Vec::with_capacity(n_lanes);
+        for lane in lanes.iter() {
+            probs_by_lane.push(lane.probs);
+        }
+        let mut outs: Vec<(&mut Vec<usize>, &mut Vec<f32>)> = Vec::with_capacity(n_lanes);
+        for lane in lanes.iter_mut() {
+            outs.push((&mut *lane.indices, &mut *lane.scores));
+        }
+        pool::with_bnb_plan(|plan| {
+            let crate::util::pool::BnbPlanScratch { bounds, agg, order, table_max, walk } = plan;
+            // Saturated-summary fallbacks: one table-max row per lane.
+            table_max.clear();
+            let saturated = hashes.summaries_saturated();
+            if saturated {
+                table_max.resize(n_lanes * l, 0.0);
+                for (g, probs) in probs_by_lane.iter().enumerate() {
+                    Self::table_maxes(probs, l, r, &mut table_max[g * l..(g + 1) * l]);
                 }
-                // Score the block table-outer / key-inner; per key the
-                // accumulation order (t = 0..L) matches the exhaustive
-                // gather exactly, so scores are bit-identical.
+            }
+            // Bound pre-pass: every (lane, block) admissible bound,
+            // fanned element-wise over the pool — cell granularity (not
+            // lane rows) so the dominant single-lane select_into path
+            // parallelizes across blocks too. Pure per-cell computation,
+            // so the parallel fill is bit-identical to a serial loop.
+            bounds.clear();
+            bounds.resize(n_lanes * n_blocks, 0.0);
+            {
+                let table_max = &*table_max;
+                let probs_by_lane = &probs_by_lane;
+                pool.fill(bounds, |i| {
+                    let (g, blk) = (i / n_blocks, i % n_blocks);
+                    let tm = saturated.then(|| &table_max[g * l..(g + 1) * l]);
+                    Self::block_bound_with(hashes, blk, probs_by_lane[g], r, tm)
+                });
+            }
+            // Visit order: descending summed bound warms every lane's
+            // threshold in the first few blocks; identity otherwise.
+            if ordered && n_blocks > 1 {
+                agg.clear();
+                agg.resize(n_blocks, 0.0);
+                for g in 0..n_lanes {
+                    for (blk, a) in agg.iter_mut().enumerate() {
+                        *a += bounds[g * n_blocks + blk];
+                    }
+                }
+                bnb::bound_order(agg, order);
+            } else {
+                bnb::identity_order(n_blocks, order);
+            }
+            // Score the block table-outer / key-inner; per key the
+            // accumulation order (t = 0..L) and the final norm product
+            // match the exhaustive gather exactly, so scores are
+            // bit-identical.
+            let norms = &hashes.value_norms;
+            let score_block = |g: usize, blk: usize, acc: &mut [f32; BLOCK_TOKENS]| {
+                let blen = hashes.block_len(blk);
+                let base = blk * BLOCK_TOKENS;
+                let block = hashes.block_data(blk);
+                let probs = probs_by_lane[g];
                 acc[..blen].fill(0.0);
                 for t in 0..l {
                     let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
-                    let ptab = &lane.probs[t * r..(t + 1) * r];
+                    let ptab = &probs[t * r..(t + 1) * r];
                     for (a, &b) in acc[..blen].iter_mut().zip(row) {
                         // SAFETY: ids validated < r at construction.
                         *a += unsafe { *ptab.get_unchecked(b as usize) };
                     }
                 }
-                for (j, (&a, &norm)) in acc[..blen].iter().zip(norms).enumerate() {
-                    heap.push(a * norm, base + j);
+                for (a, &norm) in acc[..blen].iter_mut().zip(&norms[base..base + blen]) {
+                    *a *= norm;
                 }
-            }
-        }
-        for (lane, heap) in lanes.iter_mut().zip(heaps) {
-            for (i, s) in heap.into_sorted() {
-                lane.indices.push(i);
-                lane.scores.push(s);
-            }
-        }
-        stats
+            };
+            bnb::run_walk(hashes, k, bounds, order, pool, score_block, &mut outs, walk)
+        })
     }
 
     /// Full decode-side pipeline (Algorithms 2→4→3): soft-hash the query,
@@ -845,12 +981,43 @@ mod tests {
         (idx, sc, stats)
     }
 
+    fn pruned_with(
+        s: &SoftScorer,
+        q: &[f32],
+        hashes: &KeyHashes,
+        k: usize,
+        pool: &WorkerPool,
+        ordered: bool,
+    ) -> (Vec<usize>, Vec<f32>, PruneStats) {
+        let probs = s.hasher.bucket_probs(q);
+        let mut idx = vec![77usize; 2]; // stale
+        let mut sc = vec![-3.0f32; 5];
+        let stats = s.select_pruned_with(
+            &probs.probs,
+            probs.r,
+            hashes,
+            k,
+            &mut idx,
+            &mut sc,
+            pool,
+            ordered,
+        );
+        (idx, sc, stats)
+    }
+
+    /// The tentpole's engine matrix: serial, 2-way, and 8-way pools,
+    /// each in storage order and bound order.
+    fn engine_pools() -> Vec<WorkerPool> {
+        vec![WorkerPool::new(1), WorkerPool::new(2), WorkerPool::new(8)]
+    }
+
     #[test]
     fn prop_pruned_select_bit_identical_to_exhaustive() {
         // The tentpole acceptance bar: branch-and-bound selection over
         // the SoA blocks returns exactly the exhaustive top-k — indices
         // AND scores — across τ extremes, non-block-aligned tails, and
         // adversarial bucket/norm distributions.
+        let pools = engine_pools();
         check("pruned-vs-exhaustive", PropConfig { cases: 40, seed: 0xB10C }, |rng, _| {
             let dim = gen::size(rng, 4, 48);
             let p = 1 + rng.below_usize(8);
@@ -885,6 +1052,18 @@ mod tests {
                 "indices diverge (n={n} k={k} tau={tau}): {got_i:?} vs {want_i:?}"
             );
             prop_assert!(got_s == want_s, "scores diverge (n={n} k={k} tau={tau})");
+            // The engine matrix: every pool size x traversal order must
+            // select exactly the exhaustive top-k, indices and scores.
+            for pool in &pools {
+                for ordered in [false, true] {
+                    let (got_i, got_s, _) = pruned_with(&s, &q, &hashes, k, pool, ordered);
+                    prop_assert!(
+                        got_i == want_i && got_s == want_s,
+                        "threads={} ordered={ordered} diverges (n={n} k={k} tau={tau})",
+                        pool.threads()
+                    );
+                }
+            }
             // Mid-decode appends mutate the tail block's summary in
             // place; equivalence must survive them.
             for _ in 0..1 + rng.below_usize(20) {
@@ -896,6 +1075,138 @@ mod tests {
             let (got_i, got_s, _) = pruned(&s, &q, &hashes, k);
             prop_assert!(got_i == want_i, "post-append indices diverge (n={} k={k})", hashes.n);
             prop_assert!(got_s == want_s, "post-append scores diverge");
+            for pool in &pools {
+                for ordered in [false, true] {
+                    let (got_i, got_s, _) = pruned_with(&s, &q, &hashes, k, pool, ordered);
+                    prop_assert!(
+                        got_i == want_i && got_s == want_s,
+                        "post-append threads={} ordered={ordered} diverges",
+                        pool.threads()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tie_breaks_identical_across_traversals() {
+        // The adversarial tie-break property: all-equal-score and
+        // duplicate-key distributions must produce identical (indices
+        // AND scores) selections under storage-order, bound-order, and
+        // parallel traversal — the regime where a naive `ub <= t` prune
+        // of an out-of-order block would drop an index-tie winner.
+        let pools = engine_pools();
+        check("pruned-tie-breaks", PropConfig { cases: 24, seed: 0x71EB }, |rng, _| {
+            let dim = gen::size(rng, 4, 32);
+            let p = 1 + rng.below_usize(6);
+            let l = 1 + rng.below_usize(8);
+            let s = SoftScorer::new(LshParams { p, l, tau: 0.5 }, dim, rng.next_u64());
+            let n = 1 + rng.below_usize(3 * crate::lsh::simhash::BLOCK_TOKENS + 7);
+            let mut keys = Matrix::zeros(n, dim);
+            let mut vals = Matrix::zeros(n, dim);
+            if rng.below_usize(2) == 0 {
+                // Every key identical, every norm identical: every
+                // score ties, so the selection is decided purely by the
+                // index tie-break.
+                let proto = rng.normal_vec(dim);
+                for j in 0..n {
+                    keys.row_mut(j).copy_from_slice(&proto);
+                    vals.set(j, 0, 2.0);
+                }
+            } else {
+                // A few distinct (key, norm) prototypes cycled across
+                // blocks: heavy cross-block duplicate ties.
+                let protos: Vec<Vec<f32>> =
+                    (0..1 + rng.below_usize(3)).map(|_| rng.normal_vec(dim)).collect();
+                for j in 0..n {
+                    let which = j % protos.len();
+                    keys.row_mut(j).copy_from_slice(&protos[which]);
+                    vals.set(j, 0, 1.0 + which as f32);
+                }
+            }
+            let hashes = s.hash_keys(&keys, &vals);
+            let q = rng.normal_vec(dim);
+            let k = 1 + rng.below_usize(n + 2);
+            let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, k);
+            for pool in &pools {
+                for ordered in [false, true] {
+                    let (got_i, got_s, _) = pruned_with(&s, &q, &hashes, k, pool, ordered);
+                    prop_assert!(
+                        got_i == want_i,
+                        "threads={} ordered={ordered}: {got_i:?} vs {want_i:?} (n={n} k={k})",
+                        pool.threads()
+                    );
+                    prop_assert!(
+                        got_s == want_s,
+                        "threads={} ordered={ordered} scores diverge (n={n} k={k})",
+                        pool.threads()
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_capped_summaries_never_prune_a_true_topk_block() {
+        // The summary-cap satellite: hashes crafted so every full
+        // (block, table) cell overflows SUMMARY_CAP and saturates. The
+        // fallback bound (table-wide max) must stay admissible and the
+        // pruned walk bit-identical to exhaustive — i.e. capping never
+        // prunes a block holding a true top-k key.
+        let pools = engine_pools();
+        check("capped-summaries-lossless", PropConfig { cases: 24, seed: 0xCA9 }, |rng, _| {
+            let dim = gen::size(rng, 4, 24);
+            let p = 7 + rng.below_usize(3); // r = 128..512 >> SUMMARY_CAP
+            let l = 1 + rng.below_usize(4);
+            let s = SoftScorer::new(LshParams { p, l, tau: 0.5 }, dim, rng.next_u64());
+            let r = 1usize << p;
+            let bt = crate::lsh::simhash::BLOCK_TOKENS;
+            let n = bt + 1 + rng.below_usize(2 * bt);
+            // Craft the id table directly: key j occupies bucket
+            // (j * stride + t) % r, marching through > SUMMARY_CAP
+            // distinct ids per (block, table).
+            let stride = 1 + 2 * rng.below_usize(16); // odd: full period
+            let ids: Vec<u16> =
+                (0..n * l).map(|c| (((c / l) * stride + c % l) % r) as u16).collect();
+            let norms: Vec<f32> = (0..n).map(|_| rng.next_f32() + 0.1).collect();
+            let hashes = KeyHashes::from_row_major(l, r, &ids, norms);
+            prop_assert!(
+                hashes.summaries_saturated(),
+                "cap must overflow (n={n} r={r} stride={stride})"
+            );
+            let q = rng.normal_vec(dim);
+            let probs = s.hasher.bucket_probs(&q);
+            // Admissibility incl. the table-max fallback, both the
+            // precomputed and the inline path.
+            let scores = s.scores(&probs, &hashes, None);
+            let mut tmax = vec![0.0f32; l];
+            SoftScorer::table_maxes(&probs.probs, l, r, &mut tmax);
+            for blk in 0..hashes.n_blocks() {
+                let ub = SoftScorer::block_bound(&hashes, blk, &probs.probs, r);
+                let ub_pre =
+                    SoftScorer::block_bound_with(&hashes, blk, &probs.probs, r, Some(&tmax));
+                prop_assert!(ub == ub_pre, "inline vs precomputed fallback diverge");
+                for j in blk * bt..blk * bt + hashes.block_len(blk) {
+                    prop_assert!(
+                        scores[j] <= ub,
+                        "block {blk} key {j}: score {} > capped bound {ub}",
+                        scores[j]
+                    );
+                }
+            }
+            // And the walk stays lossless on saturated summaries.
+            let k = 1 + rng.below_usize(n);
+            let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, k);
+            for pool in &pools {
+                let (got_i, got_s, _) = pruned_with(&s, &q, &hashes, k, pool, true);
+                prop_assert!(
+                    got_i == want_i && got_s == want_s,
+                    "threads={} capped selection diverges (n={n} k={k})",
+                    pool.threads()
+                );
+            }
             Ok(())
         });
     }
@@ -946,6 +1257,7 @@ mod tests {
     fn prop_group_lanes_match_scalar_pruned() {
         // The GQA kernel is a pure fusion: every lane's selection must
         // equal its own scalar select_pruned_into run.
+        let pools = engine_pools();
         check("gqa-group-vs-scalar", PropConfig { cases: 24, seed: 0x6A4 }, |rng, _| {
             let dim = gen::size(rng, 4, 32);
             let p = 1 + rng.below_usize(7);
@@ -977,17 +1289,45 @@ mod tests {
                 prop_assert!(idx[g] == want_i, "lane {g} indices diverge (n={n} k={k})");
                 prop_assert!(sc[g] == want_s, "lane {g} scores diverge");
             }
+            // The fused group kernel must also be invariant across pool
+            // sizes and orderings — the blocks x lanes tiling at work.
+            for pool in &pools {
+                for ordered in [false, true] {
+                    let mut idx2 = vec![Vec::new(); group];
+                    let mut sc2 = vec![Vec::new(); group];
+                    {
+                        let mut lanes: Vec<GroupLane<'_>> = probs
+                            .iter()
+                            .zip(idx2.iter_mut().zip(sc2.iter_mut()))
+                            .map(|(bp, (i, sv))| GroupLane {
+                                probs: &bp.probs,
+                                indices: i,
+                                scores: sv,
+                            })
+                            .collect();
+                        s.select_pruned_group_with(r, &hashes, k, &mut lanes, pool, ordered);
+                    }
+                    prop_assert!(
+                        idx2 == idx && sc2 == sc,
+                        "group threads={} ordered={ordered} diverges (n={n} k={k} group={group})",
+                        pool.threads()
+                    );
+                }
+            }
             Ok(())
         });
     }
 
     #[test]
     fn pruning_skips_dominated_blocks() {
-        // Deterministic pruning witness: identical keys everywhere mean
-        // every later block's bound equals the streaming threshold
-        // exactly, which prunes (push requires strictly beating it).
+        // Deterministic pruning witness (serial pool — parallel prune
+        // counts depend on shared-threshold timing): identical keys
+        // everywhere mean every later block's bound ties the held
+        // entry's score at a higher base index, which the tie-aware
+        // predicate prunes.
         let dim = 24;
         let s = scorer(6, 8, 0.5, dim);
+        let serial = WorkerPool::new(1);
         let mut rng = Pcg64::seeded(77);
         let proto = rng.normal_vec(dim);
         let n = 4 * crate::lsh::simhash::BLOCK_TOKENS;
@@ -998,12 +1338,59 @@ mod tests {
         let vals = Matrix::from_vec(n, dim, vec![1.0; n * dim]);
         let hashes = s.hash_keys(&keys, &vals);
         let q = rng.normal_vec(dim);
-        let (idx, sc, stats) = pruned(&s, &q, &hashes, 1);
-        assert_eq!(stats.blocks, 4);
-        assert_eq!(stats.pruned, 3, "blocks 1..3 must be bounded out");
+        for ordered in [false, true] {
+            let (idx, sc, stats) = pruned_with(&s, &q, &hashes, 1, &serial, ordered);
+            assert_eq!(stats.blocks, 4, "ordered={ordered}");
+            assert_eq!(stats.pruned, 3, "blocks 1..3 must be bounded out (ordered={ordered})");
+            assert_eq!(stats.warmup, 1, "only block 0 scored before the first prune");
+            let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, 1);
+            assert_eq!(idx, want_i);
+            assert_eq!(sc, want_s);
+        }
+        // The parallel engines agree on the selection (stats may not be
+        // deterministic there).
+        let (idx, sc, _) = pruned(&s, &q, &hashes, 1);
         let (want_i, want_s) = exhaustive_reference(&s, &q, &hashes, 1);
         assert_eq!(idx, want_i);
         assert_eq!(sc, want_s);
+    }
+
+    #[test]
+    fn bound_order_warms_threshold_faster_than_storage_order() {
+        // Deterministic ordering witness (serial pool): block value
+        // norms ascend, so in storage order every block strictly beats
+        // the current threshold and is scored — the threshold never
+        // warms enough to prune. Bound order visits the best block
+        // first and prunes everything after it.
+        let dim = 16;
+        let s = scorer(5, 6, 0.5, dim);
+        let serial = WorkerPool::new(1);
+        let mut rng = Pcg64::seeded(99);
+        let proto = rng.normal_vec(dim);
+        let bt = crate::lsh::simhash::BLOCK_TOKENS;
+        let n = 6 * bt;
+        let mut keys = Matrix::zeros(n, dim);
+        let mut vals = Matrix::zeros(n, dim);
+        for j in 0..n {
+            keys.row_mut(j).copy_from_slice(&proto);
+            vals.set(j, 0, (j / bt + 1) as f32);
+        }
+        let hashes = s.hash_keys(&keys, &vals);
+        let q = rng.normal_vec(dim);
+        let (_, _, storage) = pruned_with(&s, &q, &hashes, 4, &serial, false);
+        let (_, _, ordered) = pruned_with(&s, &q, &hashes, 4, &serial, true);
+        assert!(
+            ordered.warmup < storage.warmup,
+            "bound order should warm faster: ordered {} vs storage {}",
+            ordered.warmup,
+            storage.warmup
+        );
+        assert!(ordered.pruned > storage.pruned, "and prune more");
+        // Same selection either way, of course.
+        let (i1, s1, _) = pruned_with(&s, &q, &hashes, 4, &serial, false);
+        let (i2, s2, _) = pruned_with(&s, &q, &hashes, 4, &serial, true);
+        assert_eq!(i1, i2);
+        assert_eq!(s1, s2);
     }
 
     #[test]

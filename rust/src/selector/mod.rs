@@ -180,7 +180,8 @@ pub trait Selector: Send + Sync {
     /// GQA lane: select for a *group* of queries sharing this KV
     /// stream (the query heads of one GQA group), one [`Selection`]
     /// per query. The default loops [`Selector::select_into`]; methods
-    /// with a fused single-pass kernel (SOCKET's block walk) override
+    /// with a fused kernel (SOCKET's pool-parallel block walk, which
+    /// tiles blocks x lanes across the shared worker pool) override
     /// it. Results must be identical to per-query `select_into` calls.
     fn select_group_into(
         &self,

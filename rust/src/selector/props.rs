@@ -195,7 +195,9 @@ fn prop_group_select_matches_per_query_for_every_method() {
         let dim = 4 * gen::size(rng, 2, 8);
         let n = gen::size(rng, 1, 120);
         let (_keys, _values, cache, table) = random_kv(rng, n, dim);
-        let group = 1 + rng.below_usize(4);
+        // Groups up to 8 exercise the lanes half of the walk's
+        // blocks x lanes tiling.
+        let group = 1 + rng.below_usize(8);
         let queries: Vec<Vec<f32>> = (0..group).map(|_| rng.normal_vec(dim)).collect();
         let k = 1 + rng.below_usize(n);
         for spec in registry() {
@@ -217,6 +219,44 @@ fn prop_group_select_matches_per_query_for_every_method() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn selection_is_identical_on_caller_thread_and_inside_workers() {
+    // The deleted engine hedge's obligation, now held by ONE engine:
+    // the hash selectors' pool-parallel pruned walk fans blocks across
+    // workers when selecting on a free caller thread (`select`) and
+    // runs inline inside pool workers (`select_batch` fan-out) — the
+    // two contexts must select identically, and both must equal the
+    // exhaustive Alg. 2→4→3 reference.
+    let mut rng = Pcg64::seeded(0xC0FE);
+    let dim = 16;
+    let n = 3 * crate::lsh::BLOCK_TOKENS + 21;
+    let keys = Matrix::gaussian(n, dim, &mut rng);
+    let values = Matrix::gaussian(n, dim, &mut rng);
+    let queries: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(dim)).collect();
+    let k = 24;
+    let cfg = test_cfg(dim, 7);
+    let exhaustive = crate::lsh::SoftScorer::new(cfg.lsh, dim, cfg.seed);
+    let hashes = exhaustive.hash_keys(&keys, &values);
+    for name in ["socket", "lsh"] {
+        let mut s = build_named(name, &cfg).expect("registered");
+        s.build_dense(&keys, &values);
+        let batched = s.select_batch(&queries, k).expect("built");
+        for (q, from_worker) in queries.iter().zip(&batched) {
+            let from_caller = s.select(q, k).expect("built");
+            assert_eq!(&from_caller, from_worker, "{name}: caller vs worker context");
+        }
+        if name == "socket" {
+            for (q, got) in queries.iter().zip(&batched) {
+                assert_eq!(
+                    got,
+                    &exhaustive.select_top_k(q, &hashes, k),
+                    "socket vs exhaustive reference"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -9,9 +9,9 @@
 
 use super::{hash_kv_source, Selection, Selector, SelectorError};
 use crate::attention::KvSource;
-use crate::linalg::{l2_norm, top_k_into};
+use crate::linalg::l2_norm;
 use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, SoftScorer};
-use crate::util::pool::{self, WorkerPool};
+use crate::util::pool;
 
 /// SOCKET as a [`Selector`].
 pub struct SocketSelector {
@@ -55,23 +55,16 @@ impl Selector for SocketSelector {
             return Ok(());
         }
         // Alg. 2 soft-hash fills reusable scratch (pooled; degrades to
-        // the serial hot path inside workers). For Algs. 4→3 the two
-        // engines select *identically* (property-tested bit-identity),
-        // so pick by context: inside a pool worker — the decode_batch /
-        // select_batch fan-out, where every core is already busy — run
-        // the block-pruned branch-and-bound walk; on a free caller
-        // thread with idle workers, fan exhaustive scoring across the
-        // pool instead, which beats a serial walk whenever pruning
-        // doesn't bite (uniform-random keys at long context).
-        let pool = pool::global();
-        let (_, r) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool);
+        // the serial hot path inside workers). Algs. 4→3 are ONE
+        // engine: the pool-parallel bound-ordered branch-and-bound walk
+        // (`lsh::bnb`) — it fans blocks across idle workers on a free
+        // caller thread and runs inline inside pool workers, so the old
+        // per-call hedge between a serial pruned walk and pool-fanned
+        // exhaustive scoring is gone; selections are bit-identical to
+        // exhaustive scoring either way.
+        let (_, r) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool::global());
         let Selection { indices, scores, aux } = sel;
-        if WorkerPool::in_worker() || pool.threads() == 1 {
-            self.scorer.select_pruned_into(aux, r, hashes, k.max(1), indices, scores);
-        } else {
-            self.scorer.scores_into(aux, r, hashes, pool, scores);
-            top_k_into(scores, k.max(1), indices);
-        }
+        self.scorer.select_pruned_into(aux, r, hashes, k.max(1), indices, scores);
         Ok(())
     }
 
@@ -86,13 +79,6 @@ impl Selector for SocketSelector {
         if queries.is_empty() {
             return Ok(());
         }
-        // A group of one is just a scalar select — take select_into's
-        // hedged engine choice (pruned walk in workers, pooled
-        // exhaustive scoring on a free caller thread) instead of
-        // forcing the serial walk.
-        if queries.len() == 1 {
-            return self.select_into(&queries[0], k, &mut sels[0]);
-        }
         // Soft-hash every query head first (Alg. 2, pooled)...
         let mut r = 0;
         for (q, sel) in queries.iter().zip(sels.iter_mut()) {
@@ -104,10 +90,10 @@ impl Selector for SocketSelector {
         if hashes.n == 0 {
             return Ok(());
         }
-        // ...then one fused pass over the hash blocks scores the whole
-        // GQA group: each block's id rows are consumed by every lane
-        // while cache-hot. Per-lane results are identical to per-query
-        // select_into.
+        // ...then the fused pool-parallel walk scores the whole GQA
+        // group, tiling blocks x lanes across the workers: each block's
+        // id rows are consumed by every lane of a job while cache-hot.
+        // Per-lane results are identical to per-query select_into.
         let mut lanes: Vec<GroupLane<'_>> = sels
             .iter_mut()
             .map(|sel| {

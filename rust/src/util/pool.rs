@@ -10,6 +10,7 @@
 
 use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -232,6 +233,128 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Msg>>>) {
     }
 }
 
+/// Shared monotone pruning threshold of one pool-parallel
+/// branch-and-bound walk (`lsh::bnb`): a relaxed `AtomicU32` holding the
+/// f32 *bits* of the best k-th score any worker has published so far.
+///
+/// For non-negative f32 values (and every collision score is
+/// non-negative — probabilities/counts times value norms) the IEEE-754
+/// bit pattern is order-preserving as an unsigned integer, so
+/// `fetch_max` on the bits IS `max` on the scores: the cell only ever
+/// rises, no CAS loop needed. Relaxed ordering is sufficient because a
+/// stale read merely returns an older, *lower* threshold — pruning gets
+/// weaker, never wrong — and the exact per-worker merge restores
+/// bit-identical selections regardless of what was pruned where.
+#[derive(Debug, Default)]
+pub struct ThresholdCell(AtomicU32);
+
+impl ThresholdCell {
+    /// A cell holding 0.0 — below every real score, so nothing prunes
+    /// until a worker's heap fills and publishes (the strict `<` test
+    /// in `SharedBoundHeap::prunes_block` keeps 0-score blocks alive
+    /// even against the initial value).
+    pub fn new() -> ThresholdCell {
+        ThresholdCell(AtomicU32::new(0))
+    }
+
+    /// Raise the shared threshold to at least `score` (monotone).
+    #[inline]
+    pub fn publish(&self, score: f32) {
+        debug_assert!(score >= 0.0, "shared threshold requires non-negative scores");
+        self.0.fetch_max(score.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The highest score published so far (0.0 before any publish).
+    #[inline]
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Drop back to the initial 0.0 (exclusive access — between walks,
+    /// when the cell is reused from scratch storage).
+    pub fn reset(&mut self) {
+        *self.0.get_mut() = 0;
+    }
+}
+
+/// Per-worker scratch of the pool-parallel branch-and-bound walk: the
+/// per-lane candidate heaps a worker reuses across jobs (capacity
+/// persists; `BoundHeap::reset` re-keys them per walk). Kept separate
+/// from [`DecodeScratch`] so a walk running *inside* a decode worker —
+/// which already holds the decode scratch — never re-enters the same
+/// `RefCell`.
+#[derive(Debug, Default)]
+pub struct BnbWorkerScratch {
+    heaps: Vec<crate::linalg::BoundHeap>,
+    seen_prune: Vec<bool>,
+}
+
+impl BnbWorkerScratch {
+    /// The first `lanes` heaps, each reset to selection size `k`, plus
+    /// the parallel per-lane first-prune flags (cleared) backing the
+    /// warmup telemetry — one call hands a job all of its per-lane
+    /// state without an allocation.
+    pub fn lanes(
+        &mut self,
+        lanes: usize,
+        k: usize,
+    ) -> (&mut [crate::linalg::BoundHeap], &mut [bool]) {
+        if self.heaps.len() < lanes {
+            self.heaps.resize_with(lanes, || crate::linalg::BoundHeap::new(1));
+        }
+        if self.seen_prune.len() < lanes {
+            self.seen_prune.resize(lanes, false);
+        }
+        let heaps = &mut self.heaps[..lanes];
+        for h in heaps.iter_mut() {
+            h.reset(k);
+        }
+        let seen_prune = &mut self.seen_prune[..lanes];
+        seen_prune.fill(false);
+        (heaps, seen_prune)
+    }
+}
+
+/// Caller-side scratch of the branch-and-bound pre-pass: the per-block
+/// bound table, its per-block aggregate, the bound-sorted visit
+/// permutation, and the per-lane table-wide max probabilities backing
+/// saturated-summary bounds. One per thread; distinct from both
+/// [`DecodeScratch`] and [`BnbWorkerScratch`] so a caller that is itself
+/// a pool worker (decode_batch fan-out) can hold this while its inline
+/// jobs borrow the worker scratch.
+#[derive(Debug, Default)]
+pub struct BnbPlanScratch {
+    /// Admissible per-(lane, block) score bounds, lane-major.
+    pub bounds: Vec<f32>,
+    /// Per-block bound aggregate driving the visit order.
+    pub agg: Vec<f32>,
+    /// Block visit permutation (identity for storage-order walks).
+    pub order: Vec<u32>,
+    /// Per-lane `L`-wide table max probabilities (saturated summaries).
+    pub table_max: Vec<f32>,
+    /// The walk's own reusable storage (threshold cells, per-job
+    /// candidate buffers) — owned here so `bnb::run_walk` gets it from
+    /// the caller without re-entering this `RefCell`.
+    pub walk: crate::lsh::bnb::WalkScratch,
+}
+
+thread_local! {
+    static BNB_WORKER: RefCell<BnbWorkerScratch> = RefCell::new(BnbWorkerScratch::default());
+    static BNB_PLAN: RefCell<BnbPlanScratch> = RefCell::new(BnbPlanScratch::default());
+}
+
+/// Run `f` with this thread's [`BnbWorkerScratch`]. Not reentrant.
+pub fn with_bnb_worker<R>(f: impl FnOnce(&mut BnbWorkerScratch) -> R) -> R {
+    BNB_WORKER.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Run `f` with this thread's [`BnbPlanScratch`]. Not reentrant, but
+/// safe to hold while walk jobs (which only touch the worker scratch)
+/// run inline on the same thread.
+pub fn with_bnb_plan<R>(f: impl FnOnce(&mut BnbPlanScratch) -> R) -> R {
+    BNB_PLAN.with(|s| f(&mut s.borrow_mut()))
+}
+
 /// Reusable per-worker decode scratch: the buffers the decode hot path
 /// fills once per (sequence, head, step) and would otherwise reallocate
 /// — the selector's scoring workspace and the merged selection index
@@ -385,6 +508,58 @@ mod tests {
             })
         });
         assert_eq!(sums[3], 6);
+    }
+
+    #[test]
+    fn threshold_cell_is_monotone_and_concurrent() {
+        let cell = ThresholdCell::new();
+        assert_eq!(cell.get(), 0.0);
+        cell.publish(1.5);
+        cell.publish(0.5); // lower publish must not regress the cell
+        assert_eq!(cell.get(), 1.5);
+        cell.publish(2.25);
+        assert_eq!(cell.get(), 2.25);
+        // Concurrent publishes from pool workers: the max survives.
+        let pool = WorkerPool::new(4);
+        let shared = ThresholdCell::new();
+        let shared_ref = &shared;
+        pool.map(64, |i| shared_ref.publish(i as f32 * 0.125));
+        assert_eq!(shared.get(), 63.0 * 0.125);
+    }
+
+    #[test]
+    fn bnb_worker_scratch_rekeys_heaps() {
+        with_bnb_worker(|w| {
+            let (heaps, seen) = w.lanes(3, 2);
+            assert_eq!(heaps.len(), 3);
+            assert_eq!(seen, [false, false, false]);
+            heaps[0].push(1.0, 0);
+            heaps[0].push(2.0, 1);
+            assert!(heaps[0].is_full());
+            seen[1] = true;
+        });
+        with_bnb_worker(|w| {
+            // Re-keyed heaps come back empty at the new k, flags clear.
+            let (heaps, seen) = w.lanes(2, 5);
+            assert!(!heaps[0].is_full());
+            assert_eq!(heaps[0].bound(), f32::NEG_INFINITY);
+            assert_eq!(seen, [false, false]);
+        });
+    }
+
+    #[test]
+    fn bnb_plan_scratch_nests_with_worker_scratch() {
+        // A caller holding the plan scratch can run inline jobs that
+        // borrow the worker scratch on the same thread (the in-worker
+        // walk path).
+        with_bnb_plan(|plan| {
+            plan.bounds.clear();
+            plan.bounds.extend([1.0, 2.0]);
+            with_bnb_worker(|w| {
+                let _ = w.lanes(1, 1);
+            });
+            assert_eq!(plan.bounds, vec![1.0, 2.0]);
+        });
     }
 
     #[test]
