@@ -6,6 +6,117 @@
 set -euo pipefail
 cd "$(dirname "$0")"
 
+# --smoke: build + boot the server + scripted session/stream/metrics
+# probe only (seconds, not minutes). The full run executes everything
+# AND the serving smoke.
+SMOKE=0
+for arg in "$@"; do
+    case "$arg" in
+        --smoke) SMOKE=1 ;;
+        *) echo "unknown argument: $arg (supported: --smoke)"; exit 2 ;;
+    esac
+done
+
+# Boot target/release/socketd on a free port and drive the serving
+# surface end-to-end over TCP: a streaming multi-turn session (turn 2
+# must resume with zero prefill), then an {"op":"metrics"} scrape whose
+# histogram/pool/prune/session fields are all asserted. Skips when
+# python3 is unavailable (no other way to script a TCP client here).
+serving_smoke() {
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "    python3 absent; skipping serving smoke"
+        return 0
+    fi
+    local bin="$PWD/target/release/socketd"
+    if [ ! -x "$bin" ]; then
+        echo "    $bin missing (build step must run first)"
+        return 1
+    fi
+    local port
+    port=$(python3 -c 'import socket; s=socket.socket(); s.bind(("127.0.0.1",0)); print(s.getsockname()[1]); s.close()')
+    "$bin" serve --port "$port" --workers 2 --capacity-pages 4096 &
+    local pid=$!
+    local status=0
+    python3 - "$port" <<'PY' || status=$?
+import json, socket, sys, time
+
+port = int(sys.argv[1])
+deadline = time.time() + 30
+while True:
+    try:
+        conn = socket.create_connection(("127.0.0.1", port), timeout=5)
+        break
+    except OSError:
+        if time.time() > deadline:
+            sys.exit("serving smoke: server never came up")
+        time.sleep(0.2)
+conn.settimeout(120)
+rfile = conn.makefile("r")
+wfile = conn.makefile("w")
+
+def send(obj):
+    wfile.write(json.dumps(obj) + "\n")
+    wfile.flush()
+
+def recv():
+    line = rfile.readline()
+    assert line, "connection closed early"
+    return json.loads(line)
+
+# Turn 1: streaming session prefill — one line per token, then summary.
+send({"op": "generate", "session": "ci", "context_len": 256,
+      "decode_len": 4, "stream": True})
+tokens = []
+while True:
+    msg = recv()
+    if "token" in msg:
+        tokens.append(msg["token"])
+        continue
+    break
+assert tokens == [0, 1, 2, 3], f"token lines {tokens}"
+assert msg.get("ok") and msg.get("done") and msg.get("turn") == 1, msg
+
+# Turn 2: resumed — appends 64 context tokens, zero prefill.
+send({"op": "generate", "session": "ci", "context_len": 64, "decode_len": 2})
+msg = recv()
+assert msg.get("ok") and msg.get("turn") == 2, msg
+assert msg.get("session_tokens") == 256 + 4 + 64 + 2, msg
+
+# Metrics scrape: the whole schema, with the zero-prefill proof.
+send({"op": "metrics"})
+m = recv()
+assert m.get("ok"), m
+sched = m["scheduler"]
+assert sched["prefill_tokens"] == 256, sched
+assert sched["session_tokens"] == 64, sched
+assert sched["resumed_turns"] == 1, sched
+series = m["methods"]["socket"]
+assert series["served"] == 2, series
+for section in ("ttft_ms", "tbt_ms"):
+    for field in ("count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"):
+        assert field in series[section], (section, field, series)
+assert series["ttft_ms"]["count"] == 2, series
+pool = m["pool"]
+assert pool["used_pages"] + pool["free_pages"] == pool["total_pages"], pool
+assert pool["used_pages"] > 0, pool  # the parked session holds pages
+assert m["prune"]["blocks"] > 0, m["prune"]
+assert m["sessions"]["active"] == 1, m["sessions"]
+print("    serving smoke OK: stream + session resume + metrics scrape")
+PY
+    kill "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    return "$status"
+}
+
+if [ "$SMOKE" = 1 ]; then
+    echo "==> cargo build --release (smoke)"
+    cargo build --release
+    echo "==> serving smoke"
+    serving_smoke
+    echo "OK: smoke green"
+    exit 0
+fi
+
 # Lint gates run ahead of the build so style/lint fallout fails in
 # seconds, not after a full compile. Both skip gracefully when the
 # component is not installed (offline containers vary).
@@ -31,6 +142,9 @@ cargo test -q
 
 echo "==> cargo test -q --features pjrt"
 cargo test -q --features pjrt
+
+echo "==> serving smoke (sessions + streaming + metrics over TCP)"
+serving_smoke
 
 echo "==> cargo bench --no-run"
 cargo bench --no-run

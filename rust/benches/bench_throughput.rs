@@ -6,9 +6,10 @@
 //! vs parallel_pruned vs parallel_pruned_ordered vs GQA-fused SOCKET
 //! selection + prune rate + threshold warmup), and the per-method
 //! serving lane (decode tokens/s for every `selector::registry` method
-//! over the paged pool at the paper's sparsity budget). Writes the
-//! gather-vs-paged, scoring-lane, and per-method tables
-//! to a `BENCH_*.json` artifact for the perf trajectory
+//! over the paged pool at the paper's sparsity budget), and the serving
+//! lane (sessions + streaming + the metrics scrape through the real
+//! server). Writes the gather-vs-paged, scoring-lane, per-method, and
+//! serving tables to a `BENCH_*.json` artifact for the perf trajectory
 //! (`--json-out <path>`, empty string to skip). `--smoke` shrinks every
 //! sweep so ci.sh can emit the artifact in seconds.
 use socket_attn::experiments::{throughput, Scale};
@@ -64,6 +65,17 @@ fn main() {
     let lane = throughput::run_method_lane(scale, lane_ctxs, sparsity, lane_steps);
     throughput::method_lane_table(&lane, sparsity).print();
 
+    // Serving lane: the full server surface in process — one-shots,
+    // a streaming multi-turn session (turn 2 resumes, zero prefill),
+    // and the {"op":"metrics"} scrape (TTFT/TBT quantiles, pool
+    // utilization, prune gauges) snapshotted into the artifact.
+    let (srv_ctx, srv_dec, srv_turns) = if smoke { (512, 4, 2) } else { (4 * 1024, 16, 3) };
+    let serving = throughput::run_serving_lane(scale, srv_ctx, srv_dec, srv_turns);
+    println!(
+        "Serving lane: ctx {srv_ctx}, {srv_turns} turns, {} streamed token lines",
+        serving.get("stream_token_lines").and_then(|v| v.as_usize()).unwrap_or(0)
+    );
+
     let artifact = args.get_or("json-out", "BENCH_throughput.json");
     if !artifact.is_empty() {
         let doc = Json::obj()
@@ -73,7 +85,8 @@ fn main() {
             .set("sparsity", sparsity)
             .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg))
             .set("scoring_lane", throughput::scoring_lane_json(&sl))
-            .set("method_lane", throughput::method_lane_json(&lane));
+            .set("method_lane", throughput::method_lane_json(&lane))
+            .set("serving_lane", serving);
         match std::fs::write(&artifact, doc.dumps() + "\n") {
             Ok(()) => println!("wrote {artifact}"),
             Err(e) => eprintln!("could not write {artifact}: {e}"),

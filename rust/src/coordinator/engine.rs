@@ -6,7 +6,7 @@
 
 use crate::attention::{flash_decode_into, SelectionPolicy};
 use crate::kvcache::{PageTable, PagedKvCache};
-use crate::lsh::LshParams;
+use crate::lsh::{LshParams, PruneStats};
 use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selector, SelectorConfig, SelectorError};
 use crate::util::pool::with_decode_scratch;
@@ -74,6 +74,9 @@ pub struct DecodeEngine {
     committed_pages: usize,
     /// Per-sequence committed page count (for release bookkeeping).
     commitments: HashMap<u64, usize>,
+    /// Pruning telemetry drained from *released* sequences' selectors
+    /// (live ones are scanned on demand by `take_prune_stats`).
+    prune_stats: PruneStats,
 }
 
 impl DecodeEngine {
@@ -92,6 +95,7 @@ impl DecodeEngine {
             sequences: HashMap::new(),
             committed_pages: 0,
             commitments: HashMap::new(),
+            prune_stats: PruneStats::default(),
         }
     }
 
@@ -248,7 +252,13 @@ impl DecodeEngine {
         let scale = 1.0 / (dim as f32).sqrt();
         let mut outputs = Vec::with_capacity(heads * group);
         let mut appends = Vec::with_capacity(heads);
-        let step = state.decoded;
+        // Queries are drawn at the sequence's *absolute* token position,
+        // not the per-turn decode counter. The synthetic K/V stream is
+        // already purely position-based (`kv_at`), so with position-based
+        // queries a resumed session (prefill → decode → session_extend →
+        // decode) is bit-identical to a from-scratch prefill over the
+        // concatenated context — the property the session tests pin.
+        let step = state.tables[0].n_tokens;
         for h in 0..heads {
             let n = state.tables[h].n_tokens;
             let queries: Vec<Vec<f32>> =
@@ -311,9 +321,90 @@ impl DecodeEngine {
         self.sequences.get(&seq_id).map(|s| s.decoded).unwrap_or(0)
     }
 
+    /// Whether the engine holds state (pages + selector index) for this
+    /// sequence — live or parked between session turns.
+    pub fn has_sequence(&self, seq_id: u64) -> bool {
+        self.sequences.contains_key(&seq_id)
+    }
+
+    /// Total tokens cached for a sequence (prefill + session extends +
+    /// decoded), or `None` if unknown.
+    pub fn sequence_tokens(&self, seq_id: u64) -> Option<usize> {
+        self.sequences.get(&seq_id).map(|s| s.tables[0].n_tokens)
+    }
+
+    /// The method label a sequence attends under (its resolved mode),
+    /// or `None` if unknown.
+    pub fn sequence_method_label(&self, seq_id: u64) -> Option<&str> {
+        self.sequences.get(&seq_id).map(|s| s.mode.method_label())
+    }
+
+    /// Extend a live (parked) sequence with `new_context` further
+    /// context tokens and re-commit decode headroom for up to
+    /// `max_new_tokens` more appends — the multi-turn session path.
+    /// The new tokens are *appended* to the existing KV pages and
+    /// selector index in place; nothing is re-prefilled, so a resumed
+    /// turn costs `O(new_context)`, not `O(total context)`. Returns
+    /// `false` (backpressure; nothing changed) when the pool cannot
+    /// cover the grown commitment. Panics if the sequence was never
+    /// prefilled — the scheduler checks membership at accept.
+    pub fn session_extend(
+        &mut self,
+        seq_id: u64,
+        new_context: usize,
+        max_new_tokens: usize,
+    ) -> bool {
+        let heads = self.config.model.n_kv_heads;
+        let current = self
+            .sequences
+            .get(&seq_id)
+            .expect("session_extend before prefill")
+            .tables[0]
+            .n_tokens;
+        let needed = heads * PagedKvCache::pages_for(current + new_context + max_new_tokens);
+        let held = self.commitments.get(&seq_id).copied().unwrap_or(0);
+        // A short turn can fit entirely in the previous turn's unused
+        // headroom (needed <= held): keep the larger commitment.
+        let extra = needed.saturating_sub(held);
+        if self.kv.total_pages() - self.committed_pages < extra {
+            return false;
+        }
+        self.committed_pages += extra;
+        self.commitments.insert(seq_id, held.max(needed));
+        let state = self.sequences.get_mut(&seq_id).expect("session_extend before prefill");
+        for h in 0..heads {
+            for t in current..current + new_context {
+                let (k, v) = state.model.kv_at(h, t);
+                let ok = self.kv.append(&mut state.tables[h], &k, &v);
+                assert!(ok, "KV pool exhausted during session extend");
+                if let Some(s) = state.selectors.get_mut(h) {
+                    s.append(&k, &v).expect("selector index built at prefill");
+                }
+            }
+        }
+        true
+    }
+
+    /// Drain pruning telemetry accumulated since the last call, across
+    /// live sequences' selectors plus whatever released sequences left
+    /// behind. Feeds the metrics registry's prune-rate gauges.
+    pub fn take_prune_stats(&mut self) -> PruneStats {
+        let mut total = std::mem::take(&mut self.prune_stats);
+        for state in self.sequences.values() {
+            for sel in &state.selectors {
+                total.absorb(sel.take_prune_stats());
+            }
+        }
+        total
+    }
+
     /// Release a finished sequence's pages and its commitment.
     pub fn release(&mut self, seq_id: u64) {
         if let Some(mut state) = self.sequences.remove(&seq_id) {
+            // Keep the sequence's pruning telemetry for the next drain.
+            for sel in &state.selectors {
+                self.prune_stats.absorb(sel.take_prune_stats());
+            }
             for table in state.tables.iter_mut() {
                 self.kv.release(table);
             }
@@ -493,6 +584,74 @@ mod tests {
     fn decode_unknown_sequence_panics() {
         let mut e = DecodeEngine::new(cfg(AttentionMode::Dense));
         e.decode_step(42);
+    }
+
+    #[test]
+    fn session_extend_is_bit_identical_to_from_scratch_concat() {
+        // The session tentpole's core property: turn 1 (prefill N1,
+        // decode M1) + session_extend(N2) + turn-2 decode must produce
+        // *bit-identical* outputs to a fresh sequence prefilled over the
+        // concatenated N1 + M1 + N2 context. Output equality pins the
+        // selected indices and scores too: flash-decode attends only
+        // over the selector's merged selection, so any index or score
+        // divergence shows up in the outputs. Checked for socket and
+        // oracle (the issue's pair), plus dense as the control.
+        for mode in
+            [AttentionMode::socket(4.0), AttentionMode::sparse("oracle", 4.0), AttentionMode::Dense]
+        {
+            let (n1, m1, n2, m2) = (150usize, 3usize, 80usize, 4usize);
+            let mut sess = DecodeEngine::new(cfg(mode.clone()));
+            assert!(sess.prefill(5, n1, m1), "{mode:?} turn-1 prefill");
+            for _ in 0..m1 {
+                sess.decode_step(5);
+            }
+            assert!(sess.session_extend(5, n2, m2), "{mode:?} extend");
+            assert_eq!(sess.sequence_tokens(5), Some(n1 + m1 + n2));
+            let got: Vec<_> = (0..m2).map(|_| sess.decode_step(5)).collect();
+
+            let mut fresh = DecodeEngine::new(cfg(mode.clone()));
+            assert!(fresh.prefill(5, n1 + m1 + n2, m2), "{mode:?} from-scratch prefill");
+            let want: Vec<_> = (0..m2).map(|_| fresh.decode_step(5)).collect();
+            assert_eq!(got, want, "{mode:?} resumed decode diverged from from-scratch");
+        }
+    }
+
+    #[test]
+    fn session_extend_backpressure_and_release() {
+        // 16 pages x 16 tokens / 2 kv-heads = 128 cacheable tokens per
+        // head stream. A 64-token turn fits; extending past the pool's
+        // commitment capacity must refuse without touching state.
+        let mut e =
+            DecodeEngine::new(EngineConfig { capacity_pages: 16, ..cfg(AttentionMode::socket(4.0)) });
+        assert!(e.prefill(1, 64, 4));
+        let tokens_before = e.sequence_tokens(1).unwrap();
+        let free_before = e.free_pages();
+        assert!(!e.session_extend(1, 4096, 4), "oversized extend must refuse");
+        assert_eq!(e.sequence_tokens(1), Some(tokens_before), "refused extend must not append");
+        assert_eq!(e.free_pages(), free_before);
+        // A small extend within the pool succeeds and appends.
+        assert!(e.session_extend(1, 32, 4));
+        assert_eq!(e.sequence_tokens(1), Some(96));
+        // Release returns everything (extend's commitment included).
+        let total_free = e.free_pages();
+        e.release(1);
+        assert!(e.free_pages() > total_free);
+        assert!(!e.has_sequence(1));
+        assert!(e.prefill(2, 64, 4), "pool must be reusable after release");
+    }
+
+    #[test]
+    fn prune_stats_drain_from_live_and_released_sequences() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(4.0)));
+        assert!(e.prefill(1, 300, 4));
+        e.decode_step(1);
+        let live = e.take_prune_stats();
+        assert!(live.blocks > 0, "socket decode must record visited blocks: {live:?}");
+        assert_eq!(e.take_prune_stats(), PruneStats::default(), "drain must reset");
+        // Telemetry from a released sequence survives until drained.
+        e.decode_step(1);
+        e.release(1);
+        assert!(e.take_prune_stats().blocks > 0, "release must keep undrained telemetry");
     }
 
     #[test]

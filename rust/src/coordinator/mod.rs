@@ -23,4 +23,6 @@ pub mod scheduler;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
 pub use engine::{AttentionMode, DecodeEngine, EngineConfig};
-pub use scheduler::{Completion, Coordinator, RequestHandle, SchedulerStats};
+pub use scheduler::{
+    Completion, Coordinator, EngineSnapshot, RequestHandle, SchedulerStats, Submission, TokenEvent,
+};

@@ -1,12 +1,28 @@
 //! The scheduler: a worker thread driving admit → step iterations over
 //! the [`DecodeEngine`], with an mpsc submission queue and per-request
 //! completion channels. This is the leader loop of the serving stack.
+//!
+//! Beyond one-shot requests, the loop serves the session/streaming
+//! surface: a [`Submission`] may ask to *keep* its sequence alive after
+//! the turn (`keep_alive` — the pages and selector index park in the
+//! scheduler until resumed or released), to *resume* a parked sequence
+//! (`resume` — the turn's context is appended via
+//! [`DecodeEngine::session_extend`], never re-prefilled), and to stream
+//! per-token [`TokenEvent`]s as they decode. Latency telemetry (TTFT,
+//! inter-token gaps, per-method outcomes, pruning counters) feeds the
+//! shared [`Registry`] as a side effect of the loop — no extra locks on
+//! the hot path.
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::engine::{DecodeEngine, EngineConfig};
+use super::engine::{AttentionMode, DecodeEngine, EngineConfig};
+use crate::metrics::registry::Registry;
+use crate::selector;
+use crate::util::Json;
 use crate::workload::trace::Request;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -34,40 +50,134 @@ pub struct Completion {
 pub struct SchedulerStats {
     pub completed: usize,
     pub decode_steps: u64,
+    /// Context tokens prefilled for *fresh* sequences. Resumed session
+    /// turns never add here — that is the point of sessions.
     pub prefill_tokens: u64,
     pub rejected_admissions: u64,
     /// Requests failed up front: their full KV commitment exceeds the
     /// pool, so no amount of waiting could ever admit them.
     pub failed_requests: u64,
+    /// Context tokens appended to parked sessions by resumed turns
+    /// (the tokens that did *not* re-prefill).
+    pub session_tokens: u64,
+    /// Resumed session turns admitted.
+    pub resumed_turns: u64,
+    /// Parked sessions released via [`Coordinator::release`] (TTL
+    /// eviction or explicit teardown).
+    pub sessions_released: u64,
+}
+
+impl SchedulerStats {
+    /// The metrics-schema `scheduler` section.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("completed", self.completed)
+            .set("decode_steps", self.decode_steps)
+            .set("prefill_tokens", self.prefill_tokens)
+            .set("rejected_admissions", self.rejected_admissions)
+            .set("failed_requests", self.failed_requests)
+            .set("session_tokens", self.session_tokens)
+            .set("resumed_turns", self.resumed_turns)
+            .set("sessions_released", self.sessions_released)
+    }
+}
+
+/// One decoded token's notification on a streaming submission.
+#[derive(Clone, Copy, Debug)]
+pub struct TokenEvent {
+    /// 0-based index of the token within its turn.
+    pub index: usize,
+    /// Milliseconds since the turn was submitted.
+    pub ms: f64,
+}
+
+/// A request plus its serving options — the full submission surface
+/// (sessions, streaming) over the plain [`Request`] shape.
+pub struct Submission {
+    pub req: Request,
+    /// Park the sequence (KV pages + selector index stay committed)
+    /// after the turn completes instead of releasing it, so a later
+    /// `resume` submission can extend it. Parked sequences are freed
+    /// with [`Coordinator::release`].
+    pub keep_alive: bool,
+    /// Resume a parked sequence: `req.id` names it, `req.context_len`
+    /// is the *additional* context this turn appends (0 = continue
+    /// decoding). No prefill runs; `req.mode` is ignored — a sequence's
+    /// attention mode is fixed when it is first prefilled.
+    pub resume: bool,
+    /// Per-token stream: the scheduler sends one event per decoded
+    /// token. The channel disconnects after the turn's completion is
+    /// delivered, so receivers can drain it to exhaustion safely.
+    pub tokens: Option<Sender<TokenEvent>>,
+}
+
+impl Submission {
+    /// A plain one-shot submission (no session, no streaming).
+    pub fn oneshot(req: Request) -> Submission {
+        Submission { req, keep_alive: false, resume: false, tokens: None }
+    }
+}
+
+/// Point-in-time view of the engine + scheduler, for the metrics
+/// endpoint (served without stopping the loop).
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    pub free_pages: usize,
+    pub total_pages: usize,
+    /// Sequences holding pages right now — running and parked.
+    pub live_sequences: usize,
+    /// Sequences parked between session turns.
+    pub parked_sessions: usize,
+    pub stats: SchedulerStats,
 }
 
 enum Msg {
-    Submit(Request, Sender<Completion>),
+    Submit(Submission, Sender<Completion>),
+    /// Release a parked session's pages (idle-TTL eviction path).
+    Release(u64),
+    Snapshot(Sender<EngineSnapshot>),
     Shutdown,
 }
 
 /// Handle for awaiting one request's completion.
 pub struct RequestHandle {
     rx: Receiver<Completion>,
+    id: u64,
+    context_len: usize,
+    decode_len: usize,
 }
 
 impl RequestHandle {
-    /// Block until the request completes.
+    /// The error completion reported when the scheduler disappears
+    /// without answering — a serving failure, never a caller panic.
+    fn lost(&self) -> Completion {
+        Completion {
+            id: self.id,
+            context_len: self.context_len,
+            decode_len: self.decode_len,
+            ttft_ms: 0.0,
+            total_ms: 0.0,
+            ok: false,
+            error: Some("scheduler dropped before completing request".to_string()),
+        }
+    }
+
+    /// Block until the request completes. If the scheduler thread is
+    /// gone, returns a failed completion instead of panicking (a dead
+    /// scheduler must not take connection handlers down with it).
     pub fn wait(self) -> Completion {
-        self.rx.recv().expect("scheduler dropped before completing request")
+        self.rx.recv().unwrap_or_else(|_| self.lost())
     }
 
     /// Block until the request completes or `timeout` elapses. `None`
     /// on timeout — the request is still in flight and the handle
-    /// remains usable for another wait. Panics if the scheduler
-    /// dropped without completing the request.
+    /// remains usable for another wait. A vanished scheduler yields a
+    /// failed completion, not a panic.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<Completion> {
         match self.rx.recv_timeout(timeout) {
             Ok(c) => Some(c),
             Err(RecvTimeoutError::Timeout) => None,
-            Err(RecvTimeoutError::Disconnected) => {
-                panic!("scheduler dropped before completing request")
-            }
+            Err(RecvTimeoutError::Disconnected) => Some(self.lost()),
         }
     }
 }
@@ -75,6 +185,7 @@ impl RequestHandle {
 /// The coordinator: spawns the scheduler thread, routes requests in.
 pub struct Coordinator {
     tx: Sender<Msg>,
+    metrics: Arc<Registry>,
     worker: Option<JoinHandle<SchedulerStats>>,
 }
 
@@ -82,6 +193,15 @@ struct Inflight {
     req: Request,
     submitted: Instant,
     first_token: Option<Instant>,
+    last_token: Option<Instant>,
+    /// Tokens already decoded when this turn started (non-zero for
+    /// resumed sessions — completion is measured per turn).
+    base_decoded: usize,
+    keep_alive: bool,
+    resume: bool,
+    /// Canonical method label for the metrics registry.
+    label: String,
+    tokens: Option<Sender<TokenEvent>>,
     done_tx: Sender<Completion>,
 }
 
@@ -89,15 +209,56 @@ impl Coordinator {
     /// Spawn the scheduler over a fresh engine.
     pub fn spawn(config: EngineConfig, policy: BatchPolicy) -> Coordinator {
         let (tx, rx) = channel::<Msg>();
-        let worker = std::thread::spawn(move || scheduler_loop(config, policy, rx));
-        Coordinator { tx, worker: Some(worker) }
+        let metrics = Arc::new(Registry::new());
+        let loop_metrics = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || scheduler_loop(config, policy, rx, loop_metrics));
+        Coordinator { tx, metrics, worker: Some(worker) }
     }
 
-    /// Submit a request; returns a handle to await completion.
+    /// The shared metrics registry the scheduler feeds.
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Submit a one-shot request; returns a handle to await completion.
     pub fn submit(&self, req: Request) -> RequestHandle {
+        self.submit_opts(Submission::oneshot(req))
+    }
+
+    /// Submit with full serving options (sessions, streaming). If the
+    /// scheduler thread is gone the returned handle resolves to a
+    /// failed completion — submission never panics.
+    pub fn submit_opts(&self, sub: Submission) -> RequestHandle {
         let (done_tx, done_rx) = channel();
-        self.tx.send(Msg::Submit(req, done_tx)).expect("scheduler gone");
-        RequestHandle { rx: done_rx }
+        let handle = RequestHandle {
+            rx: done_rx,
+            id: sub.req.id,
+            context_len: sub.req.context_len,
+            decode_len: sub.req.decode_len,
+        };
+        if self.tx.send(Msg::Submit(sub, done_tx.clone())).is_err() {
+            let _ = done_tx.send(Completion {
+                error: Some("scheduler unavailable".to_string()),
+                ok: false,
+                ..handle.lost()
+            });
+        }
+        handle
+    }
+
+    /// Release a parked session's pages back to the pool (the idle-TTL
+    /// eviction path). Unknown or busy ids are ignored.
+    pub fn release(&self, seq_id: u64) {
+        let _ = self.tx.send(Msg::Release(seq_id));
+    }
+
+    /// Snapshot engine occupancy + scheduler stats without stopping the
+    /// loop. `None` if the scheduler thread is gone. Ordered after any
+    /// earlier `release`/`submit` from this coordinator (same queue).
+    pub fn snapshot(&self) -> Option<EngineSnapshot> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Snapshot(tx)).ok()?;
+        rx.recv().ok()
     }
 
     /// Stop the scheduler (after draining in-flight work) and return
@@ -117,6 +278,18 @@ impl Drop for Coordinator {
     }
 }
 
+/// Canonical metrics label for a mode: the registry's canonical method
+/// name (aliases folded), `"dense"`, or the raw label when unregistered
+/// (the registry buckets those under `other`).
+fn canonical_label(mode: &AttentionMode) -> String {
+    match mode {
+        AttentionMode::Dense => "dense".to_string(),
+        AttentionMode::Sparse { method, .. } => selector::lookup(method)
+            .map(|spec| spec.name.to_string())
+            .unwrap_or_else(|_| method.clone()),
+    }
+}
+
 /// Fail a request with an error completion (the one shape both the
 /// accept-time and prefill-time failure paths emit).
 fn send_failure(
@@ -124,8 +297,11 @@ fn send_failure(
     req: &Request,
     error: String,
     stats: &mut SchedulerStats,
+    metrics: &Registry,
+    label: &str,
 ) {
     stats.failed_requests += 1;
+    metrics.method(label).failed.fetch_add(1, Ordering::Relaxed);
     let _ = done_tx.send(Completion {
         id: req.id,
         context_len: req.context_len,
@@ -141,18 +317,81 @@ fn send_failure(
 /// when it could never be served: a KV commitment that cannot fit the
 /// pool (pre-fix, such a request was requeued by every iteration
 /// forever — no running sequence can release enough pages to make it
-/// fit, so the scheduler livelocked in a hot spin), or an attention
-/// mode naming no registered selector.
+/// fit, so the scheduler livelocked in a hot spin), an attention mode
+/// naming no registered selector, or a resume of a sequence the
+/// scheduler is not holding parked.
+#[allow(clippy::too_many_arguments)]
 fn accept(
     engine: &DecodeEngine,
     batcher: &mut Batcher,
     inflight: &mut HashMap<u64, Inflight>,
+    parked: &mut HashSet<u64>,
     stats: &mut SchedulerStats,
-    req: Request,
+    metrics: &Registry,
+    sub: Submission,
     done_tx: Sender<Completion>,
 ) {
+    let Submission { req, keep_alive, resume, tokens } = sub;
+    if resume {
+        // The sequence must be parked — not running, not unknown. All
+        // session state lives on this thread, so there is no window
+        // where an eviction races a resume.
+        if !parked.remove(&req.id) {
+            let label = engine
+                .sequence_method_label(req.id)
+                .map(|l| canonical_label(&AttentionMode::sparse(l, 1.0)))
+                .unwrap_or_else(|| "other".to_string());
+            let error = format!("sequence {} is not a parked session (unknown or busy)", req.id);
+            send_failure(&done_tx, &req, error, stats, metrics, &label);
+            return;
+        }
+        let current = engine.sequence_tokens(req.id).unwrap_or(0);
+        if !engine.admissible(current + req.context_len, req.decode_len) {
+            // The turn can never fit, but the session itself is fine:
+            // re-park it so smaller follow-up turns still work.
+            parked.insert(req.id);
+            let label = match engine.sequence_method_label(req.id) {
+                Some("dense") => "dense".to_string(),
+                Some(l) => canonical_label(&AttentionMode::sparse(l, 1.0)),
+                None => "other".to_string(),
+            };
+            let error = format!(
+                "never admittable: session holds {} tokens; +{} context +{} decode exceeds the {}-page KV pool",
+                current, req.context_len, req.decode_len, engine.config.capacity_pages
+            );
+            send_failure(&done_tx, &req, error, stats, metrics, &label);
+            return;
+        }
+        let label = match engine.sequence_method_label(req.id) {
+            Some("dense") | None => "dense".to_string(),
+            Some(l) => canonical_label(&AttentionMode::sparse(l, 1.0)),
+        };
+        batcher.enqueue(req.id, req.context_len);
+        inflight.insert(
+            req.id,
+            Inflight {
+                base_decoded: engine.decoded(req.id),
+                submitted: Instant::now(),
+                first_token: None,
+                last_token: None,
+                keep_alive,
+                resume: true,
+                label,
+                tokens,
+                done_tx,
+                req,
+            },
+        );
+        return;
+    }
+    let label = canonical_label(req.mode.as_ref().unwrap_or(&engine.config.mode));
     if let Err(e) = engine.validate_mode(req.mode.as_ref()) {
-        send_failure(&done_tx, &req, e.to_string(), stats);
+        send_failure(&done_tx, &req, e.to_string(), stats, metrics, &label);
+        return;
+    }
+    if inflight.contains_key(&req.id) || engine.has_sequence(req.id) {
+        let error = format!("sequence id {} is already in use", req.id);
+        send_failure(&done_tx, &req, error, stats, metrics, &label);
         return;
     }
     if !engine.admissible(req.context_len, req.decode_len) {
@@ -160,18 +399,83 @@ fn accept(
             "never admittable: {} context + {} decode tokens exceed the {}-page KV pool",
             req.context_len, req.decode_len, engine.config.capacity_pages
         );
-        send_failure(&done_tx, &req, error, stats);
+        send_failure(&done_tx, &req, error, stats, metrics, &label);
         return;
     }
     batcher.enqueue(req.id, req.context_len);
-    inflight
-        .insert(req.id, Inflight { req, submitted: Instant::now(), first_token: None, done_tx });
+    inflight.insert(
+        req.id,
+        Inflight {
+            submitted: Instant::now(),
+            first_token: None,
+            last_token: None,
+            base_decoded: 0,
+            keep_alive,
+            resume: false,
+            label,
+            tokens,
+            done_tx,
+            req,
+        },
+    );
 }
 
-fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) -> SchedulerStats {
+fn snapshot_of(
+    engine: &DecodeEngine,
+    parked: &HashSet<u64>,
+    stats: &SchedulerStats,
+) -> EngineSnapshot {
+    EngineSnapshot {
+        free_pages: engine.free_pages(),
+        total_pages: engine.config.capacity_pages,
+        live_sequences: engine.n_sequences(),
+        parked_sessions: parked.len(),
+        stats: stats.clone(),
+    }
+}
+
+/// Deliver a finished turn: completion out, sequence parked or
+/// released, counters updated. (The token channel, if any, disconnects
+/// when `fl` drops — *after* the completion is in the channel, so
+/// streaming consumers can drain tokens then read the summary.)
+fn finish_turn(
+    engine: &mut DecodeEngine,
+    parked: &mut HashSet<u64>,
+    stats: &mut SchedulerStats,
+    metrics: &Registry,
+    seq: u64,
+    fl: Inflight,
+    ttft_ms: f64,
+    total_ms: f64,
+) {
+    let _ = fl.done_tx.send(Completion {
+        id: seq,
+        context_len: fl.req.context_len,
+        decode_len: fl.req.decode_len,
+        ttft_ms,
+        total_ms,
+        ok: true,
+        error: None,
+    });
+    if fl.keep_alive {
+        parked.insert(seq);
+    } else {
+        engine.release(seq);
+    }
+    stats.completed += 1;
+    metrics.method(&fl.label).served.fetch_add(1, Ordering::Relaxed);
+}
+
+fn scheduler_loop(
+    config: EngineConfig,
+    policy: BatchPolicy,
+    rx: Receiver<Msg>,
+    metrics: Arc<Registry>,
+) -> SchedulerStats {
     let mut engine = DecodeEngine::new(config);
     let mut batcher = Batcher::new(policy);
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let mut parked: HashSet<u64> = HashSet::new();
     let mut stats = SchedulerStats::default();
     let mut draining = false;
 
@@ -180,22 +484,46 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
         // fully idle to avoid a busy-spin).
         loop {
             let idle = batcher.waiting_len() == 0 && batcher.running_len() == 0;
-            if idle && !draining {
+            let msg = if idle && !draining {
                 match rx.recv() {
-                    Ok(Msg::Submit(req, done_tx)) => {
-                        accept(&engine, &mut batcher, &mut inflight, &mut stats, req, done_tx);
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        draining = true;
+                        None
                     }
-                    Ok(Msg::Shutdown) | Err(_) => draining = true,
                 }
-                continue;
-            }
-            match rx.try_recv() {
-                Ok(Msg::Submit(req, done_tx)) => {
-                    accept(&engine, &mut batcher, &mut inflight, &mut stats, req, done_tx);
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        draining = true;
+                        None
+                    }
                 }
-                Ok(Msg::Shutdown) => draining = true,
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => draining = true,
+            };
+            match msg {
+                Some(Msg::Submit(sub, done_tx)) => accept(
+                    &engine,
+                    &mut batcher,
+                    &mut inflight,
+                    &mut parked,
+                    &mut stats,
+                    &metrics,
+                    sub,
+                    done_tx,
+                ),
+                Some(Msg::Release(seq)) => {
+                    if parked.remove(&seq) {
+                        engine.release(seq);
+                        stats.sessions_released += 1;
+                    }
+                }
+                Some(Msg::Snapshot(tx)) => {
+                    let _ = tx.send(snapshot_of(&engine, &parked, &stats));
+                }
+                Some(Msg::Shutdown) => draining = true,
+                None => {}
             }
             if draining {
                 break;
@@ -213,20 +541,28 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
             continue;
         }
         let mut progressed = !batch.decodes.is_empty();
-        // Prefills (admission may fail under KV pressure → requeue).
+        // Prefills / session extends (admission may fail under KV
+        // pressure → requeue).
         for &(seq, ctx) in batch.prefills.iter() {
-            let (decode_len, mode) = inflight
+            let (decode_len, mode, resume) = inflight
                 .get(&seq)
-                .map(|f| (f.req.decode_len, f.req.mode.clone()))
-                .unwrap_or((0, None));
-            let admitted = match engine.prefill_as(seq, ctx, decode_len, mode.as_ref()) {
+                .map(|f| (f.req.decode_len, f.req.mode.clone(), f.resume))
+                .unwrap_or((0, None, false));
+            let admitted = if resume {
+                // Resumed turn: append to the parked index in place.
+                // Zero prefill tokens — `session_tokens` counts these.
+                Ok(engine.session_extend(seq, ctx, decode_len))
+            } else {
+                engine.prefill_as(seq, ctx, decode_len, mode.as_ref())
+            };
+            let admitted = match admitted {
                 Ok(admitted) => admitted,
                 Err(e) => {
                     // Defensive: accept() validates modes up front, so
                     // this only fires on direct-API misuse. Fail the
                     // request instead of spinning on it.
                     if let Some(fl) = inflight.remove(&seq) {
-                        send_failure(&fl.done_tx, &fl.req, e.to_string(), &mut stats);
+                        send_failure(&fl.done_tx, &fl.req, e.to_string(), &mut stats, &metrics, &fl.label);
                     } else {
                         stats.failed_requests += 1;
                     }
@@ -235,7 +571,12 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
                 }
             };
             if admitted {
-                stats.prefill_tokens += ctx as u64;
+                if resume {
+                    stats.session_tokens += ctx as u64;
+                    stats.resumed_turns += 1;
+                } else {
+                    stats.prefill_tokens += ctx as u64;
+                }
                 progressed = true;
                 if decode_len == 0 {
                     // Zero-length decode: complete at prefill time. No
@@ -243,19 +584,8 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
                     // `decode_steps` stays untouched and the cache holds
                     // exactly the context that was requested.
                     let fl = inflight.remove(&seq).expect("prefill for unknown request");
-                    let now = Instant::now();
-                    let ms = now.duration_since(fl.submitted).as_secs_f64() * 1e3;
-                    let _ = fl.done_tx.send(Completion {
-                        id: seq,
-                        context_len: fl.req.context_len,
-                        decode_len: 0,
-                        ttft_ms: ms,
-                        total_ms: ms,
-                        ok: true,
-                        error: None,
-                    });
-                    engine.release(seq);
-                    stats.completed += 1;
+                    let ms = fl.submitted.elapsed().as_secs_f64() * 1e3;
+                    finish_turn(&mut engine, &mut parked, &mut stats, &metrics, seq, fl, ms, ms);
                 } else {
                     batcher.started(seq);
                 }
@@ -272,32 +602,48 @@ fn scheduler_loop(config: EngineConfig, policy: BatchPolicy, rx: Receiver<Msg>) 
         for &seq in batch.decodes.iter() {
             stats.decode_steps += 1;
             let fl = inflight.get_mut(&seq).expect("decode for unknown request");
+            let now = Instant::now();
+            let since_submit = now.duration_since(fl.submitted).as_secs_f64() * 1e3;
             if fl.first_token.is_none() {
-                fl.first_token = Some(Instant::now());
+                fl.first_token = Some(now);
+                metrics.method(&fl.label).ttft.record_ms(since_submit);
+            } else if let Some(prev) = fl.last_token {
+                metrics
+                    .method(&fl.label)
+                    .tbt
+                    .record_ms(now.duration_since(prev).as_secs_f64() * 1e3);
             }
-            if engine.decoded(seq) >= fl.req.decode_len {
+            fl.last_token = Some(now);
+            let turn_tokens = engine.decoded(seq) - fl.base_decoded;
+            if let Some(tx) = &fl.tokens {
+                let _ = tx.send(TokenEvent { index: turn_tokens - 1, ms: since_submit });
+            }
+            if turn_tokens >= fl.req.decode_len {
                 // Finished.
                 let fl = inflight.remove(&seq).unwrap();
-                let now = Instant::now();
-                let completion = Completion {
-                    id: seq,
-                    context_len: fl.req.context_len,
-                    decode_len: fl.req.decode_len,
-                    ttft_ms: fl
-                        .first_token
-                        .unwrap_or(now)
-                        .duration_since(fl.submitted)
-                        .as_secs_f64()
-                        * 1e3,
-                    total_ms: now.duration_since(fl.submitted).as_secs_f64() * 1e3,
-                    ok: true,
-                    error: None,
-                };
-                let _ = fl.done_tx.send(completion);
+                let ttft_ms = fl
+                    .first_token
+                    .unwrap_or(now)
+                    .duration_since(fl.submitted)
+                    .as_secs_f64()
+                    * 1e3;
                 batcher.finished(seq);
-                engine.release(seq);
-                stats.completed += 1;
+                finish_turn(
+                    &mut engine,
+                    &mut parked,
+                    &mut stats,
+                    &metrics,
+                    seq,
+                    fl,
+                    ttft_ms,
+                    since_submit,
+                );
             }
+        }
+        if !batch.decodes.is_empty() {
+            // Fold the step's pruning telemetry into the registry while
+            // it is still warm (live selectors are drained in place).
+            metrics.absorb_prune(engine.take_prune_stats());
         }
         if !progressed {
             // Every admission was requeued and nothing decoded. Pages
@@ -333,6 +679,10 @@ mod tests {
 
     fn req_as(id: u64, ctx: usize, dec: usize, mode: AttentionMode) -> Request {
         Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: Some(mode) }
+    }
+
+    fn session_turn(id: u64, ctx: usize, dec: usize, resume: bool) -> Submission {
+        Submission { req: req(id, ctx, dec), keep_alive: true, resume, tokens: None }
     }
 
     #[test]
@@ -495,5 +845,157 @@ mod tests {
         assert_eq!(stats.completed, 1, "in-flight request must drain");
         let c = h.wait();
         assert_eq!(c.decode_len, 10);
+    }
+
+    #[test]
+    fn session_second_turn_runs_zero_prefill() {
+        // The tentpole acceptance criterion: turn 2 on a parked session
+        // must not add a single prefill token — its context is appended
+        // via session_extend and counted in session_tokens.
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let base_free = coord.snapshot().expect("live scheduler").free_pages;
+        let c1 = coord.submit_opts(session_turn(7, 128, 2, false)).wait();
+        assert!(c1.ok, "{:?}", c1.error);
+        let snap1 = coord.snapshot().unwrap();
+        assert_eq!(snap1.stats.prefill_tokens, 128);
+        assert_eq!(snap1.parked_sessions, 1);
+        assert_eq!(snap1.live_sequences, 1, "parked session must keep its pages");
+        assert!(snap1.free_pages < base_free);
+
+        let c2 = coord.submit_opts(session_turn(7, 64, 2, true)).wait();
+        assert!(c2.ok, "{:?}", c2.error);
+        let snap2 = coord.snapshot().unwrap();
+        assert_eq!(snap2.stats.prefill_tokens, 128, "turn 2 must prefill zero tokens");
+        assert_eq!(snap2.stats.session_tokens, 64);
+        assert_eq!(snap2.stats.resumed_turns, 1);
+        assert_eq!(snap2.parked_sessions, 1);
+
+        // Release (the TTL-eviction path) returns every page.
+        coord.release(7);
+        let snap3 = coord.snapshot().unwrap();
+        assert_eq!(snap3.free_pages, base_free, "release must return the session's pages");
+        assert_eq!(snap3.parked_sessions, 0);
+        assert_eq!(snap3.stats.sessions_released, 1);
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn resume_of_unknown_or_busy_sequence_fails_cleanly() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        // Unknown session.
+        let c = coord.submit_opts(session_turn(42, 32, 1, true)).wait();
+        assert!(!c.ok);
+        assert!(c.error.as_deref().unwrap_or("").contains("not a parked session"), "{:?}", c.error);
+        // An oversized resumed turn re-parks the session instead of
+        // destroying it.
+        let c1 = coord.submit_opts(session_turn(8, 64, 1, false)).wait();
+        assert!(c1.ok, "{:?}", c1.error);
+        let c_big = coord.submit_opts(session_turn(8, 1 << 20, 1, true)).wait();
+        assert!(!c_big.ok);
+        assert!(c_big.error.as_deref().unwrap_or("").contains("never admittable"), "{:?}", c_big.error);
+        let c2 = coord.submit_opts(session_turn(8, 16, 1, true)).wait();
+        assert!(c2.ok, "session must survive a failed oversized turn: {:?}", c2.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn duplicate_sequence_id_is_rejected() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let c1 = coord.submit_opts(session_turn(3, 64, 1, false)).wait();
+        assert!(c1.ok, "{:?}", c1.error);
+        // Seq 3 is parked; a fresh (non-resume) submission colliding
+        // with it must fail instead of clobbering the parked state.
+        let c2 = coord.submit(req(3, 64, 1)).wait();
+        assert!(!c2.ok);
+        assert!(c2.error.as_deref().unwrap_or("").contains("already in use"), "{:?}", c2.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn streaming_emits_one_event_per_token_then_disconnects() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let (tx, rx) = channel();
+        let handle = coord.submit_opts(Submission {
+            req: req(1, 64, 5),
+            keep_alive: false,
+            resume: false,
+            tokens: Some(tx),
+        });
+        let events: Vec<TokenEvent> = rx.iter().collect(); // drains until disconnect
+        assert_eq!(events.len(), 5, "exactly decode_len token events");
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.index, i, "token indices must be ordered");
+            assert!(ev.ms >= 0.0);
+        }
+        assert!(
+            events.windows(2).all(|w| w[0].ms <= w[1].ms),
+            "token timestamps must be monotone"
+        );
+        // The completion was sent before the channel disconnected.
+        let c = handle.wait_timeout(Duration::from_secs(30)).expect("completion after stream");
+        assert!(c.ok, "{:?}", c.error);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dead_scheduler_yields_error_completions_not_panics() {
+        let mut coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        // Swap the real queue for one whose receiver is already gone:
+        // every send now fails exactly as it would after a scheduler
+        // crash, deterministically.
+        let (dead_tx, dead_rx) = channel::<Msg>();
+        drop(dead_rx);
+        let real_tx = std::mem::replace(&mut coord.tx, dead_tx);
+        let c = coord.submit(req(1, 64, 2)).wait();
+        assert!(!c.ok);
+        assert!(c.error.as_deref().unwrap_or("").contains("scheduler"), "{:?}", c.error);
+        assert_eq!(
+            coord.submit(req(2, 64, 2)).wait_timeout(Duration::from_secs(1)).map(|c| c.ok),
+            Some(false),
+            "wait_timeout must report the failure, not panic"
+        );
+        assert!(coord.snapshot().is_none(), "snapshot of a dead scheduler is None");
+        coord.release(9); // must be a no-op, not a panic
+        // Restore the real queue so drop can shut the worker down.
+        coord.tx = real_tx;
+    }
+
+    #[test]
+    fn handle_outliving_scheduler_reports_loss() {
+        // A handle whose completion channel disconnects (scheduler gone
+        // mid-request) resolves to a failed completion.
+        let (done_tx, done_rx) = channel::<Completion>();
+        drop(done_tx);
+        let h = RequestHandle { rx: done_rx, id: 7, context_len: 64, decode_len: 2 };
+        let c = h.wait_timeout(Duration::from_millis(10)).expect("disconnect resolves");
+        assert!(!c.ok);
+        assert_eq!(c.id, 7);
+        let h = RequestHandle {
+            rx: {
+                let (tx, rx) = channel::<Completion>();
+                drop(tx);
+                rx
+            },
+            id: 8,
+            context_len: 64,
+            decode_len: 2,
+        };
+        assert!(!h.wait().ok, "wait must not panic on disconnect");
+    }
+
+    #[test]
+    fn metrics_registry_fed_by_the_loop() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let c = coord.submit(req(1, 96, 4)).wait();
+        assert!(c.ok, "{:?}", c.error);
+        let m = coord.metrics();
+        let series = m.method("socket");
+        assert_eq!(series.served.load(Ordering::Relaxed), 1);
+        assert_eq!(series.ttft.count(), 1, "one TTFT sample per served request");
+        assert_eq!(series.tbt.count(), 3, "decode_len - 1 inter-token gaps");
+        let prune = m.prune_json();
+        assert!(prune.get("blocks").unwrap().as_usize().unwrap() > 0, "{prune}");
+        coord.shutdown();
     }
 }

@@ -667,6 +667,64 @@ pub fn method_lane_json(points: &[MethodLanePoint]) -> Json {
     Json::obj().set("bench", "throughput_method_lane").set("rows", Json::Arr(rows))
 }
 
+/// Serving lane: exercise the full server surface in process — one-shot
+/// generates across methods, a streaming multi-turn session (turn ≥ 2
+/// resumes with zero prefill), then scrape `{"op":"metrics"}`. The
+/// scrape (per-method TTFT/TBT quantiles, pool utilization, prune
+/// gauges, session counters) is the row — it lands in
+/// `BENCH_throughput.json` as the serving lane.
+pub fn run_serving_lane(scale: Scale, context: usize, decode: usize, turns: usize) -> Json {
+    use crate::coordinator::{AttentionMode, BatchPolicy, EngineConfig};
+    use crate::server::Server;
+    assert!(turns >= 2, "the lane exists to measure resumed turns");
+    let config = EngineConfig {
+        model: ModelConfig { head_dim: scale.dim, n_kv_heads: 1, ..ModelConfig::tiny() },
+        lsh: LshParams { p: 6, l: 16, tau: 0.5 },
+        mode: AttentionMode::socket(8.0),
+        // Headroom for the parked session plus the one-shots in flight.
+        capacity_pages: 8 * PagedKvCache::pages_for(context * (1 + turns) + turns * decode),
+        sink: 16,
+        local: 16,
+    };
+    let server = Server::new(config, BatchPolicy::default());
+    for method in ["socket", "quest", "dense"] {
+        let line = format!(
+            r#"{{"op":"generate","context_len":{context},"decode_len":{decode},"method":"{method}"}}"#
+        );
+        let resp = server.handle_line(&line);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{method}: {resp}");
+    }
+    // Streaming first turn, then resumed turns appending half-contexts.
+    let mut token_lines = 0usize;
+    let first = format!(
+        r#"{{"op":"generate","session":"bench","context_len":{context},"decode_len":{decode},"stream":true}}"#
+    );
+    let mut last = Json::obj();
+    server.handle_with(&Json::parse(&first).expect("lane request is valid json"), &mut |resp| {
+        if resp.get("token").is_some() {
+            token_lines += 1;
+        }
+        last = resp;
+    });
+    assert_eq!(last.get("ok").and_then(|b| b.as_bool()), Some(true), "{last}");
+    for _ in 1..turns {
+        let line = format!(
+            r#"{{"op":"generate","session":"bench","context_len":{},"decode_len":{decode}}}"#,
+            context / 2
+        );
+        let resp = server.handle_line(&line);
+        assert_eq!(resp.get("ok").and_then(|b| b.as_bool()), Some(true), "{resp}");
+    }
+    let metrics = server.handle_line(r#"{"op":"metrics"}"#);
+    Json::obj()
+        .set("bench", "throughput_serving_lane")
+        .set("context", context)
+        .set("decode", decode)
+        .set("turns", turns)
+        .set("stream_token_lines", token_lines)
+        .set("metrics", metrics)
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -769,6 +827,32 @@ mod tests {
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_scoring_lane"));
         assert_eq!(back.get("rows").unwrap().as_arr().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn serving_lane_scrapes_full_metrics_schema() {
+        let scale = Scale { n: 512, dim: 16, instances: 1, seed: 7 };
+        let doc = run_serving_lane(scale, 96, 2, 2);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("throughput_serving_lane"));
+        // Streaming emitted exactly decode_len token lines.
+        assert_eq!(doc.get("stream_token_lines").unwrap().as_usize(), Some(2));
+        let m = doc.get("metrics").unwrap();
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true), "{m}");
+        let sched = m.get("scheduler").unwrap();
+        // 3 one-shots + the session's first turn prefill; turn 2 resumed.
+        assert_eq!(sched.get("prefill_tokens").unwrap().as_usize(), Some(4 * 96));
+        assert_eq!(sched.get("session_tokens").unwrap().as_usize(), Some(48));
+        assert_eq!(sched.get("resumed_turns").unwrap().as_usize(), Some(1));
+        let socket = m.get("methods").unwrap().get("socket").unwrap();
+        assert_eq!(socket.get("served").unwrap().as_usize(), Some(3), "{m}");
+        for field in ["p50_ms", "p95_ms", "p99_ms"] {
+            assert!(socket.get("ttft_ms").unwrap().get(field).is_some(), "missing {field}");
+        }
+        assert!(m.get("prune").unwrap().get("blocks").unwrap().as_usize().unwrap() > 0, "{m}");
+        assert!(m.get("pool").unwrap().get("utilization").unwrap().as_f64().unwrap() > 0.0);
+        // The artifact round-trips through the writer/parser.
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_serving_lane"));
     }
 
     #[test]

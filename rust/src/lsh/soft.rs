@@ -151,6 +151,15 @@ pub struct PruneStats {
     pub warmup: usize,
 }
 
+impl PruneStats {
+    /// Fold another pass's counts into this one (metrics aggregation).
+    pub fn absorb(&mut self, other: PruneStats) {
+        self.blocks += other.blocks;
+        self.pruned += other.pruned;
+        self.warmup += other.warmup;
+    }
+}
+
 /// One lane of [`SoftScorer::select_pruned_group_into`]: a query's
 /// flattened `L x R` prob table plus the buffers receiving its
 /// selection.

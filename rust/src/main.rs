@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! socketd serve   [--port 7411] [--method socket|quest|...] [--sparsity 33]
-//!                 [--dense] [--workers 4]
+//!                 [--dense] [--workers 4] [--session-ttl 300]
 //! socketd bench   <ruler|overhead|ranking|ttft|throughput|correlation|
 //!                  longbench|ablation|magicpig|models|theory|all>
 //!                 [--full] [--n N] [--dim D] [--instances I] [--seed S]
@@ -17,7 +17,6 @@ use socket_attn::lsh::LshParams;
 use socket_attn::model::ModelConfig;
 use socket_attn::server::Server;
 use socket_attn::util::Args;
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn main() {
@@ -69,17 +68,17 @@ fn engine_config(args: &Args) -> EngineConfig {
 fn serve(args: &Args) {
     let port = args.usize_or("port", 7411);
     let workers = args.usize_or("workers", 4);
-    let server = Arc::new(Server::new(engine_config(args), BatchPolicy::default()));
-    let stop = Arc::new(AtomicBool::new(false));
-    let addr = server
-        .serve(&format!("127.0.0.1:{port}"), workers, Arc::clone(&stop))
-        .expect("bind failed");
-    println!("socketd listening on {addr} ({workers} workers)");
+    let ttl = std::time::Duration::from_secs(args.usize_or("session-ttl", 300) as u64);
+    let server = Arc::new(
+        Server::new(engine_config(args), BatchPolicy::default()).with_session_ttl(ttl),
+    );
+    let handle = server.serve(&format!("127.0.0.1:{port}"), workers).expect("bind failed");
+    println!("socketd listening on {} ({workers} workers)", handle.addr());
     println!("protocol: one JSON per line, e.g.");
     println!("  {{\"op\":\"generate\",\"context_len\":4096,\"decode_len\":64,\"method\":\"quest\"}}");
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
-    }
+    println!("  {{\"op\":\"generate\",\"session\":\"chat-1\",\"context_len\":512,\"decode_len\":64,\"stream\":true}}");
+    println!("  {{\"op\":\"metrics\"}}");
+    handle.wait();
 }
 
 fn demo(args: &Args) {

@@ -1,7 +1,10 @@
-//! Ranking and attention-fidelity metrics (Appendix A.5 + Section 5).
+//! Ranking and attention-fidelity metrics (Appendix A.5 + Section 5),
+//! plus the serving-side metrics registry (lock-free TTFT/TBT
+//! histograms and pruning gauges).
 
 pub mod ranking;
 pub mod fidelity;
+pub mod registry;
 
 pub use fidelity::{attention_mass_recall, output_error, output_relative_error};
 pub use ranking::{jaccard, ndcg_at_k, precision_at_k, recall_at_k};

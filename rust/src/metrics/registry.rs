@@ -1,0 +1,286 @@
+//! Serving-side metrics registry: lock-free latency histograms and
+//! pruning gauges, fed by the scheduler loop and scraped by the
+//! server's `{"op":"metrics"}` endpoint and the bench serving lane.
+//!
+//! Everything here is plain atomics — `record`/`absorb` never take a
+//! lock and never allocate, so the scheduler thread and any number of
+//! connection handlers can feed/scrape concurrently without contending
+//! (the paper's serving pitch lives or dies by tail latency; the
+//! instrumentation must not add its own tail).
+//!
+//! [`Histogram`] buckets durations by power-of-two microseconds
+//! (40 buckets cover 1 µs .. ~12 days); quantiles are estimated by a
+//! cumulative walk with linear interpolation inside the matched bucket,
+//! so p50/p95/p99 are within one bucket's resolution of exact — plenty
+//! for TTFT/TBT distributions spanning orders of magnitude.
+
+use crate::lsh::PruneStats;
+use crate::selector;
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two microsecond buckets.
+const BUCKETS: usize = 40;
+
+/// A lock-free log₂-bucketed latency histogram (microsecond grain).
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one duration in microseconds. Lock-free; relaxed atomics
+    /// (counters only — no ordering is needed between samples).
+    pub fn record_us(&self, us: u64) {
+        // Bucket i holds [2^i, 2^{i+1}) µs; 0 and 1 µs share bucket 0.
+        let idx = (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Record one duration in (possibly fractional) milliseconds.
+    pub fn record_ms(&self, ms: f64) {
+        self.record_us((ms.max(0.0) * 1e3).round() as u64);
+    }
+
+    /// Total samples recorded.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Estimate the `q`-quantile (0..=1) in milliseconds: walk the
+    /// cumulative counts to the matched bucket, then interpolate
+    /// linearly inside it. 0.0 when empty.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if cum + c >= rank {
+                let lower = if i == 0 { 0u64 } else { 1u64 << i };
+                let upper = 1u64 << (i + 1);
+                let frac = (rank - cum) as f64 / c as f64;
+                let us = lower as f64 + frac * (upper - lower) as f64;
+                return us / 1e3;
+            }
+            cum += c;
+        }
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Mean in milliseconds (0.0 when empty).
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
+    }
+
+    /// Largest recorded sample in milliseconds.
+    pub fn max_ms(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Snapshot as the metrics-schema histogram object:
+    /// `{count, mean_ms, p50_ms, p95_ms, p99_ms, max_ms}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count())
+            .set("mean_ms", self.mean_ms())
+            .set("p50_ms", self.quantile_ms(0.50))
+            .set("p95_ms", self.quantile_ms(0.95))
+            .set("p99_ms", self.quantile_ms(0.99))
+            .set("max_ms", self.max_ms())
+    }
+}
+
+/// Per-method serving series: TTFT and TBT histograms plus outcome
+/// counters. One row per registered selector, plus `dense` and a
+/// catch-all `other` (unregistered labels from direct API users).
+pub struct MethodSeries {
+    pub label: &'static str,
+    pub served: AtomicU64,
+    pub failed: AtomicU64,
+    /// Submission → first decoded token.
+    pub ttft: Histogram,
+    /// Inter-token gaps after the first token.
+    pub tbt: Histogram,
+}
+
+impl MethodSeries {
+    fn new(label: &'static str) -> MethodSeries {
+        MethodSeries {
+            label,
+            served: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            ttft: Histogram::new(),
+            tbt: Histogram::new(),
+        }
+    }
+
+    fn idle(&self) -> bool {
+        self.served.load(Ordering::Relaxed) == 0
+            && self.failed.load(Ordering::Relaxed) == 0
+            && self.ttft.count() == 0
+    }
+}
+
+/// The serving metrics registry. Slots for every method are allocated
+/// up front (the selector registry is static), so feeding a sample is
+/// a label lookup over ~10 entries plus a few relaxed atomic adds —
+/// no lock, no allocation, no resize.
+pub struct Registry {
+    methods: Vec<MethodSeries>,
+    prune_blocks: AtomicU64,
+    prune_pruned: AtomicU64,
+    prune_warmup: AtomicU64,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        let mut methods: Vec<MethodSeries> =
+            selector::method_names().into_iter().map(MethodSeries::new).collect();
+        methods.push(MethodSeries::new("dense"));
+        methods.push(MethodSeries::new("other"));
+        Registry {
+            methods,
+            prune_blocks: AtomicU64::new(0),
+            prune_pruned: AtomicU64::new(0),
+            prune_warmup: AtomicU64::new(0),
+        }
+    }
+
+    /// The series for a method label; unknown labels land on `other`.
+    pub fn method(&self, label: &str) -> &MethodSeries {
+        self.methods
+            .iter()
+            .find(|m| m.label.eq_ignore_ascii_case(label))
+            .unwrap_or_else(|| self.methods.last().expect("registry has an 'other' slot"))
+    }
+
+    /// Fold one drained [`PruneStats`] into the pruning gauges.
+    pub fn absorb_prune(&self, p: PruneStats) {
+        self.prune_blocks.fetch_add(p.blocks as u64, Ordering::Relaxed);
+        self.prune_pruned.fetch_add(p.pruned as u64, Ordering::Relaxed);
+        self.prune_warmup.fetch_add(p.warmup as u64, Ordering::Relaxed);
+    }
+
+    /// Per-method section of the metrics schema. Idle series are
+    /// omitted so the scrape stays proportional to actual traffic.
+    pub fn methods_json(&self) -> Json {
+        let mut out = Json::obj();
+        for m in self.methods.iter().filter(|m| !m.idle()) {
+            out = out.set(
+                m.label,
+                Json::obj()
+                    .set("served", m.served.load(Ordering::Relaxed))
+                    .set("failed", m.failed.load(Ordering::Relaxed))
+                    .set("ttft_ms", m.ttft.to_json())
+                    .set("tbt_ms", m.tbt.to_json()),
+            );
+        }
+        out
+    }
+
+    /// Pruning gauges: cumulative branch-and-bound visit counts and the
+    /// derived prune rate / warm-up share.
+    pub fn prune_json(&self) -> Json {
+        let blocks = self.prune_blocks.load(Ordering::Relaxed);
+        let pruned = self.prune_pruned.load(Ordering::Relaxed);
+        let warmup = self.prune_warmup.load(Ordering::Relaxed);
+        let denom = blocks.max(1) as f64;
+        Json::obj()
+            .set("blocks", blocks)
+            .set("pruned", pruned)
+            .set("warmup_blocks", warmup)
+            .set("prune_rate", pruned as f64 / denom)
+            .set("warmup_share", warmup as f64 / denom)
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        // 90 samples in [1024, 2048) µs, 10 in [1_048_576, 2_097_152) µs.
+        for _ in 0..90 {
+            h.record_us(1500);
+        }
+        for _ in 0..10 {
+            h.record_us(1_500_000);
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.50);
+        assert!((1.024..2.048).contains(&p50), "p50 {p50}");
+        let p95 = h.quantile_ms(0.95);
+        assert!((1048.0..2098.0).contains(&p95), "p95 {p95}");
+        assert!(h.max_ms() >= 1500.0);
+        assert!(h.mean_ms() > 0.0);
+        // Empty histogram reports zeros, not NaN.
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile_ms(0.99), 0.0);
+        assert_eq!(empty.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn histogram_json_schema() {
+        let h = Histogram::new();
+        h.record_ms(3.2);
+        let j = h.to_json();
+        for field in ["count", "mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms"] {
+            assert!(j.get(field).is_some(), "missing {field}");
+        }
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn registry_routes_labels_and_reports_active_series() {
+        let r = Registry::new();
+        r.method("socket").served.fetch_add(2, Ordering::Relaxed);
+        r.method("SOCKET").ttft.record_ms(1.0); // case-insensitive
+        r.method("dense").failed.fetch_add(1, Ordering::Relaxed);
+        r.method("not-a-method").served.fetch_add(1, Ordering::Relaxed);
+        let j = r.methods_json();
+        assert_eq!(j.get("socket").unwrap().get("served").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("socket").unwrap().get("ttft_ms").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert_eq!(j.get("dense").unwrap().get("failed").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("other").unwrap().get("served").unwrap().as_usize(), Some(1));
+        assert!(j.get("quest").is_none(), "idle series must be omitted");
+    }
+
+    #[test]
+    fn prune_gauges_accumulate() {
+        let r = Registry::new();
+        r.absorb_prune(PruneStats { blocks: 80, pruned: 60, warmup: 8 });
+        r.absorb_prune(PruneStats { blocks: 20, pruned: 10, warmup: 2 });
+        let j = r.prune_json();
+        assert_eq!(j.get("blocks").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("pruned").unwrap().as_usize(), Some(70));
+        assert!((j.get("prune_rate").unwrap().as_f64().unwrap() - 0.7).abs() < 1e-12);
+        assert!((j.get("warmup_share").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-12);
+    }
+}

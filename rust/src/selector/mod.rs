@@ -58,7 +58,7 @@ pub use socket::{HardLshSelector, SocketSelector};
 
 use crate::attention::{DenseKv, KvSource};
 use crate::linalg::Matrix;
-use crate::lsh::{KeyHashes, LshParams, SimHash};
+use crate::lsh::{KeyHashes, LshParams, PruneStats, SimHash};
 use crate::util::pool::{self, WorkerPool};
 use std::fmt;
 
@@ -194,6 +194,14 @@ pub trait Selector: Send + Sync {
             self.select_into(q, k, sel)?;
         }
         Ok(())
+    }
+
+    /// Drain pruning telemetry accumulated by selections since the
+    /// last call (serving observability: the scheduler folds it into
+    /// the metrics registry's prune-rate / warm-up gauges). Methods
+    /// without a pruned scoring walk report zeros.
+    fn take_prune_stats(&self) -> PruneStats {
+        PruneStats::default()
     }
 
     /// Compatibility wrapper: build from dense K/V matrices.

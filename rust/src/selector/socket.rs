@@ -10,18 +10,50 @@
 use super::{hash_kv_source, Selection, Selector, SelectorError};
 use crate::attention::KvSource;
 use crate::linalg::l2_norm;
-use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, SoftScorer};
+use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, PruneStats, SoftScorer};
 use crate::util::pool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Lock-free accumulator for the pruned walk's telemetry: `select_into`
+/// takes `&self`, so the counters must be atomics. Drained (swapped to
+/// zero) by [`Selector::take_prune_stats`] for the metrics registry.
+#[derive(Default)]
+struct PruneCounters {
+    blocks: AtomicUsize,
+    pruned: AtomicUsize,
+    warmup: AtomicUsize,
+}
+
+impl PruneCounters {
+    fn add(&self, p: PruneStats) {
+        self.blocks.fetch_add(p.blocks, Ordering::Relaxed);
+        self.pruned.fetch_add(p.pruned, Ordering::Relaxed);
+        self.warmup.fetch_add(p.warmup, Ordering::Relaxed);
+    }
+
+    fn take(&self) -> PruneStats {
+        PruneStats {
+            blocks: self.blocks.swap(0, Ordering::Relaxed),
+            pruned: self.pruned.swap(0, Ordering::Relaxed),
+            warmup: self.warmup.swap(0, Ordering::Relaxed),
+        }
+    }
+}
 
 /// SOCKET as a [`Selector`].
 pub struct SocketSelector {
     scorer: SoftScorer,
     hashes: Option<KeyHashes>,
+    prune: PruneCounters,
 }
 
 impl SocketSelector {
     pub fn new(params: LshParams, dim: usize, seed: u64) -> SocketSelector {
-        SocketSelector { scorer: SoftScorer::new(params, dim, seed), hashes: None }
+        SocketSelector {
+            scorer: SoftScorer::new(params, dim, seed),
+            hashes: None,
+            prune: PruneCounters::default(),
+        }
     }
 }
 
@@ -64,7 +96,7 @@ impl Selector for SocketSelector {
         // exhaustive scoring either way.
         let (_, r) = self.scorer.hasher.bucket_probs_into(q, &mut sel.aux, pool::global());
         let Selection { indices, scores, aux } = sel;
-        self.scorer.select_pruned_into(aux, r, hashes, k.max(1), indices, scores);
+        self.prune.add(self.scorer.select_pruned_into(aux, r, hashes, k.max(1), indices, scores));
         Ok(())
     }
 
@@ -101,12 +133,16 @@ impl Selector for SocketSelector {
                 GroupLane { probs: aux, indices, scores }
             })
             .collect();
-        self.scorer.select_pruned_group_into(r, hashes, k.max(1), &mut lanes);
+        self.prune.add(self.scorer.select_pruned_group_into(r, hashes, k.max(1), &mut lanes));
         Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
         self.scorer.params().memory().bits_per_token
+    }
+
+    fn take_prune_stats(&self) -> PruneStats {
+        self.prune.take()
     }
 }
 
@@ -114,11 +150,16 @@ impl Selector for SocketSelector {
 pub struct HardLshSelector {
     scorer: HardScorer,
     hashes: Option<KeyHashes>,
+    prune: PruneCounters,
 }
 
 impl HardLshSelector {
     pub fn new(params: LshParams, dim: usize, seed: u64) -> HardLshSelector {
-        HardLshSelector { scorer: HardScorer::new(params, dim, seed), hashes: None }
+        HardLshSelector {
+            scorer: HardScorer::new(params, dim, seed),
+            hashes: None,
+            prune: PruneCounters::default(),
+        }
     }
 }
 
@@ -151,12 +192,22 @@ impl Selector for HardLshSelector {
         }
         // The SoA/pruned port of the shared collision kernel —
         // bit-identical to exhaustive counting + top-k.
-        self.scorer.select_pruned_into(q, hashes, k.max(1), &mut sel.indices, &mut sel.scores);
+        self.prune.add(self.scorer.select_pruned_into(
+            q,
+            hashes,
+            k.max(1),
+            &mut sel.indices,
+            &mut sel.scores,
+        ));
         Ok(())
     }
 
     fn bits_per_token(&self) -> usize {
         self.scorer.params().memory().bits_per_token
+    }
+
+    fn take_prune_stats(&self) -> PruneStats {
+        self.prune.take()
     }
 }
 
@@ -250,6 +301,31 @@ mod tests {
                 assert_eq!(group[g].indices, want.indices, "{} lane {g}", sel.name());
             }
         }
+    }
+
+    #[test]
+    fn prune_stats_accumulate_and_drain() {
+        // Selection telemetry feeds the serving metrics registry:
+        // selections accumulate visit counts, take_prune_stats drains
+        // them (second drain is empty), and selections themselves are
+        // unaffected.
+        let mut rng = Pcg64::seeded(11);
+        let keys = Matrix::gaussian(400, 16, &mut rng);
+        let vals = Matrix::gaussian(400, 16, &mut rng);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+        let mut soft = SocketSelector::new(params, 16, 7);
+        soft.build_dense(&keys, &vals);
+        let q = rng.normal_vec(16);
+        assert_eq!(soft.take_prune_stats(), PruneStats::default(), "nothing selected yet");
+        soft.select(&q, 16).unwrap();
+        let drained = soft.take_prune_stats();
+        assert!(drained.blocks > 0, "a selection must visit blocks: {drained:?}");
+        assert_eq!(soft.take_prune_stats(), PruneStats::default(), "drain must reset");
+
+        let mut hard = HardLshSelector::new(params, 16, 7);
+        hard.build_dense(&keys, &vals);
+        hard.select(&q, 16).unwrap();
+        assert!(hard.take_prune_stats().blocks > 0);
     }
 
     #[test]

@@ -1,41 +1,97 @@
 //! TCP line-protocol front-end over the coordinator.
 //!
-//! Protocol: one JSON object per line.
-//! Request:  `{"op":"generate","context_len":N,"decode_len":M}`
-//!           with optional `"method":"quest"|"magicpig"|...|"dense"`
-//!           (any `selector::registry` name; default = engine config)
-//!           and `"sparsity":S` (default = engine config),
-//!           `{"op":"stats"}` · `{"op":"ping"}`
-//! Response: `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
-//! `stats` reports total served plus a per-method breakdown.
+//! Protocol: one JSON object per line, one or more JSON lines back.
 //!
-//! std::net + a small thread pool (tokio is unavailable offline); each
-//! connection is handled by a pool worker, requests route through the
-//! shared [`Coordinator`]. Selector misuse (an unknown method name, a
-//! bad sparsity) is a JSON error, never a worker panic.
+//! * `{"op":"generate","context_len":N,"decode_len":M}` — serve one
+//!   request. Optional fields:
+//!   - `"method":"quest"|"magicpig"|...|"dense"` (any
+//!     `selector::registry` name; default = engine config) and
+//!     `"sparsity":S` (default = engine config).
+//!   - `"session":"<id>"` — multi-turn session. The first turn on an id
+//!     prefills and *parks* the sequence (KV pages + selector index stay
+//!     live in the scheduler); follow-up turns on the same id append
+//!     `context_len` new context tokens (0 = just keep decoding) and
+//!     decode — **zero prefill tokens** on resumed turns. A session's
+//!     attention mode is fixed at its first turn; idle sessions are
+//!     evicted after `session_ttl` and their pages returned to the pool.
+//!   - `"stream":true` — emit one `{"token":i,"ms":t}` line per decoded
+//!     token, then the usual summary line with `"done":true`.
+//! * `{"op":"stats"}` — totals served plus a per-method breakdown.
+//! * `{"op":"metrics"}` — the full serving telemetry snapshot:
+//!   per-method TTFT/TBT histograms (p50/p95/p99), KV pool utilization,
+//!   scheduler counters (prefill vs session tokens, resumed turns),
+//!   session table occupancy, and the prune-rate/threshold-warmup
+//!   gauges fed from the scoring engine's `PruneStats`.
+//! * `{"op":"ping"}` — liveness.
+//!
+//! Responses are `{"ok":true, ...}` or `{"ok":false,"error":"..."}`.
+//!
+//! std::net + a small thread pool (tokio is unavailable offline).
+//! Accepted connections are handed to workers over an mpsc channel —
+//! FIFO, so no connection starves behind later arrivals, and workers
+//! block on the channel instead of spinning. Each request line runs
+//! under `catch_unwind`: a handler panic answers with a JSON error and
+//! the connection (and worker) live on; shared stats tolerate lock
+//! poisoning. Shutdown propagates into every read loop, and
+//! [`ServerHandle::shutdown`] joins all threads.
 
-use crate::coordinator::{BatchPolicy, Coordinator, EngineConfig};
+use crate::coordinator::{BatchPolicy, Completion, Coordinator, EngineConfig, Submission};
 use crate::selector::{self, AttentionMode};
 use crate::util::Json;
 use crate::workload::trace::Request;
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Lock that survives poisoning: a panicking handler must not take the
+/// stats/session tables down with it (the counters are plain integers —
+/// every partial update is still a coherent value).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn err_json(msg: impl Into<String>) -> Json {
+    Json::obj().set("ok", false).set("error", msg.into())
+}
+
+/// One live session: the parked sequence it owns plus bookkeeping for
+/// TTL eviction and the stats surface.
+struct SessionEntry {
+    seq_id: u64,
+    /// Canonical method label, fixed at the first turn.
+    method: String,
+    /// Context + decoded tokens accumulated across turns.
+    tokens: usize,
+    turns: u64,
+    last_active: Instant,
+    /// A turn is in flight — concurrent turns on one sequence are
+    /// refused, and the sweeper never evicts a busy session.
+    busy: bool,
+}
 
 /// Server state shared across connection handlers.
 pub struct Server {
-    coordinator: Arc<Coordinator>,
-    next_id: Arc<AtomicU64>,
-    served: Arc<AtomicU64>,
+    coordinator: Coordinator,
+    next_id: AtomicU64,
+    served: AtomicU64,
     /// Successful generates per method label (the `stats` breakdown).
-    served_by_method: Arc<Mutex<BTreeMap<String, u64>>>,
+    served_by_method: Mutex<BTreeMap<String, u64>>,
     /// Label of the engine's default mode (used when a request names
     /// no method).
     default_label: String,
     /// Sparsity applied when a request names a method without one.
     default_sparsity: f64,
+    /// Session-id → parked sequence. Guards every state transition of
+    /// the session lifecycle (first turn, resume, evict).
+    sessions: Mutex<HashMap<String, SessionEntry>>,
+    sessions_evicted: AtomicU64,
+    /// Idle sessions older than this are evicted by the sweeper.
+    session_ttl: Duration,
 }
 
 impl Server {
@@ -55,13 +111,22 @@ impl Server {
             AttentionMode::Dense => 33.0, // the paper's headline budget
         };
         Server {
-            coordinator: Arc::new(Coordinator::spawn(config, policy)),
-            next_id: Arc::new(AtomicU64::new(1)),
-            served: Arc::new(AtomicU64::new(0)),
-            served_by_method: Arc::new(Mutex::new(BTreeMap::new())),
+            coordinator: Coordinator::spawn(config, policy),
+            next_id: AtomicU64::new(1),
+            served: AtomicU64::new(0),
+            served_by_method: Mutex::new(BTreeMap::new()),
             default_label,
             default_sparsity,
+            sessions: Mutex::new(HashMap::new()),
+            sessions_evicted: AtomicU64::new(0),
+            session_ttl: Duration::from_secs(300),
         }
+    }
+
+    /// Override the idle-session eviction TTL (default 300 s).
+    pub fn with_session_ttl(mut self, ttl: Duration) -> Server {
+        self.session_ttl = ttl;
+        self
     }
 
     /// Resolve a request's optional `"method"`/`"sparsity"` fields into
@@ -113,139 +178,486 @@ impl Server {
         Ok((Some(AttentionMode::Sparse { method: label.clone(), sparsity }), label))
     }
 
-    /// Handle one already-parsed request object (also used directly by
-    /// unit tests — the wire layer is a thin shell around this).
-    pub fn handle(&self, msg: &Json) -> Json {
-        match msg.get("op").and_then(|o| o.as_str()) {
+    /// Submit one turn and await its completion. With `stream` set, the
+    /// scheduler's per-token events are emitted as JSON lines while the
+    /// turn decodes; the token channel disconnects only after the
+    /// completion is delivered, so draining it to exhaustion loses
+    /// nothing.
+    fn run_turn(
+        &self,
+        req: Request,
+        keep_alive: bool,
+        resume: bool,
+        stream: bool,
+        emit: &mut dyn FnMut(Json),
+    ) -> Completion {
+        let (tokens, token_rx) = if stream {
+            let (tx, rx) = channel();
+            (Some(tx), Some(rx))
+        } else {
+            (None, None)
+        };
+        let handle = self.coordinator.submit_opts(Submission { req, keep_alive, resume, tokens });
+        if let Some(rx) = token_rx {
+            while let Ok(ev) = rx.recv() {
+                emit(Json::obj().set("token", ev.index).set("ms", ev.ms));
+            }
+        }
+        handle.wait()
+    }
+
+    fn count_served(&self, label: &str) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        *lock(&self.served_by_method).entry(label.to_string()).or_insert(0) += 1;
+    }
+
+    fn summary(c: &Completion, label: &str, stream: bool) -> Json {
+        let mut resp = Json::obj()
+            .set("ok", true)
+            .set("id", c.id)
+            .set("method", label)
+            .set("ttft_ms", c.ttft_ms)
+            .set("total_ms", c.total_ms)
+            .set("decode_len", c.decode_len);
+        if stream {
+            resp = resp.set("done", true);
+        }
+        resp
+    }
+
+    fn generate_oneshot(
+        &self,
+        msg: &Json,
+        dec: usize,
+        stream: bool,
+        emit: &mut dyn FnMut(Json),
+    ) -> Json {
+        let ctx = msg.get("context_len").and_then(|v| v.as_usize()).unwrap_or(0);
+        if ctx == 0 || dec == 0 {
+            return err_json("context_len and decode_len must be positive");
+        }
+        let (mode, label) = match self.request_mode(msg) {
+            Ok(resolved) => resolved,
+            // Unknown method / bad sparsity: a typed JSON error
+            // straight from the registry, no queue round-trip.
+            Err(e) => return err_json(e),
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode };
+        let c = self.run_turn(req, false, false, stream, emit);
+        if !c.ok {
+            // Failed admission (e.g. request larger than the KV
+            // pool) — surface the scheduler's reason.
+            return err_json(c.error.unwrap_or_else(|| "request rejected".to_string()))
+                .set("id", c.id);
+        }
+        self.count_served(&label);
+        Self::summary(&c, &label, stream)
+    }
+
+    fn generate_session(
+        &self,
+        msg: &Json,
+        sid: &str,
+        dec: usize,
+        stream: bool,
+        emit: &mut dyn FnMut(Json),
+    ) -> Json {
+        if dec == 0 {
+            return err_json("decode_len must be positive");
+        }
+        let ctx = msg.get("context_len").and_then(|v| v.as_usize()).unwrap_or(0);
+        // Resolve the session under the table lock; mark it busy before
+        // releasing so concurrent turns and the TTL sweeper stay out.
+        let mut sessions = lock(&self.sessions);
+        if let Some(entry) = sessions.get_mut(sid) {
+            if entry.busy {
+                return err_json(format!("session '{sid}' already has a turn in flight"));
+            }
+            if msg.get("method").is_some() || msg.get("sparsity").is_some() {
+                return err_json(
+                    "a session's attention mode is fixed at its first turn; \
+                     drop \"method\"/\"sparsity\" on resumed turns",
+                );
+            }
+            entry.busy = true;
+            let seq = entry.seq_id;
+            let label = entry.method.clone();
+            drop(sessions);
+            // Resumed turn: the scheduler appends `ctx` tokens to the
+            // parked index — zero prefill tokens.
+            let req =
+                Request { id: seq, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None };
+            let c = self.run_turn(req, true, true, stream, emit);
+            let (turns, toks) = {
+                let mut sessions = lock(&self.sessions);
+                match sessions.get_mut(sid) {
+                    Some(entry) => {
+                        entry.busy = false;
+                        entry.last_active = Instant::now();
+                        if c.ok {
+                            entry.tokens += ctx + dec;
+                            entry.turns += 1;
+                        }
+                        (entry.turns, entry.tokens)
+                    }
+                    None => (0, 0),
+                }
+            };
+            if !c.ok {
+                // The scheduler re-parked the sequence; the session
+                // survives a failed (e.g. oversized) turn.
+                return err_json(c.error.unwrap_or_else(|| "request rejected".to_string()))
+                    .set("id", c.id)
+                    .set("session", sid);
+            }
+            self.count_served(&label);
+            Self::summary(&c, &label, stream)
+                .set("session", sid)
+                .set("turn", turns)
+                .set("session_tokens", toks)
+        } else {
+            // First turn: prefill + park.
+            if ctx == 0 {
+                return err_json("context_len must be positive on a session's first turn");
+            }
+            let (mode, label) = match self.request_mode(msg) {
+                Ok(resolved) => resolved,
+                Err(e) => return err_json(e),
+            };
+            let seq = self.next_id.fetch_add(1, Ordering::Relaxed);
+            sessions.insert(
+                sid.to_string(),
+                SessionEntry {
+                    seq_id: seq,
+                    method: label.clone(),
+                    tokens: 0,
+                    turns: 0,
+                    last_active: Instant::now(),
+                    busy: true,
+                },
+            );
+            drop(sessions);
+            let req = Request { id: seq, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode };
+            let c = self.run_turn(req, true, false, stream, emit);
+            let mut sessions = lock(&self.sessions);
+            if !c.ok {
+                // Nothing was parked — drop the stillborn session.
+                sessions.remove(sid);
+                return err_json(c.error.unwrap_or_else(|| "request rejected".to_string()))
+                    .set("id", c.id)
+                    .set("session", sid);
+            }
+            let (turns, toks) = match sessions.get_mut(sid) {
+                Some(entry) => {
+                    entry.busy = false;
+                    entry.last_active = Instant::now();
+                    entry.tokens = ctx + dec;
+                    entry.turns = 1;
+                    (entry.turns, entry.tokens)
+                }
+                None => (1, ctx + dec),
+            };
+            drop(sessions);
+            self.count_served(&label);
+            Self::summary(&c, &label, stream)
+                .set("session", sid)
+                .set("turn", turns)
+                .set("session_tokens", toks)
+        }
+    }
+
+    /// The `metrics` op: serving telemetry snapshot (see module doc for
+    /// the schema).
+    fn metrics_json(&self) -> Json {
+        let snap = match self.coordinator.snapshot() {
+            Some(s) => s,
+            None => return err_json("scheduler unavailable"),
+        };
+        let used = snap.total_pages - snap.free_pages;
+        let pool = Json::obj()
+            .set("free_pages", snap.free_pages)
+            .set("total_pages", snap.total_pages)
+            .set("used_pages", used)
+            .set("utilization", used as f64 / snap.total_pages.max(1) as f64);
+        let sessions = Json::obj()
+            .set("active", lock(&self.sessions).len())
+            .set("parked", snap.parked_sessions)
+            .set("evicted", self.sessions_evicted.load(Ordering::Relaxed));
+        let registry = self.coordinator.metrics();
+        Json::obj()
+            .set("ok", true)
+            .set("pool", pool)
+            .set("scheduler", snap.stats.to_json())
+            .set("sessions", sessions)
+            .set("methods", registry.methods_json())
+            .set("prune", registry.prune_json())
+    }
+
+    /// Handle one already-parsed request object, emitting one or more
+    /// response objects (streaming generates emit a line per token
+    /// before the summary). Also used directly by unit tests — the wire
+    /// layer is a thin shell around this.
+    pub fn handle_with(&self, msg: &Json, emit: &mut dyn FnMut(Json)) {
+        let resp = match msg.get("op").and_then(|o| o.as_str()) {
             Some("ping") => Json::obj().set("ok", true).set("pong", true),
             Some("stats") => {
                 let mut methods = Json::obj();
-                for (name, count) in self.served_by_method.lock().unwrap().iter() {
+                for (name, count) in lock(&self.served_by_method).iter() {
                     methods = methods.set(name, *count);
                 }
                 Json::obj()
                     .set("ok", true)
                     .set("served", self.served.load(Ordering::Relaxed))
                     .set("methods", methods)
+                    .set("sessions", lock(&self.sessions).len())
             }
+            Some("metrics") => self.metrics_json(),
             Some("generate") => {
-                let ctx = msg.get("context_len").and_then(|v| v.as_usize()).unwrap_or(0);
+                let stream = msg.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
                 let dec = msg.get("decode_len").and_then(|v| v.as_usize()).unwrap_or(0);
-                if ctx == 0 || dec == 0 {
-                    return Json::obj().set("ok", false).set("error", "context_len and decode_len must be positive");
+                match msg.get("session").and_then(|s| s.as_str()) {
+                    Some(sid) => self.generate_session(msg, sid, dec, stream, emit),
+                    None => self.generate_oneshot(msg, dec, stream, emit),
                 }
-                let (mode, label) = match self.request_mode(msg) {
-                    Ok(resolved) => resolved,
-                    // Unknown method / bad sparsity: a typed JSON error
-                    // straight from the registry, no queue round-trip.
-                    Err(e) => return Json::obj().set("ok", false).set("error", e),
-                };
-                let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-                let handle = self.coordinator.submit(Request {
-                    id,
-                    arrival_ms: 0.0,
-                    context_len: ctx,
-                    decode_len: dec,
-                    mode,
-                });
-                let c = handle.wait();
-                if !c.ok {
-                    // Failed admission (e.g. request larger than the KV
-                    // pool) — surface the scheduler's reason.
-                    return Json::obj()
-                        .set("ok", false)
-                        .set("id", c.id)
-                        .set("error", c.error.unwrap_or_else(|| "request rejected".to_string()));
-                }
-                self.served.fetch_add(1, Ordering::Relaxed);
-                *self.served_by_method.lock().unwrap().entry(label.clone()).or_insert(0) += 1;
-                Json::obj()
-                    .set("ok", true)
-                    .set("id", c.id)
-                    .set("method", label)
-                    .set("ttft_ms", c.ttft_ms)
-                    .set("total_ms", c.total_ms)
-                    .set("decode_len", c.decode_len)
             }
-            Some(other) => Json::obj().set("ok", false).set("error", format!("unknown op '{other}'")),
-            None => Json::obj().set("ok", false).set("error", "missing 'op'"),
-        }
+            // Test hook for the panic-isolation path: dies while
+            // holding the stats lock, poisoning it on purpose.
+            Some("__test_panic") if cfg!(test) => {
+                let _guard = self.served_by_method.lock();
+                panic!("test-induced handler panic");
+            }
+            Some(other) => err_json(format!("unknown op '{other}'")),
+            None => err_json("missing 'op'"),
+        };
+        emit(resp);
     }
 
-    fn handle_line(&self, line: &str) -> Json {
+    /// Single-response convenience over [`Server::handle_with`]: returns
+    /// the final (summary) object, discarding streamed token lines.
+    pub fn handle(&self, msg: &Json) -> Json {
+        let mut last = None;
+        self.handle_with(msg, &mut |resp| last = Some(resp));
+        last.unwrap_or_else(|| err_json("no response"))
+    }
+
+    /// Parse + handle one request line (single-response form).
+    pub fn handle_line(&self, line: &str) -> Json {
         match Json::parse(line) {
             Ok(msg) => self.handle(&msg),
-            Err(e) => Json::obj().set("ok", false).set("error", format!("bad json: {e}")),
+            Err(e) => err_json(format!("bad json: {e}")),
         }
     }
 
-    fn serve_conn(&self, stream: TcpStream) {
-        let peer = stream.peer_addr().ok();
+    /// Run one request line against the connection, panic-isolated: a
+    /// panicking handler answers with a JSON error instead of killing
+    /// the worker thread. Returns `false` when the connection is dead
+    /// (write failed).
+    fn dispatch_line(&self, line: &str, writer: &mut TcpStream) -> bool {
+        let mut write_failed = false;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut emit = |resp: Json| {
+                if writeln!(writer, "{resp}").is_err() {
+                    write_failed = true;
+                }
+            };
+            match Json::parse(line) {
+                Ok(msg) => self.handle_with(&msg, &mut emit),
+                Err(e) => emit(err_json(format!("bad json: {e}"))),
+            }
+        }));
+        if outcome.is_err()
+            && writeln!(writer, "{}", err_json("internal error: handler panicked")).is_err()
+        {
+            return false;
+        }
+        !write_failed
+    }
+
+    /// Handle one connection until EOF, error, or server stop. The read
+    /// loop ticks on a short timeout so a stop request terminates even
+    /// while an idle client keeps the connection open. Lines are
+    /// reassembled from raw bytes (a read timeout can split a line —
+    /// including mid-codepoint — so no BufReader::read_line here).
+    fn serve_conn(&self, mut stream: TcpStream, stop: &AtomicBool) {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
         let mut writer = match stream.try_clone() {
             Ok(w) => w,
             Err(_) => return,
         };
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = match line {
-                Ok(l) => l,
-                Err(_) => break,
-            };
-            if line.trim().is_empty() {
-                continue;
+        let mut buf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 4096];
+        loop {
+            while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+                let raw: Vec<u8> = buf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&raw[..raw.len() - 1]);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                if !self.dispatch_line(line, &mut writer) {
+                    return;
+                }
             }
-            let resp = self.handle_line(&line);
-            if writeln!(writer, "{resp}").is_err() {
-                break;
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => return, // EOF
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    // Timeout tick: loop back and re-check `stop`.
+                }
+                Err(_) => return,
             }
         }
-        let _ = peer;
     }
 
-    /// Serve on `addr` with `n_workers` connection-handler threads until
-    /// `stop` is set. Returns the bound local address.
-    pub fn serve(
-        self: Arc<Self>,
-        addr: &str,
-        n_workers: usize,
-        stop: Arc<AtomicBool>,
-    ) -> std::io::Result<std::net::SocketAddr> {
+    /// Evict sessions idle for at least `ttl`, releasing their parked
+    /// sequences' pages back to the pool. Returns how many were
+    /// evicted. (Called periodically by the sweeper thread; exposed for
+    /// tests and embedders driving their own clock.)
+    pub fn evict_idle_sessions(&self, ttl: Duration) -> usize {
+        let expired: Vec<u64> = {
+            let mut sessions = lock(&self.sessions);
+            let keys: Vec<String> = sessions
+                .iter()
+                .filter(|(_, e)| !e.busy && e.last_active.elapsed() >= ttl)
+                .map(|(k, _)| k.clone())
+                .collect();
+            keys.iter().map(|k| sessions.remove(k).unwrap().seq_id).collect()
+        };
+        for seq in &expired {
+            self.coordinator.release(*seq);
+        }
+        self.sessions_evicted.fetch_add(expired.len() as u64, Ordering::Relaxed);
+        expired.len()
+    }
+
+    /// Serve on `addr` with `n_workers` connection-handler threads.
+    /// Returns a [`ServerHandle`]; dropping it (or calling
+    /// [`ServerHandle::shutdown`]) stops and joins every thread —
+    /// acceptor, workers, and the session sweeper.
+    pub fn serve(self: &Arc<Self>, addr: &str, n_workers: usize) -> std::io::Result<ServerHandle> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
-        // Worker pool pulling accepted connections.
-        for _ in 0..n_workers {
-            let server = Arc::clone(&self);
-            let conns = Arc::clone(&conns);
+        let stop = Arc::new(AtomicBool::new(false));
+        // FIFO connection queue: the acceptor feeds, workers block on
+        // recv. No busy-wait, and — unlike the LIFO stack this replaced
+        // — a burst of connections drains oldest-first, so an early
+        // connection can no longer starve behind every later arrival.
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut threads = Vec::with_capacity(n_workers + 2);
+        for i in 0..n_workers.max(1) {
+            let server = Arc::clone(self);
+            let conn_rx = Arc::clone(&conn_rx);
             let stop = Arc::clone(&stop);
-            std::thread::spawn(move || loop {
-                let conn = conns.lock().unwrap().pop();
-                match conn {
-                    Some(c) => server.serve_conn(c),
-                    None => {
-                        if stop.load(Ordering::Relaxed) {
+            let worker = std::thread::Builder::new()
+                .name(format!("socketd-worker-{i}"))
+                .spawn(move || loop {
+                    // Holding the mutex while blocked in recv is fine:
+                    // channel handoff wakes exactly one waiter, and the
+                    // guard drops before the connection is served.
+                    let conn = lock(&conn_rx).recv();
+                    match conn {
+                        Ok(c) => server.serve_conn(c, &stop),
+                        // Acceptor gone (shutdown): queue is drained.
+                        Err(_) => return,
+                    }
+                })?;
+            threads.push(worker);
+        }
+        // Acceptor: blocking accept — shutdown wakes it with a
+        // self-connection, after which it drops `conn_tx` and the
+        // workers drain out.
+        let stop_acc = Arc::clone(&stop);
+        let acceptor = std::thread::Builder::new().name("socketd-acceptor".into()).spawn(
+            move || loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stop_acc.load(Ordering::Relaxed) {
                             return;
                         }
-                        std::thread::sleep(std::time::Duration::from_millis(2));
+                        if conn_tx.send(stream).is_err() {
+                            return;
+                        }
+                    }
+                    Err(_) => {
+                        if stop_acc.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
                     }
                 }
-            });
+            },
+        )?;
+        threads.push(acceptor);
+        // Sweeper: periodic idle-session TTL eviction. Ticks every
+        // 100 ms so shutdown is prompt; sweeps at most ~1/s.
+        let sweeper_srv = Arc::clone(self);
+        let stop_sweep = Arc::clone(&stop);
+        let sweeper =
+            std::thread::Builder::new().name("socketd-sweeper".into()).spawn(move || {
+                let tick = Duration::from_millis(100);
+                let cadence = Duration::from_secs(1).min(sweeper_srv.session_ttl).max(tick);
+                let mut since_sweep = Duration::ZERO;
+                while !stop_sweep.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    since_sweep += tick;
+                    if since_sweep >= cadence {
+                        sweeper_srv.evict_idle_sessions(sweeper_srv.session_ttl);
+                        since_sweep = Duration::ZERO;
+                    }
+                }
+            })?;
+        threads.push(sweeper);
+        Ok(ServerHandle { addr: local, stop, threads })
+    }
+}
+
+/// Running server: bound address + every spawned thread. Dropping the
+/// handle performs a graceful shutdown — stop flag, acceptor wake-up,
+/// and a join of acceptor, workers (their read loops tick the stop
+/// flag, so idle open connections don't wedge them), and sweeper.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the server and join all threads.
+    pub fn shutdown(self) {
+        // Drop impl does the work.
+    }
+
+    /// Block until the server exits on its own (it doesn't, absent a
+    /// signal — this parks the main thread of a daemon binary).
+    pub fn wait(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
         }
-        // Acceptor thread.
-        let stop_acc = Arc::clone(&stop);
-        std::thread::spawn(move || {
-            while !stop_acc.load(Ordering::Relaxed) {
-                match listener.accept() {
-                    Ok((stream, _)) => conns.lock().unwrap().push(stream),
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(2));
-                    }
-                    Err(_) => break,
-                }
-            }
-        });
-        Ok(local)
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the acceptor out of its blocking accept.
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
     }
 }
 
@@ -275,6 +687,7 @@ mod tests {
         assert_eq!(pong.get("ok").unwrap().as_bool(), Some(true));
         let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
         assert_eq!(stats.get("served").unwrap().as_usize(), Some(0));
+        assert_eq!(stats.get("sessions").unwrap().as_usize(), Some(0));
     }
 
     #[test]
@@ -408,18 +821,257 @@ mod tests {
     }
 
     #[test]
+    fn session_two_turns_resume_with_zero_prefill() {
+        // The tentpole: turn 2 on a live session appends context instead
+        // of re-prefilling — asserted via the scheduler's own counters.
+        let s = server();
+        let t1 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"chat-1","context_len":128,"decode_len":2}"#)
+                .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        assert_eq!(t1.get("session").unwrap().as_str(), Some("chat-1"));
+        assert_eq!(t1.get("turn").unwrap().as_usize(), Some(1));
+        assert_eq!(t1.get("session_tokens").unwrap().as_usize(), Some(130));
+
+        let t2 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"chat-1","context_len":64,"decode_len":2}"#)
+                .unwrap(),
+        );
+        assert_eq!(t2.get("ok").unwrap().as_bool(), Some(true), "{t2}");
+        assert_eq!(t2.get("turn").unwrap().as_usize(), Some(2));
+        assert_eq!(t2.get("session_tokens").unwrap().as_usize(), Some(196));
+
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true), "{m}");
+        let sched = m.get("scheduler").unwrap();
+        assert_eq!(sched.get("prefill_tokens").unwrap().as_usize(), Some(128), "{m}");
+        assert_eq!(sched.get("session_tokens").unwrap().as_usize(), Some(64), "{m}");
+        assert_eq!(sched.get("resumed_turns").unwrap().as_usize(), Some(1), "{m}");
+        let sessions = m.get("sessions").unwrap();
+        assert_eq!(sessions.get("active").unwrap().as_usize(), Some(1));
+        assert_eq!(sessions.get("parked").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn session_ttl_eviction_returns_pages_to_pool() {
+        let s = server();
+        let baseline = s
+            .handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap())
+            .get("pool")
+            .unwrap()
+            .get("free_pages")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        let t1 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"idle","context_len":96,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        let held = s
+            .handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap())
+            .get("pool")
+            .unwrap()
+            .get("free_pages")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(held < baseline, "parked session must hold pages ({held} vs {baseline})");
+
+        assert_eq!(s.evict_idle_sessions(Duration::ZERO), 1);
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let freed = m.get("pool").unwrap().get("free_pages").unwrap().as_usize().unwrap();
+        assert_eq!(freed, baseline, "eviction must return every page");
+        let sessions = m.get("sessions").unwrap();
+        assert_eq!(sessions.get("active").unwrap().as_usize(), Some(0));
+        assert_eq!(sessions.get("evicted").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            m.get("scheduler").unwrap().get("sessions_released").unwrap().as_usize(),
+            Some(1)
+        );
+        // The evicted id starts a fresh session.
+        let t = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"idle","context_len":32,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t.get("ok").unwrap().as_bool(), Some(true), "{t}");
+        assert_eq!(t.get("turn").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn streaming_emits_one_line_per_token_then_summary() {
+        let s = server();
+        let mut lines = Vec::new();
+        s.handle_with(
+            &Json::parse(r#"{"op":"generate","context_len":64,"decode_len":4,"stream":true}"#)
+                .unwrap(),
+            &mut |resp| lines.push(resp),
+        );
+        assert_eq!(lines.len(), 5, "decode_len token lines + 1 summary: {lines:?}");
+        for (i, line) in lines[..4].iter().enumerate() {
+            assert_eq!(line.get("token").unwrap().as_usize(), Some(i), "{line}");
+            assert!(line.get("ms").unwrap().as_f64().unwrap() >= 0.0);
+        }
+        let summary = &lines[4];
+        assert_eq!(summary.get("ok").unwrap().as_bool(), Some(true), "{summary}");
+        assert_eq!(summary.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(summary.get("decode_len").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn busy_session_and_mode_change_are_refused() {
+        let s = server();
+        let t1 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"s","context_len":48,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        // A resumed turn may not change the attention mode.
+        let resp = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","session":"s","context_len":16,"decode_len":1,"method":"quest"}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("fixed"), "{resp}");
+        // Concurrent turns on one session are refused.
+        lock(&s.sessions).get_mut("s").unwrap().busy = true;
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"s","context_len":16,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("in flight"), "{resp}");
+        lock(&s.sessions).get_mut("s").unwrap().busy = false;
+        let t2 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"s","context_len":16,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t2.get("ok").unwrap().as_bool(), Some(true), "{t2}");
+        assert_eq!(t2.get("turn").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
     fn tcp_round_trip() {
         use std::io::{BufRead, BufReader, Write};
         let s = Arc::new(server());
-        let stop = Arc::new(AtomicBool::new(false));
-        let addr = Arc::clone(&s).serve("127.0.0.1:0", 2, Arc::clone(&stop)).unwrap();
-        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        let handle = s.serve("127.0.0.1:0", 2).unwrap();
+        let mut conn = std::net::TcpStream::connect(handle.addr()).unwrap();
         writeln!(conn, r#"{{"op":"generate","context_len":48,"decode_len":1}}"#).unwrap();
         let mut reader = BufReader::new(conn.try_clone().unwrap());
         let mut line = String::new();
         reader.read_line(&mut line).unwrap();
         let resp = Json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{line}");
-        stop.store(true, Ordering::Relaxed);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn many_connections_on_few_workers_all_get_served() {
+        // Regression for the LIFO + busy-wait pool: with more
+        // concurrent connections than workers, every connection must be
+        // answered in bounded time (FIFO queue — no starvation).
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 2).unwrap();
+        let addr = handle.addr();
+        let clients: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    use std::io::{BufRead, BufReader, Write};
+                    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+                    conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+                    writeln!(conn, r#"{{"op":"generate","context_len":32,"decode_len":1}}"#)
+                        .unwrap();
+                    let mut reader = BufReader::new(conn);
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let resp = Json::parse(line.trim()).unwrap();
+                    assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "client {i}: {line}");
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("every client must be served");
+        }
+        handle.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_even_with_an_idle_connection_open() {
+        // Regression: serve_conn never checked `stop`, so a worker
+        // stuck reading an idle connection outlived shutdown forever.
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 2).unwrap();
+        // Open a connection and send nothing: the handler is parked in
+        // its read loop when shutdown hits.
+        let idle = std::net::TcpStream::connect(handle.addr()).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        let start = Instant::now();
+        handle.shutdown(); // joins acceptor + workers + sweeper
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "shutdown must not hang on the idle connection"
+        );
+        drop(idle);
+    }
+
+    #[test]
+    fn handler_panic_answers_error_and_connection_survives() {
+        use std::io::{BufRead, BufReader, Write};
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 1).unwrap();
+        let mut conn = std::net::TcpStream::connect(handle.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        // Panic while holding the stats lock (poisons it on purpose).
+        writeln!(conn, r#"{{"op":"__test_panic"}}"#).unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("handler panicked"), "{line}");
+        // Same connection, same (sole) worker: still alive.
+        for probe in [r#"{"op":"ping"}"#, r#"{"op":"generate","context_len":32,"decode_len":1}"#] {
+            writeln!(conn, "{probe}").unwrap();
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            let resp = Json::parse(line.trim()).unwrap();
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{probe}: {line}");
+        }
+        // The poisoned stats lock is tolerated, not fatal.
+        writeln!(conn, r#"{{"op":"stats"}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let stats = Json::parse(line.trim()).unwrap();
+        assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true), "{line}");
+        assert_eq!(stats.get("served").unwrap().as_usize(), Some(1));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn streaming_session_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 2).unwrap();
+        let mut conn = std::net::TcpStream::connect(handle.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        writeln!(
+            conn,
+            r#"{{"op":"generate","session":"tcp","context_len":64,"decode_len":3,"stream":true}}"#
+        )
+        .unwrap();
+        let mut lines = Vec::new();
+        for _ in 0..4 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            lines.push(Json::parse(line.trim()).unwrap());
+        }
+        for (i, l) in lines[..3].iter().enumerate() {
+            assert_eq!(l.get("token").unwrap().as_usize(), Some(i), "{l}");
+        }
+        assert_eq!(lines[3].get("done").unwrap().as_bool(), Some(true), "{:?}", lines[3]);
+        assert_eq!(lines[3].get("session").unwrap().as_str(), Some("tcp"));
+        handle.shutdown();
     }
 }
