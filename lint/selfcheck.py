@@ -1,0 +1,504 @@
+#!/usr/bin/env python3
+"""Bootstrap mirror of socket-lint for toolchain-less environments.
+
+The Rust binary (`cargo run -p socket-lint`) is canonical; this script
+re-implements the same lexer + rules so the baseline can be generated
+and the gate exercised in containers that lack cargo. Keep the two in
+lock-step: any rule change lands in both, and `ci.sh` prefers the Rust
+binary whenever cargo exists.
+
+Usage: python3 lint/selfcheck.py [ROOT] [--baseline FILE] [--write-baseline]
+Exit:  0 clean, 1 findings/baseline problems, 2 usage/IO.
+"""
+import sys
+import os
+
+RULES = {
+    "safety-comment", "ordering-rationale", "atomics-allowlist",
+    "hot-path-panic", "hot-path-index", "alloc-in-into",
+    "instant-in-kernel", "waiver-missing-reason", "waiver-unknown-rule",
+}
+ATOMICS_ALLOWLIST = ["util/pool.rs", "metrics/registry.rs", "server/", "server.rs"]
+HOT_PATHS = ["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs",
+             "kvcache/", "kvcache.rs"]
+KERNEL_PATHS = ["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs"]
+ATOMIC_ORDERINGS = {"Relaxed", "SeqCst", "Acquire", "Release", "AcqRel"}
+ORDERING_MARKERS = ["relaxed", "seqcst", "acquire", "release", "ordering"]
+KEYWORDS = {
+    "as", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern",
+    "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
+    "move", "mut", "pub", "ref", "return", "self", "Self", "static", "struct",
+    "super", "trait", "true", "type", "unsafe", "use", "where", "while",
+    "async", "await",
+}
+
+
+def path_in(path, pats):
+    return any(path.startswith(p) if p.endswith("/") else path == p for p in pats)
+
+
+# --- lexer -----------------------------------------------------------------
+# Token: (line, kind, text) with kind in {id, punct, lit, life}.
+# Comment: (line, end_line, text).
+
+def lex(src):
+    toks, comments = [], []
+    i, line, n = 0, 1, len(src)
+
+    def peek(k=0):
+        j = i + k
+        return src[j] if j < n else ""
+
+    while i < n:
+        c = src[i]
+        start = line
+        if c == "\n":
+            line += 1
+            i += 1
+        elif c.isspace():
+            i += 1
+        elif c == "/" and peek(1) == "/":
+            j = src.find("\n", i)
+            j = n if j < 0 else j
+            comments.append((start, start, src[i:j]))
+            i = j
+        elif c == "/" and peek(1) == "*":
+            depth, j = 0, i
+            while j < n:
+                if src[j : j + 2] == "/*":
+                    depth += 1
+                    j += 2
+                elif src[j : j + 2] == "*/":
+                    depth -= 1
+                    j += 2
+                    if depth == 0:
+                        break
+                else:
+                    j += 1
+            text = src[i:j]
+            endl = start + text.count("\n")
+            comments.append((start, endl, text))
+            line = endl
+            i = j
+        elif c == '"':
+            i += 1
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                elif src[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            toks.append((start, "lit", ""))
+        elif c == "'":
+            c1, c2 = peek(1), peek(2)
+            if (c1.isalnum() or c1 == "_") and c2 != "'":
+                i += 1
+                while i < n and (src[i].isalnum() or src[i] == "_"):
+                    i += 1
+                toks.append((start, "life", ""))
+            else:
+                i += 1
+                while i < n:
+                    if src[i] == "\\":
+                        i += 2
+                    elif src[i] == "'":
+                        i += 1
+                        break
+                    else:
+                        i += 1
+                toks.append((start, "lit", ""))
+        elif c in "rb" and _raw_prefix(src, i, n):
+            i, line = _raw_lit(src, i, n, line)
+            toks.append((start, "lit", ""))
+        elif c.isalpha() or c == "_":
+            j = i
+            while j < n and (src[j].isalnum() or src[j] == "_"):
+                j += 1
+            toks.append((start, "id", src[i:j]))
+            i = j
+        elif c.isdigit():
+            j = i
+            while j < n and (src[j].isalnum() or src[j] in "_."):
+                j += 1
+            toks.append((start, "lit", ""))
+            i = j
+        else:
+            toks.append((start, "punct", c))
+            i += 1
+    return toks, comments
+
+
+def _raw_prefix(src, i, n):
+    j = i
+    if src[j] == "b":
+        if j + 1 < n and src[j + 1] in "\"'":
+            return True
+        if j + 1 < n and src[j + 1] == "r":
+            j += 1
+        else:
+            return False
+    if src[j] != "r":
+        return False
+    j += 1
+    while j < n and src[j] == "#":
+        j += 1
+    return j < n and src[j] == '"'
+
+
+def _raw_lit(src, i, n, line):
+    while i < n and src[i] in "rb":
+        i += 1
+    if i < n and src[i] == "'":
+        i += 1
+        while i < n:
+            if src[i] == "\\":
+                i += 2
+            elif src[i] == "'":
+                i += 1
+                break
+            else:
+                i += 1
+        return i, line
+    hashes = 0
+    while i < n and src[i] == "#":
+        hashes += 1
+        i += 1
+    i += 1  # opening quote
+    close = '"' + "#" * hashes
+    j = src.find(close, i)
+    j = n if j < 0 else j + len(close)
+    line += src[i:j].count("\n")
+    return j, line
+
+
+# --- cfg(test) strip + fn spans -------------------------------------------
+
+def match_delim(toks, open_i, oc, cc):
+    depth = 0
+    for j in range(open_i, len(toks)):
+        k, t = toks[j][1], toks[j][2]
+        if k == "punct" and t == oc:
+            depth += 1
+        elif k == "punct" and t == cc:
+            depth -= 1
+            if depth == 0:
+                return j
+    return len(toks) - 1
+
+
+def is_punct(t, c):
+    return t[1] == "punct" and t[2] == c
+
+
+def strip_test(toks):
+    out, i = [], 0
+    while i < len(toks):
+        if is_punct(toks[i], "#") and i + 1 < len(toks) and is_punct(toks[i + 1], "["):
+            close = match_delim(toks, i + 1, "[", "]")
+            attr = toks[i + 2 : close]
+            ids = [t[2] for t in attr if t[1] == "id"]
+            is_test = (ids[:1] == ["test"]) or (
+                ids[:1] == ["cfg"] and "test" in ids and "not" not in ids
+            )
+            if is_test:
+                i = skip_item(toks, close + 1)
+                continue
+            out.extend(toks[i : close + 1])
+            i = close + 1
+            continue
+        out.append(toks[i])
+        i += 1
+    return out
+
+
+def skip_item(toks, i):
+    while i + 1 < len(toks) and is_punct(toks[i], "#") and is_punct(toks[i + 1], "["):
+        i = match_delim(toks, i + 1, "[", "]") + 1
+    while i < len(toks):
+        if is_punct(toks[i], "{"):
+            return match_delim(toks, i, "{", "}") + 1
+        if is_punct(toks[i], ";"):
+            return i + 1
+        i += 1
+    return i
+
+
+def fn_spans(toks):
+    spans = []
+    for i, t in enumerate(toks):
+        if t[1] == "id" and t[2] == "fn" and i + 1 < len(toks) and toks[i + 1][1] == "id":
+            name, j = toks[i + 1][2], i + 2
+            while j < len(toks):
+                if is_punct(toks[j], "{"):
+                    spans.append((name, t[0], j, match_delim(toks, j, "{", "}") + 1))
+                    break
+                if is_punct(toks[j], ";"):
+                    break
+                j += 1
+    return spans
+
+
+def enclosing_fn(spans, idx):
+    best = None
+    for s in spans:
+        if s[2] <= idx < s[3] and (best is None or s[3] - s[2] < best[3] - best[2]):
+            best = s
+    return best
+
+
+# --- comment queries -------------------------------------------------------
+
+def comment_near(comments, line, window, pred):
+    return any(c[0] <= line and c[1] + window >= line and pred(c[2]) for c in comments)
+
+
+def header_block(comments, line):
+    parts, want = [], line
+    for c in reversed(comments):
+        if c[1] >= want:
+            continue
+        if c[1] + 3 >= want:
+            parts.append(c[2])
+            want = c[0]
+        else:
+            break
+    return "\n".join(reversed(parts)).lower()
+
+
+# --- rules -----------------------------------------------------------------
+
+def check_source(path, src):
+    raw_toks, comments = lex(src)
+    toks = strip_test(raw_toks)
+    spans = fn_spans(toks)
+    out = []
+
+    for i, t in enumerate(toks):
+        # safety-comment
+        if t[1] == "id" and t[2] == "unsafe" and i + 1 < len(toks) and is_punct(toks[i + 1], "{"):
+            if not comment_near(comments, t[0], 5, lambda s: "SAFETY:" in s):
+                out.append(("safety-comment", path, t[0], "unsafe block without // SAFETY:"))
+        # ordering
+        if (
+            t[1] == "id" and t[2] == "Ordering"
+            and i + 3 < len(toks)
+            and is_punct(toks[i + 1], ":") and is_punct(toks[i + 2], ":")
+            and toks[i + 3][1] == "id" and toks[i + 3][2] in ATOMIC_ORDERINGS
+        ):
+            variant = toks[i + 3][2]
+            if not path_in(path, ATOMICS_ALLOWLIST):
+                out.append(("atomics-allowlist", path, t[0],
+                            "Ordering::%s outside audited modules" % variant))
+            near = comment_near(
+                comments, t[0], 5,
+                lambda s: any(m in s.lower() for m in ORDERING_MARKERS))
+            if not near:
+                f = enclosing_fn(spans, i)
+                hdr = header_block(comments, f[1]) if f else ""
+                near = any(m in hdr for m in ORDERING_MARKERS)
+            if not near:
+                out.append(("ordering-rationale", path, t[0],
+                            "Ordering::%s with no rationale comment" % variant))
+        # hot-path-panic
+        if path_in(path, HOT_PATHS) and t[1] == "id":
+            if t[2] in ("unwrap", "expect") and i > 0 and is_punct(toks[i - 1], "."):
+                out.append(("hot-path-panic", path, t[0], "panicking call `%s`" % t[2]))
+            if t[2] in ("panic", "unreachable", "todo", "unimplemented") and i + 1 < len(
+                toks
+            ) and is_punct(toks[i + 1], "!"):
+                out.append(("hot-path-panic", path, t[0], "panicking call `%s!`" % t[2]))
+        # hot-path-index
+        if path_in(path, HOT_PATHS) and is_punct(t, "[") and i > 0:
+            p = toks[i - 1]
+            if (p[1] == "id" and p[2] not in KEYWORDS) or (
+                p[1] == "punct" and p[2] in ")]"
+            ):
+                out.append(("hot-path-index", path, t[0], "panicking slice-index syntax"))
+        # instant-in-kernel
+        if (
+            path_in(path, KERNEL_PATHS)
+            and t[1] == "id" and t[2] == "Instant"
+            and i + 3 < len(toks)
+            and is_punct(toks[i + 1], ":") and is_punct(toks[i + 2], ":")
+            and toks[i + 3][1] == "id" and toks[i + 3][2] == "now"
+        ):
+            out.append(("instant-in-kernel", path, t[0], "Instant::now in scoring kernel"))
+
+    # alloc-in-into
+    into = [s for s in spans if s[0].endswith("_into")]
+    for s in into:
+        nested = [g for g in into if g[2] > s[2] and g[3] <= s[3]]
+        for i in range(s[2], s[3]):
+            if any(g[2] <= i < g[3] for g in nested):
+                continue
+            what = alloc_at(toks, i)
+            if what:
+                out.append(("alloc-in-into", path, toks[i][0],
+                            "allocation `%s` inside `%s`" % (what, s[0])))
+
+    # waivers
+    waivers = []
+    for c in comments:
+        for needle, file_wide in (("lint:allow-file(", True), ("lint:allow(", False)):
+            at = c[2].find(needle)
+            if at < 0:
+                continue
+            rest = c[2][at + len(needle):]
+            close = rest.find(")")
+            if close < 0:
+                out.append(("waiver-missing-reason", path, c[0], "malformed waiver"))
+                break
+            names = [r.strip() for r in rest[:close].split(",")]
+            after = rest[close + 1:].lstrip()
+            reason = after[1:].strip() if after.startswith(":") else ""
+            if not reason or reason.startswith("TODO"):
+                out.append(("waiver-missing-reason", path, c[0], "waiver needs a reason"))
+                break
+            bad = [r for r in names if r not in RULES]
+            if bad:
+                for r in bad:
+                    out.append(("waiver-unknown-rule", path, c[0],
+                                "unknown rule `%s`" % r))
+                break
+            for r in names:
+                # Comment plus 3 lines of slack (rustfmt reflow safety).
+                waivers.append((r, None if file_wide else (c[0], c[1] + 3)))
+            break
+
+    def waived(f):
+        return any(
+            w[0] == f[0] and (w[1] is None or w[1][0] <= f[2] <= w[1][1]) for w in waivers
+        )
+
+    out = [f for f in out if not waived(f)]
+    out.sort(key=lambda f: (f[2], f[0]))
+    return out
+
+
+def alloc_at(toks, i):
+    t = toks[i]
+    if t[1] != "id":
+        return None
+    if t[2] in ("Vec", "String", "Box"):
+        if (
+            i + 3 < len(toks)
+            and is_punct(toks[i + 1], ":") and is_punct(toks[i + 2], ":")
+            and toks[i + 3][1] == "id" and toks[i + 3][2] in ("new", "with_capacity", "from")
+        ):
+            return "%s::%s" % (t[2], toks[i + 3][2])
+    if t[2] == "vec" and i + 1 < len(toks) and is_punct(toks[i + 1], "!"):
+        return "vec!"
+    if t[2] in ("collect", "to_vec", "to_owned", "to_string") and i > 0 and is_punct(
+        toks[i - 1], "."
+    ):
+        return ".%s()" % t[2]
+    return None
+
+
+# --- baseline + main -------------------------------------------------------
+
+def parse_baseline(text):
+    entries = []
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split(None, 3)
+        if len(parts) < 4:
+            raise SystemExit("baseline line %d: expected `rule path count reason`" % lineno)
+        rule, path, count, reason = parts[0], parts[1], parts[2], parts[3].strip()
+        if rule not in RULES:
+            raise SystemExit("baseline line %d: unknown rule `%s`" % (lineno, rule))
+        if not count.isdigit() or int(count) == 0:
+            raise SystemExit("baseline line %d: bad count `%s`" % (lineno, count))
+        if not reason or reason.startswith("TODO"):
+            raise SystemExit("baseline line %d: needs a real reason" % lineno)
+        entries.append((rule, path, int(count), reason))
+    return entries
+
+
+def main(argv):
+    root, baseline_path, write = "rust/src", None, False
+    it = iter(argv)
+    for a in it:
+        if a == "--baseline":
+            baseline_path = next(it, None)
+        elif a == "--write-baseline":
+            write = True
+        elif not a.startswith("-"):
+            root = a
+        else:
+            print("usage: selfcheck.py [ROOT] [--baseline FILE] [--write-baseline]")
+            return 2
+
+    findings = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for name in sorted(filenames):
+            if not name.endswith(".rs"):
+                continue
+            p = os.path.join(dirpath, name)
+            rel = os.path.relpath(p, root).replace(os.sep, "/")
+            with open(p, encoding="utf-8") as fh:
+                findings.extend(check_source(rel, fh.read()))
+
+    if write:
+        counts = {}
+        for f in findings:
+            counts[(f[0], f[1])] = counts.get((f[0], f[1]), 0) + 1
+        old = {}
+        if baseline_path and os.path.exists(baseline_path):
+            try:
+                for e in parse_baseline(open(baseline_path, encoding="utf-8").read()):
+                    old[(e[0], e[1])] = e[3]
+            except SystemExit:
+                pass
+        lines = [
+            "# socket-lint baseline: pre-existing debt, enumerated and ratcheted.",
+            "# Format: rule path count reason. Counts may only go down; every",
+            "# entry needs a real (non-TODO) reason or the gate fails.",
+        ]
+        for (rule, path), n in sorted(counts.items()):
+            reason = old.get((rule, path), "TODO: explain or fix")
+            lines.append("%s %s %d %s" % (rule, path, n, reason))
+        text = "\n".join(lines) + "\n"
+        if baseline_path:
+            with open(baseline_path, "w", encoding="utf-8") as fh:
+                fh.write(text)
+            print("selfcheck: wrote %s (%d findings)" % (baseline_path, len(findings)))
+        else:
+            sys.stdout.write(text)
+        return 0
+
+    budget = {}
+    if baseline_path and os.path.exists(baseline_path):
+        for rule, path, count, _ in parse_baseline(
+            open(baseline_path, encoding="utf-8").read()
+        ):
+            budget[(rule, path)] = budget.get((rule, path), 0) + count
+
+    bad = 0
+    for f in findings:
+        key = (f[0], f[1])
+        if budget.get(key, 0) > 0:
+            budget[key] -= 1
+            continue
+        print("%s:%d: [%s] %s" % (f[1], f[2], f[0], f[3]))
+        bad += 1
+    for (rule, path), left in sorted(budget.items()):
+        if left > 0:
+            print("stale baseline: %s in %s overstates debt by %d" % (rule, path, left))
+            bad += 1
+    if bad:
+        print("selfcheck: %d problem(s)" % bad)
+        return 1
+    print("selfcheck: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

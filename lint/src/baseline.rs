@@ -1,0 +1,218 @@
+//! Baseline ("ratchet") file support: pre-existing debt is enumerated
+//! per `(rule, path)` with a count and a mandatory reason, so new debt
+//! fails CI immediately while old debt is visible and monotonically
+//! burned down.
+//!
+//! Format (one entry per line, `#` comments and blanks ignored):
+//!
+//! ```text
+//! rule path count reason text until end of line
+//! ```
+//!
+//! Semantics when checking:
+//! - findings are matched against entries; up to `count` findings per
+//!   `(rule, path)` are suppressed;
+//! - findings beyond `count` are NEW debt → reported, non-zero exit;
+//! - fewer findings than `count` is a STALE entry → also non-zero exit
+//!   (the ratchet: fixing debt must shrink the baseline in the same
+//!   change, so the file never overstates reality);
+//! - an entry with an empty or `TODO` reason is invalid → non-zero
+//!   exit (debt must be explained, not grandfathered).
+//!
+//! `--write-baseline` regenerates counts from the current tree while
+//! preserving reasons of surviving entries; brand-new entries get a
+//! `TODO` reason that the checker rejects until a human writes one.
+
+use crate::rules::{rule_exists, Finding};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One parsed baseline entry.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub rule: String,
+    pub path: String,
+    pub count: usize,
+    pub reason: String,
+}
+
+/// A problem with the baseline file itself (bad syntax, bad reason,
+/// stale count) — all are CI failures distinct from code findings.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineError(pub String);
+
+pub fn parse(text: &str) -> Result<Vec<Entry>, BaselineError> {
+    let mut entries = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lineno = i + 1;
+        // First three whitespace-delimited fields; the reason is the
+        // raw remainder (runs of spaces inside it are preserved).
+        let mut rest = line;
+        let mut take = || {
+            let r = rest.trim_start();
+            let end = r.find(char::is_whitespace).unwrap_or(r.len());
+            let (tok, tail) = r.split_at(end);
+            rest = tail;
+            tok
+        };
+        let (rule, path, count) = (take(), take(), take());
+        let reason = rest.trim();
+        if rule.is_empty() || path.is_empty() || count.is_empty() {
+            return Err(BaselineError(format!(
+                "baseline line {lineno}: expected `rule path count reason`, got `{line}`"
+            )));
+        }
+        if !rule_exists(rule) {
+            return Err(BaselineError(format!(
+                "baseline line {lineno}: unknown rule `{rule}`"
+            )));
+        }
+        let count: usize = count.parse().map_err(|_| {
+            BaselineError(format!("baseline line {lineno}: bad count `{count}`"))
+        })?;
+        if count == 0 {
+            return Err(BaselineError(format!(
+                "baseline line {lineno}: count 0 — delete the entry instead"
+            )));
+        }
+        if reason.is_empty() || reason.starts_with("TODO") {
+            return Err(BaselineError(format!(
+                "baseline line {lineno}: entry for {rule} in {path} needs a real reason \
+                 (found `{reason}`)"
+            )));
+        }
+        entries.push(Entry {
+            rule: rule.to_string(),
+            path: path.to_string(),
+            count,
+            reason: reason.to_string(),
+        });
+    }
+    Ok(entries)
+}
+
+/// Outcome of applying a baseline to a finding set.
+pub struct Applied {
+    /// Findings NOT covered by the baseline (new debt).
+    pub fresh: Vec<Finding>,
+    /// Baseline problems: stale entries whose debt shrank.
+    pub stale: Vec<BaselineError>,
+}
+
+pub fn apply(findings: Vec<Finding>, entries: &[Entry]) -> Applied {
+    let mut budget: BTreeMap<(&str, &str), usize> =
+        entries.iter().map(|e| ((e.rule.as_str(), e.path.as_str()), e.count)).collect();
+    let mut fresh = Vec::new();
+    for f in findings {
+        match budget.get_mut(&(f.rule, f.path.as_str())) {
+            Some(left) if *left > 0 => *left -= 1,
+            _ => fresh.push(f),
+        }
+    }
+    let stale = budget
+        .iter()
+        .filter(|(_, left)| **left > 0)
+        .map(|((rule, path), left)| {
+            BaselineError(format!(
+                "stale baseline: {rule} in {path} overstates debt by {left} — \
+                 ratchet the count down (or delete the entry)"
+            ))
+        })
+        .collect();
+    Applied { fresh, stale }
+}
+
+/// Render a fresh baseline from `findings`, keeping reasons from
+/// `old` where the `(rule, path)` pair survives.
+pub fn render(findings: &[Finding], old: &[Entry]) -> String {
+    let mut counts: BTreeMap<(&str, &str), usize> = BTreeMap::new();
+    for f in findings {
+        *counts.entry((f.rule, f.path.as_str())).or_insert(0) += 1;
+    }
+    let mut out = String::from(
+        "# socket-lint baseline: pre-existing debt, enumerated and ratcheted.\n\
+         # Format: rule path count reason. Counts may only go down; every\n\
+         # entry needs a real (non-TODO) reason or the gate fails.\n",
+    );
+    for ((rule, path), n) in &counts {
+        let reason = old
+            .iter()
+            .find(|e| e.rule == *rule && e.path == *path)
+            .map(|e| e.reason.as_str())
+            .unwrap_or("TODO: explain or fix");
+        let _ = writeln!(out, "{rule} {path} {n} {reason}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, path: &str, line: u32) -> Finding {
+        Finding { rule, path: path.to_string(), line, msg: String::new() }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let text = "# comment\n\nhot-path-index lsh/soft.rs 3 tight kernels, bounds asserted at entry\n";
+        let e = parse(text).unwrap();
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].rule, "hot-path-index");
+        assert_eq!(e[0].count, 3);
+        assert!(e[0].reason.starts_with("tight kernels"));
+    }
+
+    #[test]
+    fn parse_rejects_bad_entries() {
+        assert!(parse("hot-path-index lsh/soft.rs 3").is_err(), "missing reason");
+        assert!(parse("hot-path-index lsh/soft.rs 3 TODO: later").is_err(), "TODO reason");
+        assert!(parse("no-such-rule lsh/soft.rs 3 why").is_err(), "unknown rule");
+        assert!(parse("hot-path-index lsh/soft.rs zero why").is_err(), "bad count");
+        assert!(parse("hot-path-index lsh/soft.rs 0 why").is_err(), "zero count");
+    }
+
+    #[test]
+    fn apply_budget_and_staleness() {
+        let entries = parse("hot-path-index lsh/soft.rs 2 audited kernels\n").unwrap();
+        // Exactly covered.
+        let a = apply(
+            vec![finding("hot-path-index", "lsh/soft.rs", 1), finding("hot-path-index", "lsh/soft.rs", 2)],
+            &entries,
+        );
+        assert!(a.fresh.is_empty() && a.stale.is_empty());
+        // One extra → fresh debt.
+        let b = apply(
+            vec![
+                finding("hot-path-index", "lsh/soft.rs", 1),
+                finding("hot-path-index", "lsh/soft.rs", 2),
+                finding("hot-path-index", "lsh/soft.rs", 3),
+            ],
+            &entries,
+        );
+        assert_eq!(b.fresh.len(), 1);
+        // One fewer → stale ratchet.
+        let c = apply(vec![finding("hot-path-index", "lsh/soft.rs", 1)], &entries);
+        assert!(c.fresh.is_empty());
+        assert_eq!(c.stale.len(), 1);
+        // Different path never borrows the budget.
+        let d = apply(vec![finding("hot-path-index", "lsh/bnb.rs", 1)], &entries);
+        assert_eq!(d.fresh.len(), 1);
+    }
+
+    #[test]
+    fn render_preserves_reasons() {
+        let old = parse("hot-path-index lsh/soft.rs 5 audited kernels\n").unwrap();
+        let findings = vec![
+            finding("hot-path-index", "lsh/soft.rs", 1),
+            finding("hot-path-panic", "lsh/bnb.rs", 9),
+        ];
+        let text = render(&findings, &old);
+        assert!(text.contains("hot-path-index lsh/soft.rs 1 audited kernels"));
+        assert!(text.contains("hot-path-panic lsh/bnb.rs 1 TODO: explain or fix"));
+    }
+}

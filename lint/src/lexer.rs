@@ -1,0 +1,388 @@
+//! A small, dependency-free Rust lexer — just enough fidelity for the
+//! rule engine: identifiers, punctuation, and literals with line
+//! numbers, plus the full comment stream (the rules read `// SAFETY:`
+//! and `// lint:allow(...)` annotations out of comments).
+//!
+//! Deliberately NOT a full Rust grammar. The hard parts it does get
+//! right, because getting them wrong corrupts every downstream rule:
+//!
+//! - line (`//`) and nested block (`/* /* */ */`) comments, including
+//!   doc comments (`///`, `//!`, `/** */`) — captured, not discarded;
+//! - string, raw-string (`r#"..."#`, any number of `#`s), byte-string
+//!   and char literals — brackets/braces inside them must not confuse
+//!   token matching;
+//! - char literal vs. lifetime disambiguation (`'a'` vs `'a`);
+//! - numeric literals, so `0..10` or `1.5e3` never masquerade as
+//!   identifiers or stray punctuation that rules key on.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tok {
+    /// 1-based source line.
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (rules distinguish keywords themselves).
+    Ident(String),
+    /// Single punctuation character (`::` arrives as two `:` toks).
+    Punct(char),
+    /// String/char/byte/numeric literal. Payload is dropped — no rule
+    /// inspects literal contents, only their presence.
+    Literal,
+    /// A lifetime such as `'a` or `'_` (distinct from a char literal).
+    Lifetime,
+}
+
+impl Tok {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.ident() == Some(s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+}
+
+/// One comment (line or block). Block comments may span lines.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line where the comment starts.
+    pub line: u32,
+    /// 1-based line where the comment ends (== `line` for `//`).
+    pub end_line: u32,
+    /// Raw text including the `//` / `/*` sigils.
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus the parallel comment stream.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+pub fn lex(src: &str) -> Lexed {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Lexed::default() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push_tok(&mut self, line: u32, kind: TokKind) {
+        self.out.toks.push(Tok { line, kind });
+    }
+
+    fn run(mut self) -> Lexed {
+        while let Some(c) = self.peek(0) {
+            let line = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => self.string_lit(line),
+                '\'' => self.char_or_lifetime(line),
+                'r' | 'b' if self.raw_or_byte_prefix() => self.raw_or_byte_lit(line),
+                c if c.is_alphabetic() || c == '_' => self.ident(line),
+                c if c.is_ascii_digit() => self.number(line),
+                _ => {
+                    self.bump();
+                    self.push_tok(line, TokKind::Punct(c));
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.out.comments.push(Comment { line, end_line: line, text });
+    }
+
+    fn block_comment(&mut self) {
+        let line = self.line;
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.out.comments.push(Comment { line, end_line: self.line, text });
+    }
+
+    /// Consume a `"..."` literal, honoring `\"` escapes.
+    fn string_lit(&mut self, line: u32) {
+        self.bump(); // opening quote
+        while let Some(c) = self.bump() {
+            match c {
+                '\\' => {
+                    self.bump();
+                }
+                '"' => break,
+                _ => {}
+            }
+        }
+        self.push_tok(line, TokKind::Literal);
+    }
+
+    /// `'a'` (char literal) vs `'a` / `'static` (lifetime). A quote
+    /// followed by an identifier char is a lifetime unless the very
+    /// next char closes the quote (`'x'`); `'\...'` is always a char.
+    fn char_or_lifetime(&mut self, line: u32) {
+        let c1 = self.peek(1);
+        let c2 = self.peek(2);
+        let is_lifetime = match c1 {
+            Some(c) if c.is_alphanumeric() || c == '_' => c2 != Some('\''),
+            _ => false,
+        };
+        self.bump(); // the quote
+        if is_lifetime {
+            while let Some(c) = self.peek(0) {
+                if c.is_alphanumeric() || c == '_' {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+            self.push_tok(line, TokKind::Lifetime);
+        } else {
+            while let Some(c) = self.bump() {
+                match c {
+                    '\\' => {
+                        self.bump();
+                    }
+                    '\'' => break,
+                    _ => {}
+                }
+            }
+            self.push_tok(line, TokKind::Literal);
+        }
+    }
+
+    /// Is the current `r`/`b` the prefix of a raw/byte string or byte
+    /// char (`r"`, `r#"`, `br"`, `b"`, `b'`, `rb…` is not Rust)?
+    fn raw_or_byte_prefix(&self) -> bool {
+        let c0 = self.peek(0);
+        match c0 {
+            Some('r') => {
+                // r"..." or r#"..."# (any number of #s). r#ident is a
+                // raw identifier, not a string — require `"` after #s.
+                let mut i = 1;
+                while self.peek(i) == Some('#') {
+                    i += 1;
+                }
+                self.peek(i) == Some('"')
+            }
+            Some('b') => match self.peek(1) {
+                Some('"') | Some('\'') => true,
+                Some('r') => {
+                    let mut i = 2;
+                    while self.peek(i) == Some('#') {
+                        i += 1;
+                    }
+                    self.peek(i) == Some('"')
+                }
+                _ => false,
+            },
+            _ => false,
+        }
+    }
+
+    fn raw_or_byte_lit(&mut self, line: u32) {
+        // Consume the prefix letters.
+        while matches!(self.peek(0), Some('r') | Some('b')) {
+            self.bump();
+        }
+        if self.peek(0) == Some('\'') {
+            // b'x' byte char — same rules as a char literal body.
+            self.bump();
+            while let Some(c) = self.bump() {
+                match c {
+                    '\\' => {
+                        self.bump();
+                    }
+                    '\'' => break,
+                    _ => {}
+                }
+            }
+            self.push_tok(line, TokKind::Literal);
+            return;
+        }
+        // Count #s, then consume until `"` followed by that many #s.
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                for i in 0..hashes {
+                    if self.peek(i) != Some('#') {
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            // No escapes in raw strings.
+        }
+        self.push_tok(line, TokKind::Literal);
+    }
+
+    fn ident(&mut self, line: u32) {
+        let mut s = String::new();
+        while let Some(c) = self.peek(0) {
+            if c.is_alphanumeric() || c == '_' {
+                s.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push_tok(line, TokKind::Ident(s));
+    }
+
+    /// Numbers are consumed greedily including `_`, `.`, hex digits and
+    /// exponent letters; `0..10` therefore lexes as one Literal, which
+    /// is fine — no rule keys on numeric internals, and it keeps range
+    /// dots from surfacing as stray puncts before `[`.
+    fn number(&mut self, line: u32) {
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' || c == '.' {
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push_tok(line, TokKind::Literal);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(l: &Lexed) -> Vec<&str> {
+        l.toks.iter().filter_map(|t| t.ident()).collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let l = lex("fn main() {\n    let x = 1;\n}\n");
+        assert_eq!(idents(&l), vec!["fn", "main", "let", "x"]);
+        let x = l.toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 2);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("// SAFETY: fine\nunsafe { }\n/* block\nspans */ let y = 0;");
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("SAFETY:"));
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 3);
+        assert_eq!(l.comments[1].end_line, 4);
+        assert_eq!(idents(&l), vec!["unsafe", "let", "y"]);
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let l = lex("/* outer /* inner */ still */ fn f() {}");
+        assert_eq!(l.comments.len(), 1);
+        assert!(l.comments[0].text.contains("inner"));
+        assert_eq!(idents(&l), vec!["fn", "f"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let l = lex(r#"let s = "unsafe { unwrap() } // no";"#);
+        assert_eq!(idents(&l), vec!["let", "s"]);
+        assert!(l.comments.is_empty());
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex(r###"let s = r#"quote " inside"#; let t = 1;"###);
+        assert_eq!(idents(&l), vec!["let", "s", "let", "t"]);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let lifetimes = l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        assert_eq!(lifetimes, 2);
+        let lits = l.toks.iter().filter(|t| t.kind == TokKind::Literal).count();
+        assert_eq!(lits, 2);
+    }
+
+    #[test]
+    fn numbers_swallow_range_dots() {
+        let l = lex("for i in 0..10 { a[i] += 1.5e3; }");
+        // `0..10` is one literal; the only '[' is the indexing one.
+        let brackets = l.toks.iter().filter(|t| t.is_punct('[')).count();
+        assert_eq!(brackets, 1);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let l = lex(r##"let a = b"raw"; let b2 = b'\n'; let c = br#"x"#;"##);
+        assert_eq!(idents(&l), vec!["let", "a", "let", "b2", "let", "c"]);
+    }
+}

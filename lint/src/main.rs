@@ -1,0 +1,191 @@
+//! socket-lint: repo-native static analysis for SOCKET's rust/src.
+//!
+//! Walks a source root, lexes every `.rs` file, runs the invariant
+//! rules (see `rules.rs` and `rust/docs/ANALYSIS.md`), subtracts the
+//! checked-in baseline, and exits non-zero on any unwaived finding,
+//! stale baseline entry, or malformed waiver.
+//!
+//! ```text
+//! socket-lint [ROOT] [--baseline FILE] [--write-baseline] [--rules] [--quiet]
+//! ```
+//!
+//! Exit codes: 0 clean · 1 findings/baseline problems · 2 usage/IO.
+
+mod baseline;
+mod lexer;
+mod rules;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Args {
+    root: PathBuf,
+    baseline: Option<PathBuf>,
+    write_baseline: bool,
+    list_rules: bool,
+    quiet: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: PathBuf::from("rust/src"),
+        baseline: None,
+        write_baseline: false,
+        list_rules: false,
+        quiet: false,
+    };
+    let mut it = std::env::args().skip(1);
+    let mut root_set = false;
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--baseline" => {
+                let v = it.next().ok_or("--baseline needs a file path")?;
+                args.baseline = Some(PathBuf::from(v));
+            }
+            "--write-baseline" => args.write_baseline = true,
+            "--rules" => args.list_rules = true,
+            "--quiet" | "-q" => args.quiet = true,
+            "--help" | "-h" => {
+                return Err("usage: socket-lint [ROOT] [--baseline FILE] [--write-baseline] \
+                            [--rules] [--quiet]"
+                    .into())
+            }
+            other if !other.starts_with('-') && !root_set => {
+                args.root = PathBuf::from(other);
+                root_set = true;
+            }
+            other => return Err(format!("unknown argument `{other}` (try --help)")),
+        }
+    }
+    Ok(args)
+}
+
+/// Collect `.rs` files under `root`, depth-first, sorted for
+/// deterministic output.
+fn walk(root: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(root)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root)
+        .unwrap_or(p)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    if args.list_rules {
+        for (id, desc) in rules::RULES {
+            println!("{id:<22} {desc}");
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let mut files = Vec::new();
+    if let Err(e) = walk(&args.root, &mut files) {
+        eprintln!("socket-lint: cannot walk {}: {e}", args.root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut findings = Vec::new();
+    for p in &files {
+        let src = match std::fs::read_to_string(p) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("socket-lint: cannot read {}: {e}", p.display());
+                return ExitCode::from(2);
+            }
+        };
+        findings.extend(rules::check_source(&rel_path(&args.root, p), &src));
+    }
+
+    // Load the baseline (parse errors are fatal — a bad baseline must
+    // never silently grandfather debt).
+    let old_entries = match &args.baseline {
+        Some(bp) if bp.exists() => match std::fs::read_to_string(bp) {
+            Ok(text) => match baseline::parse(&text) {
+                Ok(e) => e,
+                Err(err) => {
+                    // --write-baseline may proceed from a baseline with
+                    // TODO reasons (it is how reasons get filled in);
+                    // checking may not.
+                    if args.write_baseline {
+                        Vec::new()
+                    } else {
+                        eprintln!("socket-lint: {}", err.0);
+                        return ExitCode::from(1);
+                    }
+                }
+            },
+            Err(e) => {
+                eprintln!("socket-lint: cannot read baseline {}: {e}", bp.display());
+                return ExitCode::from(2);
+            }
+        },
+        _ => Vec::new(),
+    };
+
+    if args.write_baseline {
+        let text = baseline::render(&findings, &old_entries);
+        match &args.baseline {
+            Some(bp) => {
+                if let Err(e) = std::fs::write(bp, text) {
+                    eprintln!("socket-lint: cannot write {}: {e}", bp.display());
+                    return ExitCode::from(2);
+                }
+                println!(
+                    "socket-lint: wrote {} ({} findings enumerated)",
+                    bp.display(),
+                    findings.len()
+                );
+            }
+            None => print!("{text}"),
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let applied = baseline::apply(findings, &old_entries);
+    let n_files = files.len();
+    let mut bad = 0usize;
+    for f in &applied.fresh {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+        bad += 1;
+    }
+    for s in &applied.stale {
+        println!("{}", s.0);
+        bad += 1;
+    }
+    if bad > 0 {
+        println!(
+            "socket-lint: {bad} problem(s) across {n_files} files \
+             (waive with `// lint:allow(rule): reason` or fix; see rust/docs/ANALYSIS.md)"
+        );
+        return ExitCode::from(1);
+    }
+    if !args.quiet {
+        println!(
+            "socket-lint: clean ({n_files} files, {} baseline entries)",
+            old_entries.len()
+        );
+    }
+    ExitCode::SUCCESS
+}

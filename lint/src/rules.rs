@@ -1,0 +1,719 @@
+//! The rule engine: walks the lexed token/comment streams of one file
+//! and emits findings. Every rule is a repo invariant that PRs 4–6
+//! established by review and that no compiler pass checks:
+//!
+//! | rule                | invariant                                             |
+//! |---------------------|-------------------------------------------------------|
+//! | `safety-comment`    | every `unsafe {` block carries a `// SAFETY:` comment |
+//! | `ordering-rationale`| every atomic `Ordering::*` site carries or inherits a  |
+//! |                     | comment naming the ordering and why it suffices        |
+//! | `atomics-allowlist` | atomics only in modules audited for lock-free use      |
+//! | `hot-path-panic`    | no `unwrap`/`expect`/`panic!`-family in hot modules    |
+//! | `hot-path-index`    | no panicking slice-index syntax in hot modules         |
+//! | `alloc-in-into`     | `*_into` functions (zero-alloc contract) never allocate|
+//! | `instant-in-kernel` | scoring kernels never read the clock                   |
+//!
+//! Waivers: `// lint:allow(rule): reason` covers the next (or same)
+//! line; `// lint:allow-file(rule): reason` covers the whole file. A
+//! waiver without a reason is itself a finding
+//! (`waiver-missing-reason`), as is one naming an unknown rule.
+//!
+//! Test code is exempt: items under `#[cfg(test)]` / `#[test]` are
+//! stripped from the token stream before rules run (`cfg(not(test))`
+//! is production code and is kept).
+
+use crate::lexer::{lex, Comment, Lexed, Tok, TokKind};
+
+/// Rule ids + one-line descriptions (also the `--rules` listing).
+pub const RULES: &[(&str, &str)] = &[
+    ("safety-comment", "unsafe block without a // SAFETY: rationale within 5 lines"),
+    ("ordering-rationale", "atomic Ordering:: site with no ordering rationale comment in reach"),
+    ("atomics-allowlist", "atomic Ordering:: site outside the audited lock-free modules"),
+    ("hot-path-panic", "unwrap/expect/panic!-family call in a hot-path module"),
+    ("hot-path-index", "panicking slice-index syntax in a hot-path module"),
+    ("alloc-in-into", "allocation token inside a *_into (zero-alloc contract) function"),
+    ("instant-in-kernel", "Instant::now in a scoring-kernel module"),
+    ("waiver-missing-reason", "lint:allow waiver without a reason after the colon"),
+    ("waiver-unknown-rule", "lint:allow waiver naming a rule that does not exist"),
+];
+
+pub fn rule_exists(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+/// One finding, pre-waiver.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: &'static str,
+    /// Path relative to the scanned root, forward slashes.
+    pub path: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Modules audited for lock-free atomics (prefix or exact match on the
+/// root-relative path). Everything else must route through these or
+/// carry an explicit `lint:allow-file(atomics-allowlist)` waiver.
+const ATOMICS_ALLOWLIST: &[&str] = &["util/pool.rs", "metrics/registry.rs", "server/", "server.rs"];
+
+/// Hot-path modules: the decode/scoring path where a panic aborts a
+/// serving turn and an allocation shows up in tail latency.
+const HOT_PATHS: &[&str] = &["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs", "kvcache/", "kvcache.rs"];
+
+/// Scoring-kernel modules: no clock reads (timing lives in the bench
+/// and serving layers, never inside the kernels being timed).
+const KERNEL_PATHS: &[&str] = &["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs"];
+
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "SeqCst", "Acquire", "Release", "AcqRel"];
+
+/// Comment markers accepted as an ordering rationale.
+const ORDERING_MARKERS: &[&str] = &["relaxed", "seqcst", "acquire", "release", "ordering"];
+
+fn path_in(path: &str, set: &[&str]) -> bool {
+    set.iter().any(|p| {
+        if p.ends_with('/') {
+            path.starts_with(p)
+        } else {
+            path == *p
+        }
+    })
+}
+
+/// Check one file's source; returns findings sorted by line (waivers
+/// already applied; waiver-syntax findings included).
+pub fn check_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let toks = strip_test_code(&lexed.toks);
+    let fns = fn_spans(&toks);
+    let ctx = Ctx { path: rel_path, toks: &toks, comments: &lexed.comments, fns: &fns };
+
+    let mut findings = Vec::new();
+    rule_safety_comment(&ctx, &mut findings);
+    rule_ordering(&ctx, &mut findings);
+    rule_hot_path_panic(&ctx, &mut findings);
+    rule_hot_path_index(&ctx, &mut findings);
+    rule_alloc_in_into(&ctx, &mut findings);
+    rule_instant_in_kernel(&ctx, &mut findings);
+
+    let waivers = parse_waivers(rel_path, &lexed.comments, &mut findings);
+    findings.retain(|f| !waivers.covers(f));
+    findings.sort_by_key(|f| (f.line, f.rule));
+    findings
+}
+
+struct Ctx<'a> {
+    path: &'a str,
+    toks: &'a [Tok],
+    comments: &'a [Comment],
+    fns: &'a [FnSpan],
+}
+
+// ---------------------------------------------------------------------------
+// cfg(test) stripping
+// ---------------------------------------------------------------------------
+
+/// Drop items gated behind `#[cfg(test)]` / `#[test]` from the token
+/// stream. `#[cfg(not(test))]` is kept — that IS the production code.
+pub fn strip_test_code(toks: &[Tok]) -> Vec<Tok> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if toks[i].is_punct('#')
+            && i + 1 < toks.len()
+            && toks[i + 1].is_punct('[')
+        {
+            let close = match_delim(toks, i + 1, '[', ']');
+            if attr_is_test(&toks[i + 2..close]) {
+                i = skip_item(toks, close + 1);
+                continue;
+            }
+            out.extend_from_slice(&toks[i..=close.min(toks.len() - 1)]);
+            i = close + 1;
+            continue;
+        }
+        out.push(toks[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Is this attribute body (`test`, `cfg(test)`, `cfg(any(test, ...))`)
+/// a test gate? `not` anywhere means the cfg keeps production code.
+fn attr_is_test(attr: &[Tok]) -> bool {
+    let first = attr.first().and_then(|t| t.ident());
+    match first {
+        Some("test") => true,
+        Some("cfg") => {
+            attr.iter().any(|t| t.is_ident("test")) && !attr.iter().any(|t| t.is_ident("not"))
+        }
+        _ => false,
+    }
+}
+
+/// Index just past the item starting at `i`: skips further attributes,
+/// then consumes through the first balanced `{...}` body, or through a
+/// `;` if one appears first (use decls, trait method signatures).
+fn skip_item(toks: &[Tok], mut i: usize) -> usize {
+    // Further attributes on the same item.
+    while i + 1 < toks.len() && toks[i].is_punct('#') && toks[i + 1].is_punct('[') {
+        i = match_delim(toks, i + 1, '[', ']') + 1;
+    }
+    while i < toks.len() {
+        if toks[i].is_punct('{') {
+            return match_delim(toks, i, '{', '}') + 1;
+        }
+        if toks[i].is_punct(';') {
+            return i + 1;
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Index of the delimiter closing the one at `open` (which must hold
+/// `open_c`). Clamps to the last token on unbalanced input.
+fn match_delim(toks: &[Tok], open: usize, open_c: char, close_c: char) -> usize {
+    let mut depth = 0usize;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(open_c) {
+            depth += 1;
+        } else if t.is_punct(close_c) {
+            depth -= 1;
+            if depth == 0 {
+                return j;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+// ---------------------------------------------------------------------------
+// fn spans
+// ---------------------------------------------------------------------------
+
+/// A function item: name, the line of its `fn` keyword, and the token
+/// range of its body (for "inside fn X" queries). Nested fns produce
+/// nested spans; lookups pick the innermost.
+#[derive(Debug)]
+pub struct FnSpan {
+    pub name: String,
+    pub fn_line: u32,
+    pub body: std::ops::Range<usize>,
+}
+
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let Some(name) = toks.get(i + 1).and_then(|t| t.ident()) else { continue };
+        // Body = first `{` before any top-level `;` (a `;` first means
+        // a bodyless trait-method signature).
+        let mut j = i + 2;
+        let mut body = None;
+        while j < toks.len() {
+            if toks[j].is_punct('{') {
+                body = Some(j..match_delim(toks, j, '{', '}') + 1);
+                break;
+            }
+            if toks[j].is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if let Some(body) = body {
+            spans.push(FnSpan { name: name.to_string(), fn_line: toks[i].line, body });
+        }
+    }
+    spans
+}
+
+/// Innermost fn span containing token index `idx`.
+fn enclosing_fn<'a>(fns: &'a [FnSpan], idx: usize) -> Option<&'a FnSpan> {
+    fns.iter()
+        .filter(|f| f.body.contains(&idx))
+        .min_by_key(|f| f.body.end - f.body.start)
+}
+
+// ---------------------------------------------------------------------------
+// comment queries
+// ---------------------------------------------------------------------------
+
+/// Does any comment ending within `window` lines above (or trailing on)
+/// `line` satisfy `pred`?
+fn comment_near(comments: &[Comment], line: u32, window: u32, pred: impl Fn(&str) -> bool) -> bool {
+    comments.iter().any(|c| {
+        c.line <= line && c.end_line + window >= line && pred(&c.text)
+    })
+}
+
+/// The contiguous comment block directly above `line` (doc comment
+/// lines chain; up to 2 intervening non-comment lines — attributes —
+/// are tolerated between the block and `line`). Joined text, lowercased.
+fn header_block(comments: &[Comment], line: u32) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut want = line;
+    for c in comments.iter().rev() {
+        if c.end_line >= want {
+            continue; // trailing or below
+        }
+        if c.end_line + 3 >= want {
+            parts.push(&c.text);
+            want = c.line;
+        } else if c.end_line < want {
+            break;
+        }
+    }
+    parts.reverse();
+    parts.join("\n").to_lowercase()
+}
+
+// ---------------------------------------------------------------------------
+// the rules
+// ---------------------------------------------------------------------------
+
+fn rule_safety_comment(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        // Only `unsafe {` blocks; `unsafe fn`/`unsafe impl` are covered
+        // by their own doc contracts and by unsafe_op_in_unsafe_fn.
+        if !matches!(ctx.toks.get(i + 1), Some(n) if n.is_punct('{')) {
+            continue;
+        }
+        let ok = comment_near(ctx.comments, t.line, 5, |text| text.contains("SAFETY:"));
+        if !ok {
+            out.push(Finding {
+                rule: "safety-comment",
+                path: ctx.path.to_string(),
+                line: t.line,
+                msg: "unsafe block without a // SAFETY: comment within 5 lines".into(),
+            });
+        }
+    }
+}
+
+fn rule_ordering(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for i in 0..ctx.toks.len() {
+        let Some(variant) = atomic_ordering_at(ctx.toks, i) else { continue };
+        let line = ctx.toks[i].line;
+        if !path_in(ctx.path, ATOMICS_ALLOWLIST) {
+            out.push(Finding {
+                rule: "atomics-allowlist",
+                path: ctx.path.to_string(),
+                line,
+                msg: format!(
+                    "Ordering::{variant} outside the audited lock-free modules ({})",
+                    ATOMICS_ALLOWLIST.join(", ")
+                ),
+            });
+        }
+        let near = comment_near(ctx.comments, line, 5, |text| {
+            let lower = text.to_lowercase();
+            ORDERING_MARKERS.iter().any(|m| lower.contains(m))
+        });
+        let inherited = near
+            || enclosing_fn(ctx.fns, i).is_some_and(|f| {
+                let hdr = header_block(ctx.comments, f.fn_line);
+                ORDERING_MARKERS.iter().any(|m| hdr.contains(m))
+            });
+        if !inherited {
+            out.push(Finding {
+                rule: "ordering-rationale",
+                path: ctx.path.to_string(),
+                line,
+                msg: format!(
+                    "Ordering::{variant} with no ordering rationale in a nearby comment \
+                     or the enclosing fn's header"
+                ),
+            });
+        }
+    }
+}
+
+/// `Ordering :: <atomic variant>` at token `i` (filters out
+/// `std::cmp::Ordering::Equal` and friends by variant name).
+fn atomic_ordering_at(toks: &[Tok], i: usize) -> Option<&str> {
+    if !toks[i].is_ident("Ordering") {
+        return None;
+    }
+    if !(toks.get(i + 1)?.is_punct(':') && toks.get(i + 2)?.is_punct(':')) {
+        return None;
+    }
+    let v = toks.get(i + 3)?.ident()?;
+    ATOMIC_ORDERINGS.contains(&v).then_some(v)
+}
+
+fn rule_hot_path_panic(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !path_in(ctx.path, HOT_PATHS) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        let Some(id) = t.ident() else { continue };
+        let hit = match id {
+            // `.unwrap()` / `.expect(...)` — method calls only, so
+            // `unwrap_or*` (distinct idents) never match.
+            "unwrap" | "expect" => i > 0 && ctx.toks[i - 1].is_punct('.'),
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                matches!(ctx.toks.get(i + 1), Some(n) if n.is_punct('!'))
+            }
+            _ => false,
+        };
+        if hit {
+            out.push(Finding {
+                rule: "hot-path-panic",
+                path: ctx.path.to_string(),
+                line: t.line,
+                msg: format!("panicking call `{id}` in hot-path module"),
+            });
+        }
+    }
+}
+
+fn rule_hot_path_index(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !path_in(ctx.path, HOT_PATHS) {
+        return;
+    }
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if !t.is_punct('[') || i == 0 {
+            continue;
+        }
+        let indexing = match &ctx.toks[i - 1].kind {
+            TokKind::Ident(s) => !is_keyword(s),
+            TokKind::Punct(')') | TokKind::Punct(']') => true,
+            _ => false,
+        };
+        if indexing {
+            out.push(Finding {
+                rule: "hot-path-index",
+                path: ctx.path.to_string(),
+                line: t.line,
+                msg: "panicking slice-index syntax in hot-path module (prefer get/get_unchecked \
+                      with a SAFETY argument, or iterators)"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn rule_alloc_in_into(ctx: &Ctx, out: &mut Vec<Finding>) {
+    for f in ctx.fns.iter().filter(|f| f.name.ends_with("_into")) {
+        // Inner fns/closures inherit the contract: the whole body range
+        // is scanned (innermost-span dedup not needed — nested `*_into`
+        // fns would double-report, which we avoid by skipping tokens
+        // owned by a nested *_into span).
+        let nested: Vec<&FnSpan> = ctx
+            .fns
+            .iter()
+            .filter(|g| {
+                g.name.ends_with("_into")
+                    && g.body.start > f.body.start
+                    && g.body.end <= f.body.end
+            })
+            .collect();
+        let toks = ctx.toks;
+        let mut i = f.body.start;
+        while i < f.body.end {
+            if nested.iter().any(|g| g.body.contains(&i)) {
+                i += 1;
+                continue;
+            }
+            if let Some(what) = alloc_token_at(toks, i) {
+                out.push(Finding {
+                    rule: "alloc-in-into",
+                    path: ctx.path.to_string(),
+                    line: toks[i].line,
+                    msg: format!("allocation `{what}` inside `{}` (zero-alloc contract)", f.name),
+                });
+            }
+            i += 1;
+        }
+    }
+}
+
+fn alloc_token_at(toks: &[Tok], i: usize) -> Option<String> {
+    let t = &toks[i];
+    let id = t.ident()?;
+    let next_path_seg = || -> Option<&str> {
+        (toks.get(i + 1)?.is_punct(':') && toks.get(i + 2)?.is_punct(':'))
+            .then(|| toks.get(i + 3).and_then(|t| t.ident()))
+            .flatten()
+    };
+    match id {
+        "Vec" | "String" | "Box" => {
+            let seg = next_path_seg()?;
+            matches!(seg, "new" | "with_capacity" | "from")
+                .then(|| format!("{id}::{seg}"))
+        }
+        "vec" => {
+            matches!(toks.get(i + 1), Some(n) if n.is_punct('!')).then(|| "vec!".to_string())
+        }
+        "collect" | "to_vec" | "to_owned" | "to_string" => {
+            (i > 0 && toks[i - 1].is_punct('.')).then(|| format!(".{id}()"))
+        }
+        _ => None,
+    }
+}
+
+fn rule_instant_in_kernel(ctx: &Ctx, out: &mut Vec<Finding>) {
+    if !path_in(ctx.path, KERNEL_PATHS) {
+        return;
+    }
+    for i in 0..ctx.toks.len() {
+        if ctx.toks[i].is_ident("Instant")
+            && matches!(ctx.toks.get(i + 1), Some(t) if t.is_punct(':'))
+            && matches!(ctx.toks.get(i + 2), Some(t) if t.is_punct(':'))
+            && matches!(ctx.toks.get(i + 3), Some(t) if t.is_ident("now"))
+        {
+            out.push(Finding {
+                rule: "instant-in-kernel",
+                path: ctx.path.to_string(),
+                line: ctx.toks[i].line,
+                msg: "Instant::now inside a scoring kernel (timing belongs in bench/serving \
+                      layers)"
+                    .into(),
+            });
+        }
+    }
+}
+
+fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "as" | "break" | "const" | "continue" | "crate" | "dyn" | "else" | "enum" | "extern"
+            | "false" | "fn" | "for" | "if" | "impl" | "in" | "let" | "loop" | "match" | "mod"
+            | "move" | "mut" | "pub" | "ref" | "return" | "self" | "Self" | "static" | "struct"
+            | "super" | "trait" | "true" | "type" | "unsafe" | "use" | "where" | "while"
+            | "async" | "await"
+    )
+}
+
+// ---------------------------------------------------------------------------
+// waivers
+// ---------------------------------------------------------------------------
+
+struct Waivers {
+    /// (rule, covered-line range inclusive). `None` range = whole file.
+    entries: Vec<(String, Option<(u32, u32)>)>,
+}
+
+impl Waivers {
+    fn covers(&self, f: &Finding) -> bool {
+        self.entries.iter().any(|(rule, range)| {
+            rule == f.rule
+                && match range {
+                    None => true,
+                    Some((lo, hi)) => (*lo..=*hi).contains(&f.line),
+                }
+        })
+    }
+}
+
+/// Parse `lint:allow(...)` / `lint:allow-file(...)` waivers out of the
+/// comment stream. Malformed waivers (missing reason, unknown rule)
+/// become findings themselves and do NOT suppress anything.
+fn parse_waivers(path: &str, comments: &[Comment], out: &mut Vec<Finding>) -> Waivers {
+    let mut entries = Vec::new();
+    for c in comments {
+        for (needle, file_wide) in [("lint:allow-file(", true), ("lint:allow(", false)] {
+            let Some(at) = c.text.find(needle) else { continue };
+            let rest = &c.text[at + needle.len()..];
+            let Some(close) = rest.find(')') else {
+                out.push(Finding {
+                    rule: "waiver-missing-reason",
+                    path: path.to_string(),
+                    line: c.line,
+                    msg: "malformed waiver: missing `)` after rule list".into(),
+                });
+                continue;
+            };
+            let rules: Vec<&str> = rest[..close].split(',').map(str::trim).collect();
+            let after = rest[close + 1..].trim_start();
+            let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+            if reason.is_empty() || reason.starts_with("TODO") {
+                out.push(Finding {
+                    rule: "waiver-missing-reason",
+                    path: path.to_string(),
+                    line: c.line,
+                    msg: "waiver must carry a non-TODO reason: `// lint:allow(rule): why`".into(),
+                });
+                continue;
+            }
+            let mut ok = true;
+            for r in &rules {
+                if !rule_exists(r) {
+                    out.push(Finding {
+                        rule: "waiver-unknown-rule",
+                        path: path.to_string(),
+                        line: c.line,
+                        msg: format!("waiver names unknown rule `{r}`"),
+                    });
+                    ok = false;
+                }
+            }
+            if !ok {
+                continue;
+            }
+            for r in rules {
+                // A line waiver covers the comment itself plus the
+                // following statement — 3 lines of slack so rustfmt
+                // reflowing a binding doesn't strand the waiver.
+                let range = if file_wide { None } else { Some((c.line, c.end_line + 3)) };
+                entries.push((r.to_string(), range));
+            }
+            break; // one waiver per comment (allow-file matched first)
+        }
+    }
+    Waivers { entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(path: &str, src: &str) -> Vec<&'static str> {
+        check_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 { unsafe { *p } }";
+        assert_eq!(rules_hit("util/other.rs", bad), vec!["safety-comment"]);
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}";
+        assert!(rules_hit("util/other.rs", good).is_empty());
+        let trailing = "fn f(p: *const u8) -> u8 { unsafe { *p } } // SAFETY: valid by contract";
+        assert!(rules_hit("util/other.rs", trailing).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_window_is_five_lines() {
+        let far = "fn f(p: *const u8) -> u8 {\n    // SAFETY: too far away.\n\n\n\n\n\n\n    unsafe { *p }\n}";
+        assert_eq!(rules_hit("util/other.rs", far), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_fn_is_not_flagged_here() {
+        // unsafe fn decls are covered by unsafe_op_in_unsafe_fn; this
+        // rule only polices blocks.
+        let src = "unsafe fn g(p: *const u8) -> u8 {\n    // SAFETY: p valid per contract.\n    unsafe { *p }\n}";
+        assert!(rules_hit("util/other.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_needs_rationale_and_allowlist() {
+        let src = "use std::sync::atomic::{AtomicU64, Ordering};\nfn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) }";
+        let hits = rules_hit("lsh/foo.rs", src);
+        assert!(hits.contains(&"atomics-allowlist"), "{hits:?}");
+        assert!(hits.contains(&"ordering-rationale"), "{hits:?}");
+        // Allowlisted path + same-line rationale → clean.
+        let good = "use std::sync::atomic::{AtomicU64, Ordering};\nfn f(a: &AtomicU64) -> u64 { a.load(Ordering::Relaxed) } // Relaxed: independent counter";
+        assert!(rules_hit("util/pool.rs", good).is_empty());
+    }
+
+    #[test]
+    fn ordering_rationale_inherits_from_fn_header() {
+        let src = "/// Counter bump. Relaxed atomics: samples are\n/// independent, no ordering needed.\nfn f(a: &std::sync::atomic::AtomicU64) {\n    a.fetch_add(1, Ordering::Relaxed);\n    a.fetch_add(2, Ordering::Relaxed);\n}";
+        assert!(rules_hit("metrics/registry.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cmp_ordering_is_not_atomic() {
+        let src = "fn f(a: u32, b: u32) -> std::cmp::Ordering { a.cmp(&b).then(Ordering::Equal) }";
+        assert!(rules_hit("linalg/topk.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_panic_tokens() {
+        let src = "fn f(v: &[u32]) -> u32 { *v.first().unwrap() }";
+        assert_eq!(rules_hit("lsh/foo.rs", src), vec!["hot-path-panic"]);
+        // unwrap_or is a different ident — never flagged.
+        let ok = "fn f(v: &[u32]) -> u32 { v.first().copied().unwrap_or(0) }";
+        assert!(rules_hit("lsh/foo.rs", ok).is_empty());
+        // Outside hot paths, unwrap is allowed.
+        assert!(rules_hit("util/foo.rs", src).is_empty());
+        let mac = "fn f() { panic!(\"boom\") }";
+        assert_eq!(rules_hit("selector/foo.rs", mac), vec!["hot-path-panic"]);
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { let v = vec![1]; v[0]; v.last().unwrap(); }\n}";
+        assert!(rules_hit("lsh/foo.rs", src).is_empty());
+        // cfg(not(test)) is production code: still flagged.
+        let not_test = "#[cfg(not(test))]\nfn f(v: &[u32]) -> u32 { v.last().unwrap().clone() }";
+        assert_eq!(rules_hit("lsh/foo.rs", not_test), vec!["hot-path-panic"]);
+    }
+
+    #[test]
+    fn slice_index_heuristic() {
+        assert_eq!(rules_hit("linalg/m.rs", "fn f(v: &[f32]) -> f32 { v[3] }"), vec!["hot-path-index"]);
+        // Declarations, types, attributes, vec! are not indexing.
+        let ok = "#[derive(Clone)]\nstruct S { a: [f32; 4] }\nfn f(x: &mut [f32]) -> Vec<[f32; 2]> { let _ = x; vec![] }";
+        assert!(rules_hit("linalg/m.rs", ok).is_empty());
+        // Chained: foo()[i] and x[i][j].
+        assert_eq!(
+            rules_hit("linalg/m.rs", "fn f(v: Vec<Vec<f32>>, i: usize) -> f32 { v[i][0] }"),
+            vec!["hot-path-index", "hot-path-index"]
+        );
+    }
+
+    #[test]
+    fn alloc_in_into_fns() {
+        let bad = "fn scores_into(out: &mut Vec<f32>) { let tmp: Vec<f32> = Vec::new(); out.extend(tmp); }";
+        assert_eq!(rules_hit("util/x.rs", bad), vec!["alloc-in-into"]);
+        let bad2 = "fn select_into(out: &mut Vec<u32>) { *out = (0..4).collect(); }";
+        assert_eq!(rules_hit("util/x.rs", bad2), vec!["alloc-in-into"]);
+        let ok = "fn select_into(out: &mut Vec<u32>) { out.clear(); out.extend(0..4); }\nfn other() -> Vec<u32> { Vec::new() }";
+        assert!(rules_hit("util/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn instant_in_kernel() {
+        let src = "fn score() { let _t = std::time::Instant::now(); }";
+        assert_eq!(rules_hit("lsh/soft.rs", src), vec!["instant-in-kernel"]);
+        assert!(rules_hit("bench/run.rs", src).is_empty());
+    }
+
+    #[test]
+    fn waivers_suppress_with_reason() {
+        let src = "// lint:allow(hot-path-panic): documented diagnostic API, panics by contract\nfn f(v: &[u32]) -> u32 { *v.first().unwrap() }";
+        assert!(rules_hit("lsh/foo.rs", src).is_empty());
+        // Same-line trailing waiver.
+        let trail = "fn f(v: &[u32]) -> u32 { *v.first().unwrap() } // lint:allow(hot-path-panic): contract";
+        assert!(rules_hit("lsh/foo.rs", trail).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_a_finding() {
+        let src = "// lint:allow(hot-path-panic):\nfn f(v: &[u32]) -> u32 { *v.first().unwrap() }";
+        let hits = rules_hit("lsh/foo.rs", src);
+        assert!(hits.contains(&"waiver-missing-reason"), "{hits:?}");
+        assert!(hits.contains(&"hot-path-panic"), "un-reasoned waiver must not suppress: {hits:?}");
+        let todo = "// lint:allow(hot-path-panic): TODO\nfn f(v: &[u32]) -> u32 { *v.first().unwrap() }";
+        assert!(rules_hit("lsh/foo.rs", todo).contains(&"waiver-missing-reason"));
+    }
+
+    #[test]
+    fn waiver_unknown_rule_is_a_finding() {
+        let src = "// lint:allow(no-such-rule): because\nfn f() {}";
+        assert_eq!(rules_hit("lsh/foo.rs", src), vec!["waiver-unknown-rule"]);
+    }
+
+    #[test]
+    fn file_waiver_covers_everything() {
+        let src = "// lint:allow-file(hot-path-panic): module is test-only diagnostics\nfn f(v: &[u32]) -> u32 { v.first().unwrap() + v.last().unwrap() }";
+        assert!(rules_hit("lsh/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fn_spans_nest() {
+        let l = lex("fn outer() { fn inner_into() { } Vec::new(); }");
+        let toks = strip_test_code(&l.toks);
+        let fns = fn_spans(&toks);
+        assert_eq!(fns.len(), 2);
+        // Vec::new is in outer (not a *_into fn) → no finding.
+        assert!(check_source("util/x.rs", "fn outer() { fn inner_into() { } let v: Vec<u32> = Vec::new(); let _ = v; }").is_empty());
+    }
+}

@@ -83,7 +83,9 @@ impl PagedKvCache {
                 None => return false,
             }
         }
-        let page = *table.pages.last().unwrap();
+        // A page always exists here: slot != 0 means an earlier append
+        // opened it; slot == 0 just pushed one (or returned false).
+        let Some(&page) = table.pages.last() else { return false };
         let off = (page * PAGE_TOKENS + slot) * self.dim;
         self.k[off..off + self.dim].copy_from_slice(key);
         self.v[off..off + self.dim].copy_from_slice(value);

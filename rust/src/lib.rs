@@ -35,6 +35,16 @@
 //! scoring hot paths fan out over a shared worker pool
 //! (`util::pool::global`, sized by `SOCKET_THREADS` or the machine's
 //! parallelism). See `rust/README.md` for the full matrix.
+//!
+//! ## Static analysis
+//!
+//! The crate is gated by `socket-lint` (workspace member `lint/`), a
+//! repo-native analyzer enforcing SAFETY comments on `unsafe`,
+//! ordering rationale on atomics, and panic-/allocation-freedom on the
+//! scoring hot paths — rule catalog in `rust/docs/ANALYSIS.md`. The
+//! attribute below makes each `unsafe` operation inside an `unsafe fn`
+//! require its own block (and therefore its own SAFETY justification).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod attention;
 pub mod coordinator;

@@ -201,7 +201,10 @@ where
             .map(|(stats, cands)| JobSlot { stats, cands })
             .collect();
         if n_jobs == 1 {
-            run_job(0, slots.pop().expect("one slot per job"));
+            // `slots` was built with exactly n_jobs == 1 entries.
+            if let Some(slot) = slots.pop() {
+                run_job(0, slot);
+            }
         } else {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = slots
                 .into_iter()

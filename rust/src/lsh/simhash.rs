@@ -364,6 +364,8 @@ impl KeyHashes {
 impl SimHash {
     /// Draw the hyperplanes. Deterministic in (seed, params, dim).
     pub fn new(params: LshParams, dim: usize, seed: u64) -> SimHash {
+        // lint:allow(hot-path-panic): construction-time config check,
+        // never on the decode path (selectors validate via Result).
         params.validate().expect("invalid LSH params");
         let mut planes = Vec::with_capacity(params.l);
         for table in 0..params.l {

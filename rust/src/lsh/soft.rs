@@ -214,8 +214,10 @@ impl SoftScorer {
             // SAFETY: block.len() == L * BLOCK_TOKENS and slot <
             // BLOCK_TOKENS; the loaded id is < r by construction and
             // the caller asserts table.len() == L * r.
-            let b = unsafe { *block.get_unchecked(t * BLOCK_TOKENS + slot) } as usize;
-            acc += unsafe { *table.get_unchecked(t * r + b) };
+            acc += unsafe {
+                let b = *block.get_unchecked(t * BLOCK_TOKENS + slot) as usize;
+                *table.get_unchecked(t * r + b)
+            };
         }
         acc
     }

@@ -50,14 +50,18 @@ impl Histogram {
         self.record_us((ms.max(0.0) * 1e3).round() as u64);
     }
 
-    /// Total samples recorded.
+    /// Total samples recorded. Relaxed reads: bucket loads race with
+    /// concurrent `record_us` calls, so the sum is a point-in-time
+    /// lower bound — exact once writers quiesce.
     pub fn count(&self) -> u64 {
         self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
     }
 
     /// Estimate the `q`-quantile (0..=1) in milliseconds: walk the
     /// cumulative counts to the matched bucket, then interpolate
-    /// linearly inside it. 0.0 when empty.
+    /// linearly inside it. 0.0 when empty. Relaxed loads into a local
+    /// snapshot first, so the walk sees one frozen view; samples
+    /// landing mid-scrape show up in the next scrape.
     pub fn quantile_ms(&self, q: f64) -> f64 {
         let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
         let total: u64 = counts.iter().sum();
@@ -79,7 +83,9 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
 
-    /// Mean in milliseconds (0.0 when empty).
+    /// Mean in milliseconds (0.0 when empty). Relaxed loads: `sum` and
+    /// `count` may straddle an in-flight record, skewing the mean by at
+    /// most one sample.
     pub fn mean_ms(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -88,7 +94,8 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e3
     }
 
-    /// Largest recorded sample in milliseconds.
+    /// Largest recorded sample in milliseconds (relaxed load of a
+    /// monotone `fetch_max` cell — staleness only under-reports).
     pub fn max_ms(&self) -> f64 {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e3
     }
@@ -130,6 +137,8 @@ impl MethodSeries {
         }
     }
 
+    /// No traffic yet? Relaxed loads — the scrape that filters on this
+    /// tolerates a series flipping active mid-walk (shows next scrape).
     fn idle(&self) -> bool {
         self.served.load(Ordering::Relaxed) == 0
             && self.failed.load(Ordering::Relaxed) == 0
@@ -171,6 +180,8 @@ impl Registry {
     }
 
     /// Fold one drained [`PruneStats`] into the pruning gauges.
+    /// Relaxed adds: independent monotone counters, no cross-field
+    /// ordering promised (the scrape derives ratios best-effort).
     pub fn absorb_prune(&self, p: PruneStats) {
         self.prune_blocks.fetch_add(p.blocks as u64, Ordering::Relaxed);
         self.prune_pruned.fetch_add(p.pruned as u64, Ordering::Relaxed);
@@ -179,6 +190,8 @@ impl Registry {
 
     /// Per-method section of the metrics schema. Idle series are
     /// omitted so the scrape stays proportional to actual traffic.
+    /// Relaxed loads throughout: the scrape is a best-effort snapshot,
+    /// not a linearizable one (see module doc).
     pub fn methods_json(&self) -> Json {
         let mut out = Json::obj();
         for m in self.methods.iter().filter(|m| !m.idle()) {
@@ -195,7 +208,8 @@ impl Registry {
     }
 
     /// Pruning gauges: cumulative branch-and-bound visit counts and the
-    /// derived prune rate / warm-up share.
+    /// derived prune rate / warm-up share. Relaxed loads: gauges, not
+    /// an invariant — ratios may straddle an absorb by one sample.
     pub fn prune_json(&self) -> Json {
         let blocks = self.prune_blocks.load(Ordering::Relaxed);
         let pruned = self.prune_pruned.load(Ordering::Relaxed);
@@ -219,6 +233,34 @@ impl Default for Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Exhaustive schedule check of the histogram's record-vs-snapshot
+    /// contract (modeled relaxed counters, every interleaving + stale
+    /// read): a racing snapshot may undercount but never overcounts or
+    /// invents samples, and once recorders are joined the counts are
+    /// exact. Two modeled cells stand in for two buckets; `fetch_add`
+    /// mirrors `record_us`, the pair of loads mirrors `count`'s sweep.
+    #[test]
+    fn histogram_snapshot_model_all_schedules() {
+        let report = crate::testing::interleave::explore("hist-snapshot", |sim| {
+            let b0 = sim.atomic(0);
+            let b1 = sim.atomic(0);
+            let (r0, r1) = (b0.clone(), b1.clone());
+            // Two recorders, one sample each into different buckets.
+            let t0 = sim.spawn(move || r0.fetch_add(1));
+            let t1 = sim.spawn(move || r1.fetch_add(1));
+            // Concurrent scrape: two relaxed loads, like count().
+            let (s0, s1) = (b0.clone(), b1.clone());
+            let scraper = sim.spawn(move || s0.load() + s1.load());
+            let mid = scraper.join();
+            assert!(mid <= 2, "snapshot overcounted: {mid} > 2 recorded");
+            let _ = t0.join();
+            let _ = t1.join();
+            assert_eq!(b0.load() + b1.load(), 2, "post-join count must be exact");
+        });
+        assert!(report.exhaustive);
+        assert!(report.schedules > 1);
+    }
 
     #[test]
     fn histogram_buckets_and_quantiles() {

@@ -61,7 +61,7 @@ impl Selector for DoubleSparsitySelector {
             }
         }
         let mut idx: Vec<usize> = (0..d).collect();
-        idx.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+        idx.sort_by(|&a, &b| importance[b].total_cmp(&importance[a]));
         idx.truncate(r);
         idx.sort_unstable();
         self.channels = idx;

@@ -52,8 +52,11 @@ impl MagicPigSelector {
     /// Panics if `build` was not called — use the [`Selector`] API for
     /// error-reporting behaviour.
     pub fn collision_counts(&self, q: &[f32]) -> Vec<u32> {
-        let hash = self.hash.as_ref().expect("build() not called");
-        let hashes = self.hashes.as_ref().unwrap();
+        // Selector::select_into is the error-reporting path; this one
+        // panics by documented contract when called before build().
+        // lint:allow(hot-path-panic): diagnostic API, panics by contract pre-build
+        let (hash, hashes) =
+            self.hash.as_ref().zip(self.hashes.as_ref()).expect("build() not called");
         let qb = hash.hash_one(q);
         let mut counts = Vec::new();
         hashes.collision_counts_into(&qb, &mut counts);

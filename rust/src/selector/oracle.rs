@@ -50,7 +50,7 @@ impl OracleSelector {
     pub fn ranking(&self, q: &[f32]) -> Vec<usize> {
         let scores = self.scores(q);
         let mut idx: Vec<usize> = (0..scores.len()).collect();
-        idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b)));
+        idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
         idx
     }
 }

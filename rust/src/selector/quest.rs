@@ -81,24 +81,22 @@ impl Selector for QuestSelector {
             return Err(SelectorError::NotBuilt);
         }
         debug_assert_eq!(key.len(), self.dim);
-        let start_new = match self.pages.last() {
-            Some(p) => p.len == self.page_size,
-            None => true,
-        };
-        if start_new {
-            self.pages.push(PageMeta {
+        match self.pages.last_mut() {
+            // Last page still has room: widen its bounding box.
+            Some(p) if p.len < self.page_size => {
+                for c in 0..self.dim {
+                    p.min[c] = p.min[c].min(key[c]);
+                    p.max[c] = p.max[c].max(key[c]);
+                }
+                p.len += 1;
+            }
+            // Full (or no pages yet): open a fresh page.
+            _ => self.pages.push(PageMeta {
                 start: self.n,
                 len: 1,
                 min: key.to_vec(),
                 max: key.to_vec(),
-            });
-        } else {
-            let p = self.pages.last_mut().unwrap();
-            for c in 0..self.dim {
-                p.min[c] = p.min[c].min(key[c]);
-                p.max[c] = p.max[c].max(key[c]);
-            }
-            p.len += 1;
+            }),
         }
         self.n += 1;
         Ok(())

@@ -14,6 +14,10 @@ use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, PruneStats, SoftSc
 use crate::util::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+// lint:allow-file(atomics-allowlist): PruneCounters is telemetry-only —
+// three monotone counters drained by swap; no cross-field consistency
+// is promised, so it needs no place in the audited lock-free modules.
+
 /// Lock-free accumulator for the pruned walk's telemetry: `select_into`
 /// takes `&self`, so the counters must be atomics. Drained (swapped to
 /// zero) by [`Selector::take_prune_stats`] for the metrics registry.
@@ -25,12 +29,18 @@ struct PruneCounters {
 }
 
 impl PruneCounters {
+    /// Relaxed adds: independent statistics counters — nothing orders
+    /// against them, and a torn scrape only misattributes a sample
+    /// between two adjacent drains.
     fn add(&self, p: PruneStats) {
         self.blocks.fetch_add(p.blocks, Ordering::Relaxed);
         self.pruned.fetch_add(p.pruned, Ordering::Relaxed);
         self.warmup.fetch_add(p.warmup, Ordering::Relaxed);
     }
 
+    /// Relaxed swaps: each field drains atomically on its own; the
+    /// trio is not a consistent snapshot by design (gauges, not an
+    /// invariant).
     fn take(&self) -> PruneStats {
         PruneStats {
             blocks: self.blocks.swap(0, Ordering::Relaxed),
@@ -126,13 +136,16 @@ impl Selector for SocketSelector {
         // group, tiling blocks x lanes across the workers: each block's
         // id rows are consumed by every lane of a job while cache-hot.
         // Per-lane results are identical to per-query select_into.
+        // The lane Vec is group-sized borrow views: it cannot live in
+        // scratch (it borrows `sels` mutably per call) and is one small
+        // alloc per GQA group, not per token.
         let mut lanes: Vec<GroupLane<'_>> = sels
             .iter_mut()
             .map(|sel| {
                 let Selection { indices, scores, aux } = sel;
                 GroupLane { probs: aux, indices, scores }
             })
-            .collect();
+            .collect(); // lint:allow(alloc-in-into): group-sized borrow views, see above
         self.prune.add(self.scorer.select_pruned_group_into(r, hashes, k.max(1), &mut lanes));
         Ok(())
     }

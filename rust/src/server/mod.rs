@@ -206,6 +206,8 @@ impl Server {
         handle.wait()
     }
 
+    /// Relaxed add: the served counter is a gauge for the stats
+    /// endpoint; nothing synchronizes through it.
     fn count_served(&self, label: &str) {
         self.served.fetch_add(1, Ordering::Relaxed);
         *lock(&self.served_by_method).entry(label.to_string()).or_insert(0) += 1;
@@ -242,6 +244,8 @@ impl Server {
             // straight from the registry, no queue round-trip.
             Err(e) => return err_json(e),
         };
+        // Relaxed id allocation: fetch_add is atomic at any ordering,
+        // so ids stay unique; nothing else hangs off this cell.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode };
         let c = self.run_turn(req, false, false, stream, emit);
@@ -325,6 +329,8 @@ impl Server {
                 Ok(resolved) => resolved,
                 Err(e) => return err_json(e),
             };
+            // Relaxed id allocation: atomicity alone guarantees unique
+            // session seq ids; no ordering is required.
             let seq = self.next_id.fetch_add(1, Ordering::Relaxed);
             sessions.insert(
                 sid.to_string(),
@@ -383,6 +389,7 @@ impl Server {
         let sessions = Json::obj()
             .set("active", lock(&self.sessions).len())
             .set("parked", snap.parked_sessions)
+            // Relaxed gauge read: best-effort scrape, exact at rest.
             .set("evicted", self.sessions_evicted.load(Ordering::Relaxed));
         let registry = self.coordinator.metrics();
         Json::obj()
@@ -408,6 +415,7 @@ impl Server {
                 }
                 Json::obj()
                     .set("ok", true)
+                    // Relaxed gauge read: stats scrape, best effort.
                     .set("served", self.served.load(Ordering::Relaxed))
                     .set("methods", methods)
                     .set("sessions", lock(&self.sessions).len())
@@ -499,6 +507,8 @@ impl Server {
                     return;
                 }
             }
+            // Relaxed stop-flag read: shutdown latency is bounded by
+            // the 100ms read timeout, not by memory-ordering fences.
             if stop.load(Ordering::Relaxed) {
                 return;
             }
@@ -535,6 +545,7 @@ impl Server {
         for seq in &expired {
             self.coordinator.release(*seq);
         }
+        // Relaxed add: eviction gauge for the stats scrape only.
         self.sessions_evicted.fetch_add(expired.len() as u64, Ordering::Relaxed);
         expired.len()
     }
@@ -581,6 +592,9 @@ impl Server {
             move || loop {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        // Relaxed stop-flag reads (here and below): the
+                        // unblocking connect provides the wakeup; no
+                        // ordering is needed, only eventual visibility.
                         if stop_acc.load(Ordering::Relaxed) {
                             return;
                         }
@@ -589,6 +603,7 @@ impl Server {
                         }
                     }
                     Err(_) => {
+                        // Relaxed: same stop-flag protocol as above.
                         if stop_acc.load(Ordering::Relaxed) {
                             return;
                         }
@@ -607,6 +622,8 @@ impl Server {
                 let tick = Duration::from_millis(100);
                 let cadence = Duration::from_secs(1).min(sweeper_srv.session_ttl).max(tick);
                 let mut since_sweep = Duration::ZERO;
+                // Relaxed stop-flag read: visibility within one 100ms
+                // tick suffices; no ordering with the sweep itself.
                 while !stop_sweep.load(Ordering::Relaxed) {
                     std::thread::sleep(tick);
                     since_sweep += tick;
@@ -652,6 +669,8 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
+        // Relaxed stop-flag store: readers poll on timeouts, and the
+        // thread joins below are full synchronization points anyway.
         self.stop.store(true, Ordering::Relaxed);
         // Wake the acceptor out of its blocking accept.
         let _ = TcpStream::connect(self.addr);
@@ -1045,6 +1064,39 @@ mod tests {
         let stats = Json::parse(line.trim()).unwrap();
         assert_eq!(stats.get("ok").unwrap().as_bool(), Some(true), "{line}");
         assert_eq!(stats.get("served").unwrap().as_usize(), Some(1));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn malformed_and_bomb_lines_answered_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 1).unwrap();
+        let mut conn = std::net::TcpStream::connect(handle.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        // A line that is not JSON at all must be answered, not dropped.
+        writeln!(conn, "GET / HTTP/1.1").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{line}");
+        assert!(line.contains("bad json"), "{line}");
+        // A deep-nesting bomb must hit the parser's depth limit and come
+        // back as an error line instead of overflowing the worker's stack.
+        writeln!(conn, "{}", "[".repeat(100_000)).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{line}");
+        assert!(line.contains("bad json"), "{line}");
+        assert!(line.contains("nesting"), "{line}");
+        // Same connection, sole worker: both malformed lines were survived.
+        writeln!(conn, r#"{{"op":"generate","context_len":32,"decode_len":1}}"#).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = Json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{line}");
         handle.shutdown();
     }
 

@@ -7,6 +7,8 @@
 
 use crate::util::rng::Pcg64;
 
+pub mod interleave;
+
 /// Configuration for a property run.
 #[derive(Clone, Copy, Debug)]
 pub struct PropConfig {

@@ -118,9 +118,13 @@ impl Json {
     }
 
     /// Parse a JSON document; the whole input must be consumed.
+    /// Total: every input returns `Ok` or `Err` — malformed or
+    /// adversarial text (including nesting past [`MAX_DEPTH`]) never
+    /// panics or overflows the stack, so network-facing callers can
+    /// feed untrusted lines straight through.
     pub fn parse(text: &str) -> Result<Json, String> {
         let bytes = text.as_bytes();
-        let mut p = Parser { b: bytes, i: 0 };
+        let mut p = Parser { b: bytes, i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -199,9 +203,15 @@ impl fmt::Display for Json {
     }
 }
 
+/// Maximum container nesting the parser accepts. Recursion descent is
+/// bounded by this, so a line of `[[[[...` from an untrusted peer gets
+/// an error, not a stack overflow.
+pub const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -299,7 +309,10 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // Copy a full UTF-8 scalar.
                     let rest = std::str::from_utf8(&self.b[self.i..]).map_err(|e| e.to_string())?;
-                    let ch = rest.chars().next().unwrap();
+                    let ch = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| "truncated string content".to_string())?;
                     out.push(ch);
                     self.i += ch.len_utf8();
                 }
@@ -307,7 +320,24 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Bump the container depth, erroring past [`MAX_DEPTH`]. (No
+    /// decrement happens on the error path — the parse aborts anyway.)
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} levels"));
+        }
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let v = self.array_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_body(&mut self) -> Result<Json, String> {
         self.expect(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
@@ -332,6 +362,13 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, String> {
+        self.enter()?;
+        let v = self.object_body();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_body(&mut self) -> Result<Json, String> {
         self.expect(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
@@ -405,6 +442,50 @@ mod tests {
     fn unicode_escape() {
         let j = Json::parse(r#""é""#).unwrap();
         assert_eq!(j.as_str().unwrap(), "é");
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // An adversarial line of open brackets must come back as a
+        // parse error, not blow the stack of whatever thread parsed it.
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).expect_err("unclosed nesting bomb must fail");
+        assert!(err.contains("nesting"), "{err}");
+        let obj_bomb = r#"{"a":"#.repeat(50_000);
+        assert!(Json::parse(&obj_bomb).is_err());
+        // Mixed nesting under the limit still parses: depth here is
+        // MAX_DEPTH (alternating [ and {"a": levels, 64 of each).
+        let deep = format!(
+            "{}null{}",
+            r#"[{"a":"#.repeat(MAX_DEPTH / 2),
+            r#"}]"#.repeat(MAX_DEPTH / 2)
+        );
+        let parsed = Json::parse(&deep).expect("nesting at the limit parses");
+        assert!(parsed.as_arr().is_some());
+        // One level past the limit fails.
+        let over = format!("{}null{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
+    }
+
+    #[test]
+    fn depth_resets_between_siblings() {
+        // Depth is nesting depth, not a total-container budget: many
+        // shallow siblings must not trip the limit.
+        let wide = format!("[{}]", vec!["[1]"; 1000].join(","));
+        let parsed = Json::parse(&wide).expect("wide-but-shallow parses");
+        assert_eq!(parsed.as_arr().unwrap().len(), 1000);
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        // A grab-bag of truncations and garbage: every one must produce
+        // Err — the server feeds raw network lines into this parser.
+        for bad in [
+            "", "{", "[", "\"", "{\"a\"", "{\"a\":}", "[1,", "nul", "tru", "-", "1e",
+            "{\"a\" 1}", "\"\\u12", "\"\\q\"", "\u{7f}", "}", "]", ",",
+        ] {
+            assert!(Json::parse(bad).is_err(), "input {bad:?} must fail cleanly");
+        }
     }
 
     #[test]

@@ -258,6 +258,8 @@ impl ThresholdCell {
     }
 
     /// Raise the shared threshold to at least `score` (monotone).
+    /// Relaxed RMW: `fetch_max` needs no ordering with other memory —
+    /// a reader that misses this publish just prunes less (type doc).
     #[inline]
     pub fn publish(&self, score: f32) {
         debug_assert!(score >= 0.0, "shared threshold requires non-negative scores");
@@ -265,6 +267,8 @@ impl ThresholdCell {
     }
 
     /// The highest score published so far (0.0 before any publish).
+    /// Relaxed load: a stale value is an older, lower threshold —
+    /// pruning weakens but never over-prunes.
     #[inline]
     pub fn get(&self) -> f32 {
         f32::from_bits(self.0.load(Ordering::Relaxed))
@@ -525,6 +529,42 @@ mod tests {
         let shared_ref = &shared;
         pool.map(64, |i| shared_ref.publish(i as f32 * 0.125));
         assert_eq!(shared.get(), 63.0 * 0.125);
+    }
+
+    /// Exhaustive schedule check of the ThresholdCell protocol (modeled
+    /// relaxed `fetch_max` cell, every interleaving + stale-read
+    /// combination): an observer's reads never decrease, never exceed
+    /// the true max published, and after both publishers are joined the
+    /// cell reads exactly the max. Integer scores stand in for f32 bits
+    /// — valid because the cell's non-negative-f32 bit patterns are
+    /// order-isomorphic to integers (see the type doc).
+    #[test]
+    fn threshold_cell_model_all_schedules() {
+        let report = crate::testing::interleave::explore("threshold-cell", |sim| {
+            let cell = sim.atomic(0);
+            let (p1, p2, obs) = (cell.clone(), cell.clone(), cell.clone());
+            let w1 = sim.spawn(move || p1.fetch_max(3));
+            let w2 = sim.spawn(move || p2.fetch_max(5));
+            let reader = sim.spawn(move || {
+                let a = obs.load();
+                let b = obs.load();
+                // Monotone: the threshold a worker acts on never drops,
+                // so pruning decisions never loosen retroactively.
+                assert!(b >= a, "observer saw threshold decrease: {a} -> {b}");
+                // Never over-prune: no observed threshold exceeds the
+                // max ever published.
+                assert!(a <= 5 && b <= 5, "threshold above any published score");
+                // No out-of-thin-air values.
+                assert!([0, 3, 5].contains(&a) && [0, 3, 5].contains(&b));
+                b
+            });
+            let _ = w1.join();
+            let _ = w2.join();
+            let _ = reader.join();
+            assert_eq!(cell.load(), 5, "joined cell must hold the max publish");
+        });
+        assert!(report.exhaustive, "threshold model must be fully enumerated");
+        assert!(report.schedules > 1);
     }
 
     #[test]
