@@ -101,7 +101,23 @@ assert pool["used_pages"] + pool["free_pages"] == pool["total_pages"], pool
 assert pool["used_pages"] > 0, pool  # the parked session holds pages
 assert m["prune"]["blocks"] > 0, m["prune"]
 assert m["sessions"]["active"] == 1, m["sessions"]
-print("    serving smoke OK: stream + session resume + metrics scrape")
+
+# Prefix cache: two one-shots declaring the same prompt — the second
+# must hit and skip its whole prefill.
+for _ in range(2):
+    send({"op": "generate", "context_len": 128, "decode_len": 1,
+          "prompt": "ci shared system prompt"})
+    assert recv().get("ok"), "prompted generate failed"
+send({"op": "metrics"})
+m = recv()
+prefix = m["prefix"]
+assert prefix["lookups"] == 2 and prefix["hits"] == 1, prefix
+assert prefix["prefill_tokens_saved"] == 128, prefix
+assert 0.0 < prefix["shared_page_ratio"] <= 1.0, prefix
+config = m["config"]
+assert config["default_method"] and config["default_sparsity"] >= 1, config
+assert config["session_ttl_secs"] > 0 and config["reloads"] == 0, config
+print("    serving smoke OK: stream + session resume + prefix cache + metrics scrape")
 PY
     kill "$pid" 2>/dev/null || true
     wait "$pid" 2>/dev/null || true

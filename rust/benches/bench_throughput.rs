@@ -6,14 +6,17 @@
 //! vs parallel_pruned vs parallel_pruned_ordered vs GQA-fused SOCKET
 //! selection + prune rate + threshold warmup), and the per-method
 //! serving lane (decode tokens/s for every `selector::registry` method
-//! over the paged pool at the paper's sparsity budget), and the serving
+//! over the paged pool at the paper's sparsity budget), the serving
 //! lane (sessions + streaming + the metrics scrape through the real
-//! server). Writes the gather-vs-paged, scoring-lane, per-method, and
-//! serving tables to a `BENCH_*.json` artifact for the perf trajectory
+//! server), and the prefix lane (a Zipf shared-prefix workload with the
+//! prefix cache live vs opted out). Writes the gather-vs-paged,
+//! scoring-lane, per-method, serving, and prefix tables to a
+//! `BENCH_*.json` artifact for the perf trajectory
 //! (`--json-out <path>`, empty string to skip). `--smoke` shrinks every
 //! sweep so ci.sh can emit the artifact in seconds.
 use socket_attn::experiments::{throughput, Scale};
 use socket_attn::util::{Args, Json};
+use socket_attn::workload::trace::{SharedPrefixConfig, TraceConfig};
 
 fn main() {
     let args = Args::from_env();
@@ -76,6 +79,34 @@ fn main() {
         serving.get("stream_token_lines").and_then(|v| v.as_usize()).unwrap_or(0)
     );
 
+    // Prefix lane: the same Zipf shared-prefix workload served with the
+    // prefix cache live and with it opted out — wall-clock delta plus
+    // hit-rate / prefill-tokens-saved gauges.
+    let prefix_cfg = SharedPrefixConfig {
+        base: TraceConfig {
+            context_min: if smoke { 256 } else { 2 * 1024 },
+            context_max: if smoke { 1024 } else { 8 * 1024 },
+            decode_min: 1,
+            decode_max: if smoke { 2 } else { 8 },
+            rate_rps: 100.0,
+        },
+        n_prefixes: 4,
+        zipf_s: 1.1,
+        prefix_len: if smoke { 256 } else { 2 * 1024 },
+    };
+    let prefix_n = if smoke { 8 } else { 32 };
+    let prefix = throughput::run_prefix_lane(scale, prefix_n, prefix_cfg);
+    println!(
+        "Prefix lane: {prefix_n} requests, {} prefill tokens saved, {}x vs cold",
+        prefix
+            .get("cached")
+            .and_then(|c| c.get("prefix"))
+            .and_then(|p| p.get("prefill_tokens_saved"))
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0),
+        prefix.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0)
+    );
+
     let artifact = args.get_or("json-out", "BENCH_throughput.json");
     if !artifact.is_empty() {
         let doc = Json::obj()
@@ -86,7 +117,8 @@ fn main() {
             .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg))
             .set("scoring_lane", throughput::scoring_lane_json(&sl))
             .set("method_lane", throughput::method_lane_json(&lane))
-            .set("serving_lane", serving);
+            .set("serving_lane", serving)
+            .set("prefix_lane", prefix);
         match std::fs::write(&artifact, doc.dumps() + "\n") {
             Ok(()) => println!("wrote {artifact}"),
             Err(e) => eprintln!("could not write {artifact}: {e}"),

@@ -5,14 +5,60 @@
 //! per request — over the same zero-copy paged hot path.
 
 use crate::attention::{flash_decode_into, SelectionPolicy};
-use crate::kvcache::{PageTable, PagedKvCache};
-use crate::lsh::{LshParams, PruneStats};
+use crate::kvcache::{PageTable, PagedKvCache, PrefixTree, PromptSpec, PAGE_TOKENS};
+use crate::lsh::{HashBlock, LshParams, PruneStats, BLOCK_TOKENS};
 use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selector, SelectorConfig, SelectorError};
 use crate::util::pool::with_decode_scratch;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub use crate::selector::AttentionMode;
+
+/// Pages per selector hash block (64-token blocks over 16-token pages):
+/// a prefix-shared page run on a block boundary also shares its frozen
+/// hash block through the tree.
+const PAGES_PER_BLOCK: usize = BLOCK_TOKENS / PAGE_TOKENS;
+
+/// Seed for the per-head selector hyperplanes. Content-independent (no
+/// `seq_id` folded in) so that two requests hashing the same key
+/// content produce bit-identical hash blocks — the invariant that lets
+/// the prefix cache share frozen blocks across sequences. Per-head
+/// variation keeps GQA streams' tables independent.
+const SELECTOR_SEED: u64 = 0x50C4_E701;
+
+/// Prefix-cache telemetry, drained by the scheduler into the metrics
+/// registry after each prefill wave.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Cache-enabled prompted prefills that consulted the tree.
+    pub lookups: usize,
+    /// Lookups that shared at least one page.
+    pub hits: usize,
+    /// Pages mapped from the tree instead of being recomputed
+    /// (across kv heads).
+    pub shared_pages: usize,
+    /// Pages written privately by cache-enabled prompted prefills
+    /// (across kv heads).
+    pub private_pages: usize,
+    /// Context tokens whose prefill attention + hashing were skipped
+    /// (request-level, not multiplied by kv heads).
+    pub tokens_saved: usize,
+    /// Frozen selector hash blocks attached instead of re-hashed
+    /// (across kv heads).
+    pub hash_blocks_reused: usize,
+}
+
+impl PrefixStats {
+    pub fn absorb(&mut self, other: PrefixStats) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.shared_pages += other.shared_pages;
+        self.private_pages += other.private_pages;
+        self.tokens_saved += other.tokens_saved;
+        self.hash_blocks_reused += other.hash_blocks_reused;
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -77,6 +123,12 @@ pub struct DecodeEngine {
     /// Pruning telemetry drained from *released* sequences' selectors
     /// (live ones are scanned on demand by `take_prune_stats`).
     prune_stats: PruneStats,
+    /// Radix index over token-aligned prompt prefixes: nodes hold page
+    /// refcounts + frozen hash blocks, so prompted requests map shared
+    /// pages by incref instead of recomputing prefill.
+    tree: PrefixTree,
+    /// Prefix-cache telemetry since the last drain.
+    prefix_stats: PrefixStats,
 }
 
 impl DecodeEngine {
@@ -91,11 +143,13 @@ impl DecodeEngine {
         );
         DecodeEngine {
             kv: PagedKvCache::new(config.capacity_pages, config.model.head_dim),
+            tree: PrefixTree::new(config.model.n_kv_heads),
             config,
             sequences: HashMap::new(),
             committed_pages: 0,
             commitments: HashMap::new(),
             prune_stats: PruneStats::default(),
+            prefix_stats: PrefixStats::default(),
         }
     }
 
@@ -150,6 +204,28 @@ impl DecodeEngine {
         max_new_tokens: usize,
         mode: Option<&AttentionMode>,
     ) -> Result<bool, SelectorError> {
+        self.prefill_opts(seq_id, context_len, max_new_tokens, mode, None)
+    }
+
+    /// [`DecodeEngine::prefill_as`] with an optional [`PromptSpec`]
+    /// declaring the prompt's content segments. A prompted request is
+    /// eligible for prefix sharing (unless its spec opts out): pages
+    /// whose content matches a resident tree prefix are *mapped* by
+    /// incref instead of recomputed — skipping their K/V generation,
+    /// prefill attention, and (on hash-block boundaries) Algorithm-1
+    /// hashing — and the request's own freshly written full pages are
+    /// published back to the tree. Decode outputs are bit-identical to
+    /// an isolated build: shared pages hold exactly the bytes the
+    /// request would have written, and appends onto a shared tail page
+    /// copy it private first (pool COW).
+    pub fn prefill_opts(
+        &mut self,
+        seq_id: u64,
+        context_len: usize,
+        max_new_tokens: usize,
+        mode: Option<&AttentionMode>,
+        prompt: Option<&PromptSpec>,
+    ) -> Result<bool, SelectorError> {
         let mode = mode.unwrap_or(&self.config.mode).clone();
         // Resolve the method before committing any pages.
         let spec = match &mode {
@@ -157,34 +233,176 @@ impl DecodeEngine {
             AttentionMode::Sparse { method, .. } => Some(selector::lookup(method)?),
         };
         let heads = self.config.model.n_kv_heads;
-        let needed = heads * PagedKvCache::pages_for(context_len + max_new_tokens);
-        if self.kv.total_pages() - self.committed_pages < needed {
+        let prompt = match prompt {
+            Some(p) if !p.segments.is_empty() => {
+                assert_eq!(
+                    p.total_len(),
+                    context_len,
+                    "prompt segments must cover the context exactly"
+                );
+                Some(p)
+            }
+            _ => None,
+        };
+        let use_cache = matches!(prompt, Some(p) if p.cache);
+        let full_pages = context_len / PAGE_TOKENS;
+        let tail_tokens = context_len % PAGE_TOKENS;
+
+        // Walk the tree for the longest resident page-aligned prefix,
+        // plus a shareable frozen partial tail when every full page
+        // matched.
+        let path: Vec<usize> = match prompt {
+            Some(p) if use_cache => self.tree.walk(p, full_pages),
+            _ => Vec::new(),
+        };
+        let shared_full = path.len();
+        let tail_node = match prompt {
+            Some(p) if use_cache && tail_tokens > 0 && shared_full == full_pages => {
+                self.tree.partial_tail(path.last().copied(), p, full_pages, tail_tokens)
+            }
+            _ => None,
+        };
+
+        // Map the shared run into per-head tables *before* admission:
+        // the increfs pin these pages against LRU eviction below.
+        let mut tables: Vec<PageTable> = (0..heads).map(|_| PageTable::default()).collect();
+        for (h, table) in tables.iter_mut().enumerate() {
+            for &node in &path {
+                let page = self.tree.node_pages(node)[h];
+                self.kv.map_shared(table, page, PAGE_TOKENS);
+            }
+            if let Some(tn) = tail_node {
+                let page = self.tree.node_pages(tn)[h];
+                self.kv.map_shared(table, page, tail_tokens);
+            }
+        }
+
+        // Admission: shared full pages ride the tree's references, so
+        // they come off the request's commitment; the tail page stays
+        // committed as the COW reserve. `held_refs` conservatively
+        // charges every tree page (including ones also inside live
+        // commitments) — an underestimate of availability, never an
+        // overestimate.
+        let needed = heads * (PagedKvCache::pages_for(context_len + max_new_tokens) - shared_full);
+        let mut available =
+            self.kv.total_pages().saturating_sub(self.committed_pages + self.tree.held_refs());
+        if available < needed {
+            // Pool pressure: evict least-recently-hit tree leaves no
+            // live sequence maps (the run we just pinned is ref >= 2
+            // and therefore safe).
+            self.tree.evict_lru(&mut self.kv, needed - available);
+            available =
+                self.kv.total_pages().saturating_sub(self.committed_pages + self.tree.held_refs());
+        }
+        if available < needed {
+            for table in tables.iter_mut() {
+                self.kv.release(table);
+            }
             return Ok(false);
         }
         self.committed_pages += needed;
         self.commitments.insert(seq_id, needed);
-        let model = SyntheticModel::new(self.config.model, seq_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        let mut tables = Vec::with_capacity(heads);
+
+        let tail_seed = seq_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let model = match prompt {
+            // Prompted content streams from the spec's segment seeds
+            // (identical across requests sharing a prefix); queries and
+            // decoded tokens keep the per-sequence tail seed.
+            Some(p) => SyntheticModel::with_segments(self.config.model, &p.segment_pairs(), tail_seed),
+            None => SyntheticModel::new(self.config.model, tail_seed),
+        };
         let mut selectors = Vec::with_capacity(heads);
-        for h in 0..heads {
-            let mut table = PageTable::default();
-            let (keys, values) = model.kv_matrix(h, context_len);
-            let written = self.kv.append_many(&mut table, &keys.data, &values.data);
-            debug_assert_eq!(written, context_len);
+        let mut published: Vec<Vec<(usize, Arc<HashBlock>)>> = Vec::with_capacity(heads);
+        for (h, table) in tables.iter_mut().enumerate() {
+            let start = table.n_tokens;
+            if start == 0 {
+                let (keys, values) = model.kv_matrix(h, context_len);
+                let written = self.kv.append_many(table, &keys.data, &values.data);
+                debug_assert_eq!(written, context_len);
+            } else {
+                // Generate and append only past the shared run.
+                for t in start..context_len {
+                    let (k, v) = model.kv_at(h, t);
+                    let ok = self.kv.append(table, &k, &v);
+                    assert!(ok, "KV pool exhausted during prefill (commitment violated)");
+                }
+            }
             if let Some(spec) = spec {
                 // Paged-native prefill (Alg. 1 for SOCKET; page
                 // min/max, PQ codes, channel stats... for the rest):
                 // the index is built straight off the pool view — the
                 // same bytes the decode kernels read — and extended per
                 // decoded token thereafter, never rebuilt.
-                let cfg = SelectorConfig::new(self.config.model.head_dim, seq_id ^ (h as u64) << 11)
-                    .with_lsh(self.config.lsh);
+                let cfg = SelectorConfig::new(
+                    self.config.model.head_dim,
+                    SELECTOR_SEED ^ ((h as u64) << 11),
+                )
+                .with_lsh(self.config.lsh);
                 let mut s = (spec.build)(&cfg);
-                s.build(&self.kv.view(&table));
+                if use_cache {
+                    // The contiguous run of frozen hash blocks carried
+                    // by the shared path (one per 4 pages) attaches by
+                    // handle; only the remainder is hashed.
+                    let mut shared_blocks: Vec<Arc<HashBlock>> = Vec::new();
+                    for b in 0.. {
+                        let page_idx = b * PAGES_PER_BLOCK + PAGES_PER_BLOCK - 1;
+                        let Some(&node) = path.get(page_idx) else { break };
+                        let Some(blk) = self.tree.hash_block(node, h) else { break };
+                        shared_blocks.push(blk);
+                    }
+                    self.prefix_stats.hash_blocks_reused += shared_blocks.len();
+                    published.push(s.build_shared(&self.kv.view(table), &shared_blocks));
+                } else {
+                    s.build(&self.kv.view(table));
+                }
                 selectors.push(s);
             }
-            tables.push(table);
         }
+
+        if use_cache {
+            if let Some(p) = prompt {
+                // Publish the missed full pages (and their frozen hash
+                // blocks) so later requests share what this one built.
+                let mut node_ids = path.clone();
+                let mut parent = path.last().copied();
+                for page in shared_full..full_pages {
+                    let key = p.page_key(page).expect("full page inside the covered context");
+                    let run: Vec<usize> = tables.iter().map(|t| t.pages[page]).collect();
+                    let id = self.tree.insert_child(parent, key, &run, &mut self.kv);
+                    node_ids.push(id);
+                    parent = Some(id);
+                }
+                // Freeze the partial tail page too (if it wasn't itself
+                // shared): the tree's reference makes this sequence's
+                // own first decode append copy-on-write, keeping the
+                // snapshot immutable for future partial matches.
+                if tail_tokens > 0 && tail_node.is_none() {
+                    let key = p.tail_key(full_pages, tail_tokens).expect("tail inside the context");
+                    let run: Vec<usize> = tables.iter().map(|t| t.pages[full_pages]).collect();
+                    self.tree.insert_tail(parent, key, tail_tokens, &run, &mut self.kv);
+                }
+                for (h, frozen) in published.iter().enumerate() {
+                    for (blk, arc) in frozen {
+                        let page_idx = blk * PAGES_PER_BLOCK + PAGES_PER_BLOCK - 1;
+                        if let Some(&node) = node_ids.get(page_idx) {
+                            self.tree.set_hash_block(node, h, arc.clone());
+                        }
+                    }
+                }
+            }
+            self.prefix_stats.lookups += 1;
+            let tail_shared = usize::from(tail_node.is_some());
+            if shared_full > 0 || tail_shared > 0 {
+                self.prefix_stats.hits += 1;
+            }
+            let shared_per_head = shared_full + tail_shared;
+            self.prefix_stats.shared_pages += heads * shared_per_head;
+            self.prefix_stats.private_pages +=
+                heads * (PagedKvCache::pages_for(context_len) - shared_per_head);
+            self.prefix_stats.tokens_saved +=
+                shared_full * PAGE_TOKENS + tail_shared * tail_tokens;
+        }
+
         self.sequences
             .insert(seq_id, SequenceState { tables, selectors, mode, model, decoded: 0 });
         Ok(true)
@@ -366,7 +584,14 @@ impl DecodeEngine {
         // A short turn can fit entirely in the previous turn's unused
         // headroom (needed <= held): keep the larger commitment.
         let extra = needed.saturating_sub(held);
-        if self.kv.total_pages() - self.committed_pages < extra {
+        let mut available =
+            self.kv.total_pages().saturating_sub(self.committed_pages + self.tree.held_refs());
+        if available < extra {
+            self.tree.evict_lru(&mut self.kv, extra - available);
+            available =
+                self.kv.total_pages().saturating_sub(self.committed_pages + self.tree.held_refs());
+        }
+        if available < extra {
             return false;
         }
         self.committed_pages += extra;
@@ -396,6 +621,60 @@ impl DecodeEngine {
             }
         }
         total
+    }
+
+    /// Drain the accumulated prefix-cache counters (scheduler drains
+    /// them into the metrics registry alongside prune stats).
+    pub fn take_prefix_stats(&mut self) -> PrefixStats {
+        std::mem::take(&mut self.prefix_stats)
+    }
+
+    /// Number of resident prefix-tree nodes (one shared page run each).
+    pub fn prefix_nodes(&self) -> usize {
+        self.tree.n_nodes()
+    }
+
+    /// Physical pages currently pinned by the prefix tree's own
+    /// references (shared pages also mapped by live sequences count
+    /// once here and once per mapping table).
+    pub fn prefix_held_pages(&self) -> usize {
+        self.tree.held_refs()
+    }
+
+    /// Audit the pool's refcounts against every live reference holder:
+    /// each physical page's refcount must equal (tree references) +
+    /// (occurrences across live sequences' page tables), and the
+    /// number of referenced pages must match the pool's in-use count.
+    /// Any drift means a leak (page never freed) or a double-free in
+    /// waiting; the scheduler asserts this at idle drain points.
+    pub fn page_accounting(&self) -> Result<(), String> {
+        let mut expected: HashMap<usize, usize> = HashMap::new();
+        self.tree.for_each_held_page(|page| {
+            *expected.entry(page).or_insert(0) += 1;
+        });
+        for state in self.sequences.values() {
+            for table in &state.tables {
+                for &page in &table.pages {
+                    *expected.entry(page).or_insert(0) += 1;
+                }
+            }
+        }
+        for (&page, &want) in &expected {
+            let got = self.kv.ref_count(page);
+            if got != want {
+                return Err(format!(
+                    "page {page}: refcount {got} but {want} live references"
+                ));
+            }
+        }
+        let in_use = self.kv.pages_in_use();
+        if expected.len() != in_use {
+            return Err(format!(
+                "{} referenced pages but pool reports {in_use} in use (leak)",
+                expected.len()
+            ));
+        }
+        Ok(())
     }
 
     /// Release a finished sequence's pages and its commitment.
@@ -678,5 +957,117 @@ mod tests {
             assert_eq!(serial.decoded(s), 3);
             assert_eq!(batched.decoded(s), 3);
         }
+    }
+
+    #[test]
+    fn prefix_shared_decode_is_bit_identical_to_isolated() {
+        let mut shared = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        // 300 tokens = 18 full pages + a 12-token tail; 4 full hash
+        // blocks (64 tokens each) with a 44-token hashed remainder.
+        let prompt = PromptSpec::from_seed(0xABCD, 300);
+        // Seq 1 populates the tree: a lookup, but a cold miss.
+        assert!(shared.prefill_opts(1, 300, 8, None, Some(&prompt)).unwrap());
+        assert_eq!(shared.prefix_nodes(), 19, "18 full pages + frozen tail");
+        // Mid-decode appends fork seq 1 off its own frozen tail (COW):
+        // the tree's snapshot must stay immutable underneath.
+        shared.decode_step(1);
+        shared.decode_step(1);
+        let cold = shared.take_prefix_stats();
+        assert_eq!((cold.lookups, cold.hits, cold.hash_blocks_reused), (1, 0, 0));
+        assert!(cold.tokens_saved == 0 && cold.shared_pages == 0);
+
+        // Seq 2, same prompt: full prefix hit — every page mapped, all
+        // 4 frozen hash blocks attached per kv head, zero K/V recompute.
+        assert!(shared.prefill_opts(2, 300, 8, None, Some(&prompt)).unwrap());
+        let hit = shared.take_prefix_stats();
+        assert_eq!((hit.lookups, hit.hits), (1, 1));
+        assert_eq!(hit.tokens_saved, 300, "18 full pages x 16 + 12-token tail");
+        assert_eq!(hit.shared_pages, 2 * 19);
+        assert_eq!(hit.private_pages, 0);
+        assert_eq!(hit.hash_blocks_reused, 2 * 4);
+        shared.page_accounting().expect("refcounts after shared admit");
+
+        // Isolated control: fresh engine, same seq id and prompt, no
+        // resident tree. Selection indices, scores, and outputs all
+        // feed these vectors — any divergence shows up here.
+        let mut isolated = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        assert!(isolated.prefill_opts(2, 300, 8, None, Some(&prompt)).unwrap());
+        for step in 0..5 {
+            let want = isolated.decode_step(2);
+            let got = shared.decode_step(2);
+            assert_eq!(got, want, "shared decode diverged at step {step}");
+        }
+        shared.page_accounting().expect("refcounts after COW decode");
+
+        // cache:"off" requests serve identically but bypass the tree.
+        let nodes = shared.prefix_nodes();
+        let mut opt_out = prompt.clone();
+        opt_out.cache = false;
+        let mut control = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        assert!(control.prefill_opts(3, 300, 8, None, Some(&opt_out)).unwrap());
+        assert!(shared.prefill_opts(3, 300, 8, None, Some(&opt_out)).unwrap());
+        assert_eq!(shared.prefix_nodes(), nodes, "cache-off must not touch the tree");
+        assert_eq!(shared.take_prefix_stats(), PrefixStats::default());
+        assert_eq!(shared.decode_step(3), control.decode_step(3));
+        shared.page_accounting().expect("refcounts with cache-off sequence live");
+    }
+
+    #[test]
+    fn prefix_release_and_readmission_share_resident_pages() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        // 200 tokens = 12 full pages + an 8-token tail.
+        let prompt = PromptSpec::from_seed(7, 200);
+        assert!(e.prefill_opts(1, 200, 4, None, Some(&prompt)).unwrap());
+        e.decode_step(1);
+        e.release(1);
+        e.page_accounting().expect("refcounts after release");
+        // The tree keeps the whole prefix resident past the release.
+        assert_eq!(e.prefix_held_pages(), 2 * 13);
+        let free_parked = e.free_pages();
+
+        // Re-admission maps the parked pages back in by incref.
+        assert!(e.prefill_opts(2, 200, 4, None, Some(&prompt)).unwrap());
+        let s = e.take_prefix_stats();
+        assert_eq!((s.hits, s.tokens_saved), (1, 200));
+        e.page_accounting().expect("refcounts after readmission");
+        e.decode_step(2);
+        e.release(2);
+        e.page_accounting().expect("refcounts after final release");
+        // Decode COW'd a private tail which release freed again: the
+        // pool must return exactly to its parked level (no leaks).
+        assert_eq!(e.free_pages(), free_parked);
+    }
+
+    #[test]
+    fn prefix_tree_evicts_under_pressure_but_never_a_mapped_page() {
+        // Pool sized so two distinct resident prefixes cannot coexist.
+        let mut e = DecodeEngine::new(EngineConfig {
+            capacity_pages: 24,
+            ..cfg(AttentionMode::Dense)
+        });
+        // A: 128 tokens = 8 pages x 2 heads held by the tree after release.
+        let a = PromptSpec::from_seed(1, 128);
+        assert!(e.prefill_opts(1, 128, 16, None, Some(&a)).unwrap());
+        e.release(1);
+        assert_eq!(e.prefix_held_pages(), 16);
+        // B needs 2 x pages_for(144) = 18 > the 8 unheld pages: the
+        // admission path must evict A's cold leaves to make room.
+        let b = PromptSpec::from_seed(2, 128);
+        assert!(e.prefill_opts(2, 128, 16, None, Some(&b)).unwrap());
+        assert!(e.prefix_held_pages() < 32, "A partially evicted");
+        e.page_accounting().expect("refcounts after eviction");
+        // C cannot fit while B is live, and eviction may only take A's
+        // leftovers — B's pages are mapped (ref >= 2) and untouchable.
+        let c = PromptSpec::from_seed(3, 128);
+        assert!(!e.prefill_opts(3, 128, 16, None, Some(&c)).unwrap());
+        assert!(e.has_sequence(2));
+        assert_eq!(e.sequence_tokens(2), Some(128));
+        e.page_accounting().expect("refcounts after refused admission");
+        // B still decodes into its commitment despite the full pool.
+        for _ in 0..16 {
+            e.decode_step(2);
+        }
+        e.release(2);
+        e.page_accounting().expect("refcounts after final release");
     }
 }

@@ -22,7 +22,7 @@ pub mod engine;
 pub mod scheduler;
 
 pub use batcher::{Batch, BatchPolicy, Batcher};
-pub use engine::{AttentionMode, DecodeEngine, EngineConfig};
+pub use engine::{AttentionMode, DecodeEngine, EngineConfig, PrefixStats};
 pub use scheduler::{
     Completion, Coordinator, EngineSnapshot, RequestHandle, SchedulerStats, Submission, TokenEvent,
 };

@@ -140,6 +140,9 @@ enum Msg {
     /// Release a parked session's pages (idle-TTL eviction path).
     Release(u64),
     Snapshot(Sender<EngineSnapshot>),
+    /// Swap the batch-assembly policy in place (hot reload). Applies
+    /// from the next iteration; queued and running work is unaffected.
+    SetPolicy(BatchPolicy),
     Shutdown,
 }
 
@@ -254,6 +257,12 @@ impl Coordinator {
     /// eviction path). Unknown or busy ids are ignored.
     pub fn release(&self, seq_id: u64) {
         let _ = self.tx.send(Msg::Release(seq_id));
+    }
+
+    /// Replace the scheduler's batch policy without restarting it (the
+    /// server's hot-reload path). Takes effect from the next iteration.
+    pub fn set_policy(&self, policy: BatchPolicy) {
+        let _ = self.tx.send(Msg::SetPolicy(policy));
     }
 
     /// Snapshot engine occupancy + scheduler stats without stopping the
@@ -496,12 +505,22 @@ fn scheduler_loop(
     let mut parked: HashSet<u64> = HashSet::new();
     let mut stats = SchedulerStats::default();
     let mut draining = false;
+    // One accounting audit per drain-to-idle transition (re-armed by
+    // every batch that runs), not per queue-poll iteration.
+    let mut audited = false;
 
     loop {
         // Drain the submission queue without blocking (block only when
         // fully idle to avoid a busy-spin).
         loop {
             let idle = batcher.waiting_len() == 0 && batcher.running_len() == 0;
+            if idle && !audited {
+                // Fully drained: every page must be accounted for by
+                // the prefix tree or a live sequence (parked included).
+                // Drift here is a refcount leak — fail loudly, now.
+                engine.page_accounting().expect("page accounting after scheduler drain");
+                audited = true;
+            }
             let msg = if idle && !draining {
                 match rx.recv() {
                     Ok(m) => Some(m),
@@ -540,6 +559,7 @@ fn scheduler_loop(
                 Some(Msg::Snapshot(tx)) => {
                     let _ = tx.send(snapshot_of(&engine, &parked, &stats));
                 }
+                Some(Msg::SetPolicy(p)) => batcher.policy = p,
                 Some(Msg::Shutdown) => draining = true,
                 None => {}
             }
@@ -548,30 +568,33 @@ fn scheduler_loop(
             }
         }
         if draining && batcher.waiting_len() == 0 && batcher.running_len() == 0 {
+            engine.page_accounting().expect("page accounting at shutdown");
             return stats;
         }
 
         let batch = batcher.next_batch();
         if batch.is_empty() {
             if draining {
+                engine.page_accounting().expect("page accounting at shutdown");
                 return stats;
             }
             continue;
         }
+        audited = false;
         let mut progressed = !batch.decodes.is_empty();
         // Prefills / session extends (admission may fail under KV
         // pressure → requeue).
         for &(seq, ctx) in batch.prefills.iter() {
-            let (decode_len, mode, resume) = inflight
+            let (decode_len, mode, prompt, resume) = inflight
                 .get(&seq)
-                .map(|f| (f.req.decode_len, f.req.mode.clone(), f.resume))
-                .unwrap_or((0, None, false));
+                .map(|f| (f.req.decode_len, f.req.mode.clone(), f.req.prompt.clone(), f.resume))
+                .unwrap_or((0, None, None, false));
             let admitted = if resume {
                 // Resumed turn: append to the parked index in place.
                 // Zero prefill tokens — `session_tokens` counts these.
                 Ok(engine.session_extend(seq, ctx, decode_len))
             } else {
-                engine.prefill_as(seq, ctx, decode_len, mode.as_ref())
+                engine.prefill_opts(seq, ctx, decode_len, mode.as_ref(), prompt.as_ref())
             };
             let admitted = match admitted {
                 Ok(admitted) => admitted,
@@ -658,6 +681,11 @@ fn scheduler_loop(
                 );
             }
         }
+        if !batch.prefills.is_empty() {
+            // Fold the iteration's prefix-cache lookups into the
+            // registry (hits, page sharing, tokens the cache absorbed).
+            metrics.absorb_prefix(engine.take_prefix_stats());
+        }
         if !batch.decodes.is_empty() {
             // Fold the step's pruning telemetry into the registry while
             // it is still warm (live selectors are drained in place).
@@ -692,11 +720,18 @@ mod tests {
     }
 
     fn req(id: u64, ctx: usize, dec: usize) -> Request {
-        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None }
+        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None, prompt: None }
     }
 
     fn req_as(id: u64, ctx: usize, dec: usize, mode: AttentionMode) -> Request {
-        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: Some(mode) }
+        Request {
+            id,
+            arrival_ms: 0.0,
+            context_len: ctx,
+            decode_len: dec,
+            mode: Some(mode),
+            prompt: None,
+        }
     }
 
     fn session_turn(id: u64, ctx: usize, dec: usize, resume: bool) -> Submission {
@@ -1088,6 +1123,48 @@ mod tests {
             decode_len: 2,
         };
         assert!(!h.wait().ok, "wait must not panic on disconnect");
+    }
+
+    #[test]
+    fn shared_prefix_requests_hit_the_cache_end_to_end() {
+        use crate::kvcache::PromptSpec;
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let prompt = PromptSpec::from_text("You are a helpful assistant.", 128);
+        for id in 1..=3u64 {
+            let c = coord
+                .submit(Request { prompt: Some(prompt.clone()), ..req(id, 128, 2) })
+                .wait();
+            assert!(c.ok, "{:?}", c.error);
+        }
+        let j = coord.metrics().prefix_json();
+        assert_eq!(j.get("lookups").unwrap().as_usize(), Some(3), "{j}");
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(2), "first is cold, rest hit");
+        assert!(j.get("prefill_tokens_saved").unwrap().as_usize().unwrap() >= 2 * 128, "{j}");
+        assert!(j.get("shared_page_ratio").unwrap().as_f64().unwrap() > 0.5, "{j}");
+        // An opted-out request is served but leaves the gauges alone.
+        let mut opt_out = prompt.clone();
+        opt_out.cache = false;
+        let c = coord.submit(Request { prompt: Some(opt_out), ..req(9, 128, 2) }).wait();
+        assert!(c.ok, "{:?}", c.error);
+        let j2 = coord.metrics().prefix_json();
+        assert_eq!(j2.get("lookups").unwrap().as_usize(), Some(3), "cache-off must not look up");
+        // The drain audit in shutdown re-checks refcounts one last time.
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 4);
+    }
+
+    #[test]
+    fn set_policy_swaps_batching_without_restart() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        // Throttle to one prefill per iteration mid-flight; the change
+        // must take without dropping queued or future work.
+        coord.set_policy(BatchPolicy { max_prefills: 1, ..BatchPolicy::default() });
+        let handles: Vec<RequestHandle> = (0..4).map(|i| coord.submit(req(i, 64, 2))).collect();
+        for h in handles {
+            assert!(h.wait().ok);
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 4);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
 use crate::util::pool::WorkerPool;
 use crate::util::{fnum, pool, Json, Pcg64, Table};
+use crate::workload::trace::{SharedPrefixConfig, SharedPrefixTrace, TraceConfig};
 use std::time::Instant;
 
 pub struct ThroughputPoint {
@@ -725,6 +726,74 @@ pub fn run_serving_lane(scale: Scale, context: usize, decode: usize, turns: usiz
         .set("metrics", metrics)
 }
 
+/// Prefix lane: a shared-prefix workload (Zipf prefix popularity, the
+/// multi-tenant system-prompt shape from `workload::trace`) served
+/// through the coordinator twice — once with prompt specs attached
+/// (prefix cache live) and once with the same content opted out
+/// (`cache: false`, every prefill recomputed). Arrivals, lengths, and
+/// decode work are identical; only the cache differs, so the wall-clock
+/// delta plus the hit-rate / tokens-saved gauges are the prefix-sharing
+/// acceptance measurement.
+pub fn run_prefix_lane(scale: Scale, n_requests: usize, cfg: SharedPrefixConfig) -> Json {
+    use crate::coordinator::{AttentionMode, BatchPolicy, Coordinator, EngineConfig};
+    assert!(n_requests >= 2, "the lane exists to measure re-use across requests");
+    let requests = SharedPrefixTrace::new(cfg, scale.seed).take(n_requests);
+    let total_prefill: usize = requests.iter().map(|r| r.context_len).sum();
+    // Pool sized so every request and the retained prefix tree fit
+    // together; eviction pressure is a different lane's business.
+    let capacity: usize = 2
+        * requests
+            .iter()
+            .map(|r| PagedKvCache::pages_for(r.context_len + r.decode_len))
+            .sum::<usize>();
+    let lane = |cache_on: bool| -> Json {
+        let config = EngineConfig {
+            model: ModelConfig { head_dim: scale.dim, n_kv_heads: 1, ..ModelConfig::tiny() },
+            lsh: LshParams { p: 6, l: 16, tau: 0.5 },
+            mode: AttentionMode::socket(8.0),
+            capacity_pages: capacity,
+            sink: 16,
+            local: 16,
+        };
+        let coordinator = Coordinator::spawn(config, BatchPolicy::default());
+        let t0 = Instant::now();
+        let handles: Vec<_> = requests
+            .iter()
+            .map(|r| {
+                let mut req = r.clone();
+                if let Some(p) = req.prompt.as_mut() {
+                    p.cache = cache_on;
+                }
+                req.arrival_ms = 0.0; // closed-loop: saturate the batcher
+                coordinator.submit(req)
+            })
+            .collect();
+        for h in handles {
+            let c = h.wait();
+            assert!(c.ok, "prefix lane request failed: {:?}", c.error);
+        }
+        let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let prefix = coordinator.metrics().prefix_json();
+        coordinator.shutdown();
+        Json::obj()
+            .set("cache", cache_on)
+            .set("elapsed_ms", elapsed_ms)
+            .set("prefill_tps", total_prefill as f64 / (elapsed_ms / 1e3).max(1e-9))
+            .set("prefix", prefix)
+    };
+    let cached = lane(true);
+    let cold = lane(false);
+    let speedup = cold.get("elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(0.0)
+        / cached.get("elapsed_ms").and_then(|v| v.as_f64()).unwrap_or(1.0).max(1e-9);
+    Json::obj()
+        .set("bench", "throughput_prefix_lane")
+        .set("requests", n_requests)
+        .set("prefill_tokens", total_prefill)
+        .set("cached", cached)
+        .set("cold", cold)
+        .set("speedup", speedup)
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -853,6 +922,37 @@ mod tests {
         // The artifact round-trips through the writer/parser.
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_serving_lane"));
+    }
+
+    #[test]
+    fn prefix_lane_saves_tokens_only_when_the_cache_is_on() {
+        let scale = Scale { n: 512, dim: 16, instances: 1, seed: 13 };
+        let cfg = SharedPrefixConfig {
+            base: TraceConfig {
+                context_min: 128,
+                context_max: 512,
+                decode_min: 1,
+                decode_max: 2,
+                rate_rps: 100.0,
+            },
+            n_prefixes: 2,
+            zipf_s: 1.0,
+            prefix_len: 128,
+        };
+        let doc = run_prefix_lane(scale, 6, cfg);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("throughput_prefix_lane"));
+        assert_eq!(doc.get("requests").unwrap().as_usize(), Some(6));
+        let cached = doc.get("cached").unwrap().get("prefix").unwrap();
+        // 6 requests over 2 prefixes: at least 4 must hit the cache.
+        assert!(cached.get("hits").unwrap().as_usize().unwrap() >= 4, "{doc}");
+        assert!(cached.get("prefill_tokens_saved").unwrap().as_usize().unwrap() >= 4 * 128, "{doc}");
+        let cold = doc.get("cold").unwrap().get("prefix").unwrap();
+        assert_eq!(cold.get("hits").unwrap().as_usize(), Some(0), "{doc}");
+        assert_eq!(cold.get("prefill_tokens_saved").unwrap().as_usize(), Some(0), "{doc}");
+        assert!(doc.get("speedup").unwrap().as_f64().unwrap() > 0.0);
+        // The artifact round-trips through the writer/parser.
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_prefix_lane"));
     }
 
     #[test]

@@ -3,7 +3,9 @@
 //! caches at prefill and extends at every decode step.
 
 pub mod paged;
+pub mod prefix;
 pub mod store;
 
 pub use paged::{KvView, PageTable, PagedKvCache, PAGE_TOKENS};
+pub use prefix::{PageKey, PrefixTree, PromptSegment, PromptSpec};
 pub use store::{HashStore, LayerCache, SequenceCache};

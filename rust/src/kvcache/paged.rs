@@ -2,6 +2,11 @@
 //! a shared pool, so many sequences share GPU/host memory without
 //! fragmentation. The coordinator maps logical token positions to
 //! physical pages through a per-sequence [`PageTable`].
+//!
+//! Pages are **refcounted**: the prefix cache ([`crate::kvcache::prefix`])
+//! maps one physical page into many page tables, and writes go through a
+//! copy-on-write guard ([`PagedKvCache::ensure_private_tail`]) so a
+//! mid-decode append to a shared tail page copies it private first.
 
 /// Tokens per page. 16 matches vLLM's default block size.
 pub const PAGE_TOKENS: usize = 16;
@@ -27,6 +32,9 @@ pub struct PagedKvCache {
     /// V storage, same layout.
     v: Vec<f32>,
     free_list: Vec<usize>,
+    /// Reference count per physical page: 0 = free, 1 = exclusively
+    /// owned (by one table or the prefix tree), >1 = shared.
+    refs: Vec<u32>,
 }
 
 /// Per-sequence logical→physical mapping plus the token count.
@@ -41,7 +49,12 @@ impl PageTable {
     #[inline]
     pub fn locate(&self, token: usize) -> (usize, usize) {
         assert!(token < self.n_tokens, "token {token} out of range {}", self.n_tokens);
-        (self.pages[token / PAGE_TOKENS], token % PAGE_TOKENS)
+        // SAFETY: the assert above gives token < n_tokens, and a table
+        // always holds ceil(n_tokens / PAGE_TOKENS) pages (append and
+        // map_shared keep that invariant), so token / PAGE_TOKENS is in
+        // range.
+        let page = unsafe { *self.pages.get_unchecked(token / PAGE_TOKENS) };
+        (page, token % PAGE_TOKENS)
     }
 }
 
@@ -53,6 +66,7 @@ impl PagedKvCache {
             k: vec![0.0; capacity_pages * PAGE_TOKENS * dim],
             v: vec![0.0; capacity_pages * PAGE_TOKENS * dim],
             free_list: (0..capacity_pages).rev().collect(),
+            refs: vec![0; capacity_pages],
         }
     }
 
@@ -64,31 +78,103 @@ impl PagedKvCache {
         self.capacity_pages
     }
 
+    /// Pages currently allocated (refcount > 0).
+    pub fn pages_in_use(&self) -> usize {
+        self.capacity_pages - self.free_list.len()
+    }
+
     /// Pages needed to hold `n` tokens.
     pub fn pages_for(n: usize) -> usize {
         n.div_ceil(PAGE_TOKENS)
     }
 
+    /// Reference count of one physical page (0 = free / out of range).
+    pub fn ref_count(&self, page: usize) -> u32 {
+        match self.refs.get(page) {
+            Some(&r) => r,
+            None => 0,
+        }
+    }
+
+    /// Sum of all page refcounts — the pool-accounting invariant checked
+    /// after scheduler drains: it must equal the prefix tree's held refs
+    /// plus every live sequence's mapped-page count.
+    pub fn total_refs(&self) -> usize {
+        self.refs.iter().map(|&r| r as usize).sum()
+    }
+
+    /// Pop a free page and mark it exclusively owned.
+    fn alloc_page(&mut self) -> Option<usize> {
+        let page = self.free_list.pop()?;
+        if let Some(r) = self.refs.get_mut(page) {
+            debug_assert_eq!(*r, 0, "free-listed page {page} had refs");
+            *r = 1;
+        }
+        Some(page)
+    }
+
+    /// Add a reference to an allocated page.
+    pub fn incref(&mut self, page: usize) {
+        assert!(page < self.capacity_pages, "page {page} out of range");
+        if let Some(r) = self.refs.get_mut(page) {
+            assert!(*r > 0, "incref on free page {page}");
+            *r += 1;
+        }
+    }
+
+    /// Drop a reference; the page returns to the free list at zero.
+    pub fn decref(&mut self, page: usize) {
+        assert!(page < self.capacity_pages, "page {page} out of range");
+        if let Some(r) = self.refs.get_mut(page) {
+            assert!(*r > 0, "decref on free page {page}");
+            *r -= 1;
+            if *r == 0 {
+                self.free_list.push(page);
+            }
+        }
+    }
+
+    /// Flat offset of (page, slot) in the K/V buffers.
+    #[inline]
+    fn offset(&self, page: usize, slot: usize) -> usize {
+        debug_assert!(page < self.capacity_pages, "page {page} out of range");
+        debug_assert!(slot < PAGE_TOKENS);
+        (page * PAGE_TOKENS + slot) * self.dim
+    }
+
     /// Append one token's K/V to a sequence, allocating a page on
     /// boundary crossings. Returns false (and leaves state unchanged) if
     /// the pool is exhausted — the backpressure signal the scheduler
-    /// watches.
+    /// watches. If the sequence's tail page is shared (prefix-cache
+    /// partial-tail hit), the write copies it private first
+    /// (copy-on-write), which can also exhaust the pool.
     pub fn append(&mut self, table: &mut PageTable, key: &[f32], value: &[f32]) -> bool {
         assert_eq!(key.len(), self.dim);
         assert_eq!(value.len(), self.dim);
         let slot = table.n_tokens % PAGE_TOKENS;
         if slot == 0 {
-            match self.free_list.pop() {
+            match self.alloc_page() {
                 Some(p) => table.pages.push(p),
                 None => return false,
             }
+        } else if !self.ensure_private_tail(table) {
+            return false;
         }
         // A page always exists here: slot != 0 means an earlier append
-        // opened it; slot == 0 just pushed one (or returned false).
+        // or map_shared opened it; slot == 0 just pushed one (or
+        // returned false).
         let Some(&page) = table.pages.last() else { return false };
-        let off = (page * PAGE_TOKENS + slot) * self.dim;
-        self.k[off..off + self.dim].copy_from_slice(key);
-        self.v[off..off + self.dim].copy_from_slice(value);
+        let off = self.offset(page, slot);
+        let dim = self.dim;
+        // SAFETY: `page` came from this pool's free list (alloc_page /
+        // ensure_private_tail), so page < capacity_pages, and
+        // slot < PAGE_TOKENS; hence off + dim <= k.len() == v.len() by
+        // construction in `new`.
+        let dst = unsafe { self.k.get_unchecked_mut(off..off + dim) };
+        dst.copy_from_slice(key);
+        // SAFETY: same range argument as the K write above.
+        let dst = unsafe { self.v.get_unchecked_mut(off..off + dim) };
+        dst.copy_from_slice(value);
         table.n_tokens += 1;
         true
     }
@@ -111,31 +197,78 @@ impl PagedKvCache {
         );
         assert_eq!(keys.len(), values.len(), "keys/values length mismatch");
         let n = keys.len() / self.dim;
-        for t in 0..n {
-            if !self.append(table, &keys[t * self.dim..(t + 1) * self.dim], &values[t * self.dim..(t + 1) * self.dim]) {
+        for (t, (key, value)) in keys.chunks_exact(self.dim).zip(values.chunks_exact(self.dim)).enumerate() {
+            if !self.append(table, key, value) {
                 return t;
             }
         }
         n
     }
 
+    /// Map an already-resident page into `table` by reference — the
+    /// prefix cache's hit path. The first `tokens` slots of the page
+    /// become visible through the table (a full page for interior prefix
+    /// pages, fewer for a shared partial tail). Shared pages are only
+    /// ever mapped onto a page-aligned table, before any private append.
+    pub fn map_shared(&mut self, table: &mut PageTable, page: usize, tokens: usize) {
+        assert!(tokens >= 1 && tokens <= PAGE_TOKENS, "shared map of {tokens} tokens");
+        assert_eq!(table.n_tokens % PAGE_TOKENS, 0, "shared pages map on page boundaries");
+        self.incref(page);
+        table.pages.push(page);
+        table.n_tokens += tokens;
+    }
+
+    /// Copy-on-write guard: if the table's last page is shared, replace
+    /// it with a private copy before a write lands. Returns false when
+    /// the pool has no page left for the copy (state unchanged).
+    pub fn ensure_private_tail(&mut self, table: &mut PageTable) -> bool {
+        let Some(&page) = table.pages.last() else { return true };
+        if self.ref_count(page) <= 1 {
+            return true;
+        }
+        let Some(fresh) = self.alloc_page() else { return false };
+        let len = PAGE_TOKENS * self.dim;
+        self.k.copy_within(page * len..(page + 1) * len, fresh * len);
+        self.v.copy_within(page * len..(page + 1) * len, fresh * len);
+        self.decref(page);
+        if let Some(last) = table.pages.last_mut() {
+            *last = fresh;
+        }
+        true
+    }
+
     #[inline]
     pub fn key(&self, table: &PageTable, token: usize) -> &[f32] {
         let (page, slot) = table.locate(token);
-        let off = (page * PAGE_TOKENS + slot) * self.dim;
-        &self.k[off..off + self.dim]
+        let off = self.offset(page, slot);
+        // SAFETY: tables are only populated by this pool's append /
+        // map_shared, so page < capacity_pages and slot < PAGE_TOKENS
+        // (from locate); off + dim <= k.len() by construction.
+        unsafe { self.k.get_unchecked(off..off + self.dim) }
     }
 
     #[inline]
     pub fn value(&self, table: &PageTable, token: usize) -> &[f32] {
         let (page, slot) = table.locate(token);
-        let off = (page * PAGE_TOKENS + slot) * self.dim;
-        &self.v[off..off + self.dim]
+        let off = self.offset(page, slot);
+        // SAFETY: same range argument as `key`.
+        unsafe { self.v.get_unchecked(off..off + self.dim) }
     }
 
-    /// Release a sequence's pages back to the pool.
+    /// Release a sequence's pages: each loses one reference and returns
+    /// to the pool only when nothing else (another table, the prefix
+    /// tree) still maps it.
     pub fn release(&mut self, table: &mut PageTable) {
-        self.free_list.extend(table.pages.drain(..));
+        for page in table.pages.drain(..) {
+            assert!(page < self.capacity_pages, "page {page} out of range");
+            if let Some(r) = self.refs.get_mut(page) {
+                assert!(*r > 0, "release of free page {page}");
+                *r -= 1;
+                if *r == 0 {
+                    self.free_list.push(page);
+                }
+            }
+        }
         table.n_tokens = 0;
     }
 
@@ -207,14 +340,18 @@ impl<'a> KvView<'a> {
     #[inline]
     pub fn key(&self, t: usize) -> &'a [f32] {
         let off = self.offset(t);
-        &self.k[off..off + self.dim]
+        // SAFETY: offset() locates a (page, slot) that append /
+        // map_shared put in the table, so the page is inside the pool's
+        // buffers and off + dim is in range by pool construction.
+        unsafe { self.k.get_unchecked(off..off + self.dim) }
     }
 
     /// Value vector of logical token `t`.
     #[inline]
     pub fn value(&self, t: usize) -> &'a [f32] {
         let off = self.offset(t);
-        &self.v[off..off + self.dim]
+        // SAFETY: same range argument as `key`.
+        unsafe { self.v.get_unchecked(off..off + self.dim) }
     }
 
     /// Length (in tokens, capped at `max`) of the physically contiguous
@@ -230,7 +367,14 @@ impl<'a> KvView<'a> {
         let cap = t.saturating_add(max).min(self.table.n_tokens);
         let mut p = t / PAGE_TOKENS;
         let mut end = ((p + 1) * PAGE_TOKENS).min(cap);
-        while end < cap && pages[p + 1] == pages[p] + 1 {
+        while end < cap {
+            let adjacent = match (pages.get(p), pages.get(p + 1)) {
+                (Some(&a), Some(&b)) => b == a + 1,
+                _ => false,
+            };
+            if !adjacent {
+                break;
+            }
             p += 1;
             end = ((p + 1) * PAGE_TOKENS).min(cap);
         }
@@ -242,7 +386,10 @@ impl<'a> KvView<'a> {
     pub fn key_run(&self, t: usize, max: usize) -> (&'a [f32], usize) {
         let len = self.run_len(t, max);
         let off = self.offset(t);
-        (&self.k[off..off + len * self.dim], len)
+        // SAFETY: run_len only extends across physically adjacent pages
+        // of this pool, so off + len * dim stays inside the K buffer.
+        let run = unsafe { self.k.get_unchecked(off..off + len * self.dim) };
+        (run, len)
     }
 
     /// Values of the contiguous run starting at `t` (at most `max`
@@ -250,7 +397,9 @@ impl<'a> KvView<'a> {
     pub fn value_run(&self, t: usize, max: usize) -> (&'a [f32], usize) {
         let len = self.run_len(t, max);
         let off = self.offset(t);
-        (&self.v[off..off + len * self.dim], len)
+        // SAFETY: same range argument as `key_run`.
+        let run = unsafe { self.v.get_unchecked(off..off + len * self.dim) };
+        (run, len)
     }
 }
 
@@ -446,6 +595,81 @@ mod tests {
         assert_eq!(view.key(PAGE_TOKENS - 1)[0], (PAGE_TOKENS - 1) as f32);
         assert_eq!(view.key(PAGE_TOKENS)[0], PAGE_TOKENS as f32);
         assert_eq!(view.value(PAGE_TOKENS + 4), [(PAGE_TOKENS + 4) as f32, 1.0]);
+    }
+
+    #[test]
+    fn shared_map_reads_and_cow_appends() {
+        let dim = 4;
+        let mut cache = PagedKvCache::new(8, dim);
+        let mut a = PageTable::default();
+        let mut rows = Vec::new();
+        for t in 0..20 {
+            let k = vec![t as f32; dim];
+            let v = vec![-(t as f32); dim];
+            assert!(cache.append(&mut a, &k, &v));
+            rows.push((k, v));
+        }
+        let (p0, p1) = (a.pages[0], a.pages[1]);
+        let mut b = PageTable::default();
+        cache.map_shared(&mut b, p0, PAGE_TOKENS);
+        cache.map_shared(&mut b, p1, 4);
+        assert_eq!(b.n_tokens, 20);
+        assert_eq!(cache.ref_count(p0), 2);
+        assert_eq!(cache.ref_count(p1), 2);
+        for (t, (k, v)) in rows.iter().enumerate() {
+            assert_eq!(cache.key(&b, t), k.as_slice(), "shared key {t}");
+            assert_eq!(cache.value(&b, t), v.as_slice(), "shared value {t}");
+        }
+        // Appending to b copies the shared partial tail before writing.
+        let k_new = vec![99.0; dim];
+        assert!(cache.append(&mut b, &k_new, &k_new));
+        assert_ne!(b.pages[1], p1, "COW must copy the shared tail page");
+        assert_eq!(cache.ref_count(p1), 1, "a keeps the original tail");
+        assert_eq!(cache.key(&b, 20), k_new.as_slice());
+        assert_eq!(cache.key(&b, 19), rows[19].0.as_slice(), "copied slots survive");
+        assert_eq!(cache.key(&a, 19), rows[19].0.as_slice(), "a is untouched");
+        assert_eq!(a.n_tokens, 20);
+        // Releases drop refs; pages free only at refcount zero.
+        cache.release(&mut b);
+        assert_eq!(cache.ref_count(p0), 1);
+        cache.release(&mut a);
+        assert_eq!(cache.free_pages(), 8);
+        assert_eq!(cache.total_refs(), 0);
+    }
+
+    #[test]
+    fn cow_with_exhausted_pool_fails_cleanly() {
+        let dim = 2;
+        let mut cache = PagedKvCache::new(1, dim);
+        let mut a = PageTable::default();
+        let k = [1.0; 2];
+        assert!(cache.append(&mut a, &k, &k));
+        let mut b = PageTable::default();
+        cache.map_shared(&mut b, a.pages[0], 1);
+        assert!(!cache.append(&mut b, &k, &k), "no page left for the COW copy");
+        assert_eq!(b.n_tokens, 1);
+        assert_eq!(cache.ref_count(a.pages[0]), 2);
+    }
+
+    #[test]
+    fn append_after_full_shared_page_opens_private_page() {
+        let dim = 2;
+        let mut cache = PagedKvCache::new(3, dim);
+        let mut a = PageTable::default();
+        for t in 0..PAGE_TOKENS {
+            assert!(cache.append(&mut a, &[t as f32, 0.0], &[t as f32, 0.0]));
+        }
+        let shared = a.pages[0];
+        let mut b = PageTable::default();
+        cache.map_shared(&mut b, shared, PAGE_TOKENS);
+        // The shared page is full, so the append opens a fresh private
+        // page — no COW, the shared page keeps both references.
+        assert!(cache.append(&mut b, &[7.0, 7.0], &[7.0, 7.0]));
+        assert_eq!(b.pages.len(), 2);
+        assert_eq!(b.pages[0], shared);
+        assert_eq!(cache.ref_count(shared), 2);
+        assert_eq!(cache.key(&b, PAGE_TOKENS), [7.0, 7.0]);
+        assert_eq!(cache.key(&b, 3), [3.0, 0.0], "shared slots still visible");
     }
 
     #[test]

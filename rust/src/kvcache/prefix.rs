@@ -1,0 +1,581 @@
+//! Prefix-sharing index over the paged KV pool: a radix tree over
+//! token-aligned prompt prefixes whose nodes own one physical page per
+//! KV head, held alive by page refcounts ([`PagedKvCache`] refcounting).
+//!
+//! Content identity. The synthetic model derives token `t`'s K/V from
+//! `(seed, t)` alone, so a page's content is identified exactly by the
+//! seeds governing its 16 slots — that 16-seed vector is the tree's
+//! radix key ([`PageKey`]). Requests opt in by carrying a
+//! [`PromptSpec`]: an ordered list of `(seed, len)` segments (a shared
+//! system prompt is one popular segment followed by a request-private
+//! tail). Two requests agreeing on every seed of a page position have
+//! bit-identical K/V there, so the engine maps the tree's page into the
+//! new request's table by incref instead of recomputing prefill.
+//!
+//! Sharing rules (mirrored by `DecodeEngine::prefill_opts`):
+//! * whole pages match down the tree from the root; the walk stops at
+//!   the first divergent page — everything after is private;
+//! * a request whose context ends mid-page may share a tree page's
+//!   leading slots ([`PrefixTree::partial_tail`]); its first append
+//!   then triggers copy-on-write in the pool;
+//! * nodes on 4-page boundaries also carry the frozen selector hash
+//!   block for their 64-token run ([`crate::lsh::HashBlock`]), so a
+//!   prefix hit skips Algorithm-1 hashing as well as prefill attention;
+//! * under pool pressure, least-recently-hit leaves whose pages are
+//!   tree-exclusive (refcount 1) are evicted ([`PrefixTree::evict_lru`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kvcache::paged::{PagedKvCache, PAGE_TOKENS};
+use crate::lsh::HashBlock;
+
+/// One prompt segment: `len` tokens whose content is keyed on `seed`
+/// and the token's global position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PromptSegment {
+    pub seed: u64,
+    pub len: usize,
+}
+
+/// A request's prompt content: ordered segments covering the context,
+/// plus the per-request opt-out for the prefix cache.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct PromptSpec {
+    pub segments: Vec<PromptSegment>,
+    /// False disables prefix-cache participation (`"cache":"off"`):
+    /// the request neither reads nor populates the tree.
+    pub cache: bool,
+}
+
+impl PromptSpec {
+    /// A single-segment prompt from an explicit content seed.
+    pub fn from_seed(seed: u64, len: usize) -> PromptSpec {
+        PromptSpec { segments: vec![PromptSegment { seed, len }], cache: true }
+    }
+
+    /// A single-segment prompt whose seed is a stable hash of `text` —
+    /// the server's `"prompt":"..."` path. FNV-1a, so identical prompt
+    /// strings collide into identical content streams across requests.
+    pub fn from_text(text: &str, len: usize) -> PromptSpec {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        PromptSpec::from_seed(h, len)
+    }
+
+    /// Total tokens covered by the segments.
+    pub fn total_len(&self) -> usize {
+        self.segments.iter().map(|s| s.len).sum()
+    }
+
+    /// The content seed governing position `t`, or None past the end.
+    pub fn seed_at(&self, t: usize) -> Option<u64> {
+        let mut start = 0usize;
+        for seg in &self.segments {
+            let end = start + seg.len;
+            if t < end {
+                return Some(seg.seed);
+            }
+            start = end;
+        }
+        None
+    }
+
+    /// Segments as `(seed, len)` pairs for `SyntheticModel::with_segments`.
+    pub fn segment_pairs(&self) -> Vec<(u64, usize)> {
+        self.segments.iter().map(|s| (s.seed, s.len)).collect()
+    }
+
+    /// Content key of page `page`, if the prompt fully covers it.
+    pub fn page_key(&self, page: usize) -> Option<PageKey> {
+        let mut seeds = [0u64; PAGE_TOKENS];
+        for (slot, out) in seeds.iter_mut().enumerate() {
+            *out = self.seed_at(page * PAGE_TOKENS + slot)?;
+        }
+        Some(PageKey { seeds })
+    }
+
+    /// Content key of a *partially* covered tail page: the first
+    /// `tokens` slots carry real seeds, the rest are zero-padded (a
+    /// tail node's match is clamped to its fill, so the padding is
+    /// never compared against prompt content).
+    pub fn tail_key(&self, page: usize, tokens: usize) -> Option<PageKey> {
+        assert!(tokens >= 1 && tokens <= PAGE_TOKENS, "tail of {tokens} tokens");
+        let mut seeds = [0u64; PAGE_TOKENS];
+        for (slot, out) in seeds.iter_mut().take(tokens).enumerate() {
+            *out = self.seed_at(page * PAGE_TOKENS + slot)?;
+        }
+        Some(PageKey { seeds })
+    }
+}
+
+/// Exact content identity of one KV page: the seed governing each of
+/// its 16 token slots. Equal keys ⇒ bit-identical page content (the
+/// model derives K/V from `(seed, position)` alone, and tree position
+/// fixes the page's position).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PageKey {
+    seeds: [u64; PAGE_TOKENS],
+}
+
+impl PageKey {
+    /// Seed of one slot (0 for out-of-range slots).
+    pub fn seed_at(&self, slot: usize) -> u64 {
+        match self.seeds.get(slot) {
+            Some(&s) => s,
+            None => 0,
+        }
+    }
+}
+
+struct Node {
+    key: PageKey,
+    /// Valid token slots of this node's pages. `PAGE_TOKENS` for full
+    /// interior/leaf pages; less for a frozen partial tail (the pool's
+    /// COW guard keeps the remaining slots forever unwritten while the
+    /// tree holds its reference).
+    filled: usize,
+    /// One physical page per KV head, head order.
+    pages: Vec<usize>,
+    children: HashMap<PageKey, usize>,
+    parent: Option<usize>,
+    /// Frozen selector hash block per head; populated only on nodes
+    /// that end a 64-token hash block (every 4th page of a prefix).
+    hash_blocks: Vec<Option<Arc<HashBlock>>>,
+    /// Logical clock of the last walk that traversed this node.
+    last_hit: u64,
+}
+
+/// Radix tree over page-aligned prompt prefixes. Each resident node
+/// holds one refcount on each of its per-head pages; eviction is the
+/// only way the tree gives them back.
+pub struct PrefixTree {
+    n_kv_heads: usize,
+    roots: HashMap<PageKey, usize>,
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    clock: u64,
+}
+
+impl PrefixTree {
+    pub fn new(n_kv_heads: usize) -> PrefixTree {
+        assert!(n_kv_heads > 0, "prefix tree needs at least one kv head");
+        PrefixTree { n_kv_heads, roots: HashMap::new(), nodes: Vec::new(), free_slots: Vec::new(), clock: 0 }
+    }
+
+    fn node(&self, id: usize) -> Option<&Node> {
+        self.nodes.get(id).and_then(|slot| slot.as_ref())
+    }
+
+    fn node_mut(&mut self, id: usize) -> Option<&mut Node> {
+        self.nodes.get_mut(id).and_then(|slot| slot.as_mut())
+    }
+
+    /// Resident nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
+
+    /// Page references the tree holds (nodes x kv heads) — the tree's
+    /// side of the pool-accounting invariant.
+    pub fn held_refs(&self) -> usize {
+        self.nodes.iter().flatten().map(|n| n.pages.len()).sum()
+    }
+
+    /// Visit every physical page the tree references.
+    pub fn for_each_held_page(&self, mut f: impl FnMut(usize)) {
+        for n in self.nodes.iter().flatten() {
+            for &p in &n.pages {
+                f(p);
+            }
+        }
+    }
+
+    /// Walk the prompt's whole-page keys from the root, returning the
+    /// node ids of the longest matching prefix (at most `max_pages`).
+    /// Matched nodes are touched for LRU.
+    pub fn walk(&mut self, spec: &PromptSpec, max_pages: usize) -> Vec<usize> {
+        self.clock += 1;
+        let clock = self.clock;
+        let mut path = Vec::new();
+        let mut cursor: Option<usize> = None;
+        for page in 0..max_pages {
+            let Some(key) = spec.page_key(page) else { break };
+            let next = match cursor {
+                None => self.roots.get(&key).copied(),
+                Some(id) => self.node(id).and_then(|n| n.children.get(&key).copied()),
+            };
+            let Some(id) = next else { break };
+            // A key collision with a zero-padded tail node must not
+            // extend the full-page walk: tails are terminal.
+            match self.node(id) {
+                Some(n) if n.filled == PAGE_TOKENS => {}
+                _ => break,
+            }
+            if let Some(n) = self.node_mut(id) {
+                n.last_hit = clock;
+            }
+            path.push(id);
+            cursor = Some(id);
+        }
+        path
+    }
+
+    /// After a full-page walk matched everything up to `page`, find a
+    /// child of `parent` whose first `tokens` slot seeds agree with the
+    /// prompt at page `page` — a shareable partial tail (the pool's COW
+    /// guard makes later appends safe).
+    pub fn partial_tail(&self, parent: Option<usize>, spec: &PromptSpec, page: usize, tokens: usize) -> Option<usize> {
+        assert!(tokens >= 1 && tokens <= PAGE_TOKENS, "partial tail of {tokens} tokens");
+        let children = match parent {
+            None => &self.roots,
+            Some(id) => &self.node(id)?.children,
+        };
+        'candidates: for (key, &id) in children {
+            // The node must actually hold content for every slot the
+            // request wants (a frozen partial tail's padding slots were
+            // never written).
+            match self.node(id) {
+                Some(n) if n.filled >= tokens => {}
+                _ => continue,
+            }
+            for slot in 0..tokens {
+                if spec.seed_at(page * PAGE_TOKENS + slot) != Some(key.seed_at(slot)) {
+                    continue 'candidates;
+                }
+            }
+            return Some(id);
+        }
+        None
+    }
+
+    /// Insert a freshly written full page run under `parent` (None =
+    /// root), taking one reference on each per-head page. Returns the
+    /// new node id.
+    pub fn insert_child(
+        &mut self,
+        parent: Option<usize>,
+        key: PageKey,
+        pages: &[usize],
+        kv: &mut PagedKvCache,
+    ) -> usize {
+        self.insert_node(parent, key, PAGE_TOKENS, pages, kv)
+    }
+
+    /// Insert a frozen *partial* tail page (`filled < PAGE_TOKENS` valid
+    /// leading slots) under `parent`. The tree's reference makes any
+    /// later append through a mapping table copy-on-write, so the
+    /// node's content stays immutable at `filled` tokens. Tail nodes
+    /// are terminal: `walk` never descends into them and they carry no
+    /// hash blocks.
+    pub fn insert_tail(
+        &mut self,
+        parent: Option<usize>,
+        key: PageKey,
+        filled: usize,
+        pages: &[usize],
+        kv: &mut PagedKvCache,
+    ) -> usize {
+        assert!(filled >= 1 && filled < PAGE_TOKENS, "tail fill {filled} out of range");
+        self.insert_node(parent, key, filled, pages, kv)
+    }
+
+    fn insert_node(
+        &mut self,
+        parent: Option<usize>,
+        key: PageKey,
+        filled: usize,
+        pages: &[usize],
+        kv: &mut PagedKvCache,
+    ) -> usize {
+        assert_eq!(pages.len(), self.n_kv_heads, "one page per kv head");
+        for &p in pages {
+            kv.incref(p);
+        }
+        let node = Node {
+            key,
+            filled,
+            pages: pages.to_vec(),
+            children: HashMap::new(),
+            parent,
+            hash_blocks: vec![None; self.n_kv_heads],
+            last_hit: self.clock,
+        };
+        let id = match self.free_slots.pop() {
+            Some(slot) => {
+                if let Some(cell) = self.nodes.get_mut(slot) {
+                    *cell = Some(node);
+                }
+                slot
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        let prev = match parent {
+            None => self.roots.insert(key, id),
+            Some(pid) => match self.node_mut(pid) {
+                Some(p) => p.children.insert(key, id),
+                None => None,
+            },
+        };
+        assert!(prev.is_none(), "duplicate prefix node for an already-resident page key");
+        id
+    }
+
+    /// Per-head pages of a node (empty if the id is stale).
+    pub fn node_pages(&self, id: usize) -> &[usize] {
+        match self.node(id) {
+            Some(n) => &n.pages,
+            None => &[],
+        }
+    }
+
+    /// The frozen hash block head `head` of node `id` carries, if any.
+    pub fn hash_block(&self, id: usize, head: usize) -> Option<Arc<HashBlock>> {
+        self.node(id).and_then(|n| n.hash_blocks.get(head).cloned().flatten())
+    }
+
+    /// Attach a frozen hash block to a node (idempotent: first writer
+    /// wins, later identical freezes are dropped).
+    pub fn set_hash_block(&mut self, id: usize, head: usize, block: Arc<HashBlock>) {
+        if let Some(n) = self.node_mut(id) {
+            if let Some(slot) = n.hash_blocks.get_mut(head) {
+                if slot.is_none() {
+                    *slot = Some(block);
+                }
+            }
+        }
+    }
+
+    /// Evict least-recently-hit leaves whose pages are tree-exclusive
+    /// (refcount 1 — no live sequence maps them) until `want_pages`
+    /// physical pages have been freed or nothing evictable remains.
+    /// Returns pages actually freed.
+    pub fn evict_lru(&mut self, kv: &mut PagedKvCache, want_pages: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < want_pages {
+            let mut best: Option<(u64, usize)> = None;
+            for (id, slot) in self.nodes.iter().enumerate() {
+                let Some(n) = slot else { continue };
+                if !n.children.is_empty() {
+                    continue; // interior nodes keep the radix paths intact
+                }
+                if n.pages.iter().any(|&p| kv.ref_count(p) != 1) {
+                    continue; // a live sequence still maps this run
+                }
+                let better = match best {
+                    None => true,
+                    Some((t, _)) => n.last_hit < t,
+                };
+                if better {
+                    best = Some((n.last_hit, id));
+                }
+            }
+            let Some((_, id)) = best else { break };
+            freed += self.remove_leaf(id, kv);
+        }
+        freed
+    }
+
+    /// Detach a leaf, dropping its page references. Returns pages freed.
+    fn remove_leaf(&mut self, id: usize, kv: &mut PagedKvCache) -> usize {
+        let Some(node) = self.nodes.get_mut(id).and_then(Option::take) else { return 0 };
+        assert!(node.children.is_empty(), "evicting an interior prefix node");
+        let freed = node.pages.len();
+        for &p in &node.pages {
+            kv.decref(p);
+        }
+        match node.parent {
+            None => {
+                self.roots.remove(&node.key);
+            }
+            Some(pid) => {
+                if let Some(p) = self.node_mut(pid) {
+                    p.children.remove(&node.key);
+                }
+            }
+        }
+        self.free_slots.push(id);
+        freed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PageTable;
+
+    fn fill_pages(kv: &mut PagedKvCache, n_pages: usize) -> Vec<usize> {
+        // Allocate pages through a scratch table, then strip the table's
+        // reference so the test can hand them to the tree as the sole owner
+        // after map_shared balancing. Simpler: append directly per page.
+        let mut table = PageTable::default();
+        let dim = kv.dim;
+        for t in 0..n_pages * PAGE_TOKENS {
+            let row = vec![t as f32; dim];
+            assert!(kv.append(&mut table, &row, &row));
+        }
+        table.pages.clone()
+    }
+
+    #[test]
+    fn prompt_spec_segments_cover_positions() {
+        let spec = PromptSpec { segments: vec![PromptSegment { seed: 7, len: 20 }, PromptSegment { seed: 9, len: 12 }], cache: true };
+        assert_eq!(spec.total_len(), 32);
+        assert_eq!(spec.seed_at(0), Some(7));
+        assert_eq!(spec.seed_at(19), Some(7));
+        assert_eq!(spec.seed_at(20), Some(9));
+        assert_eq!(spec.seed_at(31), Some(9));
+        assert_eq!(spec.seed_at(32), None);
+        // Page 0 is pure seed 7; page 1 mixes 7 and 9.
+        let k0 = spec.page_key(0).unwrap();
+        assert!((0..PAGE_TOKENS).all(|s| k0.seed_at(s) == 7));
+        let k1 = spec.page_key(1).unwrap();
+        assert_eq!(k1.seed_at(3), 7);
+        assert_eq!(k1.seed_at(4), 9);
+        // Page 2 is not fully covered.
+        assert_eq!(spec.page_key(2), None);
+    }
+
+    #[test]
+    fn text_prompts_hash_deterministically() {
+        let a = PromptSpec::from_text("system prompt", 64);
+        let b = PromptSpec::from_text("system prompt", 64);
+        let c = PromptSpec::from_text("other prompt", 64);
+        assert_eq!(a, b);
+        assert_ne!(a.segments[0].seed, c.segments[0].seed);
+        assert!(a.cache);
+    }
+
+    #[test]
+    fn walk_insert_and_rewalk_share_pages() {
+        let mut kv = PagedKvCache::new(16, 2);
+        let mut tree = PrefixTree::new(1);
+        let spec = PromptSpec::from_seed(42, 3 * PAGE_TOKENS);
+        assert!(tree.walk(&spec, 3).is_empty(), "cold tree has no prefix");
+        let pages = fill_pages(&mut kv, 3);
+        let mut parent = None;
+        for page in 0..3 {
+            let key = spec.page_key(page).unwrap();
+            let id = tree.insert_child(parent, key, &pages[page..page + 1], &mut kv);
+            parent = Some(id);
+        }
+        assert_eq!(tree.n_nodes(), 3);
+        assert_eq!(tree.held_refs(), 3);
+        // Each page now has the filling table's ref + the tree's ref.
+        assert!(pages.iter().all(|&p| kv.ref_count(p) == 2));
+        let path = tree.walk(&spec, 3);
+        assert_eq!(path.len(), 3);
+        assert_eq!(tree.node_pages(path[0]), &pages[0..1]);
+        // A prompt diverging at page 1 matches only page 0.
+        let fork = PromptSpec {
+            segments: vec![PromptSegment { seed: 42, len: PAGE_TOKENS }, PromptSegment { seed: 5, len: 2 * PAGE_TOKENS }],
+            cache: true,
+        };
+        assert_eq!(tree.walk(&fork, 3).len(), 1);
+    }
+
+    #[test]
+    fn partial_tail_matches_leading_slots() {
+        let mut kv = PagedKvCache::new(4, 2);
+        let mut tree = PrefixTree::new(1);
+        let spec = PromptSpec::from_seed(11, PAGE_TOKENS);
+        let pages = fill_pages(&mut kv, 1);
+        tree.insert_child(None, spec.page_key(0).unwrap(), &pages, &mut kv);
+        // A shorter prompt with the same seed shares the page's head.
+        let short = PromptSpec::from_seed(11, 10);
+        let hit = tree.partial_tail(None, &short, 0, 10);
+        assert!(hit.is_some());
+        // A different seed does not.
+        let other = PromptSpec::from_seed(12, 10);
+        assert!(tree.partial_tail(None, &other, 0, 10).is_none());
+    }
+
+    #[test]
+    fn tail_nodes_match_up_to_fill_and_stay_out_of_walks() {
+        let mut kv = PagedKvCache::new(4, 2);
+        let mut tree = PrefixTree::new(1);
+        // A 10-token frozen tail at the root.
+        let spec = PromptSpec::from_seed(21, 10);
+        let mut table = PageTable::default();
+        for t in 0..10 {
+            let row = [t as f32, 0.0];
+            assert!(kv.append(&mut table, &row, &row));
+        }
+        let key = spec.tail_key(0, 10).unwrap();
+        tree.insert_tail(None, key, 10, &table.pages, &mut kv);
+        // Shorter same-seed tails share it; longer ones cannot (slots
+        // beyond the fill were never written).
+        assert!(tree.partial_tail(None, &PromptSpec::from_seed(21, 7), 0, 7).is_some());
+        assert!(tree.partial_tail(None, &spec, 0, 10).is_some());
+        assert!(
+            tree.partial_tail(None, &PromptSpec::from_seed(21, 14), 0, 14).is_none(),
+            "a 14-token tail cannot share a 10-token snapshot"
+        );
+        // Full-page walks never traverse a tail node, even on a padded
+        // key collision (seed 0 beyond the fill).
+        let zero_pad = PromptSpec {
+            segments: vec![
+                PromptSegment { seed: 21, len: 10 },
+                PromptSegment { seed: 0, len: PAGE_TOKENS - 10 },
+            ],
+            cache: true,
+        };
+        assert_eq!(zero_pad.page_key(0).unwrap(), key, "padded keys collide by construction");
+        assert!(tree.walk(&zero_pad, 1).is_empty(), "tails are terminal");
+    }
+
+    #[test]
+    fn evict_frees_only_exclusive_leaves_in_lru_order() {
+        let mut kv = PagedKvCache::new(8, 2);
+        let mut tree = PrefixTree::new(1);
+        // Two independent single-page prefixes.
+        let spec_a = PromptSpec::from_seed(1, PAGE_TOKENS);
+        let spec_b = PromptSpec::from_seed(2, PAGE_TOKENS);
+        let mut table_a = PageTable::default();
+        let mut table_b = PageTable::default();
+        for t in 0..PAGE_TOKENS {
+            let row = [t as f32, 0.0];
+            assert!(kv.append(&mut table_a, &row, &row));
+            assert!(kv.append(&mut table_b, &row, &row));
+        }
+        let a = tree.insert_child(None, spec_a.page_key(0).unwrap(), &table_a.pages, &mut kv);
+        tree.insert_child(None, spec_b.page_key(0).unwrap(), &table_b.pages, &mut kv);
+        // While the filling tables still map the pages, nothing is evictable.
+        assert_eq!(tree.evict_lru(&mut kv, 2), 0);
+        kv.release(&mut table_a);
+        kv.release(&mut table_b);
+        // Touch a so b is the LRU leaf.
+        tree.walk(&spec_a, 1);
+        assert_eq!(tree.evict_lru(&mut kv, 1), 1);
+        assert_eq!(tree.n_nodes(), 1);
+        assert!(tree.walk(&spec_b, 1).is_empty(), "b was evicted");
+        assert_eq!(tree.walk(&spec_a, 1), vec![a], "a survived");
+        // Evicting the rest empties the tree and the pool.
+        assert_eq!(tree.evict_lru(&mut kv, 1), 1);
+        assert_eq!(tree.held_refs(), 0);
+        assert_eq!(kv.free_pages(), 8);
+    }
+
+    #[test]
+    fn hash_blocks_attach_once() {
+        let mut kv = PagedKvCache::new(4, 2);
+        let mut tree = PrefixTree::new(1);
+        let spec = PromptSpec::from_seed(3, PAGE_TOKENS);
+        let pages = fill_pages(&mut kv, 1);
+        let id = tree.insert_child(None, spec.page_key(0).unwrap(), &pages, &mut kv);
+        assert!(tree.hash_block(id, 0).is_none());
+        let block = Arc::new(HashBlock::fresh(2));
+        tree.set_hash_block(id, 0, block.clone());
+        assert!(tree.hash_block(id, 0).is_some());
+        // First writer wins; a second attach is dropped.
+        let other = Arc::new(HashBlock::fresh(2));
+        tree.set_hash_block(id, 0, other);
+        assert!(Arc::ptr_eq(&tree.hash_block(id, 0).unwrap(), &block));
+    }
+}

@@ -90,14 +90,28 @@ impl SequenceCache {
         SequenceCache { layers, n_layers, n_kv_heads }
     }
 
+    /// Flat stream index of (layer, head), bounds-asserted once so the
+    /// accessors below can skip the slice check.
+    #[inline]
+    fn stream_index(&self, layer: usize, head: usize) -> usize {
+        assert!(layer < self.n_layers, "layer {layer} out of range {}", self.n_layers);
+        assert!(head < self.n_kv_heads, "head {head} out of range {}", self.n_kv_heads);
+        layer * self.n_kv_heads + head
+    }
+
     #[inline]
     pub fn layer(&mut self, layer: usize, head: usize) -> &mut LayerCache {
-        &mut self.layers[layer * self.n_kv_heads + head]
+        let idx = self.stream_index(layer, head);
+        // SAFETY: stream_index asserts layer/head in range, and `layers`
+        // holds exactly n_layers * n_kv_heads entries from construction.
+        unsafe { self.layers.get_unchecked_mut(idx) }
     }
 
     #[inline]
     pub fn layer_ref(&self, layer: usize, head: usize) -> &LayerCache {
-        &self.layers[layer * self.n_kv_heads + head]
+        let idx = self.stream_index(layer, head);
+        // SAFETY: same range argument as `layer`.
+        unsafe { self.layers.get_unchecked(idx) }
     }
 
     /// Total signature memory in bits (≈15% of KV in the paper's setup).

@@ -17,5 +17,5 @@ pub mod soft;
 
 pub use hard::HardScorer;
 pub use params::{LshParams, MemoryBudget};
-pub use simhash::{KeyHashes, SimHash, BLOCK_TOKENS, SUMMARY_CAP};
+pub use simhash::{HashBlock, KeyHashes, SimHash, BLOCK_TOKENS, SUMMARY_CAP};
 pub use soft::{GroupLane, PruneStats, SoftHasher, SoftScorer};

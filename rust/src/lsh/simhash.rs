@@ -9,12 +9,23 @@
 //! block, a whole number of paged-KV pages): within a block, one table's
 //! bucket ids for all keys are contiguous, so the scoring hot paths
 //! stream table-outer/key-inner instead of gathering an `L`-wide row per
-//! key. Each block additionally carries a per-table summary (the set of
-//! distinct bucket ids present, capped at [`SUMMARY_CAP`] with a
-//! saturating "use the table-wide max" fallback) plus the block's max
-//! value norm, from which the scorers compute *admissible* per-block
-//! score upper bounds — the branch-and-bound pruning of
-//! `SoftScorer::select_pruned_into` and `HardScorer::select_pruned_into`.
+//! key. Each block ([`HashBlock`]) additionally carries a per-table
+//! summary (the set of distinct bucket ids present, capped at
+//! [`SUMMARY_CAP`] with a saturating "use the table-wide max" fallback)
+//! plus the block's max value norm, from which the scorers compute
+//! *admissible* per-block score upper bounds — the branch-and-bound
+//! pruning of `SoftScorer::select_pruned_into` and
+//! `HardScorer::select_pruned_into`.
+//!
+//! Blocks are held either **owned** (the mutable tail, privately built
+//! runs) or **shared** (`Arc<HashBlock>` — an immutable full block
+//! published to the prefix cache's block arena, see `kvcache::prefix`).
+//! A full block never mutates, so sharing is transparent: a prefix-hit
+//! request attaches the arena's handles ([`KeyHashes::attach_shared`])
+//! and hashes only its private tail, bit-identical to hashing from
+//! scratch.
+
+use std::sync::Arc;
 
 use crate::linalg::Matrix;
 use crate::lsh::params::LshParams;
@@ -39,7 +50,7 @@ pub const BLOCK_TOKENS: usize = 64;
 /// under the cap.
 pub const SUMMARY_CAP: usize = 16;
 
-/// `lens` sentinel marking a saturated (block, table) summary.
+/// `sum_lens` sentinel marking a saturated (block, table) summary.
 const SUMMARY_SATURATED: u16 = u16::MAX;
 
 /// The hyperplanes of `L` independent SimHash tables.
@@ -51,97 +62,158 @@ pub struct SimHash {
     planes: Vec<Matrix>,
 }
 
+/// One [`BLOCK_TOKENS`]-key SoA hash block: table-major bucket ids
+/// (table `t`'s slots at `t * BLOCK_TOKENS`), the per-table distinct-id
+/// summaries, the block's max value norm, and the resident value norms
+/// (carried per block so a shared block can reconstitute a request's
+/// contiguous norm vector). Storage is always allocated full-size; the
+/// resident count is `len()`. Immutable once full — the prefix cache
+/// shares full blocks across requests through `Arc<HashBlock>`.
+#[derive(Clone, Debug)]
+pub struct HashBlock {
+    /// Tables (L) this block was built for.
+    l: usize,
+    /// Table-major ids (`l * BLOCK_TOKENS`).
+    data: Vec<u16>,
+    /// Distinct ids of table t at `sum_ids[t * SUMMARY_CAP..][..sum_lens[t]]`.
+    sum_ids: Vec<u16>,
+    /// Distinct-id count per table; [`SUMMARY_SATURATED`] marks overflow.
+    sum_lens: Vec<u16>,
+    /// Max ‖v‖₂ among resident keys (0.0 while empty).
+    max_norm: f32,
+    /// Whether any table summary overflowed its budget.
+    saturated: bool,
+    /// ‖v_j‖₂ of the resident keys, slot order.
+    norms: Vec<f32>,
+}
+
+impl HashBlock {
+    /// A fresh all-empty block for `l` tables.
+    pub fn fresh(l: usize) -> HashBlock {
+        HashBlock {
+            l,
+            data: vec![0; l * BLOCK_TOKENS],
+            sum_ids: vec![0; l * SUMMARY_CAP],
+            sum_lens: vec![0; l],
+            max_norm: 0.0,
+            saturated: false,
+            norms: Vec::new(),
+        }
+    }
+
+    /// Resident keys.
+    pub fn len(&self) -> usize {
+        self.norms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.norms.is_empty()
+    }
+
+    /// Whether every slot holds a key — only full blocks are shareable.
+    pub fn is_full(&self) -> bool {
+        self.norms.len() == BLOCK_TOKENS
+    }
+
+    #[inline]
+    fn id_at(&self, table: usize, slot: usize) -> u16 {
+        debug_assert!(table < self.l && slot < BLOCK_TOKENS);
+        // SAFETY: `data` holds l * BLOCK_TOKENS ids from construction;
+        // callers come through KeyHashes::bucket, which asserts
+        // table < l, and slot = key % BLOCK_TOKENS < BLOCK_TOKENS.
+        unsafe { *self.data.get_unchecked(table * BLOCK_TOKENS + slot) }
+    }
+
+    #[inline]
+    fn set_id(&mut self, table: usize, slot: usize, id: u16) {
+        if let Some(cell) = self.data.get_mut(table * BLOCK_TOKENS + slot) {
+            *cell = id;
+        }
+    }
+
+    /// Distinct ids of one table, or `None` once its budget overflowed.
+    #[inline]
+    fn table_ids(&self, table: usize) -> Option<&[u16]> {
+        let len = *self.sum_lens.get(table)?;
+        if len == SUMMARY_SATURATED {
+            return None;
+        }
+        let base = table * SUMMARY_CAP;
+        self.sum_ids.get(base..base + len as usize)
+    }
+
+    /// Record one key's id in `table`'s summary: dedups against the ids
+    /// already present, saturating when a new distinct id would exceed
+    /// the [`SUMMARY_CAP`] budget.
+    #[inline]
+    fn note(&mut self, table: usize, id: u16) {
+        let Some(len_slot) = self.sum_lens.get_mut(table) else { return };
+        if *len_slot == SUMMARY_SATURATED {
+            return;
+        }
+        let len = *len_slot as usize;
+        let base = table * SUMMARY_CAP;
+        let Some(seen) = self.sum_ids.get(base..base + len) else { return };
+        if seen.contains(&id) {
+            return;
+        }
+        if len == SUMMARY_CAP {
+            *len_slot = SUMMARY_SATURATED;
+            self.saturated = true;
+            return;
+        }
+        if let Some(cell) = self.sum_ids.get_mut(base + len) {
+            *cell = id;
+        }
+        *len_slot = (len + 1) as u16;
+    }
+}
+
+/// Block storage slot: owned (the mutable tail, privately built runs)
+/// or shared (an immutable full block from the prefix cache's arena).
+#[derive(Clone, Debug)]
+enum BlockStore {
+    Owned(HashBlock),
+    Shared(Arc<HashBlock>),
+}
+
+impl BlockStore {
+    #[inline]
+    fn block(&self) -> &HashBlock {
+        match self {
+            BlockStore::Owned(b) => b,
+            BlockStore::Shared(a) => a,
+        }
+    }
+}
+
 /// Packed bucket ids for a set of keys in table-major SoA blocks, plus
 /// cached value norms and per-block pruning summaries.
 ///
-/// Key `j`'s bucket in table `t` lives at
-/// `data[(j / B) * L * B + t * B + j % B]` with `B = BLOCK_TOKENS`: the
-/// `B` ids of one (block, table) pair are contiguous. `data` always
-/// holds whole blocks (the tail block is allocated full-size and filled
-/// as keys arrive), so per-block slices are always in range.
+/// Key `j`'s bucket in table `t` lives in block `j / BLOCK_TOKENS` at
+/// `(t, j % BLOCK_TOKENS)` — see [`HashBlock`]. Blocks always hold
+/// full-size storage (the tail block is allocated full and filled as
+/// keys arrive), so per-block slices are always in range.
 ///
 /// Every stored id is validated against the bucket-space size `R = 2^P`
 /// once, at construction / [`KeyHashes::push`] — the scoring kernels'
 /// unchecked gathers rely on this invariant instead of re-masking ids
-/// on the hot path.
+/// on the hot path. Shared blocks were validated by the store that
+/// built them; callers attach only blocks built with identical LSH
+/// params (same L and bucket space).
 #[derive(Clone, Debug)]
 pub struct KeyHashes {
     pub n: usize,
     pub l: usize,
-    /// Bucket-space size (`2^P`); every id in `data` is `< r`.
+    /// Bucket-space size (`2^P`); every id in the blocks is `< r`.
     r: usize,
-    /// Table-major SoA blocks (see type docs).
-    data: Vec<u16>,
-    /// ‖v_j‖₂ cached at prefill (Alg. 1 returns these).
+    blocks: Vec<BlockStore>,
+    /// ‖v_j‖₂ cached at prefill (Alg. 1 returns these), contiguous
+    /// across blocks — the scorers consume it as one slice.
     pub value_norms: Vec<f32>,
-    summaries: BlockSummaries,
-}
-
-/// Per-block pruning summaries: for each (block, table) the distinct
-/// bucket ids present (insertion-ordered, stride [`SUMMARY_CAP`], with
-/// overflow saturating to "no summary — use the table-wide max"), and
-/// per block the max cached value norm. Maintained incrementally by
-/// [`KeyHashes::push`]; the scorers reduce them to admissible per-block
-/// score upper bounds.
-#[derive(Clone, Debug, Default)]
-struct BlockSummaries {
-    /// Distinct ids of (block, table) at
-    /// `ids[(blk * l + t) * SUMMARY_CAP..][..lens[blk * l + t]]`.
-    ids: Vec<u16>,
-    /// Distinct-id count per (block, table); [`SUMMARY_SATURATED`]
-    /// marks an overflowed cell.
-    lens: Vec<u16>,
-    /// Max ‖v‖₂ per block (0.0 for a block with no keys yet).
-    max_norm: Vec<f32>,
-    /// Whether any cell has saturated (tells the scorers to compute
-    /// table-wide maxima for the fallback bound).
+    /// Whether any (block, table) summary has saturated (tells the
+    /// scorers to compute table-wide maxima for the fallback bound).
     saturated: bool,
-}
-
-impl BlockSummaries {
-    /// The distinct ids of (blk, table), or `None` once the cell's
-    /// budget overflowed (bound falls back to the table-wide max).
-    #[inline]
-    fn table_ids(&self, blk: usize, table: usize, l: usize) -> Option<&[u16]> {
-        let cell = blk * l + table;
-        let len = self.lens[cell];
-        if len == SUMMARY_SATURATED {
-            return None;
-        }
-        let base = cell * SUMMARY_CAP;
-        Some(&self.ids[base..base + len as usize])
-    }
-
-    /// Record one key's id in (blk, table); dedups against the ids
-    /// already present, saturating when a new distinct id would exceed
-    /// the [`SUMMARY_CAP`] budget.
-    #[inline]
-    fn note(&mut self, blk: usize, table: usize, l: usize, id: u16) {
-        let cell = blk * l + table;
-        let len = self.lens[cell];
-        if len == SUMMARY_SATURATED {
-            return;
-        }
-        let len = len as usize;
-        let base = cell * SUMMARY_CAP;
-        if self.ids[base..base + len].contains(&id) {
-            return;
-        }
-        if len == SUMMARY_CAP {
-            self.lens[cell] = SUMMARY_SATURATED;
-            self.saturated = true;
-            return;
-        }
-        self.ids[base + len] = id;
-        self.lens[cell] = (len + 1) as u16;
-    }
-
-    /// Extend the summary arrays with one fresh (all-empty) block.
-    fn grow_block(&mut self, l: usize) {
-        self.ids.resize(self.ids.len() + l * SUMMARY_CAP, 0);
-        self.lens.resize(self.lens.len() + l, 0);
-        self.max_norm.push(0.0);
-    }
 }
 
 impl KeyHashes {
@@ -149,14 +221,7 @@ impl KeyHashes {
     pub fn empty(l: usize, r: usize) -> KeyHashes {
         assert!(l > 0, "L must be positive");
         assert!(r > 0 && r <= 1 << 16, "bucket space {r} out of u16 range");
-        KeyHashes {
-            n: 0,
-            l,
-            r,
-            data: Vec::new(),
-            value_norms: Vec::new(),
-            summaries: BlockSummaries::default(),
-        }
+        KeyHashes { n: 0, l, r, blocks: Vec::new(), value_norms: Vec::new(), saturated: false }
     }
 
     /// Build from a row-major `n x L` id table (the layout the pooled
@@ -172,25 +237,52 @@ impl KeyHashes {
         assert_eq!(row_major.len() % l, 0, "id table is not n x L");
         let n = row_major.len() / l;
         assert_eq!(value_norms.len(), n, "value norms length mismatch");
-        kh.data = vec![0u16; n.div_ceil(BLOCK_TOKENS) * l * BLOCK_TOKENS];
-        for blk in 0..n.div_ceil(BLOCK_TOKENS) {
-            kh.summaries.grow_block(l);
-            let base = blk * BLOCK_TOKENS;
-            for slot in 0..BLOCK_TOKENS.min(n - base) {
-                let j = base + slot;
-                let row = &row_major[j * l..(j + 1) * l];
-                for (t, &b) in row.iter().enumerate() {
-                    assert!((b as usize) < r, "bucket id {b} out of range for R={r}");
-                    kh.data[(blk * l + t) * BLOCK_TOKENS + slot] = b;
-                    kh.summaries.note(blk, t, l, b);
+        for (row, &norm) in row_major.chunks_exact(l).zip(value_norms.iter()) {
+            kh.push(row, norm);
+        }
+        kh
+    }
+
+    /// Build a store whose leading blocks are shared handles — the
+    /// prefix-cache hit path. The caller then pushes only the private
+    /// tail keys; the result is bit-identical to hashing everything.
+    pub fn from_shared(l: usize, r: usize, shared: &[Arc<HashBlock>]) -> KeyHashes {
+        let mut kh = KeyHashes::empty(l, r);
+        for block in shared {
+            kh.attach_shared(block.clone());
+        }
+        kh
+    }
+
+    /// Map an immutable shared block as this store's next block: its
+    /// [`BLOCK_TOKENS`] keys become resident without re-hashing.
+    pub fn attach_shared(&mut self, block: Arc<HashBlock>) {
+        assert_eq!(self.n % BLOCK_TOKENS, 0, "shared blocks attach on block boundaries");
+        assert!(block.is_full(), "only full hash blocks are shareable");
+        assert_eq!(block.l, self.l, "table count mismatch");
+        self.saturated |= block.saturated;
+        self.value_norms.extend_from_slice(&block.norms);
+        self.n += BLOCK_TOKENS;
+        self.blocks.push(BlockStore::Shared(block));
+    }
+
+    /// Convert every full owned block into a shared handle in place,
+    /// returning the newly frozen `(block_index, handle)` pairs so the
+    /// caller can publish them to the prefix cache's block arena.
+    /// Already-shared blocks are skipped; the partial tail stays owned
+    /// (mutable). Reads are unaffected — full blocks never mutate.
+    pub fn freeze_full_blocks(&mut self) -> Vec<(usize, Arc<HashBlock>)> {
+        let mut frozen = Vec::new();
+        for (i, slot) in self.blocks.iter_mut().enumerate() {
+            if let BlockStore::Owned(b) = slot {
+                if b.is_full() {
+                    let arc = Arc::new(std::mem::replace(b, HashBlock::fresh(0)));
+                    *slot = BlockStore::Shared(arc.clone());
+                    frozen.push((i, arc));
                 }
-                let norm = value_norms[j];
-                kh.summaries.max_norm[blk] = kh.summaries.max_norm[blk].max(norm);
             }
         }
-        kh.n = n;
-        kh.value_norms = value_norms;
-        kh
+        frozen
     }
 
     /// Bucket-space size (`2^P`) the stored ids were validated against.
@@ -200,13 +292,17 @@ impl KeyHashes {
     }
 
     #[inline]
-    fn slot_of(&self, key: usize, table: usize) -> usize {
-        (key / BLOCK_TOKENS) * self.l * BLOCK_TOKENS + table * BLOCK_TOKENS + key % BLOCK_TOKENS
+    fn block_ref(&self, blk: usize) -> &HashBlock {
+        assert!(blk < self.blocks.len(), "block {blk} out of range");
+        // SAFETY: asserted in range just above.
+        unsafe { self.blocks.get_unchecked(blk) }.block()
     }
 
     #[inline]
     pub fn bucket(&self, key: usize, table: usize) -> u16 {
-        self.data[self.slot_of(key, table)]
+        assert!(key < self.n, "key {key} out of range {}", self.n);
+        assert!(table < self.l, "table {table} out of range {}", self.l);
+        self.block_ref(key / BLOCK_TOKENS).id_at(table, key % BLOCK_TOKENS)
     }
 
     /// All L bucket ids of one key, gathered out of the SoA blocks.
@@ -245,8 +341,7 @@ impl KeyHashes {
     /// hold live keys).
     #[inline]
     pub fn block_data(&self, blk: usize) -> &[u16] {
-        let base = blk * self.l * BLOCK_TOKENS;
-        &self.data[base..base + self.l * BLOCK_TOKENS]
+        &self.block_ref(blk).data
     }
 
     /// The distinct bucket ids block `blk` occupies in `table`
@@ -257,7 +352,7 @@ impl KeyHashes {
     /// dominates every bucket and keeps the bound admissible.
     #[inline]
     pub fn block_table_ids(&self, blk: usize, table: usize) -> Option<&[u16]> {
-        self.summaries.table_ids(blk, table, self.l)
+        self.block_ref(blk).table_ids(table)
     }
 
     /// Whether any (block, table) summary has saturated — tells the
@@ -265,13 +360,13 @@ impl KeyHashes {
     /// fallback bound.
     #[inline]
     pub fn summaries_saturated(&self) -> bool {
-        self.summaries.saturated
+        self.saturated
     }
 
     /// Max cached value norm of block `blk`.
     #[inline]
     pub fn block_max_norm(&self, blk: usize) -> f32 {
-        self.summaries.max_norm[blk]
+        self.block_ref(blk).max_norm
     }
 
     /// Append a single new key (decode-time cache extension), extending
@@ -281,16 +376,24 @@ impl KeyHashes {
         assert_eq!(buckets.len(), self.l);
         let slot = self.n % BLOCK_TOKENS;
         if slot == 0 {
-            self.data.resize(self.data.len() + self.l * BLOCK_TOKENS, 0);
-            self.summaries.grow_block(self.l);
+            self.blocks.push(BlockStore::Owned(HashBlock::fresh(self.l)));
         }
-        let blk = self.n / BLOCK_TOKENS;
+        // A shared block is always full (asserted at attach), so the
+        // tail either predates any sharing or was just pushed above.
+        assert!(
+            matches!(self.blocks.last(), Some(BlockStore::Owned(_))),
+            "tail block must be owned"
+        );
+        let r = self.r;
+        let Some(BlockStore::Owned(tail)) = self.blocks.last_mut() else { return };
         for (t, &b) in buckets.iter().enumerate() {
-            assert!((b as usize) < self.r, "bucket id {b} out of range for R={}", self.r);
-            self.data[(blk * self.l + t) * BLOCK_TOKENS + slot] = b;
-            self.summaries.note(blk, t, self.l, b);
+            assert!((b as usize) < r, "bucket id {b} out of range for R={r}");
+            tail.set_id(t, slot, b);
+            tail.note(t, b);
         }
-        self.summaries.max_norm[blk] = self.summaries.max_norm[blk].max(value_norm);
+        tail.max_norm = tail.max_norm.max(value_norm);
+        tail.norms.push(value_norm);
+        self.saturated |= tail.saturated;
         self.value_norms.push(value_norm);
         self.n += 1;
     }
@@ -302,11 +405,11 @@ impl KeyHashes {
         assert_eq!(self.l, other.l, "table count mismatch");
         assert_eq!(self.r, other.r, "bucket space mismatch");
         let mut row = vec![0u16; self.l];
-        for j in 0..other.n {
+        for (j, &norm) in other.value_norms.iter().enumerate() {
             for (t, slot) in row.iter_mut().enumerate() {
                 *slot = other.bucket(j, t);
             }
-            self.push(&row, other.value_norms[j]);
+            self.push(&row, norm);
         }
     }
 
@@ -319,9 +422,8 @@ impl KeyHashes {
         assert_eq!(q_buckets.len(), self.l);
         out.clear();
         out.resize(self.n, 0.0);
-        for blk in 0..self.n_blocks() {
-            let blen = self.block_len(blk);
-            self.block_collision_counts(blk, q_buckets, &mut out[blk * BLOCK_TOKENS..][..blen]);
+        for (blk, chunk) in out.chunks_mut(BLOCK_TOKENS).enumerate() {
+            self.block_collision_counts(blk, q_buckets, chunk);
         }
     }
 
@@ -334,12 +436,11 @@ impl KeyHashes {
         assert_eq!(q_buckets.len(), self.l);
         let blen = self.block_len(blk);
         let block = self.block_data(blk);
-        let counts = &mut counts[..blen];
+        let (counts, _) = counts.split_at_mut(blen);
         counts.fill(0.0);
-        for (t, &qb) in q_buckets.iter().enumerate() {
-            let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
+        for (qb, row) in q_buckets.iter().zip(block.chunks_exact(BLOCK_TOKENS)) {
             for (c, &b) in counts.iter_mut().zip(row) {
-                *c += (b == qb) as u32 as f32;
+                *c += (b == *qb) as u32 as f32;
             }
         }
     }
@@ -377,13 +478,15 @@ impl SimHash {
 
     /// Hyperplane matrix of table ℓ.
     pub fn plane(&self, table: usize) -> &Matrix {
-        &self.planes[table]
+        assert!(table < self.planes.len(), "table {table} out of range");
+        // SAFETY: asserted in range just above.
+        unsafe { self.planes.get_unchecked(table) }
     }
 
     /// Signed projections of `x` in table ℓ (the pre-sign values — the
     /// soft hasher consumes these directly).
     pub fn project(&self, table: usize, x: &[f32]) -> Vec<f32> {
-        self.planes[table].matvec(x)
+        self.plane(table).matvec(x)
     }
 
     /// Hard bucket id of `x` in table ℓ: packed sign bits, bit i set iff
@@ -405,10 +508,10 @@ impl SimHash {
         let n = keys.rows;
         let l = self.params.l;
         let mut bucket_ids = vec![0u16; n * l];
-        for j in 0..n {
+        for (j, row) in bucket_ids.chunks_exact_mut(l).enumerate() {
             let key = keys.row(j);
-            for t in 0..l {
-                bucket_ids[j * l + t] = self.bucket_of(t, key);
+            for (t, slot) in row.iter_mut().enumerate() {
+                *slot = self.bucket_of(t, key);
             }
         }
         KeyHashes::from_row_major(l, self.params.buckets(), &bucket_ids, values.row_norms())
@@ -797,5 +900,68 @@ mod tests {
                 assert!(counts[j] <= ub, "key {j}: count {} > bound {ub}", counts[j]);
             }
         }
+    }
+
+    #[test]
+    fn shared_blocks_match_owned_construction() {
+        // The prefix-cache identity: freeze a store's full blocks,
+        // attach them to a fresh store, push the tail — every public
+        // read (layout, norms, summaries, bounds) is bit-identical to
+        // the fully owned build, and the donor is unaffected.
+        let h = small();
+        let mut rng = Pcg64::seeded(21);
+        let n = 2 * BLOCK_TOKENS + 10;
+        let keys = Matrix::gaussian(n, 32, &mut rng);
+        let vals = Matrix::gaussian(n, 32, &mut rng);
+        let full = h.hash_keys(&keys, &vals);
+        let mut donor = h.hash_keys(&keys, &vals);
+        let frozen = donor.freeze_full_blocks();
+        assert_eq!(frozen.len(), 2, "two full blocks freeze; the tail stays owned");
+        assert_eq!(frozen[0].0, 0);
+        assert_eq!(frozen[1].0, 1);
+        let handles: Vec<Arc<HashBlock>> = frozen.iter().map(|(_, b)| b.clone()).collect();
+        let mut kh = KeyHashes::from_shared(full.l, full.r(), &handles);
+        assert_eq!(kh.n, 2 * BLOCK_TOKENS);
+        for j in 2 * BLOCK_TOKENS..n {
+            kh.push(&full.key_row(j), full.value_norms[j]);
+        }
+        assert_eq!(kh.n, full.n);
+        assert_eq!(kh.to_row_major(), full.to_row_major());
+        assert_eq!(kh.value_norms, full.value_norms);
+        assert_eq!(kh.summaries_saturated(), full.summaries_saturated());
+        for blk in 0..full.n_blocks() {
+            assert_eq!(kh.block_max_norm(blk), full.block_max_norm(blk), "block {blk}");
+            assert_eq!(kh.block_data(blk), full.block_data(blk), "block {blk}");
+            for t in 0..full.l {
+                assert_eq!(kh.block_table_ids(blk, t), full.block_table_ids(blk, t));
+            }
+        }
+        // The donor reads identically through its now-shared blocks.
+        assert_eq!(donor.to_row_major(), full.to_row_major());
+        // A second freeze returns nothing new (tail still partial).
+        assert!(donor.freeze_full_blocks().is_empty());
+    }
+
+    #[test]
+    fn push_after_attached_shared_blocks_extends_privately() {
+        let l = 2;
+        let r = 16;
+        let mut donor = KeyHashes::empty(l, r);
+        for j in 0..BLOCK_TOKENS {
+            donor.push(&[(j % r) as u16, ((j + 1) % r) as u16], 1.0 + j as f32);
+        }
+        let frozen = donor.freeze_full_blocks();
+        assert_eq!(frozen.len(), 1);
+        let mut kh = KeyHashes::empty(l, r);
+        kh.attach_shared(frozen[0].1.clone());
+        kh.push(&[3, 4], 9.0);
+        assert_eq!(kh.n, BLOCK_TOKENS + 1);
+        assert_eq!(kh.n_blocks(), 2);
+        assert_eq!(kh.block_len(1), 1);
+        assert_eq!(kh.bucket(BLOCK_TOKENS, 0), 3);
+        assert_eq!(kh.block_max_norm(1), 9.0);
+        // The shared block is untouched by the private push.
+        assert_eq!(kh.block_max_norm(0), donor.block_max_norm(0));
+        assert_eq!(donor.n, BLOCK_TOKENS, "donor unchanged");
     }
 }

@@ -4,6 +4,7 @@
 //! ```text
 //! socketd serve   [--port 7411] [--method socket|quest|...] [--sparsity 33]
 //!                 [--dense] [--workers 4] [--session-ttl 300]
+//!                 [--config reload.json]   # hot-reload watcher
 //! socketd bench   <ruler|overhead|ranking|ttft|throughput|correlation|
 //!                  longbench|ablation|magicpig|models|theory|all>
 //!                 [--full] [--n N] [--dim D] [--instances I] [--seed S]
@@ -73,6 +74,25 @@ fn serve(args: &Args) {
         Server::new(engine_config(args), BatchPolicy::default()).with_session_ttl(ttl),
     );
     let handle = server.serve(&format!("127.0.0.1:{port}"), workers).expect("bind failed");
+    // --config <path>: hot-reload serving defaults / batch policy /
+    // session TTL from a JSON file without restarting (see
+    // server::reloader for the schema). The watcher lives as long as
+    // the server does.
+    let _watcher = {
+        let config_path = args.get_or("config", "");
+        if config_path.is_empty() {
+            None
+        } else {
+            let w = socket_attn::server::reloader::watch(
+                Arc::clone(&server),
+                config_path.clone().into(),
+                std::time::Duration::from_millis(200),
+            )
+            .expect("config watcher failed to start");
+            println!("watching {config_path} for config reloads");
+            Some(w)
+        }
+    };
     println!("socketd listening on {} ({workers} workers)", handle.addr());
     println!("protocol: one JSON per line, e.g.");
     println!("  {{\"op\":\"generate\",\"context_len\":4096,\"decode_len\":64,\"method\":\"quest\"}}");

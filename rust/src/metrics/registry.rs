@@ -14,6 +14,7 @@
 //! so p50/p95/p99 are within one bucket's resolution of exact — plenty
 //! for TTFT/TBT distributions spanning orders of magnitude.
 
+use crate::coordinator::engine::PrefixStats;
 use crate::lsh::PruneStats;
 use crate::selector;
 use crate::util::Json;
@@ -155,6 +156,12 @@ pub struct Registry {
     prune_blocks: AtomicU64,
     prune_pruned: AtomicU64,
     prune_warmup: AtomicU64,
+    prefix_lookups: AtomicU64,
+    prefix_hits: AtomicU64,
+    prefix_shared_pages: AtomicU64,
+    prefix_private_pages: AtomicU64,
+    prefix_tokens_saved: AtomicU64,
+    prefix_hash_blocks: AtomicU64,
 }
 
 impl Registry {
@@ -168,6 +175,12 @@ impl Registry {
             prune_blocks: AtomicU64::new(0),
             prune_pruned: AtomicU64::new(0),
             prune_warmup: AtomicU64::new(0),
+            prefix_lookups: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_shared_pages: AtomicU64::new(0),
+            prefix_private_pages: AtomicU64::new(0),
+            prefix_tokens_saved: AtomicU64::new(0),
+            prefix_hash_blocks: AtomicU64::new(0),
         }
     }
 
@@ -205,6 +218,37 @@ impl Registry {
             );
         }
         out
+    }
+
+    /// Fold one drained [`PrefixStats`] into the prefix-cache gauges.
+    /// Relaxed adds, same contract as [`Registry::absorb_prune`].
+    pub fn absorb_prefix(&self, p: PrefixStats) {
+        self.prefix_lookups.fetch_add(p.lookups as u64, Ordering::Relaxed);
+        self.prefix_hits.fetch_add(p.hits as u64, Ordering::Relaxed);
+        self.prefix_shared_pages.fetch_add(p.shared_pages as u64, Ordering::Relaxed);
+        self.prefix_private_pages.fetch_add(p.private_pages as u64, Ordering::Relaxed);
+        self.prefix_tokens_saved.fetch_add(p.tokens_saved as u64, Ordering::Relaxed);
+        self.prefix_hash_blocks.fetch_add(p.hash_blocks_reused as u64, Ordering::Relaxed);
+    }
+
+    /// Prefix-cache gauges: tree lookup/hit counts, the shared-vs-
+    /// private page split, prefill tokens the cache absorbed, and hash
+    /// blocks the scoring index attached instead of recomputing.
+    /// Relaxed loads: a best-effort snapshot (see module doc).
+    pub fn prefix_json(&self) -> Json {
+        let lookups = self.prefix_lookups.load(Ordering::Relaxed);
+        let hits = self.prefix_hits.load(Ordering::Relaxed);
+        let shared = self.prefix_shared_pages.load(Ordering::Relaxed);
+        let private = self.prefix_private_pages.load(Ordering::Relaxed);
+        Json::obj()
+            .set("lookups", lookups)
+            .set("hits", hits)
+            .set("hit_rate", hits as f64 / lookups.max(1) as f64)
+            .set("shared_pages", shared)
+            .set("private_pages", private)
+            .set("shared_page_ratio", shared as f64 / (shared + private).max(1) as f64)
+            .set("prefill_tokens_saved", self.prefix_tokens_saved.load(Ordering::Relaxed))
+            .set("hash_blocks_reused", self.prefix_hash_blocks.load(Ordering::Relaxed))
     }
 
     /// Pruning gauges: cumulative branch-and-bound visit counts and the
@@ -312,6 +356,29 @@ mod tests {
         assert_eq!(j.get("dense").unwrap().get("failed").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("other").unwrap().get("served").unwrap().as_usize(), Some(1));
         assert!(j.get("quest").is_none(), "idle series must be omitted");
+    }
+
+    #[test]
+    fn prefix_gauges_accumulate_and_derive_ratios() {
+        let r = Registry::new();
+        let empty = r.prefix_json();
+        assert_eq!(empty.get("hit_rate").unwrap().as_f64(), Some(0.0), "no NaN when idle");
+        r.absorb_prefix(PrefixStats {
+            lookups: 4,
+            hits: 3,
+            shared_pages: 30,
+            private_pages: 10,
+            tokens_saved: 480,
+            hash_blocks_reused: 6,
+        });
+        r.absorb_prefix(PrefixStats { lookups: 1, ..PrefixStats::default() });
+        let j = r.prefix_json();
+        assert_eq!(j.get("lookups").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
+        assert!((j.get("hit_rate").unwrap().as_f64().unwrap() - 0.6).abs() < 1e-12);
+        assert!((j.get("shared_page_ratio").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+        assert_eq!(j.get("prefill_tokens_saved").unwrap().as_usize(), Some(480));
+        assert_eq!(j.get("hash_blocks_reused").unwrap().as_usize(), Some(6));
     }
 
     #[test]

@@ -54,18 +54,56 @@ impl ModelConfig {
 /// key/value depend only on (seed, t), and a fraction of tokens are
 /// "heavy" — their keys align with future queries, reproducing the
 /// heavy-hitter structure sparse attention exploits.
+///
+/// Content can be split into **segments** (see
+/// [`SyntheticModel::with_segments`]): positions inside a segment draw
+/// from that segment's seed instead of the sequence seed, so two
+/// sequences sharing a prompt segment produce bit-identical K/V at the
+/// shared positions — the content identity the prefix-sharing KV cache
+/// keys on. The default single-stream constructor is unchanged.
 pub struct SyntheticModel {
     pub config: ModelConfig,
     seed: u64,
     /// Query direction around which heavy tokens cluster.
     topic: Vec<f32>,
+    /// Prompt segments as (seed, end_position, topic), ordered by end;
+    /// positions at or past the last end fall back to (seed, topic).
+    segments: Vec<(u64, usize, Vec<f32>)>,
 }
 
 impl SyntheticModel {
     pub fn new(config: ModelConfig, seed: u64) -> SyntheticModel {
         let mut rng = Pcg64::new(seed, 911);
         let topic = crate::testing::gen::unit_vec(&mut rng, config.head_dim);
-        SyntheticModel { config, seed, topic }
+        SyntheticModel { config, seed, topic, segments: Vec::new() }
+    }
+
+    /// A model whose leading positions draw from prompt segments:
+    /// `segments[i] = (seed, len)` covers the next `len` positions with
+    /// content keyed only on `(seed, position)`. Positions past the
+    /// segments (the request-private suffix and every decode append) use
+    /// `tail_seed`, exactly like [`SyntheticModel::new`].
+    pub fn with_segments(config: ModelConfig, segments: &[(u64, usize)], tail_seed: u64) -> SyntheticModel {
+        let mut model = SyntheticModel::new(config, tail_seed);
+        let mut end = 0usize;
+        for &(seed, len) in segments {
+            end += len;
+            let mut rng = Pcg64::new(seed, 911);
+            let topic = crate::testing::gen::unit_vec(&mut rng, config.head_dim);
+            model.segments.push((seed, end, topic));
+        }
+        model
+    }
+
+    /// The (seed, topic) governing position `t`.
+    #[inline]
+    fn stream_at(&self, t: usize) -> (u64, &[f32]) {
+        for (seed, end, topic) in &self.segments {
+            if t < *end {
+                return (*seed, topic);
+            }
+        }
+        (self.seed, &self.topic)
     }
 
     /// Key/value of token `t` (per kv-head stream `h`).
@@ -77,11 +115,12 @@ impl SyntheticModel {
     pub fn kv_at(&self, h: usize, t: usize) -> (Vec<f32>, Vec<f32>) {
         let d = self.config.head_dim;
         let sqd = (d as f32).sqrt();
-        let mut rng = Pcg64::new(self.seed ^ (h as u64) << 40, t as u64);
+        let (seed, topic) = self.stream_at(t);
+        let mut rng = Pcg64::new(seed ^ (h as u64) << 40, t as u64);
         let heavy = rng.next_f64() < 0.02; // 2% heavy hitters
         let key: Vec<f32> = if heavy {
             let cos = rng.range_f32(0.6, 0.9);
-            let k = crate::testing::gen::key_with_cosine(&mut rng, &self.topic, cos);
+            let k = crate::testing::gen::key_with_cosine(&mut rng, topic, cos);
             // ‖k‖ = 10√d ⇒ logit ≈ cos(q,k)·10 ∈ [6, 9] for aligned q —
             // heavy hitters carry ≳95% of the softmax mass, like the
             // concentrated attention of trained models [17, 56].

@@ -58,9 +58,10 @@ pub use socket::{HardLshSelector, SocketSelector};
 
 use crate::attention::{DenseKv, KvSource};
 use crate::linalg::Matrix;
-use crate::lsh::{KeyHashes, LshParams, PruneStats, SimHash};
+use crate::lsh::{HashBlock, KeyHashes, LshParams, PruneStats, SimHash, BLOCK_TOKENS};
 use crate::util::pool::{self, WorkerPool};
 use std::fmt;
+use std::sync::Arc;
 
 /// How decode attention selects tokens. `Sparse` names any method in
 /// the [`registry`] plus its sparsity budget (keep `ceil(n / sparsity)`
@@ -160,6 +161,25 @@ pub trait Selector: Send + Sync {
     /// happens here and is *frozen* — `append` only extends per-token
     /// state.
     fn build(&mut self, kv: &dyn KvSource);
+
+    /// Prefix-cache-aware build: like [`Selector::build`], but the
+    /// leading `shared` hash blocks ([`BLOCK_TOKENS`] keys each, from
+    /// the prefix cache's block arena) attach by handle instead of
+    /// being re-hashed, and any full blocks this build completes are
+    /// returned `(block_index, handle)` for publication back to the
+    /// arena. Methods whose index is not block-shareable ignore the
+    /// hint, build normally, and publish nothing — selections are
+    /// identical either way, so callers may pass shared runs
+    /// unconditionally.
+    fn build_shared(
+        &mut self,
+        kv: &dyn KvSource,
+        shared: &[Arc<HashBlock>],
+    ) -> Vec<(usize, Arc<HashBlock>)> {
+        let _ = shared;
+        self.build(kv);
+        Vec::new()
+    }
 
     /// Extend the index with one decoded token's key/value without
     /// rebuilding. `Err(NotBuilt)` before `build`.
@@ -357,18 +377,39 @@ pub fn method_names() -> Vec<&'static str> {
 /// bit-identical to `SimHash::hash_keys` over the equivalent dense
 /// matrices, but reading keys straight out of the paged pool.
 pub fn hash_kv_source(hash: &SimHash, kv: &dyn KvSource, pool: &WorkerPool) -> KeyHashes {
+    hash_kv_source_cached(hash, kv, pool, &[])
+}
+
+/// [`hash_kv_source`] with a prefix-cache fast path: the leading
+/// `shared` blocks ([`BLOCK_TOKENS`] keys each, published by an earlier
+/// request over the same page run) attach by handle — their hashing is
+/// skipped entirely — and only the remaining tail keys are hashed.
+/// Bit-identical to hashing every key from scratch: a full block is
+/// immutable, so the attached ids/norms/summaries are exactly what
+/// re-hashing the same key content would produce.
+pub fn hash_kv_source_cached(
+    hash: &SimHash,
+    kv: &dyn KvSource,
+    pool: &WorkerPool,
+    shared: &[Arc<HashBlock>],
+) -> KeyHashes {
     assert_eq!(kv.key_dim(), hash.dim, "key dim {} != hash dim {}", kv.key_dim(), hash.dim);
     let n = kv.n_tokens();
+    let start = shared.len() * BLOCK_TOKENS;
+    assert!(start <= n, "shared blocks cover {start} tokens but source has {n}");
     let l = hash.params.l;
-    let mut bucket_ids = vec![0u16; n * l];
+    let mut kh = KeyHashes::from_shared(l, hash.params.buckets(), shared);
+    let mut bucket_ids = vec![0u16; (n - start) * l];
     pool.fill_rows(&mut bucket_ids, l, |j, row| {
-        let key = kv.key(j);
+        let key = kv.key(start + j);
         for (t, slot) in row.iter_mut().enumerate() {
             *slot = hash.bucket_of(t, key);
         }
     });
-    let value_norms = (0..n).map(|t| crate::linalg::l2_norm(kv.value(t))).collect();
-    KeyHashes::from_row_major(l, hash.params.buckets(), &bucket_ids, value_norms)
+    for (j, row) in bucket_ids.chunks_exact(l).enumerate() {
+        kh.push(row, crate::linalg::l2_norm(kv.value(start + j)));
+    }
+    kh
 }
 
 #[cfg(test)]
@@ -468,6 +509,28 @@ mod tests {
             AttentionMode::sparse("quest", 10.0),
             AttentionMode::Sparse { method: "quest".into(), sparsity: 10.0 }
         );
+    }
+
+    #[test]
+    fn cached_hashing_with_shared_prefix_matches_full_hash() {
+        // Attach two frozen blocks, hash only the tail: the result is
+        // bit-identical to hashing every key (ids, norms, summaries are
+        // exercised transitively through to_row_major / value_norms).
+        let mut rng = Pcg64::seeded(6);
+        let n = 2 * BLOCK_TOKENS + 13;
+        let keys = Matrix::gaussian(n, 12, &mut rng);
+        let vals = Matrix::gaussian(n, 12, &mut rng);
+        let hash = SimHash::new(LshParams { p: 6, l: 9, tau: 0.5 }, 12, 11);
+        let kv = DenseKv::new(&keys, &vals);
+        let mut donor = hash_kv_source(&hash, &kv, pool::global());
+        let frozen = donor.freeze_full_blocks();
+        assert_eq!(frozen.len(), 2);
+        let handles: Vec<_> = frozen.into_iter().map(|(_, b)| b).collect();
+        let got = hash_kv_source_cached(&hash, &kv, pool::global(), &handles);
+        let want = hash.hash_keys(&keys, &vals);
+        assert_eq!(got.n, n);
+        assert_eq!(got.to_row_major(), want.to_row_major());
+        assert_eq!(got.value_norms, want.value_norms);
     }
 
     #[test]

@@ -7,12 +7,13 @@
 //! the scoring differs — soft collision mass (Algorithms 2–4) vs hard
 //! collision counting.
 
-use super::{hash_kv_source, Selection, Selector, SelectorError};
+use super::{hash_kv_source, hash_kv_source_cached, Selection, Selector, SelectorError};
 use crate::attention::KvSource;
 use crate::linalg::l2_norm;
-use crate::lsh::{GroupLane, HardScorer, KeyHashes, LshParams, PruneStats, SoftScorer};
+use crate::lsh::{GroupLane, HardScorer, HashBlock, KeyHashes, LshParams, PruneStats, SoftScorer};
 use crate::util::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 // lint:allow-file(atomics-allowlist): PruneCounters is telemetry-only —
 // three monotone counters drained by swap; no cross-field consistency
@@ -76,6 +77,21 @@ impl Selector for SocketSelector {
         // Prefill-time hashing (Alg. 1) fans keys across the shared
         // pool, reading straight from the paged (or dense) source.
         self.hashes = Some(hash_kv_source(self.scorer.hasher.simhash(), kv, pool::global()));
+    }
+
+    fn build_shared(
+        &mut self,
+        kv: &dyn KvSource,
+        shared: &[Arc<HashBlock>],
+    ) -> Vec<(usize, Arc<HashBlock>)> {
+        // Prefix-cache build: attach the shared run's hash blocks (no
+        // re-hashing), hash only the private tail, then freeze this
+        // build's own full blocks so the engine can publish them.
+        let mut hashes =
+            hash_kv_source_cached(self.scorer.hasher.simhash(), kv, pool::global(), shared);
+        let frozen = hashes.freeze_full_blocks();
+        self.hashes = Some(hashes);
+        frozen
     }
 
     fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
@@ -183,6 +199,17 @@ impl Selector for HardLshSelector {
 
     fn build(&mut self, kv: &dyn KvSource) {
         self.hashes = Some(hash_kv_source(&self.scorer.hash, kv, pool::global()));
+    }
+
+    fn build_shared(
+        &mut self,
+        kv: &dyn KvSource,
+        shared: &[Arc<HashBlock>],
+    ) -> Vec<(usize, Arc<HashBlock>)> {
+        let mut hashes = hash_kv_source_cached(&self.scorer.hash, kv, pool::global(), shared);
+        let frozen = hashes.freeze_full_blocks();
+        self.hashes = Some(hashes);
+        frozen
     }
 
     fn append(&mut self, key: &[f32], value: &[f32]) -> Result<(), SelectorError> {
@@ -339,6 +366,69 @@ mod tests {
         hard.build_dense(&keys, &vals);
         hard.select(&q, 16).unwrap();
         assert!(hard.take_prune_stats().blocks > 0);
+    }
+
+    #[test]
+    fn build_shared_matches_plain_build_and_publishes_blocks() {
+        // The prefix-sharing identity at the selector layer: building
+        // against published hash blocks selects the same indices AND
+        // scores as a plain build, publication happens exactly once,
+        // and post-build appends stay bit-identical.
+        use crate::attention::DenseKv;
+        use crate::lsh::BLOCK_TOKENS;
+        let mut rng = Pcg64::seeded(15);
+        let dim = 16;
+        let n = 2 * BLOCK_TOKENS + 20;
+        let keys = Matrix::gaussian(n, dim, &mut rng);
+        let vals = Matrix::gaussian(n, dim, &mut rng);
+        let kv = DenseKv::new(&keys, &vals);
+        let params = LshParams { p: 6, l: 10, tau: 0.5 };
+
+        let mut base = SocketSelector::new(params, dim, 7);
+        base.build(&kv);
+        // First build with no shared prefix publishes its full blocks.
+        let mut first = SocketSelector::new(params, dim, 7);
+        let published = first.build_shared(&kv, &[]);
+        assert_eq!(published.len(), 2, "two full blocks publish; the tail stays private");
+        assert_eq!((published[0].0, published[1].0), (0, 1));
+        // A second request over the same prefix attaches the handles.
+        let handles: Vec<_> = published.into_iter().map(|(_, b)| b).collect();
+        let mut second = SocketSelector::new(params, dim, 7);
+        assert!(
+            second.build_shared(&kv, &handles).is_empty(),
+            "attached blocks must not re-publish"
+        );
+        assert_eq!(second.n_tokens(), n);
+
+        let q = rng.normal_vec(dim);
+        let (mut a, mut b, mut c) = (Selection::default(), Selection::default(), Selection::default());
+        base.select_into(&q, 24, &mut a).expect("built");
+        first.select_into(&q, 24, &mut b).expect("built");
+        second.select_into(&q, 24, &mut c).expect("built");
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.indices, c.indices);
+        assert_eq!(a.scores, c.scores, "scores must be bit-identical through shared blocks");
+
+        // Mid-decode appends after the shared prefix stay identical.
+        let nk = rng.normal_vec(dim);
+        let nv = rng.normal_vec(dim);
+        base.append(&nk, &nv).expect("built");
+        second.append(&nk, &nv).expect("built");
+        base.select_into(&q, 24, &mut a).expect("built");
+        second.select_into(&q, 24, &mut c).expect("built");
+        assert_eq!(a.indices, c.indices);
+        assert_eq!(a.scores, c.scores);
+
+        // Hard LSH shares the same index plumbing.
+        let mut hbase = HardLshSelector::new(params, dim, 7);
+        hbase.build(&kv);
+        let mut hdonor = HardLshSelector::new(params, dim, 7);
+        let hpub = hdonor.build_shared(&kv, &[]);
+        assert_eq!(hpub.len(), 2);
+        let hh: Vec<_> = hpub.into_iter().map(|(_, blk)| blk).collect();
+        let mut hshared = HardLshSelector::new(params, dim, 7);
+        assert!(hshared.build_shared(&kv, &hh).is_empty());
+        assert_eq!(hbase.select(&q, 24).unwrap(), hshared.select(&q, 24).unwrap());
     }
 
     #[test]

@@ -35,7 +35,10 @@
 //! poisoning. Shutdown propagates into every read loop, and
 //! [`ServerHandle::shutdown`] joins all threads.
 
+pub mod reloader;
+
 use crate::coordinator::{BatchPolicy, Completion, Coordinator, EngineConfig, Submission};
+use crate::kvcache::{PromptSegment, PromptSpec};
 use crate::selector::{self, AttentionMode};
 use crate::util::Json;
 use crate::workload::trace::Request;
@@ -74,6 +77,15 @@ struct SessionEntry {
     busy: bool,
 }
 
+/// Serving defaults a reload may swap at runtime (one lock so the
+/// method/sparsity pair is always read coherently).
+struct ServingDefaults {
+    /// Label of the default mode (used when a request names no method).
+    label: String,
+    /// Sparsity applied when a request names a method without one.
+    sparsity: f64,
+}
+
 /// Server state shared across connection handlers.
 pub struct Server {
     coordinator: Coordinator,
@@ -81,17 +93,18 @@ pub struct Server {
     served: AtomicU64,
     /// Successful generates per method label (the `stats` breakdown).
     served_by_method: Mutex<BTreeMap<String, u64>>,
-    /// Label of the engine's default mode (used when a request names
-    /// no method).
-    default_label: String,
-    /// Sparsity applied when a request names a method without one.
-    default_sparsity: f64,
+    /// Hot-reloadable serving defaults (see [`reloader`]).
+    defaults: Mutex<ServingDefaults>,
     /// Session-id → parked sequence. Guards every state transition of
     /// the session lifecycle (first turn, resume, evict).
     sessions: Mutex<HashMap<String, SessionEntry>>,
     sessions_evicted: AtomicU64,
     /// Idle sessions older than this are evicted by the sweeper.
-    session_ttl: Duration,
+    /// Mutexed so a config reload retunes the sweeper without restart
+    /// (each sweep re-reads it).
+    session_ttl: Mutex<Duration>,
+    /// Config reloads applied so far (the `config` metrics section).
+    reloads: AtomicU64,
 }
 
 impl Server {
@@ -115,18 +128,41 @@ impl Server {
             next_id: AtomicU64::new(1),
             served: AtomicU64::new(0),
             served_by_method: Mutex::new(BTreeMap::new()),
-            default_label,
-            default_sparsity,
+            defaults: Mutex::new(ServingDefaults { label: default_label, sparsity: default_sparsity }),
             sessions: Mutex::new(HashMap::new()),
             sessions_evicted: AtomicU64::new(0),
-            session_ttl: Duration::from_secs(300),
+            session_ttl: Mutex::new(Duration::from_secs(300)),
+            reloads: AtomicU64::new(0),
         }
     }
 
     /// Override the idle-session eviction TTL (default 300 s).
-    pub fn with_session_ttl(mut self, ttl: Duration) -> Server {
-        self.session_ttl = ttl;
+    pub fn with_session_ttl(self, ttl: Duration) -> Server {
+        *lock(&self.session_ttl) = ttl;
         self
+    }
+
+    /// Apply a hot-reloaded serving config: batch policy swaps through
+    /// the scheduler queue, defaults and TTL swap under their locks.
+    /// Running requests and parked sessions are untouched.
+    pub fn apply_reload(&self, cfg: &reloader::ReloadConfig) {
+        if let Some(policy) = cfg.policy {
+            self.coordinator.set_policy(policy);
+        }
+        {
+            let mut d = lock(&self.defaults);
+            if let Some(label) = &cfg.default_method {
+                d.label = label.clone();
+            }
+            if let Some(s) = cfg.default_sparsity {
+                d.sparsity = s;
+            }
+        }
+        if let Some(ttl) = cfg.session_ttl {
+            *lock(&self.session_ttl) = ttl;
+        }
+        // Relaxed: reload gauge for the metrics scrape only.
+        self.reloads.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Resolve a request's optional `"method"`/`"sparsity"` fields into
@@ -134,6 +170,10 @@ impl Server {
     /// A bare `"sparsity"` (no method) re-budgets the server's default
     /// sparse method; it is an error against a dense default.
     fn request_mode(&self, msg: &Json) -> Result<(Option<AttentionMode>, String), String> {
+        let (default_label, default_sparsity) = {
+            let d = lock(&self.defaults);
+            (d.label.clone(), d.sparsity)
+        };
         let sparsity = match msg.get("sparsity") {
             None => None,
             // A present-but-non-numeric sparsity is a client error, not
@@ -148,19 +188,32 @@ impl Server {
         };
         let method = match msg.get("method").and_then(|m| m.as_str()) {
             None => match sparsity {
-                // No overrides at all: engine default.
-                None => return Ok((None, self.default_label.clone())),
+                // No overrides at all: the (reloadable) serving default.
+                None => {
+                    if default_label == "dense" {
+                        return Ok((Some(AttentionMode::Dense), default_label));
+                    }
+                    // A reloaded default may differ from the engine's
+                    // spawn-time mode, so resolve it explicitly rather
+                    // than passing `None` through to the engine.
+                    return Ok((
+                        Some(AttentionMode::Sparse {
+                            method: default_label.clone(),
+                            sparsity: default_sparsity,
+                        }),
+                        default_label,
+                    ));
+                }
                 // Sparsity-only override: the default method re-budgeted.
                 Some(s) => {
-                    if self.default_label == "dense" {
+                    if default_label == "dense" {
                         return Err(format!(
                             "sparsity {s} requires a \"method\" (server default is dense)"
                         ));
                     }
-                    let label = self.default_label.clone();
                     return Ok((
-                        Some(AttentionMode::Sparse { method: label.clone(), sparsity: s }),
-                        label,
+                        Some(AttentionMode::Sparse { method: default_label.clone(), sparsity: s }),
+                        default_label,
                     ));
                 }
             },
@@ -174,8 +227,54 @@ impl Server {
         }
         let spec = selector::lookup(method).map_err(|e| e.to_string())?;
         let label = spec.name.to_string();
-        let sparsity = sparsity.unwrap_or(self.default_sparsity);
+        let sparsity = sparsity.unwrap_or(default_sparsity);
         Ok((Some(AttentionMode::Sparse { method: label.clone(), sparsity }), label))
+    }
+
+    /// Parse the optional `"prompt"` field: a string (hashed into one
+    /// content segment covering the context) or an array of
+    /// `{"seed":N,"len":N}` segments summing to `context_len`.
+    /// `"cache":"off"` opts the request out of prefix sharing while
+    /// keeping its declared content identity.
+    fn request_prompt(msg: &Json, ctx: usize) -> Result<Option<PromptSpec>, String> {
+        let cache = match msg.get("cache").and_then(|v| v.as_str()) {
+            Some("off") => false,
+            Some(other) if other != "on" => {
+                return Err(format!("cache must be \"on\" or \"off\", got \"{other}\""));
+            }
+            _ => true,
+        };
+        let p = match msg.get("prompt") {
+            None => return Ok(None),
+            Some(p) => p,
+        };
+        if let Some(text) = p.as_str() {
+            return Ok(Some(PromptSpec { cache, ..PromptSpec::from_text(text, ctx) }));
+        }
+        let arr = p
+            .as_arr()
+            .ok_or("prompt must be a string or an array of {seed,len} segments")?;
+        let mut segments = Vec::with_capacity(arr.len());
+        for seg in arr {
+            let seed = seg
+                .get("seed")
+                .and_then(|v| v.as_usize())
+                .ok_or("prompt segment needs a non-negative integer \"seed\"")?;
+            let len = seg
+                .get("len")
+                .and_then(|v| v.as_usize())
+                .filter(|&l| l > 0)
+                .ok_or("prompt segment needs a positive \"len\"")?;
+            segments.push(PromptSegment { seed: seed as u64, len });
+        }
+        let spec = PromptSpec { segments, cache };
+        if spec.total_len() != ctx {
+            return Err(format!(
+                "prompt segments cover {} tokens but context_len is {ctx}",
+                spec.total_len()
+            ));
+        }
+        Ok(Some(spec))
     }
 
     /// Submit one turn and await its completion. With `stream` set, the
@@ -244,10 +343,14 @@ impl Server {
             // straight from the registry, no queue round-trip.
             Err(e) => return err_json(e),
         };
+        let prompt = match Self::request_prompt(msg, ctx) {
+            Ok(p) => p,
+            Err(e) => return err_json(e),
+        };
         // Relaxed id allocation: fetch_add is atomic at any ordering,
         // so ids stay unique; nothing else hangs off this cell.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode };
+        let req = Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode, prompt };
         let c = self.run_turn(req, false, false, stream, emit);
         if !c.ok {
             // Failed admission (e.g. request larger than the KV
@@ -289,9 +392,16 @@ impl Server {
             let label = entry.method.clone();
             drop(sessions);
             // Resumed turn: the scheduler appends `ctx` tokens to the
-            // parked index — zero prefill tokens.
-            let req =
-                Request { id: seq, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None };
+            // parked index — zero prefill tokens, and no prompt spec
+            // (prefix sharing applies to prefills only).
+            let req = Request {
+                id: seq,
+                arrival_ms: 0.0,
+                context_len: ctx,
+                decode_len: dec,
+                mode: None,
+                prompt: None,
+            };
             let c = self.run_turn(req, true, true, stream, emit);
             let (turns, toks) = {
                 let mut sessions = lock(&self.sessions);
@@ -344,7 +454,21 @@ impl Server {
                 },
             );
             drop(sessions);
-            let req = Request { id: seq, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode };
+            let prompt = match Self::request_prompt(msg, ctx) {
+                Ok(p) => p,
+                Err(e) => {
+                    lock(&self.sessions).remove(sid);
+                    return err_json(e);
+                }
+            };
+            let req = Request {
+                id: seq,
+                arrival_ms: 0.0,
+                context_len: ctx,
+                decode_len: dec,
+                mode,
+                prompt,
+            };
             let c = self.run_turn(req, true, false, stream, emit);
             let mut sessions = lock(&self.sessions);
             if !c.ok {
@@ -392,6 +516,15 @@ impl Server {
             // Relaxed gauge read: best-effort scrape, exact at rest.
             .set("evicted", self.sessions_evicted.load(Ordering::Relaxed));
         let registry = self.coordinator.metrics();
+        let config = {
+            let d = lock(&self.defaults);
+            Json::obj()
+                .set("default_method", d.label.clone())
+                .set("default_sparsity", d.sparsity)
+                .set("session_ttl_secs", lock(&self.session_ttl).as_secs_f64())
+                // Relaxed gauge read: best-effort scrape, exact at rest.
+                .set("reloads", self.reloads.load(Ordering::Relaxed))
+        };
         Json::obj()
             .set("ok", true)
             .set("pool", pool)
@@ -399,6 +532,8 @@ impl Server {
             .set("sessions", sessions)
             .set("methods", registry.methods_json())
             .set("prune", registry.prune_json())
+            .set("prefix", registry.prefix_json())
+            .set("config", config)
     }
 
     /// Handle one already-parsed request object, emitting one or more
@@ -620,15 +755,18 @@ impl Server {
         let sweeper =
             std::thread::Builder::new().name("socketd-sweeper".into()).spawn(move || {
                 let tick = Duration::from_millis(100);
-                let cadence = Duration::from_secs(1).min(sweeper_srv.session_ttl).max(tick);
                 let mut since_sweep = Duration::ZERO;
                 // Relaxed stop-flag read: visibility within one 100ms
                 // tick suffices; no ordering with the sweep itself.
                 while !stop_sweep.load(Ordering::Relaxed) {
                     std::thread::sleep(tick);
                     since_sweep += tick;
+                    // Re-read the TTL every tick so a hot reload
+                    // retunes both the cadence and the eviction bar.
+                    let ttl = *lock(&sweeper_srv.session_ttl);
+                    let cadence = Duration::from_secs(1).min(ttl).max(tick);
                     if since_sweep >= cadence {
-                        sweeper_srv.evict_idle_sessions(sweeper_srv.session_ttl);
+                        sweeper_srv.evict_idle_sessions(ttl);
                         since_sweep = Duration::ZERO;
                     }
                 }
@@ -1098,6 +1236,206 @@ mod tests {
         let resp = Json::parse(line.trim()).unwrap();
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{line}");
         handle.shutdown();
+    }
+
+    #[test]
+    fn prompted_requests_share_the_prefix_cache() {
+        let s = server();
+        let line = r#"{"op":"generate","context_len":128,"decode_len":1,
+                       "prompt":"You are a helpful assistant."}"#;
+        for _ in 0..2 {
+            let resp = s.handle(&Json::parse(line).unwrap());
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        }
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let prefix = m.get("prefix").unwrap();
+        assert_eq!(prefix.get("lookups").unwrap().as_usize(), Some(2), "{m}");
+        assert_eq!(prefix.get("hits").unwrap().as_usize(), Some(1), "{m}");
+        assert_eq!(prefix.get("prefill_tokens_saved").unwrap().as_usize(), Some(128), "{m}");
+        assert_eq!(prefix.get("hit_rate").unwrap().as_f64(), Some(0.5), "{m}");
+        // "cache":"off" serves the same content without touching the cache.
+        let off = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","context_len":128,"decode_len":1,
+                    "prompt":"You are a helpful assistant.","cache":"off"}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(off.get("ok").unwrap().as_bool(), Some(true), "{off}");
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        assert_eq!(m.get("prefix").unwrap().get("lookups").unwrap().as_usize(), Some(2), "{m}");
+    }
+
+    #[test]
+    fn segment_array_prompts_round_trip_and_share() {
+        // Two requests sharing a leading {seed,len} segment but with
+        // different suffixes: a partial hit on the shared pages.
+        let s = server();
+        let a = r#"{"op":"generate","context_len":96,"decode_len":1,
+                    "prompt":[{"seed":7,"len":64},{"seed":100,"len":32}]}"#;
+        let b = r#"{"op":"generate","context_len":96,"decode_len":1,
+                    "prompt":[{"seed":7,"len":64},{"seed":101,"len":32}]}"#;
+        for line in [a, b] {
+            let resp = s.handle(&Json::parse(line).unwrap());
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        }
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let prefix = m.get("prefix").unwrap();
+        assert_eq!(prefix.get("hits").unwrap().as_usize(), Some(1), "{m}");
+        assert_eq!(prefix.get("prefill_tokens_saved").unwrap().as_usize(), Some(64), "{m}");
+        // Sessions carry prompts on their first turn too.
+        let t1 = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","session":"sp","context_len":96,"decode_len":1,
+                    "prompt":[{"seed":7,"len":64},{"seed":102,"len":32}]}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        assert_eq!(m.get("prefix").unwrap().get("hits").unwrap().as_usize(), Some(2), "{m}");
+    }
+
+    #[test]
+    fn bad_prompts_are_json_errors_and_sessions_are_not_stillborn() {
+        let s = server();
+        for bad in [
+            // Segments don't cover the context.
+            r#"{"op":"generate","context_len":96,"decode_len":1,
+                "prompt":[{"seed":7,"len":64}]}"#,
+            // Zero-length segment.
+            r#"{"op":"generate","context_len":96,"decode_len":1,
+                "prompt":[{"seed":7,"len":0},{"seed":8,"len":96}]}"#,
+            // Missing seed.
+            r#"{"op":"generate","context_len":96,"decode_len":1,"prompt":[{"len":96}]}"#,
+            // Prompt is neither string nor array.
+            r#"{"op":"generate","context_len":96,"decode_len":1,"prompt":7}"#,
+            // Bad cache flag.
+            r#"{"op":"generate","context_len":96,"decode_len":1,
+                "prompt":"hi","cache":"maybe"}"#,
+        ] {
+            let resp = s.handle(&Json::parse(bad).unwrap());
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+        // A session first turn with a bad prompt must not leave a
+        // stillborn entry behind...
+        let resp = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","session":"sb","context_len":96,"decode_len":1,
+                    "prompt":[{"seed":1,"len":10}]}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert_eq!(lock(&s.sessions).len(), 0, "stillborn session must be removed");
+        // ...and the id is reusable for a well-formed first turn.
+        let t1 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"sb","context_len":32,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        assert_eq!(t1.get("turn").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn apply_reload_swaps_defaults_policy_and_ttl_live() {
+        let s = server();
+        // Pre-reload: the engine default (socket) serves.
+        let resp =
+            s.handle(&Json::parse(r#"{"op":"generate","context_len":32,"decode_len":1}"#).unwrap());
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("socket"), "{resp}");
+        let cfg = reloader::ReloadConfig::parse(
+            r#"{"batch":{"max_prefills":1},"default_method":"quest",
+                "default_sparsity":4.0,"session_ttl_secs":7}"#,
+        )
+        .unwrap();
+        s.apply_reload(&cfg);
+        // Post-reload: a method-less request serves on the new default.
+        let resp =
+            s.handle(&Json::parse(r#"{"op":"generate","context_len":32,"decode_len":1}"#).unwrap());
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{resp}");
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("quest"), "{resp}");
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let config = m.get("config").unwrap();
+        assert_eq!(config.get("default_method").unwrap().as_str(), Some("quest"), "{m}");
+        assert_eq!(config.get("default_sparsity").unwrap().as_f64(), Some(4.0), "{m}");
+        assert_eq!(config.get("session_ttl_secs").unwrap().as_f64(), Some(7.0), "{m}");
+        assert_eq!(config.get("reloads").unwrap().as_usize(), Some(1), "{m}");
+        // A partial reload leaves untouched fields alone.
+        s.apply_reload(&reloader::ReloadConfig::parse(r#"{"session_ttl_secs":9}"#).unwrap());
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let config = m.get("config").unwrap();
+        assert_eq!(config.get("default_method").unwrap().as_str(), Some("quest"), "{m}");
+        assert_eq!(config.get("session_ttl_secs").unwrap().as_f64(), Some(9.0), "{m}");
+        assert_eq!(config.get("reloads").unwrap().as_usize(), Some(2), "{m}");
+    }
+
+    #[test]
+    fn config_file_hot_reloads_a_live_tcp_server() {
+        use std::io::{BufRead, BufReader, Write};
+        let s = Arc::new(server());
+        let handle = s.serve("127.0.0.1:0", 2).unwrap();
+        let path = std::env::temp_dir().join(format!("socketd-reload-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let watcher =
+            reloader::watch(Arc::clone(&s), path.clone(), Duration::from_millis(20)).unwrap();
+
+        let mut conn = std::net::TcpStream::connect(handle.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| -> Json {
+            writeln!(conn, "{line}").unwrap();
+            let mut out = String::new();
+            reader.read_line(&mut out).unwrap();
+            Json::parse(out.trim()).unwrap()
+        };
+        let resp = ask(r#"{"op":"generate","context_len":32,"decode_len":1}"#);
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("socket"), "{resp}");
+
+        // Atomic publish (write + rename) so the watcher never reads a
+        // partial file.
+        let publish = |text: &str| {
+            let tmp = path.with_extension("tmp");
+            std::fs::write(&tmp, text).unwrap();
+            std::fs::rename(&tmp, &path).unwrap();
+        };
+        publish(r#"{"default_method":"quest","session_ttl_secs":11}"#);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let m = ask(r#"{"op":"metrics"}"#);
+            let reloads = m.get("config").unwrap().get("reloads").unwrap().as_usize().unwrap();
+            if reloads >= 1 {
+                assert_eq!(
+                    m.get("config").unwrap().get("default_method").unwrap().as_str(),
+                    Some("quest"),
+                    "{m}"
+                );
+                break;
+            }
+            assert!(Instant::now() < deadline, "reload never applied: {m}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        // The running server now serves the reloaded default — no
+        // restart, same connection.
+        let resp = ask(r#"{"op":"generate","context_len":32,"decode_len":1}"#);
+        assert_eq!(resp.get("method").unwrap().as_str(), Some("quest"), "{resp}");
+
+        // A fat-fingered edit is rejected and the last good config
+        // stays in force.
+        publish(r#"{"default_method":"zzz"}"#);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while watcher.rejected() == 0 {
+            assert!(Instant::now() < deadline, "bad config never rejected");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let m = ask(r#"{"op":"metrics"}"#);
+        let config = m.get("config").unwrap();
+        assert_eq!(config.get("default_method").unwrap().as_str(), Some("quest"), "{m}");
+        assert_eq!(config.get("reloads").unwrap().as_usize(), Some(1), "{m}");
+
+        watcher.shutdown();
+        handle.shutdown();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Serving request traces for the throughput / latency benches
 //! (Fig. 3b/c) and the coordinator integration tests.
 
+use crate::kvcache::{PromptSegment, PromptSpec};
 use crate::selector::AttentionMode;
 use crate::util::rng::Pcg64;
 
@@ -17,6 +18,10 @@ pub struct Request {
     /// Per-request attention mode (`None` = the engine's default). Any
     /// method in `selector::registry` is servable by name.
     pub mode: Option<AttentionMode>,
+    /// Declared prompt content (`None` = anonymous content, ineligible
+    /// for prefix-cache sharing). Requests carrying specs with equal
+    /// leading segments share KV pages and hash blocks in the engine.
+    pub prompt: Option<PromptSpec>,
 }
 
 /// Trace parameters.
@@ -68,8 +73,101 @@ impl TraceGenerator {
             context_len: ctx.clamp(self.cfg.context_min, self.cfg.context_max),
             decode_len: dec,
             mode: None,
+            prompt: None,
         };
         self.next_id += 1;
+        req
+    }
+
+    /// Generate a fixed-size batch of requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Shared-prefix trace parameters: a pool of "system prompts" with
+/// Zipf-distributed popularity, prepended to otherwise-unique requests —
+/// the multi-tenant serving shape prefix caching exists for.
+#[derive(Clone, Copy, Debug)]
+pub struct SharedPrefixConfig {
+    pub base: TraceConfig,
+    /// Distinct shared prefixes in the pool.
+    pub n_prefixes: usize,
+    /// Zipf exponent over prefix popularity (0 = uniform; larger skews
+    /// traffic onto the first prefixes).
+    pub zipf_s: f64,
+    /// Tokens each shared prefix contributes (clamped to the request's
+    /// sampled context when it is shorter).
+    pub prefix_len: usize,
+}
+
+impl Default for SharedPrefixConfig {
+    fn default() -> Self {
+        SharedPrefixConfig {
+            base: TraceConfig::default(),
+            n_prefixes: 8,
+            zipf_s: 1.1,
+            prefix_len: 1024,
+        }
+    }
+}
+
+/// Deterministic shared-prefix trace generator: arrivals and lengths
+/// from the base [`TraceGenerator`], plus a two-segment [`PromptSpec`]
+/// per request — a Zipf-sampled shared prefix and a per-request-unique
+/// suffix.
+pub struct SharedPrefixTrace {
+    cfg: SharedPrefixConfig,
+    inner: TraceGenerator,
+    rng: Pcg64,
+    /// Zipf CDF over prefix ranks, precomputed at construction.
+    cdf: Vec<f64>,
+}
+
+impl SharedPrefixTrace {
+    pub fn new(cfg: SharedPrefixConfig, seed: u64) -> SharedPrefixTrace {
+        assert!(cfg.n_prefixes > 0, "shared-prefix trace needs at least one prefix");
+        assert!(cfg.prefix_len > 0, "shared prefixes must be non-empty");
+        let weights: Vec<f64> =
+            (0..cfg.n_prefixes).map(|k| 1.0 / ((k + 1) as f64).powf(cfg.zipf_s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cum = 0.0;
+        let cdf = weights
+            .iter()
+            .map(|w| {
+                cum += w / total;
+                cum
+            })
+            .collect();
+        SharedPrefixTrace {
+            inner: TraceGenerator::new(cfg.base, seed),
+            rng: Pcg64::new(seed, 47),
+            cfg,
+            cdf,
+        }
+    }
+
+    /// The stable content seed of prefix rank `k` (what every request
+    /// sampling rank `k` shares).
+    pub fn prefix_seed(&self, k: usize) -> u64 {
+        0x5EED_0000_0000_0000 | k as u64
+    }
+
+    /// Next request, with its two-segment prompt spec attached.
+    pub fn next(&mut self) -> Request {
+        let mut req = self.inner.next();
+        let u = self.rng.next_f64();
+        let rank = self.cdf.iter().position(|&c| u <= c).unwrap_or(self.cfg.n_prefixes - 1);
+        let shared = self.cfg.prefix_len.min(req.context_len);
+        let mut segments = vec![PromptSegment { seed: self.prefix_seed(rank), len: shared }];
+        if req.context_len > shared {
+            // Unique suffix: a seed no other request draws.
+            segments.push(PromptSegment {
+                seed: 0xA10E_0000_0000_0000 | req.id,
+                len: req.context_len - shared,
+            });
+        }
+        req.prompt = Some(PromptSpec { segments, cache: true });
         req
     }
 
@@ -118,5 +216,65 @@ mod tests {
         let mut a = TraceGenerator::new(TraceConfig::default(), 7);
         let mut b = TraceGenerator::new(TraceConfig::default(), 7);
         assert_eq!(a.take(50), b.take(50));
+    }
+
+    fn shared_cfg() -> SharedPrefixConfig {
+        SharedPrefixConfig {
+            base: TraceConfig {
+                context_min: 200,
+                context_max: 2000,
+                decode_min: 2,
+                decode_max: 8,
+                rate_rps: 10.0,
+            },
+            n_prefixes: 4,
+            zipf_s: 1.2,
+            prefix_len: 256,
+        }
+    }
+
+    #[test]
+    fn shared_prefix_prompts_cover_the_context() {
+        let mut g = SharedPrefixTrace::new(shared_cfg(), 5);
+        for r in g.take(200) {
+            let p = r.prompt.as_ref().expect("every request carries a spec");
+            assert!(p.cache);
+            assert_eq!(p.total_len(), r.context_len, "segments must cover the context");
+            assert!(p.segments[0].len <= 256);
+            assert!(p.segments.len() <= 2);
+        }
+    }
+
+    #[test]
+    fn shared_prefix_popularity_is_zipf_skewed() {
+        let mut g = SharedPrefixTrace::new(shared_cfg(), 11);
+        let head = g.prefix_seed(0);
+        let reqs = g.take(400);
+        let head_share = reqs
+            .iter()
+            .filter(|r| r.prompt.as_ref().unwrap().segments[0].seed == head)
+            .count();
+        // Rank 0 carries ~46% of traffic at s=1.2 over 4 prefixes; a
+        // uniform draw would give 25%.
+        assert!(head_share > 120, "rank-0 prefix drew only {head_share}/400");
+        // Every sampled seed is from the pool.
+        let pool: Vec<u64> = (0..4).map(|k| g.prefix_seed(k)).collect();
+        assert!(reqs.iter().all(|r| pool.contains(&r.prompt.as_ref().unwrap().segments[0].seed)));
+    }
+
+    #[test]
+    fn shared_prefix_suffixes_are_unique_and_deterministic() {
+        let mut a = SharedPrefixTrace::new(shared_cfg(), 9);
+        let mut b = SharedPrefixTrace::new(shared_cfg(), 9);
+        let reqs = a.take(100);
+        assert_eq!(reqs, b.take(100), "same seed, same trace");
+        let mut suffix_seeds: Vec<u64> = reqs
+            .iter()
+            .filter_map(|r| r.prompt.as_ref().unwrap().segments.get(1).map(|s| s.seed))
+            .collect();
+        let n = suffix_seeds.len();
+        suffix_seeds.sort_unstable();
+        suffix_seeds.dedup();
+        assert_eq!(suffix_seeds.len(), n, "suffix seeds must never collide");
     }
 }
