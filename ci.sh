@@ -7,8 +7,9 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 # --smoke: build + boot the server + scripted session/stream/metrics
-# probe only (seconds, not minutes). The full run executes everything
-# AND the serving smoke.
+# probe, then the memory-pressure probe (chunked prefill + preemption
+# on a tiny pool) — seconds, not minutes. The full run executes
+# everything AND both smokes.
 SMOKE=0
 for arg in "$@"; do
     case "$arg" in
@@ -117,10 +118,155 @@ assert 0.0 < prefix["shared_page_ratio"] <= 1.0, prefix
 config = m["config"]
 assert config["default_method"] and config["default_sparsity"] >= 1, config
 assert config["session_ttl_secs"] > 0 and config["reloads"] == 0, config
-print("    serving smoke OK: stream + session resume + prefix cache + metrics scrape")
+
+# Degradation schema: the pressure counters are always emitted (all
+# zero on this amply-provisioned server) and the per-class latency
+# section exists.
+pressure = m["pressure"]
+for field in ("preemptions", "chunked_prefills", "shed", "deadline_missed"):
+    assert pressure.get(field) == 0, (field, pressure)
+assert "classes" in m, sorted(m)
+
+# Priority + deadline ride the wire: a served interactive request shows
+# up in the per-class section; a bogus class is a typed error.
+send({"op": "generate", "context_len": 64, "decode_len": 1,
+      "priority": "interactive", "deadline_ms": 60000})
+assert recv().get("ok"), "interactive generate failed"
+send({"op": "generate", "context_len": 64, "decode_len": 1, "priority": "vip"})
+err = recv()
+assert not err.get("ok") and "priority" in err.get("error", ""), err
+send({"op": "metrics"})
+m = recv()
+assert "interactive" in m["classes"] and "normal" in m["classes"], sorted(m["classes"])
+print("    serving smoke OK: stream + session resume + prefix cache + "
+      "priority wire + metrics scrape")
 PY
     kill "$pid" 2>/dev/null || true
     wait "$pid" 2>/dev/null || true
+    return "$status"
+}
+
+# Boot a second, deliberately tiny socketd (80 KV pages, 64-token
+# prefill budget installed through the hot-reload config) and drive the
+# degradation machinery over live TCP: a chunked prefill (context ~5x
+# the budget), then an interactive request that cannot fit beside a
+# long batch-priority decode and must preempt it — both complete, the
+# preempted stream stays gapless, the pressure counters prove the paths
+# fired, and the pool drains back to zero pages (no leak).
+pressure_smoke() {
+    if ! command -v python3 >/dev/null 2>&1; then
+        echo "    python3 absent; skipping pressure smoke"
+        return 0
+    fi
+    local bin="$PWD/target/release/socketd"
+    if [ ! -x "$bin" ]; then
+        echo "    $bin missing (build step must run first)"
+        return 1
+    fi
+    local cfgdir cfg port
+    cfgdir=$(mktemp -d)
+    cfg="$cfgdir/reload.json"
+    printf '{"batch":{"prefill_token_budget":64}}\n' > "$cfg"
+    port=$(python3 -c 'import socket; s=socket.socket(); s.bind(("127.0.0.1",0)); print(s.getsockname()[1]); s.close()')
+    "$bin" serve --port "$port" --workers 2 --capacity-pages 80 --config "$cfg" &
+    local pid=$!
+    local status=0
+    python3 - "$port" <<'PY' || status=$?
+import json, socket, sys, time
+
+port = int(sys.argv[1])
+
+def connect():
+    deadline = time.time() + 30
+    while True:
+        try:
+            conn = socket.create_connection(("127.0.0.1", port), timeout=5)
+            break
+        except OSError:
+            if time.time() > deadline:
+                sys.exit("pressure smoke: server never came up")
+            time.sleep(0.2)
+    conn.settimeout(120)
+    return conn.makefile("r"), conn.makefile("w")
+
+def send(wfile, obj):
+    wfile.write(json.dumps(obj) + "\n")
+    wfile.flush()
+
+def recv(rfile):
+    line = rfile.readline()
+    assert line, "connection closed early"
+    return json.loads(line)
+
+rfile, wfile = connect()
+
+# Wait for the hot-reload watcher to install the 64-token prefill
+# budget (it applies within ~200 ms of boot; poll the config gauge).
+deadline = time.time() + 30
+while True:
+    send(wfile, {"op": "metrics"})
+    m = recv(rfile)
+    if m.get("config", {}).get("reloads", 0) >= 1:
+        break
+    assert time.time() < deadline, "prefill-budget reload never applied"
+    time.sleep(0.1)
+
+# Chunked-prefill round trip: 300 context tokens against the 64-token
+# budget prefill in ~5 chunks, and the request still completes.
+send(wfile, {"op": "generate", "context_len": 300, "decode_len": 1})
+assert recv(rfile).get("ok"), "chunked generate failed"
+send(wfile, {"op": "metrics"})
+m = recv(rfile)
+assert m["pressure"]["chunked_prefills"] >= 1, m["pressure"]
+
+# Preemption round trip: the streaming batch-priority decode commits 66
+# of the 80 pages; the interactive request needs 18 more, so admission
+# must preempt the batch sequence, serve the interactive one, then
+# readmit and finish the victim.
+send(wfile, {"op": "generate", "context_len": 128, "decode_len": 400,
+             "priority": "batch", "stream": True})
+first = recv(rfile)
+assert first.get("token") == 0, first
+
+rfile2, wfile2 = connect()
+send(wfile2, {"op": "generate", "context_len": 128, "decode_len": 2,
+              "priority": "interactive", "deadline_ms": 60000})
+msg = recv(rfile2)
+assert msg.get("ok"), msg
+
+# The preempted stream must arrive gapless and duplicate-free: the
+# victim re-prefills after readmission but never re-emits a token line.
+tokens = [first["token"]]
+while True:
+    msg = recv(rfile)
+    if "token" in msg:
+        tokens.append(msg["token"])
+        continue
+    break
+assert msg.get("ok"), msg
+assert tokens == list(range(400)), f"stream gapped: {len(tokens)} lines, tail {tokens[-5:]}"
+
+# Pressure counters prove the paths fired; the pool drains back to
+# empty (all degradation paths release their pages).
+deadline = time.time() + 10
+while True:
+    send(wfile, {"op": "metrics"})
+    m = recv(rfile)
+    if m["pool"]["used_pages"] == 0:
+        break
+    assert time.time() < deadline, m["pool"]
+    time.sleep(0.05)
+pressure = m["pressure"]
+assert pressure["preemptions"] >= 1, pressure
+assert pressure["chunked_prefills"] >= 1, pressure
+classes = m["classes"]
+assert "interactive" in classes and "batch" in classes, sorted(classes)
+print("    pressure smoke OK: chunked prefill + preemption + gapless "
+      "stream + zero-leak pool over TCP")
+PY
+    kill "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    rm -rf "$cfgdir"
     return "$status"
 }
 
@@ -129,6 +275,8 @@ if [ "$SMOKE" = 1 ]; then
     cargo build --release
     echo "==> serving smoke"
     serving_smoke
+    echo "==> pressure smoke"
+    pressure_smoke
     echo "OK: smoke green"
     exit 0
 fi
@@ -198,6 +346,9 @@ fi
 
 echo "==> serving smoke (sessions + streaming + metrics over TCP)"
 serving_smoke
+
+echo "==> pressure smoke (chunked prefill + preemption over TCP)"
+pressure_smoke
 
 echo "==> cargo bench --no-run"
 cargo bench --no-run

@@ -8,15 +8,17 @@
 //! serving lane (decode tokens/s for every `selector::registry` method
 //! over the paged pool at the paper's sparsity budget), the serving
 //! lane (sessions + streaming + the metrics scrape through the real
-//! server), and the prefix lane (a Zipf shared-prefix workload with the
-//! prefix cache live vs opted out). Writes the gather-vs-paged,
-//! scoring-lane, per-method, serving, and prefix tables to a
-//! `BENCH_*.json` artifact for the perf trajectory
+//! server), the prefix lane (a Zipf shared-prefix workload with the
+//! prefix cache live vs opted out), and the saturation lane (a
+//! mixed-priority overload burst exercising chunked prefill,
+//! preemption, and load shedding). Writes the gather-vs-paged,
+//! scoring-lane, per-method, serving, prefix, and saturation tables to
+//! a `BENCH_*.json` artifact for the perf trajectory
 //! (`--json-out <path>`, empty string to skip). `--smoke` shrinks every
 //! sweep so ci.sh can emit the artifact in seconds.
 use socket_attn::experiments::{throughput, Scale};
 use socket_attn::util::{Args, Json};
-use socket_attn::workload::trace::{SharedPrefixConfig, TraceConfig};
+use socket_attn::workload::trace::{SaturationConfig, SharedPrefixConfig, TraceConfig};
 
 fn main() {
     let args = Args::from_env();
@@ -107,6 +109,33 @@ fn main() {
         prefix.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0)
     );
 
+    // Saturation lane: a Poisson × Zipf-context × mixed-priority burst
+    // over an undersized page pool — chunked prefill, preemption, and
+    // load shedding all engage; goodput + pressure counters + per-class
+    // latency quantiles land in the artifact.
+    let sat_cfg = SaturationConfig {
+        base: TraceConfig {
+            context_min: if smoke { 64 } else { 512 },
+            context_max: if smoke { 1024 } else { 16 * 1024 },
+            decode_min: 1,
+            decode_max: if smoke { 3 } else { 8 },
+            rate_rps: 200.0,
+        },
+        zipf_s: 1.1,
+        context_rungs: if smoke { 4 } else { 8 },
+        class_mix: [1.0, 2.0, 1.0],
+        interactive_deadline_ms: Some(30_000.0),
+    };
+    let sat_n = if smoke { 16 } else { 64 };
+    let saturation = throughput::run_saturation_lane(scale, sat_n, sat_cfg);
+    println!(
+        "Saturation lane: {sat_n} requests — {} served, {} shed, {} deadline-missed, {} tok/s goodput",
+        saturation.get("served").and_then(|v| v.as_usize()).unwrap_or(0),
+        saturation.get("shed").and_then(|v| v.as_usize()).unwrap_or(0),
+        saturation.get("deadline_missed").and_then(|v| v.as_usize()).unwrap_or(0),
+        saturation.get("goodput_tps").and_then(|v| v.as_f64()).unwrap_or(0.0).round()
+    );
+
     let artifact = args.get_or("json-out", "BENCH_throughput.json");
     if !artifact.is_empty() {
         let doc = Json::obj()
@@ -118,7 +147,8 @@ fn main() {
             .set("scoring_lane", throughput::scoring_lane_json(&sl))
             .set("method_lane", throughput::method_lane_json(&lane))
             .set("serving_lane", serving)
-            .set("prefix_lane", prefix);
+            .set("prefix_lane", prefix)
+            .set("saturation_lane", saturation);
         match std::fs::write(&artifact, doc.dumps() + "\n") {
             Ok(()) => println!("wrote {artifact}"),
             Err(e) => eprintln!("could not write {artifact}: {e}"),

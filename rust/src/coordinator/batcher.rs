@@ -2,8 +2,38 @@
 //! waiting requests to prefill (token-budgeted) and which running
 //! sequences to step (batch-size-capped), decode-priority so tokens keep
 //! streaming while prefills are amortized (the Orca/vLLM policy).
+//!
+//! Under memory pressure the batcher is the policy layer:
+//!
+//! - **Per-class queues with weighted admission.** Waiting requests
+//!   queue by [`Priority`] class; prefill slots are handed out by a
+//!   weighted round-robin credit scheme (interactive 4 : normal 2 :
+//!   batch 1), so latency-sensitive traffic goes first without ever
+//!   starving background work.
+//! - **Chunked prefill.** A context longer than the remaining token
+//!   budget is offered as a budget-sized *chunk*; the scheduler feeds
+//!   the chunk to the engine's resumable partial prefill and parks the
+//!   remainder on the continuation queue, which is always served first
+//!   next iteration (a partial holds committed pages — finishing it is
+//!   the fastest way to relieve contention). This retires the old
+//!   first-prefill budget exemption: long prefills now interleave with
+//!   running decodes instead of monopolizing an iteration.
+//! - **Bounded waiting.** `try_enqueue` refuses work past
+//!   [`BatchPolicy::max_waiting`]; the scheduler sheds the refused
+//!   request with a typed `queue_full` completion instead of letting
+//!   the queue grow without limit.
+//! - **Indexed membership.** `finished`/shed removal are O(1) map
+//!   updates; queue entries they orphan are skipped lazily during
+//!   assembly, so per-iteration cost stays flat at large running and
+//!   waiting sets (the old `retain` walked every running sequence per
+//!   completion).
 
-use std::collections::VecDeque;
+use crate::workload::trace::Priority;
+use std::collections::{HashMap, VecDeque};
+
+/// Prefill slots granted per replenish, by class index (batch, normal,
+/// interactive): the weighted-admission ratio under saturation.
+const CLASS_WEIGHT: [usize; 3] = [1, 2, 4];
 
 /// Batch assembly policy.
 #[derive(Clone, Copy, Debug)]
@@ -12,20 +42,31 @@ pub struct BatchPolicy {
     pub max_decode_batch: usize,
     /// Max prefill tokens admitted per iteration.
     pub prefill_token_budget: usize,
-    /// Max new sequences admitted per iteration.
+    /// Max prefill jobs (fresh or chunk continuations) per iteration.
     pub max_prefills: usize,
+    /// Bound on the waiting queue across all classes; submissions past
+    /// it are shed with a `queue_full` error completion.
+    pub max_waiting: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_decode_batch: 16, prefill_token_budget: 8192, max_prefills: 2 }
+        BatchPolicy {
+            max_decode_batch: 16,
+            prefill_token_budget: 8192,
+            max_prefills: 2,
+            max_waiting: 1024,
+        }
     }
 }
 
 /// One iteration's work.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Batch {
-    /// (seq_id, context_len) to prefill.
+    /// (seq_id, chunk_tokens) to prefill. `chunk_tokens` is the number
+    /// of *new* context tokens to make resident this iteration — the
+    /// full context for small requests, a budget-sized slice of it for
+    /// chunked ones.
     pub prefills: Vec<(u64, usize)>,
     /// Sequences to run one decode step.
     pub decodes: Vec<u64>,
@@ -37,75 +78,196 @@ impl Batch {
     }
 }
 
-/// Queue state + assembly. The batcher owns the waiting queue and the
-/// running set; the scheduler feeds completions back.
+/// A waiting request: how many context tokens remain to prefill, and
+/// whether it must be offered whole (resumed session turns — a
+/// `session_extend` appends in one shot, so it follows the old
+/// offered-alone exemption instead of chunking).
+#[derive(Clone, Copy, Debug)]
+struct WaitEntry {
+    seq: u64,
+    remaining: usize,
+    whole: bool,
+}
+
+/// Queue state + assembly. The batcher owns the waiting queues and the
+/// running set; the scheduler feeds admission outcomes and completions
+/// back.
 #[derive(Debug, Default)]
 pub struct Batcher {
     pub policy: BatchPolicy,
-    waiting: VecDeque<(u64, usize)>,
-    running: VecDeque<u64>,
+    /// Per-class FIFO queues, indexed by [`Priority::index`]. May hold
+    /// stale entries for shed requests — `waiting` is authoritative.
+    classes: [VecDeque<WaitEntry>; 3],
+    /// Live waiting membership: seq -> class index. O(1) shed/lookup.
+    waiting: HashMap<u64, usize>,
+    /// Weighted round-robin credits per class (replenished from
+    /// [`CLASS_WEIGHT`] when every available class is spent).
+    credits: [usize; 3],
+    /// Partially-prefilled sequences awaiting their next chunk
+    /// (seq, remaining tokens). Served before any class queue.
+    continuations: VecDeque<(u64, usize)>,
+    /// Decode rotation order. May hold stale (finished/preempted)
+    /// entries — `running` epochs below are authoritative.
+    rotation: VecDeque<(u64, u64)>,
+    /// Live running membership: seq -> the epoch of its current run.
+    /// A re-started sequence (preempt → readmit) gets a fresh epoch, so
+    /// its stale rotation entry can never double-step it.
+    running: HashMap<u64, u64>,
+    next_epoch: u64,
 }
 
 impl Batcher {
     pub fn new(policy: BatchPolicy) -> Batcher {
-        Batcher { policy, waiting: VecDeque::new(), running: VecDeque::new() }
+        Batcher { policy, ..Batcher::default() }
     }
 
-    pub fn enqueue(&mut self, seq_id: u64, context_len: usize) {
-        self.waiting.push_back((seq_id, context_len));
+    /// Accept a request into its class queue, or refuse it when the
+    /// waiting set is at [`BatchPolicy::max_waiting`] (the caller sheds
+    /// it with a `queue_full` completion). Continuations and running
+    /// sequences don't count against the bound — they already hold
+    /// committed pages.
+    #[must_use]
+    pub fn try_enqueue(&mut self, seq: u64, context_len: usize, prio: Priority, whole: bool) -> bool {
+        if self.waiting.len() >= self.policy.max_waiting {
+            return false;
+        }
+        let c = prio.index();
+        self.waiting.insert(seq, c);
+        self.classes[c].push_back(WaitEntry { seq, remaining: context_len, whole });
+        true
     }
 
+    /// Requeue a prefill that failed admission (backpressure) or was
+    /// preempted — goes to the *front* of its class to preserve FIFO
+    /// fairness within the class. Never bounced: the request was
+    /// already accepted once.
+    pub fn requeue(&mut self, seq: u64, context_len: usize, prio: Priority, whole: bool) {
+        let c = prio.index();
+        self.waiting.insert(seq, c);
+        self.classes[c].push_front(WaitEntry { seq, remaining: context_len, whole });
+    }
+
+    /// Park a partially-prefilled sequence until the next iteration
+    /// offers its next chunk. Continuations outrank every class queue.
+    pub fn continue_prefill(&mut self, seq: u64, remaining: usize) {
+        self.continuations.push_back((seq, remaining));
+    }
+
+    /// Drop a request from the waiting set (deadline shed). Returns
+    /// whether it was actually waiting — running sequences and chunk
+    /// continuations are not sheddable. O(1): the queue entry goes
+    /// stale and is skipped during assembly.
+    pub fn remove_waiting(&mut self, seq: u64) -> bool {
+        self.waiting.remove(&seq).is_some()
+    }
+
+    /// Waiting requests plus chunk continuations — everything that
+    /// still needs prefill work before it can decode.
     pub fn waiting_len(&self) -> usize {
-        self.waiting.len()
+        self.waiting.len() + self.continuations.len()
     }
 
     pub fn running_len(&self) -> usize {
         self.running.len()
     }
 
+    /// Live running sequence ids, unordered — the scheduler's victim
+    /// scan for priority preemption.
+    pub fn running_seqs(&self) -> Vec<u64> {
+        self.running.keys().copied().collect()
+    }
+
     /// Mark a prefilled sequence as running.
-    pub fn started(&mut self, seq_id: u64) {
-        self.running.push_back(seq_id);
+    pub fn started(&mut self, seq: u64) {
+        let epoch = self.next_epoch;
+        self.next_epoch += 1;
+        self.running.insert(seq, epoch);
+        self.rotation.push_back((seq, epoch));
     }
 
-    /// Remove a finished sequence.
-    pub fn finished(&mut self, seq_id: u64) {
-        self.running.retain(|&s| s != seq_id);
+    /// Remove a finished (or preempted) sequence. O(1): its rotation
+    /// entry goes stale and is dropped during assembly.
+    pub fn finished(&mut self, seq: u64) {
+        self.running.remove(&seq);
     }
 
-    /// Requeue a prefill that failed admission (backpressure) — goes to
-    /// the *front* to preserve FIFO fairness.
-    pub fn requeue(&mut self, seq_id: u64, context_len: usize) {
-        self.waiting.push_front((seq_id, context_len));
+    /// Drop stale entries (shed requests) off the front of class `c`.
+    fn skim(&mut self, c: usize) {
+        while let Some(e) = self.classes[c].front() {
+            if self.waiting.get(&e.seq) == Some(&c) {
+                return;
+            }
+            self.classes[c].pop_front();
+        }
+    }
+
+    /// Pick the class to draw the next prefill from: the highest class
+    /// with an offerable head and a credit, replenishing all credits
+    /// when every available class is spent. A `whole` head longer than
+    /// the remaining budget is only offerable as the iteration's first
+    /// prefill (the resumed-turn exemption); it blocks its class
+    /// otherwise, exactly like the old FIFO head did.
+    fn pick_class(&mut self, budget: usize, first: bool) -> Option<usize> {
+        let mut avail = [false; 3];
+        let mut any = false;
+        for c in 0..3 {
+            self.skim(c);
+            if let Some(e) = self.classes[c].front() {
+                avail[c] = !e.whole || e.remaining <= budget || first;
+                any |= avail[c];
+            }
+        }
+        if !any {
+            return None;
+        }
+        for _ in 0..2 {
+            for c in (0..3).rev() {
+                if avail[c] && self.credits[c] > 0 {
+                    self.credits[c] -= 1;
+                    return Some(c);
+                }
+            }
+            self.credits = CLASS_WEIGHT;
+        }
+        unreachable!("an available class must win after a credit replenish")
     }
 
     /// Assemble the next iteration's batch. Decode-priority: running
     /// sequences always step (round-robin rotation for fairness across
-    /// iterations); prefills fill the remaining admission budget.
+    /// iterations); prefill slots go to chunk continuations first, then
+    /// to the class queues under the weighted credit scheme, all inside
+    /// the shared token budget.
     pub fn next_batch(&mut self) -> Batch {
         let mut batch = Batch::default();
-        // Decodes: up to max_decode_batch, rotating so all sequences
-        // progress even when running > batch size.
-        let n_dec = self.running.len().min(self.policy.max_decode_batch);
-        for _ in 0..n_dec {
-            let s = self.running.pop_front().unwrap();
-            batch.decodes.push(s);
-            self.running.push_back(s);
-        }
-        // Prefills under token budget. The first prefill of an
-        // iteration is exempt: a context longer than the whole budget
-        // must still be offered (alone) or it would block the queue
-        // head forever — the token-budget twin of the KV livelock.
-        let mut budget = self.policy.prefill_token_budget;
-        while batch.prefills.len() < self.policy.max_prefills {
-            match self.waiting.front() {
-                Some(&(_, ctx)) if ctx <= budget || batch.prefills.is_empty() => {
-                    let (id, ctx) = self.waiting.pop_front().unwrap();
-                    budget = budget.saturating_sub(ctx);
-                    batch.prefills.push((id, ctx));
-                }
-                _ => break,
+        // Decodes: up to max_decode_batch live sequences, rotating so
+        // all progress even when running > batch size. Stale rotation
+        // entries (finished/preempted) drop out here.
+        let quota = self.running.len().min(self.policy.max_decode_batch);
+        while batch.decodes.len() < quota {
+            let Some((seq, epoch)) = self.rotation.pop_front() else { break };
+            if self.running.get(&seq) != Some(&epoch) {
+                continue; // stale: finished, or re-started under a new epoch
             }
+            batch.decodes.push(seq);
+            self.rotation.push_back((seq, epoch));
+        }
+        // Prefills under the shared token budget: continuations first.
+        let mut budget = self.policy.prefill_token_budget;
+        while batch.prefills.len() < self.policy.max_prefills && budget > 0 {
+            let Some(&(seq, remaining)) = self.continuations.front() else { break };
+            self.continuations.pop_front();
+            let chunk = remaining.min(budget);
+            budget -= chunk;
+            batch.prefills.push((seq, chunk));
+        }
+        // Then the class queues, weighted-round-robin.
+        while batch.prefills.len() < self.policy.max_prefills && budget > 0 {
+            let Some(c) = self.pick_class(budget, batch.prefills.is_empty()) else { break };
+            let e = self.classes[c].pop_front().expect("pick_class saw a head");
+            self.waiting.remove(&e.seq);
+            let chunk = if e.whole { e.remaining } else { e.remaining.min(budget) };
+            budget = budget.saturating_sub(chunk);
+            batch.prefills.push((e.seq, chunk));
         }
         batch
     }
@@ -116,7 +278,16 @@ mod tests {
     use super::*;
 
     fn policy() -> BatchPolicy {
-        BatchPolicy { max_decode_batch: 2, prefill_token_budget: 1000, max_prefills: 2 }
+        BatchPolicy {
+            max_decode_batch: 2,
+            prefill_token_budget: 1000,
+            max_prefills: 2,
+            max_waiting: 1024,
+        }
+    }
+
+    fn enq(b: &mut Batcher, seq: u64, ctx: usize) {
+        assert!(b.try_enqueue(seq, ctx, Priority::Normal, false));
     }
 
     #[test]
@@ -132,36 +303,67 @@ mod tests {
     }
 
     #[test]
-    fn prefill_token_budget_enforced() {
+    fn prefill_token_budget_chunks_the_overflow() {
         let mut b = Batcher::new(policy());
-        b.enqueue(1, 600);
-        b.enqueue(2, 600); // would exceed 1000 budget
-        b.enqueue(3, 100);
+        enq(&mut b, 1, 600);
+        enq(&mut b, 2, 600); // overflows the 1000 budget -> 400-token chunk
+        enq(&mut b, 3, 100);
         let batch = b.next_batch();
-        assert_eq!(batch.prefills, vec![(1, 600)]); // 2 blocks the queue (FIFO)
+        assert_eq!(batch.prefills, vec![(1, 600), (2, 400)]);
+        // The engine reports 200 tokens still unfilled; the scheduler
+        // parks the remainder as a continuation.
+        b.continue_prefill(2, 200);
         let batch2 = b.next_batch();
-        assert_eq!(batch2.prefills, vec![(2, 600), (3, 100)]);
+        assert_eq!(batch2.prefills, vec![(2, 200), (3, 100)], "continuation outranks the queue");
     }
 
     #[test]
-    fn oversized_context_is_offered_alone() {
-        // A context longer than the whole token budget is still offered
-        // as the sole prefill of its iteration (otherwise it would pin
-        // the queue head forever).
+    fn oversized_context_is_chunked_not_exempted() {
+        // Pre-chunking, a 5000-token context was offered alone under a
+        // 1000-token budget (the first-prefill exemption). Now it is
+        // split into budget-sized chunks that leave room for decodes
+        // every iteration.
         let mut b = Batcher::new(policy());
-        b.enqueue(1, 5000); // budget is 1000
-        b.enqueue(2, 100);
+        enq(&mut b, 1, 5000);
+        enq(&mut b, 2, 100);
+        b.started(9);
+        let mut offered = 0usize;
+        let mut remaining = 5000usize;
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            assert_eq!(batch.decodes, vec![9], "decodes never stall behind the long prefill");
+            let &(seq, chunk) = batch.prefills.first().expect("a chunk every iteration");
+            assert_eq!(seq, 1);
+            assert!(chunk <= 1000, "chunk {chunk} exceeds the budget");
+            offered += chunk;
+            remaining -= chunk;
+            if remaining > 0 {
+                b.continue_prefill(1, remaining);
+            }
+        }
+        assert_eq!(offered, 5000, "the whole context is offered across iterations");
         let batch = b.next_batch();
-        assert_eq!(batch.prefills, vec![(1, 5000)]);
-        let batch2 = b.next_batch();
-        assert_eq!(batch2.prefills, vec![(2, 100)]);
+        assert_eq!(batch.prefills, vec![(2, 100)], "queue drains after the chunked prefill");
+    }
+
+    #[test]
+    fn whole_entries_keep_the_offered_alone_exemption() {
+        // Resumed session turns extend in one shot; an over-budget one
+        // is offered alone (first slot of its iteration), like the old
+        // exemption — never chunked.
+        let mut b = Batcher::new(policy());
+        assert!(b.try_enqueue(1, 5000, Priority::Normal, true));
+        enq(&mut b, 2, 100);
+        let batch = b.next_batch();
+        assert_eq!(batch.prefills, vec![(1, 5000)], "whole entry offered alone, unchunked");
+        assert_eq!(b.next_batch().prefills, vec![(2, 100)]);
     }
 
     #[test]
     fn max_prefills_cap() {
         let mut b = Batcher::new(policy());
         for s in 0..5u64 {
-            b.enqueue(s, 10);
+            enq(&mut b, s, 10);
         }
         let batch = b.next_batch();
         assert_eq!(batch.prefills.len(), 2);
@@ -169,14 +371,14 @@ mod tests {
     }
 
     #[test]
-    fn requeue_preserves_order() {
+    fn requeue_preserves_order_within_class() {
         let mut b = Batcher::new(policy());
-        b.enqueue(1, 400);
-        b.enqueue(2, 400);
+        enq(&mut b, 1, 400);
+        enq(&mut b, 2, 400);
         let batch = b.next_batch();
         assert_eq!(batch.prefills.len(), 2);
         // Admission of 2 failed (e.g. KV pool full) — requeue.
-        b.requeue(2, 400);
+        b.requeue(2, 400, Priority::Normal, false);
         let batch2 = b.next_batch();
         assert_eq!(batch2.prefills, vec![(2, 400)]);
     }
@@ -189,5 +391,72 @@ mod tests {
         b.finished(1);
         assert_eq!(b.running_len(), 1);
         assert_eq!(b.next_batch().decodes, vec![2]);
+    }
+
+    #[test]
+    fn restarted_sequence_is_stepped_exactly_once() {
+        // Preempt → readmit leaves a stale rotation entry under the old
+        // epoch; the fresh epoch must be the only one that steps.
+        let mut b = Batcher::new(policy());
+        b.started(1);
+        b.started(2);
+        b.finished(1); // preempted
+        b.started(1); // readmitted
+        let batch = b.next_batch();
+        let mut decodes = batch.decodes.clone();
+        decodes.sort_unstable();
+        assert_eq!(decodes, vec![1, 2], "each live sequence steps exactly once");
+    }
+
+    #[test]
+    fn waiting_queue_is_bounded() {
+        let mut b = Batcher::new(BatchPolicy { max_waiting: 2, ..policy() });
+        assert!(b.try_enqueue(1, 10, Priority::Normal, false));
+        assert!(b.try_enqueue(2, 10, Priority::Interactive, false));
+        assert!(!b.try_enqueue(3, 10, Priority::Interactive, false), "over max_waiting");
+        // Requeues bypass the bound (already-accepted work).
+        b.requeue(4, 10, Priority::Batch, false);
+        assert_eq!(b.waiting_len(), 3);
+    }
+
+    #[test]
+    fn shed_requests_are_skipped_lazily() {
+        let mut b = Batcher::new(policy());
+        enq(&mut b, 1, 100);
+        enq(&mut b, 2, 100);
+        assert!(b.remove_waiting(1), "waiting request is sheddable");
+        assert!(!b.remove_waiting(1), "second shed is a no-op");
+        assert_eq!(b.waiting_len(), 1);
+        assert_eq!(b.next_batch().prefills, vec![(2, 100)], "stale head skipped");
+    }
+
+    #[test]
+    fn weighted_admission_prefers_interactive_without_starving_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_prefills: 1, ..policy() });
+        for s in 0..16u64 {
+            assert!(b.try_enqueue(s, 10, Priority::Interactive, false));
+            assert!(b.try_enqueue(100 + s, 10, Priority::Normal, false));
+            assert!(b.try_enqueue(200 + s, 10, Priority::Batch, false));
+        }
+        let mut picks = [0usize; 3];
+        for _ in 0..14 {
+            let batch = b.next_batch();
+            let &(seq, _) = batch.prefills.first().expect("one pick per iteration");
+            let class = if seq >= 200 { 0 } else if seq >= 100 { 1 } else { 2 };
+            picks[class] += 1;
+        }
+        // Two full credit cycles of 4:2:1.
+        assert_eq!(picks, [2, 4, 8], "weighted round-robin must hold under saturation");
+    }
+
+    #[test]
+    fn drained_class_cedes_its_credits() {
+        let mut b = Batcher::new(BatchPolicy { max_prefills: 1, ..policy() });
+        assert!(b.try_enqueue(1, 10, Priority::Batch, false));
+        assert!(b.try_enqueue(2, 10, Priority::Batch, false));
+        // No interactive/normal traffic: batch is served immediately,
+        // not held hostage to absent higher classes.
+        assert_eq!(b.next_batch().prefills, vec![(1, 10)]);
+        assert_eq!(b.next_batch().prefills, vec![(2, 10)]);
     }
 }

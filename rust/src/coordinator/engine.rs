@@ -9,6 +9,8 @@ use crate::kvcache::{PageTable, PagedKvCache, PrefixTree, PromptSpec, PAGE_TOKEN
 use crate::lsh::{HashBlock, LshParams, PruneStats, BLOCK_TOKENS};
 use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selector, SelectorConfig, SelectorError};
+#[cfg(test)]
+use crate::testing::faults::{FaultInjector, FaultPlan};
 use crate::util::pool::with_decode_scratch;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -109,6 +111,47 @@ struct StepResult {
     appends: Vec<(Vec<f32>, Vec<f32>)>,
 }
 
+/// Outcome of one [`DecodeEngine::prefill_chunk`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillProgress {
+    /// The pool cannot cover the full commitment (backpressure, or a
+    /// forced test fault). Nothing was committed; the caller requeues —
+    /// or preempts a lower-priority sequence and retries.
+    Rejected,
+    /// The chunk was applied; `filled` of `context_len` tokens are now
+    /// resident. Call again next iteration with the next chunk budget.
+    InProgress { filled: usize },
+    /// The full context is resident and the sequence is decodable.
+    Complete,
+}
+
+/// A prefill paused between chunks. Pages for the *whole* context plus
+/// decode headroom were committed up front (admission happens once, on
+/// the first chunk), so continuation appends can never fail; tree
+/// publication is deferred to completion so no partially written page
+/// is ever shared.
+struct PartialPrefill {
+    tables: Vec<PageTable>,
+    selectors: Vec<Box<dyn Selector>>,
+    mode: AttentionMode,
+    model: SyntheticModel,
+    context_len: usize,
+    /// Context tokens resident so far (shared-mapped + generated).
+    filled: usize,
+    /// Owned prompt for deferred tree publication.
+    prompt: Option<PromptSpec>,
+    /// Shared-prefix walk results from the first chunk, replayed at
+    /// publication time.
+    path: Vec<usize>,
+    tail_node: Option<usize>,
+    /// Frozen hash blocks completed by the first chunk's index build
+    /// (later chunks extend the index token-at-a-time; their blocks are
+    /// simply not published — a sharing-efficiency tradeoff, not a
+    /// correctness one).
+    published: Vec<Vec<(usize, Arc<HashBlock>)>>,
+    use_cache: bool,
+}
+
 /// The decode engine: paged KV pool + per-sequence selector indexes.
 pub struct DecodeEngine {
     pub config: EngineConfig,
@@ -129,6 +172,12 @@ pub struct DecodeEngine {
     tree: PrefixTree,
     /// Prefix-cache telemetry since the last drain.
     prefix_stats: PrefixStats,
+    /// Prefills paused between chunks (seq -> resumable state).
+    partials: HashMap<u64, PartialPrefill>,
+    /// Deterministic admission-failure injection — test builds only;
+    /// release hot paths carry no hook.
+    #[cfg(test)]
+    injector: FaultInjector,
 }
 
 impl DecodeEngine {
@@ -150,7 +199,24 @@ impl DecodeEngine {
             commitments: HashMap::new(),
             prune_stats: PruneStats::default(),
             prefix_stats: PrefixStats::default(),
+            partials: HashMap::new(),
+            #[cfg(test)]
+            injector: FaultInjector::default(),
         }
+    }
+
+    /// Arm a deterministic admission-failure plan (test builds only).
+    /// The next matching `prefill_chunk` admissions report
+    /// [`PrefillProgress::Rejected`] as if the pool were exhausted.
+    #[cfg(test)]
+    pub fn inject_faults(&mut self, plan: FaultPlan) {
+        self.injector.arm(plan);
+    }
+
+    /// Forced admission failures delivered so far (test builds only).
+    #[cfg(test)]
+    pub fn faults_fired(&self) -> u64 {
+        self.injector.fired()
     }
 
     pub fn n_sequences(&self) -> usize {
@@ -226,6 +292,37 @@ impl DecodeEngine {
         mode: Option<&AttentionMode>,
         prompt: Option<&PromptSpec>,
     ) -> Result<bool, SelectorError> {
+        match self.prefill_chunk(seq_id, context_len, max_new_tokens, mode, prompt, usize::MAX)? {
+            PrefillProgress::Rejected => Ok(false),
+            PrefillProgress::Complete => Ok(true),
+            PrefillProgress::InProgress { .. } => unreachable!("unbounded chunk must complete"),
+        }
+    }
+
+    /// Chunked prefill: make at most `max_tokens` further context tokens
+    /// resident this call, resuming a paused partial if one exists for
+    /// `seq_id`. The first call does everything irreversible once —
+    /// prefix-tree walk, shared-page mapping, admission of the *full*
+    /// commitment (context + decode headroom, so continuations never
+    /// fail), model + selector construction — and later calls only
+    /// append K/V + extend the index, which is bit-identical to a
+    /// one-shot build (the same append path session resume uses). Tree
+    /// publication waits for completion so no half-written page is ever
+    /// shared. Shared-mapped tokens are free and don't count against
+    /// `max_tokens`.
+    pub fn prefill_chunk(
+        &mut self,
+        seq_id: u64,
+        context_len: usize,
+        max_new_tokens: usize,
+        mode: Option<&AttentionMode>,
+        prompt: Option<&PromptSpec>,
+        max_tokens: usize,
+    ) -> Result<PrefillProgress, SelectorError> {
+        assert!(max_tokens > 0, "a chunk must make progress");
+        if self.partials.contains_key(&seq_id) {
+            return Ok(self.continue_chunk(seq_id, max_tokens));
+        }
         let mode = mode.unwrap_or(&self.config.mode).clone();
         // Resolve the method before committing any pages.
         let spec = match &mode {
@@ -294,11 +391,18 @@ impl DecodeEngine {
             available =
                 self.kv.total_pages().saturating_sub(self.committed_pages + self.tree.held_refs());
         }
-        if available < needed {
+        // Deterministic fault hook: a forced failure takes the exact
+        // path a real shortfall takes (release the mapped run, report
+        // Rejected) — test builds only.
+        #[cfg(test)]
+        let forced = self.injector.should_fail(seq_id);
+        #[cfg(not(test))]
+        let forced = false;
+        if forced || available < needed {
             for table in tables.iter_mut() {
                 self.kv.release(table);
             }
-            return Ok(false);
+            return Ok(PrefillProgress::Rejected);
         }
         self.committed_pages += needed;
         self.commitments.insert(seq_id, needed);
@@ -311,17 +415,21 @@ impl DecodeEngine {
             Some(p) => SyntheticModel::with_segments(self.config.model, &p.segment_pairs(), tail_seed),
             None => SyntheticModel::new(self.config.model, tail_seed),
         };
+        // The first chunk covers the shared run (free) plus up to
+        // `max_tokens` generated tokens.
+        let shared_start = tables[0].n_tokens;
+        let end = context_len.min(shared_start.saturating_add(max_tokens));
         let mut selectors = Vec::with_capacity(heads);
         let mut published: Vec<Vec<(usize, Arc<HashBlock>)>> = Vec::with_capacity(heads);
         for (h, table) in tables.iter_mut().enumerate() {
             let start = table.n_tokens;
             if start == 0 {
-                let (keys, values) = model.kv_matrix(h, context_len);
+                let (keys, values) = model.kv_matrix(h, end);
                 let written = self.kv.append_many(table, &keys.data, &values.data);
-                debug_assert_eq!(written, context_len);
+                debug_assert_eq!(written, end);
             } else {
                 // Generate and append only past the shared run.
-                for t in start..context_len {
+                for t in start..end {
                     let (k, v) = model.kv_at(h, t);
                     let ok = self.kv.append(table, &k, &v);
                     assert!(ok, "KV pool exhausted during prefill (commitment violated)");
@@ -359,15 +467,70 @@ impl DecodeEngine {
             }
         }
 
-        if use_cache {
-            if let Some(p) = prompt {
+        let partial = PartialPrefill {
+            tables,
+            selectors,
+            mode,
+            model,
+            context_len,
+            filled: end,
+            prompt: prompt.cloned(),
+            path,
+            tail_node,
+            published,
+            use_cache,
+        };
+        if end < context_len {
+            self.partials.insert(seq_id, partial);
+            return Ok(PrefillProgress::InProgress { filled: end });
+        }
+        self.finish_partial(seq_id, partial);
+        Ok(PrefillProgress::Complete)
+    }
+
+    /// Append the next chunk of a paused prefill. Admission already
+    /// covered the whole context, so appends cannot fail; the selector
+    /// index extends token-at-a-time exactly like session resume.
+    fn continue_chunk(&mut self, seq_id: u64, max_tokens: usize) -> PrefillProgress {
+        let mut p = self.partials.remove(&seq_id).expect("continue_chunk without a partial");
+        let end = p.context_len.min(p.filled.saturating_add(max_tokens));
+        for (h, table) in p.tables.iter_mut().enumerate() {
+            for t in p.filled..end {
+                let (k, v) = p.model.kv_at(h, t);
+                let ok = self.kv.append(table, &k, &v);
+                assert!(ok, "KV pool exhausted during chunked prefill (commitment violated)");
+                if let Some(s) = p.selectors.get_mut(h) {
+                    s.append(&k, &v).expect("selector index built at first chunk");
+                }
+            }
+        }
+        p.filled = end;
+        if end < p.context_len {
+            self.partials.insert(seq_id, p);
+            return PrefillProgress::InProgress { filled: end };
+        }
+        self.finish_partial(seq_id, p);
+        PrefillProgress::Complete
+    }
+
+    /// Completion of a prefill (one-shot or final chunk): publish the
+    /// freshly written pages to the prefix tree, record cache telemetry,
+    /// and install the decodable sequence state.
+    fn finish_partial(&mut self, seq_id: u64, p: PartialPrefill) {
+        debug_assert_eq!(p.filled, p.context_len);
+        let heads = self.config.model.n_kv_heads;
+        let full_pages = p.context_len / PAGE_TOKENS;
+        let tail_tokens = p.context_len % PAGE_TOKENS;
+        let shared_full = p.path.len();
+        if p.use_cache {
+            if let Some(spec) = &p.prompt {
                 // Publish the missed full pages (and their frozen hash
                 // blocks) so later requests share what this one built.
-                let mut node_ids = path.clone();
-                let mut parent = path.last().copied();
+                let mut node_ids = p.path.clone();
+                let mut parent = p.path.last().copied();
                 for page in shared_full..full_pages {
-                    let key = p.page_key(page).expect("full page inside the covered context");
-                    let run: Vec<usize> = tables.iter().map(|t| t.pages[page]).collect();
+                    let key = spec.page_key(page).expect("full page inside the covered context");
+                    let run: Vec<usize> = p.tables.iter().map(|t| t.pages[page]).collect();
                     let id = self.tree.insert_child(parent, key, &run, &mut self.kv);
                     node_ids.push(id);
                     parent = Some(id);
@@ -376,12 +539,13 @@ impl DecodeEngine {
                 // shared): the tree's reference makes this sequence's
                 // own first decode append copy-on-write, keeping the
                 // snapshot immutable for future partial matches.
-                if tail_tokens > 0 && tail_node.is_none() {
-                    let key = p.tail_key(full_pages, tail_tokens).expect("tail inside the context");
-                    let run: Vec<usize> = tables.iter().map(|t| t.pages[full_pages]).collect();
+                if tail_tokens > 0 && p.tail_node.is_none() {
+                    let key =
+                        spec.tail_key(full_pages, tail_tokens).expect("tail inside the context");
+                    let run: Vec<usize> = p.tables.iter().map(|t| t.pages[full_pages]).collect();
                     self.tree.insert_tail(parent, key, tail_tokens, &run, &mut self.kv);
                 }
-                for (h, frozen) in published.iter().enumerate() {
+                for (h, frozen) in p.published.iter().enumerate() {
                     for (blk, arc) in frozen {
                         let page_idx = blk * PAGES_PER_BLOCK + PAGES_PER_BLOCK - 1;
                         if let Some(&node) = node_ids.get(page_idx) {
@@ -391,21 +555,27 @@ impl DecodeEngine {
                 }
             }
             self.prefix_stats.lookups += 1;
-            let tail_shared = usize::from(tail_node.is_some());
+            let tail_shared = usize::from(p.tail_node.is_some());
             if shared_full > 0 || tail_shared > 0 {
                 self.prefix_stats.hits += 1;
             }
             let shared_per_head = shared_full + tail_shared;
             self.prefix_stats.shared_pages += heads * shared_per_head;
             self.prefix_stats.private_pages +=
-                heads * (PagedKvCache::pages_for(context_len) - shared_per_head);
+                heads * (PagedKvCache::pages_for(p.context_len) - shared_per_head);
             self.prefix_stats.tokens_saved +=
                 shared_full * PAGE_TOKENS + tail_shared * tail_tokens;
         }
-
-        self.sequences
-            .insert(seq_id, SequenceState { tables, selectors, mode, model, decoded: 0 });
-        Ok(true)
+        self.sequences.insert(
+            seq_id,
+            SequenceState {
+                tables: p.tables,
+                selectors: p.selectors,
+                mode: p.mode,
+                model: p.model,
+                decoded: 0,
+            },
+        );
     }
 
     /// One decode step for a sequence; returns the attention outputs
@@ -620,6 +790,11 @@ impl DecodeEngine {
                 total.absorb(sel.take_prune_stats());
             }
         }
+        for p in self.partials.values() {
+            for sel in &p.selectors {
+                total.absorb(sel.take_prune_stats());
+            }
+        }
         total
     }
 
@@ -659,6 +834,15 @@ impl DecodeEngine {
                 }
             }
         }
+        // Paused partial prefills hold page references too — a
+        // preempted or shed partial that leaked would surface here.
+        for p in self.partials.values() {
+            for table in &p.tables {
+                for &page in &table.pages {
+                    *expected.entry(page).or_insert(0) += 1;
+                }
+            }
+        }
         for (&page, &want) in &expected {
             let got = self.kv.ref_count(page);
             if got != want {
@@ -677,7 +861,10 @@ impl DecodeEngine {
         Ok(())
     }
 
-    /// Release a finished sequence's pages and its commitment.
+    /// Release a finished (or preempted) sequence's pages and its
+    /// commitment — including a prefill still paused between chunks.
+    /// Pages the prefix tree also references survive resident, so a
+    /// preempted sequence readmits through the PR-8 hit path.
     pub fn release(&mut self, seq_id: u64) {
         if let Some(mut state) = self.sequences.remove(&seq_id) {
             // Keep the sequence's pruning telemetry for the next drain.
@@ -685,6 +872,14 @@ impl DecodeEngine {
                 self.prune_stats.absorb(sel.take_prune_stats());
             }
             for table in state.tables.iter_mut() {
+                self.kv.release(table);
+            }
+        }
+        if let Some(mut p) = self.partials.remove(&seq_id) {
+            for sel in &p.selectors {
+                self.prune_stats.absorb(sel.take_prune_stats());
+            }
+            for table in p.tables.iter_mut() {
                 self.kv.release(table);
             }
         }
@@ -1039,6 +1234,116 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        // The chunking tentpole's core property: prefilling in
+        // budget-sized chunks (first chunk builds the index, later
+        // chunks append token-at-a-time) must leave the sequence in a
+        // state bit-identical to a one-shot prefill — outputs pin the
+        // selected indices and scores too.
+        for mode in
+            [AttentionMode::socket(4.0), AttentionMode::sparse("oracle", 4.0), AttentionMode::Dense]
+        {
+            let ctx = 300usize;
+            let mut chunked = DecodeEngine::new(cfg(mode.clone()));
+            let mut progress = chunked
+                .prefill_chunk(1, ctx, 4, None, None, 64)
+                .expect("mode registered");
+            assert_eq!(progress, PrefillProgress::InProgress { filled: 64 }, "{mode:?}");
+            let mut calls = 1;
+            while let PrefillProgress::InProgress { filled } = progress {
+                assert!(filled < ctx);
+                progress = chunked.prefill_chunk(1, ctx, 4, None, None, 64).unwrap();
+                calls += 1;
+            }
+            assert_eq!(progress, PrefillProgress::Complete, "{mode:?}");
+            assert_eq!(calls, 5, "ceil(300/64) chunks");
+            chunked.page_accounting().expect("refcounts after chunked prefill");
+
+            let mut oneshot = DecodeEngine::new(cfg(mode.clone()));
+            assert!(oneshot.prefill(1, ctx, 4), "{mode:?} one-shot");
+            for step in 0..4 {
+                let want = oneshot.decode_step(1);
+                let got = chunked.decode_step(1);
+                assert_eq!(got, want, "{mode:?} diverged at step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_prefill_releases_cleanly_midway() {
+        // Preempting (or shedding) a sequence paused between chunks
+        // must return every page — the no-leak acceptance bar.
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(4.0)));
+        let free0 = e.free_pages();
+        assert_eq!(
+            e.prefill_chunk(1, 256, 4, None, None, 64).unwrap(),
+            PrefillProgress::InProgress { filled: 64 }
+        );
+        assert!(e.free_pages() < free0, "chunk holds pages");
+        e.page_accounting().expect("refcounts with a paused partial");
+        e.release(1);
+        e.page_accounting().expect("refcounts after partial release");
+        assert_eq!(e.free_pages(), free0, "partial release must return every page");
+        // The id is reusable from scratch afterwards.
+        assert!(e.prefill(1, 64, 4));
+    }
+
+    #[test]
+    fn chunked_prompted_prefill_publishes_only_at_completion() {
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        // 200 tokens = 12 full pages + an 8-token tail.
+        let prompt = PromptSpec::from_seed(11, 200);
+        assert_eq!(
+            e.prefill_chunk(1, 200, 8, None, Some(&prompt), 80).unwrap(),
+            PrefillProgress::InProgress { filled: 80 }
+        );
+        assert_eq!(e.prefix_nodes(), 0, "no half-written page may be published");
+        assert_eq!(
+            e.prefill_chunk(1, 200, 8, None, Some(&prompt), 80).unwrap(),
+            PrefillProgress::InProgress { filled: 160 }
+        );
+        assert_eq!(
+            e.prefill_chunk(1, 200, 8, None, Some(&prompt), 80).unwrap(),
+            PrefillProgress::Complete
+        );
+        assert_eq!(e.prefix_nodes(), 13, "12 full pages + frozen tail published");
+        e.page_accounting().expect("refcounts after chunked publication");
+        // A second request with the same prompt takes the hit path and
+        // decodes bit-identically to an isolated build.
+        e.take_prefix_stats();
+        assert!(e.prefill_opts(2, 200, 8, None, Some(&prompt)).unwrap());
+        let s = e.take_prefix_stats();
+        assert_eq!((s.hits, s.tokens_saved), (1, 200), "chunk-built prefix must be sharable");
+        let mut isolated = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        assert!(isolated.prefill_opts(2, 200, 8, None, Some(&prompt)).unwrap());
+        for _ in 0..3 {
+            assert_eq!(e.decode_step(2), isolated.decode_step(2));
+        }
+        e.page_accounting().expect("refcounts after shared decode");
+    }
+
+    #[test]
+    fn forced_fault_rejects_like_real_exhaustion() {
+        use crate::testing::faults::FaultPlan;
+        let mut e = DecodeEngine::new(cfg(AttentionMode::socket(8.0)));
+        let free0 = e.free_pages();
+        e.inject_faults(FaultPlan::new().fail_first(1, 2));
+        assert_eq!(
+            e.prefill_chunk(1, 100, 4, None, None, usize::MAX).unwrap(),
+            PrefillProgress::Rejected
+        );
+        assert_eq!(e.free_pages(), free0, "forced rejection must not leak");
+        assert_eq!(e.n_sequences(), 0);
+        e.page_accounting().expect("refcounts after forced rejection");
+        // Bystanders are untouched while seq 1's budget lasts.
+        assert!(e.prefill(2, 100, 4));
+        assert!(!e.prefill(1, 100, 4), "second charge still armed");
+        assert!(e.prefill(1, 100, 4), "plan exhausted — admission recovers");
+        assert_eq!(e.faults_fired(), 2);
+        e.page_accounting().expect("refcounts after recovery");
+    }
+
+    #[test]
     fn prefix_tree_evicts_under_pressure_but_never_a_mapped_page() {
         // Pool sized so two distinct resident prefixes cannot coexist.
         let mut e = DecodeEngine::new(EngineConfig {
@@ -1069,5 +1374,61 @@ mod tests {
         }
         e.release(2);
         e.page_accounting().expect("refcounts after final release");
+    }
+
+    /// PR 9 acceptance: a sequence preempted mid-decode (recompute-style
+    /// release) and readmitted through the prefix tree produces output
+    /// bit-identical to an uncontended run — across modes, context
+    /// lengths, and preemption points, with no pages leaked.
+    #[test]
+    fn preempt_readmit_output_is_bit_identical_property() {
+        use crate::prop_assert;
+        use crate::testing::{check, PropConfig};
+        check("preempt-readmit-identity", PropConfig { cases: 10, seed: 0x9E9E }, |rng, case| {
+            let ctx = 48 + (rng.next_u64() % 200) as usize;
+            let k = 1 + (rng.next_u64() % 4) as usize; // decoded before preemption
+            let total = k + 1 + (rng.next_u64() % 5) as usize;
+            let mode = match rng.next_u64() % 3 {
+                0 => AttentionMode::socket(6.0),
+                1 => AttentionMode::sparse("oracle", 6.0),
+                _ => AttentionMode::Dense,
+            };
+            let prompt = PromptSpec::from_seed(0x7E5 + case as u64, ctx);
+
+            // Contended run: prefill, decode k tokens, preempt (the
+            // prefix tree keeps the prompt resident), readmit, recompute
+            // the whole turn.
+            let mut e = DecodeEngine::new(cfg(mode.clone()));
+            prop_assert!(
+                e.prefill_opts(1, ctx, total, None, Some(&prompt)).unwrap(),
+                "admission failed (ctx={ctx})"
+            );
+            for _ in 0..k {
+                e.decode_step(1);
+            }
+            e.release(1); // preemption
+            e.take_prefix_stats();
+            prop_assert!(
+                e.prefill_opts(1, ctx, total, None, Some(&prompt)).unwrap(),
+                "readmission failed (ctx={ctx})"
+            );
+            let s = e.take_prefix_stats();
+            prop_assert!(s.hits == 1, "readmission must hit the prefix tree (ctx={ctx})");
+            let got: Vec<_> = (0..total).map(|_| e.decode_step(1)).collect();
+            e.page_accounting().map_err(|err| format!("leak after preempt cycle: {err}"))?;
+
+            // Uncontended control: same prompt on a fresh engine.
+            let mut u = DecodeEngine::new(cfg(mode));
+            prop_assert!(
+                u.prefill_opts(1, ctx, total, None, Some(&prompt)).unwrap(),
+                "control admission failed (ctx={ctx})"
+            );
+            let want: Vec<_> = (0..total).map(|_| u.decode_step(1)).collect();
+            prop_assert!(
+                got == want,
+                "resumed output diverged (ctx={ctx} k={k} total={total} case={case})"
+            );
+            Ok(())
+        });
     }
 }

@@ -18,12 +18,15 @@
 // cells and their memory-ordering contract live in metrics/registry.rs.
 
 use super::batcher::{BatchPolicy, Batcher};
-use super::engine::{AttentionMode, DecodeEngine, EngineConfig};
+use super::engine::{AttentionMode, DecodeEngine, EngineConfig, PrefillProgress};
 use crate::metrics::registry::Registry;
 use crate::selector;
+#[cfg(test)]
+use crate::testing::faults::FaultPlan;
 use crate::util::Json;
-use crate::workload::trace::Request;
-use std::collections::{HashMap, HashSet};
+use crate::workload::trace::{Priority, Request};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -143,6 +146,10 @@ enum Msg {
     /// Swap the batch-assembly policy in place (hot reload). Applies
     /// from the next iteration; queued and running work is unaffected.
     SetPolicy(BatchPolicy),
+    /// Arm a deterministic admission-fault plan on the engine (test
+    /// builds only — the degradation paths' test harness).
+    #[cfg(test)]
+    SetFaults(FaultPlan),
     Shutdown,
 }
 
@@ -208,6 +215,13 @@ struct Inflight {
     resume: bool,
     /// Canonical method label for the metrics registry.
     label: String,
+    /// Context tokens made resident so far (chunked prefill progress;
+    /// reset to 0 when the sequence is preempted for recompute).
+    filled: usize,
+    /// Token events already delivered on the stream. A preempted
+    /// sequence recomputes its decoded tokens bit-identically, so this
+    /// high-water mark is what keeps the stream free of duplicates.
+    emitted: usize,
     tokens: Option<Sender<TokenEvent>>,
     done_tx: Sender<Completion>,
 }
@@ -263,6 +277,14 @@ impl Coordinator {
     /// server's hot-reload path). Takes effect from the next iteration.
     pub fn set_policy(&self, policy: BatchPolicy) {
         let _ = self.tx.send(Msg::SetPolicy(policy));
+    }
+
+    /// Arm a deterministic admission-fault plan on the scheduler's
+    /// engine (test builds only). Ordered with submissions on the same
+    /// queue, so arm-then-submit is race-free.
+    #[cfg(test)]
+    pub fn inject_faults(&self, plan: FaultPlan) {
+        let _ = self.tx.send(Msg::SetFaults(plan));
     }
 
     /// Snapshot engine occupancy + scheduler stats without stopping the
@@ -352,6 +374,7 @@ fn accept(
     batcher: &mut Batcher,
     inflight: &mut HashMap<u64, Inflight>,
     parked: &mut HashSet<u64>,
+    deadlines: &mut BinaryHeap<Reverse<(Instant, u64, Instant)>>,
     stats: &mut SchedulerStats,
     metrics: &Registry,
     sub: Submission,
@@ -392,17 +415,36 @@ fn accept(
             Some("dense") | None => "dense".to_string(),
             Some(l) => canonical_label(&AttentionMode::sparse(l, 1.0)),
         };
-        batcher.enqueue(req.id, req.context_len);
+        // `whole = true`: a resumed turn extends in one shot
+        // (session_extend), so it keeps the offered-alone exemption
+        // instead of chunking.
+        if !batcher.try_enqueue(req.id, req.context_len, req.priority, true) {
+            // Shed — but the session itself survives, re-parked.
+            parked.insert(req.id);
+            // Relaxed: independent monotone counter; read only by the
+            // metrics endpoint, nothing orders against it.
+            metrics.pressure.shed.fetch_add(1, Ordering::Relaxed);
+            let error = format!(
+                "queue_full: waiting queue at its {}-request bound",
+                batcher.policy.max_waiting
+            );
+            send_failure(&done_tx, &req, error, stats, metrics, &label);
+            return;
+        }
+        let submitted = Instant::now();
+        push_deadline(deadlines, &req, submitted);
         inflight.insert(
             req.id,
             Inflight {
                 base_decoded: engine.decoded(req.id),
-                submitted: Instant::now(),
+                submitted,
                 first_token: None,
                 last_token: None,
                 keep_alive,
                 resume: true,
                 label,
+                filled: 0,
+                emitted: 0,
                 tokens,
                 done_tx,
                 req,
@@ -428,22 +470,123 @@ fn accept(
         send_failure(&done_tx, &req, error, stats, metrics, &label);
         return;
     }
-    batcher.enqueue(req.id, req.context_len);
+    if !batcher.try_enqueue(req.id, req.context_len, req.priority, false) {
+        // Relaxed: independent monotone counter; read only by the
+        // metrics endpoint, nothing orders against it.
+        metrics.pressure.shed.fetch_add(1, Ordering::Relaxed);
+        let error = format!(
+            "queue_full: waiting queue at its {}-request bound",
+            batcher.policy.max_waiting
+        );
+        send_failure(&done_tx, &req, error, stats, metrics, &label);
+        return;
+    }
+    let submitted = Instant::now();
+    push_deadline(deadlines, &req, submitted);
     inflight.insert(
         req.id,
         Inflight {
-            submitted: Instant::now(),
+            submitted,
             first_token: None,
             last_token: None,
             base_decoded: 0,
             keep_alive,
             resume: false,
             label,
+            filled: 0,
+            emitted: 0,
             tokens,
             done_tx,
             req,
         },
     );
+}
+
+/// Register a request's scheduling deadline, if it carries one.
+/// `deadline_ms` bounds *time to first schedule*: a request still
+/// waiting when it expires is shed; once its prefill starts it runs to
+/// completion (abandoning admitted work would waste the pages already
+/// spent on it). The submitted instant rides along as an identity check
+/// so a reused sequence id can never be shed by a stale entry.
+fn push_deadline(
+    deadlines: &mut BinaryHeap<Reverse<(Instant, u64, Instant)>>,
+    req: &Request,
+    submitted: Instant,
+) {
+    if let Some(ms) = req.deadline_ms {
+        if ms.is_finite() {
+            let expires = submitted + Duration::from_secs_f64(ms.max(0.0) / 1e3);
+            deadlines.push(Reverse((expires, req.id, submitted)));
+        }
+    }
+}
+
+/// Shed every request whose scheduling deadline expired while it was
+/// still waiting. Started, finished, and re-submitted sequences are
+/// skipped (their heap entries are stale).
+fn shed_expired(
+    batcher: &mut Batcher,
+    inflight: &mut HashMap<u64, Inflight>,
+    parked: &mut HashSet<u64>,
+    deadlines: &mut BinaryHeap<Reverse<(Instant, u64, Instant)>>,
+    stats: &mut SchedulerStats,
+    metrics: &Registry,
+) {
+    let now = Instant::now();
+    while let Some(&Reverse((expires, seq, submitted))) = deadlines.peek() {
+        if expires > now {
+            break;
+        }
+        deadlines.pop();
+        // Identity check: the entry only applies to the submission it
+        // was pushed for, and only while that submission still waits.
+        if inflight.get(&seq).map(|fl| fl.submitted) != Some(submitted) {
+            continue;
+        }
+        if inflight.get(&seq).is_some_and(|fl| fl.first_token.is_some()) {
+            // A preempted sequence back in the queue already had its
+            // first schedule (and streamed tokens); the TTFS bound no
+            // longer applies — it runs to completion.
+            continue;
+        }
+        if !batcher.remove_waiting(seq) {
+            continue; // already prefilling or decoding — runs to completion
+        }
+        let fl = inflight.remove(&seq).expect("checked above");
+        if fl.resume {
+            // The turn is shed; the parked session survives.
+            parked.insert(seq);
+        }
+        // Relaxed: independent monotone counter; read only by the
+        // metrics endpoint, nothing orders against it.
+        metrics.pressure.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        let waited = now.duration_since(fl.submitted).as_secs_f64() * 1e3;
+        let error = format!(
+            "deadline_missed: still queued after {waited:.1} ms (deadline {:.1} ms)",
+            fl.req.deadline_ms.unwrap_or(0.0)
+        );
+        send_failure(&fl.done_tx, &fl.req, error, stats, metrics, &fl.label);
+    }
+}
+
+/// Choose a preemption victim for a `prio`-class admission that found
+/// the pool exhausted: the lowest-priority running sequence strictly
+/// below `prio`; among equals, the latest-submitted (least sunk cost).
+/// Sessions — parked-to-be (`keep_alive`) or resumed turns — are never
+/// preempted: their multi-turn state is not reconstructible by the
+/// recompute path.
+fn pick_victim(
+    batcher: &Batcher,
+    inflight: &HashMap<u64, Inflight>,
+    prio: Priority,
+) -> Option<u64> {
+    batcher
+        .running_seqs()
+        .into_iter()
+        .filter_map(|seq| inflight.get(&seq).map(|fl| (seq, fl)))
+        .filter(|(_, fl)| !fl.keep_alive && !fl.resume && fl.req.priority < prio)
+        .min_by_key(|(_, fl)| (fl.req.priority, Reverse(fl.submitted)))
+        .map(|(seq, _)| seq)
 }
 
 fn snapshot_of(
@@ -503,6 +646,9 @@ fn scheduler_loop(
     let mut batcher = Batcher::new(policy);
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     let mut parked: HashSet<u64> = HashSet::new();
+    // Min-heap of (expiry, seq, submitted-identity) scheduling
+    // deadlines, swept before every batch.
+    let mut deadlines: BinaryHeap<Reverse<(Instant, u64, Instant)>> = BinaryHeap::new();
     let mut stats = SchedulerStats::default();
     let mut draining = false;
     // One accounting audit per drain-to-idle transition (re-armed by
@@ -545,6 +691,7 @@ fn scheduler_loop(
                     &mut batcher,
                     &mut inflight,
                     &mut parked,
+                    &mut deadlines,
                     &mut stats,
                     &metrics,
                     sub,
@@ -560,6 +707,8 @@ fn scheduler_loop(
                     let _ = tx.send(snapshot_of(&engine, &parked, &stats));
                 }
                 Some(Msg::SetPolicy(p)) => batcher.policy = p,
+                #[cfg(test)]
+                Some(Msg::SetFaults(plan)) => engine.inject_faults(plan),
                 Some(Msg::Shutdown) => draining = true,
                 None => {}
             }
@@ -572,7 +721,11 @@ fn scheduler_loop(
             return stats;
         }
 
-        let batch = batcher.next_batch();
+        // Shed deadline-expired waiters before spending this
+        // iteration's budget on anything else.
+        shed_expired(&mut batcher, &mut inflight, &mut parked, &mut deadlines, &mut stats, &metrics);
+
+        let mut batch = batcher.next_batch();
         if batch.is_empty() {
             if draining {
                 engine.page_accounting().expect("page accounting at shutdown");
@@ -582,22 +735,38 @@ fn scheduler_loop(
         }
         audited = false;
         let mut progressed = !batch.decodes.is_empty();
+        // Sequences preempted while assembling this batch: they were
+        // already collected into `batch.decodes`, but their pages are
+        // gone — stepping them would panic. Filtered out below.
+        let mut preempted: HashSet<u64> = HashSet::new();
         // Prefills / session extends (admission may fail under KV
-        // pressure → requeue).
-        for &(seq, ctx) in batch.prefills.iter() {
-            let (decode_len, mode, prompt, resume) = inflight
+        // pressure → preempt a lower-priority sequence or requeue).
+        for &(seq, chunk) in batch.prefills.iter() {
+            let (total, decode_len, prio, mode, prompt, resume) = inflight
                 .get(&seq)
-                .map(|f| (f.req.decode_len, f.req.mode.clone(), f.req.prompt.clone(), f.resume))
-                .unwrap_or((0, None, None, false));
-            let admitted = if resume {
+                .map(|f| {
+                    (
+                        f.req.context_len,
+                        f.req.decode_len,
+                        f.req.priority,
+                        f.req.mode.clone(),
+                        f.req.prompt.clone(),
+                        f.resume,
+                    )
+                })
+                .unwrap_or((chunk, 0, Priority::Normal, None, None, false));
+            let progress = if resume {
                 // Resumed turn: append to the parked index in place.
                 // Zero prefill tokens — `session_tokens` counts these.
-                Ok(engine.session_extend(seq, ctx, decode_len))
+                if engine.session_extend(seq, chunk, decode_len) {
+                    Ok(PrefillProgress::Complete)
+                } else {
+                    Ok(PrefillProgress::Rejected)
+                }
             } else {
-                engine.prefill_opts(seq, ctx, decode_len, mode.as_ref(), prompt.as_ref())
+                engine.prefill_chunk(seq, total, decode_len, mode.as_ref(), prompt.as_ref(), chunk)
             };
-            let admitted = match admitted {
-                Ok(admitted) => admitted,
+            match progress {
                 Err(e) => {
                     // Defensive: accept() validates modes up front, so
                     // this only fires on direct-API misuse. Fail the
@@ -608,33 +777,71 @@ fn scheduler_loop(
                         stats.failed_requests += 1;
                     }
                     progressed = true;
-                    continue;
                 }
-            };
-            if admitted {
-                if resume {
-                    stats.session_tokens += ctx as u64;
-                    stats.resumed_turns += 1;
-                } else {
-                    stats.prefill_tokens += ctx as u64;
+                Ok(PrefillProgress::InProgress { filled }) => {
+                    // Chunk applied; the remainder rides the
+                    // continuation queue to the next iteration, so
+                    // running decodes never stall behind a long prefill.
+                    if let Some(fl) = inflight.get_mut(&seq) {
+                        stats.prefill_tokens += (filled - fl.filled) as u64;
+                        fl.filled = filled;
+                    }
+                    // Relaxed: independent monotone counter; read only
+                    // by the metrics endpoint.
+                    metrics.pressure.chunked_prefills.fetch_add(1, Ordering::Relaxed);
+                    batcher.continue_prefill(seq, total - filled);
+                    progressed = true;
                 }
-                progressed = true;
-                if decode_len == 0 {
-                    // Zero-length decode: complete at prefill time. No
-                    // decode step runs and no token is appended, so
-                    // `decode_steps` stays untouched and the cache holds
-                    // exactly the context that was requested.
-                    let fl = inflight.remove(&seq).expect("prefill for unknown request");
-                    let ms = fl.submitted.elapsed().as_secs_f64() * 1e3;
-                    finish_turn(&mut engine, &mut parked, &mut stats, &metrics, seq, fl, ms, ms);
-                } else {
-                    batcher.started(seq);
+                Ok(PrefillProgress::Complete) => {
+                    if resume {
+                        stats.session_tokens += chunk as u64;
+                        stats.resumed_turns += 1;
+                    } else if let Some(fl) = inflight.get_mut(&seq) {
+                        stats.prefill_tokens += (total - fl.filled) as u64;
+                        fl.filled = total;
+                    }
+                    progressed = true;
+                    if decode_len == 0 {
+                        // Zero-length decode: complete at prefill time. No
+                        // decode step runs and no token is appended, so
+                        // `decode_steps` stays untouched and the cache holds
+                        // exactly the context that was requested.
+                        let fl = inflight.remove(&seq).expect("prefill for unknown request");
+                        let ms = fl.submitted.elapsed().as_secs_f64() * 1e3;
+                        finish_turn(&mut engine, &mut parked, &mut stats, &metrics, seq, fl, ms, ms);
+                    } else {
+                        batcher.started(seq);
+                    }
                 }
-            } else {
-                stats.rejected_admissions += 1;
-                batcher.requeue(seq, ctx);
+                Ok(PrefillProgress::Rejected) => {
+                    stats.rejected_admissions += 1;
+                    // Page exhaustion: preempt the lowest-priority
+                    // running sequence strictly below this request's
+                    // class, if any. Recompute-style (vLLM): release
+                    // the victim's pages (prefix-shared ones stay
+                    // resident in the tree, so readmission re-prefills
+                    // cheaply) and requeue it for a fresh prefill; its
+                    // decoded tokens recompute bit-identically and the
+                    // `emitted` mark keeps its stream duplicate-free.
+                    if let Some(victim) = pick_victim(&batcher, &inflight, prio) {
+                        engine.release(victim);
+                        batcher.finished(victim);
+                        preempted.insert(victim);
+                        let vfl = inflight.get_mut(&victim).expect("victim is inflight");
+                        vfl.base_decoded = 0;
+                        vfl.filled = 0;
+                        vfl.last_token = None;
+                        batcher.requeue(victim, vfl.req.context_len, vfl.req.priority, false);
+                        // Relaxed: independent monotone counter; read
+                        // only by the metrics endpoint.
+                        metrics.pressure.preemptions.fetch_add(1, Ordering::Relaxed);
+                        progressed = true;
+                    }
+                    batcher.requeue(seq, if resume { chunk } else { total }, prio, resume);
+                }
             }
         }
+        batch.decodes.retain(|seq| !preempted.contains(seq));
         // Decode steps: one batched call — sequences score their keys
         // across the shared worker pool, appends commit in batch order.
         if !batch.decodes.is_empty() {
@@ -645,19 +852,26 @@ fn scheduler_loop(
             let fl = inflight.get_mut(&seq).expect("decode for unknown request");
             let now = Instant::now();
             let since_submit = now.duration_since(fl.submitted).as_secs_f64() * 1e3;
+            let class = metrics.class(fl.req.priority.index());
             if fl.first_token.is_none() {
                 fl.first_token = Some(now);
                 metrics.method(&fl.label).ttft.record_ms(since_submit);
+                class.ttft.record_ms(since_submit);
             } else if let Some(prev) = fl.last_token {
-                metrics
-                    .method(&fl.label)
-                    .tbt
-                    .record_ms(now.duration_since(prev).as_secs_f64() * 1e3);
+                let gap_ms = now.duration_since(prev).as_secs_f64() * 1e3;
+                metrics.method(&fl.label).tbt.record_ms(gap_ms);
+                class.tbt.record_ms(gap_ms);
             }
             fl.last_token = Some(now);
             let turn_tokens = engine.decoded(seq) - fl.base_decoded;
-            if let Some(tx) = &fl.tokens {
-                let _ = tx.send(TokenEvent { index: turn_tokens - 1, ms: since_submit });
+            if turn_tokens > fl.emitted {
+                // Past the high-water mark: genuinely new (a preempted
+                // sequence re-decodes tokens it already streamed; those
+                // stay suppressed).
+                if let Some(tx) = &fl.tokens {
+                    let _ = tx.send(TokenEvent { index: turn_tokens - 1, ms: since_submit });
+                }
+                fl.emitted = turn_tokens;
             }
             if turn_tokens >= fl.req.decode_len {
                 // Finished.
@@ -720,18 +934,15 @@ mod tests {
     }
 
     fn req(id: u64, ctx: usize, dec: usize) -> Request {
-        Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode: None, prompt: None }
+        Request { id, context_len: ctx, decode_len: dec, ..Request::default() }
     }
 
     fn req_as(id: u64, ctx: usize, dec: usize, mode: AttentionMode) -> Request {
-        Request {
-            id,
-            arrival_ms: 0.0,
-            context_len: ctx,
-            decode_len: dec,
-            mode: Some(mode),
-            prompt: None,
-        }
+        Request { mode: Some(mode), ..req(id, ctx, dec) }
+    }
+
+    fn req_pri(id: u64, ctx: usize, dec: usize, prio: Priority) -> Request {
+        Request { priority: prio, ..req(id, ctx, dec) }
     }
 
     fn session_turn(id: u64, ctx: usize, dec: usize, resume: bool) -> Submission {
@@ -1180,5 +1391,227 @@ mod tests {
         let prune = m.prune_json();
         assert!(prune.get("blocks").unwrap().as_usize().unwrap() > 0, "{prune}");
         coord.shutdown();
+    }
+
+    #[test]
+    fn forced_fault_preempts_lowest_priority_and_both_complete() {
+        // PR 9 acceptance round trip: a forced page-exhaustion fault on
+        // an interactive admission preempts the running batch-class
+        // sequence; the victim restarts from a fresh prefill and its
+        // stream still carries every token exactly once.
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        let (tx, rx) = channel();
+        let h_victim = coord.submit_opts(Submission {
+            req: req_pri(1, 64, 600, Priority::Batch),
+            keep_alive: false,
+            resume: false,
+            tokens: Some(tx),
+        });
+        // Wait for the first token so the victim is decoding (running,
+        // hence preemptible) when the interactive request lands.
+        let first = rx.recv_timeout(Duration::from_secs(30)).expect("victim must start");
+        assert_eq!(first.index, 0);
+        // Arm-then-submit rides the same queue as the submission, so
+        // the fault deterministically hits seq 2's first admission.
+        coord.inject_faults(FaultPlan::new().fail_first(2, 1));
+        let h_inter = coord.submit(req_pri(2, 64, 2, Priority::Interactive));
+        let c_inter = h_inter.wait_timeout(Duration::from_secs(30)).expect("interactive resolves");
+        assert!(c_inter.ok, "{:?}", c_inter.error);
+        let events: Vec<TokenEvent> = std::iter::once(first).chain(rx.iter()).collect();
+        let c_victim = h_victim.wait_timeout(Duration::from_secs(30)).expect("victim resolves");
+        assert!(c_victim.ok, "preempted request must be re-served: {:?}", c_victim.error);
+        assert_eq!(events.len(), 600, "restart must not duplicate or drop token events");
+        for (i, ev) in events.iter().enumerate() {
+            assert_eq!(ev.index, i, "token indices must stay ordered across the restart");
+        }
+        let m = coord.metrics();
+        assert!(
+            m.pressure.preemptions.load(Ordering::Relaxed) >= 1,
+            "the batch-class victim must have been preempted"
+        );
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.failed_requests, 0);
+        assert!(
+            stats.prefill_tokens >= 64 + 64 + 64,
+            "the victim's re-prefill must be counted honestly, got {}",
+            stats.prefill_tokens
+        );
+    }
+
+    #[test]
+    fn full_waiting_queue_sheds_with_typed_error() {
+        // max_waiting = 0: every fresh submission bounces immediately —
+        // the deterministic way to exercise the shed path.
+        let coord =
+            Coordinator::spawn(small_config(), BatchPolicy { max_waiting: 0, ..Default::default() });
+        let c = coord
+            .submit(req(1, 64, 2))
+            .wait_timeout(Duration::from_secs(30))
+            .expect("shed request resolves immediately");
+        assert!(!c.ok);
+        assert!(c.error.as_deref().unwrap_or("").starts_with("queue_full"), "{:?}", c.error);
+        assert_eq!(coord.metrics().pressure.shed.load(Ordering::Relaxed), 1);
+        // Raising the bound at runtime restores service without a restart.
+        coord.set_policy(BatchPolicy::default());
+        let c2 = coord.submit(req(2, 64, 2)).wait();
+        assert!(c2.ok, "{:?}", c2.error);
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed_requests, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn deadline_expired_waiters_are_shed_with_typed_error() {
+        let coord = Coordinator::spawn(small_config(), BatchPolicy::default());
+        // Pin seq 1 out of admission indefinitely; its deadline lapses
+        // in the queue and the sweep sheds it.
+        coord.inject_faults(FaultPlan::new().fail_first(1, u32::MAX));
+        let c = coord
+            .submit(Request { deadline_ms: Some(5.0), ..req(1, 64, 2) })
+            .wait_timeout(Duration::from_secs(30))
+            .expect("expired request resolves");
+        assert!(!c.ok);
+        assert!(c.error.as_deref().unwrap_or("").starts_with("deadline_missed"), "{:?}", c.error);
+        assert!(coord.metrics().pressure.deadline_missed.load(Ordering::Relaxed) >= 1);
+        // A generous deadline on an unconstrained request is met.
+        let c2 = coord.submit(Request { deadline_ms: Some(60_000.0), ..req(2, 64, 2) }).wait();
+        assert!(c2.ok, "{:?}", c2.error);
+        let stats = coord.shutdown();
+        assert_eq!(stats.failed_requests, 1);
+        assert_eq!(stats.completed, 1);
+    }
+
+    #[test]
+    fn chunked_prefill_shares_iterations_with_decodes() {
+        // A context 4x the token budget must take >= 3 partial chunks,
+        // and a concurrent short request must still be served promptly
+        // (chunking exists so long prefills cannot monopolize the loop).
+        let policy = BatchPolicy { prefill_token_budget: 64, ..Default::default() };
+        let coord = Coordinator::spawn(small_config(), policy);
+        let h_long = coord.submit(req(1, 256, 2));
+        let h_short = coord.submit(req(2, 32, 8));
+        let c_long = h_long.wait_timeout(Duration::from_secs(30)).expect("long resolves");
+        let c_short = h_short.wait_timeout(Duration::from_secs(30)).expect("short resolves");
+        assert!(c_long.ok, "{:?}", c_long.error);
+        assert!(c_short.ok, "{:?}", c_short.error);
+        let chunked = coord.metrics().pressure.chunked_prefills.load(Ordering::Relaxed);
+        assert!(chunked >= 3, "4x-budget context must take >= 3 partial chunks, saw {chunked}");
+        let stats = coord.shutdown();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.prefill_tokens, 256 + 32, "chunk accounting must not double-count");
+    }
+
+    /// Satellite: completion accounting under forced preempt/readmit —
+    /// every accepted request resolves as exactly one of served, shed,
+    /// or failed, and the page pool drains to empty, across randomized
+    /// priorities, sizes, and fault plans.
+    #[test]
+    fn completion_accounting_holds_under_forced_faults() {
+        use crate::prop_assert;
+        use crate::testing::{check, PropConfig};
+        check("preempt-accounting", PropConfig { cases: 6, seed: 0x50C4E7 }, |rng, _| {
+            let config = EngineConfig { capacity_pages: 96, ..small_config() };
+            let policy = BatchPolicy { max_waiting: 6, max_prefills: 2, ..Default::default() };
+            let coord = Coordinator::spawn(config, policy);
+            let n = 8 + (rng.next_u64() % 8) as usize;
+            let mut plan = FaultPlan::new();
+            for i in 0..n as u64 {
+                if rng.next_u64() % 3 == 0 {
+                    plan = plan.fail_first(i, 1);
+                }
+            }
+            coord.inject_faults(plan);
+            let handles: Vec<RequestHandle> = (0..n as u64)
+                .map(|i| {
+                    let prio = Priority::ALL[(rng.next_u64() % 3) as usize];
+                    let ctx = 32 + 16 * (rng.next_u64() % 4) as usize;
+                    let dec = 1 + (rng.next_u64() % 4) as usize;
+                    coord.submit(Request {
+                        priority: prio,
+                        ..req(i, ctx, dec)
+                    })
+                })
+                .collect();
+            let mut served = 0usize;
+            let mut unserved = 0usize;
+            for h in handles {
+                let c = h
+                    .wait_timeout(Duration::from_secs(60))
+                    .ok_or_else(|| "a handle hung past 60s".to_string())?;
+                if c.ok {
+                    served += 1;
+                } else {
+                    unserved += 1;
+                }
+            }
+            prop_assert!(served + unserved == n, "a request vanished: {served}+{unserved} != {n}");
+            let snap = coord.snapshot().ok_or_else(|| "scheduler died".to_string())?;
+            prop_assert!(
+                snap.free_pages == snap.total_pages,
+                "pages leaked: {} free of {}",
+                snap.free_pages,
+                snap.total_pages
+            );
+            prop_assert!(
+                snap.stats.completed == served,
+                "stats disagree with delivered completions: {} != {served}",
+                snap.stats.completed
+            );
+            prop_assert!(
+                snap.stats.failed_requests == unserved,
+                "failures unaccounted: {} != {unserved}",
+                snap.stats.failed_requests
+            );
+            // shutdown re-runs the page audit; a refcount leak panics here.
+            let stats = coord.shutdown();
+            prop_assert!(stats.completed == served, "shutdown stats drifted");
+            Ok(())
+        });
+    }
+
+    /// Model of the preemption decision racing a concurrent release, on
+    /// every interleaving: the scheduler's *decision* may read a stale
+    /// free-page count (causing an unnecessary preemption), but the
+    /// *admission* is an RMW on the authoritative balance — it can never
+    /// admit pages that are not there, and the victim is requeued
+    /// exactly once, never lost.
+    #[test]
+    fn preemption_vs_release_model_all_schedules() {
+        use crate::testing::interleave;
+        const NEED: u64 = 3;
+        let report = interleave::explore("preempt-vs-release", |sim| {
+            let free = sim.atomic(2); // insufficient for NEED
+            let victim = sim.atomic(0); // 0 = running, 1 = requeued
+            let (fr, fs) = (free.clone(), free.clone());
+            let vs = victim.clone();
+            // A finishing sequence hands its 2 pages back at any point.
+            let releaser = sim.spawn(move || fr.fetch_add(2));
+            let sched = sim.spawn(move || {
+                let seen = fs.load(); // the decision: may be stale
+                if seen < NEED {
+                    // Preempt: requeue the victim exactly once and
+                    // reclaim its 3 pages.
+                    let was = vs.swap(1);
+                    assert_eq!(was, 0, "victim preempted twice");
+                    fs.fetch_add(3);
+                }
+                // Admission charges the authoritative balance (RMW),
+                // never the stale read.
+                let before = fs.fetch_add(0u64.wrapping_sub(NEED));
+                assert!(before >= NEED, "admitted on insufficient pages: {before}");
+                u64::from(seen < NEED)
+            });
+            let _ = releaser.join();
+            let preempted = sched.join();
+            assert_eq!(
+                free.load(),
+                2 + 2 + 3 * preempted - NEED,
+                "page conservation across preempt/release"
+            );
+            assert_eq!(victim.load(), preempted, "victim requeued iff preempted");
+        });
+        assert!(report.exhaustive);
+        assert!(report.schedules > 1);
     }
 }

@@ -15,7 +15,9 @@ use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
 use crate::util::pool::WorkerPool;
 use crate::util::{fnum, pool, Json, Pcg64, Table};
-use crate::workload::trace::{SharedPrefixConfig, SharedPrefixTrace, TraceConfig};
+use crate::workload::trace::{
+    SaturationConfig, SaturationTrace, SharedPrefixConfig, SharedPrefixTrace, TraceConfig,
+};
 use std::time::Instant;
 
 pub struct ThroughputPoint {
@@ -794,6 +796,91 @@ pub fn run_prefix_lane(scale: Scale, n_requests: usize, cfg: SharedPrefixConfig)
         .set("speedup", speedup)
 }
 
+/// Saturation lane: a Poisson × Zipf-context × mixed-priority burst
+/// (`workload::trace::SaturationTrace`) pushed through the coordinator
+/// over a deliberately undersized page pool — the
+/// degradation-under-pressure measurement. Chunked prefill, the
+/// priority queues, preemption, and load shedding all engage; the row
+/// reports goodput, the full tally of outcomes (served / shed /
+/// deadline-missed), every pressure counter, and the per-class latency
+/// quantiles.
+pub fn run_saturation_lane(scale: Scale, n_requests: usize, cfg: SaturationConfig) -> Json {
+    use crate::coordinator::{AttentionMode, BatchPolicy, Coordinator, EngineConfig};
+    assert!(n_requests >= 2, "the lane exists to measure contention");
+    let requests = SaturationTrace::new(cfg, scale.seed).take(n_requests);
+    let footprints: Vec<usize> = requests
+        .iter()
+        .map(|r| PagedKvCache::pages_for(r.context_len + r.decode_len))
+        .collect();
+    let peak = footprints.iter().copied().max().unwrap_or(1);
+    let total: usize = footprints.iter().sum();
+    // Pool sized to a fraction of the aggregate footprint so admission
+    // genuinely contends (the point of the lane), while the largest
+    // request still fits several times over — nothing is rejected as
+    // never-admittable, so every failure is a degradation decision.
+    let capacity = (total / 4).max(3 * peak);
+    let config = EngineConfig {
+        model: ModelConfig { head_dim: scale.dim, n_kv_heads: 1, ..ModelConfig::tiny() },
+        lsh: LshParams { p: 6, l: 16, tau: 0.5 },
+        mode: AttentionMode::socket(8.0),
+        capacity_pages: capacity,
+        sink: 16,
+        local: 16,
+    };
+    // Budget at the shortest rung so the Zipf tail's long prefills run
+    // chunked instead of monopolizing iterations; waiting bound below
+    // the burst so the overflow sheds instead of queueing unboundedly.
+    let policy = BatchPolicy {
+        prefill_token_budget: cfg.base.context_min.max(64),
+        max_waiting: (3 * n_requests / 4).max(2),
+        ..BatchPolicy::default()
+    };
+    let coordinator = Coordinator::spawn(config, policy);
+    let t0 = Instant::now();
+    let handles: Vec<_> = requests
+        .iter()
+        .map(|r| {
+            let mut req = r.clone();
+            req.arrival_ms = 0.0; // closed-loop burst: worst-case pressure
+            coordinator.submit(req)
+        })
+        .collect();
+    let (mut served, mut shed, mut missed, mut failed) = (0usize, 0usize, 0usize, 0usize);
+    let mut served_tokens = 0usize;
+    for (h, r) in handles.into_iter().zip(requests.iter()) {
+        let c = h.wait();
+        if c.ok {
+            served += 1;
+            served_tokens += r.decode_len;
+        } else {
+            match c.error.as_deref().unwrap_or("") {
+                e if e.starts_with("queue_full") => shed += 1,
+                e if e.starts_with("deadline_missed") => missed += 1,
+                _ => failed += 1,
+            }
+        }
+    }
+    let elapsed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let m = coordinator.metrics();
+    let pressure = m.pressure_json();
+    let classes = m.classes_json();
+    coordinator.shutdown();
+    assert_eq!(served + shed + missed + failed, n_requests, "every request must resolve");
+    Json::obj()
+        .set("bench", "throughput_saturation_lane")
+        .set("requests", n_requests)
+        .set("capacity_pages", capacity)
+        .set("footprint_pages", total)
+        .set("elapsed_ms", elapsed_ms)
+        .set("served", served)
+        .set("shed", shed)
+        .set("deadline_missed", missed)
+        .set("failed", failed)
+        .set("goodput_tps", served_tokens as f64 / (elapsed_ms / 1e3).max(1e-9))
+        .set("pressure", pressure)
+        .set("classes", classes)
+}
+
 pub fn table(points: &[ThroughputPoint], label: &str) -> Table {
     let mut t = Table::new(
         &format!("Figure 3b/c: decode throughput vs context ({label})"),
@@ -953,6 +1040,48 @@ mod tests {
         // The artifact round-trips through the writer/parser.
         let back = crate::util::Json::parse(&doc.dumps()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_prefix_lane"));
+    }
+
+    #[test]
+    fn saturation_lane_degrades_gracefully_and_accounts_for_every_request() {
+        let scale = Scale { n: 512, dim: 16, instances: 1, seed: 21 };
+        let cfg = SaturationConfig {
+            base: TraceConfig {
+                rate_rps: 200.0,
+                context_min: 64,
+                context_max: 1024,
+                decode_min: 1,
+                decode_max: 3,
+            },
+            zipf_s: 1.0,
+            context_rungs: 4,
+            class_mix: [1.0, 1.0, 1.0],
+            interactive_deadline_ms: Some(30_000.0),
+        };
+        let doc = run_saturation_lane(scale, 24, cfg);
+        assert_eq!(doc.get("bench").unwrap().as_str(), Some("throughput_saturation_lane"));
+        let served = doc.get("served").unwrap().as_usize().unwrap();
+        let shed = doc.get("shed").unwrap().as_usize().unwrap();
+        let missed = doc.get("deadline_missed").unwrap().as_usize().unwrap();
+        let failed = doc.get("failed").unwrap().as_usize().unwrap();
+        // Completion accounting: every request resolves as exactly one
+        // of served / shed / deadline-missed; nothing fails for a
+        // non-degradation reason (the pool fits every request alone).
+        assert_eq!(served + shed + missed + failed, 24, "{doc}");
+        assert!(served >= 1, "{doc}");
+        assert_eq!(failed, 0, "{doc}");
+        assert!(doc.get("goodput_tps").unwrap().as_f64().unwrap() > 0.0, "{doc}");
+        let pressure = doc.get("pressure").unwrap();
+        for key in ["preemptions", "chunked_prefills", "shed", "deadline_missed"] {
+            assert!(pressure.get(key).is_some(), "missing pressure.{key}: {doc}");
+        }
+        // The lane's own tallies agree with the registry counters.
+        assert_eq!(pressure.get("shed").unwrap().as_usize(), Some(shed), "{doc}");
+        assert_eq!(pressure.get("deadline_missed").unwrap().as_usize(), Some(missed), "{doc}");
+        assert!(doc.get("classes").is_some(), "{doc}");
+        // The artifact round-trips through the writer/parser.
+        let back = crate::util::Json::parse(&doc.dumps()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("throughput_saturation_lane"));
     }
 
     #[test]

@@ -147,12 +147,57 @@ impl MethodSeries {
     }
 }
 
+/// Per-priority-class serving series: TTFT/TBT histograms under the
+/// weighted scheduler. Indexed by `Priority::index()` (0 = batch,
+/// 1 = normal, 2 = interactive) — the registry stays decoupled from the
+/// workload crate's enum by taking the index.
+pub struct ClassSeries {
+    pub label: &'static str,
+    /// Submission → first decoded token.
+    pub ttft: Histogram,
+    /// Inter-token gaps after the first token.
+    pub tbt: Histogram,
+}
+
+impl ClassSeries {
+    fn new(label: &'static str) -> ClassSeries {
+        ClassSeries { label, ttft: Histogram::new(), tbt: Histogram::new() }
+    }
+
+    /// No traffic yet? Same relaxed-snapshot contract as
+    /// [`MethodSeries::idle`].
+    fn idle(&self) -> bool {
+        self.ttft.count() == 0 && self.tbt.count() == 0
+    }
+}
+
+/// Degradation-path counters: how often the scheduler had to bend
+/// instead of break. All relaxed monotone counters fed in place by the
+/// scheduler loop (same no-lock contract as everything here).
+#[derive(Default)]
+pub struct PressureCounters {
+    /// Running sequences preempted (released + requeued for recompute)
+    /// to admit higher-priority work.
+    pub preemptions: AtomicU64,
+    /// Prefill chunks paused for continuation (a long prefill split
+    /// across N iterations counts N-1 here).
+    pub chunked_prefills: AtomicU64,
+    /// Submissions refused because the waiting queue was at its bound.
+    pub shed: AtomicU64,
+    /// Waiting requests failed because their scheduling deadline
+    /// expired before prefill started.
+    pub deadline_missed: AtomicU64,
+}
+
 /// The serving metrics registry. Slots for every method are allocated
 /// up front (the selector registry is static), so feeding a sample is
 /// a label lookup over ~10 entries plus a few relaxed atomic adds —
 /// no lock, no allocation, no resize.
 pub struct Registry {
     methods: Vec<MethodSeries>,
+    classes: [ClassSeries; 3],
+    /// Overload/degradation counters (preemptions, shed, ...).
+    pub pressure: PressureCounters,
     prune_blocks: AtomicU64,
     prune_pruned: AtomicU64,
     prune_warmup: AtomicU64,
@@ -172,6 +217,12 @@ impl Registry {
         methods.push(MethodSeries::new("other"));
         Registry {
             methods,
+            classes: [
+                ClassSeries::new("batch"),
+                ClassSeries::new("normal"),
+                ClassSeries::new("interactive"),
+            ],
+            pressure: PressureCounters::default(),
             prune_blocks: AtomicU64::new(0),
             prune_pruned: AtomicU64::new(0),
             prune_warmup: AtomicU64::new(0),
@@ -190,6 +241,37 @@ impl Registry {
             .iter()
             .find(|m| m.label.eq_ignore_ascii_case(label))
             .unwrap_or_else(|| self.methods.last().expect("registry has an 'other' slot"))
+    }
+
+    /// The series for a priority class by `Priority::index()`.
+    /// Out-of-range indices clamp to the highest class rather than
+    /// panicking in the serving loop.
+    pub fn class(&self, index: usize) -> &ClassSeries {
+        &self.classes[index.min(self.classes.len() - 1)]
+    }
+
+    /// Per-priority-class section of the metrics schema. Idle classes
+    /// are omitted, like idle method series.
+    pub fn classes_json(&self) -> Json {
+        let mut out = Json::obj();
+        for c in self.classes.iter().filter(|c| !c.idle()) {
+            out = out.set(
+                c.label,
+                Json::obj().set("ttft_ms", c.ttft.to_json()).set("tbt_ms", c.tbt.to_json()),
+            );
+        }
+        out
+    }
+
+    /// Degradation counters for the metrics schema. Always emits every
+    /// field (zero included) so dashboards and the CI smoke can assert
+    /// the schema without traffic. Relaxed loads: best-effort snapshot.
+    pub fn pressure_json(&self) -> Json {
+        Json::obj()
+            .set("preemptions", self.pressure.preemptions.load(Ordering::Relaxed))
+            .set("chunked_prefills", self.pressure.chunked_prefills.load(Ordering::Relaxed))
+            .set("shed", self.pressure.shed.load(Ordering::Relaxed))
+            .set("deadline_missed", self.pressure.deadline_missed.load(Ordering::Relaxed))
     }
 
     /// Fold one drained [`PruneStats`] into the pruning gauges.
@@ -379,6 +461,42 @@ mod tests {
         assert!((j.get("shared_page_ratio").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
         assert_eq!(j.get("prefill_tokens_saved").unwrap().as_usize(), Some(480));
         assert_eq!(j.get("hash_blocks_reused").unwrap().as_usize(), Some(6));
+    }
+
+    #[test]
+    fn class_series_route_by_index_and_omit_idle() {
+        let r = Registry::new();
+        r.class(2).ttft.record_ms(1.5);
+        r.class(2).tbt.record_ms(0.4);
+        r.class(0).ttft.record_ms(9.0);
+        let j = r.classes_json();
+        assert_eq!(
+            j.get("interactive").unwrap().get("ttft_ms").unwrap().get("count").unwrap().as_usize(),
+            Some(1),
+            "{j}"
+        );
+        assert_eq!(
+            j.get("batch").unwrap().get("ttft_ms").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(j.get("normal").is_none(), "idle class must be omitted");
+        // Out-of-range indices clamp instead of panicking.
+        r.class(99).ttft.record_ms(2.0);
+        assert_eq!(r.class(2).ttft.count(), 2);
+    }
+
+    #[test]
+    fn pressure_counters_always_emit_full_schema() {
+        let r = Registry::new();
+        let j = r.pressure_json();
+        for field in ["preemptions", "chunked_prefills", "shed", "deadline_missed"] {
+            assert_eq!(j.get(field).unwrap().as_usize(), Some(0), "missing/nonzero {field}");
+        }
+        r.pressure.preemptions.fetch_add(3, Ordering::Relaxed);
+        r.pressure.shed.fetch_add(1, Ordering::Relaxed);
+        let j = r.pressure_json();
+        assert_eq!(j.get("preemptions").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shed").unwrap().as_usize(), Some(1));
     }
 
     #[test]

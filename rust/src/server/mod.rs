@@ -16,6 +16,12 @@
 //!     evicted after `session_ttl` and their pages returned to the pool.
 //!   - `"stream":true` — emit one `{"token":i,"ms":t}` line per decoded
 //!     token, then the usual summary line with `"done":true`.
+//!   - `"priority":"interactive"|"normal"|"batch"` — scheduling class
+//!     (default `normal`). Admission is weighted toward higher classes,
+//!     and under page exhaustion the scheduler preempts strictly lower
+//!     ones. `"deadline_ms":D` bounds time-to-first-schedule: a request
+//!     still queued when D elapses is shed with a `deadline_missed`
+//!     error.
 //! * `{"op":"stats"}` — totals served plus a per-method breakdown.
 //! * `{"op":"metrics"}` — the full serving telemetry snapshot:
 //!   per-method TTFT/TBT histograms (p50/p95/p99), KV pool utilization,
@@ -41,7 +47,7 @@ use crate::coordinator::{BatchPolicy, Completion, Coordinator, EngineConfig, Sub
 use crate::kvcache::{PromptSegment, PromptSpec};
 use crate::selector::{self, AttentionMode};
 use crate::util::Json;
-use crate::workload::trace::Request;
+use crate::workload::trace::{Priority, Request};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -277,6 +283,31 @@ impl Server {
         Ok(Some(spec))
     }
 
+    /// Parse the scheduling knobs shared by every generate shape:
+    /// `"priority"` (scheduling class) and `"deadline_ms"` (a finite
+    /// non-negative time-to-first-schedule bound).
+    fn request_scheduling(msg: &Json) -> Result<(Priority, Option<f64>), String> {
+        let priority = match msg.get("priority") {
+            None => Priority::default(),
+            Some(v) => match v.as_str() {
+                Some(name) => Priority::parse(name)?,
+                None => return Err(format!("priority must be a string, got {v}")),
+            },
+        };
+        let deadline_ms = match msg.get("deadline_ms") {
+            None => None,
+            Some(v) => match v.as_f64() {
+                Some(ms) if ms.is_finite() && ms >= 0.0 => Some(ms),
+                _ => {
+                    return Err(format!(
+                        "deadline_ms must be a finite non-negative number, got {v}"
+                    ));
+                }
+            },
+        };
+        Ok((priority, deadline_ms))
+    }
+
     /// Submit one turn and await its completion. With `stream` set, the
     /// scheduler's per-token events are emitted as JSON lines while the
     /// turn decodes; the token channel disconnects only after the
@@ -347,10 +378,23 @@ impl Server {
             Ok(p) => p,
             Err(e) => return err_json(e),
         };
+        let (priority, deadline_ms) = match Self::request_scheduling(msg) {
+            Ok(s) => s,
+            Err(e) => return err_json(e),
+        };
         // Relaxed id allocation: fetch_add is atomic at any ordering,
         // so ids stay unique; nothing else hangs off this cell.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, arrival_ms: 0.0, context_len: ctx, decode_len: dec, mode, prompt };
+        let req = Request {
+            id,
+            context_len: ctx,
+            decode_len: dec,
+            mode,
+            prompt,
+            priority,
+            deadline_ms,
+            ..Request::default()
+        };
         let c = self.run_turn(req, false, false, stream, emit);
         if !c.ok {
             // Failed admission (e.g. request larger than the KV
@@ -394,13 +438,22 @@ impl Server {
             // Resumed turn: the scheduler appends `ctx` tokens to the
             // parked index — zero prefill tokens, and no prompt spec
             // (prefix sharing applies to prefills only).
+            let (priority, deadline_ms) = match Self::request_scheduling(msg) {
+                Ok(s) => s,
+                Err(e) => {
+                    if let Some(entry) = lock(&self.sessions).get_mut(sid) {
+                        entry.busy = false;
+                    }
+                    return err_json(e);
+                }
+            };
             let req = Request {
                 id: seq,
-                arrival_ms: 0.0,
                 context_len: ctx,
                 decode_len: dec,
-                mode: None,
-                prompt: None,
+                priority,
+                deadline_ms,
+                ..Request::default()
             };
             let c = self.run_turn(req, true, true, stream, emit);
             let (turns, toks) = {
@@ -461,13 +514,22 @@ impl Server {
                     return err_json(e);
                 }
             };
+            let (priority, deadline_ms) = match Self::request_scheduling(msg) {
+                Ok(s) => s,
+                Err(e) => {
+                    lock(&self.sessions).remove(sid);
+                    return err_json(e);
+                }
+            };
             let req = Request {
                 id: seq,
-                arrival_ms: 0.0,
                 context_len: ctx,
                 decode_len: dec,
                 mode,
                 prompt,
+                priority,
+                deadline_ms,
+                ..Request::default()
             };
             let c = self.run_turn(req, true, false, stream, emit);
             let mut sessions = lock(&self.sessions);
@@ -531,6 +593,8 @@ impl Server {
             .set("scheduler", snap.stats.to_json())
             .set("sessions", sessions)
             .set("methods", registry.methods_json())
+            .set("classes", registry.classes_json())
+            .set("pressure", registry.pressure_json())
             .set("prune", registry.prune_json())
             .set("prefix", registry.prefix_json())
             .set("config", config)
@@ -939,6 +1003,63 @@ mod tests {
         assert_eq!(resp.get("method").unwrap().as_str(), Some("socket"));
         let stats = s.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
         assert_eq!(stats.get("methods").unwrap().get("socket").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn priority_and_deadline_ride_the_wire() {
+        let s = server();
+        // Every class name is accepted (case-insensitive), with or
+        // without a deadline.
+        for prio in ["interactive", "normal", "batch", "Interactive"] {
+            let line = format!(
+                r#"{{"op":"generate","context_len":48,"decode_len":1,"priority":"{prio}","deadline_ms":60000}}"#
+            );
+            let resp = s.handle(&Json::parse(&line).unwrap());
+            assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true), "{prio}: {resp}");
+        }
+        // Served requests feed the per-class latency series.
+        let m = s.handle(&Json::parse(r#"{"op":"metrics"}"#).unwrap());
+        let classes = m.get("classes").expect("metrics must carry a classes section");
+        assert!(classes.get("interactive").is_some(), "{m}");
+        assert!(classes.get("batch").is_some(), "{m}");
+        // The pressure schema is complete even when every counter is 0.
+        let pressure = m.get("pressure").expect("metrics must carry a pressure section");
+        for key in ["preemptions", "chunked_prefills", "shed", "deadline_missed"] {
+            assert_eq!(pressure.get(key).and_then(|v| v.as_usize()), Some(0), "{m}");
+        }
+        // Bad values are typed client errors, not silently defaulted.
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","context_len":48,"decode_len":1,"priority":"vip"}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("priority"), "{resp}");
+        let resp = s.handle(
+            &Json::parse(r#"{"op":"generate","context_len":48,"decode_len":1,"deadline_ms":-5}"#)
+                .unwrap(),
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false), "{resp}");
+        assert!(resp.get("error").unwrap().as_str().unwrap().contains("deadline_ms"), "{resp}");
+        // A session turn rejects bad knobs without wedging the session.
+        let t1 = s.handle(
+            &Json::parse(r#"{"op":"generate","session":"p","context_len":48,"decode_len":1}"#)
+                .unwrap(),
+        );
+        assert_eq!(t1.get("ok").unwrap().as_bool(), Some(true), "{t1}");
+        let bad = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","session":"p","context_len":16,"decode_len":1,"priority":7}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        let t2 = s.handle(
+            &Json::parse(
+                r#"{"op":"generate","session":"p","context_len":16,"decode_len":1,"priority":"interactive"}"#,
+            )
+            .unwrap(),
+        );
+        assert_eq!(t2.get("ok").unwrap().as_bool(), Some(true), "session must survive: {t2}");
     }
 
     #[test]

@@ -8,7 +8,8 @@
 //!
 //! ```json
 //! {
-//!   "batch": {"max_decode_batch": 16, "prefill_token_budget": 8192, "max_prefills": 2},
+//!   "batch": {"max_decode_batch": 16, "prefill_token_budget": 8192, "max_prefills": 2,
+//!             "max_waiting": 1024},
 //!   "default_method": "quest",
 //!   "default_sparsity": 8.0,
 //!   "session_ttl_secs": 60
@@ -63,6 +64,7 @@ impl ReloadConfig {
                 max_decode_batch: field("max_decode_batch", base.max_decode_batch)?,
                 prefill_token_budget: field("prefill_token_budget", base.prefill_token_budget)?,
                 max_prefills: field("max_prefills", base.max_prefills)?,
+                max_waiting: field("max_waiting", base.max_waiting)?,
             });
         }
         if let Some(m) = msg.get("default_method") {
@@ -173,12 +175,16 @@ mod tests {
     #[test]
     fn parse_full_and_partial_configs() {
         let cfg = ReloadConfig::parse(
-            r#"{"batch":{"max_decode_batch":4,"prefill_token_budget":512,"max_prefills":1},
+            r#"{"batch":{"max_decode_batch":4,"prefill_token_budget":512,"max_prefills":1,
+                         "max_waiting":64},
                 "default_method":"quest","default_sparsity":4.0,"session_ttl_secs":0.5}"#,
         )
         .unwrap();
         let p = cfg.policy.unwrap();
-        assert_eq!((p.max_decode_batch, p.prefill_token_budget, p.max_prefills), (4, 512, 1));
+        assert_eq!(
+            (p.max_decode_batch, p.prefill_token_budget, p.max_prefills, p.max_waiting),
+            (4, 512, 1, 64)
+        );
         assert_eq!(cfg.default_method.as_deref(), Some("quest"));
         assert_eq!(cfg.default_sparsity, Some(4.0));
         assert_eq!(cfg.session_ttl, Some(Duration::from_millis(500)));
@@ -189,6 +195,7 @@ mod tests {
         let p = cfg.policy.unwrap();
         assert_eq!(p.max_prefills, 3);
         assert_eq!(p.max_decode_batch, BatchPolicy::default().max_decode_batch);
+        assert_eq!(p.max_waiting, BatchPolicy::default().max_waiting);
         assert!(cfg.default_method.is_none());
         assert!(cfg.session_ttl.is_none());
 
@@ -202,6 +209,7 @@ mod tests {
         for bad in [
             "not json",
             r#"{"batch":{"max_prefills":0}}"#,
+            r#"{"batch":{"max_waiting":0}}"#,
             r#"{"default_method":"zzz"}"#,
             r#"{"default_method":7}"#,
             r#"{"default_sparsity":0.5}"#,

@@ -1,0 +1,135 @@
+//! Deterministic fault injection for the scheduler's degradation paths.
+//!
+//! Overload behavior — preemption, shedding, deadline misses — is
+//! normally reachable only by racing a pool into exhaustion, which
+//! makes every test of it timing-dependent. A [`FaultPlan`] instead
+//! *forces* the interesting failure at a chosen point: the engine
+//! consults its injector (a `#[cfg(test)]` field — release hot paths
+//! carry no hook at all) on each prefill admission and fails the
+//! attempts the plan names, exercising the exact cleanup + preemption
+//! + requeue code a real page-exhaustion event takes.
+//!
+//! Plans are plain data (`Clone + Send`), so tests build one, hand it
+//! to a running `Coordinator` (via its test-only injection message),
+//! and then drive the degradation deterministically — same schedule,
+//! same counters, every run.
+
+use std::collections::HashMap;
+
+/// A deterministic schedule of forced admission failures.
+///
+/// Two knobs compose: `fail_first(seq, times)` fails the first `times`
+/// admission attempts *of that sequence* (robust to batching order),
+/// and `fail_next(times)` fails the next `times` attempts regardless of
+/// sequence (for pressure that isn't aimed at anyone in particular).
+/// Both decrement as they fire; an exhausted plan is inert.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    per_seq: HashMap<u64, u32>,
+    any: u32,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Force the first `times` admission attempts of `seq` to report
+    /// page exhaustion (builder-style).
+    pub fn fail_first(mut self, seq: u64, times: u32) -> FaultPlan {
+        self.per_seq.insert(seq, times);
+        self
+    }
+
+    /// Force the next `times` admission attempts — whoever makes them —
+    /// to report page exhaustion (builder-style).
+    pub fn fail_next(mut self, times: u32) -> FaultPlan {
+        self.any = times;
+        self
+    }
+
+    /// Whether the plan still has failures to deliver.
+    pub fn is_empty(&self) -> bool {
+        self.any == 0 && self.per_seq.values().all(|&n| n == 0)
+    }
+}
+
+/// Consumes a [`FaultPlan`] attempt by attempt. Owned by the engine
+/// (test builds only); each admission asks `should_fail` exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Forced failures delivered so far (assertable by tests).
+    fired: u64,
+}
+
+impl FaultInjector {
+    /// Replace the active plan (resets nothing else; `fired` keeps
+    /// counting across plans).
+    pub fn arm(&mut self, plan: FaultPlan) {
+        self.plan = plan;
+    }
+
+    /// Decide this admission attempt's fate, consuming one scheduled
+    /// failure if it fires. Per-sequence failures take precedence over
+    /// the anonymous budget so a plan aimed at one request never burns
+    /// its `fail_next` charges on bystanders.
+    pub fn should_fail(&mut self, seq: u64) -> bool {
+        if let Some(n) = self.plan.per_seq.get_mut(&seq) {
+            if *n > 0 {
+                *n -= 1;
+                self.fired += 1;
+                return true;
+            }
+        }
+        if self.plan.any > 0 {
+            self.plan.any -= 1;
+            self.fired += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Forced failures delivered so far.
+    pub fn fired(&self) -> u64 {
+        self.fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_seq_failures_fire_exactly_times_then_stop() {
+        let mut inj = FaultInjector::default();
+        inj.arm(FaultPlan::new().fail_first(7, 2));
+        assert!(inj.should_fail(7));
+        assert!(!inj.should_fail(9), "other sequences are untouched");
+        assert!(inj.should_fail(7));
+        assert!(!inj.should_fail(7), "budget spent");
+        assert_eq!(inj.fired(), 2);
+    }
+
+    #[test]
+    fn anonymous_budget_fires_for_anyone_but_yields_to_per_seq() {
+        let mut inj = FaultInjector::default();
+        inj.arm(FaultPlan::new().fail_first(1, 1).fail_next(1));
+        // Seq 1's charge comes off its own budget, not the shared one.
+        assert!(inj.should_fail(1));
+        assert!(inj.should_fail(2), "anonymous charge still available");
+        assert!(!inj.should_fail(3));
+        assert_eq!(inj.fired(), 2);
+    }
+
+    #[test]
+    fn default_injector_is_inert() {
+        let mut inj = FaultInjector::default();
+        for seq in 0..100 {
+            assert!(!inj.should_fail(seq));
+        }
+        assert_eq!(inj.fired(), 0);
+        assert!(FaultPlan::new().is_empty());
+        assert!(!FaultPlan::new().fail_next(1).is_empty());
+    }
+}

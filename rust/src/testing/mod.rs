@@ -7,6 +7,7 @@
 
 use crate::util::rng::Pcg64;
 
+pub mod faults;
 pub mod interleave;
 
 /// Configuration for a property run.

@@ -5,6 +5,52 @@ use crate::kvcache::{PromptSegment, PromptSpec};
 use crate::selector::AttentionMode;
 use crate::util::rng::Pcg64;
 
+/// Scheduling priority class. Declared lowest-first so the derived
+/// `Ord` matches scheduling order: the scheduler preempts strictly
+/// lower classes under page exhaustion and weights admission toward
+/// higher ones.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Throughput-oriented background work — first preempted, last
+    /// admitted under contention.
+    Batch,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Latency-sensitive traffic — weighted ahead at admission and
+    /// never preempted by lower classes.
+    Interactive,
+}
+
+impl Priority {
+    /// Every class, in `index()` order.
+    pub const ALL: [Priority; 3] = [Priority::Batch, Priority::Normal, Priority::Interactive];
+
+    /// Dense table index: 0 = batch, 1 = normal, 2 = interactive.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Wire / metrics label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Batch => "batch",
+            Priority::Normal => "normal",
+            Priority::Interactive => "interactive",
+        }
+    }
+
+    /// Parse a wire name (case-insensitive).
+    pub fn parse(name: &str) -> Result<Priority, String> {
+        for p in Priority::ALL {
+            if name.eq_ignore_ascii_case(p.label()) {
+                return Ok(p);
+            }
+        }
+        Err(format!("unknown priority '{name}' (expected interactive, normal, or batch)"))
+    }
+}
+
 /// A single inference request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
@@ -22,6 +68,28 @@ pub struct Request {
     /// for prefix-cache sharing). Requests carrying specs with equal
     /// leading segments share KV pages and hash blocks in the engine.
     pub prompt: Option<PromptSpec>,
+    /// Scheduling class (admission weighting + preemption order).
+    pub priority: Priority,
+    /// Optional time-to-first-schedule bound, milliseconds from
+    /// submission: a request still *waiting* (not yet prefilling) when
+    /// its deadline expires is shed with a `deadline_missed` error
+    /// instead of occupying the queue.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            arrival_ms: 0.0,
+            context_len: 0,
+            decode_len: 0,
+            mode: None,
+            prompt: None,
+            priority: Priority::default(),
+            deadline_ms: None,
+        }
+    }
 }
 
 /// Trace parameters.
@@ -72,8 +140,7 @@ impl TraceGenerator {
             arrival_ms: self.clock_ms,
             context_len: ctx.clamp(self.cfg.context_min, self.cfg.context_max),
             decode_len: dec,
-            mode: None,
-            prompt: None,
+            ..Request::default()
         };
         self.next_id += 1;
         req
@@ -168,6 +235,120 @@ impl SharedPrefixTrace {
             });
         }
         req.prompt = Some(PromptSpec { segments, cache: true });
+        req
+    }
+
+    /// Generate a fixed-size batch of requests.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n).map(|_| self.next()).collect()
+    }
+}
+
+/// Saturation-trace parameters: Poisson arrivals, Zipf-distributed
+/// context lengths (most requests short, a heavy tail of long
+/// prefills), and a mixed-priority population — the overload shape the
+/// scheduler's degradation machinery (chunked prefill, preemption,
+/// shedding) is measured against.
+#[derive(Clone, Copy, Debug)]
+pub struct SaturationConfig {
+    /// Arrival rate + decode range. The context range bounds the Zipf
+    /// length ladder below (log-uniform sampling is *not* used).
+    pub base: TraceConfig,
+    /// Zipf exponent over the context-length ladder (rank 0 — the
+    /// shortest length — is the most popular; larger `s` skews harder).
+    pub zipf_s: f64,
+    /// Rungs on the geometric context-length ladder between
+    /// `context_min` and `context_max`.
+    pub context_rungs: usize,
+    /// Relative traffic weight of [batch, normal, interactive]
+    /// (indexed by [`Priority::index`]; normalized internally).
+    pub class_mix: [f64; 3],
+    /// Deadline attached to *interactive* requests (`None` = no
+    /// deadlines anywhere — nothing can be shed for lateness).
+    pub interactive_deadline_ms: Option<f64>,
+}
+
+impl Default for SaturationConfig {
+    fn default() -> Self {
+        SaturationConfig {
+            base: TraceConfig::default(),
+            zipf_s: 1.1,
+            context_rungs: 8,
+            class_mix: [1.0, 2.0, 1.0],
+            interactive_deadline_ms: None,
+        }
+    }
+}
+
+/// Deterministic saturation trace generator. Arrival times and decode
+/// lengths come from the base [`TraceGenerator`]; context lengths are
+/// redrawn from a Zipf-popular geometric ladder and each request is
+/// assigned a priority class from the configured mix.
+pub struct SaturationTrace {
+    cfg: SaturationConfig,
+    inner: TraceGenerator,
+    rng: Pcg64,
+    /// Zipf CDF over context-length rungs.
+    ctx_cdf: Vec<f64>,
+    /// CDF over [batch, normal, interactive].
+    class_cdf: [f64; 3],
+}
+
+impl SaturationTrace {
+    pub fn new(cfg: SaturationConfig, seed: u64) -> SaturationTrace {
+        assert!(cfg.context_rungs > 0, "saturation trace needs at least one context rung");
+        assert!(cfg.class_mix.iter().all(|&w| w >= 0.0), "class weights must be non-negative");
+        let total_mix: f64 = cfg.class_mix.iter().sum();
+        assert!(total_mix > 0.0, "class mix must have positive total weight");
+        let weights: Vec<f64> =
+            (0..cfg.context_rungs).map(|k| 1.0 / ((k + 1) as f64).powf(cfg.zipf_s)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut cum = 0.0;
+        let ctx_cdf = weights
+            .iter()
+            .map(|w| {
+                cum += w / total;
+                cum
+            })
+            .collect();
+        let mut class_cdf = [0.0; 3];
+        let mut cum = 0.0;
+        for (i, &w) in cfg.class_mix.iter().enumerate() {
+            cum += w / total_mix;
+            class_cdf[i] = cum;
+        }
+        SaturationTrace {
+            inner: TraceGenerator::new(cfg.base, seed),
+            rng: Pcg64::new(seed, 61),
+            cfg,
+            ctx_cdf,
+            class_cdf,
+        }
+    }
+
+    /// Context length of ladder rung `k`: geometric interpolation from
+    /// `context_min` (rung 0, most popular) to `context_max`.
+    pub fn rung_len(&self, k: usize) -> usize {
+        let (lo, hi) = (self.cfg.base.context_min as f64, self.cfg.base.context_max as f64);
+        if self.cfg.context_rungs == 1 {
+            return lo.round() as usize;
+        }
+        let t = k as f64 / (self.cfg.context_rungs - 1) as f64;
+        (lo * (hi / lo).powf(t)).round() as usize
+    }
+
+    /// Next request: Zipf context rung + sampled priority class.
+    pub fn next(&mut self) -> Request {
+        let mut req = self.inner.next();
+        let u = self.rng.next_f64();
+        let rung = self.ctx_cdf.iter().position(|&c| u <= c).unwrap_or(self.cfg.context_rungs - 1);
+        req.context_len = self.rung_len(rung);
+        let u = self.rng.next_f64();
+        let class = self.class_cdf.iter().position(|&c| u <= c).unwrap_or(2);
+        req.priority = Priority::ALL[class];
+        if req.priority == Priority::Interactive {
+            req.deadline_ms = self.cfg.interactive_deadline_ms;
+        }
         req
     }
 
@@ -276,5 +457,74 @@ mod tests {
         suffix_seeds.sort_unstable();
         suffix_seeds.dedup();
         assert_eq!(suffix_seeds.len(), n, "suffix seeds must never collide");
+    }
+
+    #[test]
+    fn priority_orders_parses_and_labels() {
+        assert!(Priority::Batch < Priority::Normal);
+        assert!(Priority::Normal < Priority::Interactive);
+        assert_eq!(Priority::default(), Priority::Normal);
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.label()).unwrap(), p);
+            assert_eq!(Priority::ALL[p.index()], p);
+        }
+        assert_eq!(Priority::parse("INTERACTIVE").unwrap(), Priority::Interactive);
+        assert!(Priority::parse("urgent").is_err());
+    }
+
+    fn sat_cfg() -> SaturationConfig {
+        SaturationConfig {
+            base: TraceConfig {
+                rate_rps: 50.0,
+                context_min: 64,
+                context_max: 4096,
+                decode_min: 2,
+                decode_max: 8,
+            },
+            zipf_s: 1.2,
+            context_rungs: 6,
+            class_mix: [1.0, 2.0, 1.0],
+            interactive_deadline_ms: Some(500.0),
+        }
+    }
+
+    #[test]
+    fn saturation_trace_is_deterministic_and_in_bounds() {
+        let mut a = SaturationTrace::new(sat_cfg(), 13);
+        let mut b = SaturationTrace::new(sat_cfg(), 13);
+        let reqs = a.take(300);
+        assert_eq!(reqs, b.take(300), "same seed, same trace");
+        let rungs: Vec<usize> = (0..6).map(|k| a.rung_len(k)).collect();
+        for r in &reqs {
+            assert!(rungs.contains(&r.context_len), "ctx {} off the ladder", r.context_len);
+            assert!((2..=8).contains(&r.decode_len));
+            match r.priority {
+                Priority::Interactive => assert_eq!(r.deadline_ms, Some(500.0)),
+                _ => assert_eq!(r.deadline_ms, None, "only interactive carries a deadline"),
+            }
+        }
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn saturation_context_lengths_are_zipf_skewed_and_classes_mixed() {
+        let mut g = SaturationTrace::new(sat_cfg(), 29);
+        let shortest = g.rung_len(0);
+        let reqs = g.take(600);
+        let short_share = reqs.iter().filter(|r| r.context_len == shortest).count();
+        // Rank 0 carries ~38% of traffic at s=1.2 over 6 rungs; uniform
+        // would give ~17%.
+        assert!(short_share > 150, "shortest rung drew only {short_share}/600");
+        let mut by_class = [0usize; 3];
+        for r in &reqs {
+            by_class[r.priority.index()] += 1;
+        }
+        assert!(by_class.iter().all(|&n| n > 60), "all classes must appear: {by_class:?}");
+        assert!(
+            by_class[Priority::Normal.index()] > by_class[Priority::Batch.index()],
+            "normal is weighted 2x batch: {by_class:?}"
+        );
     }
 }
