@@ -328,6 +328,13 @@ cargo test -q -p socket-attn -- interleave model_all_schedules
 echo "==> cargo test -q"
 cargo test -q
 
+# Second pass with SIMD dispatch pinned to the scalar reference: the
+# per-kernel bit-identity properties compare tiers *within* a process,
+# this run proves the whole suite also holds when every kernel takes
+# the scalar path from the start (the env override in simd::dispatch).
+echo "==> cargo test -q (SOCKET_SIMD=scalar)"
+SOCKET_SIMD=scalar cargo test -q
+
 echo "==> cargo test -q --features pjrt"
 cargo test -q --features pjrt
 

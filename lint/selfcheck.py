@@ -18,10 +18,12 @@ RULES = {
     "hot-path-panic", "hot-path-index", "alloc-in-into",
     "instant-in-kernel", "waiver-missing-reason", "waiver-unknown-rule",
 }
-ATOMICS_ALLOWLIST = ["util/pool.rs", "metrics/registry.rs", "server/", "server.rs"]
+ATOMICS_ALLOWLIST = ["util/pool.rs", "metrics/registry.rs", "server/", "server.rs",
+                     "simd/dispatch.rs"]
 HOT_PATHS = ["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs",
-             "kvcache/", "kvcache.rs"]
-KERNEL_PATHS = ["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs"]
+             "kvcache/", "kvcache.rs", "simd/"]
+KERNEL_PATHS = ["lsh/", "lsh.rs", "linalg/", "linalg.rs", "selector/", "selector.rs",
+                "simd/"]
 ATOMIC_ORDERINGS = {"Relaxed", "SeqCst", "Acquire", "Release", "AcqRel"}
 ORDERING_MARKERS = ["relaxed", "seqcst", "acquire", "release", "ordering"]
 KEYWORDS = {

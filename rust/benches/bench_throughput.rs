@@ -4,7 +4,10 @@
 //! gather-vs-paged KV hot-path comparison (KvView acceptance
 //! measurement), the scoring-engine lane (exhaustive vs serial_pruned
 //! vs parallel_pruned vs parallel_pruned_ordered vs GQA-fused SOCKET
-//! selection + prune rate + threshold warmup), and the per-method
+//! selection + prune rate + threshold warmup), the per-kernel dispatch
+//! lane (the four SIMD'd hot kernels under forced-scalar vs auto
+//! dispatch — bit-identical outputs, so the ratio is pure vectorization
+//! gain), and the per-method
 //! serving lane (decode tokens/s for every `selector::registry` method
 //! over the paged pool at the paper's sparsity budget), the serving
 //! lane (sessions + streaming + the metrics scrape through the real
@@ -27,6 +30,7 @@ fn main() {
     scale.dim = args.usize_or("dim", 128); // paper head dim
     let sparsity = args.f64_or("sparsity", 33.0);
     let batch = args.usize_or("batch", 16);
+    println!("simd dispatch: {}", socket_attn::simd::tier_name());
 
     let ctxs: &[usize] = if smoke {
         &[2 * 1024, 8 * 1024]
@@ -60,6 +64,15 @@ fn main() {
     let sl_steps = if smoke { 2 } else { 8 };
     let sl = throughput::run_scoring_lane(scale, sl_ctxs, sparsity, group, sl_steps);
     throughput::scoring_lane_table(&sl, sparsity).print();
+
+    // Per-kernel dispatch lane: the four SIMD'd hot kernels under
+    // forced-scalar vs auto dispatch — bit-identical outputs, so the
+    // ratio is pure vectorization gain. Rows merge into the
+    // scoring-lane artifact (variant `kernel[tier]`) so the ci.sh
+    // regression guard covers each cell.
+    let kl_steps = if smoke { 2 } else { 4 };
+    let kl = throughput::run_kernel_lane(scale, sl_ctxs, kl_steps);
+    throughput::kernel_lane_table(&kl).print();
 
     // Per-method serving lane: every registered selector decoding over
     // the paged pool (index build at prefill + per-step select/attend/
@@ -138,13 +151,20 @@ fn main() {
 
     let artifact = args.get_or("json-out", "BENCH_throughput.json");
     if !artifact.is_empty() {
+        // Merge the per-kernel dispatch rows into the scoring lane so
+        // the ci.sh regression guard keys over them too.
+        let scoring = throughput::scoring_lane_json(&sl);
+        let mut rows = scoring.get("rows").and_then(|r| r.as_arr()).unwrap_or(&[]).to_vec();
+        rows.extend(throughput::kernel_lane_rows(&kl));
+        let scoring = scoring.set("rows", Json::Arr(rows));
         let doc = Json::obj()
             .set("bench", "throughput")
             .set("smoke", smoke)
             .set("dim", scale.dim)
             .set("sparsity", sparsity)
+            .set("dispatch", socket_attn::simd::tier_name())
             .set("paged_vs_gather", throughput::paged_vs_gather_json(&pg))
-            .set("scoring_lane", throughput::scoring_lane_json(&sl))
+            .set("scoring_lane", scoring)
             .set("method_lane", throughput::method_lane_json(&lane))
             .set("serving_lane", serving)
             .set("prefix_lane", prefix)

@@ -6,12 +6,19 @@
 //! state fits in cache. The core [`flash_decode_into`] is generic over
 //! [`KvSource`], so it runs directly over the paged KV pool (zero-copy,
 //! via `kvcache::KvView`) as well as over dense matrices; the float-op
-//! order is identical in both, so outputs are bit-identical. This is the
-//! L3 fallback attention path used when PJRT artifacts are not loaded,
-//! and the reference for the Pallas `sparse_decode` kernel's structure.
+//! order is identical in both, so outputs are bit-identical. The inner
+//! loops (per-key logit dot products, the tile max, the running-state
+//! rescale, the weighted value accumulate, and the final normalization)
+//! dispatch through `crate::simd` — AVX2/NEON behind runtime detection
+//! with a bit-identical fixed-lane scalar reference, so outputs are
+//! also bit-identical across dispatch tiers (`exp` stays scalar libm
+//! everywhere). This is the L3 fallback attention path used when PJRT
+//! artifacts are not loaded, and the reference for the Pallas
+//! `sparse_decode` kernel's structure.
 
 use super::source::{DenseKv, KvSource};
 use crate::linalg::{dot, Matrix};
+use crate::simd;
 
 /// Tile size in tokens. 128 keeps the K/V tile (128 x d x 4B, d≤256)
 /// inside L2 on typical CPUs; the Pallas kernel uses the same tiling
@@ -45,14 +52,12 @@ pub fn flash_decode_into<S: KvSource + ?Sized>(
     while start < n {
         let end = (start + TILE).min(n);
         let tile = end - start;
-        // 1) logits for this tile
-        let mut tile_max = f32::NEG_INFINITY;
+        // 1) logits for this tile, then the tile max as one vector
+        // reduction (same fixed-lane tree in every dispatch tier)
         match selected {
             Some(sel) => {
                 for i in 0..tile {
-                    let logit = dot(kv.key(sel[start + i]), q) * scale;
-                    tile_logits[i] = logit;
-                    tile_max = tile_max.max(logit);
+                    tile_logits[i] = dot(kv.key(sel[start + i]), q) * scale;
                 }
             }
             None => {
@@ -62,25 +67,23 @@ pub fn flash_decode_into<S: KvSource + ?Sized>(
                     let (keys, run_len) = kv.key_run(start + i, tile - i);
                     let run = run_len.min(tile - i);
                     for r in 0..run {
-                        let logit = dot(&keys[r * d..(r + 1) * d], q) * scale;
-                        tile_logits[i + r] = logit;
-                        tile_max = tile_max.max(logit);
+                        tile_logits[i + r] = dot(&keys[r * d..(r + 1) * d], q) * scale;
                     }
                     i += run;
                 }
             }
         }
+        let tile_max = simd::max(&tile_logits[..tile]);
         // 2) rescale running state if the max grew
         let new_m = m.max(tile_max);
         if new_m > m && m > f32::NEG_INFINITY {
             let corr = (m - new_m).exp();
             s *= corr;
-            for a in out.iter_mut() {
-                *a *= corr;
-            }
+            simd::scale(out, corr);
         }
         m = new_m;
-        // 3) accumulate tile
+        // 3) accumulate tile (exp stays scalar libm in every tier; the
+        // weighted value accumulate is mul-then-add, never FMA)
         for i in 0..tile {
             let w = (tile_logits[i] - m).exp();
             if w == 0.0 {
@@ -91,17 +94,12 @@ pub fn flash_decode_into<S: KvSource + ?Sized>(
                 Some(sel) => sel[start + i],
                 None => start + i,
             };
-            let v = kv.value(t);
-            for c in 0..dv {
-                out[c] += w * v[c];
-            }
+            simd::axpy(out, kv.value(t), w);
         }
         start = end;
     }
     if s > 0.0 {
-        for a in out.iter_mut() {
-            *a /= s;
-        }
+        simd::div(out, s);
     }
 }
 
@@ -204,6 +202,42 @@ mod tests {
             for i in 0..d {
                 prop_assert!((yd[i] - yf[i]).abs() < 1e-3, "n={n} d={d} i={i}");
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dispatch_modes_bit_identical() {
+        // flash_decode_into under auto-dispatch vs the forced scalar
+        // reference: dense and selected outputs must be bit-identical
+        // (the SIMD contract, not a tolerance comparison).
+        check_default("flash-dispatch-modes", |rng, _| {
+            let d = gen::size(rng, 2, 48);
+            let n = gen::size(rng, 1, 400);
+            let keys = Matrix::gaussian(n, d, rng);
+            let values = Matrix::gaussian(n, d, rng);
+            let q = rng.normal_vec(d);
+            let scale = 1.0 / (d as f32).sqrt();
+            let density = rng.next_f64();
+            let sel: Vec<usize> = (0..n).filter(|_| rng.next_f64() < density).collect();
+            let run = || {
+                (
+                    flash_decode(&q, &keys, &values, None, scale),
+                    flash_decode(&q, &keys, &values, Some(&sel), scale),
+                )
+            };
+            let auto = crate::simd::dispatch::with_auto(&run);
+            let scalar = crate::simd::dispatch::with_forced_scalar(&run);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            prop_assert!(
+                bits(&auto.0) == bits(&scalar.0),
+                "dense decode diverges across tiers (n={n} d={d})"
+            );
+            prop_assert!(
+                bits(&auto.1) == bits(&scalar.1),
+                "selected decode diverges across tiers (n={n} d={d} sel={})",
+                sel.len()
+            );
             Ok(())
         });
     }

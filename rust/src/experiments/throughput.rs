@@ -10,7 +10,7 @@ use super::Scale;
 use crate::attention::{flash_decode, flash_decode_into, SelectionPolicy};
 use crate::kvcache::{LayerCache, PageTable, PagedKvCache};
 use crate::linalg::{top_k_into, Matrix};
-use crate::lsh::{GroupLane, LshParams, PruneStats, SoftScorer};
+use crate::lsh::{GroupLane, HardScorer, LshParams, PruneStats, SoftScorer};
 use crate::model::{ModelConfig, SyntheticModel};
 use crate::selector::{self, Selection, Selector, SelectorConfig, SocketSelector};
 use crate::util::pool::WorkerPool;
@@ -553,6 +553,138 @@ pub fn scoring_lane_json(points: &[ScoringLanePoint]) -> Json {
     Json::obj().set("bench", "throughput_scoring_lane").set("rows", Json::Arr(rows))
 }
 
+/// One row of the per-kernel dispatch lane: a single hot kernel timed
+/// under one dispatch tier at one context length.
+pub struct KernelLanePoint {
+    pub n: usize,
+    /// Kernel id: `hash`, `soft-score`, `hard-count`, or `flash-decode`.
+    pub kernel: &'static str,
+    /// Dispatch tier the timed loop actually ran under (`scalar`, or
+    /// the detected tier — `avx2` / `neon`).
+    pub tier: &'static str,
+    /// Kernel passes/second (index builds/s for `hash`, query
+    /// scorings/s for the scoring kernels, decodes/s for flash).
+    pub sps: f64,
+}
+
+/// Per-kernel dispatch lane: the four SIMD'd hot kernels — SimHash
+/// projection hashing (index build), exhaustive soft-collision scoring,
+/// hard-LSH collision counting, and dense flash decode — each timed
+/// under forced-scalar and auto dispatch over the same inputs. Outputs
+/// are bit-identical across tiers (property-tested per kernel), so the
+/// sps ratio is pure vectorization gain. Scoring kernels run on one
+/// thread so the rows measure the kernel, not the pool.
+pub fn measure_kernel_lane(n: usize, dim: usize, steps: usize, seed: u64) -> Vec<KernelLanePoint> {
+    let mut rng = Pcg64::new(seed, n as u64);
+    let keys = Matrix::gaussian(n, dim, &mut rng);
+    let values = Matrix::gaussian(n, dim, &mut rng);
+    let att_scale = 1.0 / (dim as f32).sqrt();
+    let soft = SoftScorer::new(LshParams::paper_default(), dim, seed);
+    let hard = HardScorer::new(LshParams::paper_default(), dim, seed);
+    let soft_hashes = soft.hash_keys(&keys, &values);
+    let hard_hashes = hard.hash_keys(&keys, &values);
+    let queries: Vec<Vec<f32>> = (0..steps).map(|_| rng.normal_vec(dim)).collect();
+    let serial = WorkerPool::new(1);
+    let mut out = Vec::new();
+    for forced in [true, false] {
+        crate::simd::force_scalar(forced);
+        let tier = crate::simd::tier_name();
+
+        // 1) SimHash Alg.-1 projection hashing: rebuild the key index.
+        let t = Instant::now();
+        for _ in 0..steps {
+            crate::util::black_box(soft.hash_keys(&keys, &values));
+        }
+        out.push(KernelLanePoint {
+            n,
+            kernel: "hash",
+            tier,
+            sps: steps as f64 / t.elapsed().as_secs_f64(),
+        });
+
+        // 2) Exhaustive soft-collision scoring (Alg. 4 over every key).
+        let mut probs = Vec::new();
+        let mut scores = Vec::new();
+        let t = Instant::now();
+        for q in &queries {
+            let (_, r) = soft.hasher.bucket_probs_into(q, &mut probs, &serial);
+            soft.scores_into(&probs, r, &soft_hashes, &serial, &mut scores);
+            crate::util::black_box(&scores);
+        }
+        out.push(KernelLanePoint {
+            n,
+            kernel: "soft-score",
+            tier,
+            sps: steps as f64 / t.elapsed().as_secs_f64(),
+        });
+
+        // 3) Hard-LSH collision counting (u16 compare-and-count).
+        let t = Instant::now();
+        for q in &queries {
+            hard.scores_into(q, &hard_hashes, &mut scores);
+            crate::util::black_box(&scores);
+        }
+        out.push(KernelLanePoint {
+            n,
+            kernel: "hard-count",
+            tier,
+            sps: steps as f64 / t.elapsed().as_secs_f64(),
+        });
+
+        // 4) Dense flash decode (online softmax over all n tokens).
+        let t = Instant::now();
+        for q in &queries {
+            crate::util::black_box(flash_decode(q, &keys, &values, None, att_scale));
+        }
+        out.push(KernelLanePoint {
+            n,
+            kernel: "flash-decode",
+            tier,
+            sps: steps as f64 / t.elapsed().as_secs_f64(),
+        });
+    }
+    crate::simd::force_scalar(false);
+    out
+}
+
+/// Sweep [`measure_kernel_lane`] across context lengths.
+pub fn run_kernel_lane(scale: Scale, context_lengths: &[usize], steps: usize) -> Vec<KernelLanePoint> {
+    context_lengths
+        .iter()
+        .flat_map(|&n| measure_kernel_lane(n, scale.dim, steps, scale.seed))
+        .collect()
+}
+
+/// Render the per-kernel scalar-vs-simd comparison.
+pub fn kernel_lane_table(points: &[KernelLanePoint]) -> Table {
+    let mut t = Table::new(
+        &format!("Hot kernels: scalar vs simd dispatch (detected: {})", crate::simd::tier_name()),
+        &["Context", "Kernel", "Tier", "Passes/s"],
+    );
+    for p in points {
+        t.row(vec![p.n.to_string(), p.kernel.to_string(), p.tier.to_string(), fnum(p.sps, 1)]);
+    }
+    t
+}
+
+/// Serialize the kernel lane as scoring-lane-shaped rows — (context,
+/// group, variant, sps) with `variant = kernel[tier]` and `group = 0`
+/// (no GQA fusion in a microbench) — so `bench_throughput` can merge
+/// them into the `scoring_lane` artifact rows and the ci.sh regression
+/// guard covers each kernel × tier cell with no extra plumbing.
+pub fn kernel_lane_rows(points: &[KernelLanePoint]) -> Vec<Json> {
+    points
+        .iter()
+        .map(|p| {
+            Json::obj()
+                .set("context", p.n)
+                .set("group", 0usize)
+                .set("variant", format!("{}[{}]", p.kernel, p.tier))
+                .set("sps", p.sps)
+        })
+        .collect()
+}
+
 /// Per-method serving lane: one row per `selector::registry` method,
 /// decoding over the paged pool exactly like `DecodeEngine` does —
 /// paged-native index build at prefill, then per step: `select_into`
@@ -667,7 +799,10 @@ pub fn method_lane_json(points: &[MethodLanePoint]) -> Json {
                 .set("decode_tps", p.decode_tps)
         })
         .collect();
-    Json::obj().set("bench", "throughput_method_lane").set("rows", Json::Arr(rows))
+    Json::obj()
+        .set("bench", "throughput_method_lane")
+        .set("dispatch", crate::simd::tier_name())
+        .set("rows", Json::Arr(rows))
 }
 
 /// Serving lane: exercise the full server surface in process — one-shot
@@ -721,6 +856,7 @@ pub fn run_serving_lane(scale: Scale, context: usize, decode: usize, turns: usiz
     let metrics = server.handle_line(r#"{"op":"metrics"}"#);
     Json::obj()
         .set("bench", "throughput_serving_lane")
+        .set("dispatch", crate::simd::tier_name())
         .set("context", context)
         .set("decode", decode)
         .set("turns", turns)
@@ -986,10 +1122,39 @@ mod tests {
     }
 
     #[test]
+    fn kernel_lane_times_every_kernel_under_both_tiers() {
+        // Hold the dispatch test guard: the lane flips the process-wide
+        // forced-scalar override while it times each tier.
+        let pts = crate::simd::dispatch::with_auto(|| measure_kernel_lane(512, 16, 2, 5));
+        assert_eq!(pts.len(), 8, "2 tiers x 4 kernels");
+        let kernels = ["hash", "soft-score", "hard-count", "flash-decode"];
+        for (i, p) in pts.iter().enumerate() {
+            assert_eq!(p.n, 512);
+            assert_eq!(p.kernel, kernels[i % 4]);
+            assert!(p.sps > 0.0 && p.sps.is_finite(), "{}[{}]", p.kernel, p.tier);
+        }
+        // The first half runs under the forced-scalar override, the
+        // second under whatever tier detection found.
+        for p in &pts[..4] {
+            assert_eq!(p.tier, "scalar");
+        }
+        assert!(["scalar", "avx2", "neon"].contains(&pts[4].tier), "{}", pts[4].tier);
+        assert!(!crate::simd::dispatch::forced_scalar(), "lane must restore auto-dispatch");
+        assert_eq!(kernel_lane_table(&pts).n_rows(), 8);
+        let rows = kernel_lane_rows(&pts);
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].get("variant").unwrap().as_str(), Some("hash[scalar]"));
+        assert_eq!(rows[0].get("group").unwrap().as_usize(), Some(0));
+        assert!(rows[0].get("sps").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
     fn serving_lane_scrapes_full_metrics_schema() {
         let scale = Scale { n: 512, dim: 16, instances: 1, seed: 7 };
         let doc = run_serving_lane(scale, 96, 2, 2);
         assert_eq!(doc.get("bench").unwrap().as_str(), Some("throughput_serving_lane"));
+        let tier = doc.get("dispatch").unwrap().as_str().unwrap();
+        assert!(["scalar", "avx2", "neon"].contains(&tier), "{tier}");
         // Streaming emitted exactly decode_len token lines.
         assert_eq!(doc.get("stream_token_lines").unwrap().as_usize(), Some(2));
         let m = doc.get("metrics").unwrap();

@@ -57,6 +57,7 @@ pub mod model;
 pub mod runtime;
 pub mod selector;
 pub mod server;
+pub mod simd;
 pub mod testing;
 pub mod util;
 pub mod workload;

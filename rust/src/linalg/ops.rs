@@ -1,27 +1,17 @@
-//! Vector primitives. All hot-path loops are written over slices so the
-//! compiler can autovectorize; there are no allocations except where a
-//! result vector is returned.
+//! Vector primitives. The reduction and elementwise loops dispatch
+//! through `crate::simd` (AVX2/NEON behind runtime detection, with a
+//! bit-identical fixed-lane scalar reference); the remaining loops are
+//! written over slices so the compiler can autovectorize. There are no
+//! allocations except where a result vector is returned.
 
-/// Inner product.
+use crate::simd;
+
+/// Inner product (8-lane tree-reduction order in every dispatch tier —
+/// see `simd` module docs).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-lane manual unroll — measurably faster than the naive loop on
-    // the scoring hot path (see EXPERIMENTS.md §Perf).
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    for j in chunks * 4..a.len() {
-        acc += a[j] * b[j];
-    }
-    acc + s0 + s1 + s2 + s3
+    simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -38,17 +28,13 @@ pub fn l1_norm(a: &[f32]) -> f32 {
 
 /// In-place scale.
 pub fn scale(a: &mut [f32], s: f32) {
-    for x in a.iter_mut() {
-        *x *= s;
-    }
+    simd::scale(a, s);
 }
 
 /// `out += s * a`.
 pub fn add_scaled(out: &mut [f32], a: &[f32], s: f32) {
     debug_assert_eq!(out.len(), a.len());
-    for i in 0..out.len() {
-        out[i] += s * a[i];
-    }
+    simd::axpy(out, a, s);
 }
 
 /// Normalize to unit L2 norm (no-op on zero vectors).
@@ -63,9 +49,11 @@ pub fn normalize(a: &mut [f32]) {
 pub fn argmax(a: &[f32]) -> usize {
     assert!(!a.is_empty());
     let mut best = 0;
-    for i in 1..a.len() {
-        if a[i] > a[best] {
+    let mut best_val = a.first().copied().unwrap_or(f32::NEG_INFINITY);
+    for (i, &v) in a.iter().enumerate().skip(1) {
+        if v > best_val {
             best = i;
+            best_val = v;
         }
     }
     best
@@ -101,8 +89,12 @@ pub fn matvec(m: &[f32], rows: usize, cols: usize, v: &[f32], out: &mut [f32]) {
     debug_assert_eq!(m.len(), rows * cols);
     debug_assert_eq!(v.len(), cols);
     debug_assert_eq!(out.len(), rows);
-    for r in 0..rows {
-        out[r] = dot(&m[r * cols..(r + 1) * cols], v);
+    if cols == 0 {
+        out.fill(0.0);
+        return;
+    }
+    for (o, row) in out.iter_mut().zip(m.chunks_exact(cols)) {
+        *o = dot(row, v);
     }
 }
 

@@ -134,10 +134,9 @@ impl HardScorer {
             let score_block = |_lane: usize, blk: usize, acc: &mut [f32; BLOCK_TOKENS]| {
                 let blen = hashes.block_len(blk);
                 let base = blk * BLOCK_TOKENS;
-                hashes.block_collision_counts(blk, &qb, &mut acc[..]);
-                for (a, &norm) in acc[..blen].iter_mut().zip(&norms[base..base + blen]) {
-                    *a *= norm;
-                }
+                hashes.block_collision_counts(blk, &qb, acc.as_mut_slice());
+                let (acc, _) = acc.split_at_mut(blen);
+                crate::simd::mul_assign(acc, norms.get(base..).unwrap_or(&[]));
             };
             let mut outs = [(indices, scores)];
             bnb::run_walk(hashes, k, bounds, order, pool, score_block, &mut outs, walk)
@@ -300,6 +299,38 @@ mod tests {
                     );
                 }
             }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dispatch_modes_bit_identical() {
+        // Hard-count selection (simd::count_eq + simd::mul_assign under
+        // the bnb walk) must return bit-identical indices AND scores
+        // whether the SIMD tier or the forced scalar reference runs.
+        check_default("hard-dispatch-modes", |rng, _| {
+            let dim = gen::size(rng, 4, 32);
+            let p = 1 + rng.below_usize(8);
+            let l = 1 + rng.below_usize(16);
+            let h = HardScorer::new(LshParams { p, l, tau: 0.5 }, dim, rng.next_u64());
+            let n = 1 + rng.below_usize(2 * BLOCK_TOKENS + 11);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let vals = Matrix::gaussian(n, dim, rng);
+            let hashes = h.hash_keys(&keys, &vals);
+            let q = rng.normal_vec(dim);
+            let k = 1 + rng.below_usize(n + 2);
+            let run = || {
+                let mut idx = Vec::new();
+                let mut sc = Vec::new();
+                h.select_pruned_into(&q, &hashes, k, &mut idx, &mut sc);
+                (idx, sc.iter().map(|s| s.to_bits()).collect::<Vec<u32>>())
+            };
+            let auto = crate::simd::dispatch::with_auto(&run);
+            let scalar = crate::simd::dispatch::with_forced_scalar(&run);
+            prop_assert!(
+                auto == scalar,
+                "dispatch tiers diverge (n={n} k={k} p={p} l={l})"
+            );
             Ok(())
         });
     }

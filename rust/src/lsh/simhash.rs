@@ -431,7 +431,9 @@ impl KeyHashes {
     /// `q_buckets`, written to `counts[..block_len(blk)]` — the shared
     /// per-block kernel of [`KeyHashes::collision_counts_into`] and the
     /// pruned hard-LSH walk (counts accumulate in t order; ≤ L, exact
-    /// in f32).
+    /// in f32). Each table row is one `simd::count_eq` u16
+    /// compare-and-count over the SoA block (AVX2 `cmpeq_epi16` /
+    /// NEON `vceqq_u16`; bit-identical scalar fallback).
     pub fn block_collision_counts(&self, blk: usize, q_buckets: &[u16], counts: &mut [f32]) {
         assert_eq!(q_buckets.len(), self.l);
         let blen = self.block_len(blk);
@@ -439,9 +441,7 @@ impl KeyHashes {
         let (counts, _) = counts.split_at_mut(blen);
         counts.fill(0.0);
         for (qb, row) in q_buckets.iter().zip(block.chunks_exact(BLOCK_TOKENS)) {
-            for (c, &b) in counts.iter_mut().zip(row) {
-                *c += (b == *qb) as u32 as f32;
-            }
+            crate::simd::count_eq(counts, row, *qb);
         }
     }
 
@@ -484,7 +484,10 @@ impl SimHash {
     }
 
     /// Signed projections of `x` in table ℓ (the pre-sign values — the
-    /// soft hasher consumes these directly).
+    /// soft hasher consumes these directly). The Alg.-1 inner products
+    /// run through `linalg::dot`, which dispatches to the SIMD layer
+    /// (AVX2/NEON behind runtime detection, bit-identical scalar
+    /// fallback).
     pub fn project(&self, table: usize, x: &[f32]) -> Vec<f32> {
         self.plane(table).matvec(x)
     }
@@ -963,5 +966,41 @@ mod tests {
         // The shared block is untouched by the private push.
         assert_eq!(kh.block_max_norm(0), donor.block_max_norm(0));
         assert_eq!(donor.n, BLOCK_TOKENS, "donor unchanged");
+    }
+
+    #[test]
+    fn prop_dispatch_modes_bit_identical() {
+        // Alg.-1 hashing (simd::dot projections) and hard-collision
+        // counting (simd::count_eq) under auto-dispatch vs the forced
+        // scalar reference: bucket ids, value norms, and counts must be
+        // bit-identical, not merely close.
+        check_default("simhash-dispatch-modes", |rng, _| {
+            let h = small();
+            let n = gen::size(rng, 1, 3 * BLOCK_TOKENS);
+            let keys = Matrix::gaussian(n, 32, rng);
+            let vals = Matrix::gaussian(n, 32, rng);
+            let q = rng.normal_vec(32);
+            let build = || {
+                let kh = h.hash_keys(&keys, &vals);
+                let qb = h.hash_one(&q);
+                let mut counts = Vec::new();
+                kh.collision_counts_into(&qb, &mut counts);
+                (kh.to_row_major(), kh.value_norms.clone(), qb, counts)
+            };
+            let auto = crate::simd::dispatch::with_auto(&build);
+            let scalar = crate::simd::dispatch::with_forced_scalar(&build);
+            prop_assert!(auto.0 == scalar.0, "bucket ids diverge (n={n})");
+            prop_assert!(
+                auto.1.iter().zip(&scalar.1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "value norms diverge (n={n})"
+            );
+            prop_assert!(auto.2 == scalar.2, "query buckets diverge (n={n})");
+            prop_assert!(
+                auto.3.len() == scalar.3.len()
+                    && auto.3.iter().zip(&scalar.3).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "collision counts diverge (n={n})"
+            );
+            Ok(())
+        });
     }
 }

@@ -13,6 +13,7 @@ use crate::linalg::TopK;
 use crate::lsh::bnb;
 use crate::lsh::params::LshParams;
 use crate::lsh::simhash::{KeyHashes, SimHash, BLOCK_TOKENS};
+use crate::simd;
 use crate::util::pool::{self, WorkerPool};
 
 /// Query-side soft hashing (Algorithm 2).
@@ -32,7 +33,10 @@ pub struct BucketProbs {
 impl BucketProbs {
     #[inline]
     pub fn table(&self, t: usize) -> &[f32] {
-        &self.probs[t * self.r..(t + 1) * self.r]
+        let base = t * self.r;
+        assert!(base + self.r <= self.probs.len(), "table {t} out of range");
+        // SAFETY: asserted in range just above.
+        unsafe { self.probs.get_unchecked(base..base + self.r) }
     }
 }
 
@@ -68,28 +72,32 @@ impl SoftHasher {
         // every factor is bounded by e^(P/(√d·τ)).
         // (§Perf: 3.2x faster scoring at (P=10, L=60); see
         // EXPERIMENTS.md.)
-        w[0] = 1.0;
+        if let Some(head) = w.first_mut() {
+            *head = 1.0;
+        }
         let mut width = 1usize;
-        for i in 0..p {
-            let u = proj[i].tanh() * inv_sqrt_d / tau;
+        for &x in proj.iter().take(p) {
+            let u = x.tanh() * inv_sqrt_d / tau;
             // Normalize the pair so factors are ≤ 1: equivalent up
             // to the final normalization, and overflow-free even at
             // tiny τ (the dominated corner underflows to 0, which
             // is its correct limit).
             let e_plus = (u - u.abs()).exp();
             let e_minus = (-u - u.abs()).exp();
-            for b in 0..width {
+            // Doubling step over w[..2*width]: hi = lo * e_plus first,
+            // then lo *= e_minus — the same per-slot op order as the
+            // classic indexed loop, so the products are bit-identical.
+            let (lo, hi) = w.split_at_mut(width);
+            for (wl, wh) in lo.iter_mut().zip(hi) {
                 // bit i set => +u ; cleared => -u.
-                w[b + width] = w[b] * e_plus;
-                w[b] *= e_minus;
+                *wh = *wl * e_plus;
+                *wl *= e_minus;
             }
             width *= 2;
         }
         let sum: f32 = w.iter().sum();
         let inv = 1.0 / sum;
-        for x in w.iter_mut() {
-            *x *= inv;
-        }
+        simd::scale(w, inv);
     }
 
     /// Algorithm 2: the per-table bucket distributions of one query.
@@ -227,25 +235,21 @@ impl SoftScorer {
     pub fn raw_scores(&self, probs: &BucketProbs, hashes: &KeyHashes) -> Vec<f32> {
         assert_eq!(probs.l, hashes.l);
         assert_eq!(probs.r, hashes.r());
-        let l = hashes.l;
         let r = probs.r;
-        let table = &probs.probs[..l * r];
+        let table = probs.probs.as_slice();
         let mut out = vec![0.0f32; hashes.n];
         // Stream the SoA blocks table-outer / key-inner: one (table,
         // block) id row is contiguous, and the per-key accumulation
         // order (t = 0..L) matches the per-key gather exactly, so the
-        // sums are bit-identical to [`SoftScorer::score_key`].
-        for blk in 0..hashes.n_blocks() {
-            let blen = hashes.block_len(blk);
+        // sums are bit-identical to [`SoftScorer::score_key`] — in
+        // every dispatch tier, since the probability gather
+        // (`simd::gather_accumulate`) is elementwise per key.
+        for (blk, acc) in out.chunks_mut(BLOCK_TOKENS).enumerate() {
             let block = hashes.block_data(blk);
-            let acc = &mut out[blk * BLOCK_TOKENS..blk * BLOCK_TOKENS + blen];
-            for t in 0..l {
-                let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
-                let ptab = &table[t * r..(t + 1) * r];
-                for (a, &b) in acc.iter_mut().zip(row) {
-                    // SAFETY: ids validated < r at KeyHashes construction.
-                    *a += unsafe { *ptab.get_unchecked(b as usize) };
-                }
+            for (row, ptab) in block.chunks_exact(BLOCK_TOKENS).zip(table.chunks_exact(r)) {
+                // SAFETY: ids validated < r at KeyHashes construction;
+                // ptab is exactly r wide and acc.len() <= row.len().
+                unsafe { simd::gather_accumulate(acc, row, ptab) };
             }
         }
         out
@@ -263,9 +267,9 @@ impl SoftScorer {
     ) -> Vec<f32> {
         assert_eq!(probs.l, hashes.l);
         assert_eq!(probs.r, hashes.r());
-        let l = hashes.l;
         let r = probs.r;
-        let table = &probs.probs[..l * r];
+        assert_eq!(probs.probs.len(), hashes.l * r);
+        let table = probs.probs.as_slice();
         let mut out = vec![0.0f32; hashes.n];
         pool.fill(&mut out, |j| Self::score_key(table, r, hashes, j));
         out
@@ -274,9 +278,15 @@ impl SoftScorer {
     /// Apply Algorithm 4's value-norm weighting + optional validity mask
     /// (`false` entries score -inf) to raw scores, in place.
     fn weight_scores(s: &mut [f32], hashes: &KeyHashes, mask: Option<&[bool]>) {
-        for j in 0..s.len() {
-            let valid = mask.map(|m| m[j]).unwrap_or(true);
-            s[j] = if valid { s[j] * hashes.value_norms[j] } else { f32::NEG_INFINITY };
+        match mask {
+            Some(m) => {
+                for ((x, &norm), &valid) in s.iter_mut().zip(&hashes.value_norms).zip(m) {
+                    *x = if valid { *x * norm } else { f32::NEG_INFINITY };
+                }
+            }
+            // Unmasked hot path: one elementwise SIMD multiply (`x *
+            // norm` is the identical rounding in every tier).
+            None => simd::mul_assign(s, &hashes.value_norms),
         }
     }
 
@@ -306,8 +316,7 @@ impl SoftScorer {
         assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
         out.clear();
         out.resize(hashes.n, 0.0);
-        let table = &probs[..l * r];
-        pool.fill(out, |j| Self::score_key(table, r, hashes, j));
+        pool.fill(out, |j| Self::score_key(probs, r, hashes, j));
         Self::weight_scores(out, hashes, None);
     }
 
@@ -353,8 +362,7 @@ impl SoftScorer {
         assert_eq!(r, hashes.r(), "prob-table bucket space != hash bucket space");
         assert!(probs.len() >= hashes.l * r, "prob table shape mismatch");
         let mut sum = 0.0f32;
-        for t in 0..hashes.l {
-            let ptab = &probs[t * r..(t + 1) * r];
+        for (t, ptab) in probs.chunks_exact(r).enumerate().take(hashes.l) {
             let m = match hashes.block_table_ids(blk, t) {
                 Some(ids) => {
                     let mut m = 0.0f32;
@@ -368,8 +376,10 @@ impl SoftScorer {
                     m
                 }
                 None => match table_max {
-                    Some(tm) => tm[t],
-                    None => ptab.iter().fold(0.0f32, |m, &p| if p > m { p } else { m }),
+                    // +inf on a malformed (too-short) table_max keeps
+                    // the bound admissible instead of panicking.
+                    Some(tm) => tm.get(t).copied().unwrap_or(f32::INFINITY),
+                    None => simd::max(ptab),
                 },
             };
             sum += m;
@@ -389,10 +399,13 @@ impl SoftScorer {
     pub fn table_maxes(probs: &[f32], l: usize, r: usize, out: &mut [f32]) {
         assert_eq!(probs.len(), l * r, "prob table shape mismatch");
         assert_eq!(out.len(), l, "one max per table");
-        for (t, slot) in out.iter_mut().enumerate() {
-            *slot = probs[t * r..(t + 1) * r]
-                .iter()
-                .fold(0.0f32, |m, &p| if p > m { p } else { m });
+        // simd::max of a probability row equals the sequential fold
+        // exactly (max over a fixed set is reduction-order-free for
+        // the non-negative, non-NaN values a softmax produces), so
+        // this stays interchangeable with the inline fallback in
+        // `block_bound_with`.
+        for (slot, ptab) in out.iter_mut().zip(probs.chunks_exact(r)) {
+            *slot = simd::max(ptab);
         }
     }
 
@@ -511,8 +524,8 @@ impl SoftScorer {
             let saturated = hashes.summaries_saturated();
             if saturated {
                 table_max.resize(n_lanes * l, 0.0);
-                for (g, probs) in probs_by_lane.iter().enumerate() {
-                    Self::table_maxes(probs, l, r, &mut table_max[g * l..(g + 1) * l]);
+                for (probs, row) in probs_by_lane.iter().zip(table_max.chunks_exact_mut(l)) {
+                    Self::table_maxes(probs, l, r, row);
                 }
             }
             // Bound pre-pass: every (lane, block) admissible bound,
@@ -527,8 +540,11 @@ impl SoftScorer {
                 let probs_by_lane = &probs_by_lane;
                 pool.fill(bounds, |i| {
                     let (g, blk) = (i / n_blocks, i % n_blocks);
-                    let tm = saturated.then(|| &table_max[g * l..(g + 1) * l]);
-                    Self::block_bound_with(hashes, blk, probs_by_lane[g], r, tm)
+                    let Some(&probs) = probs_by_lane.get(g) else { return 0.0 };
+                    // Empty when !saturated (table_max stays cleared),
+                    // the per-lane row otherwise.
+                    let tm = table_max.get(g * l..(g + 1) * l);
+                    Self::block_bound_with(hashes, blk, probs, r, tm)
                 });
             }
             // Visit order: descending summed bound warms every lane's
@@ -536,10 +552,8 @@ impl SoftScorer {
             if ordered && n_blocks > 1 {
                 agg.clear();
                 agg.resize(n_blocks, 0.0);
-                for g in 0..n_lanes {
-                    for (blk, a) in agg.iter_mut().enumerate() {
-                        *a += bounds[g * n_blocks + blk];
-                    }
+                for lane_bounds in bounds.chunks_exact(n_blocks) {
+                    simd::axpy(agg, lane_bounds, 1.0);
                 }
                 bnb::bound_order(agg, order);
             } else {
@@ -548,25 +562,23 @@ impl SoftScorer {
             // Score the block table-outer / key-inner; per key the
             // accumulation order (t = 0..L) and the final norm product
             // match the exhaustive gather exactly, so scores are
-            // bit-identical.
+            // bit-identical — in every dispatch tier, since both the
+            // probability gather and the norm weighting are elementwise.
             let norms = &hashes.value_norms;
             let score_block = |g: usize, blk: usize, acc: &mut [f32; BLOCK_TOKENS]| {
                 let blen = hashes.block_len(blk);
                 let base = blk * BLOCK_TOKENS;
                 let block = hashes.block_data(blk);
-                let probs = probs_by_lane[g];
-                acc[..blen].fill(0.0);
-                for t in 0..l {
-                    let row = &block[t * BLOCK_TOKENS..t * BLOCK_TOKENS + blen];
-                    let ptab = &probs[t * r..(t + 1) * r];
-                    for (a, &b) in acc[..blen].iter_mut().zip(row) {
-                        // SAFETY: ids validated < r at construction.
-                        *a += unsafe { *ptab.get_unchecked(b as usize) };
-                    }
+                let Some(&probs) = probs_by_lane.get(g) else { return };
+                let (acc, _) = acc.split_at_mut(blen);
+                acc.fill(0.0);
+                for (row, ptab) in block.chunks_exact(BLOCK_TOKENS).zip(probs.chunks_exact(r))
+                {
+                    // SAFETY: ids validated < r at construction; ptab is
+                    // exactly r wide and acc.len() <= row.len().
+                    unsafe { simd::gather_accumulate(acc, row, ptab) };
                 }
-                for (a, &norm) in acc[..blen].iter_mut().zip(&norms[base..base + blen]) {
-                    *a *= norm;
-                }
+                simd::mul_assign(acc, norms.get(base..).unwrap_or(&[]));
             };
             bnb::run_walk(hashes, k, bounds, order, pool, score_block, &mut outs, walk)
         })
@@ -1456,5 +1468,71 @@ mod tests {
         let mut scores = vec![-1.0f32; 9999]; // stale, wrong size
         s.scores_into(&probs, r, &hashes, &pool, &mut scores);
         assert_eq!(scores, want_scores);
+    }
+
+    #[test]
+    fn prop_dispatch_modes_bit_identical() {
+        // The full soft path — hashing, bucket probabilities, and the
+        // fused group selection (scores AND indices) — must be
+        // bit-identical between auto dispatch and the forced scalar
+        // reference. This is the SIMD contract, not a tolerance check.
+        check("soft-dispatch-modes", PropConfig { cases: 16, seed: 0xD15 }, |rng, _| {
+            let dim = gen::size(rng, 4, 32);
+            let p = 1 + rng.below_usize(7);
+            let l = 1 + rng.below_usize(8);
+            let tau = rng.range_f32(0.1, 1.0);
+            let seed = rng.next_u64();
+            let n = 1 + rng.below_usize(2 * crate::lsh::simhash::BLOCK_TOKENS + 5);
+            let keys = Matrix::gaussian(n, dim, rng);
+            let vals = Matrix::gaussian(n, dim, rng);
+            let group = 1 + rng.below_usize(4);
+            let k = 1 + rng.below_usize(n + 2);
+            let queries: Vec<Vec<f32>> = (0..group).map(|_| rng.normal_vec(dim)).collect();
+            let run = || {
+                let s = SoftScorer::new(LshParams { p, l, tau }, dim, seed);
+                let hashes = s.hash_keys(&keys, &vals);
+                let probs: Vec<BucketProbs> =
+                    queries.iter().map(|q| s.hasher.bucket_probs(q)).collect();
+                let r = probs[0].r;
+                let mut idx = vec![Vec::new(); group];
+                let mut sc = vec![Vec::new(); group];
+                {
+                    let mut lanes: Vec<GroupLane<'_>> = probs
+                        .iter()
+                        .zip(idx.iter_mut().zip(sc.iter_mut()))
+                        .map(|(bp, (i, sv))| GroupLane {
+                            probs: &bp.probs,
+                            indices: i,
+                            scores: sv,
+                        })
+                        .collect();
+                    s.select_pruned_group_into(r, &hashes, k, &mut lanes);
+                }
+                let prob_bits: Vec<Vec<u32>> = probs
+                    .iter()
+                    .map(|bp| bp.probs.iter().map(|x| x.to_bits()).collect())
+                    .collect();
+                let score_bits: Vec<Vec<u32>> = sc
+                    .iter()
+                    .map(|sv| sv.iter().map(|x| x.to_bits()).collect())
+                    .collect();
+                (prob_bits, idx, score_bits)
+            };
+            let auto = crate::simd::dispatch::with_auto(&run);
+            let scalar = crate::simd::dispatch::with_forced_scalar(&run);
+            prop_assert!(
+                auto.0 == scalar.0,
+                "bucket probs diverge across tiers (p={p} l={l} dim={dim})"
+            );
+            prop_assert!(
+                auto.1 == scalar.1,
+                "selected indices diverge across tiers (n={n} k={k} group={group})"
+            );
+            prop_assert!(
+                auto.2 == scalar.2,
+                "selected scores diverge across tiers (n={n} k={k} group={group})"
+            );
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,215 @@
+//! Runtime dispatch tier for the SIMD kernels.
+//!
+//! The kernels in `simd` each have one vector implementation per
+//! architecture plus a scalar reference written in the same fixed-lane
+//! tree-reduction order, so every tier produces bit-identical f32
+//! outputs. Which tier runs is decided once per process: the CPU is
+//! probed (`is_x86_feature_detected!` on x86_64; NEON is baseline on
+//! aarch64), the `SOCKET_SIMD=scalar` environment override is folded
+//! in, and the result is cached. Tests flip [`force_scalar`] to pin the
+//! reference path without touching the cache — because the paths are
+//! bit-identical, flipping mid-run never changes any result.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// Which kernel implementation family is running.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// The fixed-lane scalar reference (also the non-x86/ARM fallback).
+    Scalar,
+    /// x86-64 AVX2 (runtime-detected).
+    Avx2,
+    /// aarch64 NEON (baseline on that architecture).
+    Neon,
+}
+
+impl Tier {
+    /// Stable lowercase name (bench artifacts, metrics, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+const UNKNOWN: u8 = 0;
+const SCALAR: u8 = 1;
+const AVX2: u8 = 2;
+const NEON: u8 = 3;
+
+/// Cached detection result. Ordering rationale: Relaxed everywhere —
+/// the cell is a write-once memo of a pure, idempotent probe (every
+/// racing writer stores the same value), no other memory is published
+/// through it, so no acquire/release pairing is needed.
+static DETECTED: AtomicU8 = AtomicU8::new(UNKNOWN);
+
+/// Test/bench override pinning the scalar reference path. Ordering
+/// rationale: Relaxed — an independent boolean flag read at kernel
+/// entry; it synchronizes nothing, and both settings produce
+/// bit-identical results, so staleness is harmless.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Pin (or release) the scalar reference path for this process. The
+/// dispatch bit-identity tests and the bench kernel lane run each
+/// kernel under both settings; results are bit-identical by
+/// construction, so flipping while other threads run kernels is safe.
+pub fn force_scalar(on: bool) {
+    // Ordering rationale: Relaxed — see FORCE_SCALAR.
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// Whether [`force_scalar`] is currently pinning the scalar path.
+pub fn forced_scalar() -> bool {
+    // Ordering rationale: Relaxed — see FORCE_SCALAR.
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// The tier the hardware (and architecture) supports, ignoring every
+/// override.
+fn native_tier() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            Tier::Avx2
+        } else {
+            Tier::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Tier::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Tier::Scalar
+    }
+}
+
+/// Pure dispatch policy: fold the `SOCKET_SIMD` environment override
+/// into the natively detected tier. Split out so the policy is unit
+/// testable without mutating process environment or the cache.
+pub fn tier_from(env: Option<&str>, native: Tier) -> Tier {
+    match env {
+        Some(v) if v.trim().eq_ignore_ascii_case("scalar") => Tier::Scalar,
+        _ => native,
+    }
+}
+
+fn encode(t: Tier) -> u8 {
+    match t {
+        Tier::Scalar => SCALAR,
+        Tier::Avx2 => AVX2,
+        Tier::Neon => NEON,
+    }
+}
+
+/// The cached `(env override, CPU probe)` dispatch decision.
+fn detected() -> Tier {
+    // Ordering rationale: Relaxed — see DETECTED (idempotent memo).
+    match DETECTED.load(Ordering::Relaxed) {
+        SCALAR => Tier::Scalar,
+        AVX2 => Tier::Avx2,
+        NEON => Tier::Neon,
+        _ => {
+            let env = std::env::var("SOCKET_SIMD").ok();
+            let t = tier_from(env.as_deref(), native_tier());
+            // Ordering rationale: Relaxed — see DETECTED.
+            DETECTED.store(encode(t), Ordering::Relaxed);
+            t
+        }
+    }
+}
+
+/// The tier the kernels will dispatch to right now.
+#[inline]
+pub fn tier() -> Tier {
+    if forced_scalar() {
+        return Tier::Scalar;
+    }
+    detected()
+}
+
+/// [`Tier::name`] of the active tier — what the bench lanes report.
+pub fn tier_name() -> &'static str {
+    tier().name()
+}
+
+/// Serializes tests that assert on the active tier (the flag is
+/// process-global). Poisoning is ignored: the flag is always reset by
+/// the guard in [`with_forced_scalar`], and a poisoned lock only means
+/// an unrelated assertion failed.
+#[cfg(test)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Run `f` with the scalar reference path pinned, restoring
+/// auto-dispatch afterwards (also on panic).
+#[cfg(test)]
+pub fn with_forced_scalar<T>(f: impl FnOnce() -> T) -> T {
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            force_scalar(false);
+        }
+    }
+    let _g = test_guard();
+    let _reset = Reset;
+    force_scalar(true);
+    f()
+}
+
+/// Run `f` under auto-dispatch, holding the same lock as
+/// [`with_forced_scalar`] so a concurrent test cannot pin the scalar
+/// path mid-measurement.
+#[cfg(test)]
+pub fn with_auto<T>(f: impl FnOnce() -> T) -> T {
+    let _g = test_guard();
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_from_env_override() {
+        assert_eq!(tier_from(Some("scalar"), Tier::Avx2), Tier::Scalar);
+        assert_eq!(tier_from(Some("SCALAR"), Tier::Neon), Tier::Scalar);
+        assert_eq!(tier_from(Some(" scalar "), Tier::Avx2), Tier::Scalar);
+        assert_eq!(tier_from(Some("avx2"), Tier::Avx2), Tier::Avx2);
+        assert_eq!(tier_from(Some("garbage"), Tier::Scalar), Tier::Scalar);
+        assert_eq!(tier_from(None, Tier::Avx2), Tier::Avx2);
+        assert_eq!(tier_from(None, Tier::Scalar), Tier::Scalar);
+    }
+
+    #[test]
+    fn force_scalar_override_engages() {
+        let _g = test_guard();
+        struct Reset;
+        impl Drop for Reset {
+            fn drop(&mut self) {
+                force_scalar(false);
+            }
+        }
+        let _reset = Reset;
+        let auto = tier();
+        force_scalar(true);
+        assert_eq!(tier(), Tier::Scalar, "override must pin the scalar path");
+        assert!(forced_scalar());
+        force_scalar(false);
+        assert_eq!(tier(), auto, "releasing the override restores auto-dispatch");
+        assert!(!forced_scalar());
+    }
+
+    #[test]
+    fn tier_name_is_stable() {
+        assert_eq!(Tier::Scalar.name(), "scalar");
+        assert_eq!(Tier::Avx2.name(), "avx2");
+        assert_eq!(Tier::Neon.name(), "neon");
+        assert_eq!(tier_name(), tier().name());
+    }
+}

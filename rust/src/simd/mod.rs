@@ -1,0 +1,468 @@
+//! SIMD kernels for the four hot inner loops — dot products (SimHash
+//! Alg.-1 projections, flash-decode logits), online-softmax reductions
+//! (`max`, rescale, weighted accumulate), hard-LSH bucket
+//! compare-and-count, and the soft-collision probability gather — with
+//! runtime dispatch ([`dispatch`]) between an AVX2 path, a NEON path,
+//! and a scalar reference.
+//!
+//! # Bit-identity contract
+//!
+//! Every tier of every kernel produces **bit-identical** f32 output,
+//! not merely ulp-close. Elementwise kernels (`axpy`, `scale`, `div`,
+//! `mul_assign`, `count_eq`, `gather_accumulate`) are trivially
+//! bit-identical: each output lane is the same correctly-rounded
+//! scalar expression no matter how many run per instruction. The two
+//! reductions (`dot`, `max`) are where order matters, so the scalar
+//! reference is written in the exact fixed-lane shape the vector paths
+//! use: [`LANES`] independent accumulators filled in stride order,
+//! combined by the tree `s_j = l_j + l_{j+4}` then
+//! `(s_0 + s_2) + (s_1 + s_3)` — precisely the AVX2 horizontal-sum
+//! sequence (`extractf128` / `movehl` / `shuffle`) and the NEON
+//! two-register `vextq` pairwise reduce — followed by a sequential
+//! tail. No FMA anywhere (multiply then add in every tier), `exp`
+//! stays scalar libm, and `max` uses the `maxps` operand convention
+//! (`if acc > x { acc } else { x }`). Because of this contract the
+//! existing paged-vs-dense and pruned-vs-exhaustive property suites
+//! double as SIMD correctness proofs, and `SOCKET_SIMD=scalar` (or
+//! [`dispatch::force_scalar`]) can flip mid-run without changing any
+//! result.
+
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+pub use dispatch::{force_scalar, tier, tier_name, Tier};
+
+/// Virtual lane count of every kernel: 8 f32 (one AVX2 register, two
+/// NEON registers). The scalar reference uses the same width so its
+/// reduction trees match the vector paths bit-for-bit.
+pub const LANES: usize = 8;
+
+/// Combine 8 lane accumulators in the AVX2 horizontal-sum order:
+/// `extractf128`+`add` folds lane j onto lane j+4, `movehl`+`add`
+/// pairs (0,2) and (1,3), the final `shuffle`+`add_ss` joins those.
+#[inline]
+fn reduce_add(lanes: [f32; LANES]) -> f32 {
+    let [l0, l1, l2, l3, l4, l5, l6, l7] = lanes;
+    let s0 = l0 + l4;
+    let s1 = l1 + l5;
+    let s2 = l2 + l6;
+    let s3 = l3 + l7;
+    (s0 + s2) + (s1 + s3)
+}
+
+/// The `maxps` operand convention: keep `acc` only when strictly
+/// greater, otherwise take `x` (ties and NaN `acc` resolve to `x`).
+#[inline]
+fn max2(acc: f32, x: f32) -> f32 {
+    if acc > x {
+        acc
+    } else {
+        x
+    }
+}
+
+/// Combine 8 lane maxima in the same tree shape as [`reduce_add`],
+/// with [`max2`] as the join.
+#[inline]
+fn reduce_max(lanes: [f32; LANES]) -> f32 {
+    let [l0, l1, l2, l3, l4, l5, l6, l7] = lanes;
+    let s0 = max2(l0, l4);
+    let s1 = max2(l1, l5);
+    let s2 = max2(l2, l6);
+    let s3 = max2(l3, l7);
+    max2(max2(s0, s2), max2(s1, s3))
+}
+
+/// Dot product of `a` and `b` (extra tail elements of the longer slice
+/// are ignored, matching the vector paths' `min(len)` bound).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::dot(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+/// Maximum element of `a` (`f32::NEG_INFINITY` when empty), reduced in
+/// the fixed-lane tree order.
+#[inline]
+pub fn max(a: &[f32]) -> f32 {
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::max(a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::max(a) },
+        _ => max_scalar(a),
+    }
+}
+
+/// `out[i] += s * a[i]` over the common prefix (flash-decode weighted
+/// value accumulate; no FMA — multiply then add in every tier).
+#[inline]
+pub fn axpy(out: &mut [f32], a: &[f32], s: f32) {
+    debug_assert_eq!(out.len(), a.len());
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::axpy(out, a, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::axpy(out, a, s) },
+        _ => axpy_scalar(out, a, s),
+    }
+}
+
+/// `a[i] *= s` (flash-decode running-max rescale).
+#[inline]
+pub fn scale(a: &mut [f32], s: f32) {
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::scale(a, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::scale(a, s) },
+        _ => scale_scalar(a, s),
+    }
+}
+
+/// `a[i] /= s` (flash-decode final normalization; kept as a true
+/// division in every tier — no reciprocal-multiply).
+#[inline]
+pub fn div(a: &mut [f32], s: f32) {
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::div(a, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::div(a, s) },
+        _ => div_scalar(a, s),
+    }
+}
+
+/// `a[i] *= b[i]` over the common prefix (value-norm score weighting).
+#[inline]
+pub fn mul_assign(a: &mut [f32], b: &[f32]) {
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::mul_assign(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::mul_assign(a, b) },
+        _ => mul_assign_scalar(a, b),
+    }
+}
+
+/// `counts[i] += (row[i] == bucket) as f32` over `counts.len()` keys —
+/// the hard-LSH collision count against one table's bucket-id row.
+/// Requires `row.len() >= counts.len()` (the SoA block rows are always
+/// `BLOCK_TOKENS` wide; `counts` is the possibly-short tail prefix).
+#[inline]
+pub fn count_eq(counts: &mut [f32], row: &[u16], bucket: u16) {
+    debug_assert!(row.len() >= counts.len());
+    match dispatch::tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU.
+        Tier::Avx2 => unsafe { x86::count_eq(counts, row, bucket) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Neon is only returned on aarch64, where NEON is a
+        // baseline feature.
+        Tier::Neon => unsafe { neon::count_eq(counts, row, bucket) },
+        _ => count_eq_scalar(counts, row, bucket),
+    }
+}
+
+/// `acc[i] += probs[ids[i] as usize]` over `acc.len()` keys — the
+/// soft-collision probability gather against one table's bucket-id row
+/// (AVX2 `vgatherdps`; NEON has no gather, so it runs the scalar loop,
+/// which is bit-identical because the kernel is elementwise).
+///
+/// # Safety
+///
+/// Requires `ids.len() >= acc.len()` and every `ids[i]` (for
+/// `i < acc.len()`) in bounds for `probs`. `KeyHashes` validates every
+/// stored bucket id against `R` at construction, and callers pass
+/// per-table probability rows of exactly `R` entries.
+#[inline]
+pub unsafe fn gather_accumulate(acc: &mut [f32], ids: &[u16], probs: &[f32]) {
+    debug_assert!(ids.len() >= acc.len());
+    #[cfg(target_arch = "x86_64")]
+    if dispatch::tier() == Tier::Avx2 {
+        // SAFETY: Avx2 is only returned after `is_x86_feature_detected!`
+        // confirmed AVX2 on this CPU; index validity is the caller's
+        // contract, forwarded unchanged.
+        return unsafe { x86::gather_accumulate(acc, ids, probs) };
+    }
+    // SAFETY: index validity is the caller's contract, forwarded
+    // unchanged (NEON has no gather instruction, so every non-AVX2
+    // tier runs the scalar loop — elementwise, hence bit-identical).
+    unsafe { gather_accumulate_scalar(acc, ids, probs) }
+}
+
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let a_blocks = a.chunks_exact(LANES);
+    let b_blocks = b.chunks_exact(LANES);
+    let a_tail = a_blocks.remainder();
+    let b_tail = b_blocks.remainder();
+    for (ca, cb) in a_blocks.zip(b_blocks) {
+        for ((lane, &x), &y) in lanes.iter_mut().zip(ca).zip(cb) {
+            *lane += x * y;
+        }
+    }
+    let mut acc = reduce_add(lanes);
+    for (&x, &y) in a_tail.iter().zip(b_tail) {
+        acc += x * y;
+    }
+    acc
+}
+
+fn max_scalar(a: &[f32]) -> f32 {
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let blocks = a.chunks_exact(LANES);
+    let tail = blocks.remainder();
+    for chunk in blocks {
+        for (lane, &x) in lanes.iter_mut().zip(chunk) {
+            *lane = max2(*lane, x);
+        }
+    }
+    let mut m = reduce_max(lanes);
+    for &x in tail {
+        m = max2(m, x);
+    }
+    m
+}
+
+fn axpy_scalar(out: &mut [f32], a: &[f32], s: f32) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o += s * x;
+    }
+}
+
+fn scale_scalar(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x *= s;
+    }
+}
+
+fn div_scalar(a: &mut [f32], s: f32) {
+    for x in a.iter_mut() {
+        *x /= s;
+    }
+}
+
+fn mul_assign_scalar(a: &mut [f32], b: &[f32]) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x *= y;
+    }
+}
+
+fn count_eq_scalar(counts: &mut [f32], row: &[u16], bucket: u16) {
+    for (c, &id) in counts.iter_mut().zip(row) {
+        *c += (id == bucket) as u32 as f32;
+    }
+}
+
+/// # Safety
+///
+/// Same contract as [`gather_accumulate`].
+unsafe fn gather_accumulate_scalar(acc: &mut [f32], ids: &[u16], probs: &[f32]) {
+    // SAFETY: caller guarantees ids.len() >= acc.len() and every id in
+    // the accumulated prefix indexes inside probs.
+    unsafe {
+        for (i, a) in acc.iter_mut().enumerate() {
+            *a += *probs.get_unchecked(*ids.get_unchecked(i) as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::testing::{check_default, gen};
+    use crate::util::rng::Pcg64;
+
+    fn vec_of(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-4.0, 4.0)).collect()
+    }
+
+    #[test]
+    fn reduce_add_matches_documented_tree() {
+        let lanes = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        assert_eq!(reduce_add(lanes), ((1.0 + 16.0) + (4.0 + 64.0)) + ((2.0 + 32.0) + (8.0 + 128.0)));
+    }
+
+    #[test]
+    fn max_handles_edge_cases() {
+        assert_eq!(max_scalar(&[]), f32::NEG_INFINITY);
+        assert_eq!(max_scalar(&[-3.0]), -3.0);
+        let v: Vec<f32> = (0..19).map(|i| -(i as f32)).collect();
+        assert_eq!(max_scalar(&v), 0.0);
+        assert_eq!(dispatch::with_auto(|| max(&v)), 0.0);
+    }
+
+    #[test]
+    fn prop_dot_bit_identical_across_tiers() {
+        check_default("simd-dot-tiers", |rng, _| {
+            let n = gen::size(rng, 1, 300);
+            let a = vec_of(rng, n);
+            let b = vec_of(rng, n);
+            let auto = dispatch::with_auto(|| (dot(&a, &b), max(&a)));
+            let scalar = dispatch::with_forced_scalar(|| (dot(&a, &b), max(&a)));
+            prop_assert!(
+                auto.0.to_bits() == scalar.0.to_bits(),
+                "dot diverges at n={n}: {} vs {}",
+                auto.0,
+                scalar.0
+            );
+            prop_assert!(
+                auto.1.to_bits() == scalar.1.to_bits(),
+                "max diverges at n={n}: {} vs {}",
+                auto.1,
+                scalar.1
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_elementwise_kernels_bit_identical_across_tiers() {
+        check_default("simd-elementwise-tiers", |rng, _| {
+            let n = gen::size(rng, 1, 300);
+            let a = vec_of(rng, n);
+            let b = vec_of(rng, n);
+            let s = rng.range_f32(-2.0, 2.0);
+            let run = |forced: bool| {
+                let body = || {
+                    let mut x = a.clone();
+                    axpy(&mut x, &b, s);
+                    scale(&mut x, s);
+                    mul_assign(&mut x, &b);
+                    div(&mut x, if s == 0.0 { 1.0 } else { s });
+                    x
+                };
+                if forced {
+                    dispatch::with_forced_scalar(body)
+                } else {
+                    dispatch::with_auto(body)
+                }
+            };
+            let auto = run(false);
+            let scalar = run(true);
+            for (i, (x, y)) in auto.iter().zip(&scalar).enumerate() {
+                prop_assert!(
+                    x.to_bits() == y.to_bits(),
+                    "elementwise chain diverges at {i}/{n}: {x} vs {y}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_count_eq_bit_identical_and_correct() {
+        check_default("simd-count-eq-tiers", |rng, _| {
+            let blen = gen::size(rng, 1, 64);
+            let row: Vec<u16> = (0..64).map(|_| (rng.next_u64() % 7) as u16).collect();
+            let bucket = (rng.next_u64() % 7) as u16;
+            let base = vec_of(rng, blen);
+            let run = |forced: bool| {
+                let body = || {
+                    let mut c = base.clone();
+                    count_eq(&mut c, &row, bucket);
+                    c
+                };
+                if forced {
+                    dispatch::with_forced_scalar(body)
+                } else {
+                    dispatch::with_auto(body)
+                }
+            };
+            let auto = run(false);
+            let scalar = run(true);
+            for (i, ((x, y), (&b, &id))) in
+                auto.iter().zip(&scalar).zip(base.iter().zip(&row)).enumerate()
+            {
+                prop_assert!(x.to_bits() == y.to_bits(), "count_eq diverges at {i}");
+                let want = b + (id == bucket) as u32 as f32;
+                prop_assert!(x.to_bits() == want.to_bits(), "count_eq wrong at {i}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_gather_bit_identical_and_correct() {
+        check_default("simd-gather-tiers", |rng, _| {
+            let r = gen::size(rng, 1, 40);
+            let blen = gen::size(rng, 1, 64);
+            let ids: Vec<u16> = (0..64).map(|_| (rng.next_u64() as usize % r) as u16).collect();
+            let probs = vec_of(rng, r);
+            let base = vec_of(rng, blen);
+            let run = |forced: bool| {
+                let body = || {
+                    let mut acc = base.clone();
+                    // SAFETY: ids are generated modulo r = probs.len()
+                    // and ids.len() = 64 >= acc.len().
+                    unsafe { gather_accumulate(&mut acc, &ids, &probs) };
+                    acc
+                };
+                if forced {
+                    dispatch::with_forced_scalar(body)
+                } else {
+                    dispatch::with_auto(body)
+                }
+            };
+            let auto = run(false);
+            let scalar = run(true);
+            for (i, ((x, y), (&b, &id))) in
+                auto.iter().zip(&scalar).zip(base.iter().zip(&ids)).enumerate()
+            {
+                prop_assert!(x.to_bits() == y.to_bits(), "gather diverges at {i}");
+                let want = b + probs.get(id as usize).copied().unwrap_or(f32::NAN);
+                prop_assert!(x.to_bits() == want.to_bits(), "gather wrong at {i}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_tail_lengths_cover_every_remainder() {
+        for n in 0..=(3 * LANES + 1) {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 + 1.0).collect();
+            let b: Vec<f32> = (0..n).map(|i| 2.0 - (i as f32) * 0.125).collect();
+            let auto = dispatch::with_auto(|| dot(&a, &b));
+            let scalar = dispatch::with_forced_scalar(|| dot(&a, &b));
+            assert_eq!(auto.to_bits(), scalar.to_bits(), "n={n}");
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((auto - naive).abs() <= 1e-3 * naive.abs().max(1.0), "n={n}");
+        }
+    }
+}

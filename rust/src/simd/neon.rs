@@ -1,0 +1,218 @@
+//! NEON implementations of the [`super`] kernels (aarch64, where NEON
+//! is a baseline feature). The 8-lane virtual width of the scalar
+//! reference maps onto two `float32x4_t` accumulators; reductions fold
+//! the high register onto the low one (lane j + lane j+4), then pair
+//! (0,2)/(1,3) with `vextq`, then join lanes 0 and 1 — the same tree
+//! as the AVX2 `hsum`/`hmax`, so results are bit-identical to both
+//! other tiers. `vmaxq_f32` is NOT used for the running max: its NaN
+//! semantics differ from `maxps`, so max is compare (`vcgtq_f32`) +
+//! select (`vbslq_f32`), matching the scalar `max2` exactly. No FMA
+//! (`vfmaq`) anywhere — multiply then add, two roundings, like the
+//! other tiers. There is no NEON gather instruction, so the
+//! soft-collision gather stays on the scalar loop (elementwise, hence
+//! still bit-identical).
+
+#![cfg(target_arch = "aarch64")]
+
+use core::arch::aarch64::*;
+
+use super::LANES;
+
+/// Lane-wise `max2`: keep `a` only where strictly greater, else `b`.
+///
+/// # Safety
+///
+/// NEON is baseline on aarch64; pure register arithmetic.
+#[inline]
+unsafe fn vmax2q_f32(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+    // SAFETY: register-only NEON ops, no memory access.
+    unsafe { vbslq_f32(vcgtq_f32(a, b), a, b) }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: every offset below stays under n = min(a.len(), b.len()).
+    unsafe {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut acc_lo = vdupq_n_f32(0.0);
+        let mut acc_hi = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i < body {
+            acc_lo = vaddq_f32(acc_lo, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            acc_hi = vaddq_f32(
+                acc_hi,
+                vmulq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4))),
+            );
+            i += LANES;
+        }
+        // Tree: s_j = l_j + l_{j+4}; then (s0+s2, s1+s3); then join.
+        let s = vaddq_f32(acc_lo, acc_hi);
+        let t = vaddq_f32(s, vextq_f32(s, s, 2));
+        let mut total = vgetq_lane_f32(t, 0) + vgetq_lane_f32(t, 1);
+        while i < n {
+            total += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        total
+    }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn max(a: &[f32]) -> f32 {
+    // SAFETY: every offset below stays under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut acc_lo = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc_hi = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i < body {
+            acc_lo = vmax2q_f32(acc_lo, vld1q_f32(pa.add(i)));
+            acc_hi = vmax2q_f32(acc_hi, vld1q_f32(pa.add(i + 4)));
+            i += LANES;
+        }
+        let s = vmax2q_f32(acc_lo, acc_hi);
+        let t = vmax2q_f32(s, vextq_f32(s, s, 2));
+        let t0 = vgetq_lane_f32(t, 0);
+        let t1 = vgetq_lane_f32(t, 1);
+        let mut m = if t0 > t1 { t0 } else { t1 };
+        while i < n {
+            let x = *pa.add(i);
+            m = if m > x { m } else { x };
+            i += 1;
+        }
+        m
+    }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn axpy(out: &mut [f32], a: &[f32], s: f32) {
+    // SAFETY: every offset below stays under n = min(out.len(), a.len()).
+    unsafe {
+        let n = out.len().min(a.len());
+        let po = out.as_mut_ptr();
+        let pa = a.as_ptr();
+        let vs = vdupq_n_f32(s);
+        let body = (n / 4) * 4;
+        let mut i = 0usize;
+        while i < body {
+            let vo = vld1q_f32(po.add(i));
+            let va = vld1q_f32(pa.add(i));
+            // mul+add, not vfmaq: matches the two-rounding scalar tier.
+            vst1q_f32(po.add(i), vaddq_f32(vo, vmulq_f32(vs, va)));
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) += s * *pa.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn scale(a: &mut [f32], s: f32) {
+    // SAFETY: every offset below stays under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_mut_ptr();
+        let vs = vdupq_n_f32(s);
+        let body = (n / 4) * 4;
+        let mut i = 0usize;
+        while i < body {
+            vst1q_f32(pa.add(i), vmulq_f32(vld1q_f32(pa.add(i)), vs));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) *= s;
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn div(a: &mut [f32], s: f32) {
+    // SAFETY: every offset below stays under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_mut_ptr();
+        let vs = vdupq_n_f32(s);
+        let body = (n / 4) * 4;
+        let mut i = 0usize;
+        while i < body {
+            vst1q_f32(pa.add(i), vdivq_f32(vld1q_f32(pa.add(i)), vs));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) /= s;
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// NEON is baseline on aarch64 (caller dispatch contract).
+pub(super) unsafe fn mul_assign(a: &mut [f32], b: &[f32]) {
+    // SAFETY: every offset below stays under n = min(a.len(), b.len()).
+    unsafe {
+        let n = a.len().min(b.len());
+        let pa = a.as_mut_ptr();
+        let pb = b.as_ptr();
+        let body = (n / 4) * 4;
+        let mut i = 0usize;
+        while i < body {
+            vst1q_f32(pa.add(i), vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) *= *pb.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// Compare-and-count 8 u16 bucket ids per iteration: `vceqq_u16` →
+/// mask-and-1 → widen both halves to u32 → convert to f32 → add.
+///
+/// # Safety
+///
+/// NEON is baseline on aarch64; requires `row.len() >= counts.len()`.
+pub(super) unsafe fn count_eq(counts: &mut [f32], row: &[u16], bucket: u16) {
+    // SAFETY: offsets stay under n = min(counts.len(), row.len()); the
+    // 8-wide body only runs while i + 8 <= n.
+    unsafe {
+        let n = counts.len().min(row.len());
+        let pc = counts.as_mut_ptr();
+        let pr = row.as_ptr();
+        let target = vdupq_n_u16(bucket);
+        let one = vdupq_n_u16(1);
+        let body = (n / 8) * 8;
+        let mut i = 0usize;
+        while i < body {
+            let hits = vandq_u16(vceqq_u16(vld1q_u16(pr.add(i)), target), one);
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(hits)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(hits)));
+            vst1q_f32(pc.add(i), vaddq_f32(vld1q_f32(pc.add(i)), lo));
+            vst1q_f32(pc.add(i + 4), vaddq_f32(vld1q_f32(pc.add(i + 4)), hi));
+            i += 8;
+        }
+        while i < n {
+            *pc.add(i) += (*pr.add(i) == bucket) as u32 as f32;
+            i += 1;
+        }
+    }
+}

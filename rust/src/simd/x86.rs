@@ -1,0 +1,286 @@
+//! AVX2 implementations of the [`super`] kernels. Every function here
+//! is `#[target_feature(enable = "avx2")]` and must only be reached
+//! through [`super::dispatch`] after runtime detection. Reductions use
+//! the exact horizontal-op sequences the scalar reference mirrors
+//! (see the module docs in `simd`): `hsum`/`hmax` fold lane j onto
+//! lane j+4 via `extractf128`, pair (0,2)/(1,3) via `movehl`, and join
+//! with a final `shuffle` — so results are bit-identical to scalar.
+//! No FMA instructions are used (multiply then add), matching the
+//! scalar tier's rounding exactly.
+
+#![cfg(target_arch = "x86_64")]
+
+use core::arch::x86_64::*;
+
+use super::LANES;
+
+/// Horizontal sum of one `__m256` in the canonical tree order.
+///
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum(v: __m256) -> f32 {
+    // SAFETY: pure register arithmetic; AVX2 availability is the
+    // caller's contract.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let h = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        _mm_cvtss_f32(_mm_add_ss(h, _mm_shuffle_ps(h, h, 1)))
+    }
+}
+
+/// Horizontal max of one `__m256` in the same tree shape as [`hsum`].
+///
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hmax(v: __m256) -> f32 {
+    // SAFETY: pure register arithmetic; AVX2 availability is the
+    // caller's contract.
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_max_ps(lo, hi);
+        let h = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        _mm_cvtss_f32(_mm_max_ss(h, _mm_shuffle_ps(h, h, 1)))
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under n = min(a.len(), b.len()).
+    unsafe {
+        let n = a.len().min(b.len());
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i < body {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += LANES;
+        }
+        let mut total = hsum(acc);
+        while i < n {
+            total += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        total
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn max(a: &[f32]) -> f32 {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut i = 0usize;
+        while i < body {
+            // maxps keeps acc only when strictly greater — the same
+            // convention as the scalar max2.
+            acc = _mm256_max_ps(acc, _mm256_loadu_ps(pa.add(i)));
+            i += LANES;
+        }
+        let mut m = hmax(acc);
+        while i < n {
+            let x = *pa.add(i);
+            m = if m > x { m } else { x };
+            i += 1;
+        }
+        m
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy(out: &mut [f32], a: &[f32], s: f32) {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under n = min(out.len(), a.len()).
+    unsafe {
+        let n = out.len().min(a.len());
+        let po = out.as_mut_ptr();
+        let pa = a.as_ptr();
+        let vs = _mm256_set1_ps(s);
+        let body = (n / LANES) * LANES;
+        let mut i = 0usize;
+        while i < body {
+            let vo = _mm256_loadu_ps(po.add(i));
+            let va = _mm256_loadu_ps(pa.add(i));
+            // mul+add, not FMA: matches the scalar tier's two roundings.
+            _mm256_storeu_ps(po.add(i), _mm256_add_ps(vo, _mm256_mul_ps(vs, va)));
+            i += LANES;
+        }
+        while i < n {
+            *po.add(i) += s * *pa.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scale(a: &mut [f32], s: f32) {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_mut_ptr();
+        let vs = _mm256_set1_ps(s);
+        let body = (n / LANES) * LANES;
+        let mut i = 0usize;
+        while i < body {
+            _mm256_storeu_ps(pa.add(i), _mm256_mul_ps(_mm256_loadu_ps(pa.add(i)), vs));
+            i += LANES;
+        }
+        while i < n {
+            *pa.add(i) *= s;
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn div(a: &mut [f32], s: f32) {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under a.len().
+    unsafe {
+        let n = a.len();
+        let pa = a.as_mut_ptr();
+        let vs = _mm256_set1_ps(s);
+        let body = (n / LANES) * LANES;
+        let mut i = 0usize;
+        while i < body {
+            _mm256_storeu_ps(pa.add(i), _mm256_div_ps(_mm256_loadu_ps(pa.add(i)), vs));
+            i += LANES;
+        }
+        while i < n {
+            *pa.add(i) /= s;
+            i += 1;
+        }
+    }
+}
+
+/// # Safety
+///
+/// Requires AVX2 (guaranteed by the caller's dispatch).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn mul_assign(a: &mut [f32], b: &[f32]) {
+    // SAFETY: AVX2 is the caller's contract; every offset below stays
+    // under n = min(a.len(), b.len()).
+    unsafe {
+        let n = a.len().min(b.len());
+        let pa = a.as_mut_ptr();
+        let pb = b.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut i = 0usize;
+        while i < body {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            _mm256_storeu_ps(pa.add(i), _mm256_mul_ps(va, vb));
+            i += LANES;
+        }
+        while i < n {
+            *pa.add(i) *= *pb.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// Compare-and-count 16 u16 bucket ids per iteration:
+/// `cmpeq_epi16` → mask-and-1 → widen both halves to i32 → convert to
+/// f32 → add into the counts.
+///
+/// # Safety
+///
+/// Requires AVX2 and `row.len() >= counts.len()`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn count_eq(counts: &mut [f32], row: &[u16], bucket: u16) {
+    // SAFETY: AVX2 is the caller's contract; offsets stay under
+    // n = min(counts.len(), row.len()), and the 16-wide body only runs
+    // while i + 16 <= n.
+    unsafe {
+        let n = counts.len().min(row.len());
+        let pc = counts.as_mut_ptr();
+        let pr = row.as_ptr();
+        let target = _mm256_set1_epi16(bucket as i16);
+        let one = _mm256_set1_epi16(1);
+        let body = (n / 16) * 16;
+        let mut i = 0usize;
+        while i < body {
+            let ids = _mm256_loadu_si256(pr.add(i) as *const __m256i);
+            let hits = _mm256_and_si256(_mm256_cmpeq_epi16(ids, target), one);
+            let lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(hits));
+            let hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256(hits, 1));
+            let c0 = _mm256_loadu_ps(pc.add(i));
+            let c1 = _mm256_loadu_ps(pc.add(i + 8));
+            _mm256_storeu_ps(pc.add(i), _mm256_add_ps(c0, _mm256_cvtepi32_ps(lo)));
+            _mm256_storeu_ps(pc.add(i + 8), _mm256_add_ps(c1, _mm256_cvtepi32_ps(hi)));
+            i += 16;
+        }
+        while i < n {
+            *pc.add(i) += (*pr.add(i) == bucket) as u32 as f32;
+            i += 1;
+        }
+    }
+}
+
+/// Soft-collision probability gather: widen 8 u16 bucket ids to i32
+/// and `vgatherdps` the probability row.
+///
+/// # Safety
+///
+/// Requires AVX2, `ids.len() >= acc.len()`, and every id in the
+/// accumulated prefix in bounds for `probs`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn gather_accumulate(acc: &mut [f32], ids: &[u16], probs: &[f32]) {
+    // SAFETY: AVX2 is the caller's contract; offsets stay under
+    // n = min(acc.len(), ids.len()), and the gather indices are valid
+    // for probs by the caller's contract (ids validated < R at
+    // KeyHashes construction, probs rows exactly R wide).
+    unsafe {
+        let n = acc.len().min(ids.len());
+        let pa = acc.as_mut_ptr();
+        let pi = ids.as_ptr();
+        let pp = probs.as_ptr();
+        let body = (n / LANES) * LANES;
+        let mut i = 0usize;
+        while i < body {
+            let vid = _mm_loadu_si128(pi.add(i) as *const __m128i);
+            let vidx = _mm256_cvtepu16_epi32(vid);
+            let g = _mm256_i32gather_ps(pp, vidx, 4);
+            let va = _mm256_loadu_ps(pa.add(i));
+            _mm256_storeu_ps(pa.add(i), _mm256_add_ps(va, g));
+            i += LANES;
+        }
+        while i < n {
+            *pa.add(i) += *pp.add(*pi.add(i) as usize);
+            i += 1;
+        }
+    }
+}
