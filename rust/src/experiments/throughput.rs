@@ -587,7 +587,10 @@ pub fn measure_kernel_lane(n: usize, dim: usize, steps: usize, seed: u64) -> Vec
     let serial = WorkerPool::new(1);
     let mut out = Vec::new();
     for forced in [true, false] {
-        crate::simd::force_scalar(forced);
+        // Guard restores the prior override even if a kernel panics
+        // mid-lane; the bench binary runs this lane on one thread, so
+        // no concurrent writer can race the process-global flag.
+        let _tier_guard = crate::simd::scoped_force_scalar(forced);
         let tier = crate::simd::tier_name();
 
         // 1) SimHash Alg.-1 projection hashing: rebuild the key index.
@@ -643,7 +646,6 @@ pub fn measure_kernel_lane(n: usize, dim: usize, steps: usize, seed: u64) -> Vec
             sps: steps as f64 / t.elapsed().as_secs_f64(),
         });
     }
-    crate::simd::force_scalar(false);
     out
 }
 

@@ -540,7 +540,10 @@ impl SoftScorer {
                 let probs_by_lane = &probs_by_lane;
                 pool.fill(bounds, |i| {
                     let (g, blk) = (i / n_blocks, i % n_blocks);
-                    let Some(&probs) = probs_by_lane.get(g) else { return 0.0 };
+                    // lint:allow(hot-path-index): g < n_lanes since bounds
+                    // has n_lanes * n_blocks cells; an invariant breach
+                    // must panic, not silently zero a bound.
+                    let probs = probs_by_lane[g];
                     // Empty when !saturated (table_max stays cleared),
                     // the per-lane row otherwise.
                     let tm = table_max.get(g * l..(g + 1) * l);
@@ -569,7 +572,10 @@ impl SoftScorer {
                 let blen = hashes.block_len(blk);
                 let base = blk * BLOCK_TOKENS;
                 let block = hashes.block_data(blk);
-                let Some(&probs) = probs_by_lane.get(g) else { return };
+                // lint:allow(hot-path-index): the walk only hands out
+                // lanes < n_lanes; an invariant breach must panic, not
+                // leave stale scratch scores behind an early return.
+                let probs = probs_by_lane[g];
                 let (acc, _) = acc.split_at_mut(blen);
                 acc.fill(0.0);
                 for (row, ptab) in block.chunks_exact(BLOCK_TOKENS).zip(probs.chunks_exact(r))
@@ -578,7 +584,11 @@ impl SoftScorer {
                     // exactly r wide and acc.len() <= row.len().
                     unsafe { simd::gather_accumulate(acc, row, ptab) };
                 }
-                simd::mul_assign(acc, norms.get(base..).unwrap_or(&[]));
+                debug_assert!(norms.len() >= base + blen);
+                // lint:allow(hot-path-index): one norm per key, asserted
+                // above; a length mismatch must panic, not silently
+                // skip the value-norm weighting.
+                simd::mul_assign(acc, &norms[base..base + blen]);
             };
             bnb::run_walk(hashes, k, bounds, order, pool, score_block, &mut outs, walk)
         })

@@ -66,6 +66,31 @@ pub fn forced_scalar() -> bool {
     FORCE_SCALAR.load(Ordering::Relaxed)
 }
 
+/// RAII handle from [`scoped_force_scalar`]: restores the override
+/// state it replaced on drop, panic included.
+pub struct ForceScalarGuard {
+    prev: bool,
+}
+
+impl Drop for ForceScalarGuard {
+    fn drop(&mut self) {
+        force_scalar(self.prev);
+    }
+}
+
+/// Pin (or release) the scalar path for a scope. The returned guard
+/// restores the previous override when dropped, so a panic mid-scope
+/// never leaves the whole process pinned to one tier. The flag itself
+/// is still process-global: callers that measure (rather than just
+/// compute) must not run concurrently with other override writers —
+/// tests serialize through [`test_guard`], and the bench kernel lane
+/// runs on the bench binary's single thread.
+pub fn scoped_force_scalar(on: bool) -> ForceScalarGuard {
+    let prev = forced_scalar();
+    force_scalar(on);
+    ForceScalarGuard { prev }
+}
+
 /// The tier the hardware (and architecture) supports, ignoring every
 /// override.
 fn native_tier() -> Tier {
@@ -150,15 +175,8 @@ pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
 /// auto-dispatch afterwards (also on panic).
 #[cfg(test)]
 pub fn with_forced_scalar<T>(f: impl FnOnce() -> T) -> T {
-    struct Reset;
-    impl Drop for Reset {
-        fn drop(&mut self) {
-            force_scalar(false);
-        }
-    }
     let _g = test_guard();
-    let _reset = Reset;
-    force_scalar(true);
+    let _reset = scoped_force_scalar(true);
     f()
 }
 

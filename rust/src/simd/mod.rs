@@ -33,7 +33,7 @@ mod neon;
 #[cfg(target_arch = "x86_64")]
 mod x86;
 
-pub use dispatch::{force_scalar, tier, tier_name, Tier};
+pub use dispatch::{force_scalar, scoped_force_scalar, tier, tier_name, Tier};
 
 /// Virtual lane count of every kernel: 8 f32 (one AVX2 register, two
 /// NEON registers). The scalar reference uses the same width so its

@@ -52,8 +52,8 @@ pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         }
         // Tree: s_j = l_j + l_{j+4}; then (s0+s2, s1+s3); then join.
         let s = vaddq_f32(acc_lo, acc_hi);
-        let t = vaddq_f32(s, vextq_f32(s, s, 2));
-        let mut total = vgetq_lane_f32(t, 0) + vgetq_lane_f32(t, 1);
+        let t = vaddq_f32(s, vextq_f32::<2>(s, s));
+        let mut total = vgetq_lane_f32::<0>(t) + vgetq_lane_f32::<1>(t);
         while i < n {
             total += *pa.add(i) * *pb.add(i);
             i += 1;
@@ -80,9 +80,9 @@ pub(super) unsafe fn max(a: &[f32]) -> f32 {
             i += LANES;
         }
         let s = vmax2q_f32(acc_lo, acc_hi);
-        let t = vmax2q_f32(s, vextq_f32(s, s, 2));
-        let t0 = vgetq_lane_f32(t, 0);
-        let t1 = vgetq_lane_f32(t, 1);
+        let t = vmax2q_f32(s, vextq_f32::<2>(s, s));
+        let t0 = vgetq_lane_f32::<0>(t);
+        let t1 = vgetq_lane_f32::<1>(t);
         let mut m = if t0 > t1 { t0 } else { t1 };
         while i < n {
             let x = *pa.add(i);

@@ -26,10 +26,10 @@ unsafe fn hsum(v: __m256) -> f32 {
     // caller's contract.
     unsafe {
         let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps(v, 1);
+        let hi = _mm256_extractf128_ps::<1>(v);
         let s = _mm_add_ps(lo, hi);
         let h = _mm_add_ps(s, _mm_movehl_ps(s, s));
-        _mm_cvtss_f32(_mm_add_ss(h, _mm_shuffle_ps(h, h, 1)))
+        _mm_cvtss_f32(_mm_add_ss(h, _mm_shuffle_ps::<1>(h, h)))
     }
 }
 
@@ -45,10 +45,10 @@ unsafe fn hmax(v: __m256) -> f32 {
     // caller's contract.
     unsafe {
         let lo = _mm256_castps256_ps128(v);
-        let hi = _mm256_extractf128_ps(v, 1);
+        let hi = _mm256_extractf128_ps::<1>(v);
         let s = _mm_max_ps(lo, hi);
         let h = _mm_max_ps(s, _mm_movehl_ps(s, s));
-        _mm_cvtss_f32(_mm_max_ss(h, _mm_shuffle_ps(h, h, 1)))
+        _mm_cvtss_f32(_mm_max_ss(h, _mm_shuffle_ps::<1>(h, h)))
     }
 }
 
@@ -236,7 +236,7 @@ pub(super) unsafe fn count_eq(counts: &mut [f32], row: &[u16], bucket: u16) {
             let ids = _mm256_loadu_si256(pr.add(i) as *const __m256i);
             let hits = _mm256_and_si256(_mm256_cmpeq_epi16(ids, target), one);
             let lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(hits));
-            let hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256(hits, 1));
+            let hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(hits));
             let c0 = _mm256_loadu_ps(pc.add(i));
             let c1 = _mm256_loadu_ps(pc.add(i + 8));
             _mm256_storeu_ps(pc.add(i), _mm256_add_ps(c0, _mm256_cvtepi32_ps(lo)));
@@ -273,7 +273,7 @@ pub(super) unsafe fn gather_accumulate(acc: &mut [f32], ids: &[u16], probs: &[f3
         while i < body {
             let vid = _mm_loadu_si128(pi.add(i) as *const __m128i);
             let vidx = _mm256_cvtepu16_epi32(vid);
-            let g = _mm256_i32gather_ps(pp, vidx, 4);
+            let g = _mm256_i32gather_ps::<4>(pp, vidx);
             let va = _mm256_loadu_ps(pa.add(i));
             _mm256_storeu_ps(pa.add(i), _mm256_add_ps(va, g));
             i += LANES;
